@@ -1,0 +1,58 @@
+//! Ablation: speculative cross-layer expert prefetching (extension beyond
+//! the paper; cf. MoE-Infinity / Mixtral-Offloading's speculative loading).
+//!
+//!     cargo run --release --example ablation_prefetch
+//!
+//! Prefetch helps only when the PCIe transfer fits inside a layer's
+//! compute window: expect a modest gain on env2 (7.9 ms transfer ~ layer
+//! time) and little on env1 (15.7 ms transfer > layer time).
+
+use anyhow::Result;
+use fiddler::config::serving::Policy;
+use fiddler::config::HardwareConfig;
+use fiddler::figures::{self, artifact_dir};
+use fiddler::metrics::TableReporter;
+use fiddler::util::cli::Args;
+use fiddler::util::stats::mean;
+use fiddler::workload::{Dataset, WorkloadGen};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.str_or("model", "mixtral-tiny");
+    let out = args.usize_or("out", 48);
+    let samples = args.usize_or("samples", 4);
+    let _ = artifact_dir(model);
+
+    for env in ["env1", "env2"] {
+        let hw = HardwareConfig::by_name(env)?;
+        let mut table =
+            TableReporter::new(&["policy", "hit rate %", "tok/s", "gain"]);
+        let mut base_tps = 0.0;
+        for policy in [Policy::Fiddler, Policy::FiddlerPrefetch] {
+            let mut hits = Vec::new();
+            let mut tpss = Vec::new();
+            for seed in 0..samples as u64 {
+                let mut e = figures::make_engine(model, &hw, policy, seed)?;
+                let prompt =
+                    WorkloadGen::new(Dataset::sharegpt(), e.model().vocab, 50 + seed)
+                        .prompt(32);
+                let g = e.generate(&prompt, out)?;
+                hits.push(e.cx.events.hit_rate() * 100.0);
+                tpss.push(g.metrics.tokens_per_s());
+            }
+            let tps = mean(&tpss);
+            if policy == Policy::Fiddler {
+                base_tps = tps;
+            }
+            table.row(vec![
+                policy.label().to_string(),
+                format!("{:.1}", mean(&hits)),
+                format!("{tps:.2}"),
+                format!("{:+.1}%", 100.0 * (tps / base_tps - 1.0)),
+            ]);
+        }
+        println!("\n=== Prefetch ablation, {env} (decode workload, {samples} prompts) ===");
+        table.print();
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! Beam-search example: generate with several widths under Fiddler and the
+//! llama.cpp-style baseline, showing the cross-beam batching advantage
+//! (paper §4, scenario c).
+//!
+//!     cargo run --release --example beam_search -- --widths 2,4,8 --out 16
+
+use anyhow::Result;
+use fiddler::config::serving::Policy;
+use fiddler::config::HardwareConfig;
+use fiddler::figures;
+use fiddler::metrics::TableReporter;
+use fiddler::util::cli::Args;
+use fiddler::workload::{Dataset, WorkloadGen};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let hw = HardwareConfig::by_name(args.str_or("env", "env1"))?;
+    let widths = args.usize_list_or("widths", &[2, 4, 8]);
+    let inp = args.usize_or("inp", 32);
+    let out = args.usize_or("out", 16);
+    let seed = args.u64_or("seed", 0);
+
+    let mut table =
+        TableReporter::new(&["width", "Fiddler tok/s", "llama.cpp* tok/s", "speedup", "best score"]);
+    for &w in &widths {
+        let prompt = WorkloadGen::new(Dataset::sharegpt(), 512, seed).prompt(inp);
+        let mut f = figures::make_engine("mixtral-tiny", &hw, Policy::Fiddler, seed)?;
+        let bf = f.beam_search(&prompt, w, out)?;
+        let mut l = figures::make_engine("mixtral-tiny", &hw, Policy::StaticSplit, seed)?;
+        let bl = l.beam_search(&prompt, w, out)?;
+        assert_eq!(bf.tokens, bl.tokens, "numerics must not depend on policy");
+        table.row(vec![
+            w.to_string(),
+            format!("{:.3}", bf.metrics.tokens_per_s()),
+            format!("{:.3}", bl.metrics.tokens_per_s()),
+            format!("{:.2}x", bf.metrics.tokens_per_s() / bl.metrics.tokens_per_s()),
+            format!("{:.3}", bf.score),
+        ]);
+    }
+    println!("== beam search, env {} (virtual time) ==", hw.name);
+    table.print();
+    Ok(())
+}

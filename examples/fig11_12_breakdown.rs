@@ -1,0 +1,79 @@
+//! Figures 11 + 12 (Appendix F) reproduction: the latency breakdown of
+//! scenario (a) into TTFT (Fig. 11) and Inter-Token Latency (Fig. 12).
+//!
+//!     cargo run --release --example fig11_12_breakdown [-- --fast]
+//!
+//! Paper expectation (shape): Fiddler ~1.13x best-baseline TTFT and ~1.43x
+//! best-baseline ITL on average — the end-to-end win of Fig. 4 comes from
+//! BOTH phases, not one.
+
+use anyhow::Result;
+use fiddler::config::HardwareConfig;
+use fiddler::figures::{self, ALL_POLICIES};
+use fiddler::metrics::TableReporter;
+use fiddler::util::cli::Args;
+use fiddler::util::stats::mean;
+use fiddler::workload::{scenario_a_grid, Dataset};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let samples = args.usize_or("samples", 1);
+    let model = args.str_or("model", "mixtral-tiny");
+    let grid: Vec<(usize, usize)> = if args.has("fast") {
+        vec![(32, 64), (128, 128)]
+    } else {
+        scenario_a_grid()
+    };
+    let dataset = Dataset::sharegpt();
+
+    for env_name in ["env1", "env2"] {
+        let hw = HardwareConfig::by_name(env_name)?;
+        let mut engines: Vec<_> = ALL_POLICIES
+            .iter()
+            .map(|&p| figures::make_engine(model, &hw, p, 0).unwrap())
+            .collect();
+
+        let mut ttft_tab = TableReporter::new(&[
+            "in/out", "Fiddler", "DeepSpeed-MII*", "Mixtral-Offloading*", "llama.cpp*",
+        ]);
+        let mut itl_tab = TableReporter::new(&[
+            "in/out", "Fiddler", "DeepSpeed-MII*", "Mixtral-Offloading*", "llama.cpp*",
+        ]);
+        let mut ttft_pp: Vec<Vec<f64>> = vec![Vec::new(); ALL_POLICIES.len()];
+        let mut itl_pp: Vec<Vec<f64>> = vec![Vec::new(); ALL_POLICIES.len()];
+
+        for &(inp, out) in &grid {
+            let mut trow = vec![format!("{inp}/{out}")];
+            let mut irow = vec![format!("{inp}/{out}")];
+            for (pi, engine) in engines.iter_mut().enumerate() {
+                let agg = figures::run_e2e_cell(engine, &dataset, inp, out, samples, 42)?;
+                let ttft = agg.ttft_summary().mean / 1e3;
+                let itl = agg.itl_summary().mean / 1e3;
+                ttft_pp[pi].push(ttft);
+                itl_pp[pi].push(itl);
+                trow.push(format!("{ttft:.1}"));
+                irow.push(format!("{itl:.1}"));
+            }
+            ttft_tab.row(trow);
+            itl_tab.row(irow);
+        }
+
+        println!("\n=== Figure 11 (Appendix F): TTFT ms, {} — lower is better ===", hw.name);
+        ttft_tab.print();
+        println!("\n=== Figure 12 (Appendix F): mean ITL ms, {} — lower is better ===", hw.name);
+        itl_tab.print();
+
+        let best_base_ttft = (1..ALL_POLICIES.len())
+            .map(|pi| mean(&ttft_pp[pi]))
+            .fold(f64::INFINITY, f64::min);
+        let best_base_itl = (1..ALL_POLICIES.len())
+            .map(|pi| mean(&itl_pp[pi]))
+            .fold(f64::INFINITY, f64::min);
+        println!(
+            "\nFiddler vs best baseline: TTFT {:.2}x (paper avg 1.13x) | ITL {:.2}x (paper avg 1.43x)",
+            best_base_ttft / mean(&ttft_pp[0]),
+            best_base_itl / mean(&itl_pp[0]),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! Figure 7 (Appendix A) reproduction: microbenchmarks of the simulated
+//! substrate — W copy (expert weight CPU->GPU), A copy (activation
+//! GPU->CPU), and expert execution on GPU/CPU at input sizes 1..16, per
+//! layer (32 repeats), both environments.
+//!
+//!     cargo run --release --example fig7_micro
+//!
+//! Paper expectation (shape): W copy 2-5x the GPU compute; GPU latency flat
+//! in input size (small bump at batch 1); CPU latency ~linear; A copy <1%
+//! of the single-input CPU latency.
+
+use anyhow::Result;
+use fiddler::config::HardwareConfig;
+use fiddler::latency::calib::synth_samples;
+use fiddler::latency::LatencyModel;
+use fiddler::metrics::TableReporter;
+use fiddler::util::cli::Args;
+use fiddler::util::stats::{mean, std_dev};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let sizes = args.usize_list_or("sizes", &[1, 2, 4, 8, 16]);
+
+    for env_name in ["env1", "env2"] {
+        let hw = HardwareConfig::by_name(env_name)?;
+        let lat = LatencyModel::from_hardware(&hw);
+
+        // 32 noisy repeats per point (one per layer of Mixtral-8x7B).
+        let (cpu_s, gpu_s) = synth_samples(&hw, &sizes, 0.03, 7);
+
+        let mut table = TableReporter::new(&["workload", "mean ms", "std ms"]);
+        let w_copy: Vec<f64> = (0..32).map(|_| hw.weight_transfer_us() / 1e3).collect();
+        table.row(vec![
+            "W copy".into(),
+            format!("{:.2}", mean(&w_copy)),
+            format!("{:.3}", std_dev(&w_copy)),
+        ]);
+        let a_copy: Vec<f64> = (0..32).map(|_| hw.act_copy_us(4096 * 2) / 1e3).collect();
+        table.row(vec![
+            "A copy".into(),
+            format!("{:.4}", mean(&a_copy)),
+            format!("{:.4}", std_dev(&a_copy)),
+        ]);
+        for &n in &sizes {
+            let g: Vec<f64> = gpu_s
+                .iter()
+                .filter(|s| s.tokens == n)
+                .map(|s| s.us / 1e3)
+                .collect();
+            table.row(vec![
+                format!("GPU {n}"),
+                format!("{:.2}", mean(&g)),
+                format!("{:.3}", std_dev(&g)),
+            ]);
+        }
+        for &n in &sizes {
+            let c: Vec<f64> = cpu_s
+                .iter()
+                .filter(|s| s.tokens == n)
+                .map(|s| s.us / 1e3)
+                .collect();
+            table.row(vec![
+                format!("CPU {n}"),
+                format!("{:.2}", mean(&c)),
+                format!("{:.3}", std_dev(&c)),
+            ]);
+        }
+
+        println!("\n=== Figure 7 (Appendix A): expert micro-latencies, {env_name} ===");
+        table.print();
+        println!(
+            "checks: W/GPU ratio {:.1}x (paper: 2-5x) | A copy / CPU(1) = {:.3}% (paper: <1%) | crossover s*={}",
+            hw.weight_transfer_us() / lat.gpu_lat(4),
+            100.0 * hw.act_copy_us(4096 * 2) / lat.cpu_lat(1),
+            lat.crossover_tokens()
+        );
+    }
+    Ok(())
+}

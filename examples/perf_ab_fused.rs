@@ -1,0 +1,43 @@
+//! A/B: fused attention+gate executable vs separate attn_decode + gate ops.
+use fiddler::benchkit::Bench;
+use fiddler::config::model::artifacts_root;
+use fiddler::runtime::{Runtime, Tensor, TensorI32, Arg};
+use std::time::Duration;
+
+fn main() {
+    let rt = Runtime::open(artifacts_root().join("mixtral-tiny")).unwrap();
+    let d = rt.op_spec("attn_decode_b1_c512").unwrap().clone();
+    let h = d.params[0].0[1];
+    let (c, kv, hd) = (d.params[1].0[1], d.params[1].0[2], d.params[1].0[3]);
+    let qd = d.params[5].0[1];
+    let e = rt.op_spec("gate_b1").unwrap().params[2].0[1];
+
+    let base: Vec<Arg> = vec![
+        Tensor::zeros(vec![1, h]).into(),
+        Tensor::zeros(vec![1, c, kv, hd]).into(),
+        Tensor::zeros(vec![1, c, kv, hd]).into(),
+        TensorI32::vec(vec![5]).into(),
+        Tensor::new(vec![h], vec![1.0; h]).unwrap().into(),
+        Tensor::zeros(vec![h, qd]).into(),
+        Tensor::zeros(vec![h, kv * hd]).into(),
+        Tensor::zeros(vec![h, kv * hd]).into(),
+        Tensor::zeros(vec![qd, h]).into(),
+    ];
+    let mut fused = base.clone();
+    fused.push(Tensor::new(vec![h], vec![1.0; h]).unwrap().into());
+    fused.push(Tensor::zeros(vec![h, e]).into());
+    let gate: Vec<Arg> = vec![
+        Tensor::zeros(vec![1, h]).into(),
+        Tensor::new(vec![h], vec![1.0; h]).unwrap().into(),
+        Tensor::zeros(vec![h, e]).into(),
+    ];
+    rt.execute("attn_decode_b1_c512", &base).unwrap();
+    rt.execute("fused_decode_b1_c512", &fused).unwrap();
+    rt.execute("gate_b1", &gate).unwrap();
+
+    let mut b = Bench::new().with_budget(Duration::from_millis(300), Duration::from_secs(2));
+    b.bench("attn_decode_b1_c512", || rt.execute("attn_decode_b1_c512", &base).unwrap());
+    b.bench("gate_b1", || rt.execute("gate_b1", &gate).unwrap());
+    b.bench("fused_decode_b1_c512", || rt.execute("fused_decode_b1_c512", &fused).unwrap());
+    b.report("fused vs separate");
+}

@@ -1,0 +1,14 @@
+use fiddler::config::HardwareConfig;
+use fiddler::config::serving::Policy;
+use fiddler::figures;
+use std::time::Instant;
+fn main() {
+    let hw = HardwareConfig::env1();
+    let mut e = figures::make_engine("mixtral-tiny", &hw, Policy::Fiddler, 0).unwrap();
+    for len in [1024usize, 2048, 4096] {
+        let prompt: Vec<u32> = (0..len as u32).map(|i| i % 500).collect();
+        let t0 = Instant::now();
+        let (_tok, ttft) = e.prefill_ttft(&prompt).unwrap();
+        println!("prefill {len}: wall {:.1}s virtual {:.0}ms", t0.elapsed().as_secs_f64(), ttft/1e3);
+    }
+}

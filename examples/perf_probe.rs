@@ -1,0 +1,40 @@
+use fiddler::config::HardwareConfig;
+use fiddler::config::serving::Policy;
+use fiddler::figures;
+use fiddler::kvcache::SequenceCache;
+use fiddler::workload::{Dataset, WorkloadGen};
+use std::time::Instant;
+
+fn main() {
+    let hw = HardwareConfig::env1();
+    let mut e = figures::make_engine("mixtral-tiny", &hw, Policy::Fiddler, 0).unwrap();
+    let prompt = WorkloadGen::new(Dataset::sharegpt(), 512, 3).prompt(32);
+    let mut cache = SequenceCache::new(e.model());
+    let h = e.runner.prefill(&prompt, &mut cache, &mut e.cx).unwrap();
+    let logits = e.runner.lm_head(&h, &mut e.cx).unwrap();
+    let mut tok = e.sample(logits.row(0));
+    // warm
+    for _ in 0..20 {
+        let xs = e.runner.ws.embed_tokens(&[tok]);
+        let mut c = [&mut cache];
+        let h = e.runner.decode_step(&xs, &mut c, &mut e.cx).unwrap();
+        let l = e.runner.lm_head(&h, &mut e.cx).unwrap();
+        tok = e.sample(l.row(0));
+    }
+    let s0 = e.runner.rt.stats();
+    let t0 = Instant::now();
+    let n = 200;
+    for _ in 0..n {
+        let xs = e.runner.ws.embed_tokens(&[tok]);
+        let mut c = [&mut cache];
+        let h = e.runner.decode_step(&xs, &mut c, &mut e.cx).unwrap();
+        let l = e.runner.lm_head(&h, &mut e.cx).unwrap();
+        tok = e.sample(l.row(0));
+    }
+    let wall = t0.elapsed().as_micros() as f64;
+    let s1 = e.runner.rt.stats();
+    let exec_us = (s1.execute_wall_us - s0.execute_wall_us) as f64;
+    let nexec = s1.executions - s0.executions;
+    println!("steps={n} wall/step={:.0}us pjrt_exec/step={:.0}us ({} calls/step, {:.0}us/call) host-glue/step={:.0}us",
+        wall/n as f64, exec_us/n as f64, nexec as f64/n as f64, exec_us/nexec as f64, (wall-exec_us)/n as f64);
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path for the Fiddler reproduction.
+
+Python here is AOT-only: kernels (L1, Pallas) + model ops (L2, JAX) are
+lowered by aot.py to HLO-text artifacts that the Rust runtime loads via the
+PJRT C API.  Nothing in this package runs on the request path.
+"""

@@ -1,0 +1,131 @@
+"""Offline analyses reproduced from the paper's appendices.
+
+Table 2 (Appendix B): distribution of |silu(xn @ w1)| values per layer on
+calibration samples — demonstrates why ReLU-style sparsity exploitation does
+not apply to SiLU MoE models.
+
+Figure 8 input (Appendix C): expert-popularity counts per (layer, expert) on
+calibration samples, exported for the Rust popularity/placement modules and
+the fig8 driver.
+
+Both write JSON under artifacts/<model>/analysis/.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import get_config
+from .export_weights import make_weights
+from .goldens import zipf_tokens
+from .kernels.ref import silu
+from .model import AttnWeights, attn_prefill, gate_op
+
+THRESHOLDS = [0.001, 0.01, 0.1, 1.0]
+
+
+def _forward_collect(cfg, weights, tokens):
+    """One prompt forward collecting per-layer SiLU magnitudes (for the
+    experts actually routed to, mirroring real execution), routing counts,
+    and cross-layer expert transition counts (for the prefetcher: counts of
+    token routed to expert i at layer l AND expert j at layer l+1)."""
+    x = weights["embed"][jnp.asarray(tokens, jnp.int32)]
+    s = len(tokens)
+    silu_vals = []          # per layer: np array of |silu| values
+    route_counts = np.zeros((cfg.n_layers, cfg.n_experts), np.int64)
+    transitions = np.zeros((cfg.n_layers - 1, cfg.n_experts, cfg.n_experts), np.int64)
+    prev_ids = None
+    for li in range(cfg.n_layers):
+        lw = weights["layers"][li]
+        aw = AttnWeights(lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"])
+        x, _, _ = attn_prefill(cfg, x, jnp.int32(s), aw)
+        probs, xn = gate_op(cfg, x, lw["ffn_norm"], lw["gate"])
+        topv, topi = jax.lax.top_k(probs, cfg.top_k)
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+        layer_vals = []
+        y = jnp.zeros_like(x)
+        ids = np.asarray(topi)
+        for e in range(cfg.n_experts):
+            mask = (ids == e).any(axis=-1)
+            route_counts[li, e] += int(mask.sum())
+            if not mask.any():
+                continue
+            xe = xn[np.where(mask)[0]]
+            a = silu(xe @ lw["w1"][e])
+            layer_vals.append(np.abs(np.asarray(a)).reshape(-1))
+            out_e = (a * (xe @ lw["w3"][e])) @ lw["w2"][e]
+            sel = (topi == e).astype(x.dtype) * topv
+            wsum = jnp.sum(sel, axis=-1, keepdims=True)
+            full = jnp.zeros_like(x).at[np.where(mask)[0]].set(out_e)
+            y = y + wsum * full
+        x = x + y
+        silu_vals.append(
+            np.concatenate(layer_vals) if layer_vals else np.zeros(0, np.float32)
+        )
+        if prev_ids is not None:
+            # token t was routed to every i in prev_ids[t] and j in ids[t]
+            for t in range(s):
+                for i in prev_ids[t]:
+                    for j in ids[t]:
+                        transitions[li - 1, i, j] += 1
+        prev_ids = ids
+    return silu_vals, route_counts, transitions
+
+
+def run_analysis(model_name: str, out_dir: str, n_samples: int = 100,
+                 sample_len: int = 64, seed: int = 11) -> str:
+    cfg = get_config(model_name)
+    weights = make_weights(cfg)
+    rng = np.random.RandomState(seed)
+
+    per_layer = [[] for _ in range(cfg.n_layers)]
+    counts = np.zeros((cfg.n_layers, cfg.n_experts), np.int64)
+    trans = np.zeros((cfg.n_layers - 1, cfg.n_experts, cfg.n_experts), np.int64)
+    for _ in range(n_samples):
+        toks = zipf_tokens(rng, sample_len, cfg.vocab)
+        vals, rc, tr = _forward_collect(cfg, weights, toks)
+        counts += rc
+        trans += tr
+        for li, v in enumerate(vals):
+            per_layer[li].append(v)
+
+    table2 = []
+    for li in range(cfg.n_layers):
+        v = np.concatenate(per_layer[li]) if per_layer[li] else np.zeros(1)
+        row = {"layer": li + 1}
+        for t in THRESHOLDS:
+            row[f"<{t}"] = float(100.0 * np.mean(v < t))
+        table2.append(row)
+
+    maxc = counts.max() if counts.max() > 0 else 1
+    popularity = (counts / maxc).tolist()
+
+    adir = os.path.join(out_dir, "analysis")
+    os.makedirs(adir, exist_ok=True)
+    path = os.path.join(adir, "analysis.json")
+    with open(path, "w") as fh:
+        json.dump(
+            {
+                "model": cfg.name,
+                "n_samples": n_samples,
+                "sample_len": sample_len,
+                "table2": table2,
+                "popularity_counts": counts.tolist(),
+                "popularity_normalized": popularity,
+                "transition_counts": trans.tolist(),
+            },
+            fh,
+            indent=1,
+        )
+    return path
+
+
+if __name__ == "__main__":
+    import sys
+    model = sys.argv[1] if len(sys.argv) > 1 else "mixtral-tiny"
+    out = sys.argv[2] if len(sys.argv) > 2 else f"../artifacts/{model}"
+    n = int(sys.argv[3]) if len(sys.argv) > 3 else 100
+    print("wrote", run_analysis(model, out, n_samples=n))

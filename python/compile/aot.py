@@ -1,0 +1,229 @@
+"""AOT lowering: every L2 entry point -> HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla_extension 0.5.1
+behind the Rust ``xla`` crate rejects (``proto.id() <= INT_MAX``).  The text
+parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each servable model gets a directory::
+
+    artifacts/<model>/
+      artifacts_manifest.json    op name -> {file, params, outputs}
+      hlo/<op>.hlo.txt           one module per (op, shape-bucket)
+      weights/*.bin              from export_weights.py
+      weights_manifest.json
+
+Ops and shape buckets are described in model.py / configs.py.  Python is
+build-time only: the Rust runtime loads these files and never calls back.
+"""
+
+import argparse
+import json
+import os
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import export_weights
+from .configs import (
+    CACHE_BUCKETS,
+    DECODE_BATCH_BUCKETS,
+    LMHEAD_BUCKETS,
+    PREFILL_BUCKETS,
+    TOKEN_BUCKETS,
+    ModelConfig,
+    get_config,
+)
+from .model import (
+    AttnWeights,
+    attn_decode,
+    attn_gate_decode,
+    attn_gate_prefill,
+    attn_prefill,
+    expert_op,
+    gate_op,
+    lm_head_op,
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple so the Rust side
+    can uniformly unwrap with to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _attn_specs(cfg: ModelConfig):
+    h = cfg.hidden
+    return [
+        _spec((h,)),                 # attn_norm
+        _spec((h, cfg.q_dim)),       # wq
+        _spec((h, cfg.kv_dim)),      # wk
+        _spec((h, cfg.kv_dim)),      # wv
+        _spec((cfg.q_dim, h)),       # wo
+    ]
+
+
+def build_entry_points(cfg: ModelConfig) -> Dict[str, Tuple]:
+    """op name -> (fn, [arg specs]).  fn takes positional args in spec order."""
+    h, f, v, e = cfg.hidden, cfg.ffn, cfg.vocab, cfg.n_experts
+    kv, d = cfg.n_kv_heads, cfg.head_dim
+    eps = dict()  # name -> (fn, specs)
+
+    for s in PREFILL_BUCKETS:
+        if s > cfg.max_seq:
+            continue
+
+        def fn_prefill(x, valid, nrm, wq, wk, wv, wo):
+            return attn_prefill(cfg, x, valid, AttnWeights(nrm, wq, wk, wv, wo))
+
+        eps[f"attn_prefill_s{s}"] = (
+            fn_prefill,
+            [_spec((s, h)), _spec((), jnp.int32)] + _attn_specs(cfg),
+        )
+
+        def fn_fused_prefill(x, valid, nrm, wq, wk, wv, wo, fnrm, wg):
+            return attn_gate_prefill(
+                cfg, x, valid, AttnWeights(nrm, wq, wk, wv, wo), fnrm, wg
+            )
+
+        eps[f"fused_prefill_s{s}"] = (
+            fn_fused_prefill,
+            [_spec((s, h)), _spec((), jnp.int32)]
+            + _attn_specs(cfg)
+            + [_spec((h,)), _spec((h, e))],
+        )
+
+    for b in DECODE_BATCH_BUCKETS:
+        for c in CACHE_BUCKETS:
+            if c > cfg.max_seq:
+                continue
+
+            def fn_decode(x, kc, vc, pos, nrm, wq, wk, wv, wo):
+                return attn_decode(
+                    cfg, x, kc, vc, pos, AttnWeights(nrm, wq, wk, wv, wo)
+                )
+
+            eps[f"attn_decode_b{b}_c{c}"] = (
+                fn_decode,
+                [
+                    _spec((b, h)),
+                    _spec((b, c, kv, d)),
+                    _spec((b, c, kv, d)),
+                    _spec((b,), jnp.int32),
+                ]
+                + _attn_specs(cfg),
+            )
+
+            def fn_fused_decode(x, kc, vc, pos, nrm, wq, wk, wv, wo, fnrm, wg):
+                return attn_gate_decode(
+                    cfg, x, kc, vc, pos, AttnWeights(nrm, wq, wk, wv, wo), fnrm, wg
+                )
+
+            eps[f"fused_decode_b{b}_c{c}"] = (
+                fn_fused_decode,
+                [
+                    _spec((b, h)),
+                    _spec((b, c, kv, d)),
+                    _spec((b, c, kv, d)),
+                    _spec((b,), jnp.int32),
+                ]
+                + _attn_specs(cfg)
+                + [_spec((h,)), _spec((h, e))],
+            )
+
+    for n in TOKEN_BUCKETS:
+        if n > cfg.max_seq:
+            continue
+
+        def fn_gate(x, nrm, wg):
+            return gate_op(cfg, x, nrm, wg)
+
+        def fn_expert(xn, w1, w3, w2):
+            return (expert_op(cfg, xn, w1, w3, w2),)
+
+        eps[f"gate_b{n}"] = (fn_gate, [_spec((n, h)), _spec((h,)), _spec((h, e))])
+        eps[f"expert_b{n}"] = (
+            fn_expert,
+            [_spec((n, h)), _spec((h, f)), _spec((h, f)), _spec((f, h))],
+        )
+
+    for n in LMHEAD_BUCKETS:
+
+        def fn_lm(x, nrm, wlm):
+            return (lm_head_op(cfg, x, nrm, wlm),)
+
+        eps[f"lm_head_b{n}"] = (fn_lm, [_spec((n, h)), _spec((h,)), _spec((h, v))])
+
+    return eps
+
+
+def _shape_desc(spec) -> Dict:
+    dt = {jnp.float32.dtype: "f32", jnp.int32.dtype: "i32"}[jnp.dtype(spec.dtype)]
+    return {"shape": list(spec.shape), "dtype": dt}
+
+
+def lower_model(model_name: str, out_dir: str, only: List[str] = None) -> str:
+    cfg = get_config(model_name)
+    hlo_dir = os.path.join(out_dir, "hlo")
+    os.makedirs(hlo_dir, exist_ok=True)
+    entry_points = build_entry_points(cfg)
+
+    ops_manifest = {}
+    for name, (fn, specs) in sorted(entry_points.items()):
+        if only and not any(name.startswith(p) for p in only):
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"hlo/{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as fh:
+            fh.write(text)
+        out_specs = jax.eval_shape(fn, *specs)
+        if not isinstance(out_specs, tuple):
+            out_specs = (out_specs,)
+        ops_manifest[name] = {
+            "file": fname,
+            "params": [_shape_desc(s) for s in specs],
+            "outputs": [_shape_desc(s) for s in out_specs],
+        }
+        print(f"  lowered {model_name}/{name} ({len(text)} chars)")
+
+    mpath = os.path.join(out_dir, "artifacts_manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump({"model": cfg.name, "ops": ops_manifest}, fh, indent=1, sort_keys=True)
+    return mpath
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower Fiddler model artifacts")
+    ap.add_argument("--out", default="../artifacts", help="artifacts root dir")
+    ap.add_argument(
+        "--models", nargs="*", default=["mixtral-tiny", "phi-tiny"],
+        help="servable model configs to lower",
+    )
+    ap.add_argument(
+        "--only", nargs="*", default=None,
+        help="op-name prefixes to lower (debugging)",
+    )
+    args = ap.parse_args()
+    for model in args.models:
+        out_dir = os.path.join(args.out, model)
+        print(f"[aot] exporting weights for {model}")
+        export_weights.export(model, out_dir)
+        print(f"[aot] lowering entry points for {model}")
+        lower_model(model, out_dir, only=args.only)
+        print(f"[aot] done: {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Model configurations for the Fiddler reproduction.
+
+The runtime-servable models are *tiny* Mixtral-style MoE transformers with
+deterministic synthetic weights (see DESIGN.md §2: the paper's behaviour
+depends on routing statistics and tensor shapes, not trained values).  The
+paper-scale dimension sets are kept here as well because the Rust latency
+model (rust/src/latency) is parameterized by the *paper's* per-expert weight
+sizes, not by the tiny runtime model.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    hidden: int
+    ffn: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    n_experts: int
+    top_k: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    rms_eps: float = 1e-5
+    # Bias scale applied to the router weights so that expert popularity is
+    # non-uniform, mimicking the (mildly skewed) distribution in the paper's
+    # Appendix C / Figure 8.
+    gate_bias_scale: float = 0.3
+    weight_seed: int = 20240511
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def expert_params(self) -> int:
+        """Parameters of one expert (w1 + w3 up/gate, w2 down)."""
+        return 3 * self.hidden * self.ffn
+
+
+# Shape buckets compiled AOT.  Dynamic shapes are not exportable through the
+# HLO-text interchange, so the Rust coordinator rounds the per-op input count
+# up to the nearest bucket and pads with zero rows.
+PREFILL_BUCKETS: List[int] = [32, 64, 128, 256, 512, 1024, 2048, 4096]
+DECODE_BATCH_BUCKETS: List[int] = [1, 2, 4, 8, 16]
+CACHE_BUCKETS: List[int] = [128, 512, 1024, 2048, 4096]
+TOKEN_BUCKETS: List[int] = [1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096]
+LMHEAD_BUCKETS: List[int] = [1, 2, 4, 8, 16]
+
+
+MIXTRAL_TINY = ModelConfig(
+    name="mixtral-tiny",
+    vocab=512,
+    hidden=128,
+    ffn=256,
+    n_layers=4,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    n_experts=8,
+    top_k=2,
+    max_seq=4096,
+)
+
+# Stand-in for Phi-3.5-MoE (16 experts, top-2) — Appendix E / Figure 10.
+PHI_TINY = ModelConfig(
+    name="phi-tiny",
+    vocab=512,
+    hidden=128,
+    ffn=256,
+    n_layers=4,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    n_experts=16,
+    top_k=2,
+    max_seq=4096,
+    weight_seed=20240512,
+)
+
+# Paper-scale dimension records (NOT lowered/served; used to document the
+# latency-model parameterization and for DESIGN.md math).
+MIXTRAL_8X7B_PAPER = ModelConfig(
+    name="mixtral-8x7b-paper",
+    vocab=32000,
+    hidden=4096,
+    ffn=14336,
+    n_layers=32,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    n_experts=8,
+    top_k=2,
+    max_seq=32768,
+)
+
+CONFIGS = {c.name: c for c in (MIXTRAL_TINY, PHI_TINY, MIXTRAL_8X7B_PAPER)}
+SERVABLE = ("mixtral-tiny", "phi-tiny")
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return CONFIGS[name]
+    except KeyError:
+        raise KeyError(f"unknown model config {name!r}; have {sorted(CONFIGS)}")

@@ -1,0 +1,158 @@
+"""Deterministic synthetic weight export.
+
+Writes every tensor of a servable model config as little-endian f32 raw
+binary under artifacts/<model>/weights/, plus weights_manifest.json mapping
+tensor name -> {file, shape, dtype}.  The Rust runtime loads these and feeds
+them to the per-op executables as runtime parameters.
+
+The gate weights get a small per-expert bias column so that expert
+popularity is non-uniform (paper Appendix C, Figure 8): popularity must be
+skewed enough that popularity-aware placement beats random placement by a
+few points, but balanced enough to match the paper's observed distribution
+(mean ~0.71 of the max, few very-cold experts).
+"""
+
+import json
+import os
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, get_config
+
+
+def _init(key, shape, scale):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+def make_weights(cfg: ModelConfig) -> Dict:
+    """Build the full (tiny) weight pytree deterministically from cfg.weight_seed."""
+    key = jax.random.PRNGKey(cfg.weight_seed)
+    h, f, v = cfg.hidden, cfg.ffn, cfg.vocab
+    s_h = 1.0 / np.sqrt(h)
+    s_f = 1.0 / np.sqrt(f)
+
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    layers = []
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[li], 10)
+        gate = _init(lk[5], (h, cfg.n_experts), s_h)
+        # Per-expert popularity bias: linear ramp scaled by gate_bias_scale.
+        ramp = jnp.linspace(1.0, -1.0, cfg.n_experts, dtype=jnp.float32)
+        gate = gate + cfg.gate_bias_scale * s_h * ramp[None, :]
+        layers.append({
+            "attn_norm": jnp.ones((h,), jnp.float32),
+            "wq": _init(lk[0], (h, cfg.q_dim), s_h),
+            "wk": _init(lk[1], (h, cfg.kv_dim), s_h),
+            "wv": _init(lk[2], (h, cfg.kv_dim), s_h),
+            "wo": _init(lk[3], (cfg.q_dim, h), s_h),
+            "ffn_norm": jnp.ones((h,), jnp.float32),
+            "gate": gate,
+            "w1": _init(lk[6], (cfg.n_experts, h, f), s_h),
+            "w3": _init(lk[7], (cfg.n_experts, h, f), s_h),
+            "w2": _init(lk[8], (cfg.n_experts, f, h), s_f),
+        })
+    return {
+        "embed": _init(keys[-3], (v, h), 1.0),
+        "final_norm": jnp.ones((h,), jnp.float32),
+        "lm_head": _init(keys[-2], (h, v), s_h),
+        "layers": layers,
+    }
+
+
+def flatten_weights(cfg: ModelConfig, weights: Dict) -> Dict[str, np.ndarray]:
+    """Flatten the pytree to name -> array, with per-expert tensors split out."""
+    flat = {
+        "embed": weights["embed"],
+        "final_norm": weights["final_norm"],
+        "lm_head": weights["lm_head"],
+    }
+    for li, lw in enumerate(weights["layers"]):
+        p = f"layers.{li}."
+        for name in ("attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "gate"):
+            flat[p + name] = lw[name]
+        for e in range(cfg.n_experts):
+            for name in ("w1", "w3", "w2"):
+                flat[f"{p}experts.{e}.{name}"] = lw[name][e]
+    return {k: np.asarray(v, dtype=np.float32) for k, v in flat.items()}
+
+
+def quantize_int8(arr: np.ndarray):
+    """Symmetric per-output-column int8 quantization of a 2-D weight.
+
+    Returns (q [int8, same shape], scales [f32, n_cols]) with
+    dequant(q, s) = q * s broadcast over rows.  Used for the expert
+    matrices only (the bulk of the model) — the paper calls compression
+    orthogonal to Fiddler (§2.2); this substrate lets the repo demonstrate
+    that claim (examples/ablation_quant.rs).
+    """
+    assert arr.ndim == 2
+    amax = np.abs(arr).max(axis=0)
+    scales = np.where(amax > 0, amax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.round(arr / scales[None, :]), -127, 127).astype(np.int8)
+    return q, scales
+
+
+def export_quantized(cfg: ModelConfig, flat, out_dir: str) -> dict:
+    """Write int8 expert weights + scales; returns the manifest section."""
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    entries = {}
+    for name, arr in sorted(flat.items()):
+        if ".experts." not in name:
+            continue
+        q, scales = quantize_int8(arr)
+        base = name.replace(".", "_")
+        qf, sf = base + "_q8.bin", base + "_scale.bin"
+        q.tofile(os.path.join(wdir, qf))
+        scales.astype("<f4").tofile(os.path.join(wdir, sf))
+        entries[name] = {
+            "q_file": "weights/" + qf,
+            "scale_file": "weights/" + sf,
+            "shape": list(arr.shape),
+            "group": "col",
+        }
+    return entries
+
+
+def export(model_name: str, out_dir: str) -> str:
+    cfg = get_config(model_name)
+    weights = make_weights(cfg)
+    flat = flatten_weights(cfg, weights)
+
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    manifest = {
+        "model": cfg.name,
+        "config": {
+            "vocab": cfg.vocab, "hidden": cfg.hidden, "ffn": cfg.ffn,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads, "head_dim": cfg.head_dim,
+            "n_experts": cfg.n_experts, "top_k": cfg.top_k,
+            "max_seq": cfg.max_seq, "rope_theta": cfg.rope_theta,
+            "rms_eps": cfg.rms_eps,
+        },
+        "tensors": {},
+    }
+    for name, arr in sorted(flat.items()):
+        fname = name.replace(".", "_") + ".bin"
+        arr.astype("<f4").tofile(os.path.join(wdir, fname))
+        manifest["tensors"][name] = {
+            "file": "weights/" + fname,
+            "shape": list(arr.shape),
+            "dtype": "f32",
+        }
+    manifest["quant_tensors"] = export_quantized(cfg, flat, out_dir)
+    mpath = os.path.join(out_dir, "weights_manifest.json")
+    with open(mpath, "w") as fh:
+        json.dump(manifest, fh, indent=1, sort_keys=True)
+    return mpath
+
+
+if __name__ == "__main__":
+    import sys
+    model = sys.argv[1] if len(sys.argv) > 1 else "mixtral-tiny"
+    out = sys.argv[2] if len(sys.argv) > 2 else f"../artifacts/{model}"
+    print("wrote", export(model, out))

@@ -1,0 +1,123 @@
+"""Golden outputs for the Rust integration tests.
+
+Runs the pure-jnp reference model (model.reference_forward) with the exported
+deterministic weights on fixed prompts and dumps:
+
+  * last-position logits for a prefill,
+  * the greedy continuation token ids,
+  * per-op intermediates for layer 0 (attention out, gate probs, top-k ids,
+    post-FFN hidden) on a short prompt,
+
+to artifacts/<model>/goldens.json.  rust/tests/golden.rs re-runs the same
+computation through the per-op HLO executables + host-side glue and asserts
+allclose, which is the cross-language end-to-end correctness signal.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import get_config
+from .export_weights import make_weights
+from .model import (
+    AttnWeights,
+    attn_prefill,
+    gate_op,
+    expert_op,
+    lm_head_op,
+    reference_forward,
+)
+
+
+def zipf_tokens(rng: np.random.RandomState, n: int, vocab: int, a: float = 1.2):
+    """Zipf-ish token sampler shared (by construction) with the Rust workload
+    generator: rank r gets probability proportional to 1/(r+1)^a."""
+    ranks = np.arange(vocab, dtype=np.float64)
+    p = 1.0 / np.power(ranks + 1.0, a)
+    p /= p.sum()
+    return rng.choice(vocab, size=n, p=p).astype(np.int32)
+
+
+def greedy_decode(cfg, weights, prompt: np.ndarray, steps: int):
+    """Greedy continuation by re-running the full reference forward each step
+    (O(n^2) but simple and unambiguous for goldens)."""
+    toks = list(int(t) for t in prompt)
+    out = []
+    for _ in range(steps):
+        logits = reference_forward(cfg, weights, jnp.asarray(toks, jnp.int32))
+        nxt = int(jnp.argmax(logits[-1]))
+        toks.append(nxt)
+        out.append(nxt)
+    return out
+
+
+def layer0_intermediates(cfg, weights, prompt: np.ndarray):
+    x = weights["embed"][jnp.asarray(prompt, jnp.int32)]
+    lw = weights["layers"][0]
+    aw = AttnWeights(lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"])
+    h_attn, k, v = attn_prefill(cfg, x, jnp.int32(len(prompt)), aw)
+    probs, xn = gate_op(cfg, h_attn, lw["ffn_norm"], lw["gate"])
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    y = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        sel = (topi == e).astype(x.dtype) * topv
+        wsum = jnp.sum(sel, axis=-1, keepdims=True)
+        y = y + wsum * expert_op(cfg, xn, lw["w1"][e], lw["w3"][e], lw["w2"][e])
+    h_out = h_attn + y
+    return {
+        "h_attn": np.asarray(h_attn),
+        "k": np.asarray(k),
+        "v": np.asarray(v),
+        "gate_probs": np.asarray(probs),
+        "topk_ids": np.asarray(topi),
+        "topk_weights": np.asarray(topv),
+        "h_out": np.asarray(h_out),
+    }
+
+
+def _tolist(a: np.ndarray):
+    return [float(x) for x in np.asarray(a, np.float32).reshape(-1)]
+
+
+def export_goldens(model_name: str, out_dir: str) -> str:
+    cfg = get_config(model_name)
+    weights = make_weights(cfg)
+    rng = np.random.RandomState(7)
+
+    prompt = zipf_tokens(rng, 16, cfg.vocab)
+    logits = reference_forward(cfg, weights, jnp.asarray(prompt, jnp.int32))
+    cont = greedy_decode(cfg, weights, prompt, steps=8)
+
+    short = prompt[:8]
+    mid = layer0_intermediates(cfg, weights, short)
+
+    goldens = {
+        "model": cfg.name,
+        "prompt": [int(t) for t in prompt],
+        "last_logits": _tolist(logits[-1]),
+        "greedy_continuation": cont,
+        "layer0": {
+            "prompt": [int(t) for t in short],
+            "h_attn": _tolist(mid["h_attn"]),
+            "gate_probs": _tolist(mid["gate_probs"]),
+            "topk_ids": [int(i) for i in mid["topk_ids"].reshape(-1)],
+            "topk_weights": _tolist(mid["topk_weights"]),
+            "h_out": _tolist(mid["h_out"]),
+        },
+    }
+    path = os.path.join(out_dir, "goldens.json")
+    with open(path, "w") as fh:
+        json.dump(goldens, fh)
+    return path
+
+
+if __name__ == "__main__":
+    import sys
+    model = sys.argv[1] if len(sys.argv) > 1 else "mixtral-tiny"
+    out = sys.argv[2] if len(sys.argv) > 2 else f"../artifacts/{model}"
+    os.makedirs(out, exist_ok=True)
+    print("wrote", export_goldens(model, out))

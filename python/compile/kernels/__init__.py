@@ -1,0 +1,8 @@
+"""L1 Pallas kernels (build-time only; lowered into the L2 HLO artifacts)."""
+
+from .expert_ffn import expert_ffn, vmem_footprint_bytes
+from .gating import gating
+from .rmsnorm import rmsnorm
+from . import ref
+
+__all__ = ["expert_ffn", "gating", "rmsnorm", "ref", "vmem_footprint_bytes"]

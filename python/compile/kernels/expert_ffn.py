@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: fused Mixtral expert FFN.
+
+Computes y = (silu(x @ w1) * (x @ w3)) @ w2 in a single kernel.
+
+TPU adaptation of the paper's hot-spot (see DESIGN.md §Hardware-Adaptation):
+the paper tunes an AVX512_BF16 CPU kernel and relies on cuBLAS on the GPU;
+on a TPU-like machine the same computation is expressed as an HBM↔VMEM
+schedule with BlockSpec:
+
+  grid = (s/BS, f/FB)
+    i — token block:  x tile [BS, h] stays resident for a row of the grid
+    j — ffn block:    w1/w3 column tiles and w2 row tiles stream through VMEM
+
+  For each (i, j): a = silu(x_i @ w1_j) * (x_i @ w3_j)   (gate/up fused,
+  one VMEM round-trip instead of three HBM round-trips), then the partial
+  down-projection a @ w2_j is *accumulated* into the output tile o_i — the
+  classic two-stage MoE-FFN tiling that keeps VMEM footprint bounded by
+  BS*h + 2*h*FB + FB*h + BS*h regardless of the ffn dimension.
+
+  The matmuls are [BS,h]x[h,FB] and [BS,FB]x[FB,h]; with BS=FB=128..512 and
+  h a multiple of 128 these map directly onto the 128x128 MXU.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic custom
+calls, and interpret-mode pallas lowers to plain HLO (while-loops over the
+grid), which the Rust runtime can run.  Real-TPU perf is estimated in
+EXPERIMENTS.md §Perf from the VMEM footprint / MXU shape above.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _silu(x):
+    return x * jnp.reciprocal(1.0 + jnp.exp(-x))
+
+
+def _expert_ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    # j is the ffn-block index; on the first ffn block, zero the accumulator.
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]                      # [BS, h]
+    a = _silu(x @ w1_ref[...]) * (x @ w3_ref[...])   # [BS, FB], fused gate/up
+    o_ref[...] += a @ w2_ref[...]       # partial down-projection
+
+
+def _pick_block(n: int, pref: int) -> int:
+    """Largest divisor of n that is <= pref (shapes here are powers of two)."""
+    b = min(n, pref)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "block_f"))
+def expert_ffn(x, w1, w3, w2, *, block_s: int = 128, block_f: int = 256):
+    """Fused expert FFN. x: [s, h]; w1, w3: [h, f]; w2: [f, h] -> [s, h]."""
+    s, h = x.shape
+    f = w1.shape[1]
+    if w1.shape != (h, f) or w3.shape != (h, f) or w2.shape != (f, h):
+        raise ValueError(
+            f"inconsistent expert shapes x={x.shape} w1={w1.shape} "
+            f"w3={w3.shape} w2={w2.shape}"
+        )
+    bs = _pick_block(s, block_s)
+    fb = _pick_block(f, block_f)
+    grid = (s // bs, f // fb)
+    return pl.pallas_call(
+        _expert_ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bs, h), lambda i, j: (i, 0)),   # x: token tile
+            pl.BlockSpec((h, fb), lambda i, j: (0, j)),   # w1: column tile
+            pl.BlockSpec((h, fb), lambda i, j: (0, j)),   # w3: column tile
+            pl.BlockSpec((fb, h), lambda i, j: (j, 0)),   # w2: row tile
+        ],
+        out_specs=pl.BlockSpec((bs, h), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, h), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+def vmem_footprint_bytes(h: int, f: int, block_s: int = 128,
+                         block_f: int = 256, dtype_bytes: int = 2) -> int:
+    """Estimated VMEM bytes resident per grid step (for the perf analysis).
+
+    x tile + w1/w3 column tiles + w2 row tile + output accumulator.
+    """
+    bs = _pick_block(max(block_s, 1), block_s)
+    fb = _pick_block(max(block_f, 1), block_f)
+    return dtype_bytes * (bs * h + 2 * h * fb + fb * h + bs * h)

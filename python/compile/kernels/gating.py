@@ -1,0 +1,49 @@
+"""L1 Pallas kernel: MoE router (gating) — fused matmul + row softmax.
+
+probs = softmax(x @ wg, axis=-1), x: [n, h], wg: [h, e].
+
+The expert count e is tiny (8/16), so the full logits row fits VMEM and the
+softmax is fused behind the matmul in one kernel; the grid tiles tokens only.
+interpret=True for CPU-PJRT executability (see expert_ffn.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gating_kernel(x_ref, wg_ref, o_ref):
+    logits = x_ref[...] @ wg_ref[...]          # [BS, e]
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    ex = jnp.exp(logits - m)
+    o_ref[...] = ex / jnp.sum(ex, axis=-1, keepdims=True)
+
+
+def _pick_block(n: int, pref: int) -> int:
+    b = min(n, pref)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def gating(x, wg, *, block_s: int = 256):
+    """Router probabilities. x: [n, h], wg: [h, e] -> [n, e]."""
+    n, h = x.shape
+    e = wg.shape[1]
+    if wg.shape[0] != h:
+        raise ValueError(f"gate shape mismatch x={x.shape} wg={wg.shape}")
+    bs = _pick_block(n, block_s)
+    return pl.pallas_call(
+        _gating_kernel,
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, h), lambda i: (i, 0)),
+            pl.BlockSpec((h, e), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bs, e), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, e), x.dtype),
+        interpret=True,
+    )(x, wg)

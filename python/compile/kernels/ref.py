@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written in
+the most obvious jnp form.  pytest (python/tests/test_kernels.py) sweeps
+shapes with hypothesis and asserts allclose between the kernel and these.
+"""
+
+import jax.numpy as jnp
+
+
+def silu(x):
+    return x * jnp.reciprocal(1.0 + jnp.exp(-x))
+
+
+def expert_ffn_ref(x, w1, w3, w2):
+    """Mixtral expert FFN: (silu(x @ w1) * (x @ w3)) @ w2.
+
+    x: [s, h]; w1, w3: [h, f]; w2: [f, h] -> [s, h]
+    """
+    a = silu(x @ w1) * (x @ w3)
+    return a @ w2
+
+
+def rmsnorm_ref(x, w, eps=1e-5):
+    """RMSNorm over the last dim. x: [..., h], w: [h]."""
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jnp.reciprocal(jnp.sqrt(var + eps)) * w
+
+
+def gating_ref(x, wg):
+    """Router: softmax(x @ wg). x: [n, h], wg: [h, e] -> probs [n, e]."""
+    logits = x @ wg
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: RMSNorm over the last dimension.
+
+y = x * rsqrt(mean(x^2) + eps) * w, x: [n, h], w: [h].
+
+Row-parallel: the grid tiles tokens; each tile reduces its own rows in VMEM.
+interpret=True for CPU-PJRT executability (see expert_ffn.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(eps, x_ref, w_ref, o_ref):
+    x = x_ref[...]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(var + eps) * w_ref[...]
+
+
+def _pick_block(n: int, pref: int) -> int:
+    b = min(n, pref)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_s"))
+def rmsnorm(x, w, *, eps: float = 1e-5, block_s: int = 256):
+    """RMSNorm. x: [n, h], w: [h] -> [n, h]."""
+    n, h = x.shape
+    if w.shape != (h,):
+        raise ValueError(f"rmsnorm shape mismatch x={x.shape} w={w.shape}")
+    bs = _pick_block(n, block_s)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps),
+        grid=(n // bs,),
+        in_specs=[
+            pl.BlockSpec((bs, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bs, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h), x.dtype),
+        interpret=True,
+    )(x, w)

@@ -1,0 +1,193 @@
+"""L2: Mixtral-style MoE decoder ops in JAX, calling the L1 Pallas kernels.
+
+The model is exported *per-operator* rather than as one monolithic graph so
+that the Rust coordinator (L3) can place each expert invocation on a
+(simulated) device per the paper's Algorithm 1.  Entry points:
+
+  attn_prefill   — full-prompt attention, no prior cache, causal+valid mask
+  attn_decode    — one-token-per-sequence attention against a padded KV cache
+  gate_op        — pre-FFN RMSNorm + router probabilities (Pallas gating)
+  expert_op      — one expert's FFN over its routed tokens (Pallas kernel)
+  lm_head_op     — final RMSNorm + vocab projection
+
+Host-side responsibilities (Rust): embedding lookup, top-k over gate probs,
+expert-output weighted combine + residual add, KV-cache management, sampling.
+
+All ops take weights as runtime parameters so a single compiled executable
+serves every layer / expert (experts "move" between simulated devices by the
+coordinator choosing where to run them, exactly as in the paper).
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels import expert_ffn, gating, rmsnorm
+
+NEG_INF = -1e30
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """RoPE tables for integer positions [n] -> cos, sin [n, head_dim//2]."""
+    half = head_dim // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * (jnp.arange(half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate pairs. x: [n, heads, head_dim]; cos/sin: [n, head_dim//2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = cos[:, None, :], sin[:, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+class AttnWeights(NamedTuple):
+    norm: jax.Array   # [h]
+    wq: jax.Array     # [h, n_heads*head_dim]
+    wk: jax.Array     # [h, n_kv*head_dim]
+    wv: jax.Array     # [h, n_kv*head_dim]
+    wo: jax.Array     # [n_heads*head_dim, h]
+
+
+def _project_qkv(cfg: ModelConfig, x, w: AttnWeights, positions):
+    n = x.shape[0]
+    xn = rmsnorm(x, w.norm, eps=cfg.rms_eps)
+    q = (xn @ w.wq).reshape(n, cfg.n_heads, cfg.head_dim)
+    k = (xn @ w.wk).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+    v = (xn @ w.wv).reshape(n, cfg.n_kv_heads, cfg.head_dim)
+    cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def _repeat_kv(cfg: ModelConfig, k):
+    """GQA: expand kv heads to query heads. [.., n_kv, d] -> [.., n_heads, d]."""
+    reps = cfg.n_heads // cfg.n_kv_heads
+    return jnp.repeat(k, reps, axis=-2)
+
+
+def attn_prefill(cfg: ModelConfig, x, valid_len, w: AttnWeights):
+    """Prompt attention. x: [S, h] (padded), valid_len: scalar i32.
+
+    Returns (h_out [S,h] with residual, k [S,kv,d], v [S,kv,d]).
+    Rows >= valid_len are zero-masked garbage the host must ignore.
+    """
+    s = x.shape[0]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    q, k, v = _project_qkv(cfg, x, w, positions)
+
+    kq = _repeat_kv(cfg, k)
+    vq = _repeat_kv(cfg, v)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+    # scores: [heads, S, S]
+    scores = jnp.einsum("qhd,khd->hqk", q, kq) * scale
+    ar = jnp.arange(s)
+    causal = ar[None, :] <= ar[:, None]                    # [q, k]
+    valid = ar[None, :] < valid_len                        # [1, k]
+    mask = (causal & valid)[None, :, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,khd->qhd", probs, vq).reshape(s, cfg.q_dim)
+    out = ctx @ w.wo
+    # residual; keep padded rows harmless (they are recomputed garbage)
+    return x + out, k, v
+
+
+def attn_decode(cfg: ModelConfig, x, k_cache, v_cache, pos, w: AttnWeights):
+    """Single-token attention for a batch against padded caches.
+
+    x: [B, h] current-token activations
+    k_cache/v_cache: [B, C, kv, d]; slots >= pos[b] MUST be zero
+    pos: [B] i32 — index of the current token (= number of cached tokens)
+
+    Returns (h_out [B,h] with residual, k_new [B,kv,d], v_new [B,kv,d]);
+    the host appends k_new/v_new to its cache at slot pos[b].
+    """
+    b, c = x.shape[0], k_cache.shape[1]
+    q, k_new, v_new = _project_qkv(cfg, x, w, pos)
+
+    # Insert the current K/V at slot pos via one-hot (slots there are zero).
+    onehot = (jnp.arange(c)[None, :] == pos[:, None]).astype(x.dtype)  # [B,C]
+    k_full = k_cache + onehot[:, :, None, None] * k_new[:, None, :, :]
+    v_full = v_cache + onehot[:, :, None, None] * v_new[:, None, :, :]
+
+    kq = _repeat_kv(cfg, k_full)   # [B, C, heads, d]
+    vq = _repeat_kv(cfg, v_full)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+    scores = jnp.einsum("bhd,bchd->bhc", q, kq) * scale
+    mask = jnp.arange(c)[None, None, :] <= pos[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("bhc,bchd->bhd", probs, vq).reshape(b, cfg.q_dim)
+    return x + ctx @ w.wo, k_new, v_new
+
+
+def gate_op(cfg: ModelConfig, h, ffn_norm, wg):
+    """Pre-FFN norm + router probs. h: [N, hidden] -> (probs [N,E], xn [N, hidden])."""
+    xn = rmsnorm(h, ffn_norm, eps=cfg.rms_eps)
+    probs = gating(xn, wg)
+    return probs, xn
+
+
+def expert_op(cfg: ModelConfig, xn, w1, w3, w2):
+    """One expert's FFN over its routed (padded) tokens. xn: [N, h] -> [N, h]."""
+    del cfg
+    return expert_ffn(xn, w1, w3, w2)
+
+
+def lm_head_op(cfg: ModelConfig, h, final_norm, w_lm):
+    """Final norm + logits. h: [N, hidden] -> [N, vocab]."""
+    return rmsnorm(h, final_norm, eps=cfg.rms_eps) @ w_lm
+
+
+def attn_gate_prefill(cfg: ModelConfig, x, valid_len, w: AttnWeights, ffn_norm, wg):
+    """Fused prefill attention + router (one executable instead of two —
+    the L2 fusion recorded in EXPERIMENTS.md §Perf; the router input is the
+    attention output, so fusing removes one host round-trip per layer)."""
+    h, k, v = attn_prefill(cfg, x, valid_len, w)
+    probs, xn = gate_op(cfg, h, ffn_norm, wg)
+    return h, k, v, probs, xn
+
+
+def attn_gate_decode(cfg: ModelConfig, x, k_cache, v_cache, pos, w: AttnWeights,
+                     ffn_norm, wg):
+    """Fused decode attention + router (see attn_gate_prefill)."""
+    h, k_new, v_new = attn_decode(cfg, x, k_cache, v_cache, pos, w)
+    probs, xn = gate_op(cfg, h, ffn_norm, wg)
+    return h, k_new, v_new, probs, xn
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp full-model reference (goldens + Table-2 analysis); mirrors exactly
+# what the Rust coordinator composes out of the per-op executables.
+# ---------------------------------------------------------------------------
+
+def reference_forward(cfg: ModelConfig, weights: dict, tokens):
+    """Full forward over a prompt; returns logits for every position.
+
+    weights: dict from export_weights.make_weights().
+    tokens: [S] int32.  Educational-clarity implementation: prefill only.
+    """
+    x = weights["embed"][tokens]            # [S, h]
+    s = tokens.shape[0]
+    for layer in range(cfg.n_layers):
+        lw = weights["layers"][layer]
+        aw = AttnWeights(lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"])
+        x, _, _ = attn_prefill(cfg, x, jnp.int32(s), aw)
+        probs, xn = gate_op(cfg, x, lw["ffn_norm"], lw["gate"])
+        # host-side top-k + combine, replicated here in jnp
+        topv, topi = jax.lax.top_k(probs, cfg.top_k)
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+        y = jnp.zeros_like(x)
+        for e in range(cfg.n_experts):
+            sel = (topi == e).astype(x.dtype) * topv       # [S, k]
+            wsum = jnp.sum(sel, axis=-1, keepdims=True)    # [S, 1]
+            out_e = expert_op(cfg, xn, lw["w1"][e], lw["w3"][e], lw["w2"][e])
+            y = y + wsum * out_e
+        x = x + y
+    return lm_head_op(cfg, x, weights["final_norm"], weights["lm_head"])

@@ -1,0 +1,60 @@
+"""Fused attn+gate entry points must equal the separate-op composition
+(they exist for the L3 perf ablation; see EXPERIMENTS.md §Perf)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import MIXTRAL_TINY
+from compile.export_weights import make_weights
+from compile.model import (
+    AttnWeights,
+    attn_decode,
+    attn_gate_decode,
+    attn_gate_prefill,
+    attn_prefill,
+    gate_op,
+)
+
+CFG = MIXTRAL_TINY
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return make_weights(CFG)
+
+
+def _aw(lw):
+    return AttnWeights(lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"])
+
+
+def test_fused_prefill_equals_composition(weights):
+    lw = weights["layers"][0]
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, CFG.hidden)), jnp.float32)
+    h1, k1, v1 = attn_prefill(CFG, x, jnp.int32(8), _aw(lw))
+    p1, xn1 = gate_op(CFG, h1, lw["ffn_norm"], lw["gate"])
+    h2, k2, v2, p2, xn2 = attn_gate_prefill(
+        CFG, x, jnp.int32(8), _aw(lw), lw["ffn_norm"], lw["gate"]
+    )
+    for a, b in [(h1, h2), (k1, k2), (v1, v2), (p1, p2), (xn1, xn2)]:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
+def test_fused_decode_equals_composition(weights):
+    lw = weights["layers"][1]
+    rng = np.random.default_rng(1)
+    c = 128
+    x = jnp.asarray(rng.standard_normal((2, CFG.hidden)), jnp.float32)
+    kc = jnp.asarray(
+        rng.standard_normal((2, c, CFG.n_kv_heads, CFG.head_dim)) * 0.0, jnp.float32
+    )
+    vc = jnp.zeros_like(kc)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    h1, k1, v1 = attn_decode(CFG, x, kc, vc, pos, _aw(lw))
+    p1, xn1 = gate_op(CFG, h1, lw["ffn_norm"], lw["gate"])
+    h2, k2, v2, p2, xn2 = attn_gate_decode(
+        CFG, x, kc, vc, pos, _aw(lw), lw["ffn_norm"], lw["gate"]
+    )
+    for a, b in [(h1, h2), (k1, k2), (v1, v2), (p1, p2), (xn1, xn2)]:
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)

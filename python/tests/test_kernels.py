@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes and value scales; every kernel must match its
+oracle to tight f32 tolerance for all grid/tile decompositions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import expert_ffn, gating, rmsnorm
+from compile.kernels.ref import expert_ffn_ref, gating_ref, rmsnorm_ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, *shape, scale=0.1):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+pow2 = lambda lo, hi: st.sampled_from([2 ** i for i in range(lo, hi + 1)])
+
+
+class TestExpertFFN:
+    @settings(**SETTINGS)
+    @given(s=pow2(0, 9), h=pow2(4, 7), f=pow2(4, 8), seed=st.integers(0, 2 ** 16))
+    def test_matches_ref(self, s, h, f, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, s, h, scale=1.0)
+        w1, w3 = _rand(rng, h, f), _rand(rng, h, f)
+        w2 = _rand(rng, f, h)
+        got = expert_ffn(x, w1, w3, w2)
+        want = expert_ffn_ref(x, w1, w3, w2)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(**SETTINGS)
+    @given(bs=pow2(3, 8), fb=pow2(4, 8))
+    def test_block_shape_invariance(self, bs, fb):
+        """Output must not depend on the chosen tile decomposition."""
+        rng = np.random.default_rng(0)
+        x = _rand(rng, 256, 64, scale=1.0)
+        w1, w3, w2 = _rand(rng, 64, 256), _rand(rng, 64, 256), _rand(rng, 256, 64)
+        base = expert_ffn(x, w1, w3, w2)
+        tiled = expert_ffn(x, w1, w3, w2, block_s=bs, block_f=fb)
+        np.testing.assert_allclose(tiled, base, rtol=1e-5, atol=1e-5)
+
+    def test_zero_input_rows_give_zero_output(self):
+        """Zero padding rows (bucket rounding on the Rust side) must stay
+        harmless: silu(0)*0 @ w2 = 0."""
+        rng = np.random.default_rng(1)
+        x = np.asarray(rng.standard_normal((8, 32)), np.float32)
+        x[4:] = 0.0
+        w1, w3, w2 = _rand(rng, 32, 64), _rand(rng, 32, 64), _rand(rng, 64, 32)
+        y = np.asarray(expert_ffn(jnp.asarray(x), w1, w3, w2))
+        np.testing.assert_allclose(y[4:], 0.0, atol=1e-7)
+
+    def test_shape_mismatch_raises(self):
+        rng = np.random.default_rng(2)
+        with pytest.raises(ValueError):
+            expert_ffn(_rand(rng, 4, 16), _rand(rng, 16, 32),
+                       _rand(rng, 16, 32), _rand(rng, 16, 32))
+
+    def test_large_values_finite(self):
+        rng = np.random.default_rng(3)
+        x = _rand(rng, 16, 32, scale=50.0)
+        w1, w3, w2 = _rand(rng, 32, 64, scale=1.0), _rand(rng, 32, 64, scale=1.0), \
+            _rand(rng, 64, 32, scale=1.0)
+        y = np.asarray(expert_ffn(x, w1, w3, w2))
+        assert np.isfinite(y).all()
+
+
+class TestGating:
+    @settings(**SETTINGS)
+    @given(n=pow2(0, 10), h=pow2(4, 7), e=st.sampled_from([4, 8, 16]),
+           seed=st.integers(0, 2 ** 16))
+    def test_matches_ref(self, n, h, e, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, n, h, scale=1.0)
+        wg = _rand(rng, h, e)
+        np.testing.assert_allclose(
+            gating(x, wg), gating_ref(x, wg), rtol=1e-5, atol=1e-6
+        )
+
+    @settings(**SETTINGS)
+    @given(n=pow2(0, 8), seed=st.integers(0, 2 ** 16))
+    def test_rows_sum_to_one(self, n, seed):
+        rng = np.random.default_rng(seed)
+        p = np.asarray(gating(_rand(rng, n, 32, scale=2.0), _rand(rng, 32, 8)))
+        np.testing.assert_allclose(p.sum(axis=-1), 1.0, rtol=1e-5)
+        assert (p >= 0).all()
+
+    def test_extreme_logits_stable(self):
+        """Softmax must be max-subtracted: huge logits stay finite."""
+        x = jnp.full((4, 16), 100.0, jnp.float32)
+        wg = jnp.ones((16, 8), jnp.float32)
+        p = np.asarray(gating(x, wg))
+        assert np.isfinite(p).all()
+
+
+class TestRMSNorm:
+    @settings(**SETTINGS)
+    @given(n=pow2(0, 10), h=pow2(4, 8), seed=st.integers(0, 2 ** 16))
+    def test_matches_ref(self, n, h, seed):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, n, h, scale=3.0)
+        w = _rand(rng, h, scale=1.0)
+        np.testing.assert_allclose(
+            rmsnorm(x, w), rmsnorm_ref(x, w), rtol=1e-5, atol=1e-6
+        )
+
+    def test_unit_rows_preserved(self):
+        """x with RMS 1 and unit gain is unchanged (up to eps)."""
+        h = 64
+        x = jnp.ones((4, h), jnp.float32)
+        w = jnp.ones((h,), jnp.float32)
+        np.testing.assert_allclose(rmsnorm(x, w), x, rtol=1e-4)
+
+    def test_scale_invariance_direction(self):
+        """rmsnorm(c*x) == rmsnorm(x) for c > 0 (eps-negligible regime)."""
+        rng = np.random.default_rng(5)
+        x = _rand(rng, 8, 64, scale=10.0)
+        w = _rand(rng, 64, scale=1.0)
+        np.testing.assert_allclose(
+            rmsnorm(4.0 * x, w), rmsnorm(x, w), rtol=1e-4, atol=1e-5
+        )

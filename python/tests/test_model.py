@@ -1,0 +1,166 @@
+"""L2 correctness: per-op model functions and their composition.
+
+The key invariant: composing the per-op entry points the way the Rust
+coordinator does (prefill -> per-layer attention/gate/expert/combine ->
+lm_head) must equal the monolithic reference_forward.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.configs import MIXTRAL_TINY, PHI_TINY, get_config
+from compile.export_weights import make_weights
+from compile.model import (
+    AttnWeights,
+    attn_decode,
+    attn_prefill,
+    expert_op,
+    gate_op,
+    lm_head_op,
+    reference_forward,
+)
+
+CFG = MIXTRAL_TINY
+
+
+@pytest.fixture(scope="module")
+def weights():
+    return make_weights(CFG)
+
+
+def _attnw(lw):
+    return AttnWeights(lw["attn_norm"], lw["wq"], lw["wk"], lw["wv"], lw["wo"])
+
+
+class TestAttention:
+    def test_prefill_padding_does_not_change_valid_rows(self, weights):
+        """Rounding the prompt up to a bucket must not perturb valid outputs."""
+        lw = weights["layers"][0]
+        rng = np.random.default_rng(0)
+        x6 = jnp.asarray(rng.standard_normal((6, CFG.hidden)), jnp.float32)
+        pad = jnp.zeros((10, CFG.hidden), jnp.float32)
+        x16 = jnp.concatenate([x6, pad])
+        o6, k6, v6 = attn_prefill(CFG, x6, jnp.int32(6), _attnw(lw))
+        o16, k16, v16 = attn_prefill(CFG, x16, jnp.int32(6), _attnw(lw))
+        np.testing.assert_allclose(o16[:6], o6, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(k16[:6], k6, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(v16[:6], v6, rtol=1e-5, atol=1e-5)
+
+    def test_decode_matches_prefill_incremental(self, weights):
+        """Prefill of n+1 tokens == prefill of n tokens + one decode step."""
+        lw = weights["layers"][0]
+        rng = np.random.default_rng(1)
+        n, c = 5, 128
+        x_all = jnp.asarray(rng.standard_normal((n + 1, CFG.hidden)), jnp.float32)
+        o_all, k_all, v_all = attn_prefill(CFG, x_all, jnp.int32(n + 1), _attnw(lw))
+
+        _, k_n, v_n = attn_prefill(CFG, x_all[:n], jnp.int32(n), _attnw(lw))
+        kc = jnp.zeros((1, c, CFG.n_kv_heads, CFG.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        kc = kc.at[0, :n].set(k_n)
+        vc = vc.at[0, :n].set(v_n)
+        o_dec, k_new, v_new = attn_decode(
+            CFG, x_all[n:n + 1], kc, vc, jnp.asarray([n], jnp.int32), _attnw(lw)
+        )
+        np.testing.assert_allclose(o_dec[0], o_all[n], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(k_new[0], k_all[n], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(v_new[0], v_all[n], rtol=1e-4, atol=1e-4)
+
+    def test_decode_batch_rows_independent(self, weights):
+        """Each batch row attends only to its own cache."""
+        lw = weights["layers"][0]
+        rng = np.random.default_rng(2)
+        c = 128
+        x = jnp.asarray(rng.standard_normal((2, CFG.hidden)), jnp.float32)
+        kc = jnp.zeros((2, c, CFG.n_kv_heads, CFG.head_dim), jnp.float32)
+        vc = jnp.zeros_like(kc)
+        k0 = jnp.asarray(rng.standard_normal((3, CFG.n_kv_heads, CFG.head_dim)),
+                         jnp.float32)
+        v0 = jnp.asarray(rng.standard_normal((3, CFG.n_kv_heads, CFG.head_dim)),
+                         jnp.float32)
+        kc = kc.at[0, :3].set(k0)
+        vc = vc.at[0, :3].set(v0)
+        pos = jnp.asarray([3, 0], jnp.int32)
+        out2, _, _ = attn_decode(CFG, x, kc, vc, pos, _attnw(lw))
+        out1, _, _ = attn_decode(
+            CFG, x[0:1], kc[0:1], vc[0:1], pos[0:1], _attnw(lw)
+        )
+        np.testing.assert_allclose(out2[0], out1[0], rtol=1e-5, atol=1e-5)
+
+    def test_cache_bucket_invariance(self, weights):
+        """A bigger (zero-padded) cache bucket must give identical outputs."""
+        lw = weights["layers"][1]
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((1, CFG.hidden)), jnp.float32)
+        k = jnp.asarray(
+            rng.standard_normal((7, CFG.n_kv_heads, CFG.head_dim)), jnp.float32)
+        v = jnp.asarray(
+            rng.standard_normal((7, CFG.n_kv_heads, CFG.head_dim)), jnp.float32)
+        outs = []
+        for c in (128, 512):
+            kc = jnp.zeros((1, c, CFG.n_kv_heads, CFG.head_dim), jnp.float32)
+            vc = jnp.zeros_like(kc)
+            kc = kc.at[0, :7].set(k)
+            vc = vc.at[0, :7].set(v)
+            o, _, _ = attn_decode(CFG, x, kc, vc, jnp.asarray([7], jnp.int32),
+                                  _attnw(lw))
+            outs.append(np.asarray(o))
+        np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-5)
+
+
+class TestGateAndExperts:
+    def test_gate_probs_valid(self, weights):
+        lw = weights["layers"][0]
+        rng = np.random.default_rng(4)
+        h = jnp.asarray(rng.standard_normal((32, CFG.hidden)), jnp.float32)
+        probs, xn = gate_op(CFG, h, lw["ffn_norm"], lw["gate"])
+        p = np.asarray(probs)
+        assert p.shape == (32, CFG.n_experts)
+        np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+        assert np.asarray(xn).shape == (32, CFG.hidden)
+
+    def test_expert_op_batch_consistency(self, weights):
+        """expert(concat(a, b)) == concat(expert(a), expert(b)) — the property
+        the coordinator's cross-token expert batching relies on."""
+        lw = weights["layers"][2]
+        rng = np.random.default_rng(5)
+        xa = jnp.asarray(rng.standard_normal((3, CFG.hidden)), jnp.float32)
+        xb = jnp.asarray(rng.standard_normal((5, CFG.hidden)), jnp.float32)
+        w1, w3, w2 = lw["w1"][1], lw["w3"][1], lw["w2"][1]
+        both = expert_op(CFG, jnp.concatenate([xa, xb]), w1, w3, w2)
+        sep = jnp.concatenate(
+            [expert_op(CFG, xa, w1, w3, w2), expert_op(CFG, xb, w1, w3, w2)]
+        )
+        np.testing.assert_allclose(both, sep, rtol=1e-5, atol=1e-5)
+
+
+class TestFullModel:
+    def test_reference_forward_shapes(self, weights):
+        toks = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+        logits = reference_forward(CFG, weights, toks)
+        assert logits.shape == (5, CFG.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_deterministic(self, weights):
+        toks = jnp.asarray([9, 8, 7], jnp.int32)
+        a = reference_forward(CFG, weights, toks)
+        b = reference_forward(CFG, weights, toks)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_phi_tiny_runs(self):
+        cfg = PHI_TINY
+        w = make_weights(cfg)
+        logits = reference_forward(cfg, w, jnp.asarray([1, 2, 3], jnp.int32))
+        assert logits.shape == (3, cfg.vocab)
+
+    def test_routing_uses_multiple_experts(self, weights):
+        """Sanity: the synthetic gate must not collapse to one expert."""
+        rng = np.random.default_rng(6)
+        toks = jnp.asarray(rng.integers(0, CFG.vocab, 64), jnp.int32)
+        x = weights["embed"][toks]
+        lw = weights["layers"][0]
+        probs, _ = gate_op(CFG, x, lw["ffn_norm"], lw["gate"])
+        top1 = np.asarray(jnp.argmax(probs, -1))
+        assert len(np.unique(top1)) >= 3

@@ -1,0 +1,71 @@
+"""Weight export: determinism, shapes, flattening, routing skew."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import MIXTRAL_TINY, PHI_TINY
+from compile.export_weights import flatten_weights, make_weights
+from compile.model import gate_op
+
+
+class TestMakeWeights:
+    def test_deterministic_across_calls(self):
+        a = make_weights(MIXTRAL_TINY)
+        b = make_weights(MIXTRAL_TINY)
+        np.testing.assert_array_equal(np.asarray(a["embed"]), np.asarray(b["embed"]))
+        np.testing.assert_array_equal(
+            np.asarray(a["layers"][2]["w1"]), np.asarray(b["layers"][2]["w1"])
+        )
+
+    def test_models_differ(self):
+        a = make_weights(MIXTRAL_TINY)
+        b = make_weights(PHI_TINY)
+        assert not np.array_equal(
+            np.asarray(a["embed"]), np.asarray(b["embed"])
+        )
+
+    def test_shapes(self):
+        cfg = MIXTRAL_TINY
+        w = make_weights(cfg)
+        assert w["embed"].shape == (cfg.vocab, cfg.hidden)
+        assert len(w["layers"]) == cfg.n_layers
+        lw = w["layers"][0]
+        assert lw["gate"].shape == (cfg.hidden, cfg.n_experts)
+        assert lw["w1"].shape == (cfg.n_experts, cfg.hidden, cfg.ffn)
+        assert lw["w2"].shape == (cfg.n_experts, cfg.ffn, cfg.hidden)
+
+    def test_flatten_covers_every_expert(self):
+        cfg = MIXTRAL_TINY
+        flat = flatten_weights(cfg, make_weights(cfg))
+        for li in range(cfg.n_layers):
+            for e in range(cfg.n_experts):
+                for n in ("w1", "w3", "w2"):
+                    assert f"layers.{li}.experts.{e}.{n}" in flat
+        # 3 globals + per layer: 7 tensors + 3 per expert
+        expected = 3 + cfg.n_layers * (7 + 3 * cfg.n_experts)
+        assert len(flat) == expected
+
+    def test_flatten_dtype_f32(self):
+        flat = flatten_weights(MIXTRAL_TINY, make_weights(MIXTRAL_TINY))
+        assert all(v.dtype == np.float32 for v in flat.values())
+
+
+class TestRoutingSkew:
+    def test_popularity_is_skewed_but_not_collapsed(self):
+        """The gate bias must produce the paper's mildly-skewed popularity
+        (Appendix C): no expert starves, but ordering is non-uniform."""
+        cfg = MIXTRAL_TINY
+        w = make_weights(cfg)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, cfg.vocab, 512)
+        x = w["embed"][jnp.asarray(toks, jnp.int32)]
+        counts = np.zeros(cfg.n_experts)
+        for li in range(cfg.n_layers):
+            lw = w["layers"][li]
+            probs, _ = gate_op(cfg, x, lw["ffn_norm"], lw["gate"])
+            top2 = np.argsort(np.asarray(probs), axis=-1)[:, -2:]
+            for e in range(cfg.n_experts):
+                counts[e] += (top2 == e).sum()
+        assert counts.min() > 0, "an expert never selected — too much skew"
+        assert counts.max() / counts.min() > 1.2, "no skew — placement cannot help"

@@ -1,0 +1,52 @@
+//! `cargo bench --bench e2e_decode` — the end-to-end decode-step cost per
+//! policy (the quantity behind Figures 4/11/12): one full decode step
+//! (attention + routing + experts + LM head) measured in BOTH host wall
+//! time (actual numerics) and virtual time (simulated testbed).
+
+use fiddler::benchkit::Bench;
+use fiddler::config::serving::Policy;
+use fiddler::config::HardwareConfig;
+use fiddler::figures;
+use fiddler::kvcache::SequenceCache;
+use fiddler::workload::{Dataset, WorkloadGen};
+
+fn main() {
+    let mut b = Bench::new();
+    let hw = HardwareConfig::env1();
+    let prompt = WorkloadGen::new(Dataset::sharegpt(), 512, 3).prompt(32);
+
+    for &policy in figures::ALL_POLICIES {
+        let mut engine = figures::make_engine("mixtral-tiny", &hw, policy, 0)
+            .expect("run `make artifacts` first");
+        let mut cache = SequenceCache::new(engine.model());
+        let h = engine
+            .runner
+            .prefill(&prompt, &mut cache, &mut engine.cx)
+            .unwrap();
+        let logits = engine.runner.lm_head(&h, &mut engine.cx).unwrap();
+        let mut tok = engine.sample(logits.row(0));
+
+        let v0 = engine.cx.clock.now_us();
+        let mut steps = 0u64;
+        let r = b.bench(&format!("decode_step/{}", policy.label()), || {
+            let xs = engine.runner.ws.embed_tokens(&[tok]);
+            let mut caches = [&mut cache];
+            let h = engine
+                .runner
+                .decode_step(&xs, &mut caches, &mut engine.cx)
+                .unwrap();
+            let logits = engine.runner.lm_head(&h, &mut engine.cx).unwrap();
+            tok = engine.sample(logits.row(0));
+            steps += 1;
+        });
+        let virtual_ms = (engine.cx.clock.now_us() - v0) / 1e3 / steps.max(1) as f64;
+        println!(
+            "    {:<22} virtual {:.1} ms/token | host wall {:.2} ms/token | hit rate {:.1}%",
+            policy.label(),
+            virtual_ms,
+            r.mean_ns / 1e6,
+            engine.cx.events.hit_rate() * 100.0
+        );
+    }
+    b.report("e2e decode step per policy (host wall time)");
+}

@@ -1,0 +1,68 @@
+//! `cargo bench --bench scheduler` — the L3 coordination hot path:
+//! Algorithm-1 decisions, routing/top-k, placement, KV gather.
+//! These run once per expert per layer per token; they must never be the
+//! bottleneck next to multi-ms expert execution.
+
+use fiddler::benchkit::Bench;
+use fiddler::config::HardwareConfig;
+use fiddler::hardware::memory::GpuMemory;
+use fiddler::kvcache::{gather_batch, SequenceCache};
+use fiddler::latency::LatencyModel;
+use fiddler::moe::topk::{route, top_k};
+use fiddler::placement::choose_experts;
+use fiddler::popularity::Profile;
+use fiddler::scheduler::{decide_expert, plan_layer};
+use fiddler::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new();
+    let lat = LatencyModel::from_hardware(&HardwareConfig::env1());
+
+    b.bench("scheduler/decide_expert", || decide_expert(false, 7, &lat));
+
+    let mut mem = GpuMemory::with_capacity(56);
+    for i in 0..56 {
+        mem.pin((i / 8, i % 8));
+    }
+    let inp = [3usize, 0, 1, 9, 0, 2, 700, 1];
+    b.bench("scheduler/plan_layer_8_experts", || plan_layer(3, &inp, &mem, &lat));
+
+    let mut rng = Rng::new(1);
+    let probs: Vec<f32> = (0..8).map(|_| rng.f32()).collect();
+    b.bench("scheduler/top_k_of_8", || top_k(&probs, 2));
+
+    let batch_probs: Vec<f32> = (0..16 * 8).map(|_| rng.f32()).collect();
+    b.bench("scheduler/route_16x8", || route(&batch_probs, 16, 8, 2));
+
+    let mut profile = Profile::new(32, 8);
+    for l in 0..32 {
+        for e in 0..8 {
+            profile.counts[l][e] = rng.below(10_000);
+        }
+    }
+    b.bench("placement/choose_56_of_256", || {
+        choose_experts(
+            &profile,
+            56,
+            fiddler::config::serving::PlacementStrategy::Popularity,
+            0,
+        )
+    });
+    b.bench("popularity/hit_rate_analysis", || profile.hit_rate_analysis(56));
+
+    // KV gather: the decode step's host-side data movement.
+    let cfg = fiddler::config::ModelConfig::test_tiny();
+    let mut seqs: Vec<SequenceCache> = (0..8).map(|_| SequenceCache::new(&cfg)).collect();
+    let kvd = cfg.kv_dim();
+    for s in &mut seqs {
+        for _ in 0..100 {
+            for l in &mut s.layers {
+                l.append(&vec![0.5; kvd], &vec![0.5; kvd]);
+            }
+        }
+    }
+    let refs: Vec<&SequenceCache> = seqs.iter().collect();
+    b.bench("kvcache/gather_batch_8x128", || gather_batch(&refs, 0, 128, kvd));
+
+    b.report("scheduler + placement hot path");
+}

@@ -1,0 +1,170 @@
+//! In-house micro-benchmark harness (`criterion` is unavailable offline).
+//!
+//! Mirrors the criterion workflow: named benchmarks, warmup, timed
+//! iterations, outlier-trimmed statistics, and a compact table report.
+//! `cargo bench` targets (benches/*.rs with `harness = false`) use this.
+
+use crate::util::stats::{mean, percentile, std_dev};
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in nanoseconds (outlier-trimmed).
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+}
+
+pub struct Bench {
+    warmup: Duration,
+    measure: Duration,
+    max_iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Bench {
+        // FIDDLER_BENCH_FAST=1 shrinks budgets so `cargo bench` smoke-runs in CI.
+        let fast = std::env::var("FIDDLER_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
+        Bench {
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(300) },
+            measure: if fast { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_budget(mut self, warmup: Duration, measure: Duration) -> Bench {
+        self.warmup = warmup;
+        self.measure = measure;
+        self
+    }
+
+    /// Benchmark `f`, preventing the result from being optimized away.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        let mut warm_iters = 0usize;
+        while start.elapsed() < self.warmup && warm_iters < self.max_iters {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+
+        // Measure individual iterations.
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.measure && samples_ns.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+
+        // Trim the top/bottom 5% (scheduler noise).
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let trim = samples_ns.len() / 20;
+        let trimmed = &samples_ns[trim..samples_ns.len() - trim.min(samples_ns.len() - 1)];
+
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: samples_ns.len(),
+            mean_ns: mean(trimmed),
+            std_ns: std_dev(trimmed),
+            p50_ns: percentile(trimmed, 50.0),
+            p95_ns: percentile(trimmed, 95.0),
+            min_ns: trimmed.first().copied().unwrap_or(0.0),
+        };
+        eprintln!("  {:<44} {:>12} /iter  (p50 {}, p95 {}, n={})",
+            r.name, fmt_ns(r.mean_ns), fmt_ns(r.p50_ns), fmt_ns(r.p95_ns), r.iters);
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render the criterion-style summary table.
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!("{:<44} {:>12} {:>12} {:>12}", "benchmark", "mean", "p50", "p95");
+        for r in &self.results {
+            println!(
+                "{:<44} {:>12} {:>12} {:>12}",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.p50_ns),
+                fmt_ns(r.p95_ns)
+            );
+        }
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Bench {
+        Bench::new().with_budget(Duration::from_millis(5), Duration::from_millis(20))
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = fast();
+        let r = b.bench("noop-ish", || std::hint::black_box(1 + 1));
+        assert!(r.iters > 10);
+        assert!(r.mean_ns >= 0.0);
+    }
+
+    #[test]
+    fn slower_function_measures_slower() {
+        // black_box the loop bounds so release mode cannot const-fold.
+        let mut b = fast();
+        let fast_ns = b
+            .bench("fast", || (0..std::hint::black_box(10u64)).sum::<u64>())
+            .mean_ns;
+        let slow_ns = b
+            .bench("slow", || {
+                (0..std::hint::black_box(100_000u64))
+                    .fold(0u64, |a, x| a.wrapping_add(x.wrapping_mul(x)))
+            })
+            .mean_ns;
+        assert!(slow_ns > fast_ns, "slow={slow_ns} fast={fast_ns}");
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert!(fmt_ns(1_500.0).contains("µs"));
+        assert!(fmt_ns(2_000_000.0).contains("ms"));
+        assert!(fmt_ns(3e9).contains(" s"));
+    }
+}

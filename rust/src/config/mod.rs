@@ -1,0 +1,9 @@
+//! Configuration: model, hardware environment (paper Table 1), serving.
+
+pub mod hardware;
+pub mod model;
+pub mod serving;
+
+pub use hardware::{DeviceKind, HardwareConfig};
+pub use model::ModelConfig;
+pub use serving::ServingConfig;

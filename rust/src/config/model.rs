@@ -1,0 +1,147 @@
+//! Model configuration, loaded from the artifact `weights_manifest.json`
+//! written by `python/compile/export_weights.py` (single source of truth:
+//! the Python side owns the dims, the Rust side reads them).
+
+use crate::util::json::{self, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub max_seq: usize,
+    pub rope_theta: f64,
+    pub rms_eps: f64,
+    /// Root of this model's artifact directory (hlo/, weights/, ...).
+    pub artifact_dir: PathBuf,
+}
+
+/// Shape buckets — must match python/compile/configs.py.
+pub const PREFILL_BUCKETS: &[usize] = &[32, 64, 128, 256, 512, 1024, 2048, 4096];
+pub const DECODE_BATCH_BUCKETS: &[usize] = &[1, 2, 4, 8, 16];
+pub const CACHE_BUCKETS: &[usize] = &[128, 512, 1024, 2048, 4096];
+pub const TOKEN_BUCKETS: &[usize] =
+    &[1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+pub const LMHEAD_BUCKETS: &[usize] = &[1, 2, 4, 8, 16];
+
+impl ModelConfig {
+    /// Load from `<artifacts>/<model>/weights_manifest.json`.
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<ModelConfig> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = json::load(dir.join("weights_manifest.json"))
+            .with_context(|| format!("loading model manifest in {}", dir.display()))?;
+        Self::from_manifest(&manifest, dir)
+    }
+
+    pub fn from_manifest(manifest: &Json, artifact_dir: PathBuf) -> Result<ModelConfig> {
+        let c = manifest.get("config")?;
+        Ok(ModelConfig {
+            name: manifest.get("model")?.as_str()?.to_string(),
+            vocab: c.get("vocab")?.as_usize()?,
+            hidden: c.get("hidden")?.as_usize()?,
+            ffn: c.get("ffn")?.as_usize()?,
+            n_layers: c.get("n_layers")?.as_usize()?,
+            n_heads: c.get("n_heads")?.as_usize()?,
+            n_kv_heads: c.get("n_kv_heads")?.as_usize()?,
+            head_dim: c.get("head_dim")?.as_usize()?,
+            n_experts: c.get("n_experts")?.as_usize()?,
+            top_k: c.get("top_k")?.as_usize()?,
+            max_seq: c.get("max_seq")?.as_usize()?,
+            rope_theta: c.get("rope_theta")?.as_f64()?,
+            rms_eps: c.get("rms_eps")?.as_f64()?,
+            artifact_dir,
+        })
+    }
+
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Total experts across all layers (the paper's "256" for Mixtral-8x7B).
+    pub fn total_experts(&self) -> usize {
+        self.n_layers * self.n_experts
+    }
+
+    /// Parameters of one expert (w1 + w3 + w2) of THIS model.
+    pub fn expert_params(&self) -> usize {
+        3 * self.hidden * self.ffn
+    }
+
+    /// A hard-coded copy of the `mixtral-tiny` dims for tests/benches that
+    /// must not depend on artifacts being built.
+    pub fn test_tiny() -> ModelConfig {
+        ModelConfig {
+            name: "test-tiny".into(),
+            vocab: 512,
+            hidden: 128,
+            ffn: 256,
+            n_layers: 4,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 32,
+            n_experts: 8,
+            top_k: 2,
+            max_seq: 4096,
+            rope_theta: 10000.0,
+            rms_eps: 1e-5,
+            artifact_dir: PathBuf::from("artifacts/mixtral-tiny"),
+        }
+    }
+}
+
+/// Locate the artifacts root: $FIDDLER_ARTIFACTS or ./artifacts.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("FIDDLER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_dims() {
+        let c = ModelConfig::test_tiny();
+        assert_eq!(c.q_dim(), 128);
+        assert_eq!(c.kv_dim(), 64);
+        assert_eq!(c.total_experts(), 32);
+        assert_eq!(c.expert_params(), 3 * 128 * 256);
+    }
+
+    #[test]
+    fn from_manifest_parses() {
+        let text = r#"{
+            "model": "m", "config": {
+              "vocab": 512, "hidden": 128, "ffn": 256, "n_layers": 4,
+              "n_heads": 4, "n_kv_heads": 2, "head_dim": 32, "n_experts": 8,
+              "top_k": 2, "max_seq": 4096, "rope_theta": 10000.0,
+              "rms_eps": 1e-5 },
+            "tensors": {}
+        }"#;
+        let m = Json::parse(text).unwrap();
+        let c = ModelConfig::from_manifest(&m, PathBuf::from("/x")).unwrap();
+        assert_eq!(c.name, "m");
+        assert_eq!(c.n_experts, 8);
+    }
+
+    #[test]
+    fn buckets_ascend() {
+        for b in [PREFILL_BUCKETS, DECODE_BATCH_BUCKETS, CACHE_BUCKETS, TOKEN_BUCKETS] {
+            assert!(b.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

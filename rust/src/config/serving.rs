@@ -1,0 +1,159 @@
+//! Serving-engine configuration: policy selection, batching limits,
+//! generation parameters.
+
+use crate::util::cli::Args;
+
+/// Which execution policy drives expert placement/execution decisions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// The paper's system: popularity placement + Algorithm 1 dynamic
+    /// CPU/GPU decisions + cross-token expert batching.
+    Fiddler,
+    /// DeepSpeed-MII with ZeRO-Infinity: weights live in CPU memory and are
+    /// streamed to the GPU for every use (no expert cache, no CPU compute).
+    MiiOffload,
+    /// Mixtral-Offloading: LRU expert cache in GPU memory; misses transfer
+    /// weights CPU->GPU (never computes on the CPU).
+    LruOffload,
+    /// llama.cpp: static layer split (`ngl` layers on GPU); computation runs
+    /// where the weights live; no cross-beam batching on either device.
+    StaticSplit,
+    /// Extension: Fiddler + speculative next-layer expert prefetching over
+    /// the transition profile (beyond the paper; cf. MoE-Infinity).
+    FiddlerPrefetch,
+}
+
+impl Policy {
+    pub fn by_name(name: &str) -> anyhow::Result<Policy> {
+        Ok(match name {
+            "fiddler" => Policy::Fiddler,
+            "mii" | "deepspeed-mii" => Policy::MiiOffload,
+            "lru" | "mixtral-offloading" => Policy::LruOffload,
+            "static" | "llama-cpp" | "llamacpp" => Policy::StaticSplit,
+            "fiddler-prefetch" | "prefetch" => Policy::FiddlerPrefetch,
+            other => anyhow::bail!(
+                "unknown policy {other:?} (have fiddler, mii, lru, static, fiddler-prefetch)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Policy::Fiddler => "Fiddler",
+            Policy::MiiOffload => "DeepSpeed-MII*",
+            Policy::LruOffload => "Mixtral-Offloading*",
+            Policy::StaticSplit => "llama.cpp*",
+            Policy::FiddlerPrefetch => "Fiddler+prefetch",
+        }
+    }
+}
+
+/// Expert placement strategy at initialization (paper §3.4 + Appendix C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementStrategy {
+    /// Most popular experts first (the paper's choice).
+    Popularity,
+    /// Uniform random placement (Appendix C baseline).
+    Random,
+    /// Least popular first (Appendix C "worst" bound).
+    Worst,
+}
+
+impl PlacementStrategy {
+    pub fn by_name(name: &str) -> anyhow::Result<PlacementStrategy> {
+        Ok(match name {
+            "popularity" => PlacementStrategy::Popularity,
+            "random" => PlacementStrategy::Random,
+            "worst" => PlacementStrategy::Worst,
+            other => anyhow::bail!("unknown placement {other:?}"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    pub policy: Policy,
+    pub placement: PlacementStrategy,
+    /// llama.cpp-style: number of leading layers fully resident on the GPU
+    /// (used by Policy::StaticSplit). Paper: 8 for Env1, 16 for Env2.
+    pub ngl: usize,
+    /// Max sequences co-scheduled in one decode step.
+    pub max_batch: usize,
+    /// Max queued requests before admission control rejects.
+    pub queue_capacity: usize,
+    /// Random seed for sampling.
+    pub seed: u64,
+    /// Sampling temperature; 0 = greedy.
+    pub temperature: f64,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            policy: Policy::Fiddler,
+            placement: PlacementStrategy::Popularity,
+            ngl: 8,
+            max_batch: 16,
+            queue_capacity: 256,
+            seed: 0,
+            temperature: 0.0,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn from_args(args: &Args) -> anyhow::Result<ServingConfig> {
+        let mut c = ServingConfig::default();
+        if let Some(p) = args.get("policy") {
+            c.policy = Policy::by_name(p)?;
+        }
+        if let Some(p) = args.get("placement") {
+            c.placement = PlacementStrategy::by_name(p)?;
+        }
+        c.ngl = args.usize_or("ngl", c.ngl);
+        c.max_batch = args.usize_or("max-batch", c.max_batch);
+        c.seed = args.u64_or("seed", c.seed);
+        c.temperature = args.f64_or("temperature", c.temperature);
+        Ok(c)
+    }
+
+    /// The paper's per-environment `ngl` for the llama.cpp baseline.
+    pub fn paper_ngl_for(env_name: &str) -> usize {
+        match env_name {
+            "env2" => 16,
+            _ => 8,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names() {
+        assert_eq!(Policy::by_name("fiddler").unwrap(), Policy::Fiddler);
+        assert_eq!(Policy::by_name("llama-cpp").unwrap(), Policy::StaticSplit);
+        assert!(Policy::by_name("vllm").is_err());
+    }
+
+    #[test]
+    fn from_args_overrides() {
+        let args = Args::parse(
+            "--policy mii --ngl 16 --max-batch 4 --temperature 0.7"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ServingConfig::from_args(&args).unwrap();
+        assert_eq!(c.policy, Policy::MiiOffload);
+        assert_eq!(c.ngl, 16);
+        assert_eq!(c.max_batch, 4);
+        assert!((c.temperature - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_ngl() {
+        assert_eq!(ServingConfig::paper_ngl_for("env1"), 8);
+        assert_eq!(ServingConfig::paper_ngl_for("env2"), 16);
+    }
+}

@@ -1,0 +1,211 @@
+//! The serving engine: policy construction, single-request generation,
+//! batched decode — all timing in virtual µs from the simulated substrate.
+
+use crate::baselines::{LruOffloadPolicy, MiiOffloadPolicy, StaticSplitPolicy};
+use crate::config::serving::{Policy, ServingConfig};
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::kvcache::SequenceCache;
+use crate::metrics::GenMetrics;
+use crate::moe::{ExecContext, ModelRunner};
+use crate::popularity::Profile;
+use crate::scheduler::policy::{ExecPolicy, FiddlerPolicy};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::path::Path;
+
+/// Build the policy object for a serving config + model.
+pub fn make_policy(serving: &ServingConfig, cfg: &ModelConfig, env_name: &str) -> Box<dyn ExecPolicy> {
+    match serving.policy {
+        Policy::Fiddler => Box::new(FiddlerPolicy { placement: serving.placement }),
+        Policy::MiiOffload => Box::new(MiiOffloadPolicy),
+        Policy::LruOffload => Box::new(LruOffloadPolicy::default()),
+        Policy::StaticSplit => {
+            // serving.ngl is paper-scale (out of 32 layers); rescale.
+            let scaled = ((serving.ngl * cfg.n_layers + 31) / 32).max(1).min(cfg.n_layers);
+            let _ = env_name;
+            Box::new(StaticSplitPolicy::new(scaled, cfg.n_experts))
+        }
+        Policy::FiddlerPrefetch => {
+            let transitions = crate::prefetch::TransitionProfile::load(
+                cfg.artifact_dir.join("analysis/analysis.json"),
+            )
+            .unwrap_or_else(|_| {
+                crate::prefetch::TransitionProfile::uniform(cfg.n_layers, cfg.n_experts)
+            });
+            Box::new(crate::prefetch::PrefetchingFiddlerPolicy::new(transitions, 2))
+        }
+    }
+}
+
+/// Load the build-time popularity profile for a model.
+pub fn load_profile(cfg: &ModelConfig) -> Result<Profile> {
+    Profile::load(cfg.artifact_dir.join("analysis/analysis.json"))
+}
+
+pub struct GenOutput {
+    pub tokens: Vec<u32>,
+    pub metrics: GenMetrics,
+}
+
+/// One model + one policy + one simulated environment.
+pub struct Engine {
+    pub runner: ModelRunner,
+    pub cx: ExecContext,
+    pub serving: ServingConfig,
+    rng: Rng,
+}
+
+impl Engine {
+    pub fn new(
+        artifact_dir: impl AsRef<Path>,
+        hw: &HardwareConfig,
+        serving: ServingConfig,
+    ) -> Result<Engine> {
+        let runner = ModelRunner::load(artifact_dir.as_ref().to_path_buf())?;
+        let profile = load_profile(&runner.cfg)?;
+        let policy = make_policy(&serving, &runner.cfg, &hw.name);
+        let cx = ExecContext::new(policy, hw, &runner.cfg, &profile, serving.seed);
+        let rng = Rng::new(serving.seed ^ 0xC0FFEE);
+        Ok(Engine { runner, cx, serving, rng })
+    }
+
+    pub fn model(&self) -> &ModelConfig {
+        &self.runner.cfg
+    }
+
+    /// Sample the next token from logits (greedy at temperature 0).
+    pub fn sample(&mut self, logits: &[f32]) -> u32 {
+        sample_token(logits, self.serving.temperature, &mut self.rng)
+    }
+
+    /// Generate `max_new` tokens for a single prompt (paper scenario a).
+    pub fn generate(&mut self, prompt: &[u32], max_new: usize) -> Result<GenOutput> {
+        let mut metrics = GenMetrics {
+            enqueue_us: self.cx.clock.now_us(),
+            prompt_tokens: prompt.len(),
+            ..Default::default()
+        };
+        let mut cache = SequenceCache::new(&self.runner.cfg);
+        let h = self.runner.prefill(prompt, &mut cache, &mut self.cx)?;
+        let logits = self.runner.lm_head(&h, &mut self.cx)?;
+        let mut tok = self.sample(logits.row(0));
+        metrics.first_token_us = self.cx.clock.now_us();
+        metrics.token_done_us.push(metrics.first_token_us);
+        let mut tokens = vec![tok];
+
+        for _ in 1..max_new {
+            let xs = self.runner.ws.embed_tokens(&[tok]);
+            let mut caches = [&mut cache];
+            let h = self.runner.decode_step(&xs, &mut caches, &mut self.cx)?;
+            let logits = self.runner.lm_head(&h, &mut self.cx)?;
+            tok = self.sample(logits.row(0));
+            tokens.push(tok);
+            metrics.token_done_us.push(self.cx.clock.now_us());
+        }
+        Ok(GenOutput { tokens, metrics })
+    }
+
+    /// Prefill only (paper scenario b: TTFT for long prompts).  Returns
+    /// the first generated token and its TTFT in virtual µs.
+    pub fn prefill_ttft(&mut self, prompt: &[u32]) -> Result<(u32, f64)> {
+        let t0 = self.cx.clock.now_us();
+        let mut cache = SequenceCache::new(&self.runner.cfg);
+        let h = self.runner.prefill(prompt, &mut cache, &mut self.cx)?;
+        let logits = self.runner.lm_head(&h, &mut self.cx)?;
+        let tok = self.sample(logits.row(0));
+        Ok((tok, self.cx.clock.now_us() - t0))
+    }
+
+    /// Batched decode of several independent sequences (continuous
+    /// batching in the server): one step for all of them.
+    pub fn decode_batch_step(
+        &mut self,
+        last_tokens: &[u32],
+        caches: &mut [&mut SequenceCache],
+    ) -> Result<Vec<u32>> {
+        assert_eq!(last_tokens.len(), caches.len());
+        let max_b = *crate::config::model::DECODE_BATCH_BUCKETS.last().unwrap();
+        let mut out = Vec::with_capacity(last_tokens.len());
+        let mut i = 0;
+        while i < last_tokens.len() {
+            let j = (i + max_b).min(last_tokens.len());
+            let xs = self.runner.ws.embed_tokens(&last_tokens[i..j]);
+            let mut chunk: Vec<&mut SequenceCache> = Vec::with_capacity(j - i);
+            // Split the mutable slice chunk-wise.
+            let (_, rest) = caches.split_at_mut(i);
+            let (take, _) = rest.split_at_mut(j - i);
+            for c in take {
+                chunk.push(&mut **c);
+            }
+            let h = self.runner.decode_step(&xs, &mut chunk, &mut self.cx)?;
+            let logits = self.runner.lm_head(&h, &mut self.cx)?;
+            for r in 0..(j - i) {
+                out.push(sample_token(logits.row(r), self.serving.temperature, &mut self.rng));
+            }
+            i = j;
+        }
+        Ok(out)
+    }
+}
+
+/// Temperature sampling (0 = greedy argmax, ties to lowest index).
+pub fn sample_token(logits: &[f32], temperature: f64, rng: &mut Rng) -> u32 {
+    if temperature <= 0.0 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        return best as u32;
+    }
+    let inv_t = 1.0 / temperature as f32;
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> =
+        logits.iter().map(|&l| (((l - m) * inv_t) as f64).exp()).collect();
+    rng.weighted(&weights) as u32
+}
+
+/// Numerically-stable log-softmax (used by beam search).
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = logits.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+    logits.iter().map(|&l| l - lse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::new(0);
+        assert_eq!(sample_token(&[0.1, 3.0, 2.0], 0.0, &mut rng), 1);
+        // tie -> lowest index
+        assert_eq!(sample_token(&[5.0, 5.0, 1.0], 0.0, &mut rng), 0);
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support() {
+        let mut rng = Rng::new(1);
+        let mut seen = [false; 3];
+        for _ in 0..500 {
+            seen[sample_token(&[1.0, 1.1, 0.9], 5.0, &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let ls = log_softmax(&[1.0, 2.0, 3.0]);
+        let sum: f32 = ls.iter().map(|l| l.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(ls[2] > ls[1] && ls[1] > ls[0]);
+    }
+
+    #[test]
+    fn log_softmax_stable_for_huge_logits() {
+        let ls = log_softmax(&[1000.0, 999.0]);
+        assert!(ls.iter().all(|v| v.is_finite()));
+    }
+}

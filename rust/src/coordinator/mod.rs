@@ -1,0 +1,8 @@
+//! The serving coordinator (L3): request lifecycle, generation loops,
+//! beam search, continuous batching.
+
+pub mod beam;
+pub mod engine;
+
+pub use beam::BeamOutput;
+pub use engine::{Engine, GenOutput};

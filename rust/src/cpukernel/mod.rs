@@ -1,0 +1,171 @@
+//! Host-side expert FFN kernel — the stand-in for the paper's specialized
+//! AVX512_BF16 CPU kernel (§3.4).
+//!
+//! The paper's point is that the CPU path deserves a dedicated kernel
+//! rather than the framework default.  Here the "framework default" is the
+//! XLA executable (which is fine numerically but pays per-call dispatch),
+//! and this module is the dedicated kernel: a cache-blocked f32 GEMM
+//! fused with the SiLU gate, operating directly on the weight store's
+//! buffers with zero dispatch overhead.  `rustc`'s auto-vectorizer emits
+//! the SIMD (the image has no AVX512_BF16; see DESIGN.md §2).
+//!
+//! It is validated against the HLO expert op (tests below) and used by the
+//! engine for `ExpertPlan::Cpu` executions when
+//! `FIDDLER_HOST_KERNEL=1` (the perf pass measures both paths).
+
+use crate::runtime::Tensor;
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Blocked matmul-accumulate: `out[m][n] += a[m][k] * b[k][n]`.
+/// Row-major; blocks sized for L1/L2 residency of the b-panel.
+fn gemm_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    const BK: usize = 64;
+    const BN: usize = 128;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for n0 in (0..n).step_by(BN) {
+            let n1 = (n0 + BN).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[kk * n..kk * n + n1];
+                    // Inner loop over a contiguous panel: auto-vectorizes.
+                    for nn in n0..n1 {
+                        orow[nn] += av * brow[nn];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fused expert FFN on the host: `(silu(x @ w1) * (x @ w3)) @ w2`.
+///
+/// x: `[s, h]`, w1/w3: `[h, f]`, w2: `[f, h]` -> `[s, h]`.
+pub fn expert_ffn_host(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor) -> Tensor {
+    let (s, h) = (x.shape[0], x.shape[1]);
+    let f = w1.shape[1];
+    assert_eq!(w1.shape, vec![h, f], "w1 shape");
+    assert_eq!(w3.shape, vec![h, f], "w3 shape");
+    assert_eq!(w2.shape, vec![f, h], "w2 shape");
+
+    // a = x @ w1 ; g = x @ w3
+    let mut a = vec![0.0f32; s * f];
+    let mut g = vec![0.0f32; s * f];
+    gemm_acc(&x.data, &w1.data, &mut a, s, h, f);
+    gemm_acc(&x.data, &w3.data, &mut g, s, h, f);
+    // a = silu(a) * g   (the fused gate — one pass, no temporaries)
+    for (av, gv) in a.iter_mut().zip(&g) {
+        *av = silu(*av) * gv;
+    }
+    // y = a @ w2
+    let mut y = vec![0.0f32; s * h];
+    gemm_acc(&a, &w2.data, &mut y, s, f, h);
+    Tensor { shape: vec![s, h], data: y }
+}
+
+/// Whether the engine should use this kernel for CPU-planned experts.
+pub fn host_kernel_enabled() -> bool {
+    std::env::var("FIDDLER_HOST_KERNEL").map(|v| v == "1").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::artifacts_root;
+    use crate::runtime::Runtime;
+    use crate::testkit::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: (0..n).map(|_| (rng.normal() as f32) * scale).collect(),
+        }
+    }
+
+    #[test]
+    fn zero_input_gives_zero_output() {
+        let mut rng = Rng::new(0);
+        let x = Tensor::zeros(vec![4, 8]);
+        let w1 = rand_tensor(&mut rng, vec![8, 16], 0.1);
+        let w3 = rand_tensor(&mut rng, vec![8, 16], 0.1);
+        let w2 = rand_tensor(&mut rng, vec![16, 8], 0.1);
+        let y = expert_ffn_host(&x, &w1, &w3, &w2);
+        assert!(y.data.iter().all(|v| v.abs() < 1e-7));
+    }
+
+    #[test]
+    fn matches_naive_reference_property() {
+        check("host kernel vs naive", 32, |g: &mut Gen| {
+            let s = g.usize_in(1..9);
+            let h = 2 * g.usize_in(1..9);
+            let f = 2 * g.usize_in(1..17);
+            let seed = g.u64();
+            let mut rng = Rng::new(seed);
+            let x = rand_tensor(&mut rng, vec![s, h], 0.5);
+            let w1 = rand_tensor(&mut rng, vec![h, f], 0.2);
+            let w3 = rand_tensor(&mut rng, vec![h, f], 0.2);
+            let w2 = rand_tensor(&mut rng, vec![f, h], 0.2);
+            let got = expert_ffn_host(&x, &w1, &w3, &w2);
+
+            // Naive O(s*h*f) reference, no blocking.
+            let mut want = Tensor::zeros(vec![s, h]);
+            for i in 0..s {
+                let mut act = vec![0.0f32; f];
+                for j in 0..f {
+                    let mut a = 0.0f32;
+                    let mut b = 0.0f32;
+                    for kk in 0..h {
+                        a += x.data[i * h + kk] * w1.data[kk * f + j];
+                        b += x.data[i * h + kk] * w3.data[kk * f + j];
+                    }
+                    act[j] = silu(a) * b;
+                }
+                for o in 0..h {
+                    let mut y = 0.0f32;
+                    for j in 0..f {
+                        y += act[j] * w2.data[j * h + o];
+                    }
+                    want.data[i * h + o] = y;
+                }
+            }
+            let d = got.max_abs_diff(&want);
+            assert!(d < 1e-4, "host kernel diverges from naive: {d}");
+        });
+    }
+
+    #[test]
+    fn matches_hlo_expert_op() {
+        // The authoritative check: host kernel == the lowered Pallas kernel
+        // through PJRT, on the real exported weights.
+        let rt = Runtime::open(artifacts_root().join("mixtral-tiny"))
+            .expect("make artifacts first");
+        let ws = crate::runtime::WeightStore::load(artifacts_root().join("mixtral-tiny"))
+            .unwrap();
+        let mut rng = Rng::new(3);
+        let h = ws.config.hidden;
+        let x = rand_tensor(&mut rng, vec![4, h], 0.7);
+        let (w1, w3, w2) = (ws.expert(1, 2, "w1"), ws.expert(1, 2, "w3"), ws.expert(1, 2, "w2"));
+
+        let host = expert_ffn_host(&x, w1, w3, w2);
+        let hlo = rt
+            .execute(
+                "expert_b4",
+                &[x.into(), w1.clone().into(), w3.clone().into(), w2.clone().into()],
+            )
+            .unwrap();
+        let d = host.max_abs_diff(&hlo[0]);
+        assert!(d < 1e-3, "host kernel vs HLO: max|Δ|={d}");
+    }
+}

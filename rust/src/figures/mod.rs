@@ -1,0 +1,146 @@
+//! Shared driver code for the paper's figures/tables (used by the
+//! `examples/fig*.rs` binaries and integration tests).
+//!
+//! Each function reproduces one evaluation cell: it builds a fresh-or-reused
+//! [`Engine`] for a (model, environment, policy) triple, runs the scenario's
+//! workload, and returns the paper's metric from the virtual clock.
+
+use crate::config::serving::{Policy, ServingConfig};
+use crate::config::{HardwareConfig, ModelConfig};
+use crate::coordinator::Engine;
+use crate::metrics::Aggregate;
+use crate::workload::{Dataset, WorkloadGen};
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// The four systems of the paper's §4, in plot order.
+pub const ALL_POLICIES: &[Policy] =
+    &[Policy::Fiddler, Policy::MiiOffload, Policy::LruOffload, Policy::StaticSplit];
+
+/// One measured cell of a figure.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub policy: Policy,
+    pub env: String,
+    pub inp: usize,
+    pub out: usize,
+    /// tokens/s (scenarios a, c) — end-to-end.
+    pub tps: f64,
+    /// TTFT in ms (scenario b, Fig. 11).
+    pub ttft_ms: f64,
+    /// mean ITL in ms (Fig. 12).
+    pub itl_ms: f64,
+}
+
+pub fn artifact_dir(model: &str) -> PathBuf {
+    crate::config::model::artifacts_root().join(model)
+}
+
+/// Build an engine for (model, env, policy) with paper-default knobs.
+pub fn make_engine(model: &str, hw: &HardwareConfig, policy: Policy, seed: u64) -> Result<Engine> {
+    let mut serving = ServingConfig {
+        policy,
+        seed,
+        ..Default::default()
+    };
+    serving.ngl = ServingConfig::paper_ngl_for(&hw.name);
+    Engine::new(artifact_dir(model), hw, serving)
+}
+
+/// Scenario (a): end-to-end single-request generation, fixed in/out lengths.
+pub fn run_e2e_cell(
+    engine: &mut Engine,
+    dataset: &Dataset,
+    inp: usize,
+    out: usize,
+    samples: usize,
+    seed: u64,
+) -> Result<Aggregate> {
+    let mut agg = Aggregate::default();
+    let mut gen = WorkloadGen::new(dataset.clone(), engine.model().vocab, seed);
+    for _ in 0..samples {
+        let prompt = gen.prompt(inp);
+        let g = engine.generate(&prompt, out)?;
+        agg.push(&g.metrics);
+    }
+    Ok(agg)
+}
+
+/// Scenario (b): long-prefill TTFT (ms).
+pub fn run_prefill_cell(
+    engine: &mut Engine,
+    dataset: &Dataset,
+    inp: usize,
+    samples: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut gen = WorkloadGen::new(dataset.clone(), engine.model().vocab, seed);
+    let mut ttfts = Vec::new();
+    for _ in 0..samples {
+        let prompt = gen.prompt(inp);
+        let (_tok, ttft_us) = engine.prefill_ttft(&prompt)?;
+        ttfts.push(ttft_us / 1e3);
+    }
+    Ok(crate::util::stats::mean(&ttfts))
+}
+
+/// Scenario (c): beam-search tokens/s (output tokens / end-to-end latency).
+pub fn run_beam_cell(
+    engine: &mut Engine,
+    dataset: &Dataset,
+    width: usize,
+    inp: usize,
+    out: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut gen = WorkloadGen::new(dataset.clone(), engine.model().vocab, seed);
+    let prompt = gen.prompt(inp);
+    let b = engine.beam_search(&prompt, width, out)?;
+    Ok(b.metrics.tokens_per_s())
+}
+
+/// Geometric-mean speedup of `a` over `b` across paired cells.
+pub fn geomean_ratio(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    assert!(!a.is_empty());
+    let log_sum: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x / y).ln())
+        .sum();
+    (log_sum / a.len() as f64).exp()
+}
+
+/// Print the Table-1 header for an environment (every driver shows it).
+pub fn print_env_banner(hw: &HardwareConfig, cfg: &ModelConfig) {
+    println!(
+        "--- {} | GPU {} | CPU {} | PCIe transfer {:.1} ms/expert | \
+         capacity {}/{} paper-scale experts (model: {} = {}/{} scaled) ---",
+        hw.name,
+        hw.gpu_name,
+        hw.cpu_name,
+        hw.weight_transfer_us() / 1e3,
+        hw.gpu_expert_capacity(),
+        256,
+        cfg.name,
+        ((cfg.total_experts() as f64 * hw.gpu_expert_capacity() as f64 / 256.0).round()
+            as usize),
+        cfg.total_experts(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_of_equal_is_one() {
+        assert!((geomean_ratio(&[2.0, 3.0], &[2.0, 3.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_ratio_scale() {
+        let g = geomean_ratio(&[2.0, 8.0], &[1.0, 4.0]);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,109 @@
+//! Virtual clock: simulated time in microseconds.
+//!
+//! All latency figures reported by the serving engine come from this clock,
+//! driven by the calibrated latency model — never from wall time (the
+//! numerics run on whatever silicon hosts the test, which says nothing
+//! about the paper's testbed).  Atomic so the metrics thread can read it
+//! without locking the engine.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+#[derive(Debug, Default)]
+pub struct VirtualClock {
+    /// Nanoseconds (u64 so we can use atomics; µs precision suffices but
+    /// ns avoids rounding drift when many small latencies accumulate).
+    now_ns: AtomicU64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn now_us(&self) -> f64 {
+        self.now_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    pub fn now_ms(&self) -> f64 {
+        self.now_us() / 1e3
+    }
+
+    /// Advance by `dur_us`; returns the new time in µs.
+    pub fn advance_us(&self, dur_us: f64) -> f64 {
+        assert!(dur_us >= 0.0, "time cannot go backwards (dur={dur_us})");
+        let ns = (dur_us * 1e3).round() as u64;
+        let newv = self.now_ns.fetch_add(ns, Ordering::Relaxed) + ns;
+        newv as f64 / 1e3
+    }
+
+    /// Jump forward to `t_us` if it is in the future (idle wait).
+    pub fn advance_to_us(&self, t_us: f64) {
+        let target = (t_us * 1e3).round() as u64;
+        let mut cur = self.now_ns.load(Ordering::Relaxed);
+        while target > cur {
+            match self.now_ns.compare_exchange_weak(
+                cur,
+                target,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(c) => cur = c,
+            }
+        }
+    }
+
+    pub fn reset(&self) {
+        self.now_ns.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_us(), 0.0);
+        c.advance_us(5.5);
+        assert!((c.now_us() - 5.5).abs() < 1e-9);
+        c.advance_us(0.0);
+        assert!((c.now_us() - 5.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn advance_to_never_rewinds() {
+        let c = VirtualClock::new();
+        c.advance_us(100.0);
+        c.advance_to_us(50.0);
+        assert!((c.now_us() - 100.0).abs() < 1e-9);
+        c.advance_to_us(200.0);
+        assert!((c.now_us() - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn negative_advance_panics() {
+        VirtualClock::new().advance_us(-1.0);
+    }
+
+    #[test]
+    fn concurrent_advances_accumulate() {
+        use std::sync::Arc;
+        let c = Arc::new(VirtualClock::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c.advance_us(1.0);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!((c.now_us() - 4000.0).abs() < 1e-6);
+    }
+}

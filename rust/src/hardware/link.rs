@@ -1,0 +1,76 @@
+//! PCIe link cost accounting: weight and activation transfers.
+
+use crate::config::HardwareConfig;
+
+#[derive(Debug, Default, Clone)]
+pub struct LinkStats {
+    pub weight_transfers: u64,
+    pub weight_bytes: u64,
+    pub act_transfers: u64,
+    pub act_bytes: u64,
+}
+
+/// Simulated PCIe link between CPU memory and GPU memory.
+#[derive(Debug)]
+pub struct PcieLink {
+    hw: HardwareConfig,
+    stats: LinkStats,
+}
+
+impl PcieLink {
+    pub fn new(hw: &HardwareConfig) -> Self {
+        PcieLink { hw: hw.clone(), stats: LinkStats::default() }
+    }
+
+    /// Cost (µs) of moving one paper-scale expert's weights CPU -> GPU.
+    pub fn weight_transfer(&mut self) -> f64 {
+        self.stats.weight_transfers += 1;
+        self.stats.weight_bytes += self.hw.expert_weight_bytes;
+        self.hw.weight_transfer_us()
+    }
+
+    /// Cost (µs) of moving `tokens` activations one way (paper-scale:
+    /// hidden 4096, 2 bytes each).
+    pub fn activation_transfer(&mut self, tokens: usize) -> f64 {
+        let bytes = tokens * 4096 * 2;
+        self.stats.act_transfers += 1;
+        self.stats.act_bytes += bytes as u64;
+        self.hw.act_copy_us(bytes)
+    }
+
+    pub fn stats(&self) -> &LinkStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weight_transfer_matches_config() {
+        let hw = HardwareConfig::env1();
+        let mut link = PcieLink::new(&hw);
+        let us = link.weight_transfer();
+        assert!((us - hw.weight_transfer_us()).abs() < 1e-9);
+        assert_eq!(link.stats().weight_transfers, 1);
+        assert_eq!(link.stats().weight_bytes, hw.expert_weight_bytes);
+    }
+
+    #[test]
+    fn activation_transfer_scales_with_tokens() {
+        let hw = HardwareConfig::env1();
+        let mut link = PcieLink::new(&hw);
+        let one = link.activation_transfer(1);
+        let many = link.activation_transfer(1000);
+        assert!(many > one);
+        assert_eq!(link.stats().act_transfers, 2);
+    }
+
+    #[test]
+    fn env2_link_is_faster() {
+        let mut l1 = PcieLink::new(&HardwareConfig::env1());
+        let mut l2 = PcieLink::new(&HardwareConfig::env2());
+        assert!(l2.weight_transfer() < l1.weight_transfer());
+    }
+}

@@ -1,0 +1,100 @@
+//! Simulated heterogeneous hardware substrate.
+//!
+//! The paper's testbed (GPU + host CPU + PCIe) is not available in this
+//! environment, so *time* is simulated while *numerics* execute for real
+//! through the PJRT CPU client (DESIGN.md §2).  The substrate provides:
+//!
+//! * [`VirtualClock`] — monotonically advancing simulated time,
+//! * [`GpuMemory`] — capacity accounting for expert residency,
+//! * [`PcieLink`] — weight/activation transfer cost accounting,
+//! * [`DeviceTimeline`] — per-device busy tracking so CPU and GPU work can
+//!   overlap (the coordinator executes the two queues concurrently and the
+//!   layer latency is the max of the two, as on real hardware).
+
+pub mod clock;
+pub mod link;
+pub mod memory;
+
+pub use clock::VirtualClock;
+pub use link::PcieLink;
+pub use memory::GpuMemory;
+
+use crate::config::DeviceKind;
+
+/// Per-device busy timeline: work items are appended serially per device,
+/// and both devices proceed concurrently relative to the virtual clock.
+#[derive(Clone, Debug, Default)]
+pub struct DeviceTimeline {
+    gpu_free_at_us: f64,
+    cpu_free_at_us: f64,
+}
+
+impl DeviceTimeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Schedule `dur_us` of work on `device` not earlier than `ready_us`;
+    /// returns the completion timestamp.
+    pub fn schedule(&mut self, device: DeviceKind, ready_us: f64, dur_us: f64) -> f64 {
+        let slot = match device {
+            DeviceKind::Gpu => &mut self.gpu_free_at_us,
+            DeviceKind::Cpu => &mut self.cpu_free_at_us,
+        };
+        let start = slot.max(ready_us);
+        *slot = start + dur_us;
+        *slot
+    }
+
+    pub fn free_at(&self, device: DeviceKind) -> f64 {
+        match device {
+            DeviceKind::Gpu => self.gpu_free_at_us,
+            DeviceKind::Cpu => self.cpu_free_at_us,
+        }
+    }
+
+    /// Timestamp when both devices are idle (a synchronization barrier,
+    /// e.g. end of an MoE layer where outputs must be combined).
+    pub fn barrier(&mut self) -> f64 {
+        let t = self.gpu_free_at_us.max(self.cpu_free_at_us);
+        self.gpu_free_at_us = t;
+        self.cpu_free_at_us = t;
+        t
+    }
+
+    pub fn reset_to(&mut self, t_us: f64) {
+        self.gpu_free_at_us = t_us;
+        self.cpu_free_at_us = t_us;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn devices_overlap() {
+        let mut tl = DeviceTimeline::new();
+        let g = tl.schedule(DeviceKind::Gpu, 0.0, 10.0);
+        let c = tl.schedule(DeviceKind::Cpu, 0.0, 25.0);
+        assert_eq!(g, 10.0);
+        assert_eq!(c, 25.0);
+        // Barrier waits for the slower device.
+        assert_eq!(tl.barrier(), 25.0);
+    }
+
+    #[test]
+    fn same_device_serializes() {
+        let mut tl = DeviceTimeline::new();
+        tl.schedule(DeviceKind::Gpu, 0.0, 10.0);
+        let done = tl.schedule(DeviceKind::Gpu, 0.0, 5.0);
+        assert_eq!(done, 15.0);
+    }
+
+    #[test]
+    fn ready_time_respected() {
+        let mut tl = DeviceTimeline::new();
+        let done = tl.schedule(DeviceKind::Cpu, 100.0, 5.0);
+        assert_eq!(done, 105.0);
+    }
+}

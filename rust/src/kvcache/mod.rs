@@ -1,0 +1,228 @@
+//! KV-cache manager.
+//!
+//! Each sequence owns one cache per layer, padded to the AOT cache buckets
+//! (the decode attention executables take `[B, C, kv, d]` with slots
+//! `>= pos` required to be zero).  Supports growth across buckets, beam
+//! forking (copy-on-fork), and batched gathering into the padded batch
+//! tensors the executables consume.
+
+use crate::config::model::CACHE_BUCKETS;
+use crate::config::ModelConfig;
+use crate::runtime::Tensor;
+use crate::util::round_up_bucket;
+
+/// KV cache of ONE sequence for ONE layer: k and v, each `[cap, kv, d]`
+/// row-major, zero beyond `len`.
+#[derive(Clone, Debug)]
+pub struct LayerCache {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub cap: usize,
+    pub len: usize,
+    kv_dim: usize, // kv_heads * head_dim
+}
+
+impl LayerCache {
+    fn new(kv_dim: usize) -> LayerCache {
+        let cap = CACHE_BUCKETS[0];
+        LayerCache { k: vec![0.0; cap * kv_dim], v: vec![0.0; cap * kv_dim], cap, len: 0, kv_dim }
+    }
+
+    fn ensure_cap(&mut self, needed: usize) {
+        if needed <= self.cap {
+            return;
+        }
+        let new_cap = round_up_bucket(needed, CACHE_BUCKETS);
+        assert!(new_cap >= needed, "sequence exceeds max cache bucket");
+        self.k.resize(new_cap * self.kv_dim, 0.0);
+        self.v.resize(new_cap * self.kv_dim, 0.0);
+        self.cap = new_cap;
+    }
+
+    /// Append one token's K/V (`[kv_dim]` each).
+    pub fn append(&mut self, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), self.kv_dim);
+        assert_eq!(v.len(), self.kv_dim);
+        self.ensure_cap(self.len + 1);
+        let off = self.len * self.kv_dim;
+        self.k[off..off + self.kv_dim].copy_from_slice(k);
+        self.v[off..off + self.kv_dim].copy_from_slice(v);
+        self.len += 1;
+    }
+
+    /// Bulk-append `n` tokens from `[n, kv_dim]` buffers (prefill).
+    pub fn extend(&mut self, n: usize, k: &[f32], v: &[f32]) {
+        assert_eq!(k.len(), n * self.kv_dim);
+        self.ensure_cap(self.len + n);
+        let off = self.len * self.kv_dim;
+        self.k[off..off + n * self.kv_dim].copy_from_slice(k);
+        self.v[off..off + n * self.kv_dim].copy_from_slice(v);
+        self.len += n;
+    }
+}
+
+/// All layers of one sequence.
+#[derive(Clone, Debug)]
+pub struct SequenceCache {
+    pub layers: Vec<LayerCache>,
+}
+
+impl SequenceCache {
+    pub fn new(cfg: &ModelConfig) -> SequenceCache {
+        SequenceCache {
+            layers: (0..cfg.n_layers).map(|_| LayerCache::new(cfg.kv_dim())).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.first().map(|l| l.len).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Fork for beam search: an independent copy (copy-on-fork; beams then
+    /// diverge freely).
+    pub fn fork(&self) -> SequenceCache {
+        self.clone()
+    }
+
+    /// Bucket that fits this sequence plus one incoming token.
+    pub fn decode_bucket(&self) -> usize {
+        round_up_bucket(self.len() + 1, CACHE_BUCKETS)
+    }
+}
+
+/// Gather a batch of per-sequence caches for `layer` into the padded
+/// `[bb, c, kv_dim]` tensors the decode executable takes (rows beyond
+/// `caches.len()` stay zero — batch-bucket padding).  `c` must be a bucket
+/// >= every sequence's len + 1.  Single copy: each sequence's live prefix
+/// is memcpy'd straight into its padded slot.
+pub fn gather_batch_padded(
+    caches: &[&SequenceCache],
+    layer: usize,
+    bb: usize,
+    c: usize,
+    kv_dim: usize,
+) -> (Tensor, Tensor) {
+    assert!(bb >= caches.len());
+    let mut k = Tensor::zeros(vec![bb, c, kv_dim]); // caller reshapes to [bb,c,kv,d]
+    let mut v = Tensor::zeros(vec![bb, c, kv_dim]);
+    for (i, seq) in caches.iter().enumerate() {
+        let lc = &seq.layers[layer];
+        assert!(lc.len < c, "cache bucket {c} too small for seq len {}", lc.len);
+        let n = lc.len * kv_dim;
+        let off = i * c * kv_dim;
+        k.data[off..off + n].copy_from_slice(&lc.k[..n]);
+        v.data[off..off + n].copy_from_slice(&lc.v[..n]);
+    }
+    (k, v)
+}
+
+/// Back-compat wrapper: exact batch, no bucket padding.
+pub fn gather_batch(
+    caches: &[&SequenceCache],
+    layer: usize,
+    c: usize,
+    kv_dim: usize,
+) -> (Tensor, Tensor) {
+    gather_batch_padded(caches, layer, caches.len(), c, kv_dim)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::testkit::{check, Gen};
+
+    fn cfg() -> ModelConfig {
+        ModelConfig::test_tiny()
+    }
+
+    #[test]
+    fn append_grows_through_buckets() {
+        let cfg = cfg();
+        let mut s = SequenceCache::new(&cfg);
+        let kvd = cfg.kv_dim();
+        for i in 0..200 {
+            let k = vec![i as f32; kvd];
+            let v = vec![-(i as f32); kvd];
+            s.layers[0].append(&k, &v);
+        }
+        assert_eq!(s.layers[0].len, 200);
+        assert_eq!(s.layers[0].cap, 512); // 200 -> bucket 512
+        // Values preserved across the growth.
+        assert_eq!(s.layers[0].k[0], 0.0);
+        assert_eq!(s.layers[0].k[199 * kvd], 199.0);
+    }
+
+    #[test]
+    fn extend_matches_repeated_append_property() {
+        check("extend == appends", 64, |g: &mut Gen| {
+            let kvd = 8;
+            let n = g.usize_in(1..40);
+            let data_k = g.vec_f32(n * kvd..n * kvd + 1, -1.0, 1.0);
+            let data_v = g.vec_f32(n * kvd..n * kvd + 1, -1.0, 1.0);
+            let mut a = LayerCache::new(kvd);
+            a.extend(n, &data_k, &data_v);
+            let mut b = LayerCache::new(kvd);
+            for i in 0..n {
+                b.append(&data_k[i * kvd..(i + 1) * kvd], &data_v[i * kvd..(i + 1) * kvd]);
+            }
+            assert_eq!(a.len, b.len);
+            assert_eq!(a.k[..n * kvd], b.k[..n * kvd]);
+            assert_eq!(a.v[..n * kvd], b.v[..n * kvd]);
+        });
+    }
+
+    #[test]
+    fn fork_is_independent() {
+        let cfg = cfg();
+        let kvd = cfg.kv_dim();
+        let mut a = SequenceCache::new(&cfg);
+        a.layers[0].append(&vec![1.0; kvd], &vec![2.0; kvd]);
+        let mut b = a.fork();
+        b.layers[0].append(&vec![9.0; kvd], &vec![9.0; kvd]);
+        assert_eq!(a.len(), 1);
+        assert_eq!(b.layers[0].len, 2);
+        assert_eq!(a.layers[0].k[0], 1.0); // untouched
+    }
+
+    #[test]
+    fn gather_zero_pads_beyond_len() {
+        let cfg = cfg();
+        let kvd = cfg.kv_dim();
+        let mut s1 = SequenceCache::new(&cfg);
+        s1.layers[0].append(&vec![1.0; kvd], &vec![1.0; kvd]);
+        let mut s2 = SequenceCache::new(&cfg);
+        s2.layers[0].append(&vec![2.0; kvd], &vec![2.0; kvd]);
+        s2.layers[0].append(&vec![3.0; kvd], &vec![3.0; kvd]);
+        let (k, _v) = gather_batch(&[&s1, &s2], 0, 128, kvd);
+        assert_eq!(k.shape, vec![2, 128, kvd]);
+        assert_eq!(k.data[0], 1.0);
+        assert_eq!(k.data[kvd], 0.0); // s1 slot 1 padded
+        assert_eq!(k.data[128 * kvd], 2.0);
+        assert_eq!(k.data[128 * kvd + kvd], 3.0);
+        assert_eq!(k.data[128 * kvd + 2 * kvd], 0.0);
+    }
+
+    #[test]
+    fn decode_bucket_rounds_up() {
+        let cfg = cfg();
+        let mut s = SequenceCache::new(&cfg);
+        assert_eq!(s.decode_bucket(), 128);
+        let kvd = cfg.kv_dim();
+        for _ in 0..127 {
+            for l in &mut s.layers {
+                l.append(&vec![0.0; kvd], &vec![0.0; kvd]);
+            }
+        }
+        assert_eq!(s.len(), 127);
+        assert_eq!(s.decode_bucket(), 128);
+        for l in &mut s.layers {
+            l.append(&vec![0.0; kvd], &vec![0.0; kvd]);
+        }
+        assert_eq!(s.decode_bucket(), 512);
+    }
+}

@@ -1,0 +1,178 @@
+//! Latency-model calibration (paper §3.3 "Initialization": "We also measure
+//! the latency to copy weights and execute experts on either the CPU or the
+//! GPU with different input sizes to inform the decision at runtime").
+//!
+//! Two sources of samples:
+//!
+//! * paper mode — synthesize samples from a [`HardwareConfig`]'s analytic
+//!   curves plus measurement noise, then fit (used by the figure drivers:
+//!   the fitted model reproduces the paper's environments);
+//! * measured mode — time the *actual* PJRT expert executable at each batch
+//!   bucket on this host (exercised by tests and `fiddler calibrate`;
+//!   demonstrates the machinery end-to-end, though host timings do not
+//!   resemble the paper's testbed).
+
+use super::LatencyModel;
+use crate::config::HardwareConfig;
+use crate::util::rng::Rng;
+use crate::util::stats::linear_fit;
+
+/// One measured (input size, latency µs) sample.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub tokens: usize,
+    pub us: f64,
+}
+
+/// Fit an affine CPU model and a constant GPU model from samples.
+pub fn fit(
+    cpu_samples: &[Sample],
+    gpu_samples: &[Sample],
+    transfer_us: f64,
+) -> LatencyModel {
+    assert!(cpu_samples.len() >= 2, "need >= 2 CPU samples");
+    assert!(!gpu_samples.is_empty(), "need >= 1 GPU sample");
+    let xs: Vec<f64> = cpu_samples.iter().map(|s| s.tokens as f64).collect();
+    let ys: Vec<f64> = cpu_samples.iter().map(|s| s.us).collect();
+    let (c0, c1) = linear_fit(&xs, &ys);
+
+    // GPU: constant = mean of multi-batch samples; single-batch extra from
+    // the s == 1 samples if present.
+    let multi: Vec<f64> =
+        gpu_samples.iter().filter(|s| s.tokens > 1).map(|s| s.us).collect();
+    let single: Vec<f64> =
+        gpu_samples.iter().filter(|s| s.tokens == 1).map(|s| s.us).collect();
+    let g = if multi.is_empty() {
+        crate::util::stats::mean(&single)
+    } else {
+        crate::util::stats::mean(&multi)
+    };
+    let extra = if single.is_empty() || multi.is_empty() {
+        0.0
+    } else {
+        (crate::util::stats::mean(&single) - g).max(0.0)
+    };
+
+    LatencyModel {
+        gpu_const_us: g,
+        gpu_single_extra_us: extra,
+        cpu_base_us: c0.max(0.0),
+        cpu_per_token_us: c1.max(0.0),
+        transfer_us,
+        act_roundtrip_per_token_us: 0.0,
+    }
+}
+
+/// Synthesize noisy samples from a hardware config's analytic curves, as if
+/// measured on the paper's testbed (32 repeats per point, like Appendix A).
+pub fn synth_samples(
+    hw: &HardwareConfig,
+    sizes: &[usize],
+    noise_frac: f64,
+    seed: u64,
+) -> (Vec<Sample>, Vec<Sample>) {
+    let ideal = LatencyModel::from_hardware(hw);
+    let mut rng = Rng::new(seed);
+    let mut cpu = Vec::new();
+    let mut gpu = Vec::new();
+    for &s in sizes {
+        for _ in 0..32 {
+            let jitter = 1.0 + noise_frac * rng.normal();
+            cpu.push(Sample { tokens: s, us: ideal.cpu_lat(s) * jitter.max(0.5) });
+            let jitter = 1.0 + noise_frac * rng.normal();
+            gpu.push(Sample { tokens: s, us: ideal.gpu_lat(s) * jitter.max(0.5) });
+        }
+    }
+    (cpu, gpu)
+}
+
+/// Calibrate a latency model for `hw` from synthesized noisy measurements —
+/// the initialization-phase procedure of §3.3.
+pub fn calibrate_paper_env(hw: &HardwareConfig, seed: u64) -> LatencyModel {
+    let sizes = [1, 2, 4, 8, 16, 32, 64, 128];
+    let (cpu, gpu) = synth_samples(hw, &sizes, 0.03, seed);
+    fit(&cpu, &gpu, hw.weight_transfer_us())
+}
+
+/// Measured mode: time the ACTUAL expert executable on this host at each
+/// batch bucket and fit the affine model.  Exercises the full calibration
+/// machinery end to end (`fiddler calibrate --measured=1`); the numbers
+/// describe this host, not the paper's testbed.
+pub fn measure_host_expert(
+    rt: &crate::runtime::Runtime,
+    ws: &crate::runtime::WeightStore,
+    sizes: &[usize],
+    repeats: usize,
+) -> anyhow::Result<Vec<Sample>> {
+    use crate::runtime::Tensor;
+    let cfg = &ws.config;
+    let (w1, w3, w2) = (
+        ws.expert(0, 0, "w1").clone(),
+        ws.expert(0, 0, "w3").clone(),
+        ws.expert(0, 0, "w2").clone(),
+    );
+    let mut out = Vec::new();
+    for &s in sizes {
+        let op = format!("expert_b{s}");
+        if !rt.has_op(&op) {
+            continue;
+        }
+        let x = Tensor::zeros(vec![s, cfg.hidden]);
+        let args: Vec<crate::runtime::Arg> = vec![
+            x.into(),
+            w1.clone().into(),
+            w3.clone().into(),
+            w2.clone().into(),
+        ];
+        rt.execute(&op, &args)?; // compile + warm
+        for _ in 0..repeats {
+            let t0 = std::time::Instant::now();
+            rt.execute(&op, &args)?;
+            out.push(Sample { tokens: s, us: t0.elapsed().as_micros() as f64 });
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_recovers_analytic_model() {
+        let hw = HardwareConfig::env1();
+        let ideal = LatencyModel::from_hardware(&hw);
+        let fitted = calibrate_paper_env(&hw, 42);
+        // Within a few percent despite 3% measurement noise.
+        let rel = |a: f64, b: f64| (a - b).abs() / b;
+        assert!(rel(fitted.cpu_per_token_us, ideal.cpu_per_token_us) < 0.10);
+        assert!(rel(fitted.gpu_const_us, ideal.gpu_const_us) < 0.05);
+        assert!(rel(fitted.transfer_us, ideal.transfer_us) < 1e-12);
+        // And the decision-relevant quantity — the crossover — agrees.
+        let a = fitted.crossover_tokens() as f64;
+        let b = ideal.crossover_tokens() as f64;
+        assert!((a - b).abs() / b < 0.25, "crossover {a} vs {b}");
+    }
+
+    #[test]
+    fn fit_detects_single_batch_overhead() {
+        let gpu = vec![
+            Sample { tokens: 1, us: 110.0 },
+            Sample { tokens: 2, us: 100.0 },
+            Sample { tokens: 16, us: 100.0 },
+        ];
+        let cpu = vec![
+            Sample { tokens: 1, us: 10.0 },
+            Sample { tokens: 2, us: 20.0 },
+        ];
+        let m = fit(&cpu, &gpu, 500.0);
+        assert!((m.gpu_single_extra_us - 10.0).abs() < 1e-9);
+        assert!((m.gpu_lat(1) - 110.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn fit_requires_samples() {
+        fit(&[], &[Sample { tokens: 1, us: 1.0 }], 1.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Latency model — the quantities consumed by Algorithm 1 (paper §3.3).
+//!
+//! `gpu_lat(s)` is constant in the input size (GPU expert execution is
+//! memory-bound on the weight read), `cpu_lat(s)` is affine in the input
+//! size (one DRAM pass over the weights + per-token compute; the paper's
+//! pure-linear model is the `c0 = 0` special case), and `transfer_lat()` is
+//! the PCIe weight-copy time.  Constants come either from the per-env
+//! hardware config (paper-derived, Appendix A) or from [`calib`] fitting
+//! measured samples.
+
+pub mod calib;
+
+use crate::config::HardwareConfig;
+
+/// The latency model of one (CPU, GPU, link) triple, in microseconds.
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    /// GPU expert execution with weights resident (constant part).
+    pub gpu_const_us: f64,
+    /// Extra GPU latency at batch size 1 (Appendix A: PyTorch dispatches a
+    /// different single-batch kernel, ~10% slower).
+    pub gpu_single_extra_us: f64,
+    /// CPU expert execution: `cpu_base_us + cpu_per_token_us * s`.
+    pub cpu_base_us: f64,
+    pub cpu_per_token_us: f64,
+    /// CPU->GPU weight copy for one expert.
+    pub transfer_us: f64,
+    /// Activation round-trip per token (GPU->CPU and back), charged to the
+    /// CPU path; <1% of expert latency by construction (Appendix A).
+    pub act_roundtrip_per_token_us: f64,
+}
+
+impl LatencyModel {
+    pub fn from_hardware(hw: &HardwareConfig) -> LatencyModel {
+        LatencyModel {
+            gpu_const_us: hw.gpu_expert_compute_us,
+            gpu_single_extra_us: hw.gpu_single_batch_extra_us,
+            cpu_base_us: hw.cpu_expert_base_us,
+            cpu_per_token_us: hw.cpu_expert_per_token_us,
+            transfer_us: hw.weight_transfer_us(),
+            act_roundtrip_per_token_us: 2.0 * hw.act_copy_us(4096 * 2)
+                / 1.0_f64.max(1.0),
+        }
+    }
+
+    /// Expected GPU latency for an expert with `s` input tokens, weights
+    /// already resident (paper's `gpu_lat(s)` — constant).
+    pub fn gpu_lat(&self, s: usize) -> f64 {
+        debug_assert!(s > 0);
+        if s == 1 {
+            self.gpu_const_us + self.gpu_single_extra_us
+        } else {
+            self.gpu_const_us
+        }
+    }
+
+    /// Expected CPU latency for an expert with `s` input tokens, including
+    /// the (negligible) activation round-trip (paper's `cpu_lat(s)`).
+    pub fn cpu_lat(&self, s: usize) -> f64 {
+        debug_assert!(s > 0);
+        self.cpu_base_us
+            + self.cpu_per_token_us * s as f64
+            + self.act_roundtrip_per_token_us * s as f64
+    }
+
+    /// Expected CPU->GPU weight transfer latency (paper's `transfer_lat()`).
+    pub fn transfer_lat(&self) -> f64 {
+        self.transfer_us
+    }
+
+    /// Input size at which copying weights to the GPU becomes cheaper than
+    /// computing on the CPU: the crossover in Figure 1 / §3.2.
+    pub fn crossover_tokens(&self) -> usize {
+        let mut s = 1;
+        while s < 1 << 20 {
+            if self.cpu_lat(s) > self.gpu_lat(s) + self.transfer_lat() {
+                return s;
+            }
+            s += 1;
+        }
+        usize::MAX
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> LatencyModel {
+        LatencyModel::from_hardware(&HardwareConfig::env1())
+    }
+
+    #[test]
+    fn gpu_latency_constant_in_batch() {
+        let m = m();
+        assert_eq!(m.gpu_lat(2), m.gpu_lat(1000));
+        // batch-1 overhead ~10% (Appendix A)
+        let extra = m.gpu_lat(1) / m.gpu_lat(2);
+        assert!(extra > 1.0 && extra < 1.25, "extra={extra}");
+    }
+
+    #[test]
+    fn cpu_latency_increases_linearly() {
+        let m = m();
+        let d1 = m.cpu_lat(11) - m.cpu_lat(10);
+        let d2 = m.cpu_lat(101) - m.cpu_lat(100);
+        assert!((d1 - d2).abs() < 1e-9, "not affine");
+        assert!(m.cpu_lat(100) > m.cpu_lat(1));
+    }
+
+    #[test]
+    fn crossover_in_decode_beam_range() {
+        // The regime the paper describes: single-token decode should prefer
+        // the CPU; long prefill (>= hundreds of tokens per expert) the GPU.
+        for hw in [HardwareConfig::env1(), HardwareConfig::env2()] {
+            let m = LatencyModel::from_hardware(&hw);
+            let x = m.crossover_tokens();
+            assert!(x > 2, "{}: crossover {x} too small — decode would use GPU", hw.name);
+            assert!(x < 256, "{}: crossover {x} too large — prefill would use CPU", hw.name);
+        }
+    }
+
+    #[test]
+    fn activation_roundtrip_under_one_percent() {
+        let m = m();
+        assert!(m.act_roundtrip_per_token_us < 0.01 * m.cpu_lat(1));
+    }
+}

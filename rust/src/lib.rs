@@ -1,0 +1,39 @@
+//! # Fiddler — CPU-GPU orchestration for fast MoE inference (reproduction)
+//!
+//! Full-system reproduction of *Fiddler: CPU-GPU Orchestration for Fast
+//! Inference of Mixture-of-Experts Models* (ICLR 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build time)** — Pallas expert kernels + a Mixtral-style MoE
+//!   model in JAX, AOT-lowered to HLO-text artifacts (`python/compile/`).
+//! * **Runtime** — [`runtime`] loads artifacts through the PJRT C API.
+//! * **L3 (this crate)** — the paper's contribution: the [`scheduler`]
+//!   (Algorithm 1), [`placement`] (popularity pinning), the serving
+//!   [`coordinator`] (continuous batching, beam search), and the
+//!   [`baselines`] it is evaluated against, over a simulated heterogeneous
+//!   [`hardware`] substrate (virtual clock + calibrated [`latency`] model).
+//!
+//! See DESIGN.md for the experiment index and the hardware substitutions.
+
+pub mod benchkit;
+pub mod config;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+pub mod baselines;
+pub mod coordinator;
+pub mod hardware;
+pub mod kvcache;
+pub mod latency;
+pub mod metrics;
+pub mod moe;
+pub mod placement;
+pub mod popularity;
+pub mod scheduler;
+pub mod server;
+pub mod workload;
+pub mod figures;
+pub mod cpukernel;
+pub mod prefetch;
+pub mod quant;

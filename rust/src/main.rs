@@ -1,0 +1,214 @@
+//! `fiddler` CLI — leader entrypoint for the serving system.
+//!
+//! Subcommands:
+//!   serve      run the continuous-batching server on a synthetic workload
+//!   generate   single-request generation
+//!   beam       beam-search generation
+//!   calibrate  print the latency model / run measured calibration
+//!   inspect    show model + artifact + environment info
+//!
+//! Figure/table reproduction lives in `examples/` (see DESIGN.md §5).
+
+use anyhow::Result;
+use fiddler::config::serving::ServingConfig;
+use fiddler::config::HardwareConfig;
+use fiddler::coordinator::Engine;
+use fiddler::figures;
+use fiddler::latency::{calib, LatencyModel};
+use fiddler::server::{collect, ServerHandle};
+use fiddler::util::cli::Args;
+use fiddler::workload::{Dataset, WorkloadGen};
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "beam" => cmd_beam(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "inspect" => cmd_inspect(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "fiddler — CPU-GPU orchestration for fast MoE inference (reproduction)\n\
+         \n\
+         USAGE: fiddler <command> [--flags]\n\
+         \n\
+         COMMANDS:\n\
+           serve      --model M --env E --policy P --requests N --inp L --out L\n\
+                      [--listen 127.0.0.1:7777]  (newline-JSON TCP protocol)\n\
+           generate   --model M --env E --policy P --inp L --out L [--prompt 1,2,3]\n\
+           beam       --model M --env E --policy P --width W --inp L --out L\n\
+           calibrate  --env E [--measured]\n\
+           inspect    --model M --env E\n\
+         \n\
+         DEFAULTS: --model mixtral-tiny --env env1 --policy fiddler\n\
+         POLICIES: fiddler | mii (DeepSpeed-MII*) | lru (Mixtral-Offloading*) |\n\
+                   static (llama.cpp*) | fiddler-prefetch (extension)"
+    );
+}
+
+fn engine_from(args: &Args) -> Result<Engine> {
+    let model = args.str_or("model", "mixtral-tiny");
+    let hw = HardwareConfig::by_name(args.str_or("env", "env1"))?;
+    let mut serving = ServingConfig::from_args(args)?;
+    if args.get("ngl").is_none() {
+        serving.ngl = ServingConfig::paper_ngl_for(&hw.name);
+    }
+    Engine::new(figures::artifact_dir(model), &hw, serving)
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let mut engine = engine_from(args)?;
+    let inp = args.usize_or("inp", 32);
+    let out = args.usize_or("out", 64);
+    let prompt: Vec<u32> = match args.get("prompt") {
+        Some(p) => p.split(',').map(|t| t.trim().parse().unwrap()).collect(),
+        None => {
+            WorkloadGen::new(Dataset::sharegpt(), engine.model().vocab, args.u64_or("seed", 0))
+                .prompt(inp)
+        }
+    };
+    eprintln!(
+        "[generate] model={} env={} policy={} prompt_len={} out={}",
+        engine.model().name,
+        engine.cx.hw.name,
+        engine.cx.policy.name(),
+        prompt.len(),
+        out
+    );
+    let g = engine.generate(&prompt, out)?;
+    println!("tokens: {:?}", g.tokens);
+    println!(
+        "virtual: ttft {:.1} ms | mean itl {:.1} ms | {:.2} tok/s | hit rate {:.1}%",
+        g.metrics.ttft_us() / 1e3,
+        g.metrics.mean_itl_us() / 1e3,
+        g.metrics.tokens_per_s(),
+        engine.cx.events.hit_rate() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_beam(args: &Args) -> Result<()> {
+    let mut engine = engine_from(args)?;
+    let width = args.usize_or("width", 4);
+    let inp = args.usize_or("inp", 32);
+    let out = args.usize_or("out", 64);
+    let prompt = WorkloadGen::new(
+        Dataset::sharegpt(),
+        engine.model().vocab,
+        args.u64_or("seed", 0),
+    )
+    .prompt(inp);
+    let b = engine.beam_search(&prompt, width, out)?;
+    println!("best beam (score {:.3}): {:?}", b.score, b.tokens);
+    println!(
+        "virtual: {:.3} tok/s over {} tokens (width {width})",
+        b.metrics.tokens_per_s(),
+        b.tokens.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n_requests = args.usize_or("requests", 8);
+    let inp = args.usize_or("inp", 32);
+    let out = args.usize_or("out", 64);
+    let model = args.str_or("model", "mixtral-tiny").to_string();
+    let hw = HardwareConfig::by_name(args.str_or("env", "env1"))?;
+    let mut serving = ServingConfig::from_args(args)?;
+    if args.get("ngl").is_none() {
+        serving.ngl = ServingConfig::paper_ngl_for(&hw.name);
+    }
+    let hw2 = hw.clone();
+    let handle = ServerHandle::spawn(move || {
+        Engine::new(figures::artifact_dir(&model), &hw2, serving)
+    });
+
+    // --listen ADDR: expose the newline-JSON TCP protocol and run forever.
+    if let Some(addr) = args.get("listen") {
+        let listener = std::net::TcpListener::bind(addr)?;
+        println!("listening on {addr} (protocol: see rust/src/server/net.rs)");
+        fiddler::server::net::serve_tcp(listener, handle.requests.clone())?;
+        return handle.shutdown();
+    }
+
+    let mut gen = WorkloadGen::new(Dataset::sharegpt(), 512, args.u64_or("seed", 0));
+    let receivers: Vec<_> =
+        (0..n_requests).map(|_| handle.submit(gen.prompt(inp), out)).collect();
+    let mut tps = Vec::new();
+    for (i, rx) in receivers.iter().enumerate() {
+        let (tokens, m) = collect(rx)?;
+        println!(
+            "req {i}: {} tokens | ttft {:.1} ms | {:.2} tok/s",
+            tokens.len(),
+            m.ttft_us() / 1e3,
+            m.tokens_per_s()
+        );
+        tps.push(m.tokens_per_s());
+    }
+    println!(
+        "aggregate: {:.2} tok/s mean over {n_requests} requests (virtual time)",
+        fiddler::util::stats::mean(&tps)
+    );
+    handle.shutdown()
+}
+
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let hw = HardwareConfig::by_name(args.str_or("env", "env1"))?;
+    let analytic = LatencyModel::from_hardware(&hw);
+    let fitted = calib::calibrate_paper_env(&hw, args.u64_or("seed", 42));
+    println!("environment: {} ({} / {})", hw.name, hw.gpu_name, hw.cpu_name);
+    for (name, m) in [("analytic", &analytic), ("fitted", &fitted)] {
+        println!(
+            "{name:>9}: gpu {:.2} ms | cpu {:.2} + {:.3}*s ms | transfer {:.2} ms | crossover s*={}",
+            m.gpu_const_us / 1e3,
+            m.cpu_base_us / 1e3,
+            m.cpu_per_token_us / 1e3,
+            m.transfer_us / 1e3,
+            m.crossover_tokens()
+        );
+    }
+    if args.has("measured") {
+        // Time the real expert executable on THIS host and fit.
+        let model = args.str_or("model", "mixtral-tiny");
+        let dir = figures::artifact_dir(model);
+        let rt = fiddler::runtime::Runtime::open(dir.clone())?;
+        let ws = fiddler::runtime::WeightStore::load(&dir)?;
+        let samples =
+            calib::measure_host_expert(&rt, &ws, &[1, 2, 4, 8, 16, 32, 64], 8)?;
+        let m = calib::fit(&samples, &samples, hw.weight_transfer_us());
+        println!(
+            " measured (this host, expert op): {:.3} + {:.4}*s ms over {} samples",
+            m.cpu_base_us / 1e3,
+            m.cpu_per_token_us / 1e3,
+            samples.len()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let engine = engine_from(args)?;
+    let cfg = engine.model().clone();
+    let hw = &engine.cx.hw;
+    figures::print_env_banner(hw, &cfg);
+    println!(
+        "model {}: {} layers x {} experts (top-{}), hidden {}, ffn {}, vocab {}",
+        cfg.name, cfg.n_layers, cfg.n_experts, cfg.top_k, cfg.hidden, cfg.ffn, cfg.vocab
+    );
+    println!("artifact ops: {}", engine.runner.rt.op_names().len());
+    println!(
+        "placement: {} experts pinned of {} capacity",
+        engine.cx.memory.resident_count(),
+        engine.cx.memory.capacity()
+    );
+    Ok(())
+}

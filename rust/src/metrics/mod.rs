@@ -1,0 +1,183 @@
+//! Serving metrics: TTFT, ITL, tokens/s — all in *virtual* time (µs), as
+//! reported by the simulated substrate (DESIGN.md §2).
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Timing record of one generation (all timestamps virtual µs).
+#[derive(Clone, Debug, Default)]
+pub struct GenMetrics {
+    pub enqueue_us: f64,
+    /// Time the first output token is ready (end of prefill + first decode).
+    pub first_token_us: f64,
+    /// Completion time of each generated token.
+    pub token_done_us: Vec<f64>,
+    pub prompt_tokens: usize,
+}
+
+impl GenMetrics {
+    /// Time To First Token (paper scenario b metric).
+    pub fn ttft_us(&self) -> f64 {
+        self.first_token_us - self.enqueue_us
+    }
+
+    /// Inter-token latencies (paper Fig. 12).
+    pub fn itl_us(&self) -> Vec<f64> {
+        self.token_done_us.windows(2).map(|w| w[1] - w[0]).collect()
+    }
+
+    pub fn mean_itl_us(&self) -> f64 {
+        let itl = self.itl_us();
+        crate::util::stats::mean(&itl)
+    }
+
+    /// End-to-end tokens/second (paper scenarios a, c: generated tokens
+    /// divided by end-to-end latency including prefill).
+    pub fn tokens_per_s(&self) -> f64 {
+        let n = self.token_done_us.len();
+        if n == 0 {
+            return 0.0;
+        }
+        let total_s = (self.token_done_us[n - 1] - self.enqueue_us) / 1e6;
+        n as f64 / total_s
+    }
+
+    pub fn end_to_end_us(&self) -> f64 {
+        self.token_done_us.last().copied().unwrap_or(self.first_token_us)
+            - self.enqueue_us
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("prompt_tokens", Json::from(self.prompt_tokens));
+        o.set("output_tokens", Json::from(self.token_done_us.len()));
+        o.set("ttft_us", Json::Num(self.ttft_us()));
+        o.set("mean_itl_us", Json::Num(self.mean_itl_us()));
+        o.set("tokens_per_s", Json::Num(self.tokens_per_s()));
+        o
+    }
+}
+
+/// Aggregation over many generations (one figure cell).
+#[derive(Clone, Debug, Default)]
+pub struct Aggregate {
+    pub tps: Vec<f64>,
+    pub ttft_us: Vec<f64>,
+    pub itl_us: Vec<f64>,
+}
+
+impl Aggregate {
+    pub fn push(&mut self, m: &GenMetrics) {
+        self.tps.push(m.tokens_per_s());
+        self.ttft_us.push(m.ttft_us());
+        self.itl_us.extend(m.itl_us());
+    }
+
+    pub fn tps_summary(&self) -> Summary {
+        Summary::of(&self.tps)
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttft_us)
+    }
+
+    pub fn itl_summary(&self) -> Summary {
+        Summary::of(&self.itl_us)
+    }
+}
+
+/// Simple fixed-width table printer for the figure drivers.
+pub struct TableReporter {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TableReporter {
+    pub fn new(headers: &[&str]) -> TableReporter {
+        TableReporter {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", line(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m() -> GenMetrics {
+        GenMetrics {
+            enqueue_us: 100.0,
+            first_token_us: 600.0,
+            token_done_us: vec![600.0, 1100.0, 1600.0, 2100.0],
+            prompt_tokens: 8,
+        }
+    }
+
+    #[test]
+    fn ttft_and_itl() {
+        let m = m();
+        assert_eq!(m.ttft_us(), 500.0);
+        assert_eq!(m.itl_us(), vec![500.0, 500.0, 500.0]);
+        assert_eq!(m.mean_itl_us(), 500.0);
+    }
+
+    #[test]
+    fn tokens_per_s_end_to_end() {
+        let m = m();
+        // 4 tokens over 2000 µs = 2000 tok/s
+        assert!((m.tokens_per_s() - 2000.0).abs() < 1e-9);
+        assert_eq!(m.end_to_end_us(), 2000.0);
+    }
+
+    #[test]
+    fn aggregate_summaries() {
+        let mut a = Aggregate::default();
+        a.push(&m());
+        a.push(&m());
+        assert_eq!(a.tps.len(), 2);
+        assert_eq!(a.itl_us.len(), 6);
+        assert!((a.ttft_summary().mean - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = TableReporter::new(&["a", "bbbb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn empty_generation_is_safe() {
+        let m = GenMetrics::default();
+        assert_eq!(m.tokens_per_s(), 0.0);
+        assert!(m.itl_us().is_empty());
+    }
+}

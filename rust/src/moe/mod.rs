@@ -1,0 +1,499 @@
+//! MoE model runner: composes the per-op HLO executables into decoder
+//! steps, with the execution policy deciding where each expert runs and the
+//! simulated substrate accounting the time (DESIGN.md §2/§3).
+
+pub mod topk;
+
+use crate::config::model::{
+    CACHE_BUCKETS, DECODE_BATCH_BUCKETS, LMHEAD_BUCKETS, PREFILL_BUCKETS, TOKEN_BUCKETS,
+};
+use crate::config::{DeviceKind, HardwareConfig, ModelConfig};
+use crate::hardware::memory::GpuMemory;
+use crate::hardware::{DeviceTimeline, PcieLink, VirtualClock};
+use crate::kvcache::{gather_batch_padded, SequenceCache};
+use crate::latency::LatencyModel;
+use crate::popularity::Profile;
+use crate::runtime::{Runtime, Tensor, TensorI32, WeightStore};
+use crate::scheduler::policy::ExecPolicy;
+use crate::scheduler::ExpertPlan;
+use crate::util::round_up_bucket;
+use anyhow::{bail, Result};
+
+/// Counters over expert executions (hit-rate metrics, Fig. 8 analysis).
+#[derive(Clone, Debug, Default)]
+pub struct ExpertEvents {
+    pub resident: u64,
+    pub transferred: u64,
+    pub cpu: u64,
+}
+
+impl ExpertEvents {
+    pub fn total(&self) -> u64 {
+        self.resident + self.transferred + self.cpu
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.resident as f64 / t as f64
+        }
+    }
+}
+
+/// Mutable execution state threaded through a serving session: the policy,
+/// the simulated memory/link/clock, and online profiling.
+pub struct ExecContext {
+    pub policy: Box<dyn ExecPolicy>,
+    pub memory: GpuMemory,
+    pub link: PcieLink,
+    pub lat: LatencyModel,
+    pub hw: HardwareConfig,
+    pub timeline: DeviceTimeline,
+    pub clock: VirtualClock,
+    pub online_profile: Profile,
+    pub events: ExpertEvents,
+}
+
+impl ExecContext {
+    /// Build a context: runs the policy's initialization-time placement
+    /// against `profile` (the build-time calibration profile).
+    pub fn new(
+        mut policy: Box<dyn ExecPolicy>,
+        hw: &HardwareConfig,
+        cfg: &ModelConfig,
+        profile: &Profile,
+        seed: u64,
+    ) -> ExecContext {
+        // Scale the paper-environment expert capacity to this model's
+        // expert count (capacity fractions are what transfer: 56/256 and
+        // 125/256 in the paper).
+        let frac = hw.gpu_expert_capacity() as f64 / 256.0;
+        let capacity = ((cfg.total_experts() as f64 * frac).round() as usize)
+            .min(cfg.total_experts());
+        let mut memory = GpuMemory::with_capacity(capacity);
+        policy.init(&mut memory, profile, seed);
+        ExecContext {
+            policy,
+            memory,
+            link: PcieLink::new(hw),
+            lat: LatencyModel::from_hardware(hw),
+            hw: hw.clone(),
+            timeline: DeviceTimeline::new(),
+            clock: VirtualClock::new(),
+            online_profile: Profile::new(cfg.n_layers, cfg.n_experts),
+            events: ExpertEvents::default(),
+        }
+    }
+
+    /// Charge serial (blocking) work on one device: the clock advances to
+    /// its completion.
+    fn charge_serial(&mut self, device: DeviceKind, us: f64) {
+        let done = self.timeline.schedule(device, self.clock.now_us(), us);
+        self.clock.advance_to_us(done);
+        self.timeline.reset_to(done);
+    }
+}
+
+/// One op argument on the fast execution path: per-call activations
+/// (uploaded fresh) or a named weight (served from the device cache).
+enum MixedArg<'a> {
+    F32(&'a Tensor),
+    I32(&'a TensorI32),
+    Weight(&'a str),
+}
+
+/// The model runner (stateless w.r.t. requests; owns runtime + weights).
+pub struct ModelRunner {
+    pub rt: Runtime,
+    pub ws: WeightStore,
+    pub cfg: ModelConfig,
+    /// Weights pinned as device-resident PJRT buffers, uploaded once on
+    /// first use (perf: avoids re-serializing hundreds of KB per op call —
+    /// see EXPERIMENTS.md §Perf).  Single-threaded engine => RefCell.
+    wbuf: std::cell::RefCell<std::collections::HashMap<String, xla::PjRtBuffer>>,
+}
+
+impl ModelRunner {
+    pub fn load(artifact_dir: impl Into<std::path::PathBuf>) -> Result<ModelRunner> {
+        let dir = artifact_dir.into();
+        let rt = Runtime::open(dir.clone())?;
+        let ws = WeightStore::load(&dir)?;
+        let cfg = ws.config.clone();
+        Ok(ModelRunner { rt, ws, cfg, wbuf: Default::default() })
+    }
+
+    /// Make sure every named weight tensor has a cached device buffer.
+    fn ensure_wbufs(&self, names: &[String]) -> Result<()> {
+        let mut map = self.wbuf.borrow_mut();
+        for name in names {
+            if !map.contains_key(name) {
+                let t = self.ws.get(name)?;
+                map.insert(name.clone(), self.rt.buffer_from_tensor(t)?);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute `op` with a mix of per-call activation tensors and cached
+    /// weight buffers. `args` lists the op parameters in order.
+    fn execute_mixed(&self, op: &str, args: &[MixedArg<'_>]) -> Result<Vec<Tensor>> {
+        let weight_names: Vec<String> = args
+            .iter()
+            .filter_map(|a| match a {
+                MixedArg::Weight(n) => Some(n.to_string()),
+                _ => None,
+            })
+            .collect();
+        self.ensure_wbufs(&weight_names)?;
+        // Upload per-call activations.
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        for a in args {
+            match a {
+                MixedArg::F32(t) => owned.push(self.rt.buffer_from_tensor(t)?),
+                MixedArg::I32(t) => owned.push(self.rt.buffer_from_i32(t)?),
+                MixedArg::Weight(_) => {}
+            }
+        }
+        let map = self.wbuf.borrow();
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        let mut oi = 0;
+        for a in args {
+            match a {
+                MixedArg::Weight(n) => refs.push(map.get(*n).expect("ensured")),
+                _ => {
+                    refs.push(&owned[oi]);
+                    oi += 1;
+                }
+            }
+        }
+        self.rt.execute_buffers(op, &refs)
+    }
+
+    fn attn_weight_names(&self, layer: usize) -> [String; 5] {
+        [
+            format!("layers.{layer}.attn_norm"),
+            format!("layers.{layer}.wq"),
+            format!("layers.{layer}.wk"),
+            format!("layers.{layer}.wv"),
+            format!("layers.{layer}.wo"),
+        ]
+    }
+
+    /// One MoE (expert) layer over `h` (`[n, hidden]`, rows >= `valid`
+    /// are padding): router + top-k + per-expert dispatch per the policy,
+    /// combining outputs back into `h` (residual add included).
+    pub fn moe_layer(
+        &self,
+        layer: usize,
+        h: &mut Tensor,
+        valid: usize,
+        cx: &mut ExecContext,
+    ) -> Result<()> {
+        let n = h.shape[0];
+        let gate_op = format!("gate_b{n}");
+        let ffn_norm = format!("layers.{layer}.ffn_norm");
+        let gate_w = format!("layers.{layer}.gate");
+        let out = self.execute_mixed(
+            &gate_op,
+            &[
+                MixedArg::F32(h),
+                MixedArg::Weight(&ffn_norm),
+                MixedArg::Weight(&gate_w),
+            ],
+        )?;
+        let (probs, xn) = (&out[0], &out[1]);
+        self.moe_experts(layer, h, probs, xn, valid, cx)
+    }
+
+    /// Expert dispatch half of an MoE layer, with router outputs already
+    /// in hand (the fused attention+gate executables produce them — see
+    /// EXPERIMENTS.md §Perf, L2 fusion).
+    pub fn moe_experts(
+        &self,
+        layer: usize,
+        h: &mut Tensor,
+        probs: &Tensor,
+        xn: &Tensor,
+        valid: usize,
+        cx: &mut ExecContext,
+    ) -> Result<()> {
+        let routing =
+            topk::route(&probs.data[..valid * self.cfg.n_experts], valid, self.cfg.n_experts, self.cfg.top_k);
+        for (e, &s) in routing.inp_size.iter().enumerate() {
+            cx.online_profile.record(layer, e, s as u64);
+        }
+
+        let t0 = cx.clock.now_us();
+        let plans = cx
+            .policy
+            .plan_layer(layer, &routing.inp_size, &mut cx.memory, &cx.lat, t0);
+        // Speculative policies overlap next-layer weight prefetches with
+        // this layer's compute.
+        cx.policy
+            .post_layer(layer, &routing.inp_size, &mut cx.memory, &cx.lat, t0);
+        for (j, plan) in plans.iter().enumerate() {
+            let Some(plan) = plan else { continue };
+            let s = routing.inp_size[j];
+            let rows: Vec<usize> = routing.rows_for[j].iter().map(|&(r, _)| r).collect();
+            let weights: Vec<f32> = routing.rows_for[j].iter().map(|&(_, w)| w).collect();
+
+            // Execute the expert numerically. CPU-planned experts may use
+            // the dedicated host kernel (the paper's specialized CPU kernel
+            // path, §3.4); otherwise the lowered Pallas kernel through PJRT.
+            if *plan == ExpertPlan::Cpu && crate::cpukernel::host_kernel_enabled() {
+                let xe = xn.gather_rows_padded(&rows, s); // exact size, no bucket
+                let out = crate::cpukernel::expert_ffn_host(
+                    &xe,
+                    self.ws.expert(layer, j, "w1"),
+                    self.ws.expert(layer, j, "w3"),
+                    self.ws.expert(layer, j, "w2"),
+                );
+                h.axpy_rows(&rows, &weights, &out);
+            } else {
+                let bucket = round_up_bucket(s, TOKEN_BUCKETS);
+                let xe = xn.gather_rows_padded(&rows, bucket);
+                let w1 = format!("layers.{layer}.experts.{j}.w1");
+                let w3 = format!("layers.{layer}.experts.{j}.w3");
+                let w2 = format!("layers.{layer}.experts.{j}.w2");
+                let expert_out = self.execute_mixed(
+                    &format!("expert_b{bucket}"),
+                    &[
+                        MixedArg::F32(&xe),
+                        MixedArg::Weight(&w1),
+                        MixedArg::Weight(&w3),
+                        MixedArg::Weight(&w2),
+                    ],
+                )?;
+                h.axpy_rows(&rows, &weights, &expert_out[0]);
+            }
+
+            // Account simulated time + link/memory bookkeeping.
+            let cost = cx.policy.expert_cost_us(*plan, s, &cx.lat);
+            cx.timeline.schedule(plan.device(), t0, cost);
+            match plan {
+                ExpertPlan::GpuResident => cx.events.resident += 1,
+                ExpertPlan::GpuTransfer => {
+                    cx.events.transferred += 1;
+                    cx.link.weight_transfer();
+                }
+                ExpertPlan::Cpu => {
+                    cx.events.cpu += 1;
+                    cx.link.activation_transfer(s); // out
+                    cx.link.activation_transfer(s); // back
+                }
+            }
+        }
+        // Layer boundary: expert outputs must be combined before the next
+        // layer — both device queues join.
+        let done = cx.timeline.barrier();
+        cx.clock.advance_to_us(done);
+        Ok(())
+    }
+
+    /// Prefill a prompt into `cache`; returns the last token's hidden state
+    /// (`[1, hidden]`).
+    pub fn prefill(
+        &self,
+        tokens: &[u32],
+        cache: &mut SequenceCache,
+        cx: &mut ExecContext,
+    ) -> Result<Tensor> {
+        let n = tokens.len();
+        if n == 0 {
+            bail!("empty prompt");
+        }
+        let max_bucket = *PREFILL_BUCKETS.last().unwrap();
+        if n > max_bucket {
+            bail!("prompt of {n} tokens exceeds max prefill bucket {max_bucket}");
+        }
+        let s = round_up_bucket(n, PREFILL_BUCKETS);
+        let mut x = Tensor::zeros(vec![s, self.cfg.hidden]);
+        let emb = self.ws.embed_tokens(tokens);
+        x.data[..n * self.cfg.hidden].copy_from_slice(&emb.data);
+
+        for layer in 0..self.cfg.n_layers {
+            // Attention, then router (separate executables: the fused
+            // attn+gate variant measured SLOWER under XLA-CPU — see the
+            // perf_ab_fused ablation and EXPERIMENTS.md §Perf).
+            let valid = TensorI32::scalar(n as i32);
+            let wn = self.attn_weight_names(layer);
+            let out = self.execute_mixed(
+                &format!("attn_prefill_s{s}"),
+                &[
+                    MixedArg::F32(&x),
+                    MixedArg::I32(&valid),
+                    MixedArg::Weight(&wn[0]),
+                    MixedArg::Weight(&wn[1]),
+                    MixedArg::Weight(&wn[2]),
+                    MixedArg::Weight(&wn[3]),
+                    MixedArg::Weight(&wn[4]),
+                ],
+            )?;
+            let (h_attn, k, v) = (&out[0], &out[1], &out[2]);
+            let kvd = self.cfg.kv_dim();
+            cache.layers[layer].extend(n, &k.data[..n * kvd], &v.data[..n * kvd]);
+
+            let attn_dev = cx.policy.attn_device(layer);
+            let mut attn_us = cx.hw.attn_prefill_per_token_us * n as f64;
+            if attn_dev == DeviceKind::Cpu {
+                attn_us *= cx.hw.attn_cpu_factor;
+            }
+            cx.charge_serial(attn_dev, attn_us);
+
+            x = h_attn.clone();
+            self.moe_layer(layer, &mut x, n, cx)?;
+        }
+        // Last valid row only.
+        Ok(x.gather_rows_padded(&[n - 1], 1))
+    }
+
+    /// One decode step for a batch of sequences: `xs` is `[b, hidden]`
+    /// (embedded last tokens), caches/positions parallel arrays.
+    /// Returns the new hidden states `[b, hidden]` and appends K/V.
+    pub fn decode_step(
+        &self,
+        xs: &Tensor,
+        caches: &mut [&mut SequenceCache],
+        cx: &mut ExecContext,
+    ) -> Result<Tensor> {
+        let b = caches.len();
+        assert_eq!(xs.shape, vec![b, self.cfg.hidden]);
+        let bb = round_up_bucket(b, DECODE_BATCH_BUCKETS);
+        if b > *DECODE_BATCH_BUCKETS.last().unwrap() {
+            bail!("decode batch {b} exceeds max bucket");
+        }
+        let c = caches
+            .iter()
+            .map(|s| s.decode_bucket())
+            .max()
+            .unwrap_or(CACHE_BUCKETS[0]);
+
+        // Pad inputs and positions to the batch bucket.
+        let mut x = Tensor::zeros(vec![bb, self.cfg.hidden]);
+        x.data[..b * self.cfg.hidden].copy_from_slice(&xs.data);
+        let mut pos = vec![0i32; bb];
+        for (i, s) in caches.iter().enumerate() {
+            pos[i] = s.len() as i32;
+        }
+
+        let kvd = self.cfg.kv_dim();
+        let (kvh, hd) = (self.cfg.n_kv_heads, self.cfg.head_dim);
+        for layer in 0..self.cfg.n_layers {
+            let refs: Vec<&SequenceCache> = caches.iter().map(|c| &**c).collect();
+            // Single-copy gather straight into the padded [bb, c, kv, d]
+            // layout (perf iteration 2 — EXPERIMENTS.md §Perf).
+            let (mut kcb, mut vcb) = gather_batch_padded(&refs, layer, bb, c, kvd);
+            kcb.shape = vec![bb, c, kvh, hd];
+            vcb.shape = vec![bb, c, kvh, hd];
+
+            let pos_t = TensorI32::vec(pos.clone());
+            let wn = self.attn_weight_names(layer);
+            let out = self.execute_mixed(
+                &format!("attn_decode_b{bb}_c{c}"),
+                &[
+                    MixedArg::F32(&x),
+                    MixedArg::F32(&kcb),
+                    MixedArg::F32(&vcb),
+                    MixedArg::I32(&pos_t),
+                    MixedArg::Weight(&wn[0]),
+                    MixedArg::Weight(&wn[1]),
+                    MixedArg::Weight(&wn[2]),
+                    MixedArg::Weight(&wn[3]),
+                    MixedArg::Weight(&wn[4]),
+                ],
+            )?;
+            let (h_attn, k_new, v_new) = (&out[0], &out[1], &out[2]);
+            for (i, cache) in caches.iter_mut().enumerate() {
+                cache.layers[layer]
+                    .append(&k_new.data[i * kvd..(i + 1) * kvd], &v_new.data[i * kvd..(i + 1) * kvd]);
+            }
+
+            let attn_dev = cx.policy.attn_device(layer);
+            let mut attn_us = cx.hw.attn_decode_us;
+            if attn_dev == DeviceKind::Cpu {
+                attn_us *= cx.hw.attn_cpu_factor;
+            }
+            cx.charge_serial(attn_dev, attn_us);
+
+            x = h_attn.clone();
+            self.moe_layer(layer, &mut x, b, cx)?;
+        }
+        Ok(x.take_rows(b))
+    }
+
+    /// Final norm + LM head over `[n, hidden]` hidden states (n <= 16).
+    pub fn lm_head(&self, h: &Tensor, cx: &mut ExecContext) -> Result<Tensor> {
+        let n = h.shape[0];
+        let bucket = round_up_bucket(n, LMHEAD_BUCKETS);
+        let mut x = Tensor::zeros(vec![bucket, self.cfg.hidden]);
+        x.data[..n * self.cfg.hidden].copy_from_slice(&h.data);
+        let out = self.execute_mixed(
+            &format!("lm_head_b{bucket}"),
+            &[
+                MixedArg::F32(&x),
+                MixedArg::Weight("final_norm"),
+                MixedArg::Weight("lm_head"),
+            ],
+        )?;
+        cx.charge_serial(DeviceKind::Gpu, cx.hw.lm_head_us);
+        Ok(out[0].take_rows(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::artifacts_root;
+    use crate::scheduler::policy::FiddlerPolicy;
+
+    fn runner() -> ModelRunner {
+        ModelRunner::load(artifacts_root().join("mixtral-tiny")).expect("make artifacts")
+    }
+
+    fn cx(runner: &ModelRunner) -> ExecContext {
+        let hw = HardwareConfig::env1();
+        let profile = Profile::load(
+            runner.cfg.artifact_dir.join("analysis/analysis.json"),
+        )
+        .expect("analysis profile");
+        ExecContext::new(Box::new(FiddlerPolicy::default()), &hw, &runner.cfg, &profile, 0)
+    }
+
+    #[test]
+    fn prefill_fills_cache_and_advances_clock() {
+        let r = runner();
+        let mut cx = cx(&r);
+        let mut cache = SequenceCache::new(&r.cfg);
+        let tokens: Vec<u32> = (1..20).collect();
+        let h = r.prefill(&tokens, &mut cache, &mut cx).unwrap();
+        assert_eq!(h.shape, vec![1, r.cfg.hidden]);
+        assert_eq!(cache.len(), 19);
+        assert!(cx.clock.now_us() > 0.0);
+        assert!(cx.events.total() > 0);
+    }
+
+    #[test]
+    fn decode_step_appends_and_matches_shapes() {
+        let r = runner();
+        let mut cx = cx(&r);
+        let mut cache = SequenceCache::new(&r.cfg);
+        let tokens: Vec<u32> = (1..9).collect();
+        r.prefill(&tokens, &mut cache, &mut cx).unwrap();
+        let xs = r.ws.embed_tokens(&[42]);
+        let mut caches = [&mut cache];
+        let h = r.decode_step(&xs, &mut caches, &mut cx).unwrap();
+        assert_eq!(h.shape, vec![1, r.cfg.hidden]);
+        assert_eq!(caches[0].len(), 9);
+    }
+
+    #[test]
+    fn lm_head_shapes() {
+        let r = runner();
+        let mut cx = cx(&r);
+        let h = Tensor::zeros(vec![3, r.cfg.hidden]);
+        let logits = r.lm_head(&h, &mut cx).unwrap();
+        assert_eq!(logits.shape, vec![3, r.cfg.vocab]);
+    }
+}

@@ -1,0 +1,117 @@
+//! Host-side top-k expert selection (the gating decision itself is tiny;
+//! the paper's system reads the router output on the host anyway to learn
+//! per-expert input sizes — §3.3 "Execution").
+//!
+//! Semantics match `jax.lax.top_k` + renormalization in
+//! `python/compile/model.reference_forward`: descending by probability,
+//! ties broken by the lower expert index, weights renormalized to sum 1.
+
+/// Returns (expert ids, renormalized weights), both length k.
+pub fn top_k(probs: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
+    assert!(k > 0 && k <= probs.len(), "top_k: k={k} over {} experts", probs.len());
+    let mut idx: Vec<usize> = (0..probs.len()).collect();
+    // Stable sort by descending prob; stability gives jax's tie-by-index.
+    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    idx.truncate(k);
+    let total: f32 = idx.iter().map(|&i| probs[i]).sum();
+    let weights = idx
+        .iter()
+        .map(|&i| if total > 0.0 { probs[i] / total } else { 1.0 / k as f32 })
+        .collect();
+    (idx, weights)
+}
+
+/// Per-expert routing table for a batch of rows: `rows_for[e]` lists the
+/// (row, weight) pairs routed to expert `e`; `inp_size[e]` the counts —
+/// exactly Algorithm 1's `inp_size` array.
+#[derive(Clone, Debug)]
+pub struct Routing {
+    pub rows_for: Vec<Vec<(usize, f32)>>,
+    pub inp_size: Vec<usize>,
+}
+
+/// Route `n_rows` rows of gate probabilities (`[n_rows, n_experts]` flat)
+/// to their top-k experts.
+pub fn route(probs: &[f32], n_rows: usize, n_experts: usize, k: usize) -> Routing {
+    assert_eq!(probs.len(), n_rows * n_experts);
+    let mut rows_for = vec![Vec::new(); n_experts];
+    for r in 0..n_rows {
+        let row = &probs[r * n_experts..(r + 1) * n_experts];
+        let (ids, ws) = top_k(row, k);
+        for (e, w) in ids.into_iter().zip(ws) {
+            rows_for[e].push((r, w));
+        }
+    }
+    let inp_size = rows_for.iter().map(|v| v.len()).collect();
+    Routing { rows_for, inp_size }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Gen};
+
+    #[test]
+    fn picks_largest_and_renormalizes() {
+        let (ids, ws) = top_k(&[0.1, 0.6, 0.3], 2);
+        assert_eq!(ids, vec![1, 2]);
+        assert!((ws[0] - 0.6 / 0.9).abs() < 1e-6);
+        assert!((ws[1] - 0.3 / 0.9).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ties_break_by_lower_index() {
+        let (ids, _) = top_k(&[0.25, 0.25, 0.25, 0.25], 2);
+        assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn weights_sum_to_one_property() {
+        check("topk weights normalized", 256, |g: &mut Gen| {
+            let e = g.usize_in(2..17);
+            let k = g.usize_in(1..e + 1);
+            let probs = g.vec_f32(e..e + 1, 0.0, 1.0);
+            let (ids, ws) = top_k(&probs, k);
+            assert_eq!(ids.len(), k);
+            let mut uniq = ids.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), k, "duplicate experts");
+            let sum: f32 = ws.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-4, "weights sum {sum}");
+            // Selected experts have probs >= every unselected one.
+            let min_sel = ids.iter().map(|&i| probs[i]).fold(f32::INFINITY, f32::min);
+            for (i, &p) in probs.iter().enumerate() {
+                if !ids.contains(&i) {
+                    assert!(p <= min_sel + 1e-6);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn route_conserves_assignments_property() {
+        check("routing conservation", 128, |g: &mut Gen| {
+            let e = g.usize_in(2..12);
+            let k = g.usize_in(1..e.min(4) + 1);
+            let n = g.usize_in(1..50);
+            let probs = g.vec_f32(n * e..n * e + 1, 0.001, 1.0);
+            let r = route(&probs, n, e, k);
+            // Every row appears exactly k times across experts.
+            let total: usize = r.inp_size.iter().sum();
+            assert_eq!(total, n * k);
+            let mut per_row = vec![0usize; n];
+            for lst in &r.rows_for {
+                for &(row, w) in lst {
+                    per_row[row] += 1;
+                    assert!(w > 0.0 && w <= 1.0 + 1e-6);
+                }
+            }
+            assert!(per_row.iter().all(|&c| c == k));
+            // inp_size consistent with rows_for.
+            for (lst, &sz) in r.rows_for.iter().zip(&r.inp_size) {
+                assert_eq!(lst.len(), sz);
+            }
+        });
+    }
+}

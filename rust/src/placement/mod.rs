@@ -1,0 +1,143 @@
+//! Initialization-time expert placement (paper §3.1/§3.4).
+//!
+//! Non-expert layers always live on the GPU (their reservation is part of
+//! [`crate::config::HardwareConfig::non_expert_reserved_bytes`]); the expert
+//! budget is filled by one of three strategies:
+//!
+//! * `Popularity` — most-popular experts first (the paper's system),
+//! * `Random` — uniform random subset (Appendix C baseline),
+//! * `Worst` — least-popular first (Appendix C lower bound).
+
+use crate::config::serving::PlacementStrategy;
+use crate::hardware::memory::{ExpertId, GpuMemory};
+use crate::popularity::Profile;
+use crate::util::rng::Rng;
+
+/// Decide which experts to pin, without touching memory (pure function —
+/// property-tested).
+pub fn choose_experts(
+    profile: &Profile,
+    capacity: usize,
+    strategy: PlacementStrategy,
+    seed: u64,
+) -> Vec<ExpertId> {
+    let ranked = profile.ranked();
+    let k = capacity.min(ranked.len());
+    match strategy {
+        PlacementStrategy::Popularity => ranked[..k].to_vec(),
+        PlacementStrategy::Worst => {
+            let mut v = ranked[ranked.len() - k..].to_vec();
+            v.reverse(); // least popular first, deterministic
+            v
+        }
+        PlacementStrategy::Random => {
+            let mut rng = Rng::new(seed);
+            let mut all = ranked;
+            rng.shuffle(&mut all);
+            all.truncate(k);
+            all.sort_unstable();
+            all
+        }
+    }
+}
+
+/// Pin the chosen experts into GPU memory.
+pub fn place(
+    memory: &mut GpuMemory,
+    profile: &Profile,
+    strategy: PlacementStrategy,
+    seed: u64,
+) -> Vec<ExpertId> {
+    let chosen = choose_experts(profile, memory.capacity(), strategy, seed);
+    for &id in &chosen {
+        memory.pin(id);
+    }
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Gen};
+
+    fn skewed_profile(n_layers: usize, n_experts: usize, seed: u64) -> Profile {
+        let mut p = Profile::new(n_layers, n_experts);
+        let mut rng = Rng::new(seed);
+        for l in 0..n_layers {
+            for e in 0..n_experts {
+                p.counts[l][e] = rng.below(1000) + 1;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn popularity_picks_top_counts() {
+        let mut p = Profile::new(1, 4);
+        p.counts[0] = vec![5, 50, 500, 1];
+        let chosen = choose_experts(&p, 2, PlacementStrategy::Popularity, 0);
+        assert_eq!(chosen, vec![(0, 2), (0, 1)]);
+    }
+
+    #[test]
+    fn placement_respects_capacity_property() {
+        check("placement capacity", 128, |g: &mut Gen| {
+            let layers = g.usize_in(1..6);
+            let experts = g.usize_in(1..10);
+            let capacity = g.usize_in(0..layers * experts + 4);
+            let strategy = *g.choice(&[
+                PlacementStrategy::Popularity,
+                PlacementStrategy::Random,
+                PlacementStrategy::Worst,
+            ]);
+            let p = skewed_profile(layers, experts, g.u64());
+            let chosen = choose_experts(&p, capacity, strategy, g.u64());
+            assert!(chosen.len() == capacity.min(layers * experts));
+            // no duplicates
+            let mut dedup = chosen.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            assert_eq!(dedup.len(), chosen.len());
+            // all ids valid
+            assert!(chosen.iter().all(|&(l, e)| l < layers && e < experts));
+        });
+    }
+
+    #[test]
+    fn popularity_dominates_random_dominates_worst_property() {
+        check("placement hit-rate dominance", 64, |g: &mut Gen| {
+            let p = skewed_profile(g.usize_in(1..5), g.usize_in(2..9), g.u64());
+            let cap = g.usize_in(1..p.n_layers * p.n_experts);
+            let best =
+                p.expected_hit_rate(&choose_experts(&p, cap, PlacementStrategy::Popularity, 0));
+            let worst =
+                p.expected_hit_rate(&choose_experts(&p, cap, PlacementStrategy::Worst, 0));
+            let rand =
+                p.expected_hit_rate(&choose_experts(&p, cap, PlacementStrategy::Random, g.u64()));
+            assert!(best + 1e-12 >= rand, "best {best} < random {rand}");
+            assert!(rand + 1e-12 >= worst * 0.999999, "random {rand} < worst {worst}");
+        });
+    }
+
+    #[test]
+    fn place_pins_into_memory() {
+        let p = skewed_profile(2, 4, 7);
+        let mut mem = GpuMemory::with_capacity(3);
+        let chosen = place(&mut mem, &p, PlacementStrategy::Popularity, 0);
+        assert_eq!(chosen.len(), 3);
+        assert_eq!(mem.resident_count(), 3);
+        for id in chosen {
+            assert!(mem.is_pinned(id));
+        }
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let p = skewed_profile(3, 8, 1);
+        let a = choose_experts(&p, 10, PlacementStrategy::Random, 99);
+        let b = choose_experts(&p, 10, PlacementStrategy::Random, 99);
+        let c = choose_experts(&p, 10, PlacementStrategy::Random, 100);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,166 @@
+//! Expert-popularity profiling (paper §3.4 + Appendix C).
+//!
+//! Popularity is the per-(layer, expert) count of tokens routed to that
+//! expert on calibration data.  Sources:
+//!
+//! * the offline profile computed at build time by `python/compile/analysis.py`
+//!   (loaded from `artifacts/<model>/analysis/analysis.json`), or
+//! * online profiling: [`Profile::record`] calls from the engine.
+//!
+//! Also hosts the Appendix-C hit-rate analysis (expected hit rate of the
+//! best / worst / random placement under the profile).
+
+use crate::util::json::{self, Json};
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Clone, Debug)]
+pub struct Profile {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// counts[layer][expert]
+    pub counts: Vec<Vec<u64>>,
+}
+
+impl Profile {
+    pub fn new(n_layers: usize, n_experts: usize) -> Profile {
+        Profile { n_layers, n_experts, counts: vec![vec![0; n_experts]; n_layers] }
+    }
+
+    /// Load the build-time profile from the analysis JSON.
+    pub fn load(analysis_path: impl AsRef<Path>) -> Result<Profile> {
+        let v = json::load(analysis_path)?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Json) -> Result<Profile> {
+        let rows = v.get("popularity_counts")?.as_arr()?;
+        let counts: Vec<Vec<u64>> = rows
+            .iter()
+            .map(|r| {
+                Ok(r.as_arr()?
+                    .iter()
+                    .map(|c| Ok(c.as_f64()? as u64))
+                    .collect::<Result<Vec<u64>>>()?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!counts.is_empty(), "empty popularity profile");
+        let n_experts = counts[0].len();
+        anyhow::ensure!(
+            counts.iter().all(|r| r.len() == n_experts),
+            "ragged popularity profile"
+        );
+        Ok(Profile { n_layers: counts.len(), n_experts, counts })
+    }
+
+    pub fn record(&mut self, layer: usize, expert: usize, tokens: u64) {
+        self.counts[layer][expert] += tokens;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.counts.iter().flatten().sum()
+    }
+
+    /// All experts sorted by popularity, most popular first; ties broken by
+    /// (layer, expert) for determinism.
+    pub fn ranked(&self) -> Vec<(usize, usize)> {
+        let mut ids: Vec<(usize, usize)> = (0..self.n_layers)
+            .flat_map(|l| (0..self.n_experts).map(move |e| (l, e)))
+            .collect();
+        ids.sort_by_key(|&(l, e)| (std::cmp::Reverse(self.counts[l][e]), l, e));
+        ids
+    }
+
+    /// Normalized popularity (most popular = 1.0), like the paper's Fig. 8.
+    pub fn normalized(&self) -> Vec<Vec<f64>> {
+        let maxc = self.counts.iter().flatten().copied().max().unwrap_or(1).max(1);
+        self.counts
+            .iter()
+            .map(|row| row.iter().map(|&c| c as f64 / maxc as f64).collect())
+            .collect()
+    }
+
+    /// Expected hit rate when the given experts are on the GPU: the
+    /// probability that a routed token finds its expert resident, weighted
+    /// by the profile (Appendix C).
+    pub fn expected_hit_rate(&self, resident: &[(usize, usize)]) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 0.0;
+        }
+        let hit: u64 = resident.iter().map(|&(l, e)| self.counts[l][e]).sum();
+        hit as f64 / total as f64
+    }
+
+    /// Appendix-C style analysis for a capacity: (best, worst, random)
+    /// expected hit rates.
+    pub fn hit_rate_analysis(&self, capacity: usize) -> (f64, f64, f64) {
+        let ranked = self.ranked();
+        let k = capacity.min(ranked.len());
+        let best: Vec<_> = ranked[..k].to_vec();
+        let worst: Vec<_> = ranked[ranked.len() - k..].to_vec();
+        let random = k as f64 / ranked.len() as f64; // expectation over uniform draws
+        (
+            self.expected_hit_rate(&best),
+            self.expected_hit_rate(&worst),
+            random,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> Profile {
+        let mut p = Profile::new(2, 4);
+        // layer 0: expert 0 hot; layer 1: expert 3 hot
+        p.counts[0] = vec![100, 10, 10, 10];
+        p.counts[1] = vec![5, 5, 5, 85];
+        p
+    }
+
+    #[test]
+    fn ranked_orders_by_count() {
+        let p = profile();
+        let r = p.ranked();
+        assert_eq!(r[0], (0, 0));
+        assert_eq!(r[1], (1, 3));
+        assert_eq!(r.len(), 8);
+    }
+
+    #[test]
+    fn hit_rates_ordered_best_random_worst() {
+        let p = profile();
+        let (best, worst, random) = p.hit_rate_analysis(2);
+        assert!(best > random, "best {best} <= random {random}");
+        assert!(random > worst, "random {random} <= worst {worst}");
+        // best 2 = 100 + 85 = 185 of 230
+        assert!((best - 185.0 / 230.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn record_accumulates() {
+        let mut p = Profile::new(1, 2);
+        p.record(0, 1, 5);
+        p.record(0, 1, 2);
+        assert_eq!(p.counts[0][1], 7);
+        assert_eq!(p.total(), 7);
+    }
+
+    #[test]
+    fn normalized_max_is_one() {
+        let p = profile();
+        let n = p.normalized();
+        let flat: Vec<f64> = n.iter().flatten().copied().collect();
+        assert!((flat.iter().cloned().fold(0.0, f64::max) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(r#"{"popularity_counts": [[1, 2], [3, 4]]}"#).unwrap();
+        let p = Profile::from_json(&j).unwrap();
+        assert_eq!(p.n_layers, 2);
+        assert_eq!(p.counts[1][0], 3);
+    }
+}

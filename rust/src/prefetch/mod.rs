@@ -1,0 +1,289 @@
+//! Speculative cross-layer expert prefetching — an extension beyond the
+//! paper (its related work: MoE-Infinity's activation-aware offloading and
+//! Mixtral-Offloading's speculative loading do this; Fiddler §5 leaves it
+//! open).
+//!
+//! Offline, the calibration pass records cross-layer routing transitions:
+//! `T[l][i][j]` = tokens routed to expert `i` at layer `l` AND expert `j`
+//! at layer `l+1` (python/compile/analysis.py).  At runtime, once layer
+//! `l`'s routing is known, the predictor scores layer-`l+1` experts by the
+//! transition mass from the active experts and prefetches the top
+//! predictions over PCIe, overlapping the transfer with layer `l`'s
+//! compute.  A prefetched expert only counts as resident once its transfer
+//! has *completed* on the (serialized) PCIe lane — modeled by per-expert
+//! ready timestamps.
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Cross-layer routing transition profile.
+#[derive(Clone, Debug)]
+pub struct TransitionProfile {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    /// counts[l][i][j], l in 0..n_layers-1
+    pub counts: Vec<Vec<Vec<u64>>>,
+}
+
+impl TransitionProfile {
+    pub fn from_json(v: &Json) -> Result<TransitionProfile> {
+        let t = v.get("transition_counts")?.as_arr()?;
+        let counts: Vec<Vec<Vec<u64>>> = t
+            .iter()
+            .map(|l| {
+                Ok(l.as_arr()?
+                    .iter()
+                    .map(|r| {
+                        Ok(r.as_arr()?
+                            .iter()
+                            .map(|c| Ok(c.as_f64()? as u64))
+                            .collect::<Result<Vec<u64>>>()?)
+                    })
+                    .collect::<Result<Vec<_>>>()?)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        anyhow::ensure!(!counts.is_empty(), "empty transition profile");
+        let n_experts = counts[0].len();
+        Ok(TransitionProfile { n_layers: counts.len() + 1, n_experts, counts })
+    }
+
+    pub fn load(analysis_path: impl AsRef<std::path::Path>) -> Result<TransitionProfile> {
+        let v = crate::util::json::load(analysis_path)?;
+        Self::from_json(&v)
+    }
+
+    /// Uniform profile (predictor degenerates to popularity-free guessing);
+    /// useful as a control in tests/ablations.
+    pub fn uniform(n_layers: usize, n_experts: usize) -> TransitionProfile {
+        TransitionProfile {
+            n_layers,
+            n_experts,
+            counts: vec![vec![vec![1; n_experts]; n_experts]; n_layers - 1],
+        }
+    }
+
+    /// Score layer-`l+1` experts given the active experts (with token
+    /// counts) at layer `l`; returns expert indices sorted by descending
+    /// predicted mass.
+    pub fn predict_next(&self, layer: usize, inp_size: &[usize]) -> Vec<usize> {
+        assert!(layer + 1 < self.n_layers, "no transitions out of the last layer");
+        assert_eq!(inp_size.len(), self.n_experts);
+        let t = &self.counts[layer];
+        let mut score = vec![0f64; self.n_experts];
+        for (i, &s) in inp_size.iter().enumerate() {
+            if s == 0 {
+                continue;
+            }
+            for (j, sc) in score.iter_mut().enumerate() {
+                *sc += s as f64 * t[i][j] as f64;
+            }
+        }
+        let mut idx: Vec<usize> = (0..self.n_experts).collect();
+        idx.sort_by(|&a, &b| score[b].partial_cmp(&score[a]).unwrap().then(a.cmp(&b)));
+        idx
+    }
+
+    /// Top-1 prediction accuracy against an observed (cur, next) routing
+    /// pair — used by tests and the ablation driver.
+    pub fn hits_in_top_m(&self, layer: usize, cur: &[usize], next: &[usize], m: usize) -> usize {
+        let pred = self.predict_next(layer, cur);
+        pred[..m.min(pred.len())]
+            .iter()
+            .filter(|&&j| next[j] > 0)
+            .count()
+    }
+}
+
+/// Fiddler + speculative next-layer prefetching.
+///
+/// Wraps the paper's policy; after layer `l`'s routing is known it issues
+/// PCIe transfers for the top-`depth` predicted layer-`l+1` experts that
+/// are not resident.  The PCIe lane is serialized: a prefetched expert is
+/// usable only once its transfer completes; plan_layer treats still-in-
+/// flight experts as non-resident (Algorithm 1 then falls back to CPU or
+/// synchronous transfer as usual).
+pub struct PrefetchingFiddlerPolicy {
+    inner: crate::scheduler::policy::FiddlerPolicy,
+    transitions: TransitionProfile,
+    /// How many predicted experts to prefetch per layer.
+    pub depth: usize,
+    pcie_free_us: f64,
+    /// Transfer-completion times of in-flight/prefetched experts.
+    pending: std::collections::HashMap<crate::hardware::memory::ExpertId, f64>,
+    pub prefetches: u64,
+    pub prefetch_hits: u64,
+}
+
+impl PrefetchingFiddlerPolicy {
+    pub fn new(transitions: TransitionProfile, depth: usize) -> Self {
+        PrefetchingFiddlerPolicy {
+            inner: crate::scheduler::policy::FiddlerPolicy::default(),
+            transitions,
+            depth,
+            pcie_free_us: 0.0,
+            pending: Default::default(),
+            prefetches: 0,
+            prefetch_hits: 0,
+        }
+    }
+}
+
+impl crate::scheduler::policy::ExecPolicy for PrefetchingFiddlerPolicy {
+    fn name(&self) -> &'static str {
+        "fiddler-prefetch"
+    }
+
+    fn init(
+        &mut self,
+        memory: &mut crate::hardware::memory::GpuMemory,
+        profile: &crate::popularity::Profile,
+        seed: u64,
+    ) {
+        // Pin popular experts like Fiddler, but leave `2 * depth` unpinned
+        // slots as the prefetch working set (a fully-pinned memory would
+        // reject every speculative fetch).
+        let reserve = (2 * self.depth).min(memory.capacity().saturating_sub(1));
+        let chosen = crate::placement::choose_experts(
+            profile,
+            memory.capacity().saturating_sub(reserve),
+            self.inner.placement,
+            seed,
+        );
+        for id in chosen {
+            memory.pin(id);
+        }
+    }
+
+    fn plan_layer(
+        &mut self,
+        layer: usize,
+        inp_size: &[usize],
+        memory: &mut crate::hardware::memory::GpuMemory,
+        lat: &crate::latency::LatencyModel,
+        now_us: f64,
+    ) -> Vec<Option<crate::scheduler::ExpertPlan>> {
+        use crate::scheduler::{decide_expert, ExpertPlan};
+        inp_size
+            .iter()
+            .enumerate()
+            .map(|(j, &s)| {
+                let id = (layer, j);
+                // In-flight prefetches do not count as resident yet.
+                let ready = self.pending.get(&id).map(|&r| r <= now_us).unwrap_or(true);
+                let resident = memory.is_resident(id) && ready;
+                let plan = decide_expert(resident, s, lat);
+                if matches!(plan, Some(ExpertPlan::GpuResident)) {
+                    memory.touch(id);
+                    if self.pending.remove(&id).is_some() {
+                        self.prefetch_hits += 1;
+                    }
+                }
+                plan
+            })
+            .collect()
+    }
+
+    fn post_layer(
+        &mut self,
+        layer: usize,
+        inp_size: &[usize],
+        memory: &mut crate::hardware::memory::GpuMemory,
+        lat: &crate::latency::LatencyModel,
+        now_us: f64,
+    ) {
+        if layer + 1 >= self.transitions.n_layers {
+            return;
+        }
+        let predictions = self.transitions.predict_next(layer, inp_size);
+        for &j in predictions.iter().take(self.depth) {
+            let id = (layer + 1, j);
+            if memory.is_resident(id) {
+                continue;
+            }
+            // Serialized PCIe lane, overlapping this layer's compute.
+            let start = self.pcie_free_us.max(now_us);
+            let ready = start + lat.transfer_lat();
+            self.pcie_free_us = ready;
+            memory.fetch(id);
+            self.pending.insert(id, ready);
+            self.prefetches += 1;
+        }
+    }
+
+    fn expert_cost_us(
+        &self,
+        plan: crate::scheduler::ExpertPlan,
+        s: usize,
+        lat: &crate::latency::LatencyModel,
+    ) -> f64 {
+        self.inner.expert_cost_us(plan, s, lat)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag_profile() -> TransitionProfile {
+        // Expert i at layer l strongly predicts expert i at layer l+1.
+        let e = 4;
+        let mut counts = vec![vec![vec![1u64; e]; e]; 2];
+        for l in 0..2 {
+            for i in 0..e {
+                counts[l][i][i] = 100;
+            }
+        }
+        TransitionProfile { n_layers: 3, n_experts: e, counts }
+    }
+
+    #[test]
+    fn predicts_diagonal() {
+        let p = diag_profile();
+        let pred = p.predict_next(0, &[5, 0, 0, 0]);
+        assert_eq!(pred[0], 0);
+        let pred = p.predict_next(1, &[0, 0, 3, 2]);
+        assert!(pred[..2].contains(&2) && pred[..2].contains(&3));
+    }
+
+    #[test]
+    fn uniform_profile_is_deterministic_order() {
+        let p = TransitionProfile::uniform(3, 4);
+        assert_eq!(p.predict_next(0, &[1, 1, 0, 0]), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"transition_counts": [[[1, 2], [3, 4]], [[5, 6], [7, 8]]]}"#,
+        )
+        .unwrap();
+        let p = TransitionProfile::from_json(&j).unwrap();
+        assert_eq!(p.n_layers, 3);
+        assert_eq!(p.n_experts, 2);
+        assert_eq!(p.counts[1][1][0], 7);
+    }
+
+    #[test]
+    fn hits_counts_overlap() {
+        let p = diag_profile();
+        let cur = [4, 0, 0, 0];
+        let next = [1, 0, 0, 1];
+        assert_eq!(p.hits_in_top_m(0, &cur, &next, 1), 1); // predicts 0, active
+    }
+
+    #[test]
+    fn real_profile_beats_uniform_on_selfconsistency() {
+        // The build-time profile must predict its own marginals better
+        // than a uniform profile on skewed input.
+        let path = crate::config::model::artifacts_root()
+            .join("mixtral-tiny/analysis/analysis.json");
+        let p = TransitionProfile::load(path).expect("make artifacts first");
+        // Use the most popular layer-0 expert as the observation.
+        let inp: Vec<usize> = (0..p.n_experts).map(|e| usize::from(e == 0) * 8).collect();
+        let pred = p.predict_next(0, &inp);
+        // Prediction must be a permutation.
+        let mut sorted = pred.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..p.n_experts).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,237 @@
+//! Int8 expert-weight quantization substrate.
+//!
+//! The paper (§2.2) treats compression as orthogonal to Fiddler and notes
+//! it "could be applied on top".  This module demonstrates that claim:
+//! expert matrices are stored symmetric-per-column int8 (exported by
+//! `python/compile/export_weights.quantize_int8`), halving—vs the bf16
+//! baseline—the PCIe transfer volume and the DRAM pass of the CPU kernel,
+//! and doubling the GPU expert capacity.  [`HardwareConfig::quantized`]
+//! (constructed via [`quantized_hw`]) feeds those effects into the latency
+//! model; `examples/ablation_quant.rs` measures the end-to-end impact and
+//! the quantization error.
+
+use crate::config::HardwareConfig;
+use crate::runtime::Tensor;
+use crate::util::json::{self};
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// An int8 per-column-quantized 2-D weight.
+#[derive(Clone, Debug)]
+pub struct QuantTensor {
+    pub shape: Vec<usize>, // [rows, cols]
+    pub data: Vec<i8>,
+    pub scales: Vec<f32>, // one per column
+}
+
+impl QuantTensor {
+    /// Quantize an f32 tensor (mirror of the Python exporter; used in
+    /// tests and for on-the-fly quantization of arbitrary tensors).
+    pub fn quantize(t: &Tensor) -> QuantTensor {
+        assert_eq!(t.rank(), 2, "quantize expects rank-2, got {:?}", t.shape);
+        let (rows, cols) = (t.shape[0], t.shape[1]);
+        let mut scales = vec![1.0f32; cols];
+        for c in 0..cols {
+            let mut amax = 0.0f32;
+            for r in 0..rows {
+                amax = amax.max(t.data[r * cols + c].abs());
+            }
+            scales[c] = if amax > 0.0 { amax / 127.0 } else { 1.0 };
+        }
+        let mut data = vec![0i8; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                let q = (t.data[r * cols + c] / scales[c]).round();
+                data[r * cols + c] = q.clamp(-127.0, 127.0) as i8;
+            }
+        }
+        QuantTensor { shape: t.shape.clone(), data, scales }
+    }
+
+    pub fn dequantize(&self) -> Tensor {
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let mut out = Tensor::zeros(self.shape.clone());
+        for r in 0..rows {
+            for c in 0..cols {
+                out.data[r * cols + c] = self.data[r * cols + c] as f32 * self.scales[c];
+            }
+        }
+        out
+    }
+
+    /// Worst-case absolute error of dequantization for column `c`:
+    /// half a quantization step.
+    pub fn max_abs_err(&self, c: usize) -> f32 {
+        0.5 * self.scales[c]
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.data.len() + 4 * self.scales.len()
+    }
+}
+
+/// All quantized expert tensors of one model.
+pub struct QuantWeightStore {
+    tensors: BTreeMap<String, QuantTensor>,
+}
+
+impl QuantWeightStore {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<QuantWeightStore> {
+        let dir = artifact_dir.as_ref();
+        let manifest = json::load(dir.join("weights_manifest.json"))?;
+        let mut tensors = BTreeMap::new();
+        for (name, desc) in manifest.get("quant_tensors")?.as_obj()? {
+            let shape = desc.get("shape")?.as_usize_vec()?;
+            let n: usize = shape.iter().product();
+            let qpath = dir.join(desc.get("q_file")?.as_str()?);
+            let qbytes = std::fs::read(&qpath)
+                .with_context(|| format!("reading {}", qpath.display()))?;
+            anyhow::ensure!(qbytes.len() == n, "quant tensor {name} size mismatch");
+            let spath = dir.join(desc.get("scale_file")?.as_str()?);
+            let sbytes = std::fs::read(&spath)
+                .with_context(|| format!("reading {}", spath.display()))?;
+            anyhow::ensure!(sbytes.len() == 4 * shape[1], "scales {name} size mismatch");
+            let scales = sbytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(
+                name.clone(),
+                QuantTensor {
+                    shape,
+                    data: qbytes.into_iter().map(|b| b as i8).collect(),
+                    scales,
+                },
+            );
+        }
+        anyhow::ensure!(!tensors.is_empty(), "no quant_tensors in manifest");
+        Ok(QuantWeightStore { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&QuantTensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing quant tensor {name:?}"))
+    }
+
+    pub fn expert(&self, layer: usize, expert: usize, name: &str) -> Result<&QuantTensor> {
+        self.get(&format!("layers.{layer}.experts.{expert}.{name}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
+
+/// Host expert FFN over quantized weights: dequantize into scratch, run
+/// the blocked f32 kernel (the dequant pass is one linear sweep — tiny
+/// next to the GEMM, matching real int8 CPU paths that upcast per tile).
+pub fn expert_ffn_host_q8(
+    x: &Tensor,
+    w1: &QuantTensor,
+    w3: &QuantTensor,
+    w2: &QuantTensor,
+) -> Tensor {
+    crate::cpukernel::expert_ffn_host(x, &w1.dequantize(), &w3.dequantize(), &w2.dequantize())
+}
+
+/// Hardware environment with int8 expert weights: half the transfer bytes
+/// (transfer_lat halves), half the CPU weight-read floor, double the
+/// expert capacity.
+pub fn quantized_hw(hw: &HardwareConfig) -> HardwareConfig {
+    let mut q = hw.clone();
+    q.name = format!("{}-int8", hw.name);
+    q.expert_weight_bytes = hw.expert_weight_bytes / 2;
+    q.cpu_expert_base_us = hw.cpu_expert_base_us / 2.0;
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::artifacts_root;
+    use crate::runtime::WeightStore;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: (0..n).map(|_| rng.normal() as f32 * scale).collect() }
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let mut rng = Rng::new(0);
+        let t = rand_t(&mut rng, vec![32, 16], 0.3);
+        let q = QuantTensor::quantize(&t);
+        let d = q.dequantize();
+        for c in 0..16 {
+            for r in 0..32 {
+                let err = (t.data[r * 16 + c] - d.data[r * 16 + c]).abs();
+                assert!(err <= q.max_abs_err(c) + 1e-6, "err {err} at ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_preserves_extremes() {
+        let t = Tensor::new(vec![2, 1], vec![-1.27, 1.27]).unwrap();
+        let q = QuantTensor::quantize(&t);
+        assert_eq!(q.data, vec![-127, 127]);
+        let d = q.dequantize();
+        assert!((d.data[1] - 1.27).abs() < 1e-6);
+    }
+
+    #[test]
+    fn loads_python_exported_quants_and_matches_f32() {
+        let dir = artifacts_root().join("mixtral-tiny");
+        let qs = QuantWeightStore::load(&dir).expect("make artifacts first");
+        let ws = WeightStore::load(&dir).unwrap();
+        // 3 tensors per expert
+        assert_eq!(qs.len(), ws.config.total_experts() * 3);
+        let w1 = ws.expert(0, 0, "w1");
+        let q1 = qs.expert(0, 0, "w1").unwrap();
+        assert_eq!(q1.shape, w1.shape);
+        let deq = q1.dequantize();
+        // Max dequant error bounded by half a step of the largest column.
+        let max_scale = q1.scales.iter().cloned().fold(0.0f32, f32::max);
+        assert!(deq.max_abs_diff(w1) <= 0.5 * max_scale + 1e-6);
+    }
+
+    #[test]
+    fn q8_expert_kernel_close_to_f32() {
+        let dir = artifacts_root().join("mixtral-tiny");
+        let qs = QuantWeightStore::load(&dir).unwrap();
+        let ws = WeightStore::load(&dir).unwrap();
+        let mut rng = Rng::new(5);
+        let x = rand_t(&mut rng, vec![3, ws.config.hidden], 0.5);
+        let f32_out = crate::cpukernel::expert_ffn_host(
+            &x,
+            ws.expert(2, 1, "w1"),
+            ws.expert(2, 1, "w3"),
+            ws.expert(2, 1, "w2"),
+        );
+        let q8_out = expert_ffn_host_q8(
+            &x,
+            qs.expert(2, 1, "w1").unwrap(),
+            qs.expert(2, 1, "w3").unwrap(),
+            qs.expert(2, 1, "w2").unwrap(),
+        );
+        let rel = q8_out.max_abs_diff(&f32_out)
+            / f32_out.data.iter().fold(0.0f32, |a, v| a.max(v.abs()));
+        assert!(rel < 0.05, "relative quant error too large: {rel}");
+    }
+
+    #[test]
+    fn quantized_hw_doubles_capacity_halves_transfer() {
+        let hw = HardwareConfig::env1();
+        let q = quantized_hw(&hw);
+        assert_eq!(q.gpu_expert_capacity(), 113); // vs 56 fp16
+        assert!(q.gpu_expert_capacity() >= 2 * hw.gpu_expert_capacity());
+        assert!(q.weight_transfer_us() < 0.55 * hw.weight_transfer_us());
+    }
+}

@@ -1,0 +1,12 @@
+//! Runtime: PJRT CPU client + artifact registry + weights + host tensors.
+//!
+//! Python never appears here — artifacts were lowered at build time and this
+//! module is the only place that touches XLA.
+
+pub mod registry;
+pub mod tensor;
+pub mod weights;
+
+pub use registry::{OpSpec, Runtime, RuntimeStats};
+pub use tensor::{Arg, Tensor, TensorI32};
+pub use weights::WeightStore;

@@ -1,0 +1,378 @@
+//! Executable registry: lazily compiles `artifacts/<model>/hlo/*.hlo.txt`
+//! on the PJRT CPU client and executes them with host tensors.
+//!
+//! This is the AOT bridge of the three-layer architecture: python lowered
+//! each entry point to HLO text once at build time; here we parse the text
+//! (`HloModuleProto::from_text_file` — the text parser reassigns the 64-bit
+//! instruction ids jax >= 0.5 emits, which xla_extension 0.5.1 would reject
+//! in proto form), compile once per (op, shape-bucket), and cache.
+
+use super::tensor::{Arg, Tensor};
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Shape/dtype description of one op from artifacts_manifest.json.
+#[derive(Clone, Debug)]
+pub struct OpSpec {
+    pub file: String,
+    pub params: Vec<(Vec<usize>, &'static str)>,
+    pub outputs: Vec<(Vec<usize>, &'static str)>,
+}
+
+fn parse_shape_desc(v: &Json) -> Result<(Vec<usize>, &'static str)> {
+    let shape = v.get("shape")?.as_usize_vec()?;
+    let dtype = match v.get("dtype")?.as_str()? {
+        "f32" => "f32",
+        "i32" => "i32",
+        other => bail!("unsupported dtype {other:?} in manifest"),
+    };
+    Ok((shape, dtype))
+}
+
+/// Cumulative execution statistics (used by the perf pass).
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compile_count: u64,
+    pub compile_wall_us: u64,
+    pub execute_wall_us: u64,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    ops: BTreeMap<String, OpSpec>,
+    executables: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifact directory of one model and connect a CPU PJRT client.
+    pub fn open(artifact_dir: impl Into<PathBuf>) -> Result<Runtime> {
+        let artifact_dir = artifact_dir.into();
+        let manifest = json::load(artifact_dir.join("artifacts_manifest.json"))
+            .with_context(|| format!("opening runtime at {}", artifact_dir.display()))?;
+        let mut ops = BTreeMap::new();
+        for (name, desc) in manifest.get("ops")?.as_obj()? {
+            let params = desc
+                .get("params")?
+                .as_arr()?
+                .iter()
+                .map(parse_shape_desc)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = desc
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(parse_shape_desc)
+                .collect::<Result<Vec<_>>>()?;
+            ops.insert(
+                name.clone(),
+                OpSpec { file: desc.get("file")?.as_str()?.to_string(), params, outputs },
+            );
+        }
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            artifact_dir,
+            ops,
+            executables: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn op_names(&self) -> Vec<String> {
+        self.ops.keys().cloned().collect()
+    }
+
+    pub fn has_op(&self, name: &str) -> bool {
+        self.ops.contains_key(name)
+    }
+
+    pub fn op_spec(&self, name: &str) -> Result<&OpSpec> {
+        self.ops
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown op {name:?} in {}", self.artifact_dir.display()))
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Compile (or fetch cached) the executable for `op`.
+    fn executable(&self, op: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(op) {
+            return Ok(exe.clone());
+        }
+        let spec = self.op_spec(op)?;
+        let path = self.artifact_dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow::anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {op}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compile_count += 1;
+            st.compile_wall_us += t0.elapsed().as_micros() as u64;
+        }
+        let mut cache = self.executables.lock().unwrap();
+        Ok(cache.entry(op.to_string()).or_insert(exe).clone())
+    }
+
+    /// Pre-compile a set of ops (startup warm-up).
+    pub fn warmup(&self, ops: &[&str]) -> Result<()> {
+        for op in ops {
+            self.executable(op)?;
+        }
+        Ok(())
+    }
+
+    fn literal(arg: &Arg) -> Result<xla::Literal> {
+        // Safety: f32/i32 slices reinterpreted as bytes; x86-64 is little
+        // endian, matching the on-disk and XLA layouts.
+        let (ty, dims, bytes): (xla::ElementType, &[usize], &[u8]) = match arg {
+            Arg::F32(t) => (xla::ElementType::F32, &t.shape, unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            }),
+            Arg::I32(t) => (xla::ElementType::S32, &t.shape, unsafe {
+                std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+            }),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, dims, bytes)
+            .map_err(|e| anyhow::anyhow!("creating literal: {e:?}"))
+    }
+
+    /// Upload a tensor to a device-resident buffer (used to pin weights
+    /// once instead of re-serializing them on every call — the L3 perf
+    /// optimization recorded in EXPERIMENTS.md §Perf).
+    pub fn buffer_from_tensor(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("uploading f32 buffer: {e:?}"))
+    }
+
+    pub fn buffer_from_i32(&self, t: &crate::runtime::TensorI32) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(&t.data, &t.shape, None)
+            .map_err(|e| anyhow::anyhow!("uploading i32 buffer: {e:?}"))
+    }
+
+    /// Execute `op` with pre-uploaded device buffers (weights cached across
+    /// calls; activations uploaded per call by the caller).  Shape checking
+    /// is the caller's responsibility on this fast path.
+    pub fn execute_buffers(
+        &self,
+        op: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<Tensor>> {
+        let spec = self.op_spec(op)?;
+        if args.len() != spec.params.len() {
+            bail!("op {op}: expected {} args, got {}", spec.params.len(), args.len());
+        }
+        let exe = self.executable(op)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow::anyhow!("executing {op}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {op} result: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {op} result: {e:?}"))?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.execute_wall_us += t0.elapsed().as_micros() as u64;
+        }
+        if tuple.len() != spec.outputs.len() {
+            bail!(
+                "op {op}: manifest promises {} outputs, executable returned {}",
+                spec.outputs.len(),
+                tuple.len()
+            );
+        }
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, (shape, _)) in tuple.iter().zip(&spec.outputs) {
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            lit.copy_raw_to(&mut data)
+                .map_err(|e| anyhow::anyhow!("reading {op} output: {e:?}"))?;
+            out.push(Tensor::new(shape.clone(), data)?);
+        }
+        Ok(out)
+    }
+
+    /// Execute `op` with `args`; returns the output tensors (all f32 —
+    /// every entry point returns f32 tuples).
+    pub fn execute(&self, op: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let spec = self.op_spec(op)?;
+        if args.len() != spec.params.len() {
+            bail!(
+                "op {op}: expected {} args, got {}",
+                spec.params.len(),
+                args.len()
+            );
+        }
+        for (i, (arg, (shape, dtype))) in args.iter().zip(&spec.params).enumerate() {
+            if arg.shape() != shape.as_slice() || arg.dtype() != *dtype {
+                bail!(
+                    "op {op} arg {i}: expected {dtype} {shape:?}, got {} {:?}",
+                    arg.dtype(),
+                    arg.shape()
+                );
+            }
+        }
+        let exe = self.executable(op)?;
+        let literals = args.iter().map(Self::literal).collect::<Result<Vec<_>>>()?;
+
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {op}: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {op} result: {e:?}"))?
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {op} result: {e:?}"))?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.execute_wall_us += t0.elapsed().as_micros() as u64;
+        }
+
+        if tuple.len() != spec.outputs.len() {
+            bail!(
+                "op {op}: manifest promises {} outputs, executable returned {}",
+                spec.outputs.len(),
+                tuple.len()
+            );
+        }
+        let mut out = Vec::with_capacity(tuple.len());
+        for (lit, (shape, _)) in tuple.iter().zip(&spec.outputs) {
+            let data = lit
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("reading {op} output: {e:?}"))?;
+            out.push(Tensor::new(shape.clone(), data)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::model::artifacts_root;
+    use crate::runtime::tensor::TensorI32;
+
+    fn rt() -> Runtime {
+        Runtime::open(artifacts_root().join("mixtral-tiny")).expect("make artifacts first")
+    }
+
+    #[test]
+    fn manifest_parses_and_lists_ops() {
+        let rt = rt();
+        assert!(rt.has_op("expert_b1"));
+        assert!(rt.has_op("attn_prefill_s32"));
+        assert!(rt.has_op("attn_decode_b1_c128"));
+        assert!(rt.has_op("gate_b16"));
+        assert!(rt.has_op("lm_head_b1"));
+        assert!(!rt.has_op("nonexistent"));
+    }
+
+    #[test]
+    fn execute_expert_matches_scaling_property() {
+        // expert(0) == 0 — zero rows must map to zero rows.
+        let rt = rt();
+        let spec = rt.op_spec("expert_b2").unwrap().clone();
+        let h = spec.params[0].0[1];
+        let f = spec.params[1].0[1];
+        let x = Tensor::zeros(vec![2, h]);
+        let w1 = Tensor::new(vec![h, f], (0..h * f).map(|i| (i % 7) as f32 * 0.01).collect()).unwrap();
+        let w3 = w1.clone();
+        let w2 = Tensor::new(vec![f, h], (0..h * f).map(|i| (i % 5) as f32 * 0.01).collect()).unwrap();
+        let out = rt
+            .execute("expert_b2", &[x.into(), w1.into(), w3.into(), w2.into()])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].data.iter().all(|v| v.abs() < 1e-6));
+    }
+
+    #[test]
+    fn execute_rejects_shape_mismatch() {
+        let rt = rt();
+        let bad = Tensor::zeros(vec![3, 3]);
+        let err = rt
+            .execute("expert_b1", &[bad.clone().into(), bad.clone().into(), bad.clone().into(), bad.into()])
+            .unwrap_err();
+        assert!(format!("{err}").contains("expected"));
+    }
+
+    #[test]
+    fn gate_probs_sum_to_one() {
+        let rt = rt();
+        let spec = rt.op_spec("gate_b4").unwrap().clone();
+        let h = spec.params[0].0[1];
+        let e = spec.params[2].0[1];
+        let x = Tensor::new(vec![4, h], (0..4 * h).map(|i| (i as f32 * 0.01).sin()).collect()).unwrap();
+        let nrm = Tensor::new(vec![h], vec![1.0; h]).unwrap();
+        let wg = Tensor::new(vec![h, e], (0..h * e).map(|i| (i as f32 * 0.1).cos() * 0.2).collect()).unwrap();
+        let out = rt.execute("gate_b4", &[x.into(), nrm.into(), wg.into()]).unwrap();
+        assert_eq!(out.len(), 2);
+        let probs = &out[0];
+        for r in 0..4 {
+            let s: f32 = probs.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "row {r} sums to {s}");
+        }
+    }
+
+    #[test]
+    fn decode_op_accepts_i32_positions() {
+        let rt = rt();
+        let spec = rt.op_spec("attn_decode_b1_c128").unwrap().clone();
+        let h = spec.params[0].0[1];
+        let (c, kv, d) = (spec.params[1].0[1], spec.params[1].0[2], spec.params[1].0[3]);
+        let qd = spec.params[5].0[1]; // wq: [h, n_heads*head_dim]
+        let args: Vec<Arg> = vec![
+            Tensor::zeros(vec![1, h]).into(),
+            Tensor::zeros(vec![1, c, kv, d]).into(),
+            Tensor::zeros(vec![1, c, kv, d]).into(),
+            TensorI32::vec(vec![0]).into(),
+            Tensor::new(vec![h], vec![1.0; h]).unwrap().into(),
+            Tensor::zeros(vec![h, qd]).into(),
+            Tensor::zeros(vec![h, kv * d]).into(),
+            Tensor::zeros(vec![h, kv * d]).into(),
+            Tensor::zeros(vec![qd, h]).into(),
+        ];
+        let out = rt.execute("attn_decode_b1_c128", &args).unwrap();
+        assert_eq!(out.len(), 3);
+        assert_eq!(out[0].shape, vec![1, h]);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let rt = rt();
+        let before = rt.stats().executions;
+        let spec = rt.op_spec("lm_head_b1").unwrap().clone();
+        let h = spec.params[0].0[1];
+        let v = spec.params[2].0[1];
+        let args: Vec<Arg> = vec![
+            Tensor::zeros(vec![1, h]).into(),
+            Tensor::new(vec![h], vec![1.0; h]).unwrap().into(),
+            Tensor::zeros(vec![h, v]).into(),
+        ];
+        rt.execute("lm_head_b1", &args).unwrap();
+        let st = rt.stats();
+        assert_eq!(st.executions, before + 1);
+        assert!(st.compile_count >= 1);
+    }
+}

@@ -1,0 +1,209 @@
+//! Host-side tensors exchanged with the PJRT executables.
+
+use anyhow::{bail, Result};
+
+/// A dense row-major f32 host tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("tensor shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        assert_eq!(self.rank(), 2, "row() needs rank-2, have {:?}", self.shape);
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        assert_eq!(self.rank(), 2);
+        let w = self.shape[1];
+        &mut self.data[i * w..(i + 1) * w]
+    }
+
+    /// Copy rows `rows` (by index) into a new [rows.len(), width] tensor,
+    /// zero-padded up to `pad_to` rows.
+    pub fn gather_rows_padded(&self, rows: &[usize], pad_to: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert!(pad_to >= rows.len());
+        let w = self.shape[1];
+        let mut out = Tensor::zeros(vec![pad_to, w]);
+        for (dst, &src) in rows.iter().enumerate() {
+            out.row_mut(dst).copy_from_slice(self.row(src));
+        }
+        out
+    }
+
+    /// Truncate a rank-2 tensor to its first `n` rows.
+    pub fn take_rows(&self, n: usize) -> Tensor {
+        assert_eq!(self.rank(), 2);
+        assert!(n <= self.shape[0]);
+        let w = self.shape[1];
+        Tensor { shape: vec![n, w], data: self.data[..n * w].to_vec() }
+    }
+
+    /// In-place `self += other` (same shape).
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place `self += scale * other` over a row range of rank-2 tensors.
+    pub fn axpy_rows(&mut self, rows: &[usize], scales: &[f32], other: &Tensor) {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(rows.len(), scales.len());
+        let w = self.shape[1];
+        for (i, (&r, &s)) in rows.iter().zip(scales).enumerate() {
+            let dst = self.row_mut(r);
+            let src = &other.data[i * w..(i + 1) * w];
+            for (d, v) in dst.iter_mut().zip(src) {
+                *d += s * v;
+            }
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+/// A dense row-major i32 host tensor (token ids, positions).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<TensorI32> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("tensor shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(TensorI32 { shape, data })
+    }
+
+    pub fn scalar(v: i32) -> TensorI32 {
+        TensorI32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn vec(v: Vec<i32>) -> TensorI32 {
+        TensorI32 { shape: vec![v.len()], data: v }
+    }
+}
+
+/// Argument passed to an executable.
+#[derive(Clone, Debug)]
+pub enum Arg {
+    F32(Tensor),
+    I32(TensorI32),
+}
+
+impl From<Tensor> for Arg {
+    fn from(t: Tensor) -> Arg {
+        Arg::F32(t)
+    }
+}
+
+impl From<TensorI32> for Arg {
+    fn from(t: TensorI32) -> Arg {
+        Arg::I32(t)
+    }
+}
+
+impl Arg {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Arg::F32(t) => &t.shape,
+            Arg::I32(t) => &t.shape,
+        }
+    }
+
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Arg::F32(_) => "f32",
+            Arg::I32(_) => "i32",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn gather_rows_padded_zero_pads() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let g = t.gather_rows_padded(&[2, 0], 4);
+        assert_eq!(g.shape, vec![4, 2]);
+        assert_eq!(g.row(0), &[5., 6.]);
+        assert_eq!(g.row(1), &[1., 2.]);
+        assert_eq!(g.row(2), &[0., 0.]);
+        assert_eq!(g.row(3), &[0., 0.]);
+    }
+
+    #[test]
+    fn axpy_rows_scales_and_scatters() {
+        let mut acc = Tensor::zeros(vec![3, 2]);
+        let upd = Tensor::new(vec![2, 2], vec![1., 1., 2., 2.]).unwrap();
+        acc.axpy_rows(&[2, 0], &[0.5, 2.0], &upd);
+        assert_eq!(acc.row(0), &[4., 4.]);
+        assert_eq!(acc.row(1), &[0., 0.]);
+        assert_eq!(acc.row(2), &[0.5, 0.5]);
+    }
+
+    #[test]
+    fn take_rows_truncates() {
+        let t = Tensor::new(vec![3, 2], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let h = t.take_rows(2);
+        assert_eq!(h.shape, vec![2, 2]);
+        assert_eq!(h.data, vec![1., 2., 3., 4.]);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::new(vec![2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::new(vec![2], vec![1.5, 2.0]).unwrap();
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-7);
+    }
+}

@@ -1,0 +1,140 @@
+//! Model weight store: loads the flat f32 tensors exported by
+//! `python/compile/export_weights.py` according to `weights_manifest.json`.
+
+use super::tensor::Tensor;
+use crate::config::ModelConfig;
+use crate::util::json;
+use anyhow::{Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// All tensors of one model, keyed by the manifest names
+/// (`embed`, `layers.{i}.wq`, `layers.{i}.experts.{e}.w1`, ...).
+pub struct WeightStore {
+    tensors: BTreeMap<String, Tensor>,
+    pub config: ModelConfig,
+}
+
+impl WeightStore {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<WeightStore> {
+        let dir = artifact_dir.as_ref();
+        let config = ModelConfig::load(dir)?;
+        let manifest = json::load(dir.join("weights_manifest.json"))?;
+        let mut tensors = BTreeMap::new();
+        for (name, desc) in manifest.get("tensors")?.as_obj()? {
+            let file = desc.get("file")?.as_str()?;
+            let shape = desc.get("shape")?.as_usize_vec()?;
+            let path = dir.join(file);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading weight {}", path.display()))?;
+            let n: usize = shape.iter().product();
+            anyhow::ensure!(
+                bytes.len() == 4 * n,
+                "weight {name}: file has {} bytes, shape {:?} needs {}",
+                bytes.len(),
+                shape,
+                4 * n
+            );
+            let mut data = vec![0f32; n];
+            for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            tensors.insert(name.clone(), Tensor { shape, data });
+        }
+        Ok(WeightStore { tensors, config })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight tensor {name:?}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    // -- typed accessors -------------------------------------------------
+
+    pub fn embed(&self) -> &Tensor {
+        self.get("embed").unwrap()
+    }
+
+    pub fn final_norm(&self) -> &Tensor {
+        self.get("final_norm").unwrap()
+    }
+
+    pub fn lm_head(&self) -> &Tensor {
+        self.get("lm_head").unwrap()
+    }
+
+    pub fn layer(&self, i: usize, name: &str) -> &Tensor {
+        self.get(&format!("layers.{i}.{name}")).unwrap()
+    }
+
+    pub fn expert(&self, layer: usize, expert: usize, name: &str) -> &Tensor {
+        self.get(&format!("layers.{layer}.experts.{expert}.{name}")).unwrap()
+    }
+
+    /// Embedding lookup on the host (the one model op that never touches
+    /// the PJRT path — it is a table read, not compute).
+    pub fn embed_tokens(&self, tokens: &[u32]) -> Tensor {
+        let e = self.embed();
+        let h = e.shape[1];
+        let mut out = Tensor::zeros(vec![tokens.len(), h]);
+        for (i, &t) in tokens.iter().enumerate() {
+            assert!((t as usize) < e.shape[0], "token {t} out of vocab");
+            out.row_mut(i).copy_from_slice(e.row(t as usize));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art() -> std::path::PathBuf {
+        crate::config::model::artifacts_root().join("mixtral-tiny")
+    }
+
+    #[test]
+    fn loads_all_tensors() {
+        let ws = WeightStore::load(art()).expect("run `make artifacts` first");
+        // 3 globals + per layer (7 + 3 * n_experts)
+        let cfg = &ws.config;
+        let expected = 3 + cfg.n_layers * (7 + 3 * cfg.n_experts);
+        assert_eq!(ws.len(), expected);
+        assert_eq!(ws.embed().shape, vec![cfg.vocab, cfg.hidden]);
+        assert_eq!(
+            ws.expert(0, 0, "w1").shape,
+            vec![cfg.hidden, cfg.ffn]
+        );
+        assert_eq!(
+            ws.expert(cfg.n_layers - 1, cfg.n_experts - 1, "w2").shape,
+            vec![cfg.ffn, cfg.hidden]
+        );
+    }
+
+    #[test]
+    fn embed_tokens_matches_rows() {
+        let ws = WeightStore::load(art()).unwrap();
+        let out = ws.embed_tokens(&[0, 5, 0]);
+        assert_eq!(out.shape, vec![3, ws.config.hidden]);
+        assert_eq!(out.row(0), ws.embed().row(0));
+        assert_eq!(out.row(1), ws.embed().row(5));
+        assert_eq!(out.row(0), out.row(2));
+    }
+
+    #[test]
+    fn weights_not_degenerate() {
+        let ws = WeightStore::load(art()).unwrap();
+        let w1 = ws.expert(1, 3, "w1");
+        let nonzero = w1.data.iter().filter(|v| v.abs() > 1e-8).count();
+        assert!(nonzero > w1.numel() / 2);
+    }
+}

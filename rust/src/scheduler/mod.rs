@@ -1,0 +1,210 @@
+//! Algorithm 1 — the paper's expert execution strategy (§3.3).
+//!
+//! For each expert `j` of layer `i` with `s = inp_size[j]` input tokens:
+//!
+//! ```text
+//! if s == 0                                 -> skip
+//! if is_at_gpu(i, j)                        -> run at GPU (resident)
+//! else if cpu_lat(s) > gpu_lat(s) + transfer_lat() -> transfer + run at GPU
+//! else                                      -> run at CPU
+//! ```
+//!
+//! The decision consumes only the latency model and the residency set, so
+//! it is a pure function — trivially property-testable, and exactly the
+//! quantity the paper's contribution lives in.
+
+pub mod policy;
+
+use crate::config::DeviceKind;
+use crate::hardware::memory::GpuMemory;
+use crate::latency::LatencyModel;
+
+/// Where and how one expert invocation executes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExpertPlan {
+    /// Weights resident on the GPU: execute there, no transfer (Fig. 3a).
+    GpuResident,
+    /// Copy weights CPU->GPU, then execute on the GPU (Fig. 3b).
+    GpuTransfer,
+    /// Copy activations GPU->CPU, execute on the CPU, copy back (Fig. 3c).
+    Cpu,
+}
+
+impl ExpertPlan {
+    pub fn device(&self) -> DeviceKind {
+        match self {
+            ExpertPlan::GpuResident | ExpertPlan::GpuTransfer => DeviceKind::Gpu,
+            ExpertPlan::Cpu => DeviceKind::Cpu,
+        }
+    }
+
+    /// Latency charged to the plan by the model (µs).
+    pub fn cost_us(&self, lat: &LatencyModel, s: usize) -> f64 {
+        match self {
+            ExpertPlan::GpuResident => lat.gpu_lat(s),
+            ExpertPlan::GpuTransfer => lat.gpu_lat(s) + lat.transfer_lat(),
+            ExpertPlan::Cpu => lat.cpu_lat(s),
+        }
+    }
+}
+
+/// Decide the plan for one expert (the body of Algorithm 1's loop).
+pub fn decide_expert(
+    resident: bool,
+    s: usize,
+    lat: &LatencyModel,
+) -> Option<ExpertPlan> {
+    if s == 0 {
+        return None; // line 7-9: skip experts with no input
+    }
+    if resident {
+        return Some(ExpertPlan::GpuResident); // line 10-11
+    }
+    if lat.cpu_lat(s) > lat.gpu_lat(s) + lat.transfer_lat() {
+        Some(ExpertPlan::GpuTransfer) // line 12-13
+    } else {
+        Some(ExpertPlan::Cpu) // line 14-15
+    }
+}
+
+/// Plan a whole MoE layer: `inp_size[j]` tokens per expert.
+/// Returns `plans[j] = None` for idle experts.
+pub fn plan_layer(
+    layer: usize,
+    inp_size: &[usize],
+    memory: &GpuMemory,
+    lat: &LatencyModel,
+) -> Vec<Option<ExpertPlan>> {
+    inp_size
+        .iter()
+        .enumerate()
+        .map(|(j, &s)| decide_expert(memory.is_resident((layer, j)), s, lat))
+        .collect()
+}
+
+/// Predicted layer latency under a set of plans, with the GPU and CPU
+/// queues overlapping (the engine executes both concurrently and joins at
+/// the layer boundary, where expert outputs are combined).
+pub fn predict_layer_us(
+    plans: &[Option<ExpertPlan>],
+    inp_size: &[usize],
+    lat: &LatencyModel,
+) -> f64 {
+    let mut gpu = 0.0;
+    let mut cpu = 0.0;
+    for (plan, &s) in plans.iter().zip(inp_size) {
+        match plan {
+            Some(p @ (ExpertPlan::GpuResident | ExpertPlan::GpuTransfer)) => {
+                gpu += p.cost_us(lat, s)
+            }
+            Some(p @ ExpertPlan::Cpu) => cpu += p.cost_us(lat, s),
+            None => {}
+        }
+    }
+    gpu.max(cpu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::testkit::{check, Gen};
+
+    fn lat() -> LatencyModel {
+        LatencyModel::from_hardware(&HardwareConfig::env1())
+    }
+
+    #[test]
+    fn idle_expert_skipped() {
+        assert_eq!(decide_expert(false, 0, &lat()), None);
+        assert_eq!(decide_expert(true, 0, &lat()), None);
+    }
+
+    #[test]
+    fn resident_always_gpu() {
+        let lat = lat();
+        for s in [1, 2, 100, 4096] {
+            assert_eq!(decide_expert(true, s, &lat), Some(ExpertPlan::GpuResident));
+        }
+    }
+
+    #[test]
+    fn decode_prefers_cpu_prefill_prefers_gpu() {
+        // The paper's headline behaviour: small s -> CPU (avoid the weight
+        // transfer), large s -> transfer + GPU.
+        let lat = lat();
+        assert_eq!(decide_expert(false, 1, &lat), Some(ExpertPlan::Cpu));
+        assert_eq!(decide_expert(false, 2, &lat), Some(ExpertPlan::Cpu));
+        assert_eq!(decide_expert(false, 512, &lat), Some(ExpertPlan::GpuTransfer));
+    }
+
+    #[test]
+    fn decision_is_cost_argmin_property() {
+        // Algorithm 1 must pick the cheaper of the two non-resident options.
+        check("algorithm1 argmin", 256, |g: &mut Gen| {
+            let lat = LatencyModel {
+                gpu_const_us: g.f64_in(100.0, 10_000.0),
+                gpu_single_extra_us: g.f64_in(0.0, 1_000.0),
+                cpu_base_us: g.f64_in(0.0, 10_000.0),
+                cpu_per_token_us: g.f64_in(1.0, 2_000.0),
+                transfer_us: g.f64_in(100.0, 50_000.0),
+                act_roundtrip_per_token_us: g.f64_in(0.0, 5.0),
+            };
+            let s = g.usize_in(1..4096);
+            let plan = decide_expert(false, s, &lat).unwrap();
+            let cpu = ExpertPlan::Cpu.cost_us(&lat, s);
+            let gpu = ExpertPlan::GpuTransfer.cost_us(&lat, s);
+            let chosen = plan.cost_us(&lat, s);
+            assert!(chosen <= cpu.min(gpu) + 1e-9, "chose {plan:?} ({chosen}) over min({cpu}, {gpu})");
+        });
+    }
+
+    #[test]
+    fn decision_monotone_in_s_property() {
+        // If GPU wins at s, it must win at every s' > s (CPU cost strictly
+        // increases, GPU cost non-increasing) — the crossover is unique.
+        check("algorithm1 monotone", 128, |g: &mut Gen| {
+            let lat = LatencyModel {
+                gpu_const_us: g.f64_in(500.0, 8_000.0),
+                gpu_single_extra_us: g.f64_in(0.0, 500.0),
+                cpu_base_us: g.f64_in(0.0, 8_000.0),
+                cpu_per_token_us: g.f64_in(10.0, 1_500.0),
+                transfer_us: g.f64_in(1_000.0, 30_000.0),
+                act_roundtrip_per_token_us: 0.0,
+            };
+            let s = g.usize_in(2..2048);
+            if decide_expert(false, s, &lat) == Some(ExpertPlan::GpuTransfer) {
+                for s2 in [s * 2, s * 4] {
+                    assert_eq!(
+                        decide_expert(false, s2, &lat),
+                        Some(ExpertPlan::GpuTransfer),
+                        "GPU at {s} but not at {s2}"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn plan_layer_uses_residency() {
+        let lat = lat();
+        let mut mem = GpuMemory::with_capacity(4);
+        mem.pin((0, 1));
+        let plans = plan_layer(0, &[1, 1, 0, 700], &mem, &lat);
+        assert_eq!(plans[0], Some(ExpertPlan::Cpu));
+        assert_eq!(plans[1], Some(ExpertPlan::GpuResident));
+        assert_eq!(plans[2], None);
+        assert_eq!(plans[3], Some(ExpertPlan::GpuTransfer));
+    }
+
+    #[test]
+    fn predict_layer_overlaps_devices() {
+        let lat = lat();
+        let plans = vec![Some(ExpertPlan::Cpu), Some(ExpertPlan::GpuResident)];
+        let sizes = vec![1, 1];
+        let t = predict_layer_us(&plans, &sizes, &lat);
+        let cpu = lat.cpu_lat(1);
+        let gpu = lat.gpu_lat(1);
+        assert!((t - cpu.max(gpu)).abs() < 1e-9);
+    }
+}

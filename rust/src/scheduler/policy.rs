@@ -1,0 +1,148 @@
+//! Execution-policy abstraction.
+//!
+//! All four systems the paper evaluates (Fiddler + three baselines) are
+//! policies over the SAME substrate: they differ only in (a) which experts
+//! are resident/pinned, (b) where a non-resident expert executes, (c) how
+//! costs accrue (e.g. ZeRO-Infinity overlaps weight streaming with
+//! compute), and (d) whether beams are batched.  The engine consults the
+//! policy; numerics are identical across policies by construction.
+
+use super::{plan_layer, ExpertPlan};
+use crate::config::DeviceKind;
+use crate::hardware::memory::GpuMemory;
+use crate::latency::LatencyModel;
+use crate::placement;
+use crate::popularity::Profile;
+
+pub trait ExecPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Initialization-phase placement (paper Fig. 2a). Default: nothing.
+    fn init(&mut self, _memory: &mut GpuMemory, _profile: &Profile, _seed: u64) {}
+
+    /// Plan one MoE layer given per-expert input sizes. May mutate memory
+    /// (dynamic caching policies do).  `now_us` is the virtual time at the
+    /// start of the layer (prefetching policies compare it against
+    /// transfer-completion timestamps).
+    fn plan_layer(
+        &mut self,
+        layer: usize,
+        inp_size: &[usize],
+        memory: &mut GpuMemory,
+        lat: &LatencyModel,
+        now_us: f64,
+    ) -> Vec<Option<ExpertPlan>>;
+
+    /// Hook after a layer's routing is known and its experts are queued —
+    /// speculative policies issue next-layer weight prefetches here,
+    /// overlapping PCIe transfers with the layer's compute.
+    fn post_layer(
+        &mut self,
+        _layer: usize,
+        _inp_size: &[usize],
+        _memory: &mut GpuMemory,
+        _lat: &LatencyModel,
+        _now_us: f64,
+    ) {
+    }
+
+    /// Cost (µs) charged for executing one expert under `plan` with `s`
+    /// tokens. Default: the latency model's straightforward cost.
+    fn expert_cost_us(&self, plan: ExpertPlan, s: usize, lat: &LatencyModel) -> f64 {
+        plan.cost_us(lat, s)
+    }
+
+    /// Whether beam-search beams are processed as one batch (Fiddler) or
+    /// sequentially per beam (llama.cpp b2956's beam path).
+    fn batches_beams(&self) -> bool {
+        true
+    }
+
+    /// Device that runs the non-expert part (attention) of `layer`.
+    fn attn_device(&self, _layer: usize) -> DeviceKind {
+        DeviceKind::Gpu
+    }
+}
+
+/// The paper's system: popularity placement + Algorithm 1.
+pub struct FiddlerPolicy {
+    pub placement: crate::config::serving::PlacementStrategy,
+}
+
+impl Default for FiddlerPolicy {
+    fn default() -> Self {
+        FiddlerPolicy { placement: crate::config::serving::PlacementStrategy::Popularity }
+    }
+}
+
+impl ExecPolicy for FiddlerPolicy {
+    fn name(&self) -> &'static str {
+        "fiddler"
+    }
+
+    fn init(&mut self, memory: &mut GpuMemory, profile: &Profile, seed: u64) {
+        placement::place(memory, profile, self.placement, seed);
+    }
+
+    fn plan_layer(
+        &mut self,
+        layer: usize,
+        inp_size: &[usize],
+        memory: &mut GpuMemory,
+        lat: &LatencyModel,
+        _now_us: f64,
+    ) -> Vec<Option<ExpertPlan>> {
+        let plans = plan_layer(layer, inp_size, memory, lat);
+        // Refresh LRU stamps for resident experts we actually use.
+        for (j, p) in plans.iter().enumerate() {
+            if matches!(p, Some(ExpertPlan::GpuResident)) {
+                memory.touch((layer, j));
+            }
+        }
+        plans
+    }
+
+    fn expert_cost_us(&self, plan: ExpertPlan, s: usize, lat: &LatencyModel) -> f64 {
+        match plan {
+            // Fiddler streams the next expert's weights while the GPU
+            // computes (§3.2: the transfer dominates; compute hides under
+            // it), so the GPU-queue occupancy is max(transfer, compute).
+            ExpertPlan::GpuTransfer => lat.transfer_lat().max(lat.gpu_lat(s)),
+            p => p.cost_us(lat, s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+
+    #[test]
+    fn fiddler_pins_popular_and_decides() {
+        let hw = HardwareConfig::env1();
+        let lat = LatencyModel::from_hardware(&hw);
+        let mut mem = GpuMemory::with_capacity(2);
+        let mut prof = Profile::new(1, 4);
+        prof.counts[0] = vec![100, 1, 50, 2];
+        let mut pol = FiddlerPolicy::default();
+        pol.init(&mut mem, &prof, 0);
+        assert!(mem.is_resident((0, 0)));
+        assert!(mem.is_resident((0, 2)));
+
+        let plans = pol.plan_layer(0, &[1, 1, 0, 900], &mut mem, &lat, 0.0);
+        assert_eq!(plans[0], Some(ExpertPlan::GpuResident));
+        assert_eq!(plans[1], Some(ExpertPlan::Cpu));
+        assert_eq!(plans[2], None);
+        assert_eq!(plans[3], Some(ExpertPlan::GpuTransfer));
+    }
+
+    #[test]
+    fn fiddler_overlaps_transfer_with_compute() {
+        let lat = LatencyModel::from_hardware(&HardwareConfig::env1());
+        let pol = FiddlerPolicy::default();
+        let c = pol.expert_cost_us(ExpertPlan::GpuTransfer, 512, &lat);
+        assert!((c - lat.transfer_lat().max(lat.gpu_lat(512))).abs() < 1e-9);
+        assert!(c < ExpertPlan::GpuTransfer.cost_us(&lat, 512));
+    }
+}

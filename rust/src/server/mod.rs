@@ -1,0 +1,210 @@
+//! Thread-based serving front end with continuous batching.
+//!
+//! A single worker thread owns the engine (the PJRT client is not shared
+//! across threads); clients submit [`Request`]s through a channel and
+//! receive streamed tokens on a per-request channel.  Scheduling is FCFS
+//! admission into a decode pool of at most `max_batch` sequences; each
+//! iteration admits (prefills) one queued request, then advances every
+//! active sequence by one token — the standard continuous-batching loop
+//! (Orca-style iteration-level scheduling).
+
+pub mod net;
+
+use crate::coordinator::Engine;
+use crate::kvcache::SequenceCache;
+use crate::metrics::GenMetrics;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A generation request.
+pub struct Request {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    /// Streamed output: one event per token, then `Done`.
+    pub stream: Sender<Event>,
+    /// Shutdown sentinel: the serve loop drains in-flight work and exits.
+    /// Needed because auxiliary front ends (TCP accept loop) hold Sender
+    /// clones, so channel disconnection alone cannot signal shutdown.
+    pub shutdown: bool,
+}
+
+impl Request {
+    pub fn new(prompt: Vec<u32>, max_new: usize, stream: Sender<Event>) -> Request {
+        Request { prompt, max_new, stream, shutdown: false }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Event {
+    Token(u32),
+    Done(GenMetrics),
+    Error(String),
+}
+
+struct Active {
+    cache: SequenceCache,
+    last: u32,
+    produced: usize,
+    max_new: usize,
+    stream: Sender<Event>,
+    metrics: GenMetrics,
+}
+
+/// Run the serving loop until `requests` disconnects and all work drains.
+pub fn serve_loop(engine: &mut Engine, requests: Receiver<Request>) -> Result<()> {
+    let mut queue: VecDeque<Request> = VecDeque::new();
+    let mut active: Vec<Active> = Vec::new();
+    let mut shutting_down = false;
+    let max_batch = engine.serving.max_batch.min(16);
+
+    loop {
+        // Drain newly arrived requests (non-blocking).
+        loop {
+            match requests.try_recv() {
+                Ok(r) if r.shutdown => shutting_down = true,
+                Ok(r) => queue.push_back(r),
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
+            }
+        }
+        if shutting_down && queue.is_empty() && active.is_empty() {
+            return Ok(());
+        }
+
+        // Admission: prefill one queued request per iteration if a slot
+        // is free (prefill is long; interleaving one at a time keeps ITL
+        // of running sequences bounded).
+        if active.len() < max_batch {
+            if let Some(req) = queue.pop_front() {
+                let mut metrics = GenMetrics {
+                    enqueue_us: engine.cx.clock.now_us(),
+                    prompt_tokens: req.prompt.len(),
+                    ..Default::default()
+                };
+                let mut cache = SequenceCache::new(engine.model());
+                match engine
+                    .runner
+                    .prefill(&req.prompt, &mut cache, &mut engine.cx)
+                    .and_then(|h| engine.runner.lm_head(&h, &mut engine.cx))
+                {
+                    Ok(logits) => {
+                        let tok = engine.sample(logits.row(0));
+                        metrics.first_token_us = engine.cx.clock.now_us();
+                        metrics.token_done_us.push(metrics.first_token_us);
+                        let _ = req.stream.send(Event::Token(tok));
+                        active.push(Active {
+                            cache,
+                            last: tok,
+                            produced: 1,
+                            max_new: req.max_new,
+                            stream: req.stream,
+                            metrics,
+                        });
+                    }
+                    Err(e) => {
+                        let _ = req.stream.send(Event::Error(e.to_string()));
+                    }
+                }
+            }
+        }
+
+        if active.is_empty() {
+            if queue.is_empty() {
+                if shutting_down {
+                    return Ok(());
+                }
+                // Idle: block for the next request or shutdown.
+                match requests.recv() {
+                    Ok(r) if r.shutdown => return Ok(()),
+                    Ok(r) => queue.push_back(r),
+                    Err(_) => return Ok(()),
+                }
+            }
+            continue;
+        }
+
+        // One decode step for every active sequence.
+        let last: Vec<u32> = active.iter().map(|a| a.last).collect();
+        let mut caches: Vec<&mut SequenceCache> =
+            active.iter_mut().map(|a| &mut a.cache).collect();
+        let next = engine.decode_batch_step(&last, &mut caches)?;
+        let now = engine.cx.clock.now_us();
+        for (a, tok) in active.iter_mut().zip(next) {
+            a.last = tok;
+            a.produced += 1;
+            a.metrics.token_done_us.push(now);
+            let _ = a.stream.send(Event::Token(tok));
+        }
+        // Retire finished sequences.
+        active.retain_mut(|a| {
+            if a.produced >= a.max_new {
+                let _ = a.stream.send(Event::Done(a.metrics.clone()));
+                false
+            } else {
+                true
+            }
+        });
+    }
+}
+
+/// Handle to a background server thread.
+pub struct ServerHandle {
+    pub requests: Sender<Request>,
+    worker: JoinHandle<Result<()>>,
+}
+
+impl ServerHandle {
+    /// Spawn the worker thread; the engine is constructed *inside* it by
+    /// `make` (the PJRT client is thread-affine — `!Send` — so it must be
+    /// born on the thread that uses it).
+    pub fn spawn<F>(make: F) -> ServerHandle
+    where
+        F: FnOnce() -> Result<Engine> + Send + 'static,
+    {
+        let (tx, rx) = channel();
+        let worker = std::thread::spawn(move || {
+            let mut engine = make()?;
+            serve_loop(&mut engine, rx)
+        });
+        ServerHandle { requests: tx, worker }
+    }
+
+    /// Convenience: submit a prompt and return its stream receiver.
+    pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        self.requests
+            .send(Request::new(prompt, max_new, tx))
+            .expect("server thread gone");
+        rx
+    }
+
+    /// Signal shutdown (drains in-flight work) and join the worker.
+    pub fn shutdown(self) -> Result<()> {
+        let (tx, _rx) = channel();
+        let _ = self.requests.send(Request {
+            prompt: Vec::new(),
+            max_new: 0,
+            stream: tx,
+            shutdown: true,
+        });
+        drop(self.requests);
+        self.worker.join().expect("server thread panicked")
+    }
+}
+
+/// Collect a full generation from a stream (blocking helper for clients).
+pub fn collect(rx: &Receiver<Event>) -> Result<(Vec<u32>, GenMetrics)> {
+    let mut tokens = Vec::new();
+    loop {
+        match rx.recv()? {
+            Event::Token(t) => tokens.push(t),
+            Event::Done(m) => return Ok((tokens, m)),
+            Event::Error(e) => anyhow::bail!("server error: {e}"),
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! TCP front end: newline-delimited JSON over a socket.
+//!
+//! Protocol (one JSON object per line):
+//!   client -> {"prompt": [1, 2, 3], "max_new": 16}
+//!   server -> {"token": 42}            (streamed, one per generated token)
+//!   server -> {"done": true, "ttft_us": ..., "itl_us": ..., "tokens_per_s": ...}
+//!   server -> {"error": "..."}         (on bad requests)
+//!
+//! The listener thread accepts connections and forwards requests into the
+//! engine worker's queue (`serve_loop`); one relay thread per connection
+//! streams events back.  `fiddler serve --listen 127.0.0.1:PORT` wires it.
+
+use super::{Event, Request};
+use crate::util::json::Json;
+use anyhow::Result;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Sender};
+
+/// Parse one request line.
+fn parse_request(line: &str) -> Result<(Vec<u32>, usize)> {
+    let v = Json::parse(line)?;
+    let prompt = v
+        .get("prompt")?
+        .as_arr()?
+        .iter()
+        .map(|t| Ok(t.as_usize()? as u32))
+        .collect::<Result<Vec<u32>>>()?;
+    let max_new = v.get("max_new")?.as_usize()?;
+    anyhow::ensure!(max_new > 0 && max_new <= 4096, "max_new out of range");
+    Ok((prompt, max_new))
+}
+
+fn event_line(ev: &Event) -> String {
+    let mut o = Json::obj();
+    match ev {
+        Event::Token(t) => o.set("token", Json::from(*t as usize)),
+        Event::Done(m) => {
+            o.set("done", Json::Bool(true));
+            o.set("ttft_us", Json::Num(m.ttft_us()));
+            o.set("itl_us", Json::Num(m.mean_itl_us()));
+            o.set("tokens_per_s", Json::Num(m.tokens_per_s()));
+        }
+        Event::Error(e) => o.set("error", Json::from(e.clone())),
+    }
+    format!("{o}\n")
+}
+
+fn handle_conn(stream: TcpStream, requests: Sender<Request>) {
+    let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+    let reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) if !l.trim().is_empty() => l,
+            Ok(_) => continue,
+            Err(_) => break,
+        };
+        let (prompt, max_new) = match parse_request(&line) {
+            Ok(r) => r,
+            Err(e) => {
+                let _ = writer.write_all(
+                    event_line(&Event::Error(format!("bad request: {e}"))).as_bytes(),
+                );
+                continue;
+            }
+        };
+        let (tx, rx) = channel();
+        if requests.send(Request::new(prompt, max_new, tx)).is_err() {
+            let _ = writer
+                .write_all(event_line(&Event::Error("server shutting down".into())).as_bytes());
+            break;
+        }
+        // Relay the stream back; one request at a time per connection.
+        let mut ok = true;
+        for ev in rx.iter() {
+            let done = matches!(ev, Event::Done(_) | Event::Error(_));
+            if writer.write_all(event_line(&ev).as_bytes()).is_err() {
+                ok = false;
+                break;
+            }
+            if done {
+                let _ = writer.flush();
+                break;
+            }
+        }
+        if !ok {
+            break;
+        }
+    }
+    log::debug!("connection {peer} closed");
+}
+
+/// Accept-loop: forwards socket requests into the engine queue.  Returns
+/// when the listener errors or `requests`' receiver hangs up (detected on
+/// the next accepted connection).
+pub fn serve_tcp(listener: TcpListener, requests: Sender<Request>) -> Result<()> {
+    for stream in listener.incoming() {
+        let stream = stream?;
+        stream.set_nodelay(true).ok();
+        let tx = requests.clone();
+        std::thread::spawn(move || handle_conn(stream, tx));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::serving::Policy;
+    use crate::config::HardwareConfig;
+    use crate::figures;
+    use crate::server::ServerHandle;
+
+    #[test]
+    fn parse_request_validates() {
+        assert!(parse_request(r#"{"prompt": [1, 2], "max_new": 4}"#).is_ok());
+        assert!(parse_request(r#"{"prompt": "x", "max_new": 4}"#).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new": 0}"#).is_err());
+        assert!(parse_request("garbage").is_err());
+    }
+
+    #[test]
+    fn event_lines_are_json() {
+        let l = event_line(&Event::Token(7));
+        assert_eq!(Json::parse(l.trim()).unwrap().get("token").unwrap().as_usize().unwrap(), 7);
+        let m = crate::metrics::GenMetrics {
+            enqueue_us: 0.0,
+            first_token_us: 10.0,
+            token_done_us: vec![10.0, 20.0],
+            prompt_tokens: 1,
+        };
+        let l = event_line(&Event::Done(m));
+        let v = Json::parse(l.trim()).unwrap();
+        assert!(v.get("done").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn tcp_round_trip_serves_tokens() {
+        let hw = HardwareConfig::env1();
+        let handle = ServerHandle::spawn(move || {
+            figures::make_engine("mixtral-tiny", &hw, Policy::Fiddler, 0)
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let req_tx = handle.requests.clone();
+        std::thread::spawn(move || serve_tcp(listener, req_tx));
+
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all(b"{\"prompt\": [1, 2, 3, 4], \"max_new\": 3}\n").unwrap();
+        let mut tokens = Vec::new();
+        let mut done = false;
+        for line in BufReader::new(sock.try_clone().unwrap()).lines() {
+            let v = Json::parse(&line.unwrap()).unwrap();
+            if let Ok(t) = v.get("token") {
+                tokens.push(t.as_usize().unwrap());
+            } else if v.get("done").is_ok() {
+                assert!(v.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+                done = true;
+                break;
+            }
+        }
+        assert!(done);
+        assert_eq!(tokens.len(), 3);
+        drop(sock);
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tcp_bad_request_gets_error_line() {
+        let hw = HardwareConfig::env1();
+        let handle = ServerHandle::spawn(move || {
+            figures::make_engine("mixtral-tiny", &hw, Policy::Fiddler, 0)
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let req_tx = handle.requests.clone();
+        std::thread::spawn(move || serve_tcp(listener, req_tx));
+
+        let mut sock = TcpStream::connect(addr).unwrap();
+        sock.write_all(b"not json\n").unwrap();
+        let mut line = String::new();
+        BufReader::new(sock.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(Json::parse(line.trim()).unwrap().get("error").is_ok());
+        drop(sock);
+        handle.shutdown().unwrap();
+    }
+}

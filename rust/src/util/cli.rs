@@ -1,0 +1,131 @@
+//! Minimal CLI argument parser (`clap` is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments.  Typed getters with defaults keep call sites terse.
+//!
+//! Parsing is schema-free and greedy: `--flag` followed by a non-`--` token
+//! consumes it as a value, so boolean switches must come last or use
+//! `--flag=true`-style. All in-repo call sites follow this convention.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    /// Flags that appeared without a value (`--verbose`).
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — the first element is NOT
+    /// skipped; use `from_env` for real argv.
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(item) = it.next() {
+            if let Some(rest) = item.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.switches.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of usizes, e.g. `--widths 4,8,12,16`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: bad integer {p:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_forms() {
+        let a = args("serve pos1 --model mixtral-tiny --env=env1 --verbose");
+        assert_eq!(a.positional, vec!["serve", "pos1"]);
+        assert_eq!(a.get("model"), Some("mixtral-tiny"));
+        assert_eq!(a.get("env"), Some("env1"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = args("--n 42 --rate 1.5 --widths 4,8,12");
+        assert_eq!(a.usize_or("n", 0), 42);
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert!((a.f64_or("rate", 0.0) - 1.5).abs() < 1e-12);
+        assert_eq!(a.usize_list_or("widths", &[]), vec![4, 8, 12]);
+        assert_eq!(a.usize_list_or("none", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn negative_numbers_not_swallowed_as_flags() {
+        let a = args("--offset -3");
+        assert_eq!(a.get("offset"), Some("-3"));
+    }
+}

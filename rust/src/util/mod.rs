@@ -1,0 +1,35 @@
+//! Shared utility substrates: PRNG, statistics, JSON, CLI parsing.
+//!
+//! These exist as in-repo modules because the offline crate set ships only
+//! the `xla` dependency closure (no serde/clap/rand/criterion/proptest).
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Round `n` up to the nearest value in `buckets` (ascending).  Returns the
+/// largest bucket if `n` exceeds all of them (callers must then split).
+pub fn round_up_bucket(n: usize, buckets: &[usize]) -> usize {
+    debug_assert!(buckets.windows(2).all(|w| w[0] < w[1]), "buckets must ascend");
+    for &b in buckets {
+        if n <= b {
+            return b;
+        }
+    }
+    *buckets.last().expect("empty bucket list")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rounding() {
+        let b = [1, 2, 4, 8];
+        assert_eq!(round_up_bucket(1, &b), 1);
+        assert_eq!(round_up_bucket(3, &b), 4);
+        assert_eq!(round_up_bucket(8, &b), 8);
+        assert_eq!(round_up_bucket(9, &b), 8); // saturates; caller splits
+    }
+}

@@ -1,0 +1,140 @@
+//! Synthetic workload generation — the stand-in for ShareGPT / LMSYS-Chat-1M
+//! (DESIGN.md §2: the datasets contribute prompt-length distributions and
+//! routing statistics, both of which are parameters here).
+//!
+//! Token content is Zipf-distributed over the vocabulary (natural-language
+//! rank-frequency), with a per-dataset seed/skew so the two "datasets" of
+//! the paper's Appendix D induce different routing mixes.
+
+use crate::util::rng::{Rng, Zipf};
+
+/// A named synthetic dataset profile.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: &'static str,
+    /// Zipf exponent over token ranks.
+    pub zipf_a: f64,
+    /// Permutation seed: which concrete token each rank maps to (this is
+    /// what shifts routing between datasets while keeping marginals).
+    pub perm_seed: u64,
+}
+
+impl Dataset {
+    /// ShareGPT-like: the calibration dataset (matches the Python-side
+    /// `zipf_tokens(a=1.2)` used to build the popularity profile).
+    pub fn sharegpt() -> Dataset {
+        Dataset { name: "sharegpt", zipf_a: 1.2, perm_seed: 0 }
+    }
+
+    /// LMSYS-Chat-1M-like: same marginal family, different token mapping
+    /// and slightly flatter distribution (Appendix D sensitivity).
+    pub fn lmsys() -> Dataset {
+        Dataset { name: "lmsys", zipf_a: 1.05, perm_seed: 777 }
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<Dataset> {
+        match name {
+            "sharegpt" => Ok(Self::sharegpt()),
+            "lmsys" => Ok(Self::lmsys()),
+            other => anyhow::bail!("unknown dataset {other:?} (have sharegpt, lmsys)"),
+        }
+    }
+}
+
+/// Generates prompts from a dataset profile.
+pub struct WorkloadGen {
+    dataset: Dataset,
+    zipf: Zipf,
+    perm: Vec<u32>,
+    rng: Rng,
+}
+
+impl WorkloadGen {
+    pub fn new(dataset: Dataset, vocab: usize, seed: u64) -> WorkloadGen {
+        let zipf = Zipf::new(vocab, dataset.zipf_a);
+        // Rank -> token permutation; identity for perm_seed 0 (matching the
+        // Python calibration sampler exactly).
+        let mut perm: Vec<u32> = (0..vocab as u32).collect();
+        if dataset.perm_seed != 0 {
+            let mut prng = Rng::new(dataset.perm_seed);
+            prng.shuffle(&mut perm);
+        }
+        WorkloadGen { dataset, zipf, perm, rng: Rng::new(seed) }
+    }
+
+    pub fn dataset_name(&self) -> &'static str {
+        self.dataset.name
+    }
+
+    /// Sample a prompt of exactly `len` tokens (the paper evaluates fixed
+    /// input lengths: "we randomly select samples ... with N tokens or more
+    /// of prompt and use the initial N tokens").
+    pub fn prompt(&mut self, len: usize) -> Vec<u32> {
+        (0..len).map(|_| self.perm[self.zipf.sample(&mut self.rng)]).collect()
+    }
+
+    /// Sample `n` prompts.
+    pub fn prompts(&mut self, n: usize, len: usize) -> Vec<Vec<u32>> {
+        (0..n).map(|_| self.prompt(len)).collect()
+    }
+}
+
+/// The paper's scenario (a) grid: input {32,64,128,256} x output
+/// {64,128,256,512}, minus the (256,512) cell = 15 configurations.
+pub fn scenario_a_grid() -> Vec<(usize, usize)> {
+    let mut grid = Vec::new();
+    for &inp in &[32usize, 64, 128, 256] {
+        for &out in &[64usize, 128, 256, 512] {
+            grid.push((inp, out));
+        }
+    }
+    grid.truncate(15); // the paper reports 15 configurations
+    grid
+}
+
+/// Scenario (b) prefill lengths.
+pub const SCENARIO_B_LENGTHS: &[usize] = &[512, 1024, 2048, 4096];
+
+/// Scenario (c) beam widths (input 32, output 64).
+pub const SCENARIO_C_WIDTHS: &[usize] = &[4, 8, 12, 16];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prompts_in_vocab_and_right_length() {
+        let mut g = WorkloadGen::new(Dataset::sharegpt(), 512, 1);
+        for p in g.prompts(20, 33) {
+            assert_eq!(p.len(), 33);
+            assert!(p.iter().all(|&t| t < 512));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = WorkloadGen::new(Dataset::sharegpt(), 512, 9);
+        let mut b = WorkloadGen::new(Dataset::sharegpt(), 512, 9);
+        assert_eq!(a.prompt(64), b.prompt(64));
+    }
+
+    #[test]
+    fn datasets_differ() {
+        let mut a = WorkloadGen::new(Dataset::sharegpt(), 512, 9);
+        let mut b = WorkloadGen::new(Dataset::lmsys(), 512, 9);
+        assert_ne!(a.prompt(64), b.prompt(64));
+    }
+
+    #[test]
+    fn zipf_skew_visible() {
+        let mut g = WorkloadGen::new(Dataset::sharegpt(), 512, 3);
+        let toks = g.prompt(5000);
+        let top_quarter = toks.iter().filter(|&&t| t < 128).count();
+        assert!(top_quarter > 3000, "zipf skew missing: {top_quarter}");
+    }
+
+    #[test]
+    fn grid_is_15() {
+        assert_eq!(scenario_a_grid().len(), 15);
+    }
+}

@@ -1,0 +1,204 @@
+//! Integration tests over the serving engine: policies, beam search,
+//! server, and the dominance relations the paper's figures rest on.
+
+use fiddler::config::serving::{Policy, ServingConfig};
+use fiddler::config::HardwareConfig;
+use fiddler::coordinator::Engine;
+use fiddler::figures;
+use fiddler::server::{collect, ServerHandle};
+use fiddler::workload::{Dataset, WorkloadGen};
+
+fn engine(policy: Policy, env: &HardwareConfig) -> Engine {
+    figures::make_engine("mixtral-tiny", env, policy, 0).expect("make artifacts first")
+}
+
+fn prompt(len: usize, seed: u64) -> Vec<u32> {
+    WorkloadGen::new(Dataset::sharegpt(), 512, seed).prompt(len)
+}
+
+#[test]
+fn all_policies_generate_identical_tokens() {
+    // Policies differ ONLY in time accounting, never in numerics.
+    let hw = HardwareConfig::env1();
+    let p = prompt(16, 1);
+    let mut outs = Vec::new();
+    for &pol in figures::ALL_POLICIES {
+        let mut e = engine(pol, &hw);
+        outs.push(e.generate(&p, 6).unwrap().tokens);
+    }
+    for o in &outs[1..] {
+        assert_eq!(o, &outs[0], "policy changed the numerics");
+    }
+}
+
+#[test]
+fn fiddler_beats_offloaders_on_decode() {
+    // Scenario (a) regime: decode-dominated workload. The paper's Fig. 4:
+    // offloading baselines pay a weight transfer per missing expert per
+    // token and land well below Fiddler.
+    let hw = HardwareConfig::env1();
+    let p = prompt(32, 2);
+    let mut tps = std::collections::HashMap::new();
+    for &pol in figures::ALL_POLICIES {
+        let mut e = engine(pol, &hw);
+        let g = e.generate(&p, 16).unwrap();
+        tps.insert(pol.label(), g.metrics.tokens_per_s());
+    }
+    let f = tps["Fiddler"];
+    assert!(f > tps["DeepSpeed-MII*"], "{tps:?}");
+    assert!(f > tps["Mixtral-Offloading*"], "{tps:?}");
+    assert!(f > tps["llama.cpp*"], "{tps:?}");
+}
+
+#[test]
+fn offloaders_beat_llamacpp_on_long_prefill() {
+    // Scenario (b) regime (Fig. 5): for long prompts the GPU-streaming
+    // approaches win over CPU-bound static split; Fiddler is best overall.
+    let hw = HardwareConfig::env1();
+    let p = prompt(512, 3);
+    let mut ttft = std::collections::HashMap::new();
+    for &pol in figures::ALL_POLICIES {
+        let mut e = engine(pol, &hw);
+        let (_tok, us) = e.prefill_ttft(&p).unwrap();
+        ttft.insert(pol.label(), us);
+    }
+    assert!(ttft["Fiddler"] < ttft["llama.cpp*"], "{ttft:?}");
+    assert!(ttft["DeepSpeed-MII*"] < ttft["llama.cpp*"], "{ttft:?}");
+    assert!(ttft["Fiddler"] <= ttft["DeepSpeed-MII*"] * 1.05, "{ttft:?}");
+}
+
+#[test]
+fn beam_search_gap_grows_with_width() {
+    // Scenario (c) regime (Fig. 6): Fiddler batches beams; llama.cpp
+    // decodes them serially. The speedup must grow with width.
+    let hw = HardwareConfig::env1();
+    let p = prompt(16, 4);
+    let mut ratios = Vec::new();
+    for width in [2usize, 8] {
+        let mut f = engine(Policy::Fiddler, &hw);
+        let bf = f.beam_search(&p, width, 4).unwrap();
+        let mut l = engine(Policy::StaticSplit, &hw);
+        let bl = l.beam_search(&p, width, 4).unwrap();
+        assert_eq!(bf.tokens, bl.tokens, "beam numerics differ");
+        ratios.push(bf.metrics.tokens_per_s() / bl.metrics.tokens_per_s());
+    }
+    assert!(ratios[0] > 1.0, "fiddler not faster at width 2: {ratios:?}");
+    assert!(ratios[1] > ratios[0], "gap does not grow: {ratios:?}");
+}
+
+#[test]
+fn beam_search_scores_monotone_and_sorted() {
+    let hw = HardwareConfig::env2();
+    let mut e = engine(Policy::Fiddler, &hw);
+    let p = prompt(8, 5);
+    let b4 = e.beam_search(&p, 4, 6).unwrap();
+    assert_eq!(b4.tokens.len(), 6);
+    assert!(b4.score.is_finite() && b4.score < 0.0);
+
+    // Wider beam can only improve (or match) the best score.
+    let mut e2 = engine(Policy::Fiddler, &hw);
+    let b8 = e2.beam_search(&p, 8, 6).unwrap();
+    assert!(b8.score >= b4.score - 1e-4, "wider beam got worse: {} vs {}", b8.score, b4.score);
+}
+
+#[test]
+fn beam_width_1_equals_greedy() {
+    let hw = HardwareConfig::env1();
+    let p = prompt(12, 6);
+    let mut a = engine(Policy::Fiddler, &hw);
+    let greedy = a.generate(&p, 5).unwrap().tokens;
+    let mut b = engine(Policy::Fiddler, &hw);
+    let beam = b.beam_search(&p, 1, 5).unwrap().tokens;
+    assert_eq!(greedy, beam);
+}
+
+#[test]
+fn placement_popularity_beats_worst() {
+    let hw = HardwareConfig::env1();
+    let p = prompt(32, 7);
+    let mut tps = Vec::new();
+    for placement in ["popularity", "worst"] {
+        let mut serving = ServingConfig::default();
+        serving.placement =
+            fiddler::config::serving::PlacementStrategy::by_name(placement).unwrap();
+        let mut e =
+            Engine::new(figures::artifact_dir("mixtral-tiny"), &hw, serving).unwrap();
+        let g = e.generate(&p, 12).unwrap();
+        tps.push((g.metrics.tokens_per_s(), e.cx.events.hit_rate()));
+    }
+    assert!(
+        tps[0].1 > tps[1].1,
+        "popularity placement hit rate not better: {tps:?}"
+    );
+    assert!(tps[0].0 >= tps[1].0 * 0.98, "popularity placement slower: {tps:?}");
+}
+
+#[test]
+fn server_continuous_batching_serves_all() {
+    let hw = HardwareConfig::env1();
+    let handle = ServerHandle::spawn(move || {
+        figures::make_engine("mixtral-tiny", &hw, Policy::Fiddler, 0)
+    });
+    let rxs: Vec<_> = (0..5)
+        .map(|i| handle.submit(prompt(8 + i, 10 + i as u64), 6))
+        .collect();
+    for rx in &rxs {
+        let (tokens, m) = collect(rx).unwrap();
+        assert_eq!(tokens.len(), 6);
+        assert!(m.ttft_us() > 0.0);
+        assert!(m.tokens_per_s() > 0.0);
+    }
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn server_batched_equals_sequential_numerics() {
+    // Continuous batching must not change tokens vs one-at-a-time serving.
+    let hw = HardwareConfig::env1();
+    let prompts: Vec<Vec<u32>> = (0..3).map(|i| prompt(10, 20 + i)).collect();
+
+    let mut sequential = Vec::new();
+    {
+        let mut e = engine(Policy::Fiddler, &hw);
+        for p in &prompts {
+            sequential.push(e.generate(p, 5).unwrap().tokens);
+        }
+    }
+    let hw2 = hw.clone();
+    let handle = ServerHandle::spawn(move || {
+        figures::make_engine("mixtral-tiny", &hw2, Policy::Fiddler, 0)
+    });
+    let rxs: Vec<_> =
+        prompts.iter().map(|p| handle.submit(p.clone(), 5)).collect();
+    for (rx, want) in rxs.iter().zip(&sequential) {
+        let (tokens, _) = collect(rx).unwrap();
+        assert_eq!(&tokens, want, "batched decode changed the tokens");
+    }
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn env2_faster_than_env1_for_fiddler() {
+    let p = prompt(32, 30);
+    let mut e1 = engine(Policy::Fiddler, &HardwareConfig::env1());
+    let g1 = e1.generate(&p, 8).unwrap();
+    let mut e2 = engine(Policy::Fiddler, &HardwareConfig::env2());
+    let g2 = e2.generate(&p, 8).unwrap();
+    assert!(
+        g2.metrics.tokens_per_s() > g1.metrics.tokens_per_s(),
+        "env2 ({:.2} tok/s) not faster than env1 ({:.2} tok/s)",
+        g2.metrics.tokens_per_s(),
+        g1.metrics.tokens_per_s()
+    );
+}
+
+#[test]
+fn online_profile_accumulates_routing() {
+    let hw = HardwareConfig::env1();
+    let mut e = engine(Policy::Fiddler, &hw);
+    let p = prompt(32, 40);
+    e.generate(&p, 4).unwrap();
+    let total = e.cx.online_profile.total();
+    // (32 prompt tokens + 3 decode steps) x top-2 x n_layers (4) = 280.
+    assert_eq!(total, (32 + 3) * 2 * 4);
+}

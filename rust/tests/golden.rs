@@ -1,0 +1,207 @@
+//! Cross-language end-to-end correctness: the Rust coordinator composing
+//! per-op HLO executables must reproduce the Python reference model
+//! (python/compile/goldens.py) on the exported weights — logits, routing,
+//! and greedy continuations.
+
+use fiddler::config::model::artifacts_root;
+use fiddler::config::serving::ServingConfig;
+use fiddler::config::HardwareConfig;
+use fiddler::coordinator::Engine;
+use fiddler::kvcache::SequenceCache;
+use fiddler::moe::{ExecContext, ModelRunner};
+use fiddler::popularity::Profile;
+use fiddler::runtime::Tensor;
+use fiddler::scheduler::policy::FiddlerPolicy;
+use fiddler::util::json;
+
+fn goldens(model: &str) -> json::Json {
+    json::load(artifacts_root().join(model).join("goldens.json"))
+        .expect("run `make artifacts` first")
+}
+
+fn runner(model: &str) -> ModelRunner {
+    ModelRunner::load(artifacts_root().join(model)).unwrap()
+}
+
+fn cx_for(r: &ModelRunner) -> ExecContext {
+    let profile =
+        Profile::load(r.cfg.artifact_dir.join("analysis/analysis.json")).unwrap();
+    ExecContext::new(
+        Box::new(FiddlerPolicy::default()),
+        &HardwareConfig::env1(),
+        &r.cfg,
+        &profile,
+        0,
+    )
+}
+
+fn prompt_of(g: &json::Json) -> Vec<u32> {
+    g.get("prompt")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect()
+}
+
+#[test]
+fn prefill_logits_match_python_reference() {
+    let g = goldens("mixtral-tiny");
+    let r = runner("mixtral-tiny");
+    let mut cx = cx_for(&r);
+    let prompt = prompt_of(&g);
+
+    let mut cache = SequenceCache::new(&r.cfg);
+    let h = r.prefill(&prompt, &mut cache, &mut cx).unwrap();
+    let logits = r.lm_head(&h, &mut cx).unwrap();
+
+    let want = g.get("last_logits").unwrap().as_f32_vec().unwrap();
+    let want = Tensor::new(vec![1, want.len()], want).unwrap();
+    let diff = logits.max_abs_diff(&want);
+    assert!(diff < 2e-3, "logits diverge from python reference: max|Δ|={diff}");
+}
+
+#[test]
+fn greedy_continuation_matches_python_reference() {
+    let g = goldens("mixtral-tiny");
+    let hw = HardwareConfig::env1();
+    let mut engine = Engine::new(
+        artifacts_root().join("mixtral-tiny"),
+        &hw,
+        ServingConfig::default(),
+    )
+    .unwrap();
+    let prompt = prompt_of(&g);
+    let want: Vec<u32> = g
+        .get("greedy_continuation")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+
+    let out = engine.generate(&prompt, want.len()).unwrap();
+    assert_eq!(
+        out.tokens, want,
+        "greedy decode diverges from the python reference"
+    );
+}
+
+#[test]
+fn layer0_intermediates_match() {
+    let g = goldens("mixtral-tiny");
+    let r = runner("mixtral-tiny");
+    let mut cx = cx_for(&r);
+    let l0 = g.get("layer0").unwrap();
+    let prompt: Vec<u32> = l0
+        .get("prompt")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+    let n = prompt.len();
+    let h = r.cfg.hidden;
+
+    // Run ONLY layer 0 (attention + MoE), mirroring layer0_intermediates.
+    // Reuse prefill on a 1-layer "view" is not possible, so drive the ops
+    // directly like moe_layer does.
+    use fiddler::runtime::{Arg, TensorI32};
+    use fiddler::util::round_up_bucket;
+    let s = round_up_bucket(n, fiddler::config::model::PREFILL_BUCKETS);
+    let emb = r.ws.embed_tokens(&prompt);
+    let mut x = Tensor::zeros(vec![s, h]);
+    x.data[..n * h].copy_from_slice(&emb.data);
+    let mut args: Vec<Arg> = vec![x.into(), TensorI32::scalar(n as i32).into()];
+    for name in ["attn_norm", "wq", "wk", "wv", "wo"] {
+        args.push(r.ws.layer(0, name).clone().into());
+    }
+    let out = r.rt.execute(&format!("attn_prefill_s{s}"), &args).unwrap();
+    let h_attn = out[0].take_rows(n);
+    let want_h = Tensor::new(
+        vec![n, h],
+        l0.get("h_attn").unwrap().as_f32_vec().unwrap(),
+    )
+    .unwrap();
+    let d = h_attn.max_abs_diff(&want_h);
+    assert!(d < 1e-3, "h_attn diverges: {d}");
+
+    // Gate probs + routing.
+    let mut hb = Tensor::zeros(vec![s, h]);
+    hb.data[..n * h].copy_from_slice(&h_attn.data);
+    let gout = r
+        .rt
+        .execute(
+            &format!("gate_b{s}"),
+            &[
+                hb.into(),
+                r.ws.layer(0, "ffn_norm").clone().into(),
+                r.ws.layer(0, "gate").clone().into(),
+            ],
+        )
+        .unwrap();
+    let e = r.cfg.n_experts;
+    let probs = gout[0].take_rows(n);
+    let want_probs = Tensor::new(
+        vec![n, e],
+        l0.get("gate_probs").unwrap().as_f32_vec().unwrap(),
+    )
+    .unwrap();
+    let d = probs.max_abs_diff(&want_probs);
+    assert!(d < 1e-4, "gate probs diverge: {d}");
+
+    // Top-k ids match jax.lax.top_k exactly.
+    let want_ids: Vec<usize> = l0
+        .get("topk_ids")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap())
+        .collect();
+    for row in 0..n {
+        let (ids, _) = fiddler::moe::topk::top_k(probs.row(row), r.cfg.top_k);
+        assert_eq!(
+            ids,
+            want_ids[row * r.cfg.top_k..(row + 1) * r.cfg.top_k].to_vec(),
+            "top-k ids diverge at row {row}"
+        );
+    }
+
+    // Full layer-0 output through the real moe_layer path.
+    let mut full = Tensor::zeros(vec![s, h]);
+    full.data[..n * h].copy_from_slice(&h_attn.data);
+    r.moe_layer(0, &mut full, n, &mut cx).unwrap();
+    let got = full.take_rows(n);
+    let want_out =
+        Tensor::new(vec![n, h], l0.get("h_out").unwrap().as_f32_vec().unwrap()).unwrap();
+    let d = got.max_abs_diff(&want_out);
+    assert!(d < 1e-3, "layer-0 output diverges: {d}");
+}
+
+#[test]
+fn phi_tiny_greedy_matches() {
+    let g = goldens("phi-tiny");
+    let hw = HardwareConfig::env2();
+    let mut engine = Engine::new(
+        artifacts_root().join("phi-tiny"),
+        &hw,
+        ServingConfig::default(),
+    )
+    .unwrap();
+    assert_eq!(engine.model().n_experts, 16);
+    let prompt = prompt_of(&g);
+    let want: Vec<u32> = g
+        .get("greedy_continuation")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+    let out = engine.generate(&prompt, want.len()).unwrap();
+    assert_eq!(out.tokens, want);
+}

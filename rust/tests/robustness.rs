@@ -1,0 +1,124 @@
+//! Failure-injection tests: the runtime must surface clean errors (not
+//! panics or silent garbage) for corrupt or missing artifacts, bad
+//! requests, and out-of-range inputs.
+
+use fiddler::config::model::artifacts_root;
+use fiddler::config::serving::ServingConfig;
+use fiddler::config::HardwareConfig;
+use fiddler::coordinator::Engine;
+use fiddler::runtime::{Runtime, Tensor, WeightStore};
+use std::path::PathBuf;
+
+/// Copy the mixtral-tiny artifact dir to a temp location so it can be
+/// mutilated safely.
+fn corrupt_copy(name: &str, mutilate: impl Fn(&PathBuf)) -> PathBuf {
+    let src = artifacts_root().join("mixtral-tiny");
+    let dst = std::env::temp_dir().join(format!("fiddler-corrupt-{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dst);
+    // Shallow copy of manifests + weights dir + hlo dir (files are small).
+    for sub in ["", "hlo", "weights", "analysis"] {
+        std::fs::create_dir_all(dst.join(sub)).unwrap();
+        for entry in std::fs::read_dir(src.join(sub)).unwrap() {
+            let p = entry.unwrap().path();
+            if p.is_file() {
+                std::fs::copy(&p, dst.join(sub).join(p.file_name().unwrap())).unwrap();
+            }
+        }
+    }
+    mutilate(&dst);
+    dst
+}
+
+#[test]
+fn missing_weight_file_is_clean_error() {
+    let dir = corrupt_copy("noweight", |d| {
+        std::fs::remove_file(d.join("weights/embed.bin")).unwrap();
+    });
+    let err = match WeightStore::load(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("missing weight file must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("embed"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn truncated_weight_file_is_clean_error() {
+    let dir = corrupt_copy("shortweight", |d| {
+        std::fs::write(d.join("weights/final_norm.bin"), [0u8; 7]).unwrap();
+    });
+    let err = match WeightStore::load(&dir) {
+        Err(e) => e,
+        Ok(_) => panic!("truncated weight file must fail"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("final_norm"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn corrupt_hlo_text_fails_at_compile_not_before() {
+    let dir = corrupt_copy("badhlo", |d| {
+        std::fs::write(d.join("hlo/expert_b1.hlo.txt"), "HloModule garbage\n!!!").unwrap();
+    });
+    let rt = Runtime::open(&dir).unwrap(); // manifest parse still fine
+    let spec = rt.op_spec("expert_b1").unwrap().clone();
+    let h = spec.params[0].0[1];
+    let f = spec.params[1].0[1];
+    let err = rt
+        .execute(
+            "expert_b1",
+            &[
+                Tensor::zeros(vec![1, h]).into(),
+                Tensor::zeros(vec![h, f]).into(),
+                Tensor::zeros(vec![h, f]).into(),
+                Tensor::zeros(vec![f, h]).into(),
+            ],
+        )
+        .unwrap_err();
+    assert!(format!("{err}").contains("expert_b1"));
+}
+
+#[test]
+fn broken_manifest_is_clean_error() {
+    let dir = corrupt_copy("badmanifest", |d| {
+        std::fs::write(d.join("artifacts_manifest.json"), "{not json").unwrap();
+    });
+    assert!(Runtime::open(&dir).is_err());
+}
+
+#[test]
+fn empty_prompt_rejected() {
+    let mut e = Engine::new(
+        artifacts_root().join("mixtral-tiny"),
+        &HardwareConfig::env1(),
+        ServingConfig::default(),
+    )
+    .unwrap();
+    assert!(e.generate(&[], 4).is_err());
+}
+
+#[test]
+fn out_of_vocab_token_panics_with_message() {
+    let e = Engine::new(
+        artifacts_root().join("mixtral-tiny"),
+        &HardwareConfig::env1(),
+        ServingConfig::default(),
+    )
+    .unwrap();
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        e.runner.ws.embed_tokens(&[65535]);
+    }));
+    assert!(r.is_err());
+}
+
+#[test]
+fn oversized_prompt_rejected() {
+    let mut e = Engine::new(
+        artifacts_root().join("mixtral-tiny"),
+        &HardwareConfig::env1(),
+        ServingConfig::default(),
+    )
+    .unwrap();
+    let prompt = vec![1u32; 5000]; // > max prefill bucket 4096
+    assert!(e.generate(&prompt, 1).is_err());
+}
