@@ -1,0 +1,87 @@
+//! Ablation: eviction policies of the dynamic expert cache under a
+//! drifting-popularity decode workload (extension beyond the paper;
+//! cf. HybriMoE's cache management and MoE-Lightning's paging).
+//!
+//!     cargo run --release --example ablation_cache
+//!
+//! Trace-driven (`expertcache::sim` + `workload::DriftingExpertTrace`):
+//! runs against the simulated substrate only — no model artifacts or PJRT
+//! runtime needed.  Decode-layer access is cyclic, which is LRU's worst
+//! case (the least-recent resident expert is exactly one an upcoming
+//! layer will request); `scored` keeps hot experts through admission
+//! churn and `transition` protects predicted next-layer experts, so both
+//! beat `lru` on hit rate under this workload (transition >= lru is the
+//! acceptance bar; see `expertcache::sim` tests), with mean decode
+//! latency moving inversely.  Flags: --layers --experts --top-k
+//! --capacity --steps --phase-len --seed.
+
+use anyhow::Result;
+use fiddler::config::serving::EvictionKind;
+use fiddler::config::HardwareConfig;
+use fiddler::expertcache::sim::run_cache_sim;
+use fiddler::expertcache::{ExpertCache, Lru, ScoredPopularity, TransitionAware};
+use fiddler::latency::LatencyModel;
+use fiddler::metrics::TableReporter;
+use fiddler::util::cli::Args;
+use fiddler::workload::DriftingExpertTrace;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_layers = args.usize_or("layers", 8);
+    let n_experts = args.usize_or("experts", 16);
+    let top_k = args.usize_or("top-k", 2);
+    let capacity = args.usize_or("capacity", n_layers * n_experts / 4);
+    let steps = args.usize_or("steps", 1200);
+    let phase_len = args.usize_or("phase-len", 300);
+    let seed = args.u64_or("seed", 0);
+
+    println!(
+        "drifting workload: {n_layers} layers x {n_experts} experts, top-{top_k}, \
+         cache capacity {capacity}/{} experts, {steps} decode steps, \
+         phase shift every {phase_len} steps",
+        n_layers * n_experts
+    );
+
+    for env in ["env1", "env2"] {
+        let hw = HardwareConfig::by_name(env)?;
+        let lat = LatencyModel::from_hardware(&hw);
+        let mut table = TableReporter::new(&[
+            "eviction",
+            "hit rate %",
+            "evictions",
+            "prefetch hits",
+            "layer ms",
+            "decode ms/step",
+        ]);
+        for kind in
+            [EvictionKind::Lru, EvictionKind::ScoredPopularity, EvictionKind::TransitionAware]
+        {
+            let mut cache = ExpertCache::with_policy(
+                capacity,
+                match kind {
+                    EvictionKind::Lru => Box::new(Lru),
+                    EvictionKind::ScoredPopularity => {
+                        Box::new(ScoredPopularity::new(n_layers, n_experts))
+                    }
+                    EvictionKind::TransitionAware => {
+                        Box::new(TransitionAware::new(n_layers, n_experts, top_k))
+                    }
+                },
+            );
+            let mut trace =
+                DriftingExpertTrace::new(n_layers, n_experts, top_k, phase_len, seed);
+            let r = run_cache_sim(&mut cache, &mut trace, steps, &lat);
+            table.row(vec![
+                kind.label().to_string(),
+                format!("{:.1}", r.hit_rate * 100.0),
+                format!("{}", r.evictions),
+                format!("{}", r.stats.prefetch_hits),
+                format!("{:.2}", r.mean_layer_us / 1e3),
+                format!("{:.2}", r.mean_step_us / 1e3),
+            ]);
+        }
+        println!("\n=== Cache-eviction ablation, {env} ===");
+        table.print();
+    }
+    Ok(())
+}

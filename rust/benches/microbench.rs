@@ -8,7 +8,7 @@
 use fiddler::benchkit::Bench;
 use fiddler::config::model::artifacts_root;
 use fiddler::config::HardwareConfig;
-use fiddler::hardware::memory::GpuMemory;
+use fiddler::expertcache::ExpertCache;
 use fiddler::latency::LatencyModel;
 use fiddler::runtime::{Arg, Runtime, Tensor, TensorI32};
 
@@ -21,9 +21,9 @@ fn main() {
     b.bench("substrate/latency_model_cpu_lat", || lat.cpu_lat(16));
     b.bench("substrate/latency_model_crossover", || lat.crossover_tokens());
     b.bench("substrate/weight_transfer_us", || hw.weight_transfer_us());
-    let mut mem = GpuMemory::with_capacity(56);
+    let mut mem = ExpertCache::with_capacity(56);
     let mut i = 0usize;
-    b.bench("substrate/gpu_memory_lru_fetch", || {
+    b.bench("substrate/expert_cache_lru_fetch", || {
         i = (i + 1) % 256;
         mem.fetch((i / 8, i % 8))
     });

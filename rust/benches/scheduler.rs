@@ -5,7 +5,7 @@
 
 use fiddler::benchkit::Bench;
 use fiddler::config::HardwareConfig;
-use fiddler::hardware::memory::GpuMemory;
+use fiddler::expertcache::{ExpertCache, ScoredPopularity, TransitionAware};
 use fiddler::kvcache::{gather_batch, SequenceCache};
 use fiddler::latency::LatencyModel;
 use fiddler::moe::topk::{route, top_k};
@@ -20,12 +20,49 @@ fn main() {
 
     b.bench("scheduler/decide_expert", || decide_expert(false, 7, &lat));
 
-    let mut mem = GpuMemory::with_capacity(56);
+    let mut mem = ExpertCache::with_capacity(56);
     for i in 0..56 {
         mem.pin((i / 8, i % 8));
     }
     let inp = [3usize, 0, 1, 9, 0, 2, 700, 1];
     b.bench("scheduler/plan_layer_8_experts", || plan_layer(3, &inp, &mem, &lat));
+
+    // Expert-cache hot path: one lookup/touch/evict cycle runs per expert
+    // per layer per token — regressions here hit every decode step.
+    let mut cache = ExpertCache::with_capacity(56);
+    for i in 0..56 {
+        cache.fetch((i / 8, i % 8));
+    }
+    b.bench("expertcache/lookup_hit_touch", || cache.lookup((3, 3), 0.0));
+    let mut i = 0usize;
+    b.bench("expertcache/miss_admit_evict", || {
+        i += 1;
+        let id = ((i % 64) / 8, i % 8); // 64 ids through 56 slots: steady eviction
+        if !cache.lookup(id, 0.0) {
+            cache.admit(id);
+        }
+    });
+    let mut scored = ExpertCache::with_policy(56, Box::new(ScoredPopularity::new(8, 8)));
+    let mut j = 0usize;
+    b.bench("expertcache/miss_admit_evict_scored", || {
+        j += 1;
+        let id = ((j % 64) / 8, j % 8);
+        scored.observe_layer(id.0, &[1, 0, 1, 0, 0, 1, 0, 0]);
+        if !scored.lookup(id, 0.0) {
+            scored.admit(id);
+        }
+    });
+    let mut trans = ExpertCache::with_policy(56, Box::new(TransitionAware::new(8, 8, 2)));
+    let mut k = 0usize;
+    b.bench("expertcache/prefetch_async_transition", || {
+        k += 1;
+        let id = ((k % 64) / 8, k % 8);
+        trans.observe_layer(id.0, &[1, 0, 1, 0, 0, 1, 0, 0]);
+        // Advance virtual time by one transfer per iteration so the lane
+        // drains: cyclic ids through 56 slots keep every call on the
+        // insert+evict+lane path rather than the backlog early-return.
+        trans.prefetch(id, k as f64 * 100.0, 100.0)
+    });
 
     let mut rng = Rng::new(1);
     let probs: Vec<f32> = (0..8).map(|_| rng.f32()).collect();

@@ -15,7 +15,7 @@
 
 use crate::config::serving::ServingConfig;
 use crate::config::DeviceKind;
-use crate::hardware::memory::GpuMemory;
+use crate::expertcache::ExpertCache;
 use crate::latency::LatencyModel;
 use crate::popularity::Profile;
 use crate::scheduler::policy::ExecPolicy;
@@ -39,7 +39,7 @@ impl ExecPolicy for MiiOffloadPolicy {
         &mut self,
         _layer: usize,
         inp_size: &[usize],
-        _memory: &mut GpuMemory,
+        _memory: &mut ExpertCache,
         _lat: &LatencyModel,
         _now_us: f64,
     ) -> Vec<Option<ExpertPlan>> {
@@ -65,7 +65,8 @@ impl ExecPolicy for MiiOffloadPolicy {
 pub struct LruOffloadPolicy {
     /// Experts kept per layer (the paper sets `offload_per_layer` = 7 for
     /// Env1 / 5 for Env2, i.e. cache 1 resp. 3 of 8 per layer); we model
-    /// the equivalent total capacity through GpuMemory's LRU.
+    /// the equivalent total capacity through the [`ExpertCache`] with its
+    /// default LRU eviction policy.
     pub hits: u64,
     pub misses: u64,
 }
@@ -85,9 +86,9 @@ impl ExecPolicy for LruOffloadPolicy {
         &mut self,
         layer: usize,
         inp_size: &[usize],
-        memory: &mut GpuMemory,
+        memory: &mut ExpertCache,
         _lat: &LatencyModel,
-        _now_us: f64,
+        now_us: f64,
     ) -> Vec<Option<ExpertPlan>> {
         inp_size
             .iter()
@@ -96,13 +97,15 @@ impl ExecPolicy for LruOffloadPolicy {
                 if s == 0 {
                     return None;
                 }
-                let transferred = memory.fetch((layer, j));
-                if transferred {
-                    self.misses += 1;
-                    Some(ExpertPlan::GpuTransfer)
-                } else {
+                let id = (layer, j);
+                if memory.lookup(id, now_us) {
                     self.hits += 1;
                     Some(ExpertPlan::GpuResident)
+                } else {
+                    // Synchronous CPU->GPU weight copy, cached for reuse.
+                    memory.admit(id);
+                    self.misses += 1;
+                    Some(ExpertPlan::GpuTransfer)
                 }
             })
             .collect()
@@ -139,7 +142,7 @@ impl ExecPolicy for StaticSplitPolicy {
         "static-split"
     }
 
-    fn init(&mut self, memory: &mut GpuMemory, _profile: &Profile, _seed: u64) {
+    fn init(&mut self, memory: &mut ExpertCache, _profile: &Profile, _seed: u64) {
         // Pin every expert of the first `ngl` layers, capacity permitting.
         'outer: for layer in 0..self.ngl {
             for e in 0..self.n_experts {
@@ -155,9 +158,9 @@ impl ExecPolicy for StaticSplitPolicy {
         &mut self,
         layer: usize,
         inp_size: &[usize],
-        memory: &mut GpuMemory,
+        memory: &mut ExpertCache,
         _lat: &LatencyModel,
-        _now_us: f64,
+        now_us: f64,
     ) -> Vec<Option<ExpertPlan>> {
         inp_size
             .iter()
@@ -165,7 +168,7 @@ impl ExecPolicy for StaticSplitPolicy {
             .map(|(j, &s)| {
                 if s == 0 {
                     None
-                } else if memory.is_resident((layer, j)) {
+                } else if memory.lookup((layer, j), now_us) {
                     Some(ExpertPlan::GpuResident)
                 } else {
                     // Weights live on the CPU; computation follows them.
@@ -200,7 +203,7 @@ mod tests {
     #[test]
     fn mii_always_transfers() {
         let mut pol = MiiOffloadPolicy;
-        let mut mem = GpuMemory::with_capacity(8);
+        let mut mem = ExpertCache::with_capacity(8);
         let plans = pol.plan_layer(0, &[1, 0, 5], &mut mem, &lat(), 0.0);
         assert_eq!(plans[0], Some(ExpertPlan::GpuTransfer));
         assert_eq!(plans[1], None);
@@ -221,7 +224,7 @@ mod tests {
     #[test]
     fn lru_caches_across_steps() {
         let mut pol = LruOffloadPolicy::default();
-        let mut mem = GpuMemory::with_capacity(2);
+        let mut mem = ExpertCache::with_capacity(2);
         let p1 = pol.plan_layer(0, &[1, 1], &mut mem, &lat(), 0.0);
         assert!(p1.iter().all(|p| *p == Some(ExpertPlan::GpuTransfer)));
         let p2 = pol.plan_layer(0, &[1, 1], &mut mem, &lat(), 0.0);
@@ -241,7 +244,7 @@ mod tests {
     #[test]
     fn static_split_layers() {
         let mut pol = StaticSplitPolicy::new(1, 4);
-        let mut mem = GpuMemory::with_capacity(8);
+        let mut mem = ExpertCache::with_capacity(8);
         let prof = Profile::new(2, 4);
         pol.init(&mut mem, &prof, 0);
         let p0 = pol.plan_layer(0, &[1, 1, 1, 1], &mut mem, &lat(), 0.0);
@@ -264,7 +267,7 @@ mod tests {
     #[test]
     fn static_split_respects_capacity() {
         let mut pol = StaticSplitPolicy::new(4, 8);
-        let mut mem = GpuMemory::with_capacity(10);
+        let mut mem = ExpertCache::with_capacity(10);
         pol.init(&mut mem, &Profile::new(4, 8), 0);
         assert_eq!(mem.resident_count(), 10); // capped, no panic
     }

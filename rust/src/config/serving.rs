@@ -21,6 +21,10 @@ pub enum Policy {
     /// Extension: Fiddler + speculative next-layer expert prefetching over
     /// the transition profile (beyond the paper; cf. MoE-Infinity).
     FiddlerPrefetch,
+    /// Extension: Algorithm 1 over a dynamically managed expert cache —
+    /// a fraction of capacity pinned by popularity, the rest governed by a
+    /// pluggable eviction policy (see [`crate::expertcache`]).
+    FiddlerCached,
 }
 
 impl Policy {
@@ -31,8 +35,10 @@ impl Policy {
             "lru" | "mixtral-offloading" => Policy::LruOffload,
             "static" | "llama-cpp" | "llamacpp" => Policy::StaticSplit,
             "fiddler-prefetch" | "prefetch" => Policy::FiddlerPrefetch,
+            "fiddler-cached" | "cached" => Policy::FiddlerCached,
             other => anyhow::bail!(
-                "unknown policy {other:?} (have fiddler, mii, lru, static, fiddler-prefetch)"
+                "unknown policy {other:?} (have fiddler, mii, lru, static, \
+                 fiddler-prefetch, fiddler-cached)"
             ),
         })
     }
@@ -44,6 +50,41 @@ impl Policy {
             Policy::LruOffload => "Mixtral-Offloading*",
             Policy::StaticSplit => "llama.cpp*",
             Policy::FiddlerPrefetch => "Fiddler+prefetch",
+            Policy::FiddlerCached => "Fiddler+cache",
+        }
+    }
+}
+
+/// Which eviction policy the dynamic expert cache runs (used by
+/// [`Policy::FiddlerCached`]; see [`crate::expertcache::eviction`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictionKind {
+    /// Pure recency (LRU).
+    Lru,
+    /// Popularity x recency (HybriMoE-style scoring).
+    ScoredPopularity,
+    /// Protect experts predicted for the next layer from cross-layer
+    /// routing transitions.
+    TransitionAware,
+}
+
+impl EvictionKind {
+    pub fn by_name(name: &str) -> anyhow::Result<EvictionKind> {
+        Ok(match name {
+            "lru" => EvictionKind::Lru,
+            "scored" | "scored-popularity" => EvictionKind::ScoredPopularity,
+            "transition" | "transition-aware" => EvictionKind::TransitionAware,
+            other => anyhow::bail!(
+                "unknown eviction policy {other:?} (have lru, scored, transition)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            EvictionKind::Lru => "lru",
+            EvictionKind::ScoredPopularity => "scored",
+            EvictionKind::TransitionAware => "transition",
         }
     }
 }
@@ -85,6 +126,11 @@ pub struct ServingConfig {
     pub seed: u64,
     /// Sampling temperature; 0 = greedy.
     pub temperature: f64,
+    /// Eviction policy of the dynamic expert cache (FiddlerCached).
+    pub cache_eviction: EvictionKind,
+    /// Fraction of GPU expert capacity pinned by popularity at init under
+    /// FiddlerCached; the rest is the dynamic working set.
+    pub cache_pin_fraction: f64,
 }
 
 impl Default for ServingConfig {
@@ -97,6 +143,8 @@ impl Default for ServingConfig {
             queue_capacity: 256,
             seed: 0,
             temperature: 0.0,
+            cache_eviction: EvictionKind::Lru,
+            cache_pin_fraction: 0.5,
         }
     }
 }
@@ -114,6 +162,14 @@ impl ServingConfig {
         c.max_batch = args.usize_or("max-batch", c.max_batch);
         c.seed = args.u64_or("seed", c.seed);
         c.temperature = args.f64_or("temperature", c.temperature);
+        if let Some(e) = args.get("cache-eviction") {
+            c.cache_eviction = EvictionKind::by_name(e)?;
+        }
+        c.cache_pin_fraction = args.f64_or("cache-pin-fraction", c.cache_pin_fraction);
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&c.cache_pin_fraction),
+            "--cache-pin-fraction must be in [0, 1]"
+        );
         Ok(c)
     }
 
@@ -134,7 +190,37 @@ mod tests {
     fn policy_names() {
         assert_eq!(Policy::by_name("fiddler").unwrap(), Policy::Fiddler);
         assert_eq!(Policy::by_name("llama-cpp").unwrap(), Policy::StaticSplit);
+        assert_eq!(Policy::by_name("fiddler-cached").unwrap(), Policy::FiddlerCached);
         assert!(Policy::by_name("vllm").is_err());
+    }
+
+    #[test]
+    fn eviction_names() {
+        assert_eq!(EvictionKind::by_name("lru").unwrap(), EvictionKind::Lru);
+        assert_eq!(EvictionKind::by_name("scored").unwrap(), EvictionKind::ScoredPopularity);
+        assert_eq!(
+            EvictionKind::by_name("transition-aware").unwrap(),
+            EvictionKind::TransitionAware
+        );
+        assert!(EvictionKind::by_name("fifo").is_err());
+    }
+
+    #[test]
+    fn cache_args_parse_and_validate() {
+        let args = Args::parse(
+            "--policy cached --cache-eviction transition --cache-pin-fraction 0.25"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ServingConfig::from_args(&args).unwrap();
+        assert_eq!(c.policy, Policy::FiddlerCached);
+        assert_eq!(c.cache_eviction, EvictionKind::TransitionAware);
+        assert!((c.cache_pin_fraction - 0.25).abs() < 1e-12);
+
+        let bad = Args::parse(
+            "--cache-pin-fraction 1.5".split_whitespace().map(String::from),
+        );
+        assert!(ServingConfig::from_args(&bad).is_err());
     }
 
     #[test]

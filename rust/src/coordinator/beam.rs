@@ -169,6 +169,7 @@ impl Engine {
             .into_iter()
             .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
             .unwrap();
+        metrics.cache = Some(self.cx.memory.stats().clone());
         Ok(BeamOutput { tokens: best.tokens, score: best.score, metrics })
     }
 }

@@ -2,8 +2,10 @@
 //! batched decode — all timing in virtual µs from the simulated substrate.
 
 use crate::baselines::{LruOffloadPolicy, MiiOffloadPolicy, StaticSplitPolicy};
-use crate::config::serving::{Policy, ServingConfig};
+use crate::config::serving::{EvictionKind, Policy, ServingConfig};
 use crate::config::{HardwareConfig, ModelConfig};
+use crate::expertcache::eviction::{EvictionPolicy, Lru, ScoredPopularity, TransitionAware};
+use crate::expertcache::CachedFiddlerPolicy;
 use crate::kvcache::SequenceCache;
 use crate::metrics::GenMetrics;
 use crate::moe::{ExecContext, ModelRunner};
@@ -13,8 +15,32 @@ use crate::util::rng::Rng;
 use anyhow::Result;
 use std::path::Path;
 
+/// The model's cross-layer transition profile, or the uniform fallback
+/// when no calibration artifacts exist.
+fn load_transitions(cfg: &ModelConfig) -> crate::prefetch::TransitionProfile {
+    crate::prefetch::TransitionProfile::load(cfg.artifact_dir.join("analysis/analysis.json"))
+        .unwrap_or_else(|_| {
+            crate::prefetch::TransitionProfile::uniform(cfg.n_layers, cfg.n_experts)
+        })
+}
+
+/// Build the eviction policy the dynamic expert cache runs, seeded from
+/// build-time calibration artifacts when they exist.
+pub fn make_eviction(kind: EvictionKind, cfg: &ModelConfig) -> Box<dyn EvictionPolicy> {
+    match kind {
+        EvictionKind::Lru => Box::new(Lru),
+        EvictionKind::ScoredPopularity => Box::new(match load_profile(cfg) {
+            Ok(p) => ScoredPopularity::from_profile(p),
+            Err(_) => ScoredPopularity::new(cfg.n_layers, cfg.n_experts),
+        }),
+        EvictionKind::TransitionAware => {
+            Box::new(TransitionAware::from_profile(&load_transitions(cfg), cfg.top_k))
+        }
+    }
+}
+
 /// Build the policy object for a serving config + model.
-pub fn make_policy(serving: &ServingConfig, cfg: &ModelConfig, env_name: &str) -> Box<dyn ExecPolicy> {
+pub fn make_policy(serving: &ServingConfig, cfg: &ModelConfig) -> Box<dyn ExecPolicy> {
     match serving.policy {
         Policy::Fiddler => Box::new(FiddlerPolicy { placement: serving.placement }),
         Policy::MiiOffload => Box::new(MiiOffloadPolicy),
@@ -22,18 +48,16 @@ pub fn make_policy(serving: &ServingConfig, cfg: &ModelConfig, env_name: &str) -
         Policy::StaticSplit => {
             // serving.ngl is paper-scale (out of 32 layers); rescale.
             let scaled = ((serving.ngl * cfg.n_layers + 31) / 32).max(1).min(cfg.n_layers);
-            let _ = env_name;
             Box::new(StaticSplitPolicy::new(scaled, cfg.n_experts))
         }
         Policy::FiddlerPrefetch => {
-            let transitions = crate::prefetch::TransitionProfile::load(
-                cfg.artifact_dir.join("analysis/analysis.json"),
-            )
-            .unwrap_or_else(|_| {
-                crate::prefetch::TransitionProfile::uniform(cfg.n_layers, cfg.n_experts)
-            });
-            Box::new(crate::prefetch::PrefetchingFiddlerPolicy::new(transitions, 2))
+            Box::new(crate::prefetch::PrefetchingFiddlerPolicy::new(load_transitions(cfg), 2))
         }
+        Policy::FiddlerCached => Box::new(CachedFiddlerPolicy::new(
+            make_eviction(serving.cache_eviction, cfg),
+            serving.placement,
+            serving.cache_pin_fraction,
+        )),
     }
 }
 
@@ -63,7 +87,7 @@ impl Engine {
     ) -> Result<Engine> {
         let runner = ModelRunner::load(artifact_dir.as_ref().to_path_buf())?;
         let profile = load_profile(&runner.cfg)?;
-        let policy = make_policy(&serving, &runner.cfg, &hw.name);
+        let policy = make_policy(&serving, &runner.cfg);
         let cx = ExecContext::new(policy, hw, &runner.cfg, &profile, serving.seed);
         let rng = Rng::new(serving.seed ^ 0xC0FFEE);
         Ok(Engine { runner, cx, serving, rng })
@@ -102,6 +126,7 @@ impl Engine {
             tokens.push(tok);
             metrics.token_done_us.push(self.cx.clock.now_us());
         }
+        metrics.cache = Some(self.cx.memory.stats().clone());
         Ok(GenOutput { tokens, metrics })
     }
 

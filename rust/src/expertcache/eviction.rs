@@ -1,0 +1,316 @@
+//! Pluggable eviction policies for the [`ExpertCache`](super::ExpertCache).
+//!
+//! The cache evicts the unpinned resident expert with the **lowest**
+//! retention score; recency ticks are the common substrate, and each
+//! policy adds protection on top of it:
+//!
+//! * [`Lru`] — recency only (what `hardware::memory` inlined and the
+//!   Mixtral-Offloading baseline assumes),
+//! * [`ScoredPopularity`] — recency plus a popularity bonus from online
+//!   routing counts (HybriMoE-style frequency × recency scoring),
+//! * [`TransitionAware`] — recency plus a large bonus for experts the
+//!   cross-layer transition statistics predict for the next layer
+//!   (reusing what [`crate::prefetch::TransitionProfile`] learns offline,
+//!   but updated online with exponential decay so it tracks drifting
+//!   routing distributions).
+
+use super::ExpertId;
+use crate::popularity::Profile;
+use crate::prefetch::TransitionProfile;
+use std::collections::HashSet;
+
+pub trait EvictionPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Retention score of a resident expert (`last_use` is the cache's
+    /// logical tick of its most recent use).  The cache evicts the
+    /// unpinned expert with the LOWEST score, ties broken by id.
+    fn retention_score(&self, id: ExpertId, last_use: u64) -> f64;
+
+    /// Observe one layer's routed token counts before it is planned, so
+    /// stateful policies can track popularity / predicted transitions.
+    fn observe_layer(&mut self, _layer: usize, _inp_size: &[usize]) {}
+}
+
+// ---------------------------------------------------------------------------
+
+/// Pure recency: classic LRU.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Lru;
+
+impl EvictionPolicy for Lru {
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+
+    fn retention_score(&self, _id: ExpertId, last_use: u64) -> f64 {
+        last_use as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Popularity × recency: a maximally popular expert earns
+/// `popularity_weight` extra ticks of protection, so hot experts survive
+/// churn from one-off admissions while cold entries age out as in LRU.
+pub struct ScoredPopularity {
+    counts: Profile,
+    max_count: u64,
+    /// Recency-tick bonus earned by the most popular expert.
+    pub popularity_weight: f64,
+}
+
+impl ScoredPopularity {
+    /// Cold start: popularity is learned online from `observe_layer`.
+    pub fn new(n_layers: usize, n_experts: usize) -> ScoredPopularity {
+        Self::from_profile(Profile::new(n_layers, n_experts))
+    }
+
+    /// Seed from a build-time popularity profile (calibration counts).
+    pub fn from_profile(counts: Profile) -> ScoredPopularity {
+        let max_count = counts.counts.iter().flatten().copied().max().unwrap_or(0);
+        ScoredPopularity { counts, max_count, popularity_weight: 64.0 }
+    }
+}
+
+impl EvictionPolicy for ScoredPopularity {
+    fn name(&self) -> &'static str {
+        "scored"
+    }
+
+    fn observe_layer(&mut self, layer: usize, inp_size: &[usize]) {
+        if layer >= self.counts.n_layers {
+            return;
+        }
+        for (e, &s) in inp_size.iter().enumerate().take(self.counts.n_experts) {
+            if s > 0 {
+                self.counts.record(layer, e, s as u64);
+                self.max_count = self.max_count.max(self.counts.counts[layer][e]);
+            }
+        }
+    }
+
+    fn retention_score(&self, (l, e): ExpertId, last_use: u64) -> f64 {
+        let pop = if self.max_count == 0 || l >= self.counts.n_layers || e >= self.counts.n_experts
+        {
+            0.0
+        } else {
+            self.counts.counts[l][e] as f64 / self.max_count as f64
+        };
+        last_use as f64 + self.popularity_weight * pop
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Transition-aware: protects the experts most likely needed at the next
+/// layer, predicted from exponentially-decayed cross-layer transition
+/// mass.  Decode-layer access is cyclic (layer 0..L-1, repeat), the regime
+/// where plain LRU evicts exactly the upcoming layer's experts; protecting
+/// predicted successors removes that pathology.
+pub struct TransitionAware {
+    n_layers: usize,
+    n_experts: usize,
+    /// Decayed transition mass `w[l][i][j]`: expert `i` active at layer
+    /// `l` followed by expert `j` at layer `l+1`.
+    w: Vec<Vec<Vec<f64>>>,
+    /// Per-step retention of old transition mass (decayed once per
+    /// observed layer-0 routing, i.e. once per decode step).
+    pub decay: f64,
+    /// How many predicted next-layer experts to protect.
+    pub depth: usize,
+    /// Recency-tick bonus for protected experts; large enough to dominate
+    /// any realistic recency gap.
+    pub protect_bonus: f64,
+    protected: HashSet<ExpertId>,
+    prev: Option<(usize, Vec<usize>)>,
+}
+
+impl TransitionAware {
+    /// Cold start: transitions are learned online.
+    pub fn new(n_layers: usize, n_experts: usize, depth: usize) -> TransitionAware {
+        TransitionAware {
+            n_layers,
+            n_experts,
+            w: vec![vec![vec![0.0; n_experts]; n_experts]; n_layers.saturating_sub(1)],
+            decay: 0.95,
+            depth,
+            protect_bonus: 1e12,
+            protected: HashSet::new(),
+            prev: None,
+        }
+    }
+
+    /// Seed the online mass from a build-time transition profile: each
+    /// observed (l, i) row contributes `seed_mass` total, split by the
+    /// calibration distribution, so cold-start predictions match the
+    /// offline predictor and then adapt.
+    pub fn from_profile(t: &TransitionProfile, depth: usize) -> TransitionAware {
+        let mut p = Self::new(t.n_layers, t.n_experts, depth);
+        let seed_mass = 16.0;
+        for (l, rows) in t.counts.iter().enumerate() {
+            for (i, row) in rows.iter().enumerate() {
+                let total: u64 = row.iter().sum();
+                if total == 0 {
+                    continue;
+                }
+                for (j, &c) in row.iter().enumerate() {
+                    p.w[l][i][j] = seed_mass * c as f64 / total as f64;
+                }
+            }
+        }
+        p
+    }
+
+    /// Experts currently protected from eviction.
+    pub fn protected(&self) -> &HashSet<ExpertId> {
+        &self.protected
+    }
+}
+
+impl EvictionPolicy for TransitionAware {
+    fn name(&self) -> &'static str {
+        "transition"
+    }
+
+    fn observe_layer(&mut self, layer: usize, inp_size: &[usize]) {
+        if layer >= self.n_layers || inp_size.len() != self.n_experts {
+            return;
+        }
+        let active: Vec<usize> =
+            inp_size.iter().enumerate().filter(|(_, &s)| s > 0).map(|(e, _)| e).collect();
+
+        // Online update: record transitions from the previously observed
+        // layer's active set into this one.
+        if let Some((pl, prev)) = self.prev.take() {
+            if pl + 1 == layer {
+                for &i in &prev {
+                    for &j in &active {
+                        self.w[pl][i][j] += 1.0;
+                    }
+                }
+            }
+        }
+        // One decay pass per decode step (layer 0 marks a new step) keeps
+        // the mass tracking the current phase of a drifting workload; the
+        // protection set also resets per step and then accumulates over
+        // its layers, so every still-upcoming prediction stays protected.
+        if layer == 0 {
+            for l in &mut self.w {
+                for row in l {
+                    for v in row {
+                        *v *= self.decay;
+                    }
+                }
+            }
+            self.protected.clear();
+        }
+
+        // Predict the next layer's experts and protect them.
+        if layer + 1 < self.n_layers {
+            let t = &self.w[layer];
+            let mut score = vec![0.0f64; self.n_experts];
+            for &i in &active {
+                for (j, sc) in score.iter_mut().enumerate() {
+                    *sc += t[i][j];
+                }
+            }
+            let mut idx: Vec<usize> = (0..self.n_experts).collect();
+            idx.sort_by(|&a, &b| {
+                score[b].partial_cmp(&score[a]).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+            });
+            for &j in idx.iter().take(self.depth) {
+                self.protected.insert((layer + 1, j));
+            }
+        }
+        self.prev = Some((layer, active));
+    }
+
+    fn retention_score(&self, id: ExpertId, last_use: u64) -> f64 {
+        let bonus = if self.protected.contains(&id) { self.protect_bonus } else { 0.0 };
+        last_use as f64 + bonus
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lru_score_is_recency() {
+        let p = Lru;
+        assert!(p.retention_score((0, 0), 5) < p.retention_score((0, 0), 9));
+    }
+
+    #[test]
+    fn scored_popularity_protects_hot_expert() {
+        let mut p = ScoredPopularity::new(1, 4);
+        for _ in 0..50 {
+            p.observe_layer(0, &[3, 0, 0, 0]); // expert 0 hot
+        }
+        p.observe_layer(0, &[0, 1, 0, 0]);
+        // Same recency: the popular expert scores higher.
+        assert!(p.retention_score((0, 0), 10) > p.retention_score((0, 1), 10));
+        // A much more recent cold expert still wins eventually.
+        assert!(p.retention_score((0, 1), 1000) > p.retention_score((0, 0), 10));
+    }
+
+    #[test]
+    fn scored_popularity_ignores_out_of_range() {
+        let mut p = ScoredPopularity::new(1, 2);
+        p.observe_layer(7, &[1, 1]); // out-of-range layer: no panic
+        assert_eq!(p.retention_score((7, 0), 3), 3.0);
+    }
+
+    #[test]
+    fn transition_aware_learns_and_protects() {
+        let mut p = TransitionAware::new(3, 4, 1);
+        // Expert 0 at layer 0 is always followed by expert 2 at layer 1.
+        for _ in 0..10 {
+            p.observe_layer(0, &[1, 0, 0, 0]);
+            p.observe_layer(1, &[0, 0, 1, 0]);
+            p.observe_layer(2, &[0, 1, 0, 0]);
+        }
+        p.observe_layer(0, &[1, 0, 0, 0]);
+        assert!(p.protected().contains(&(1, 2)), "learned successor not protected");
+        let base = p.retention_score((1, 3), 100);
+        let prot = p.retention_score((1, 2), 1);
+        assert!(prot > base, "protection must dominate recency");
+    }
+
+    #[test]
+    fn transition_aware_adapts_after_drift() {
+        let mut p = TransitionAware::new(2, 4, 1);
+        for _ in 0..30 {
+            p.observe_layer(0, &[1, 0, 0, 0]);
+            p.observe_layer(1, &[0, 0, 1, 0]); // 0 -> 2
+        }
+        // Phase shift: 0 -> 3 from now on.  Decay forgets the old mapping.
+        for _ in 0..60 {
+            p.observe_layer(0, &[1, 0, 0, 0]);
+            p.observe_layer(1, &[0, 0, 0, 1]);
+        }
+        p.observe_layer(0, &[1, 0, 0, 0]);
+        assert!(p.protected().contains(&(1, 3)), "did not adapt to the new phase");
+        assert!(!p.protected().contains(&(1, 2)));
+    }
+
+    #[test]
+    fn transition_aware_seeds_from_offline_profile() {
+        let e = 4;
+        let mut counts = vec![vec![vec![0u64; e]; e]; 1];
+        counts[0][1][3] = 100; // 1 at layer 0 predicts 3 at layer 1
+        let t = TransitionProfile { n_layers: 2, n_experts: e, counts };
+        let mut p = TransitionAware::from_profile(&t, 1);
+        p.observe_layer(0, &[0, 2, 0, 0]);
+        assert!(p.protected().contains(&(1, 3)));
+    }
+
+    #[test]
+    fn transition_aware_guards_dim_mismatch() {
+        let mut p = TransitionAware::new(2, 4, 1);
+        p.observe_layer(0, &[1, 1]); // wrong width: ignored, no panic
+        p.observe_layer(9, &[1, 1, 1, 1]); // out-of-range layer: ignored
+        assert!(p.protected().is_empty());
+    }
+}

@@ -1,0 +1,558 @@
+//! Dynamic expert-cache subsystem — the single authority for GPU expert
+//! residency.
+//!
+//! The paper pins a static popularity-ranked expert set at initialization
+//! (§3.1/§3.4) and models dynamic residency only inside the LRU baseline;
+//! follow-up systems (HybriMoE's hybrid cache management, MoE-Lightning's
+//! paging — see PAPERS.md) show that score-based *dynamic* caching wins
+//! once the routing distribution drifts.  This module factors every form
+//! of expert residency the repo models into one substrate:
+//!
+//! * [`ExpertCache`] — capacity accounting, pinning (initialization-time
+//!   placement is a cache with eviction disabled for those entries),
+//!   per-expert asynchronous transfer state (an entry inserted by
+//!   [`ExpertCache::prefetch`] occupies a slot immediately but only counts
+//!   as *ready* once its serialized-PCIe transfer completes), and
+//!   hit/miss/eviction/bytes-moved counters ([`CacheStats`]).
+//! * [`EvictionPolicy`] ([`eviction`]) — pluggable victim selection:
+//!   [`Lru`](eviction::Lru), [`ScoredPopularity`](eviction::ScoredPopularity)
+//!   (popularity × recency), and [`TransitionAware`](eviction::TransitionAware)
+//!   (protects experts predicted for the next layer from cross-layer
+//!   routing transitions).
+//! * [`CachedFiddlerPolicy`] ([`policy`]) — the `fiddler-cached` serving
+//!   mode: Algorithm 1 planning over a partially pinned, dynamically
+//!   managed cache.
+//! * [`sim`] — a trace-driven harness that compares eviction policies
+//!   under a drifting workload without model artifacts
+//!   (`examples/ablation_cache.rs`).
+//!
+//! All former users of `hardware::memory::GpuMemory` (placement, the
+//! scheduler policies, the baselines, prefetching) now route through this
+//! type; `GpuMemory` remains as a re-export alias.
+
+pub mod eviction;
+pub mod policy;
+pub mod sim;
+
+pub use eviction::{EvictionPolicy, Lru, ScoredPopularity, TransitionAware};
+pub use policy::CachedFiddlerPolicy;
+
+use crate::config::hardware::PAPER_EXPERT_BYTES;
+use crate::config::HardwareConfig;
+use crate::util::json::Json;
+use std::collections::HashMap;
+
+/// Identifies one expert of one layer.
+pub type ExpertId = (usize, usize); // (layer, expert)
+
+/// Residency record of one cached expert.
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    /// Logical timestamp of the most recent use (recency substrate for
+    /// eviction scoring).
+    last_use: u64,
+    /// Virtual time (µs) at which the expert's weights are usable on the
+    /// GPU.  0.0 for pinned entries and synchronous fetches; prefetched
+    /// entries carry their transfer-completion timestamp and read as
+    /// misses until then.
+    ready_us: f64,
+    /// Pinned entries are never evicted (initialization-time placement).
+    pinned: bool,
+    /// Inserted speculatively; the first hit counts as a prefetch hit.
+    prefetched: bool,
+}
+
+/// Hit/miss/eviction/transfer counters of one cache.
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// CPU->GPU weight transfers issued (demand fetches + prefetches,
+    /// including transfers that could not be cached because every slot was
+    /// pinned).
+    pub transfers_in: u64,
+    /// Bytes moved over PCIe for those transfers (paper-scale experts).
+    pub bytes_in: u64,
+    pub prefetches: u64,
+    /// Hits whose entry was inserted speculatively.
+    pub prefetch_hits: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let n = self.lookups();
+        if n == 0 {
+            0.0
+        } else {
+            self.hits as f64 / n as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("hits", Json::Num(self.hits as f64));
+        o.set("misses", Json::Num(self.misses as f64));
+        o.set("hit_rate", Json::Num(self.hit_rate()));
+        o.set("evictions", Json::Num(self.evictions as f64));
+        o.set("transfers_in", Json::Num(self.transfers_in as f64));
+        o.set("bytes_in", Json::Num(self.bytes_in as f64));
+        o.set("prefetches", Json::Num(self.prefetches as f64));
+        o.set("prefetch_hits", Json::Num(self.prefetch_hits as f64));
+        o
+    }
+}
+
+/// GPU expert-residency cache with pluggable eviction and asynchronous
+/// transfer tracking.
+pub struct ExpertCache {
+    capacity_experts: usize,
+    entries: HashMap<ExpertId, Entry>,
+    policy: Box<dyn EvictionPolicy>,
+    /// Logical clock: bumped on every use/insert (recency ordering).
+    tick: u64,
+    /// The serialized PCIe lane: time at which the next speculative
+    /// transfer can start (generalizes what `prefetch` modeled ad hoc).
+    pcie_free_us: f64,
+    /// Speculation budget: a prefetch is rejected when the lane is already
+    /// backlogged by more than this many transfer times — an entry that
+    /// cannot become ready in useful time must not occupy a cache slot.
+    pub max_lane_depth: f64,
+    /// Bytes charged per expert transfer (paper-scale by default).
+    expert_bytes: u64,
+    stats: CacheStats,
+}
+
+impl std::fmt::Debug for ExpertCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ExpertCache")
+            .field("capacity", &self.capacity_experts)
+            .field("resident", &self.entries.len())
+            .field("policy", &self.policy.name())
+            .field("stats", &self.stats)
+            .finish()
+    }
+}
+
+impl ExpertCache {
+    pub fn new(hw: &HardwareConfig) -> Self {
+        Self::with_capacity(hw.gpu_expert_capacity())
+    }
+
+    /// LRU-evicting cache (the default eviction policy).
+    pub fn with_capacity(capacity_experts: usize) -> Self {
+        Self::with_policy(capacity_experts, Box::new(Lru))
+    }
+
+    pub fn with_policy(capacity_experts: usize, policy: Box<dyn EvictionPolicy>) -> Self {
+        ExpertCache {
+            capacity_experts,
+            entries: HashMap::new(),
+            policy,
+            tick: 0,
+            pcie_free_us: 0.0,
+            max_lane_depth: 4.0,
+            expert_bytes: PAPER_EXPERT_BYTES,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Swap the eviction policy (exec policies install theirs during
+    /// `init`, before any dynamic entries exist).
+    pub fn set_policy(&mut self, policy: Box<dyn EvictionPolicy>) {
+        self.policy = policy;
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity_experts
+    }
+
+    pub fn resident_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_resident(&self, id: ExpertId) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    pub fn is_pinned(&self, id: ExpertId) -> bool {
+        self.entries.get(&id).map(|e| e.pinned).unwrap_or(false)
+    }
+
+    /// Resident AND its transfer has completed by `now_us`.
+    pub fn is_ready(&self, id: ExpertId, now_us: f64) -> bool {
+        self.entries.get(&id).map(|e| e.ready_us <= now_us).unwrap_or(false)
+    }
+
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Pin `id` at initialization. Panics if capacity would be exceeded —
+    /// placement must respect capacity by construction.
+    pub fn pin(&mut self, id: ExpertId) {
+        assert!(
+            self.entries.len() < self.capacity_experts,
+            "pin() beyond GPU capacity {}",
+            self.capacity_experts
+        );
+        assert!(!self.is_resident(id), "pin() duplicate {id:?}");
+        self.tick += 1;
+        self.entries.insert(
+            id,
+            Entry { last_use: self.tick, ready_us: 0.0, pinned: true, prefetched: false },
+        );
+    }
+
+    /// Mark a use of a resident expert (refreshes its recency stamp).
+    pub fn touch(&mut self, id: ExpertId) {
+        self.tick += 1;
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.last_use = self.tick;
+        }
+    }
+
+    /// Is `id` usable right now?  Counts a hit (touching the entry) or a
+    /// miss; an in-flight prefetch whose transfer has not completed by
+    /// `now_us` counts as a miss.
+    pub fn lookup(&mut self, id: ExpertId, now_us: f64) -> bool {
+        match self.entries.get_mut(&id) {
+            Some(e) if e.ready_us <= now_us => {
+                self.tick += 1;
+                e.last_use = self.tick;
+                if e.prefetched {
+                    e.prefetched = false;
+                    self.stats.prefetch_hits += 1;
+                }
+                self.stats.hits += 1;
+                true
+            }
+            _ => {
+                self.stats.misses += 1;
+                false
+            }
+        }
+    }
+
+    /// Insert `id` after a synchronous (demand) weight transfer, evicting
+    /// per the policy if full.  An entry whose speculative transfer is
+    /// still in flight is *promoted* to ready — the demand transfer just
+    /// delivered the weights, so later lookups must not wait for the
+    /// original completion time.  Charges the transfer to the stats;
+    /// returns false when nothing changed (already ready, or every slot
+    /// pinned).
+    pub fn admit(&mut self, id: ExpertId) -> bool {
+        if let Some(e) = self.entries.get_mut(&id) {
+            if e.ready_us == 0.0 {
+                return false; // already ready: no transfer needed
+            }
+            e.ready_us = 0.0;
+            e.prefetched = false;
+            self.tick += 1;
+            e.last_use = self.tick;
+            self.stats.transfers_in += 1;
+            self.stats.bytes_in += self.expert_bytes;
+            return true;
+        }
+        self.stats.transfers_in += 1;
+        self.stats.bytes_in += self.expert_bytes;
+        self.insert_evicting(id, 0.0, false)
+    }
+
+    /// Compatibility demand-fetch (the old `GpuMemory::fetch`, a clockless
+    /// synchronous path): ready entry => touch and return false; anything
+    /// else — absent OR still in flight — is a miss whose demand transfer
+    /// inserts/promotes the entry, returning true.  (Synchronously managed
+    /// entries always have `ready_us == 0.0`.)
+    pub fn fetch(&mut self, id: ExpertId) -> bool {
+        if self.is_ready(id, 0.0) {
+            let _ = self.lookup(id, 0.0);
+            return false;
+        }
+        self.stats.misses += 1;
+        self.admit(id);
+        true
+    }
+
+    /// Issue an asynchronous CPU->GPU transfer for `id` on the serialized
+    /// PCIe lane, overlapping ongoing compute.  The entry occupies a slot
+    /// immediately but reads as a miss until the returned completion time.
+    /// Returns `None` if the expert is already resident or cannot be
+    /// cached (all slots pinned).
+    pub fn prefetch(&mut self, id: ExpertId, now_us: f64, transfer_us: f64) -> Option<f64> {
+        if self.is_resident(id) {
+            return None;
+        }
+        if self.pcie_free_us > now_us + self.max_lane_depth * transfer_us {
+            return None; // lane backlogged: speculation would arrive too late
+        }
+        let start = self.pcie_free_us.max(now_us);
+        let ready = start + transfer_us;
+        if !self.insert_evicting(id, ready, true) {
+            return None;
+        }
+        self.pcie_free_us = ready;
+        self.stats.prefetches += 1;
+        self.stats.transfers_in += 1;
+        self.stats.bytes_in += self.expert_bytes;
+        Some(ready)
+    }
+
+    /// Forward one layer's observed routing (token counts per expert) to
+    /// the eviction policy so popularity/transition state stays current.
+    pub fn observe_layer(&mut self, layer: usize, inp_size: &[usize]) {
+        self.policy.observe_layer(layer, inp_size);
+    }
+
+    /// All currently resident experts (unordered).
+    pub fn resident_experts(&self) -> Vec<ExpertId> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// Insert with eviction; false when every slot is pinned and full.
+    fn insert_evicting(&mut self, id: ExpertId, ready_us: f64, prefetched: bool) -> bool {
+        if self.entries.len() >= self.capacity_experts {
+            match self.choose_victim() {
+                Some(v) => {
+                    self.entries.remove(&v);
+                    self.stats.evictions += 1;
+                }
+                None => return false,
+            }
+        }
+        self.tick += 1;
+        self.entries.insert(
+            id,
+            Entry { last_use: self.tick, ready_us, pinned: false, prefetched },
+        );
+        true
+    }
+
+    /// Unpinned resident expert with the lowest retention score; ties are
+    /// broken by id so eviction is deterministic regardless of hash order.
+    fn choose_victim(&self) -> Option<ExpertId> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| !e.pinned)
+            .min_by(|(a, ea), (b, eb)| {
+                let sa = self.policy.retention_score(**a, ea.last_use);
+                let sb = self.policy.retention_score(**b, eb.last_use);
+                sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(b))
+            })
+            .map(|(&id, _)| id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{check, Gen};
+
+    #[test]
+    fn pin_respects_capacity() {
+        let mut m = ExpertCache::with_capacity(2);
+        m.pin((0, 0));
+        m.pin((0, 1));
+        assert_eq!(m.resident_count(), 2);
+        assert!(m.is_resident((0, 0)));
+        assert!(m.is_pinned((0, 1)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn pin_over_capacity_panics() {
+        let mut m = ExpertCache::with_capacity(1);
+        m.pin((0, 0));
+        m.pin((0, 1));
+    }
+
+    #[test]
+    fn fetch_caches_and_counts() {
+        let mut m = ExpertCache::with_capacity(2);
+        assert!(m.fetch((0, 0))); // miss
+        assert!(!m.fetch((0, 0))); // hit
+        assert_eq!(m.stats().transfers_in, 1);
+        assert_eq!(m.stats().hits, 1);
+        assert_eq!(m.stats().misses, 1);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_unpinned() {
+        let mut m = ExpertCache::with_capacity(2);
+        m.fetch((0, 0));
+        m.fetch((0, 1));
+        m.touch((0, 0)); // 1 is now LRU
+        m.fetch((0, 2)); // evicts 1
+        assert!(m.is_resident((0, 0)));
+        assert!(!m.is_resident((0, 1)));
+        assert!(m.is_resident((0, 2)));
+        assert_eq!(m.stats().evictions, 1);
+    }
+
+    #[test]
+    fn pinned_never_evicted() {
+        let mut m = ExpertCache::with_capacity(2);
+        m.pin((9, 9));
+        m.fetch((0, 0));
+        m.fetch((0, 1)); // evicts (0,0), not the pinned one
+        assert!(m.is_resident((9, 9)));
+        assert!(!m.is_resident((0, 0)));
+    }
+
+    #[test]
+    fn all_pinned_full_passthrough() {
+        let mut m = ExpertCache::with_capacity(1);
+        m.pin((0, 0));
+        assert!(m.fetch((1, 1))); // transfer, but no eviction possible
+        assert!(!m.is_resident((1, 1)));
+        assert_eq!(m.stats().evictions, 0);
+        assert_eq!(m.stats().transfers_in, 1);
+    }
+
+    #[test]
+    fn prefetch_is_miss_until_ready() {
+        let mut m = ExpertCache::with_capacity(4);
+        let ready = m.prefetch((0, 0), 100.0, 50.0).unwrap();
+        assert_eq!(ready, 150.0);
+        assert!(m.is_resident((0, 0)));
+        assert!(!m.is_ready((0, 0), 120.0));
+        assert!(!m.lookup((0, 0), 120.0)); // in flight: miss
+        assert!(m.lookup((0, 0), 150.0)); // transfer complete: hit
+        assert_eq!(m.stats().prefetch_hits, 1);
+        // The second hit on the same entry is no longer a prefetch hit.
+        assert!(m.lookup((0, 0), 151.0));
+        assert_eq!(m.stats().prefetch_hits, 1);
+    }
+
+    #[test]
+    fn pcie_lane_serializes_prefetches() {
+        let mut m = ExpertCache::with_capacity(4);
+        let r0 = m.prefetch((0, 0), 0.0, 100.0).unwrap();
+        let r1 = m.prefetch((0, 1), 0.0, 100.0).unwrap();
+        assert_eq!(r0, 100.0);
+        assert_eq!(r1, 200.0, "second transfer must queue behind the first");
+        assert!(m.prefetch((0, 1), 0.0, 100.0).is_none(), "already resident");
+    }
+
+    #[test]
+    fn demand_admit_promotes_in_flight_prefetch() {
+        // A synchronous demand transfer delivers the weights NOW; it must
+        // not leave the entry waiting on its older async completion time.
+        let mut m = ExpertCache::with_capacity(4);
+        m.prefetch((0, 0), 0.0, 1000.0).unwrap(); // ready at 1000
+        assert!(!m.lookup((0, 0), 10.0)); // still in flight: miss
+        assert!(m.admit((0, 0)), "promotion must count as a transfer");
+        assert!(m.lookup((0, 0), 10.0), "promoted entry must be ready");
+        assert_eq!(m.stats().transfers_in, 2);
+        // Re-admitting a ready entry is a no-op.
+        assert!(!m.admit((0, 0)));
+        assert_eq!(m.stats().transfers_in, 2);
+    }
+
+    #[test]
+    fn backlogged_lane_rejects_speculation() {
+        let mut m = ExpertCache::with_capacity(64);
+        m.max_lane_depth = 2.0;
+        assert!(m.prefetch((0, 0), 0.0, 100.0).is_some()); // lane free at 100
+        assert!(m.prefetch((0, 1), 0.0, 100.0).is_some()); // 200
+        assert!(m.prefetch((0, 2), 0.0, 100.0).is_some()); // 300 > 0 + 2*100 next
+        assert!(m.prefetch((0, 3), 0.0, 100.0).is_none(), "backlog must cap");
+        // Time advances: the lane drains and speculation resumes.
+        assert!(m.prefetch((0, 3), 250.0, 100.0).is_some());
+    }
+
+    #[test]
+    fn eviction_deterministic_on_ties() {
+        // Same-tick scores cannot happen (ticks are unique), but equal
+        // policy scores can; id order must break the tie identically on
+        // every run.
+        struct Constant;
+        impl EvictionPolicy for Constant {
+            fn name(&self) -> &'static str {
+                "const"
+            }
+            fn retention_score(&self, _id: ExpertId, _last_use: u64) -> f64 {
+                1.0
+            }
+        }
+        let mut m = ExpertCache::with_policy(2, Box::new(Constant));
+        m.fetch((1, 1));
+        m.fetch((0, 3));
+        m.fetch((2, 2)); // evicts (0, 3): smallest id among score ties
+        assert!(!m.is_resident((0, 3)));
+        assert!(m.is_resident((1, 1)));
+    }
+
+    #[test]
+    fn residency_invariants_property() {
+        // Pinned experts are never evicted, and the resident count never
+        // exceeds capacity, across random op sequences / policies / seeds.
+        check("expertcache invariants", 96, |g: &mut Gen| {
+            let layers = g.usize_in(1..5);
+            let experts = g.usize_in(1..9);
+            let capacity = g.usize_in(1..layers * experts + 2);
+            let policy: Box<dyn EvictionPolicy> = match g.usize_in(0..3) {
+                0 => Box::new(Lru),
+                1 => Box::new(ScoredPopularity::new(layers, experts)),
+                _ => Box::new(TransitionAware::new(layers, experts, 2)),
+            };
+            let mut cache = ExpertCache::with_policy(capacity, policy);
+
+            let mut all: Vec<ExpertId> = (0..layers)
+                .flat_map(|l| (0..experts).map(move |e| (l, e)))
+                .collect();
+            g.rng().shuffle(&mut all);
+            let n_pin = g.usize_in(0..capacity.min(all.len()) + 1);
+            let pinned: Vec<ExpertId> = all[..n_pin].to_vec();
+            for &id in &pinned {
+                cache.pin(id);
+            }
+
+            let mut now = 0.0;
+            for _ in 0..g.usize_in(1..150) {
+                let id = (g.usize_in(0..layers), g.usize_in(0..experts));
+                match g.usize_in(0..5) {
+                    0 => {
+                        cache.fetch(id);
+                    }
+                    1 => {
+                        cache.lookup(id, now);
+                    }
+                    2 => {
+                        let _ = cache.prefetch(id, now, g.f64_in(1.0, 200.0));
+                    }
+                    3 => cache.touch(id),
+                    _ => {
+                        let inp = g.vec_usize(experts..experts + 1, 0..3);
+                        cache.observe_layer(g.usize_in(0..layers), &inp);
+                    }
+                }
+                now += g.f64_in(0.0, 100.0);
+
+                assert!(
+                    cache.resident_count() <= cache.capacity(),
+                    "resident {} > capacity {}",
+                    cache.resident_count(),
+                    cache.capacity()
+                );
+                for &id in &pinned {
+                    assert!(cache.is_resident(id), "pinned {id:?} evicted");
+                    assert!(cache.is_pinned(id));
+                }
+            }
+            // Stats are consistent.
+            let s = cache.stats();
+            assert_eq!(s.lookups(), s.hits + s.misses);
+            assert!(s.prefetch_hits <= s.prefetches);
+            assert!((0.0..=1.0).contains(&s.hit_rate()));
+        });
+    }
+}

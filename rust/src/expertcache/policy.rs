@@ -1,0 +1,189 @@
+//! `fiddler-cached` — the paper's Algorithm 1 over a *dynamically managed*
+//! expert cache (serving mode [`crate::config::serving::Policy::FiddlerCached`]).
+//!
+//! Plain Fiddler fills the whole GPU budget with pinned popular experts, so
+//! residency never adapts; under a drifting routing distribution the pinned
+//! set decays (the motivation behind HybriMoE / MoE-Lightning — PAPERS.md).
+//! This policy pins only a fraction of the capacity by popularity and lets
+//! the [`ExpertCache`] manage the rest:
+//!
+//! * per-expert decisions are exactly Algorithm 1 (resident -> GPU,
+//!   otherwise CPU vs transfer by cost),
+//! * a demand transfer (prefill regime) admits the expert into the cache,
+//! * a CPU-served miss (decode regime) triggers a *background* admission
+//!   over the idle, serialized PCIe lane — the expert becomes usable a few
+//!   layers later without blocking anything, which is how residency tracks
+//!   the workload,
+//! * victims are chosen by the installed [`EvictionPolicy`].
+
+use super::eviction::EvictionPolicy;
+use crate::config::serving::PlacementStrategy;
+use crate::expertcache::ExpertCache;
+use crate::latency::LatencyModel;
+use crate::placement::choose_experts;
+use crate::popularity::Profile;
+use crate::scheduler::policy::ExecPolicy;
+use crate::scheduler::{decide_expert, ExpertPlan};
+
+pub struct CachedFiddlerPolicy {
+    pub placement: PlacementStrategy,
+    /// Fraction of the GPU expert capacity pinned by popularity at init;
+    /// the remainder is the dynamic working set.  At least one slot always
+    /// stays unpinned so the cache can adapt.
+    pub pin_fraction: f64,
+    /// Installed into the cache during `init` (before dynamic entries).
+    eviction: Option<Box<dyn EvictionPolicy>>,
+}
+
+impl CachedFiddlerPolicy {
+    pub fn new(
+        eviction: Box<dyn EvictionPolicy>,
+        placement: PlacementStrategy,
+        pin_fraction: f64,
+    ) -> CachedFiddlerPolicy {
+        assert!((0.0..=1.0).contains(&pin_fraction), "pin_fraction out of [0, 1]");
+        CachedFiddlerPolicy { placement, pin_fraction, eviction: Some(eviction) }
+    }
+}
+
+impl ExecPolicy for CachedFiddlerPolicy {
+    fn name(&self) -> &'static str {
+        "fiddler-cached"
+    }
+
+    fn init(&mut self, memory: &mut ExpertCache, profile: &Profile, seed: u64) {
+        if let Some(p) = self.eviction.take() {
+            memory.set_policy(p);
+        }
+        let budget = ((memory.capacity() as f64 * self.pin_fraction).floor() as usize)
+            .min(memory.capacity().saturating_sub(1));
+        for id in choose_experts(profile, budget, self.placement, seed) {
+            memory.pin(id);
+        }
+    }
+
+    fn plan_layer(
+        &mut self,
+        layer: usize,
+        inp_size: &[usize],
+        memory: &mut ExpertCache,
+        lat: &LatencyModel,
+        now_us: f64,
+    ) -> Vec<Option<ExpertPlan>> {
+        memory.observe_layer(layer, inp_size);
+        inp_size
+            .iter()
+            .enumerate()
+            .map(|(j, &s)| {
+                if s == 0 {
+                    return None;
+                }
+                let id = (layer, j);
+                let resident = memory.lookup(id, now_us);
+                let plan = decide_expert(resident, s, lat);
+                match plan {
+                    // The demand transfer just put the weights on the GPU:
+                    // keep them (prefill admissions warm the decode phase).
+                    Some(ExpertPlan::GpuTransfer) => {
+                        memory.admit(id);
+                    }
+                    // Decode-regime miss: serve on the CPU now, and bring
+                    // the expert in over the idle PCIe lane for future
+                    // steps.
+                    Some(ExpertPlan::Cpu) => {
+                        let _ = memory.prefetch(id, now_us, lat.transfer_lat());
+                    }
+                    _ => {}
+                }
+                plan
+            })
+            .collect()
+    }
+
+    fn expert_cost_us(&self, plan: ExpertPlan, s: usize, lat: &LatencyModel) -> f64 {
+        match plan {
+            // Same overlap as Fiddler (§3.2): streaming hides compute.
+            ExpertPlan::GpuTransfer => lat.transfer_lat().max(lat.gpu_lat(s)),
+            p => p.cost_us(lat, s),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::expertcache::eviction::Lru;
+
+    fn lat() -> LatencyModel {
+        LatencyModel::from_hardware(&HardwareConfig::env1())
+    }
+
+    fn profile() -> Profile {
+        let mut p = Profile::new(1, 4);
+        p.counts[0] = vec![100, 1, 50, 2];
+        p
+    }
+
+    #[test]
+    fn init_pins_only_a_fraction() {
+        let mut pol = CachedFiddlerPolicy::new(Box::new(Lru), PlacementStrategy::Popularity, 0.5);
+        let mut mem = ExpertCache::with_capacity(4);
+        pol.init(&mut mem, &profile(), 0);
+        assert_eq!(mem.resident_count(), 2);
+        assert!(mem.is_pinned((0, 0)));
+        assert!(mem.is_pinned((0, 2)));
+    }
+
+    #[test]
+    fn full_pin_fraction_leaves_one_dynamic_slot() {
+        let mut pol = CachedFiddlerPolicy::new(Box::new(Lru), PlacementStrategy::Popularity, 1.0);
+        let mut mem = ExpertCache::with_capacity(3);
+        pol.init(&mut mem, &profile(), 0);
+        assert_eq!(mem.resident_count(), 2, "one slot must stay unpinned");
+    }
+
+    #[test]
+    fn decode_miss_prefetches_in_background() {
+        let mut pol = CachedFiddlerPolicy::new(Box::new(Lru), PlacementStrategy::Popularity, 0.5);
+        let mut mem = ExpertCache::with_capacity(4);
+        let lat = lat();
+        pol.init(&mut mem, &profile(), 0);
+        // Expert 1 misses with one token: CPU now, admitted asynchronously.
+        let plans = pol.plan_layer(0, &[0, 1, 0, 0], &mut mem, &lat, 0.0);
+        assert_eq!(plans[1], Some(ExpertPlan::Cpu));
+        assert!(mem.is_resident((0, 1)), "background admission missing");
+        assert!(!mem.is_ready((0, 1), 0.0), "must not be usable instantly");
+        // Once the transfer completes it is a straight hit.
+        let later = lat.transfer_lat() + 1.0;
+        let plans = pol.plan_layer(0, &[0, 1, 0, 0], &mut mem, &lat, later);
+        assert_eq!(plans[1], Some(ExpertPlan::GpuResident));
+        assert_eq!(mem.stats().prefetch_hits, 1);
+    }
+
+    #[test]
+    fn prefill_transfer_is_admitted() {
+        let mut pol = CachedFiddlerPolicy::new(Box::new(Lru), PlacementStrategy::Popularity, 0.5);
+        let mut mem = ExpertCache::with_capacity(4);
+        let lat = lat();
+        pol.init(&mut mem, &profile(), 0);
+        let plans = pol.plan_layer(0, &[0, 900, 0, 0], &mut mem, &lat, 0.0);
+        assert_eq!(plans[1], Some(ExpertPlan::GpuTransfer));
+        assert!(mem.is_ready((0, 1), 0.0), "demand admission is synchronous");
+    }
+
+    #[test]
+    fn numerically_identical_plans_to_algorithm_1() {
+        // The cached mode may change WHERE costs accrue, never the plan
+        // semantics: resident -> GPU, else cost argmin.
+        let mut pol = CachedFiddlerPolicy::new(Box::new(Lru), PlacementStrategy::Popularity, 0.5);
+        let mut mem = ExpertCache::with_capacity(4);
+        let lat = lat();
+        pol.init(&mut mem, &profile(), 0);
+        let plans = pol.plan_layer(0, &[1, 1, 0, 900], &mut mem, &lat, 0.0);
+        assert_eq!(plans[0], Some(ExpertPlan::GpuResident));
+        assert_eq!(plans[1], Some(ExpertPlan::Cpu));
+        assert_eq!(plans[2], None);
+        assert_eq!(plans[3], Some(ExpertPlan::GpuTransfer));
+    }
+}

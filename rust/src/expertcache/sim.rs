@@ -1,0 +1,140 @@
+//! Trace-driven cache simulation — compares eviction policies on routing
+//! traces without model artifacts or the PJRT runtime.
+//!
+//! The loop mirrors what [`super::CachedFiddlerPolicy`] does inside the
+//! engine: per layer, observe the routing, look each active expert up,
+//! apply Algorithm 1 to misses (CPU vs demand transfer by cost), and admit
+//! missed experts — synchronously on demand transfers, asynchronously over
+//! the serialized PCIe lane on CPU-served decode misses.  Per-layer
+//! latency is the max of the two device queues, as in
+//! [`crate::scheduler::predict_layer_us`].
+//!
+//! Used by `examples/ablation_cache.rs` and the cross-policy tests below.
+
+use super::ExpertCache;
+use crate::latency::LatencyModel;
+use crate::scheduler::{decide_expert, ExpertPlan};
+use crate::util::stats::mean;
+use crate::workload::DriftingExpertTrace;
+
+/// Outcome of one simulated serving run.
+#[derive(Clone, Debug)]
+pub struct CacheSimReport {
+    pub policy: &'static str,
+    pub hit_rate: f64,
+    pub evictions: u64,
+    /// Mean simulated latency of one MoE layer (µs).
+    pub mean_layer_us: f64,
+    /// Mean simulated decode latency of one full step (µs).
+    pub mean_step_us: f64,
+    pub stats: super::CacheStats,
+}
+
+/// Drive `cache` over `steps` decode steps of `trace`.
+pub fn run_cache_sim(
+    cache: &mut ExpertCache,
+    trace: &mut DriftingExpertTrace,
+    steps: usize,
+    lat: &LatencyModel,
+) -> CacheSimReport {
+    let mut now = 0.0f64;
+    let mut layer_us = Vec::with_capacity(steps * trace.n_layers);
+    let mut step_us = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let routing = trace.step();
+        let t_step = now;
+        for (layer, inp) in routing.iter().enumerate() {
+            cache.observe_layer(layer, inp);
+            let mut gpu = 0.0f64;
+            let mut cpu = 0.0f64;
+            for (j, &s) in inp.iter().enumerate() {
+                if s == 0 {
+                    continue;
+                }
+                let id = (layer, j);
+                let resident = cache.lookup(id, now);
+                match decide_expert(resident, s, lat) {
+                    Some(ExpertPlan::GpuResident) => gpu += lat.gpu_lat(s),
+                    Some(ExpertPlan::GpuTransfer) => {
+                        cache.admit(id);
+                        gpu += lat.transfer_lat().max(lat.gpu_lat(s));
+                    }
+                    Some(ExpertPlan::Cpu) => {
+                        let _ = cache.prefetch(id, now, lat.transfer_lat());
+                        cpu += lat.cpu_lat(s);
+                    }
+                    None => {}
+                }
+            }
+            let t = gpu.max(cpu);
+            layer_us.push(t);
+            now += t;
+        }
+        step_us.push(now - t_step);
+    }
+    CacheSimReport {
+        policy: cache.policy_name(),
+        hit_rate: cache.stats().hit_rate(),
+        evictions: cache.stats().evictions,
+        mean_layer_us: mean(&layer_us),
+        mean_step_us: mean(&step_us),
+        stats: cache.stats().clone(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+    use crate::expertcache::eviction::{Lru, ScoredPopularity, TransitionAware};
+
+    fn report(policy: &str, seed: u64) -> CacheSimReport {
+        let (layers, experts, top_k, capacity) = (4usize, 8usize, 2usize, 10usize);
+        let mut cache = ExpertCache::with_policy(
+            capacity,
+            match policy {
+                "lru" => Box::new(Lru),
+                "scored" => Box::new(ScoredPopularity::new(layers, experts)),
+                _ => Box::new(TransitionAware::new(layers, experts, top_k)),
+            },
+        );
+        let mut trace = DriftingExpertTrace::new(layers, experts, top_k, 100, seed);
+        let lat = LatencyModel::from_hardware(&HardwareConfig::env1());
+        run_cache_sim(&mut cache, &mut trace, 300, &lat)
+    }
+
+    #[test]
+    fn sim_reports_sane_metrics() {
+        let r = report("lru", 1);
+        assert!((0.0..=1.0).contains(&r.hit_rate));
+        assert!(r.mean_layer_us > 0.0);
+        assert!(r.mean_step_us >= r.mean_layer_us);
+        assert!(r.stats.lookups() > 0);
+    }
+
+    #[test]
+    fn transition_aware_beats_lru_on_drifting_trace() {
+        // Decode-layer access is cyclic, LRU's pathological case: the
+        // least-recent resident expert is exactly one the next layers will
+        // ask for.  Protecting predicted successors must not lose (the
+        // ablation-example acceptance bar), averaged over seeds.
+        let seeds = [1u64, 7, 42, 1234];
+        let mean_of = |p: &str| {
+            seeds.iter().map(|&s| report(p, s).hit_rate).sum::<f64>() / seeds.len() as f64
+        };
+        let lru = mean_of("lru");
+        let transition = mean_of("transition");
+        assert!(
+            transition >= lru,
+            "transition {transition:.4} < lru {lru:.4} on the drifting trace"
+        );
+    }
+
+    #[test]
+    fn sim_is_deterministic_per_seed() {
+        let a = report("scored", 3);
+        let b = report("scored", 3);
+        assert_eq!(a.stats.hits, b.stats.hits);
+        assert_eq!(a.stats.evictions, b.stats.evictions);
+    }
+}

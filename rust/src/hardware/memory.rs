@@ -1,178 +1,6 @@
-//! GPU memory capacity accounting for expert residency.
-//!
-//! Tracks which (layer, expert) weights are resident in simulated GPU
-//! memory.  Used both by the initialization-time placement (pinning) and by
-//! the LRU-offloading baseline (dynamic residency with eviction).
+//! Moved: expert residency accounting now lives in [`crate::expertcache`],
+//! the single residency authority (capacity, pinning, eviction, async
+//! transfer state, and counters).  This module remains as a compatibility
+//! re-export for the old `GpuMemory` name.
 
-use crate::config::HardwareConfig;
-use std::collections::HashMap;
-
-/// Identifies one expert of one layer.
-pub type ExpertId = (usize, usize); // (layer, expert)
-
-#[derive(Debug)]
-pub struct GpuMemory {
-    capacity_experts: usize,
-    /// Resident experts -> logical timestamp of last use (for LRU).
-    resident: HashMap<ExpertId, u64>,
-    /// Pinned experts are never evicted (initialization-time placement).
-    pinned: Vec<ExpertId>,
-    tick: u64,
-    pub transfers_in: u64,
-    pub evictions: u64,
-}
-
-impl GpuMemory {
-    pub fn new(hw: &HardwareConfig) -> Self {
-        Self::with_capacity(hw.gpu_expert_capacity())
-    }
-
-    pub fn with_capacity(capacity_experts: usize) -> Self {
-        GpuMemory {
-            capacity_experts,
-            resident: HashMap::new(),
-            pinned: Vec::new(),
-            tick: 0,
-            transfers_in: 0,
-            evictions: 0,
-        }
-    }
-
-    pub fn capacity(&self) -> usize {
-        self.capacity_experts
-    }
-
-    pub fn resident_count(&self) -> usize {
-        self.resident.len()
-    }
-
-    pub fn is_resident(&self, id: ExpertId) -> bool {
-        self.resident.contains_key(&id)
-    }
-
-    pub fn is_pinned(&self, id: ExpertId) -> bool {
-        self.pinned.contains(&id)
-    }
-
-    /// Pin `id` at initialization. Panics if capacity would be exceeded —
-    /// placement must respect capacity by construction.
-    pub fn pin(&mut self, id: ExpertId) {
-        assert!(
-            self.resident.len() < self.capacity_experts,
-            "pin() beyond GPU capacity {}",
-            self.capacity_experts
-        );
-        assert!(!self.is_resident(id), "pin() duplicate {id:?}");
-        self.tick += 1;
-        self.resident.insert(id, self.tick);
-        self.pinned.push(id);
-    }
-
-    /// Mark a use of a resident expert (refreshes LRU position).
-    pub fn touch(&mut self, id: ExpertId) {
-        self.tick += 1;
-        if let Some(t) = self.resident.get_mut(&id) {
-            *t = self.tick;
-        }
-    }
-
-    /// Bring `id` into GPU memory (dynamic path, used by offloading
-    /// policies).  Evicts the least recently used unpinned expert if full.
-    /// Returns true if a transfer occurred (i.e. it was not resident).
-    pub fn fetch(&mut self, id: ExpertId) -> bool {
-        if self.is_resident(id) {
-            self.touch(id);
-            return false;
-        }
-        if self.resident.len() >= self.capacity_experts {
-            let victim = self
-                .resident
-                .iter()
-                .filter(|(k, _)| !self.pinned.contains(*k))
-                .min_by_key(|(_, &t)| t)
-                .map(|(&k, _)| k);
-            match victim {
-                Some(v) => {
-                    self.resident.remove(&v);
-                    self.evictions += 1;
-                }
-                None => {
-                    // Everything pinned: cannot cache this expert at all.
-                    self.transfers_in += 1;
-                    return true;
-                }
-            }
-        }
-        self.tick += 1;
-        self.resident.insert(id, self.tick);
-        self.transfers_in += 1;
-        true
-    }
-
-    /// All currently resident experts (unordered).
-    pub fn resident_experts(&self) -> Vec<ExpertId> {
-        self.resident.keys().copied().collect()
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn pin_respects_capacity() {
-        let mut m = GpuMemory::with_capacity(2);
-        m.pin((0, 0));
-        m.pin((0, 1));
-        assert_eq!(m.resident_count(), 2);
-        assert!(m.is_resident((0, 0)));
-    }
-
-    #[test]
-    #[should_panic]
-    fn pin_over_capacity_panics() {
-        let mut m = GpuMemory::with_capacity(1);
-        m.pin((0, 0));
-        m.pin((0, 1));
-    }
-
-    #[test]
-    fn fetch_caches_and_counts() {
-        let mut m = GpuMemory::with_capacity(2);
-        assert!(m.fetch((0, 0))); // miss
-        assert!(!m.fetch((0, 0))); // hit
-        assert_eq!(m.transfers_in, 1);
-    }
-
-    #[test]
-    fn lru_evicts_oldest_unpinned() {
-        let mut m = GpuMemory::with_capacity(2);
-        m.fetch((0, 0));
-        m.fetch((0, 1));
-        m.touch((0, 0)); // 1 is now LRU
-        m.fetch((0, 2)); // evicts 1
-        assert!(m.is_resident((0, 0)));
-        assert!(!m.is_resident((0, 1)));
-        assert!(m.is_resident((0, 2)));
-        assert_eq!(m.evictions, 1);
-    }
-
-    #[test]
-    fn pinned_never_evicted() {
-        let mut m = GpuMemory::with_capacity(2);
-        m.pin((9, 9));
-        m.fetch((0, 0));
-        m.fetch((0, 1)); // evicts (0,0), not the pinned one
-        assert!(m.is_resident((9, 9)));
-        assert!(!m.is_resident((0, 0)));
-    }
-
-    #[test]
-    fn all_pinned_full_passthrough() {
-        let mut m = GpuMemory::with_capacity(1);
-        m.pin((0, 0));
-        assert!(m.fetch((1, 1))); // transfer, but no eviction possible
-        assert!(!m.is_resident((1, 1)));
-        assert_eq!(m.evictions, 0);
-    }
-}
+pub use crate::expertcache::{ExpertCache as GpuMemory, ExpertId};

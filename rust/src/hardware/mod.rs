@@ -5,8 +5,9 @@
 //! through the PJRT CPU client (DESIGN.md §2).  The substrate provides:
 //!
 //! * [`VirtualClock`] — monotonically advancing simulated time,
-//! * [`GpuMemory`] — capacity accounting for expert residency,
 //! * [`PcieLink`] — weight/activation transfer cost accounting,
+//! * expert residency lives in [`crate::expertcache`] (`GpuMemory` remains
+//!   as a compatibility alias),
 //! * [`DeviceTimeline`] — per-device busy tracking so CPU and GPU work can
 //!   overlap (the coordinator executes the two queues concurrently and the
 //!   layer latency is the max of the two, as on real hardware).

@@ -8,10 +8,12 @@
 //!   model in JAX, AOT-lowered to HLO-text artifacts (`python/compile/`).
 //! * **Runtime** — [`runtime`] loads artifacts through the PJRT C API.
 //! * **L3 (this crate)** — the paper's contribution: the [`scheduler`]
-//!   (Algorithm 1), [`placement`] (popularity pinning), the serving
-//!   [`coordinator`] (continuous batching, beam search), and the
-//!   [`baselines`] it is evaluated against, over a simulated heterogeneous
-//!   [`hardware`] substrate (virtual clock + calibrated [`latency`] model).
+//!   (Algorithm 1), [`placement`] (popularity pinning), the [`expertcache`]
+//!   residency subsystem (pluggable eviction + async transfer tracking),
+//!   the serving [`coordinator`] (continuous batching, beam search), and
+//!   the [`baselines`] it is evaluated against, over a simulated
+//!   heterogeneous [`hardware`] substrate (virtual clock + calibrated
+//!   [`latency`] model).
 //!
 //! See DESIGN.md for the experiment index and the hardware substitutions.
 
@@ -23,6 +25,7 @@ pub mod util;
 
 pub mod baselines;
 pub mod coordinator;
+pub mod expertcache;
 pub mod hardware;
 pub mod kvcache;
 pub mod latency;

@@ -51,7 +51,9 @@ fn print_help() {
          \n\
          DEFAULTS: --model mixtral-tiny --env env1 --policy fiddler\n\
          POLICIES: fiddler | mii (DeepSpeed-MII*) | lru (Mixtral-Offloading*) |\n\
-                   static (llama.cpp*) | fiddler-prefetch (extension)"
+                   static (llama.cpp*) | fiddler-prefetch | fiddler-cached\n\
+         CACHE:    fiddler-cached takes --cache-eviction lru|scored|transition\n\
+                   and --cache-pin-fraction F (default 0.5)"
     );
 }
 
@@ -93,6 +95,16 @@ fn cmd_generate(args: &Args) -> Result<()> {
         g.metrics.tokens_per_s(),
         engine.cx.events.hit_rate() * 100.0
     );
+    if let Some(c) = g.metrics.cache.as_ref().filter(|c| c.lookups() > 0) {
+        println!(
+            "cache ({}): {:.1}% hit rate | {} evictions | {} transfers in | {} prefetch hits",
+            engine.cx.memory.policy_name(),
+            c.hit_rate() * 100.0,
+            c.evictions,
+            c.transfers_in,
+            c.prefetch_hits
+        );
+    }
     Ok(())
 }
 

@@ -13,6 +13,10 @@ pub struct GenMetrics {
     /// Completion time of each generated token.
     pub token_done_us: Vec<f64>,
     pub prompt_tokens: usize,
+    /// Snapshot of the engine's expert-cache counters when the generation
+    /// finished (cumulative over the engine's lifetime — under continuous
+    /// batching the cache is shared across requests).
+    pub cache: Option<crate::expertcache::CacheStats>,
 }
 
 impl GenMetrics {
@@ -54,6 +58,9 @@ impl GenMetrics {
         o.set("ttft_us", Json::Num(self.ttft_us()));
         o.set("mean_itl_us", Json::Num(self.mean_itl_us()));
         o.set("tokens_per_s", Json::Num(self.tokens_per_s()));
+        if let Some(c) = &self.cache {
+            o.set("cache", c.to_json());
+        }
         o
     }
 }
@@ -138,6 +145,7 @@ mod tests {
             first_token_us: 600.0,
             token_done_us: vec![600.0, 1100.0, 1600.0, 2100.0],
             prompt_tokens: 8,
+            cache: None,
         }
     }
 
@@ -179,5 +187,17 @@ mod tests {
         let m = GenMetrics::default();
         assert_eq!(m.tokens_per_s(), 0.0);
         assert!(m.itl_us().is_empty());
+    }
+
+    #[test]
+    fn cache_stats_surface_in_json() {
+        let mut m = m();
+        assert!(m.to_json().get("cache").is_err(), "no cache stats => no key");
+        let c = crate::expertcache::CacheStats { hits: 3, misses: 1, ..Default::default() };
+        m.cache = Some(c);
+        let j = m.to_json();
+        let cache = j.get("cache").unwrap();
+        assert_eq!(cache.get("hits").unwrap().as_usize().unwrap(), 3);
+        assert!((cache.get("hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
     }
 }

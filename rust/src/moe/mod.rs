@@ -8,7 +8,7 @@ use crate::config::model::{
     CACHE_BUCKETS, DECODE_BATCH_BUCKETS, LMHEAD_BUCKETS, PREFILL_BUCKETS, TOKEN_BUCKETS,
 };
 use crate::config::{DeviceKind, HardwareConfig, ModelConfig};
-use crate::hardware::memory::GpuMemory;
+use crate::expertcache::ExpertCache;
 use crate::hardware::{DeviceTimeline, PcieLink, VirtualClock};
 use crate::kvcache::{gather_batch_padded, SequenceCache};
 use crate::latency::LatencyModel;
@@ -46,7 +46,7 @@ impl ExpertEvents {
 /// the simulated memory/link/clock, and online profiling.
 pub struct ExecContext {
     pub policy: Box<dyn ExecPolicy>,
-    pub memory: GpuMemory,
+    pub memory: ExpertCache,
     pub link: PcieLink,
     pub lat: LatencyModel,
     pub hw: HardwareConfig,
@@ -72,7 +72,7 @@ impl ExecContext {
         let frac = hw.gpu_expert_capacity() as f64 / 256.0;
         let capacity = ((cfg.total_experts() as f64 * frac).round() as usize)
             .min(cfg.total_experts());
-        let mut memory = GpuMemory::with_capacity(capacity);
+        let mut memory = ExpertCache::with_capacity(capacity);
         policy.init(&mut memory, profile, seed);
         ExecContext {
             policy,

@@ -9,7 +9,7 @@
 //! * `Worst` — least-popular first (Appendix C lower bound).
 
 use crate::config::serving::PlacementStrategy;
-use crate::hardware::memory::{ExpertId, GpuMemory};
+use crate::expertcache::{ExpertCache, ExpertId};
 use crate::popularity::Profile;
 use crate::util::rng::Rng;
 
@@ -41,9 +41,10 @@ pub fn choose_experts(
     }
 }
 
-/// Pin the chosen experts into GPU memory.
+/// Pin the chosen experts into the GPU expert cache (pinned entries are
+/// exempt from eviction — placement is a cache with eviction disabled).
 pub fn place(
-    memory: &mut GpuMemory,
+    memory: &mut ExpertCache,
     profile: &Profile,
     strategy: PlacementStrategy,
     seed: u64,
@@ -122,7 +123,7 @@ mod tests {
     #[test]
     fn place_pins_into_memory() {
         let p = skewed_profile(2, 4, 7);
-        let mut mem = GpuMemory::with_capacity(3);
+        let mut mem = ExpertCache::with_capacity(3);
         let chosen = place(&mut mem, &p, PlacementStrategy::Popularity, 0);
         assert_eq!(chosen.len(), 3);
         assert_eq!(mem.resident_count(), 3);

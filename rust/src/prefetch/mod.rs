@@ -98,20 +98,16 @@ impl TransitionProfile {
 ///
 /// Wraps the paper's policy; after layer `l`'s routing is known it issues
 /// PCIe transfers for the top-`depth` predicted layer-`l+1` experts that
-/// are not resident.  The PCIe lane is serialized: a prefetched expert is
-/// usable only once its transfer completes; plan_layer treats still-in-
-/// flight experts as non-resident (Algorithm 1 then falls back to CPU or
-/// synchronous transfer as usual).
+/// are not resident.  The serialized PCIe lane and per-expert transfer
+/// completion timestamps live in [`crate::expertcache::ExpertCache`]
+/// ([`ExpertCache::prefetch`](crate::expertcache::ExpertCache::prefetch));
+/// a still-in-flight expert reads as non-resident, and Algorithm 1 falls
+/// back to CPU or synchronous transfer as usual.
 pub struct PrefetchingFiddlerPolicy {
     inner: crate::scheduler::policy::FiddlerPolicy,
     transitions: TransitionProfile,
     /// How many predicted experts to prefetch per layer.
     pub depth: usize,
-    pcie_free_us: f64,
-    /// Transfer-completion times of in-flight/prefetched experts.
-    pending: std::collections::HashMap<crate::hardware::memory::ExpertId, f64>,
-    pub prefetches: u64,
-    pub prefetch_hits: u64,
 }
 
 impl PrefetchingFiddlerPolicy {
@@ -120,10 +116,6 @@ impl PrefetchingFiddlerPolicy {
             inner: crate::scheduler::policy::FiddlerPolicy::default(),
             transitions,
             depth,
-            pcie_free_us: 0.0,
-            pending: Default::default(),
-            prefetches: 0,
-            prefetch_hits: 0,
         }
     }
 }
@@ -135,12 +127,16 @@ impl crate::scheduler::policy::ExecPolicy for PrefetchingFiddlerPolicy {
 
     fn init(
         &mut self,
-        memory: &mut crate::hardware::memory::GpuMemory,
+        memory: &mut crate::expertcache::ExpertCache,
         profile: &crate::popularity::Profile,
         seed: u64,
     ) {
+        // This policy predates the cache's speculation budget and its
+        // figures are reported with an unbounded transfer queue — keep
+        // that model (fiddler-cached uses the default bounded lane).
+        memory.max_lane_depth = f64::INFINITY;
         // Pin popular experts like Fiddler, but leave `2 * depth` unpinned
-        // slots as the prefetch working set (a fully-pinned memory would
+        // slots as the prefetch working set (a fully-pinned cache would
         // reject every speculative fetch).
         let reserve = (2 * self.depth).min(memory.capacity().saturating_sub(1));
         let chosen = crate::placement::choose_experts(
@@ -158,36 +154,20 @@ impl crate::scheduler::policy::ExecPolicy for PrefetchingFiddlerPolicy {
         &mut self,
         layer: usize,
         inp_size: &[usize],
-        memory: &mut crate::hardware::memory::GpuMemory,
+        memory: &mut crate::expertcache::ExpertCache,
         lat: &crate::latency::LatencyModel,
         now_us: f64,
     ) -> Vec<Option<crate::scheduler::ExpertPlan>> {
-        use crate::scheduler::{decide_expert, ExpertPlan};
-        inp_size
-            .iter()
-            .enumerate()
-            .map(|(j, &s)| {
-                let id = (layer, j);
-                // In-flight prefetches do not count as resident yet.
-                let ready = self.pending.get(&id).map(|&r| r <= now_us).unwrap_or(true);
-                let resident = memory.is_resident(id) && ready;
-                let plan = decide_expert(resident, s, lat);
-                if matches!(plan, Some(ExpertPlan::GpuResident)) {
-                    memory.touch(id);
-                    if self.pending.remove(&id).is_some() {
-                        self.prefetch_hits += 1;
-                    }
-                }
-                plan
-            })
-            .collect()
+        // Algorithm 1 as in plain Fiddler; the cache's completion
+        // timestamps make in-flight prefetches read as misses.
+        self.inner.plan_layer(layer, inp_size, memory, lat, now_us)
     }
 
     fn post_layer(
         &mut self,
         layer: usize,
         inp_size: &[usize],
-        memory: &mut crate::hardware::memory::GpuMemory,
+        memory: &mut crate::expertcache::ExpertCache,
         lat: &crate::latency::LatencyModel,
         now_us: f64,
     ) {
@@ -196,17 +176,8 @@ impl crate::scheduler::policy::ExecPolicy for PrefetchingFiddlerPolicy {
         }
         let predictions = self.transitions.predict_next(layer, inp_size);
         for &j in predictions.iter().take(self.depth) {
-            let id = (layer + 1, j);
-            if memory.is_resident(id) {
-                continue;
-            }
             // Serialized PCIe lane, overlapping this layer's compute.
-            let start = self.pcie_free_us.max(now_us);
-            let ready = start + lat.transfer_lat();
-            self.pcie_free_us = ready;
-            memory.fetch(id);
-            self.pending.insert(id, ready);
-            self.prefetches += 1;
+            let _ = memory.prefetch((layer + 1, j), now_us, lat.transfer_lat());
         }
     }
 

@@ -16,7 +16,7 @@
 pub mod policy;
 
 use crate::config::DeviceKind;
-use crate::hardware::memory::GpuMemory;
+use crate::expertcache::ExpertCache;
 use crate::latency::LatencyModel;
 
 /// Where and how one expert invocation executes.
@@ -72,7 +72,7 @@ pub fn decide_expert(
 pub fn plan_layer(
     layer: usize,
     inp_size: &[usize],
-    memory: &GpuMemory,
+    memory: &ExpertCache,
     lat: &LatencyModel,
 ) -> Vec<Option<ExpertPlan>> {
     inp_size
@@ -188,7 +188,7 @@ mod tests {
     #[test]
     fn plan_layer_uses_residency() {
         let lat = lat();
-        let mut mem = GpuMemory::with_capacity(4);
+        let mut mem = ExpertCache::with_capacity(4);
         mem.pin((0, 1));
         let plans = plan_layer(0, &[1, 1, 0, 700], &mem, &lat);
         assert_eq!(plans[0], Some(ExpertPlan::Cpu));

@@ -7,9 +7,9 @@
 //! compute), and (d) whether beams are batched.  The engine consults the
 //! policy; numerics are identical across policies by construction.
 
-use super::{plan_layer, ExpertPlan};
+use super::{decide_expert, ExpertPlan};
 use crate::config::DeviceKind;
-use crate::hardware::memory::GpuMemory;
+use crate::expertcache::ExpertCache;
 use crate::latency::LatencyModel;
 use crate::placement;
 use crate::popularity::Profile;
@@ -18,17 +18,17 @@ pub trait ExecPolicy: Send {
     fn name(&self) -> &'static str;
 
     /// Initialization-phase placement (paper Fig. 2a). Default: nothing.
-    fn init(&mut self, _memory: &mut GpuMemory, _profile: &Profile, _seed: u64) {}
+    fn init(&mut self, _memory: &mut ExpertCache, _profile: &Profile, _seed: u64) {}
 
-    /// Plan one MoE layer given per-expert input sizes. May mutate memory
-    /// (dynamic caching policies do).  `now_us` is the virtual time at the
-    /// start of the layer (prefetching policies compare it against
-    /// transfer-completion timestamps).
+    /// Plan one MoE layer given per-expert input sizes. May mutate the
+    /// cache (dynamic caching policies do).  `now_us` is the virtual time
+    /// at the start of the layer (async transfers only count as resident
+    /// once their completion timestamp has passed).
     fn plan_layer(
         &mut self,
         layer: usize,
         inp_size: &[usize],
-        memory: &mut GpuMemory,
+        memory: &mut ExpertCache,
         lat: &LatencyModel,
         now_us: f64,
     ) -> Vec<Option<ExpertPlan>>;
@@ -40,7 +40,7 @@ pub trait ExecPolicy: Send {
         &mut self,
         _layer: usize,
         _inp_size: &[usize],
-        _memory: &mut GpuMemory,
+        _memory: &mut ExpertCache,
         _lat: &LatencyModel,
         _now_us: f64,
     ) {
@@ -80,7 +80,7 @@ impl ExecPolicy for FiddlerPolicy {
         "fiddler"
     }
 
-    fn init(&mut self, memory: &mut GpuMemory, profile: &Profile, seed: u64) {
+    fn init(&mut self, memory: &mut ExpertCache, profile: &Profile, seed: u64) {
         placement::place(memory, profile, self.placement, seed);
     }
 
@@ -88,18 +88,22 @@ impl ExecPolicy for FiddlerPolicy {
         &mut self,
         layer: usize,
         inp_size: &[usize],
-        memory: &mut GpuMemory,
+        memory: &mut ExpertCache,
         lat: &LatencyModel,
-        _now_us: f64,
+        now_us: f64,
     ) -> Vec<Option<ExpertPlan>> {
-        let plans = plan_layer(layer, inp_size, memory, lat);
-        // Refresh LRU stamps for resident experts we actually use.
-        for (j, p) in plans.iter().enumerate() {
-            if matches!(p, Some(ExpertPlan::GpuResident)) {
-                memory.touch((layer, j));
-            }
-        }
-        plans
+        // Algorithm 1 per expert; lookups record hit/miss stats and
+        // refresh recency stamps for resident experts we actually use.
+        inp_size
+            .iter()
+            .enumerate()
+            .map(|(j, &s)| {
+                if s == 0 {
+                    return None;
+                }
+                decide_expert(memory.lookup((layer, j), now_us), s, lat)
+            })
+            .collect()
     }
 
     fn expert_cost_us(&self, plan: ExpertPlan, s: usize, lat: &LatencyModel) -> f64 {
@@ -122,7 +126,7 @@ mod tests {
     fn fiddler_pins_popular_and_decides() {
         let hw = HardwareConfig::env1();
         let lat = LatencyModel::from_hardware(&hw);
-        let mut mem = GpuMemory::with_capacity(2);
+        let mut mem = ExpertCache::with_capacity(2);
         let mut prof = Profile::new(1, 4);
         prof.counts[0] = vec![100, 1, 50, 2];
         let mut pol = FiddlerPolicy::default();

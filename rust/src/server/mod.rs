@@ -140,9 +140,12 @@ pub fn serve_loop(engine: &mut Engine, requests: Receiver<Request>) -> Result<()
             a.metrics.token_done_us.push(now);
             let _ = a.stream.send(Event::Token(tok));
         }
-        // Retire finished sequences.
+        // Retire finished sequences, stamping the engine's cache counters
+        // into their final metrics (shared cache: cumulative snapshot).
+        let cache_stats = engine.cx.memory.stats().clone();
         active.retain_mut(|a| {
             if a.produced >= a.max_new {
+                a.metrics.cache = Some(cache_stats.clone());
                 let _ = a.stream.send(Event::Done(a.metrics.clone()));
                 false
             } else {

@@ -40,6 +40,9 @@ fn event_line(ev: &Event) -> String {
             o.set("ttft_us", Json::Num(m.ttft_us()));
             o.set("itl_us", Json::Num(m.mean_itl_us()));
             o.set("tokens_per_s", Json::Num(m.tokens_per_s()));
+            if let Some(c) = &m.cache {
+                o.set("cache", c.to_json());
+            }
         }
         Event::Error(e) => o.set("error", Json::from(e.clone())),
     }
@@ -127,15 +130,19 @@ mod tests {
     fn event_lines_are_json() {
         let l = event_line(&Event::Token(7));
         assert_eq!(Json::parse(l.trim()).unwrap().get("token").unwrap().as_usize().unwrap(), 7);
+        let stats =
+            crate::expertcache::CacheStats { hits: 2, ..Default::default() };
         let m = crate::metrics::GenMetrics {
             enqueue_us: 0.0,
             first_token_us: 10.0,
             token_done_us: vec![10.0, 20.0],
             prompt_tokens: 1,
+            cache: Some(stats),
         };
         let l = event_line(&Event::Done(m));
         let v = Json::parse(l.trim()).unwrap();
         assert!(v.get("done").unwrap().as_bool().unwrap());
+        assert_eq!(v.get("cache").unwrap().get("hits").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

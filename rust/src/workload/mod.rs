@@ -79,6 +79,164 @@ impl WorkloadGen {
     }
 }
 
+/// Drifting-popularity prompt generator: like [`WorkloadGen`], but the
+/// rank->token permutation is re-drawn every `phase_len` prompts, so the
+/// induced expert-routing distribution shifts in phases.  This is the
+/// non-stationary regime where static popularity placement decays and
+/// dynamic cache policies differentiate (HybriMoE / MoE-Lightning — see
+/// PAPERS.md); used by the cache ablation and tests.
+pub struct DriftingWorkloadGen {
+    zipf: Zipf,
+    vocab: usize,
+    phase_len: usize,
+    emitted: usize,
+    base_seed: u64,
+    perm: Vec<u32>,
+    rng: Rng,
+}
+
+impl DriftingWorkloadGen {
+    pub fn new(vocab: usize, zipf_a: f64, phase_len: usize, seed: u64) -> DriftingWorkloadGen {
+        assert!(phase_len > 0, "phase_len must be positive");
+        DriftingWorkloadGen {
+            zipf: Zipf::new(vocab, zipf_a),
+            vocab,
+            phase_len,
+            emitted: 0,
+            base_seed: seed,
+            perm: Self::perm_for(vocab, seed, 0),
+            rng: Rng::new(seed ^ 0xD81F7),
+        }
+    }
+
+    fn perm_for(vocab: usize, seed: u64, phase: u64) -> Vec<u32> {
+        let mut perm: Vec<u32> = (0..vocab as u32).collect();
+        let mut prng = Rng::new(seed ^ phase.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xBEEF);
+        prng.shuffle(&mut perm);
+        perm
+    }
+
+    /// Index of the current preference phase.
+    pub fn phase(&self) -> u64 {
+        (self.emitted / self.phase_len) as u64
+    }
+
+    pub fn prompt(&mut self, len: usize) -> Vec<u32> {
+        let phase = self.phase();
+        if self.emitted > 0 && self.emitted % self.phase_len == 0 {
+            self.perm = Self::perm_for(self.vocab, self.base_seed, phase);
+        }
+        self.emitted += 1;
+        (0..len).map(|_| self.perm[self.zipf.sample(&mut self.rng)]).collect()
+    }
+}
+
+/// Drifting per-layer expert routing trace for cache-policy ablations
+/// (`expertcache::sim`) — routing statistics without a model in the loop.
+///
+/// Each decode step activates `top_k` distinct experts per layer.  Layer 0
+/// draws from a Zipf preference over a per-phase expert permutation; each
+/// later layer follows a per-phase deterministic shift of the previous
+/// layer's choices — strong cross-layer transition structure, like the
+/// diagonal-dominant transition profiles the calibration pass measures.
+/// Every `phase_len` steps the permutation and shifts are re-drawn: the
+/// popularity AND transition structure drift together.
+pub struct DriftingExpertTrace {
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    zipf: Zipf,
+    phase_len: usize,
+    steps: usize,
+    base_seed: u64,
+    perm: Vec<usize>,
+    shifts: Vec<usize>,
+    rng: Rng,
+}
+
+impl DriftingExpertTrace {
+    pub fn new(
+        n_layers: usize,
+        n_experts: usize,
+        top_k: usize,
+        phase_len: usize,
+        seed: u64,
+    ) -> DriftingExpertTrace {
+        assert!(n_layers > 0, "need at least one layer");
+        assert!(n_experts > 1, "need at least two experts");
+        assert!((1..=n_experts).contains(&top_k), "top_k out of range");
+        assert!(phase_len > 0, "phase_len must be positive");
+        let mut t = DriftingExpertTrace {
+            n_layers,
+            n_experts,
+            top_k,
+            zipf: Zipf::new(n_experts, 1.2),
+            phase_len,
+            steps: 0,
+            base_seed: seed,
+            perm: Vec::new(),
+            shifts: Vec::new(),
+            rng: Rng::new(seed ^ 0x7ACE),
+        };
+        t.roll_phase(0);
+        t
+    }
+
+    pub fn phase(&self) -> u64 {
+        (self.steps / self.phase_len) as u64
+    }
+
+    fn roll_phase(&mut self, phase: u64) {
+        let mut prng = Rng::new(self.base_seed ^ phase.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut perm: Vec<usize> = (0..self.n_experts).collect();
+        prng.shuffle(&mut perm);
+        self.perm = perm;
+        self.shifts = (0..self.n_layers.saturating_sub(1))
+            .map(|_| 1 + prng.below((self.n_experts - 1) as u64) as usize)
+            .collect();
+    }
+
+    /// One decode step: token counts per expert for every layer (`top_k`
+    /// experts with one token each, the decode regime).
+    pub fn step(&mut self) -> Vec<Vec<usize>> {
+        if self.steps > 0 && self.steps % self.phase_len == 0 {
+            self.roll_phase(self.phase());
+        }
+        self.steps += 1;
+
+        // Layer 0: top_k distinct experts by permuted Zipf preference.
+        let mut chosen: Vec<usize> = Vec::with_capacity(self.top_k);
+        let mut guard = 0;
+        while chosen.len() < self.top_k && guard < 64 * self.top_k {
+            let e = self.perm[self.zipf.sample(&mut self.rng)];
+            if !chosen.contains(&e) {
+                chosen.push(e);
+            }
+            guard += 1;
+        }
+        for e in 0..self.n_experts {
+            if chosen.len() >= self.top_k {
+                break;
+            }
+            if !chosen.contains(&e) {
+                chosen.push(e);
+            }
+        }
+
+        let mut out = vec![vec![0usize; self.n_experts]; self.n_layers];
+        for &e in &chosen {
+            out[0][e] = 1;
+        }
+        for l in 1..self.n_layers {
+            chosen = chosen.iter().map(|&e| (e + self.shifts[l - 1]) % self.n_experts).collect();
+            for &e in &chosen {
+                out[l][e] = 1;
+            }
+        }
+        out
+    }
+}
+
 /// The paper's scenario (a) grid: input {32,64,128,256} x output
 /// {64,128,256,512}, minus the (256,512) cell = 15 configurations.
 pub fn scenario_a_grid() -> Vec<(usize, usize)> {
@@ -136,5 +294,75 @@ mod tests {
     #[test]
     fn grid_is_15() {
         assert_eq!(scenario_a_grid().len(), 15);
+    }
+
+    #[test]
+    fn drifting_prompts_shift_between_phases() {
+        let mut g = DriftingWorkloadGen::new(256, 1.2, 3, 5);
+        assert_eq!(g.phase(), 0);
+        let early = g.prompt(2000);
+        g.prompt(64);
+        g.prompt(64); // phase boundary next
+        assert_eq!(g.phase(), 1);
+        let late = g.prompt(2000);
+        assert!(early.iter().all(|&t| t < 256));
+        // Distinct permutations => the set of dominant tokens differs.
+        let top32 = |p: &[u32]| {
+            let mut c = vec![0usize; 256];
+            for &t in p {
+                c[t as usize] += 1;
+            }
+            let mut idx: Vec<usize> = (0..256).collect();
+            idx.sort_by_key(|&i| std::cmp::Reverse(c[i]));
+            let mut s = idx[..32].to_vec();
+            s.sort_unstable();
+            s
+        };
+        assert_ne!(top32(&early), top32(&late), "phase shift did not change preference");
+    }
+
+    #[test]
+    fn drifting_prompts_deterministic_per_seed() {
+        let mut a = DriftingWorkloadGen::new(128, 1.2, 4, 9);
+        let mut b = DriftingWorkloadGen::new(128, 1.2, 4, 9);
+        for _ in 0..10 {
+            assert_eq!(a.prompt(32), b.prompt(32));
+        }
+    }
+
+    #[test]
+    fn expert_trace_shape_and_topk() {
+        let mut t = DriftingExpertTrace::new(4, 8, 2, 50, 0);
+        for _ in 0..120 {
+            let routing = t.step();
+            assert_eq!(routing.len(), 4);
+            for layer in &routing {
+                assert_eq!(layer.len(), 8);
+                assert_eq!(layer.iter().sum::<usize>(), 2, "top_k experts per layer");
+            }
+        }
+        assert_eq!(t.phase(), 2);
+    }
+
+    #[test]
+    fn expert_trace_has_transition_structure() {
+        // Within a phase, layer l's actives determine layer l+1's by a
+        // fixed shift — the structure TransitionAware exploits.
+        let mut t = DriftingExpertTrace::new(3, 8, 2, 1000, 7);
+        let shifts_of = |cur: &[usize], next: &[usize]| -> Vec<usize> {
+            let c: Vec<usize> =
+                cur.iter().enumerate().filter(|(_, &s)| s > 0).map(|(e, _)| e).collect();
+            (0..8).filter(|&d| c.iter().all(|&e| next[(e + d) % 8] > 0)).collect()
+        };
+        // One shift must explain every step of the phase (spurious
+        // candidates from symmetric active sets die in the intersection).
+        let mut common: Vec<usize> = (0..8).collect();
+        for _ in 0..10 {
+            let r = t.step();
+            let valid = shifts_of(&r[0], &r[1]);
+            assert!(!valid.is_empty(), "no shift relation between layers");
+            common.retain(|d| valid.contains(d));
+        }
+        assert!(!common.is_empty(), "no stable within-phase shift");
     }
 }

@@ -18,17 +18,38 @@ fn prompt(len: usize, seed: u64) -> Vec<u32> {
 
 #[test]
 fn all_policies_generate_identical_tokens() {
-    // Policies differ ONLY in time accounting, never in numerics.
+    // Policies differ ONLY in time accounting, never in numerics.  The
+    // extensions (prefetch, dynamic cache) must obey the same contract.
     let hw = HardwareConfig::env1();
     let p = prompt(16, 1);
+    let mut policies = figures::ALL_POLICIES.to_vec();
+    policies.push(Policy::FiddlerPrefetch);
+    policies.push(Policy::FiddlerCached);
     let mut outs = Vec::new();
-    for &pol in figures::ALL_POLICIES {
+    for pol in policies {
         let mut e = engine(pol, &hw);
         outs.push(e.generate(&p, 6).unwrap().tokens);
     }
     for o in &outs[1..] {
         assert_eq!(o, &outs[0], "policy changed the numerics");
     }
+}
+
+#[test]
+fn cached_policy_reports_cache_stats() {
+    let hw = HardwareConfig::env1();
+    let serving = ServingConfig {
+        policy: Policy::FiddlerCached,
+        cache_eviction: fiddler::config::serving::EvictionKind::TransitionAware,
+        ..Default::default()
+    };
+    let mut e = Engine::new(figures::artifact_dir("mixtral-tiny"), &hw, serving).unwrap();
+    let g = e.generate(&prompt(16, 50), 8).unwrap();
+    let stats = g.metrics.cache.expect("cache stats missing from metrics");
+    assert!(stats.lookups() > 0, "no cache lookups recorded");
+    assert!(stats.hits > 0, "pinned popular experts must produce hits");
+    // Residency never exceeds the scaled capacity.
+    assert!(e.cx.memory.resident_count() <= e.cx.memory.capacity());
 }
 
 #[test]

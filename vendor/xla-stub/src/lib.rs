@@ -1,0 +1,151 @@
+//! Offline stub of the `xla` (xla-rs) PJRT bindings.
+//!
+//! Mirrors the minimal API surface `fiddler::runtime` consumes so the crate
+//! builds and its simulation-level tests run in environments without the
+//! PJRT toolchain (`libxla_extension`).  Every runtime entry point returns
+//! a clean error instead of executing; swap this path dependency for the
+//! real `xla` crate (github.com/LaurentMazare/xla-rs, with
+//! `XLA_EXTENSION_DIR` set) to run real numerics.
+
+use std::borrow::Borrow;
+use std::path::Path;
+
+/// Error type; `fiddler` formats it with `{:?}`.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT unavailable (built against the vendored xla stub; \
+         swap vendor/xla-stub for the real xla-rs dependency to run numerics)"
+    )))
+}
+
+/// Element types the runtime uploads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host-native element types accepted by buffer/literal transfers.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<T: Borrow<PjRtBuffer>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _dims: &[usize],
+        _bytes: &[u8],
+    ) -> Result<Literal> {
+        unavailable("Literal::create_from_shape_and_untyped_data")
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn copy_raw_to<T: NativeType>(&self, _out: &mut [T]) -> Result<()> {
+        unavailable("Literal::copy_raw_to")
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_errors_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent").is_err());
+        let err = Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .unwrap_err();
+        assert!(format!("{err}").contains("PJRT unavailable"));
+    }
+}
