@@ -1,16 +1,102 @@
 //! `cargo bench --bench microbench` — Figure 7's workloads plus the real
-//! PJRT hot-path costs of this host (the part virtual time cannot cover).
+//! hot-path costs of this host (the part virtual time cannot cover).
 //!
 //! Sections:
 //!   substrate — simulated-cost evaluation (latency model, link, memory)
-//!   pjrt      — real executable dispatch (expert/gate/attention/lm_head)
+//!   cpukernel — the dedicated host expert kernel (§3.4): streaming vs
+//!               packed-panel GEMM regimes at decode/prefill sizes
+//!   pjrt      — real executable dispatch (expert/gate/attention/lm_head);
+//!               skipped gracefully when artifacts/PJRT are unavailable
 
 use fiddler::benchkit::Bench;
 use fiddler::config::model::artifacts_root;
 use fiddler::config::HardwareConfig;
+use fiddler::cpukernel::expert_ffn_host;
 use fiddler::expertcache::ExpertCache;
 use fiddler::latency::LatencyModel;
 use fiddler::runtime::{Arg, Runtime, Tensor, TensorI32};
+use fiddler::util::rng::Rng;
+
+fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor { shape, data: (0..n).map(|_| (rng.normal() as f32) * scale).collect() }
+}
+
+fn cpukernel_section(b: &mut Bench) {
+    let mut rng = Rng::new(11);
+    let (h, f) = (256usize, 512usize);
+    let w1 = rand_tensor(&mut rng, vec![h, f], 0.2);
+    let w3 = rand_tensor(&mut rng, vec![h, f], 0.2);
+    let w2 = rand_tensor(&mut rng, vec![f, h], 0.2);
+    // s=1/2: decode sizes (streaming GEMM regime); s=16/64: prefill sizes
+    // (packed-panel micro-kernel regime).
+    for s in [1usize, 2, 16, 64] {
+        let x = rand_tensor(&mut rng, vec![s, h], 0.5);
+        b.bench(&format!("cpukernel/expert_ffn_host_s{s}"), || {
+            expert_ffn_host(&x, &w1, &w3, &w2)
+        });
+    }
+}
+
+fn pjrt_section(b: &mut Bench) -> anyhow::Result<()> {
+    let rt = Runtime::open(artifacts_root().join("mixtral-tiny"))?;
+    let spec = rt.op_spec("expert_b1")?.clone();
+    let h = spec.params[0].0[1];
+    let f = spec.params[1].0[1];
+    let w1 = Tensor::new(vec![h, f], (0..h * f).map(|i| (i % 13) as f32 * 0.01).collect())?;
+    let w3 = w1.clone();
+    let w2 = Tensor::new(vec![f, h], (0..h * f).map(|i| (i % 7) as f32 * 0.01).collect())?;
+
+    for n in [1usize, 16, 256] {
+        let x = Tensor::zeros(vec![n, h]);
+        let args: Vec<Arg> =
+            vec![x.into(), w1.clone().into(), w3.clone().into(), w2.clone().into()];
+        rt.execute(&format!("expert_b{n}"), &args)?; // compile outside timing
+        b.bench(&format!("pjrt/expert_b{n}"), || {
+            rt.execute(&format!("expert_b{n}"), &args).unwrap()
+        });
+    }
+
+    let gate_spec = rt.op_spec("gate_b1")?.clone();
+    let e = gate_spec.params[2].0[1];
+    let gate_args: Vec<Arg> = vec![
+        Tensor::zeros(vec![1, h]).into(),
+        Tensor::new(vec![h], vec![1.0; h])?.into(),
+        Tensor::zeros(vec![h, e]).into(),
+    ];
+    rt.execute("gate_b1", &gate_args)?;
+    b.bench("pjrt/gate_b1", || rt.execute("gate_b1", &gate_args).unwrap());
+
+    let d = rt.op_spec("attn_decode_b1_c128")?.clone();
+    let (c, kv, hd) = (d.params[1].0[1], d.params[1].0[2], d.params[1].0[3]);
+    let qd = d.params[5].0[1];
+    let attn_args: Vec<Arg> = vec![
+        Tensor::zeros(vec![1, h]).into(),
+        Tensor::zeros(vec![1, c, kv, hd]).into(),
+        Tensor::zeros(vec![1, c, kv, hd]).into(),
+        TensorI32::vec(vec![5]).into(),
+        Tensor::new(vec![h], vec![1.0; h])?.into(),
+        Tensor::zeros(vec![h, qd]).into(),
+        Tensor::zeros(vec![h, kv * hd]).into(),
+        Tensor::zeros(vec![h, kv * hd]).into(),
+        Tensor::zeros(vec![qd, h]).into(),
+    ];
+    rt.execute("attn_decode_b1_c128", &attn_args)?;
+    b.bench("pjrt/attn_decode_b1_c128", || {
+        rt.execute("attn_decode_b1_c128", &attn_args).unwrap()
+    });
+
+    let lm_spec = rt.op_spec("lm_head_b1")?.clone();
+    let v = lm_spec.params[2].0[1];
+    let lm_args: Vec<Arg> = vec![
+        Tensor::zeros(vec![1, h]).into(),
+        Tensor::new(vec![h], vec![1.0; h])?.into(),
+        Tensor::zeros(vec![h, v]).into(),
+    ];
+    rt.execute("lm_head_b1", &lm_args)?;
+    b.bench("pjrt/lm_head_b1", || rt.execute("lm_head_b1", &lm_args).unwrap());
+    Ok(())
+}
 
 fn main() {
     let mut b = Bench::new();
@@ -28,64 +114,13 @@ fn main() {
         mem.fetch((i / 8, i % 8))
     });
 
-    // --- pjrt: real executable dispatch on this host --------------------
-    let rt = Runtime::open(artifacts_root().join("mixtral-tiny"))
-        .expect("run `make artifacts` first");
-    let spec = rt.op_spec("expert_b1").unwrap().clone();
-    let h = spec.params[0].0[1];
-    let f = spec.params[1].0[1];
-    let w1 = Tensor::new(vec![h, f], (0..h * f).map(|i| (i % 13) as f32 * 0.01).collect()).unwrap();
-    let w3 = w1.clone();
-    let w2 = Tensor::new(vec![f, h], (0..h * f).map(|i| (i % 7) as f32 * 0.01).collect()).unwrap();
+    // --- cpukernel: the dedicated host expert kernel --------------------
+    cpukernel_section(&mut b);
 
-    for n in [1usize, 16, 256] {
-        let x = Tensor::zeros(vec![n, h]);
-        let args: Vec<Arg> =
-            vec![x.into(), w1.clone().into(), w3.clone().into(), w2.clone().into()];
-        rt.execute(&format!("expert_b{n}"), &args).unwrap(); // compile outside timing
-        b.bench(&format!("pjrt/expert_b{n}"), || {
-            rt.execute(&format!("expert_b{n}"), &args).unwrap()
-        });
+    // --- pjrt: real executable dispatch on this host --------------------
+    if let Err(e) = pjrt_section(&mut b) {
+        eprintln!("  [skipped] pjrt section: {e:#}");
     }
 
-    let gate_spec = rt.op_spec("gate_b1").unwrap().clone();
-    let e = gate_spec.params[2].0[1];
-    let gate_args: Vec<Arg> = vec![
-        Tensor::zeros(vec![1, h]).into(),
-        Tensor::new(vec![h], vec![1.0; h]).unwrap().into(),
-        Tensor::zeros(vec![h, e]).into(),
-    ];
-    rt.execute("gate_b1", &gate_args).unwrap();
-    b.bench("pjrt/gate_b1", || rt.execute("gate_b1", &gate_args).unwrap());
-
-    let d = rt.op_spec("attn_decode_b1_c128").unwrap().clone();
-    let (c, kv, hd) = (d.params[1].0[1], d.params[1].0[2], d.params[1].0[3]);
-    let qd = d.params[5].0[1];
-    let attn_args: Vec<Arg> = vec![
-        Tensor::zeros(vec![1, h]).into(),
-        Tensor::zeros(vec![1, c, kv, hd]).into(),
-        Tensor::zeros(vec![1, c, kv, hd]).into(),
-        TensorI32::vec(vec![5]).into(),
-        Tensor::new(vec![h], vec![1.0; h]).unwrap().into(),
-        Tensor::zeros(vec![h, qd]).into(),
-        Tensor::zeros(vec![h, kv * hd]).into(),
-        Tensor::zeros(vec![h, kv * hd]).into(),
-        Tensor::zeros(vec![qd, h]).into(),
-    ];
-    rt.execute("attn_decode_b1_c128", &attn_args).unwrap();
-    b.bench("pjrt/attn_decode_b1_c128", || {
-        rt.execute("attn_decode_b1_c128", &attn_args).unwrap()
-    });
-
-    let lm_spec = rt.op_spec("lm_head_b1").unwrap().clone();
-    let v = lm_spec.params[2].0[1];
-    let lm_args: Vec<Arg> = vec![
-        Tensor::zeros(vec![1, h]).into(),
-        Tensor::new(vec![h], vec![1.0; h]).unwrap().into(),
-        Tensor::zeros(vec![h, v]).into(),
-    ];
-    rt.execute("lm_head_b1", &lm_args).unwrap();
-    b.bench("pjrt/lm_head_b1", || rt.execute("lm_head_b1", &lm_args).unwrap());
-
-    b.report("microbench (Fig. 7 substrate + PJRT hot path)");
+    b.report("microbench (Fig. 7 substrate + cpukernel + PJRT hot path)");
 }

@@ -5,6 +5,7 @@
 
 use fiddler::benchkit::Bench;
 use fiddler::config::HardwareConfig;
+use fiddler::exec::{partition_rows, ExecutorPool};
 use fiddler::expertcache::{ExpertCache, ScoredPopularity, TransitionAware};
 use fiddler::kvcache::{gather_batch, SequenceCache};
 use fiddler::latency::LatencyModel;
@@ -63,6 +64,21 @@ fn main() {
         // insert+evict+lane path rather than the backlog early-return.
         trans.prefetch(id, k as f64 * 100.0, 100.0)
     });
+
+    // Parallel-executor dispatch overhead: submit + ordered join of trivial
+    // jobs — the fixed cost the pool adds to every MoE layer.  Must stay
+    // negligible next to multi-ms expert execution.
+    let pool = ExecutorPool::new(4);
+    b.bench("exec/pool_dispatch_8_jobs", || {
+        let jobs: Vec<_> = (0..8usize).map(|i| move || i * 2).collect();
+        pool.submit(jobs).wait()
+    });
+    let inline = ExecutorPool::new(1);
+    b.bench("exec/pool_dispatch_8_jobs_inline", || {
+        let jobs: Vec<_> = (0..8usize).map(|i| move || i * 2).collect();
+        inline.submit(jobs).wait()
+    });
+    b.bench("exec/partition_rows_512_t16", || partition_rows(512, 16));
 
     let mut rng = Rng::new(1);
     let probs: Vec<f32> = (0..8).map(|_| rng.f32()).collect();

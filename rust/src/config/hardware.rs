@@ -57,6 +57,9 @@ pub struct HardwareConfig {
     /// over the expert's weights from DRAM, c1 = per-token compute).
     pub cpu_expert_base_us: f64,
     pub cpu_expert_per_token_us: f64,
+    /// Physical CPU cores (Table 1) — caps the parallel expert executor's
+    /// modeled multi-core speedup.
+    pub cpu_cores: usize,
     /// GPU->CPU or CPU->GPU activation copy: base + per-byte.
     pub act_copy_base_us: f64,
     pub act_copy_per_byte_us: f64,
@@ -94,6 +97,7 @@ impl HardwareConfig {
             gpu_single_batch_extra_us: 400.0,
             cpu_expert_base_us: 5_000.0,
             cpu_expert_per_token_us: 450.0,
+            cpu_cores: 48,
             act_copy_base_us: 15.0,
             act_copy_per_byte_us: 0.45e-3 / 8.0, // ~8 GB/s effective D2H small copies
             attn_decode_us: 220.0,
@@ -120,6 +124,7 @@ impl HardwareConfig {
             gpu_single_batch_extra_us: 220.0,
             cpu_expert_base_us: 2_400.0,
             cpu_expert_per_token_us: 180.0,
+            cpu_cores: 112,
             act_copy_base_us: 12.0,
             act_copy_per_byte_us: 0.45e-3 / 12.0,
             attn_decode_us: 130.0,

@@ -131,6 +131,10 @@ pub struct ServingConfig {
     /// Fraction of GPU expert capacity pinned by popularity at init under
     /// FiddlerCached; the rest is the dynamic working set.
     pub cache_pin_fraction: f64,
+    /// Worker threads of the parallel CPU expert executor ([`crate::exec`]).
+    /// 1 = serial (the pre-parallel engine, bit-for-bit); `--threads 0` on
+    /// the CLI resolves to the host's available parallelism.
+    pub threads: usize,
 }
 
 impl Default for ServingConfig {
@@ -145,6 +149,7 @@ impl Default for ServingConfig {
             temperature: 0.0,
             cache_eviction: EvictionKind::Lru,
             cache_pin_fraction: 0.5,
+            threads: 1,
         }
     }
 }
@@ -170,6 +175,11 @@ impl ServingConfig {
             (0.0..=1.0).contains(&c.cache_pin_fraction),
             "--cache-pin-fraction must be in [0, 1]"
         );
+        c.threads = match args.usize_or("threads", c.threads) {
+            // 0 = auto: one executor worker per available core.
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n,
+        };
         Ok(c)
     }
 
@@ -221,6 +231,18 @@ mod tests {
             "--cache-pin-fraction 1.5".split_whitespace().map(String::from),
         );
         assert!(ServingConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn threads_flag_parses_and_auto_resolves() {
+        assert_eq!(ServingConfig::default().threads, 1);
+
+        let a = Args::parse("--threads 4".split_whitespace().map(String::from));
+        assert_eq!(ServingConfig::from_args(&a).unwrap().threads, 4);
+
+        // 0 = auto: resolves to this host's parallelism, never 0.
+        let auto = Args::parse("--threads 0".split_whitespace().map(String::from));
+        assert!(ServingConfig::from_args(&auto).unwrap().threads >= 1);
     }
 
     #[test]

@@ -88,7 +88,16 @@ impl Engine {
         let runner = ModelRunner::load(artifact_dir.as_ref().to_path_buf())?;
         let profile = load_profile(&runner.cfg)?;
         let policy = make_policy(&serving, &runner.cfg);
-        let cx = ExecContext::new(policy, hw, &runner.cfg, &profile, serving.seed);
+        // serving.threads sizes the parallel expert executor AND selects
+        // the multi-core latency calibration Algorithm 1 decides against.
+        let cx = ExecContext::with_threads(
+            policy,
+            hw,
+            &runner.cfg,
+            &profile,
+            serving.seed,
+            serving.threads,
+        );
         let rng = Rng::new(serving.seed ^ 0xC0FFEE);
         Ok(Engine { runner, cx, serving, rng })
     }

@@ -4,48 +4,168 @@
 //! The paper's point is that the CPU path deserves a dedicated kernel
 //! rather than the framework default.  Here the "framework default" is the
 //! XLA executable (which is fine numerically but pays per-call dispatch),
-//! and this module is the dedicated kernel: a cache-blocked f32 GEMM
-//! fused with the SiLU gate, operating directly on the weight store's
-//! buffers with zero dispatch overhead.  `rustc`'s auto-vectorizer emits
-//! the SIMD (the image has no AVX512_BF16; see DESIGN.md §2).
+//! and this module is the dedicated kernel: a register-blocked f32 GEMM
+//! over packed weight panels, fused with the SiLU gate, operating directly
+//! on the weight store's buffers with zero dispatch overhead and — after
+//! per-thread warmup — zero heap allocation in the hot loop (activations
+//! and packed panels live in thread-local scratch).  `rustc`'s
+//! auto-vectorizer emits the SIMD (the image has no AVX512_BF16; see
+//! DESIGN.md §2).
 //!
-//! It is validated against the HLO expert op (tests below) and used by the
-//! engine for `ExpertPlan::Cpu` executions when
-//! `FIDDLER_HOST_KERNEL=1` (the perf pass measures both paths).
+//! Determinism contract (relied on by `exec`'s intra-expert row
+//! partitioning): every output element is accumulated in ascending-`k`
+//! order starting from `+0.0`, by both the small-`m` streaming path and
+//! the packed micro-kernel path, so a row's bits never depend on how many
+//! rows share the call.
+//!
+//! It is validated against the naive reference and the HLO expert op
+//! (tests below) and used by the engine for `ExpertPlan::Cpu` executions
+//! when `FIDDLER_HOST_KERNEL=1` (the perf pass measures both paths).
 
 use crate::runtime::Tensor;
+use std::cell::RefCell;
+use std::sync::OnceLock;
 
 #[inline]
 fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// Blocked matmul-accumulate: `out[m][n] += a[m][k] * b[k][n]`.
-/// Row-major; blocks sized for L1/L2 residency of the b-panel.
-fn gemm_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
-    const BK: usize = 64;
-    const BN: usize = 128;
-    for k0 in (0..k).step_by(BK) {
-        let k1 = (k0 + BK).min(k);
-        for n0 in (0..n).step_by(BN) {
-            let n1 = (n0 + BN).min(n);
-            for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
-                let orow = &mut out[i * n..(i + 1) * n];
-                for kk in k0..k1 {
-                    let av = arow[kk];
-                    if av == 0.0 {
-                        continue;
-                    }
-                    let brow = &b[kk * n..kk * n + n1];
-                    // Inner loop over a contiguous panel: auto-vectorizes.
-                    for nn in n0..n1 {
-                        orow[nn] += av * brow[nn];
-                    }
+/// Micro-kernel row block (register tile height).
+const MR: usize = 4;
+/// Packed panel width (register tile width; 8 f32 = one AVX2 vector).
+const NR: usize = 8;
+
+/// Per-thread reusable buffers: gate/up activations + packed B panels.
+/// Workers of the executor pool each get their own copy, so the parallel
+/// hot loop stays allocation- and contention-free.
+#[derive(Default)]
+struct Scratch {
+    act1: Vec<f32>,
+    act3: Vec<f32>,
+    bpack: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Pack row-major `b` (`[k, n]`) into `NR`-wide column panels: panel `p`
+/// holds columns `[p*NR, p*NR+NR)` contiguously per `k` row, zero-padded
+/// at the right edge.  One linear write, then the micro-kernel reads each
+/// panel sequentially instead of striding across `n`.
+fn pack_b(b: &[f32], k: usize, n: usize, out: &mut Vec<f32>) {
+    let panels = n.div_ceil(NR);
+    out.clear();
+    out.resize(panels * k * NR, 0.0);
+    for p in 0..panels {
+        let j0 = p * NR;
+        let w = NR.min(n - j0);
+        let dst = &mut out[p * k * NR..(p + 1) * k * NR];
+        for kk in 0..k {
+            dst[kk * NR..kk * NR + w].copy_from_slice(&b[kk * n + j0..kk * n + j0 + w]);
+        }
+    }
+}
+
+/// `out = a @ b` for row-major `a [m,k]`, `b [k,n]`, `out [m,n]`.
+///
+/// Two regimes, bit-identical per element (both sum `a[i][kk]*b[kk][j]`
+/// over ascending `kk` into a single f32 accumulator that starts at
+/// `+0.0`):
+///
+/// * `m < MR` — streaming axpy (k-outer) over `b`'s rows: decode-size
+///   inputs read every weight exactly once, no packing overhead;
+/// * `m >= MR` — pack `b` into `NR` panels (thread-local scratch), then an
+///   `MR x NR` register-blocked micro-kernel reuses each loaded `b` value
+///   across `MR` rows.
+fn gemm(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize, bpack: &mut Vec<f32>) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert!(out.len() >= m * n);
+    let out = &mut out[..m * n];
+    out.fill(0.0);
+
+    if m < MR {
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &b[kk * n..(kk + 1) * n];
+                // Contiguous inner loop: auto-vectorizes.
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
                 }
             }
         }
+        return;
     }
+
+    pack_b(b, k, n, bpack);
+    let panels = n.div_ceil(NR);
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MR.min(m - i0);
+        for p in 0..panels {
+            let j0 = p * NR;
+            let w = NR.min(n - j0);
+            let panel = &bpack[p * k * NR..(p + 1) * k * NR];
+            // Register tile: accumulates the full k-reduction before one
+            // store, ascending kk — the same addition sequence as the
+            // small-m path.
+            let mut acc = [[0.0f32; NR]; MR];
+            for kk in 0..k {
+                let brow = &panel[kk * NR..kk * NR + NR];
+                for ii in 0..mr {
+                    let av = a[(i0 + ii) * k + kk];
+                    let accrow = &mut acc[ii];
+                    for jj in 0..NR {
+                        accrow[jj] += av * brow[jj];
+                    }
+                }
+            }
+            for ii in 0..mr {
+                let orow = &mut out[(i0 + ii) * n + j0..(i0 + ii) * n + j0 + w];
+                orow.copy_from_slice(&acc[ii][..w]);
+            }
+        }
+        i0 += mr;
+    }
+}
+
+/// Fused expert FFN on the host into a caller-provided buffer:
+/// `out = (silu(x @ w1) * (x @ w3)) @ w2`, with `out.len() == s * h`.
+/// All intermediates live in thread-local scratch — after warmup the hot
+/// loop performs zero heap allocation.
+pub fn expert_ffn_host_into(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor, out: &mut [f32]) {
+    let (s, h) = (x.shape[0], x.shape[1]);
+    let f = w1.shape[1];
+    assert_eq!(w1.shape, vec![h, f], "w1 shape");
+    assert_eq!(w3.shape, vec![h, f], "w3 shape");
+    assert_eq!(w2.shape, vec![f, h], "w2 shape");
+    assert_eq!(out.len(), s * h, "output buffer size");
+
+    SCRATCH.with(|cell| {
+        let scratch = &mut *cell.borrow_mut();
+        let Scratch { act1, act3, bpack } = scratch;
+        if act1.len() < s * f {
+            act1.resize(s * f, 0.0);
+        }
+        if act3.len() < s * f {
+            act3.resize(s * f, 0.0);
+        }
+        let a = &mut act1[..s * f];
+        let g = &mut act3[..s * f];
+        // a = x @ w1 ; g = x @ w3
+        gemm(&x.data, &w1.data, a, s, h, f, bpack);
+        gemm(&x.data, &w3.data, g, s, h, f, bpack);
+        // a = silu(a) * g   (the fused gate — one pass, no temporaries)
+        for (av, gv) in a.iter_mut().zip(g.iter()) {
+            *av = silu(*av) * *gv;
+        }
+        // out = a @ w2
+        gemm(a, &w2.data, out, s, f, h, bpack);
+    });
 }
 
 /// Fused expert FFN on the host: `(silu(x @ w1) * (x @ w3)) @ w2`.
@@ -53,29 +173,19 @@ fn gemm_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize)
 /// x: `[s, h]`, w1/w3: `[h, f]`, w2: `[f, h]` -> `[s, h]`.
 pub fn expert_ffn_host(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor) -> Tensor {
     let (s, h) = (x.shape[0], x.shape[1]);
-    let f = w1.shape[1];
-    assert_eq!(w1.shape, vec![h, f], "w1 shape");
-    assert_eq!(w3.shape, vec![h, f], "w3 shape");
-    assert_eq!(w2.shape, vec![f, h], "w2 shape");
-
-    // a = x @ w1 ; g = x @ w3
-    let mut a = vec![0.0f32; s * f];
-    let mut g = vec![0.0f32; s * f];
-    gemm_acc(&x.data, &w1.data, &mut a, s, h, f);
-    gemm_acc(&x.data, &w3.data, &mut g, s, h, f);
-    // a = silu(a) * g   (the fused gate — one pass, no temporaries)
-    for (av, gv) in a.iter_mut().zip(&g) {
-        *av = silu(*av) * gv;
-    }
-    // y = a @ w2
     let mut y = vec![0.0f32; s * h];
-    gemm_acc(&a, &w2.data, &mut y, s, f, h);
+    expert_ffn_host_into(x, w1, w3, w2, &mut y);
     Tensor { shape: vec![s, h], data: y }
 }
 
 /// Whether the engine should use this kernel for CPU-planned experts.
+/// The env var is read once per process (it used to be a `getenv` syscall
+/// per expert invocation in the layer hot loop).
 pub fn host_kernel_enabled() -> bool {
-    std::env::var("FIDDLER_HOST_KERNEL").map(|v| v == "1").unwrap_or(false)
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| {
+        std::env::var("FIDDLER_HOST_KERNEL").map(|v| v == "1").unwrap_or(false)
+    })
 }
 
 #[cfg(test)]
@@ -143,6 +253,60 @@ mod tests {
             let d = got.max_abs_diff(&want);
             assert!(d < 1e-4, "host kernel diverges from naive: {d}");
         });
+    }
+
+    /// The executor's load-bearing property: splitting rows across calls
+    /// never changes a single bit of any output row (same-k-order
+    /// accumulation in both gemm regimes).
+    #[test]
+    fn row_chunks_are_bitwise_invariant_property() {
+        check("host kernel chunk invariance", 24, |g: &mut Gen| {
+            let s = g.usize_in(2..40);
+            let h = 2 * g.usize_in(1..13);
+            let f = 2 * g.usize_in(1..21);
+            let seed = g.u64();
+            let mut rng = Rng::new(seed);
+            let x = rand_tensor(&mut rng, vec![s, h], 0.5);
+            let w1 = rand_tensor(&mut rng, vec![h, f], 0.2);
+            let w3 = rand_tensor(&mut rng, vec![h, f], 0.2);
+            let w2 = rand_tensor(&mut rng, vec![f, h], 0.2);
+            let whole = expert_ffn_host(&x, &w1, &w3, &w2);
+
+            // Random chunk boundaries, including chunks below MR (the
+            // streaming regime) next to chunks above it (the packed one).
+            let mut r0 = 0;
+            let mut merged = vec![0.0f32; s * h];
+            while r0 < s {
+                let len = g.usize_in(1..6).min(s - r0);
+                let chunk = Tensor {
+                    shape: vec![len, h],
+                    data: x.data[r0 * h..(r0 + len) * h].to_vec(),
+                };
+                let out = expert_ffn_host(&chunk, &w1, &w3, &w2);
+                merged[r0 * h..(r0 + len) * h].copy_from_slice(&out.data);
+                r0 += len;
+            }
+            for (i, (a, b)) in whole.data.iter().zip(&merged).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "bit mismatch at element {i}: {a} vs {b}"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_variant() {
+        let mut rng = Rng::new(5);
+        let x = rand_tensor(&mut rng, vec![6, 10], 0.5);
+        let w1 = rand_tensor(&mut rng, vec![10, 14], 0.2);
+        let w3 = rand_tensor(&mut rng, vec![10, 14], 0.2);
+        let w2 = rand_tensor(&mut rng, vec![14, 10], 0.2);
+        let t = expert_ffn_host(&x, &w1, &w3, &w2);
+        let mut buf = vec![7.0f32; 6 * 10]; // dirty buffer must be overwritten
+        expert_ffn_host_into(&x, &w1, &w3, &w2, &mut buf);
+        assert_eq!(t.data, buf);
     }
 
     #[test]

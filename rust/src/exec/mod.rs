@@ -1,0 +1,288 @@
+//! Wall-clock parallel expert executor (the paper's §3.3–§3.4 made real).
+//!
+//! The simulated substrate has always *modeled* CPU/GPU concurrency
+//! (`scheduler::predict_layer_us` takes `max(gpu_queue, cpu_queue)`), but
+//! the numerics used to run every expert serially on the engine thread.
+//! This module closes that gap:
+//!
+//! * [`pool::ExecutorPool`] — persistent CPU workers executing all
+//!   CPU-planned experts of a layer concurrently;
+//! * [`partition_rows`] — intra-expert row partitioning, so one large-`s`
+//!   prefill expert also spreads across cores;
+//! * [`run_expert_chunks`] / [`run_cpu_experts`] — the dispatch + ordered
+//!   merge the MoE layer loop (and the benches/tests) drive.
+//!
+//! Determinism contract: for fixed inputs the merged outputs are
+//! **bit-identical for every thread count and every chunking**.  Two
+//! things make that true: (1) each output row of the expert FFN depends
+//! only on its own input row, and the host kernel accumulates every output
+//! element in ascending-`k` order from `+0.0` regardless of the number of
+//! rows in the call (see `cpukernel::gemm`); (2) chunk outputs are merged
+//! positionally and the engine reduces expert outputs in expert-index
+//! order, never in completion order.
+
+pub mod pool;
+
+pub use pool::{ExecutorPool, PendingBatch};
+
+use crate::runtime::Tensor;
+use std::sync::Arc;
+
+/// Minimum rows per intra-expert chunk: below this the per-chunk dispatch
+/// and weight-panel repacking cost more than the GEMM they parallelize
+/// (decode-size inputs always stay whole).
+pub const MIN_CHUNK_ROWS: usize = 16;
+
+/// One unit of pool work: a row-slice of one expert's gathered input plus
+/// shared handles to that expert's weights.
+pub struct ExpertChunk {
+    /// Expert index within the layer (output slot to merge into).
+    pub expert: usize,
+    /// First row of this chunk within the expert's input.
+    pub row0: usize,
+    /// Gathered activation rows for this chunk, `[rows, hidden]`, exact.
+    pub x: Tensor,
+    pub w1: Arc<Tensor>,
+    pub w3: Arc<Tensor>,
+    pub w2: Arc<Tensor>,
+}
+
+/// Output of one chunk, tagged for positional merge.
+pub struct ChunkOut {
+    pub expert: usize,
+    pub row0: usize,
+    pub out: Tensor,
+}
+
+/// A whole CPU-planned expert (the convenience form used by benches and
+/// tests; the engine builds [`ExpertChunk`]s straight from the routing
+/// table to skip one gather).
+pub struct CpuExpertTask {
+    pub expert: usize,
+    /// Full gathered input `[s, hidden]`.
+    pub x: Tensor,
+    pub w1: Arc<Tensor>,
+    pub w3: Arc<Tensor>,
+    pub w2: Arc<Tensor>,
+}
+
+/// Split `rows` into at most `threads` contiguous chunks, targeting
+/// [`MIN_CHUNK_ROWS`] rows per chunk: the chunk *count* is capped at
+/// `ceil(rows / MIN_CHUNK_ROWS)`, so even splitting can produce chunks
+/// down to half the target (never smaller) — inputs below `2 *
+/// MIN_CHUNK_ROWS` rows stay whole.  Covers `[0, rows)` exactly, in
+/// order, with no empty chunk.
+pub fn partition_rows(rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    if rows == 0 {
+        return Vec::new();
+    }
+    let max_chunks = rows.div_ceil(MIN_CHUNK_ROWS);
+    let chunks = threads.max(1).min(max_chunks);
+    let base = rows / chunks;
+    let rem = rows % chunks;
+    let mut out = Vec::with_capacity(chunks);
+    let mut r0 = 0;
+    for i in 0..chunks {
+        let len = base + usize::from(i < rem);
+        out.push((r0, r0 + len));
+        r0 += len;
+    }
+    debug_assert_eq!(r0, rows);
+    out
+}
+
+/// Dispatch expert chunks to the pool.  Non-blocking on a threaded pool:
+/// the caller overlaps GPU work and joins via [`PendingBatch::wait`].
+pub fn run_expert_chunks(
+    pool: &ExecutorPool,
+    chunks: Vec<ExpertChunk>,
+) -> PendingBatch<ChunkOut> {
+    let jobs: Vec<_> = chunks
+        .into_iter()
+        .map(|c| {
+            move || ChunkOut {
+                expert: c.expert,
+                row0: c.row0,
+                out: crate::cpukernel::expert_ffn_host(&c.x, &c.w1, &c.w3, &c.w2),
+            }
+        })
+        .collect();
+    pool.submit(jobs)
+}
+
+/// Execute a batch of whole CPU experts on the pool (blocking): partitions
+/// each task's rows, dispatches every chunk, and merges the outputs back
+/// into one `[s, hidden]` tensor per task, ordered like `tasks`.  Tasks
+/// are borrowed — chunk inputs are copied out row-wise (the same copy the
+/// engine's gather performs), weights travel as `Arc` clones.
+pub fn run_cpu_experts(pool: &ExecutorPool, tasks: &[CpuExpertTask]) -> Vec<Tensor> {
+    let mut outputs: Vec<Tensor> = Vec::with_capacity(tasks.len());
+    let mut chunks: Vec<ExpertChunk> = Vec::new();
+    for (slot, task) in tasks.iter().enumerate() {
+        let (s, h) = (task.x.shape[0], task.x.shape[1]);
+        outputs.push(Tensor::zeros(vec![s, h]));
+        for (r0, r1) in partition_rows(s, pool.threads()) {
+            chunks.push(ExpertChunk {
+                expert: slot,
+                row0: r0,
+                x: Tensor {
+                    shape: vec![r1 - r0, h],
+                    data: task.x.data[r0 * h..r1 * h].to_vec(),
+                },
+                w1: Arc::clone(&task.w1),
+                w3: Arc::clone(&task.w3),
+                w2: Arc::clone(&task.w2),
+            });
+        }
+    }
+    for c in run_expert_chunks(pool, chunks).wait() {
+        let h = c.out.shape[1];
+        outputs[c.expert].data[c.row0 * h..c.row0 * h + c.out.data.len()]
+            .copy_from_slice(&c.out.data);
+    }
+    outputs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpukernel::expert_ffn_host;
+    use crate::testkit::{check, Gen};
+    use crate::util::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: (0..n).map(|_| (rng.normal() as f32) * scale).collect(),
+        }
+    }
+
+    fn rand_task(rng: &mut Rng, expert: usize, s: usize, h: usize, f: usize) -> CpuExpertTask {
+        CpuExpertTask {
+            expert,
+            x: rand_tensor(rng, vec![s, h], 0.5),
+            w1: Arc::new(rand_tensor(rng, vec![h, f], 0.2)),
+            w3: Arc::new(rand_tensor(rng, vec![h, f], 0.2)),
+            w2: Arc::new(rand_tensor(rng, vec![f, h], 0.2)),
+        }
+    }
+
+    fn bits(t: &Tensor) -> Vec<u32> {
+        t.data.iter().map(|v| v.to_bits()).collect()
+    }
+
+    #[test]
+    fn partition_rows_covers_exactly() {
+        check("partition_rows covers", 256, |g: &mut Gen| {
+            let rows = g.usize_in(1..600);
+            let threads = g.usize_in(1..33);
+            let parts = partition_rows(rows, threads);
+            assert!(!parts.is_empty());
+            assert!(parts.len() <= threads);
+            let mut next = 0;
+            for &(r0, r1) in &parts {
+                assert_eq!(r0, next, "gap or overlap");
+                assert!(r1 > r0, "empty chunk");
+                next = r1;
+            }
+            assert_eq!(next, rows);
+            // Chunks respect the minimum unless rows itself is small.
+            if parts.len() > 1 {
+                for &(r0, r1) in &parts {
+                    assert!(r1 - r0 >= MIN_CHUNK_ROWS / 2, "chunk too small: {parts:?}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn partition_rows_keeps_decode_whole() {
+        for s in 1..MIN_CHUNK_ROWS {
+            assert_eq!(partition_rows(s, 8), vec![(0, s)]);
+        }
+        assert_eq!(partition_rows(0, 8), Vec::<(usize, usize)>::new());
+    }
+
+    /// The acceptance-criteria property: parallel output is bit-identical
+    /// to serial output for threads in {1, 2, 4} — same reduction order,
+    /// chunk-invariant kernel.
+    #[test]
+    fn parallel_output_bitwise_equals_serial() {
+        check("executor determinism", 12, |g: &mut Gen| {
+            let h = 2 * g.usize_in(2..20);
+            let f = 2 * g.usize_in(2..33);
+            let n_experts = g.usize_in(1..6);
+            let seed = g.u64();
+            let mut rng = Rng::new(seed);
+            let tasks: Vec<CpuExpertTask> = (0..n_experts)
+                .map(|e| {
+                    // Mix decode-size and prefill-size experts so both the
+                    // whole-expert and the row-partitioned paths run.
+                    let s = if e % 2 == 0 { 1 + e } else { 40 + 8 * e };
+                    rand_task(&mut rng, e, s, h, f)
+                })
+                .collect();
+
+            // Reference: direct serial kernel calls, no executor at all.
+            let reference: Vec<Tensor> = tasks
+                .iter()
+                .map(|t| expert_ffn_host(&t.x, &t.w1, &t.w3, &t.w2))
+                .collect();
+
+            for threads in [1usize, 2, 4] {
+                let pool = ExecutorPool::new(threads);
+                let got = run_cpu_experts(&pool, &tasks);
+                assert_eq!(got.len(), reference.len());
+                for (g_out, want) in got.iter().zip(&reference) {
+                    assert_eq!(g_out.shape, want.shape);
+                    assert_eq!(
+                        bits(g_out),
+                        bits(want),
+                        "threads={threads}: executor output not bit-identical to serial"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn chunked_expert_matches_whole_expert_bitwise() {
+        // Intra-expert partitioning alone (one big expert, many chunks).
+        let mut rng = Rng::new(99);
+        let task = rand_task(&mut rng, 0, 130, 24, 40);
+        let want = expert_ffn_host(&task.x, &task.w1, &task.w3, &task.w2);
+        let tasks = [task];
+        for threads in [2usize, 4, 7] {
+            let pool = ExecutorPool::new(threads);
+            let got = run_cpu_experts(&pool, &tasks);
+            assert_eq!(bits(&got[0]), bits(&want), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn overlap_submit_returns_before_join() {
+        // On a threaded pool, submit must not block: the engine thread uses
+        // the gap to run GPU-planned experts.
+        let pool = ExecutorPool::new(2);
+        let jobs: Vec<_> = (0..2)
+            .map(|i| {
+                move || {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    i
+                }
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let pending = pool.submit(jobs);
+        let submit_elapsed = t0.elapsed();
+        let out = pending.wait();
+        let total_elapsed = t0.elapsed();
+        assert_eq!(out, vec![0, 1]);
+        assert!(
+            submit_elapsed < std::time::Duration::from_millis(10),
+            "submit blocked: {submit_elapsed:?}"
+        );
+        assert!(total_elapsed >= std::time::Duration::from_millis(20));
+    }
+}

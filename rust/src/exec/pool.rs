@@ -1,0 +1,240 @@
+//! Persistent worker pool for the wall-clock expert executor.
+//!
+//! std-only (no rayon/crossbeam): a shared `Mutex<VecDeque>` job queue, a
+//! condvar for wakeups, and an `mpsc` channel per submitted batch.  Jobs
+//! are `'static` closures — the expert layer above ships owned activation
+//! chunks and `Arc`-shared weights, so no scoped-lifetime tricks (and no
+//! `unsafe`) are needed.
+//!
+//! Semantics:
+//!
+//! * `threads <= 1` builds an **inline** pool: `submit` runs every job on
+//!   the calling thread before returning.  This is the `--threads 1`
+//!   serial regression path — bit-for-bit the old single-threaded engine.
+//! * `threads >= 2` spawns that many persistent workers.  `submit` is
+//!   non-blocking; the caller overlaps its own (GPU) work and joins at
+//!   [`PendingBatch::wait`].
+//! * Results come back **in submission order** regardless of completion
+//!   order, which is what makes the layer reduction deterministic.
+//! * A panicking job surfaces as a panic in `wait()` (its result channel
+//!   is dropped); workers themselves survive and keep serving.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A fixed-size pool of persistent worker threads (or the inline stub).
+pub struct ExecutorPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ExecutorPool {
+    /// Build a pool with `threads` CPU workers (clamped to >= 1).
+    /// `threads == 1` means inline/serial execution — no threads spawned.
+    pub fn new(threads: usize) -> ExecutorPool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut workers = Vec::new();
+        if threads > 1 {
+            for i in 0..threads {
+                let sh = Arc::clone(&shared);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("fiddler-exec-{i}"))
+                        .spawn(move || worker_loop(sh))
+                        .expect("spawn executor worker"),
+                );
+            }
+        }
+        ExecutorPool { shared, workers, threads }
+    }
+
+    /// Worker count the pool was built with (1 for the inline pool).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when `submit` runs jobs on the calling thread (serial mode).
+    pub fn is_inline(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// Submit a batch of independent jobs.  Non-blocking when the pool has
+    /// workers; the returned handle yields results in submission order.
+    pub fn submit<T, F>(&self, jobs: Vec<F>) -> PendingBatch<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let expected = jobs.len();
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        if self.is_inline() {
+            for (i, job) in jobs.into_iter().enumerate() {
+                let _ = tx.send((i, job()));
+            }
+        } else {
+            {
+                let mut q = self.shared.queue.lock().unwrap();
+                for (i, job) in jobs.into_iter().enumerate() {
+                    let tx = tx.clone();
+                    q.push_back(Box::new(move || {
+                        // Receiver may be gone (submitter bailed on an
+                        // unrelated error): dropping the result is fine.
+                        let _ = tx.send((i, job()));
+                    }));
+                }
+            }
+            self.shared.available.notify_all();
+        }
+        PendingBatch { rx, expected }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        // A panicking job must not kill the worker; the panic reaches the
+        // submitter through its dropped result sender.
+        let _ = catch_unwind(AssertUnwindSafe(job));
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Handle to a submitted batch; results ordered by submission index.
+pub struct PendingBatch<T> {
+    rx: mpsc::Receiver<(usize, T)>,
+    expected: usize,
+}
+
+impl<T> PendingBatch<T> {
+    /// Number of jobs in the batch.
+    pub fn len(&self) -> usize {
+        self.expected
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.expected == 0
+    }
+
+    /// Block until every job of the batch has finished; panics if any job
+    /// panicked (the layer must not silently drop an expert's output).
+    pub fn wait(self) -> Vec<T> {
+        let mut slots: Vec<Option<T>> = (0..self.expected).map(|_| None).collect();
+        for _ in 0..self.expected {
+            let (i, v) = self
+                .rx
+                .recv()
+                .expect("executor job lost (worker panicked?)");
+            slots[i] = Some(v);
+        }
+        slots
+            .into_iter()
+            .map(|s| s.expect("executor returned a duplicate job index"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inline_pool_runs_on_caller() {
+        let pool = ExecutorPool::new(1);
+        assert!(pool.is_inline());
+        assert_eq!(pool.threads(), 1);
+        let out = pool.submit((0..5).map(|i| move || i * 10).collect()).wait();
+        assert_eq!(out, vec![0, 10, 20, 30, 40]);
+    }
+
+    #[test]
+    fn threaded_pool_preserves_submission_order() {
+        let pool = ExecutorPool::new(4);
+        assert!(!pool.is_inline());
+        // Uneven job durations: completion order != submission order.
+        let jobs: Vec<_> = (0..64usize)
+            .map(|i| {
+                move || {
+                    if i % 7 == 0 {
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    i * i
+                }
+            })
+            .collect();
+        let out = pool.submit(jobs).wait();
+        let want: Vec<usize> = (0..64).map(|i| i * i).collect();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn pool_survives_multiple_batches() {
+        let pool = ExecutorPool::new(2);
+        for round in 0..10u64 {
+            let jobs: Vec<_> = (0..8u64).map(|i| move || round * 100 + i).collect();
+            let out = pool.submit(jobs).wait();
+            assert_eq!(out.len(), 8);
+            assert_eq!(out[3], round * 100 + 3);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let pool = ExecutorPool::new(2);
+        let jobs: Vec<fn() -> usize> = Vec::new();
+        assert!(pool.submit(jobs).wait().is_empty());
+    }
+
+    #[test]
+    fn job_panic_reaches_wait_not_worker() {
+        let pool = ExecutorPool::new(2);
+        // Box<dyn FnOnce() -> usize + Send> is itself FnOnce + Send.
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("expert exploded")),
+            Box::new(|| 3),
+        ];
+        let pending = pool.submit(jobs);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| pending.wait()));
+        assert!(r.is_err(), "panic in a job must propagate to wait()");
+        // The pool still serves later batches.
+        let out = pool.submit((0..4).map(|i| move || i + 1).collect()).wait();
+        assert_eq!(out, vec![1, 2, 3, 4]);
+    }
+}

@@ -63,15 +63,14 @@ pub fn fit(
     }
 }
 
-/// Synthesize noisy samples from a hardware config's analytic curves, as if
-/// measured on the paper's testbed (32 repeats per point, like Appendix A).
-pub fn synth_samples(
-    hw: &HardwareConfig,
+/// Synthesize noisy samples from an analytic latency model, as if measured
+/// on the paper's testbed (32 repeats per point, like Appendix A).
+pub fn synth_samples_from(
+    ideal: &LatencyModel,
     sizes: &[usize],
     noise_frac: f64,
     seed: u64,
 ) -> (Vec<Sample>, Vec<Sample>) {
-    let ideal = LatencyModel::from_hardware(hw);
     let mut rng = Rng::new(seed);
     let mut cpu = Vec::new();
     let mut gpu = Vec::new();
@@ -86,11 +85,32 @@ pub fn synth_samples(
     (cpu, gpu)
 }
 
+/// Synthesize noisy samples from a hardware config's analytic curves.
+pub fn synth_samples(
+    hw: &HardwareConfig,
+    sizes: &[usize],
+    noise_frac: f64,
+    seed: u64,
+) -> (Vec<Sample>, Vec<Sample>) {
+    synth_samples_from(&LatencyModel::from_hardware(hw), sizes, noise_frac, seed)
+}
+
+const CALIB_SIZES: [usize; 8] = [1, 2, 4, 8, 16, 32, 64, 128];
+
 /// Calibrate a latency model for `hw` from synthesized noisy measurements —
 /// the initialization-phase procedure of §3.3.
 pub fn calibrate_paper_env(hw: &HardwareConfig, seed: u64) -> LatencyModel {
-    let sizes = [1, 2, 4, 8, 16, 32, 64, 128];
-    let (cpu, gpu) = synth_samples(hw, &sizes, 0.03, seed);
+    let (cpu, gpu) = synth_samples(hw, &CALIB_SIZES, 0.03, seed);
+    fit(&cpu, &gpu, hw.weight_transfer_us())
+}
+
+/// Calibrate the multi-core CPU expert curve: §3.3's initialization
+/// measurement repeated with the parallel executor running `threads`
+/// workers, so the fitted `cpu_lat(s)` — and with it Algorithm 1's
+/// CPU/GPU crossover — reflects the faster CPU path.
+pub fn calibrate_multicore(hw: &HardwareConfig, threads: usize, seed: u64) -> LatencyModel {
+    let ideal = LatencyModel::from_hardware_threaded(hw, threads);
+    let (cpu, gpu) = synth_samples_from(&ideal, &CALIB_SIZES, 0.03, seed);
     fit(&cpu, &gpu, hw.weight_transfer_us())
 }
 
@@ -152,6 +172,34 @@ mod tests {
         let a = fitted.crossover_tokens() as f64;
         let b = ideal.crossover_tokens() as f64;
         assert!((a - b).abs() / b < 0.25, "crossover {a} vs {b}");
+    }
+
+    #[test]
+    fn multicore_fit_tracks_threaded_curve() {
+        let hw = HardwareConfig::env1();
+        let threads = 8;
+        let ideal = LatencyModel::from_hardware_threaded(&hw, threads);
+        let fitted = calibrate_multicore(&hw, threads, 11);
+        // The fit folds the activation round-trip into the slope (its own
+        // act term is 0), so compare against the ideal's combined slope.
+        let want_slope = ideal.cpu_per_token_us + ideal.act_roundtrip_per_token_us;
+        let rel = |a: f64, b: f64| (a - b).abs() / b;
+        assert!(
+            rel(fitted.cpu_per_token_us, want_slope) < 0.10,
+            "fitted slope {} vs ideal {}",
+            fitted.cpu_per_token_us,
+            want_slope
+        );
+        // The multi-core fit must sit clearly below the single-core fit and
+        // push the crossover out.
+        let single = calibrate_paper_env(&hw, 11);
+        assert!(fitted.cpu_per_token_us < single.cpu_per_token_us);
+        assert!(
+            fitted.crossover_tokens() > single.crossover_tokens(),
+            "multicore crossover {} not beyond single-core {}",
+            fitted.crossover_tokens(),
+            single.crossover_tokens()
+        );
     }
 
     #[test]

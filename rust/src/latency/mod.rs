@@ -30,6 +30,21 @@ pub struct LatencyModel {
     pub act_roundtrip_per_token_us: f64,
 }
 
+/// Bytes of one paper-scale token's activation vector (hidden 4096, bf16).
+const TOKEN_ACT_BYTES: usize = 4096 * 2;
+
+/// Effective speedup of the CPU expert path with `threads` workers.
+///
+/// The expert GEMV is DRAM-bandwidth bound, so scaling is sublinear:
+/// linear-with-contention, `t / (1 + C*(t-1))`, which gives ~5.1x at 8
+/// threads and saturates toward `1/C` = 12.5x as the memory controllers
+/// fill up.  `threads = 1` is exactly 1.0 (the single-core model).
+pub fn cpu_parallel_speedup(threads: usize) -> f64 {
+    const CONTENTION: f64 = 0.08;
+    let t = threads.max(1) as f64;
+    t / (1.0 + CONTENTION * (t - 1.0))
+}
+
 impl LatencyModel {
     pub fn from_hardware(hw: &HardwareConfig) -> LatencyModel {
         LatencyModel {
@@ -38,9 +53,27 @@ impl LatencyModel {
             cpu_base_us: hw.cpu_expert_base_us,
             cpu_per_token_us: hw.cpu_expert_per_token_us,
             transfer_us: hw.weight_transfer_us(),
-            act_roundtrip_per_token_us: 2.0 * hw.act_copy_us(4096 * 2)
-                / 1.0_f64.max(1.0),
+            // Each CPU-planned token ships its activation GPU->CPU and the
+            // result back: two copies of one token's activation, in
+            // µs/token (Appendix A measures this at <1% of expert latency).
+            act_roundtrip_per_token_us: 2.0 * hw.act_copy_us(TOKEN_ACT_BYTES),
         }
+    }
+
+    /// Latency model for a `threads`-wide CPU expert executor: the CPU
+    /// curve (weight pass + per-token compute) scales by the sublinear
+    /// multi-core speedup, capped at the environment's core count; GPU,
+    /// transfer, and activation-copy terms are unaffected.  This is what
+    /// Algorithm 1 consults when the engine runs the parallel executor —
+    /// a faster CPU pushes the crossover out and keeps more experts off
+    /// the PCIe link.
+    pub fn from_hardware_threaded(hw: &HardwareConfig, threads: usize) -> LatencyModel {
+        let mut m = Self::from_hardware(hw);
+        let t = threads.max(1).min(hw.cpu_cores.max(1));
+        let speedup = cpu_parallel_speedup(t);
+        m.cpu_base_us /= speedup;
+        m.cpu_per_token_us /= speedup;
+        m
     }
 
     /// Expected GPU latency for an expert with `s` input tokens, weights
@@ -124,5 +157,50 @@ mod tests {
     fn activation_roundtrip_under_one_percent() {
         let m = m();
         assert!(m.act_roundtrip_per_token_us < 0.01 * m.cpu_lat(1));
+    }
+
+    #[test]
+    fn threaded_model_single_thread_is_identity() {
+        let hw = HardwareConfig::env1();
+        let m1 = LatencyModel::from_hardware_threaded(&hw, 1);
+        let m0 = LatencyModel::from_hardware(&hw);
+        assert!((m1.cpu_base_us - m0.cpu_base_us).abs() < 1e-12);
+        assert!((m1.cpu_per_token_us - m0.cpu_per_token_us).abs() < 1e-12);
+        assert!((m1.cpu_lat(17) - m0.cpu_lat(17)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threaded_model_scales_sublinearly_and_moves_crossover_out() {
+        let hw = HardwareConfig::env1();
+        let m1 = LatencyModel::from_hardware_threaded(&hw, 1);
+        let m8 = LatencyModel::from_hardware_threaded(&hw, 8);
+        // Faster, but less than 8x (bandwidth contention).
+        assert!(m8.cpu_per_token_us < m1.cpu_per_token_us);
+        assert!(m8.cpu_per_token_us > m1.cpu_per_token_us / 8.0);
+        // GPU-side and link terms untouched.
+        assert!((m8.gpu_const_us - m1.gpu_const_us).abs() < 1e-12);
+        assert!((m8.transfer_us - m1.transfer_us).abs() < 1e-12);
+        assert!(
+            (m8.act_roundtrip_per_token_us - m1.act_roundtrip_per_token_us).abs() < 1e-12
+        );
+        // The decision-relevant consequence: the CPU stays the right
+        // choice for larger inputs (Algorithm 1 crossover moves out).
+        assert!(m8.crossover_tokens() > m1.crossover_tokens());
+    }
+
+    #[test]
+    fn parallel_speedup_monotone_and_capped_by_cores() {
+        let mut prev = 0.0;
+        for t in 1..64 {
+            let s = cpu_parallel_speedup(t);
+            assert!(s > prev, "speedup not monotone at {t}");
+            assert!(s <= t as f64 + 1e-12, "superlinear speedup at {t}");
+            prev = s;
+        }
+        // Requesting more threads than the env has cores changes nothing.
+        let hw = HardwareConfig::env1();
+        let at_cores = LatencyModel::from_hardware_threaded(&hw, hw.cpu_cores);
+        let beyond = LatencyModel::from_hardware_threaded(&hw, hw.cpu_cores * 4);
+        assert!((at_cores.cpu_per_token_us - beyond.cpu_per_token_us).abs() < 1e-12);
     }
 }

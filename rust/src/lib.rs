@@ -10,10 +10,12 @@
 //! * **L3 (this crate)** — the paper's contribution: the [`scheduler`]
 //!   (Algorithm 1), [`placement`] (popularity pinning), the [`expertcache`]
 //!   residency subsystem (pluggable eviction + async transfer tracking),
-//!   the serving [`coordinator`] (continuous batching, beam search), and
-//!   the [`baselines`] it is evaluated against, over a simulated
-//!   heterogeneous [`hardware`] substrate (virtual clock + calibrated
-//!   [`latency`] model).
+//!   the wall-clock parallel expert executor [`exec`] (worker pool +
+//!   CPU/GPU overlap inside the layer loop, feeding the [`cpukernel`]
+//!   host kernel), the serving [`coordinator`] (continuous batching, beam
+//!   search), and the [`baselines`] it is evaluated against, over a
+//!   simulated heterogeneous [`hardware`] substrate (virtual clock +
+//!   calibrated [`latency`] model).
 //!
 //! See DESIGN.md for the experiment index and the hardware substitutions.
 
@@ -25,6 +27,7 @@ pub mod util;
 
 pub mod baselines;
 pub mod coordinator;
+pub mod exec;
 pub mod expertcache;
 pub mod hardware;
 pub mod kvcache;

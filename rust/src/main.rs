@@ -46,14 +46,18 @@ fn print_help() {
                       [--listen 127.0.0.1:7777]  (newline-JSON TCP protocol)\n\
            generate   --model M --env E --policy P --inp L --out L [--prompt 1,2,3]\n\
            beam       --model M --env E --policy P --width W --inp L --out L\n\
-           calibrate  --env E [--measured]\n\
+           calibrate  --env E [--measured] [--threads N]\n\
            inspect    --model M --env E\n\
          \n\
          DEFAULTS: --model mixtral-tiny --env env1 --policy fiddler\n\
          POLICIES: fiddler | mii (DeepSpeed-MII*) | lru (Mixtral-Offloading*) |\n\
                    static (llama.cpp*) | fiddler-prefetch | fiddler-cached\n\
          CACHE:    fiddler-cached takes --cache-eviction lru|scored|transition\n\
-                   and --cache-pin-fraction F (default 0.5)"
+                   and --cache-pin-fraction F (default 0.5)\n\
+         EXECUTOR: --threads N sizes the parallel CPU expert executor\n\
+                   (1 = serial, 0 = one worker per core); set\n\
+                   FIDDLER_HOST_KERNEL=1 to run CPU-planned experts through\n\
+                   the dedicated host kernel"
     );
 }
 
@@ -186,6 +190,23 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
             m.cpu_per_token_us / 1e3,
             m.transfer_us / 1e3,
             m.crossover_tokens()
+        );
+    }
+    // Multi-core CPU path: how the parallel executor shifts Algorithm 1's
+    // crossover (--threads N, 0 = one worker per core).
+    let threads = match args.usize_or("threads", 1) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        n => n,
+    };
+    if threads > 1 {
+        let mc = calib::calibrate_multicore(&hw, threads, args.u64_or("seed", 42));
+        println!(
+            "{:>9}: cpu {:.2} + {:.3}*s ms | crossover s*={} ({} executor threads)",
+            "multicore",
+            mc.cpu_base_us / 1e3,
+            mc.cpu_per_token_us / 1e3,
+            mc.crossover_tokens(),
+            threads
         );
     }
     if args.has("measured") {

@@ -43,7 +43,8 @@ impl ExpertEvents {
 }
 
 /// Mutable execution state threaded through a serving session: the policy,
-/// the simulated memory/link/clock, and online profiling.
+/// the simulated memory/link/clock, online profiling, and the wall-clock
+/// worker pool executing CPU-planned experts.
 pub struct ExecContext {
     pub policy: Box<dyn ExecPolicy>,
     pub memory: ExpertCache,
@@ -54,18 +55,45 @@ pub struct ExecContext {
     pub clock: VirtualClock,
     pub online_profile: Profile,
     pub events: ExpertEvents,
+    /// CPU worker threads of the parallel expert executor; 1 = serial
+    /// (the pre-parallel engine behavior, bit-for-bit).
+    pub threads: usize,
+    /// Persistent worker pool for CPU-planned experts (see [`crate::exec`]).
+    pub pool: crate::exec::ExecutorPool,
 }
 
 impl ExecContext {
     /// Build a context: runs the policy's initialization-time placement
-    /// against `profile` (the build-time calibration profile).
+    /// against `profile` (the build-time calibration profile).  Serial
+    /// executor (`threads = 1`); see [`ExecContext::with_threads`].
     pub fn new(
-        mut policy: Box<dyn ExecPolicy>,
+        policy: Box<dyn ExecPolicy>,
         hw: &HardwareConfig,
         cfg: &ModelConfig,
         profile: &Profile,
         seed: u64,
     ) -> ExecContext {
+        Self::with_threads(policy, hw, cfg, profile, seed, 1)
+    }
+
+    /// Build a context with a `threads`-wide parallel expert executor.
+    /// When the host kernel is enabled (the only path the pool
+    /// accelerates), the latency model switches to the multi-core CPU
+    /// curve, so Algorithm 1's crossover reflects the executor's actual
+    /// throughput (a faster CPU keeps more experts off the PCIe link).
+    /// With the host kernel off the single-core model is kept — the
+    /// engine must never plan against a speedup it does not realize.
+    pub fn with_threads(
+        mut policy: Box<dyn ExecPolicy>,
+        hw: &HardwareConfig,
+        cfg: &ModelConfig,
+        profile: &Profile,
+        seed: u64,
+        threads: usize,
+    ) -> ExecContext {
+        let threads = threads.max(1);
+        let lat_threads =
+            if crate::cpukernel::host_kernel_enabled() { threads } else { 1 };
         // Scale the paper-environment expert capacity to this model's
         // expert count (capacity fractions are what transfer: 56/256 and
         // 125/256 in the paper).
@@ -78,12 +106,14 @@ impl ExecContext {
             policy,
             memory,
             link: PcieLink::new(hw),
-            lat: LatencyModel::from_hardware(hw),
+            lat: LatencyModel::from_hardware_threaded(hw, lat_threads),
             hw: hw.clone(),
             timeline: DeviceTimeline::new(),
             clock: VirtualClock::new(),
             online_profile: Profile::new(cfg.n_layers, cfg.n_experts),
             events: ExpertEvents::default(),
+            threads,
+            pool: crate::exec::ExecutorPool::new(threads),
         }
     }
 
@@ -233,41 +263,88 @@ impl ModelRunner {
         // this layer's compute.
         cx.policy
             .post_layer(layer, &routing.inp_size, &mut cx.memory, &cx.lat, t0);
+
+        // Wall-clock execution now mirrors the simulated overlap (§3.3):
+        // the worker pool chews CPU-planned experts through the dedicated
+        // host kernel (§3.4) while this thread runs the GPU-planned
+        // experts' executables, and both join at the layer barrier below.
+        // Outputs are stashed per expert and combined afterwards in
+        // expert-index order — the same reduction order as the old serial
+        // loop, independent of plan, thread count, and completion
+        // schedule, so the numerics are unchanged to the bit.
+        let host_kernel = crate::cpukernel::host_kernel_enabled();
+        let on_pool = |plan: &ExpertPlan| *plan == ExpertPlan::Cpu && host_kernel;
+
+        let mut outputs: Vec<Option<Tensor>> = plans.iter().map(|_| None).collect();
+        let mut chunks: Vec<crate::exec::ExpertChunk> = Vec::new();
         for (j, plan) in plans.iter().enumerate() {
             let Some(plan) = plan else { continue };
-            let s = routing.inp_size[j];
-            let rows: Vec<usize> = routing.rows_for[j].iter().map(|&(r, _)| r).collect();
-            let weights: Vec<f32> = routing.rows_for[j].iter().map(|&(_, w)| w).collect();
-
-            // Execute the expert numerically. CPU-planned experts may use
-            // the dedicated host kernel (the paper's specialized CPU kernel
-            // path, §3.4); otherwise the lowered Pallas kernel through PJRT.
-            if *plan == ExpertPlan::Cpu && crate::cpukernel::host_kernel_enabled() {
-                let xe = xn.gather_rows_padded(&rows, s); // exact size, no bucket
-                let out = crate::cpukernel::expert_ffn_host(
-                    &xe,
-                    self.ws.expert(layer, j, "w1"),
-                    self.ws.expert(layer, j, "w3"),
-                    self.ws.expert(layer, j, "w2"),
-                );
-                h.axpy_rows(&rows, &weights, &out);
-            } else {
-                let bucket = round_up_bucket(s, TOKEN_BUCKETS);
-                let xe = xn.gather_rows_padded(&rows, bucket);
-                let w1 = format!("layers.{layer}.experts.{j}.w1");
-                let w3 = format!("layers.{layer}.experts.{j}.w3");
-                let w2 = format!("layers.{layer}.experts.{j}.w2");
-                let expert_out = self.execute_mixed(
-                    &format!("expert_b{bucket}"),
-                    &[
-                        MixedArg::F32(&xe),
-                        MixedArg::Weight(&w1),
-                        MixedArg::Weight(&w3),
-                        MixedArg::Weight(&w2),
-                    ],
-                )?;
-                h.axpy_rows(&rows, &weights, &expert_out[0]);
+            if !on_pool(plan) {
+                continue;
             }
+            let rows = &routing.rows_for[j];
+            let s = rows.len();
+            outputs[j] = Some(Tensor::zeros(vec![s, self.cfg.hidden]));
+            let w1 = self.ws.expert_shared(layer, j, "w1");
+            let w3 = self.ws.expert_shared(layer, j, "w3");
+            let w2 = self.ws.expert_shared(layer, j, "w2");
+            // Large-s (prefill) experts additionally split across workers.
+            for (r0, r1) in crate::exec::partition_rows(s, cx.pool.threads()) {
+                chunks.push(crate::exec::ExpertChunk {
+                    expert: j,
+                    row0: r0,
+                    // Exact size, no bucket: the host kernel pads nothing.
+                    x: xn.gather_rows_padded(&rows[r0..r1], r1 - r0),
+                    w1: w1.clone(),
+                    w3: w3.clone(),
+                    w2: w2.clone(),
+                });
+            }
+        }
+        let pending = crate::exec::run_expert_chunks(&cx.pool, chunks);
+
+        // GPU-planned experts (and the PJRT fallback for CPU plans when the
+        // host kernel is off) execute on this thread, overlapping the pool.
+        for (j, plan) in plans.iter().enumerate() {
+            let Some(plan) = plan else { continue };
+            if on_pool(plan) {
+                continue;
+            }
+            let rows = &routing.rows_for[j];
+            let s = rows.len();
+            let bucket = round_up_bucket(s, TOKEN_BUCKETS);
+            let xe = xn.gather_rows_padded(rows, bucket);
+            let w1 = format!("layers.{layer}.experts.{j}.w1");
+            let w3 = format!("layers.{layer}.experts.{j}.w3");
+            let w2 = format!("layers.{layer}.experts.{j}.w2");
+            let mut expert_out = self.execute_mixed(
+                &format!("expert_b{bucket}"),
+                &[
+                    MixedArg::F32(&xe),
+                    MixedArg::Weight(&w1),
+                    MixedArg::Weight(&w3),
+                    MixedArg::Weight(&w2),
+                ],
+            )?;
+            outputs[j] = Some(expert_out.swap_remove(0));
+        }
+
+        // Layer barrier: join the pool, scatter chunk outputs into the
+        // per-expert buffers (positional — order-free).
+        let hidden = self.cfg.hidden;
+        for c in pending.wait() {
+            let dst = outputs[c.expert].as_mut().expect("chunk for unplanned expert");
+            dst.data[c.row0 * hidden..c.row0 * hidden + c.out.data.len()]
+                .copy_from_slice(&c.out.data);
+        }
+
+        // Combine + simulated accounting, in expert-index order.
+        for (j, plan) in plans.iter().enumerate() {
+            let Some(plan) = plan else { continue };
+            let rows = &routing.rows_for[j];
+            let s = rows.len();
+            let out = outputs[j].as_ref().expect("planned expert without output");
+            h.axpy_rows(rows, &routing.weights_for[j], out);
 
             // Account simulated time + link/memory bookkeeping.
             let cost = cx.policy.expert_cost_us(*plan, s, &cx.lat);

@@ -22,11 +22,18 @@ pub fn top_k(probs: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
 }
 
 /// Per-expert routing table for a batch of rows: `rows_for[e]` lists the
-/// (row, weight) pairs routed to expert `e`; `inp_size[e]` the counts —
-/// exactly Algorithm 1's `inp_size` array.
+/// row indices routed to expert `e` (ascending — the gather order),
+/// `weights_for[e]` the matching combine weights, and `inp_size[e]` the
+/// counts — exactly Algorithm 1's `inp_size` array.
+///
+/// Rows and weights are split into parallel arrays (rather than one
+/// `Vec<(usize, f32)>`) so the engine can hand them straight to
+/// `Tensor::gather_rows_padded` / `Tensor::axpy_rows` without rebuilding a
+/// `rows` and a `weights` Vec per expert per layer in the hot loop.
 #[derive(Clone, Debug)]
 pub struct Routing {
-    pub rows_for: Vec<Vec<(usize, f32)>>,
+    pub rows_for: Vec<Vec<usize>>,
+    pub weights_for: Vec<Vec<f32>>,
     pub inp_size: Vec<usize>,
 }
 
@@ -35,15 +42,17 @@ pub struct Routing {
 pub fn route(probs: &[f32], n_rows: usize, n_experts: usize, k: usize) -> Routing {
     assert_eq!(probs.len(), n_rows * n_experts);
     let mut rows_for = vec![Vec::new(); n_experts];
+    let mut weights_for = vec![Vec::new(); n_experts];
     for r in 0..n_rows {
         let row = &probs[r * n_experts..(r + 1) * n_experts];
         let (ids, ws) = top_k(row, k);
         for (e, w) in ids.into_iter().zip(ws) {
-            rows_for[e].push((r, w));
+            rows_for[e].push(r);
+            weights_for[e].push(w);
         }
     }
     let inp_size = rows_for.iter().map(|v| v.len()).collect();
-    Routing { rows_for, inp_size }
+    Routing { rows_for, weights_for, inp_size }
 }
 
 #[cfg(test)]
@@ -101,11 +110,14 @@ mod tests {
             let total: usize = r.inp_size.iter().sum();
             assert_eq!(total, n * k);
             let mut per_row = vec![0usize; n];
-            for lst in &r.rows_for {
-                for &(row, w) in lst {
+            for (rows, weights) in r.rows_for.iter().zip(&r.weights_for) {
+                assert_eq!(rows.len(), weights.len(), "parallel arrays diverge");
+                for (&row, &w) in rows.iter().zip(weights) {
                     per_row[row] += 1;
                     assert!(w > 0.0 && w <= 1.0 + 1e-6);
                 }
+                // Gather order: ascending row indices.
+                assert!(rows.windows(2).all(|p| p[0] < p[1]), "rows not ascending");
             }
             assert!(per_row.iter().all(|&c| c == k));
             // inp_size consistent with rows_for.

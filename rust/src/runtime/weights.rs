@@ -7,11 +7,16 @@ use crate::util::json;
 use anyhow::{Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::Arc;
 
 /// All tensors of one model, keyed by the manifest names
 /// (`embed`, `layers.{i}.wq`, `layers.{i}.experts.{e}.w1`, ...).
+///
+/// Tensors are stored behind `Arc` so the parallel expert executor can
+/// hand weight references to worker threads without copying the data
+/// (borrowed access through [`WeightStore::get`] is unchanged).
 pub struct WeightStore {
-    tensors: BTreeMap<String, Tensor>,
+    tensors: BTreeMap<String, Arc<Tensor>>,
     pub config: ModelConfig,
 }
 
@@ -39,7 +44,7 @@ impl WeightStore {
             for (i, chunk) in bytes.chunks_exact(4).enumerate() {
                 data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
             }
-            tensors.insert(name.clone(), Tensor { shape, data });
+            tensors.insert(name.clone(), Arc::new(Tensor { shape, data }));
         }
         Ok(WeightStore { tensors, config })
     }
@@ -47,6 +52,16 @@ impl WeightStore {
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)
+            .map(|t| t.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("missing weight tensor {name:?}"))
+    }
+
+    /// Shared handle to a tensor (cheap clone; used to ship weights to the
+    /// executor pool's worker threads).
+    pub fn get_shared(&self, name: &str) -> Result<Arc<Tensor>> {
+        self.tensors
+            .get(name)
+            .cloned()
             .ok_or_else(|| anyhow::anyhow!("missing weight tensor {name:?}"))
     }
 
@@ -78,6 +93,11 @@ impl WeightStore {
 
     pub fn expert(&self, layer: usize, expert: usize, name: &str) -> &Tensor {
         self.get(&format!("layers.{layer}.experts.{expert}.{name}")).unwrap()
+    }
+
+    /// Shared handle to one expert weight matrix (executor pool path).
+    pub fn expert_shared(&self, layer: usize, expert: usize, name: &str) -> Arc<Tensor> {
+        self.get_shared(&format!("layers.{layer}.experts.{expert}.{name}")).unwrap()
     }
 
     /// Embedding lookup on the host (the one model op that never touches

@@ -16,6 +16,91 @@ fn prompt(len: usize, seed: u64) -> Vec<u32> {
     WorkloadGen::new(Dataset::sharegpt(), 512, seed).prompt(len)
 }
 
+/// The parallel-executor tests run on any host; the full-engine assertions
+/// need the build-time artifacts (like every other test in this file) and
+/// skip gracefully where their siblings would fail loudly.
+fn artifacts_available() -> bool {
+    figures::artifact_dir("mixtral-tiny").join("weights_manifest.json").exists()
+}
+
+#[test]
+fn threads_one_regression_pool_is_inline() {
+    // `--threads 1` (the default) must build the serial executor: jobs run
+    // on the engine thread, no workers spawned — the pre-parallel engine.
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let hw = HardwareConfig::env1();
+    let mut e = engine(Policy::Fiddler, &hw);
+    assert_eq!(e.serving.threads, 1);
+    assert_eq!(e.cx.threads, 1);
+    assert!(e.cx.pool.is_inline());
+    let g = e.generate(&prompt(12, 80), 4).unwrap();
+    assert_eq!(g.tokens.len(), 4);
+}
+
+#[test]
+fn thread_count_does_not_change_tokens() {
+    // Determinism at the engine level (host kernel off, the default): the
+    // executor's reduction order is fixed and the latency model is gated
+    // on the host kernel, so --threads changes neither plans nor tokens.
+    // The parallel host-kernel dispatch itself is covered bit-for-bit by
+    // the property tests in `exec` (which need no artifacts).
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let hw = HardwareConfig::env1();
+    let p = prompt(16, 81);
+    let mut outs = Vec::new();
+    for threads in [1usize, 2, 4] {
+        let serving = ServingConfig { threads, ..Default::default() };
+        let mut e =
+            Engine::new(figures::artifact_dir("mixtral-tiny"), &hw, serving).unwrap();
+        assert_eq!(e.cx.pool.threads(), threads);
+        outs.push(e.generate(&p, 6).unwrap().tokens);
+    }
+    assert_eq!(outs[0], outs[1], "threads=2 changed the numerics");
+    assert_eq!(outs[0], outs[2], "threads=4 changed the numerics");
+}
+
+#[test]
+fn threaded_latency_model_gated_on_host_kernel() {
+    // The engine must never plan against a speedup it does not realize:
+    // with the host kernel off (the pool only accelerates the host-kernel
+    // path) a threaded engine keeps the single-core latency model, so
+    // plans — and the simulated timeline — are identical to --threads 1.
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    assert!(
+        !fiddler::cpukernel::host_kernel_enabled(),
+        "this test assumes FIDDLER_HOST_KERNEL is unset"
+    );
+    let hw = HardwareConfig::env1();
+    let p = prompt(32, 82);
+    let mut runs = Vec::new();
+    for threads in [1usize, 8] {
+        let serving = ServingConfig { threads, ..Default::default() };
+        let mut e =
+            Engine::new(figures::artifact_dir("mixtral-tiny"), &hw, serving).unwrap();
+        assert!(
+            (e.cx.lat.cpu_per_token_us
+                - fiddler::latency::LatencyModel::from_hardware(&hw).cpu_per_token_us)
+                .abs()
+                < 1e-12,
+            "threads={threads}: latency model scaled without the host kernel"
+        );
+        let g = e.generate(&p, 8).unwrap();
+        runs.push((g.tokens, e.cx.events.cpu, e.cx.clock.now_us()));
+    }
+    assert_eq!(runs[0].0, runs[1].0, "tokens diverged");
+    assert_eq!(runs[0].1, runs[1].1, "CPU expert events diverged");
+    assert!((runs[0].2 - runs[1].2).abs() < 1e-6, "virtual time diverged");
+}
+
 #[test]
 fn all_policies_generate_identical_tokens() {
     // Policies differ ONLY in time accounting, never in numerics.  The
