@@ -1,0 +1,106 @@
+//! Open-loop Poisson load generator for the request-lifecycle scheduler.
+//!
+//! Replays a synthetic arrival trace (short decode requests with periodic
+//! long-prompt interference) through `server::lifecycle` on the
+//! artifact-free virtual-time backend, and reports throughput, tail ITL,
+//! TTFT, and queue delay per admission/chunking configuration — the
+//! serving-under-load counterpart of the per-step figure drivers.
+//!
+//!   cargo run --release --example load_gen -- \
+//!       --requests 240 --rate 6 --inp 24 --out 24 \
+//!       --long-every 8 --long-inp 320 [--compare] \
+//!       [--admission fcfs|sjf|slo] [--prefill-chunk N] [--kv-budget-mb M]
+//!
+//! `--compare` sweeps FCFS+monolithic against chunked/priority modes on
+//! the same trace; otherwise the single configured scenario runs.
+
+use anyhow::Result;
+use fiddler::config::serving::{AdmissionKind, ServingConfig};
+use fiddler::metrics::TableReporter;
+use fiddler::server::sim::{run_open_loop, LoadSpec};
+use fiddler::util::cli::Args;
+use fiddler::util::json::Json;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let spec = LoadSpec {
+        n_requests: args.usize_or("requests", 240),
+        rate_per_s: args.f64_or("rate", 6.0),
+        inp: args.usize_or("inp", 24),
+        out: args.usize_or("out", 24),
+        long_every: args.usize_or("long-every", 8),
+        long_inp: args.usize_or("long-inp", 320),
+        seed: args.u64_or("seed", 11),
+    };
+    let base = ServingConfig::from_args(&args)?;
+
+    let scenarios: Vec<(String, ServingConfig)> = if args.has("compare") {
+        [
+            ("fcfs+monolithic", AdmissionKind::Fcfs, 0usize),
+            ("fcfs+chunk64", AdmissionKind::Fcfs, 64),
+            ("sjf+chunk64", AdmissionKind::ShortestFirst, 64),
+            ("slo+chunk64", AdmissionKind::Deadline, 64),
+        ]
+        .into_iter()
+        .map(|(label, admission, prefill_chunk)| {
+            (
+                label.to_string(),
+                ServingConfig { admission, prefill_chunk, ..base.clone() },
+            )
+        })
+        .collect()
+    } else {
+        let label = format!(
+            "{}+chunk{}",
+            base.admission.label(),
+            if base.prefill_chunk == 0 { "off".into() } else { base.prefill_chunk.to_string() }
+        );
+        vec![(label, base.clone())]
+    };
+
+    println!(
+        "open-loop load: {} requests @ {:.1}/s, {}->{} tokens, every {}th prompt {} tokens \
+         (virtual time, sim backend)",
+        spec.n_requests, spec.rate_per_s, spec.inp, spec.out, spec.long_every, spec.long_inp
+    );
+    let mut table = TableReporter::new(&[
+        "scenario",
+        "tok/s",
+        "ITL p99 ms",
+        "TTFT p95 ms",
+        "queue p99 ms",
+        "ok",
+        "rejected",
+    ]);
+    let mut out_json = Json::obj();
+    for (label, serving) in &scenarios {
+        let r = run_open_loop(serving.clone(), &spec)?;
+        let itl = r.agg.itl_summary();
+        let ttft = r.agg.ttft_summary();
+        let qd = r.agg.queue_delay_summary();
+        table.row(vec![
+            label.clone(),
+            format!("{:.1}", r.throughput_tok_s()),
+            format!("{:.1}", itl.p99 / 1e3),
+            format!("{:.1}", ttft.p95 / 1e3),
+            format!("{:.1}", qd.p99 / 1e3),
+            r.completed.to_string(),
+            r.rejected.to_string(),
+        ]);
+        let mut o = Json::obj();
+        o.set("throughput_tok_s", Json::Num(r.throughput_tok_s()));
+        o.set("itl_p99_ms", Json::Num(itl.p99 / 1e3));
+        o.set("ttft_p95_ms", Json::Num(ttft.p95 / 1e3));
+        o.set("queue_delay_p99_ms", Json::Num(qd.p99 / 1e3));
+        o.set("completed", Json::from(r.completed));
+        o.set("rejected", Json::from(r.rejected));
+        out_json.set(label, o);
+    }
+    table.print();
+
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, out_json.to_string())?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

@@ -12,11 +12,13 @@
 //! artifacts are missing so the CI smoke job always produces the JSON.
 
 use fiddler::benchkit::{Bench, BenchResult};
+use fiddler::config::serving::{AdmissionKind, ServingConfig};
 use fiddler::config::HardwareConfig;
 use fiddler::exec::{run_cpu_experts, CpuExpertTask, ExecutorPool};
 use fiddler::figures;
 use fiddler::kvcache::SequenceCache;
 use fiddler::runtime::Tensor;
+use fiddler::server::sim::{run_open_loop, LoadSpec};
 use fiddler::util::json::Json;
 use fiddler::util::rng::Rng;
 use fiddler::workload::{Dataset, WorkloadGen};
@@ -152,6 +154,61 @@ fn bench_policies(b: &mut Bench) -> Option<Json> {
     Some(section)
 }
 
+/// Lifecycle-scheduler load comparison (virtual time, artifact-free):
+/// one open-loop Poisson workload with periodic long prompts, replayed
+/// under FCFS+monolithic (the old demo loop's schedule) vs chunked
+/// prefill and priority admission — the quantities behind BENCH_PR4.json.
+fn bench_lifecycle_load() -> Json {
+    let fast = std::env::var("FIDDLER_BENCH_FAST").is_ok();
+    let spec = LoadSpec {
+        n_requests: if fast { 60 } else { 240 },
+        ..LoadSpec::default()
+    };
+    let scenarios: [(&str, AdmissionKind, usize); 4] = [
+        ("fcfs_monolithic", AdmissionKind::Fcfs, 0),
+        ("fcfs_chunked64", AdmissionKind::Fcfs, 64),
+        ("sjf_chunked64", AdmissionKind::ShortestFirst, 64),
+        ("slo_chunked64", AdmissionKind::Deadline, 64),
+    ];
+
+    let mut section = Json::obj();
+    let mut spec_j = Json::obj();
+    spec_j.set("n_requests", Json::from(spec.n_requests));
+    spec_j.set("rate_per_s", Json::Num(spec.rate_per_s));
+    spec_j.set("inp", Json::from(spec.inp));
+    spec_j.set("out", Json::from(spec.out));
+    spec_j.set("long_every", Json::from(spec.long_every));
+    spec_j.set("long_inp", Json::from(spec.long_inp));
+    section.set("workload", spec_j);
+    for (label, admission, prefill_chunk) in scenarios {
+        let serving =
+            ServingConfig { admission, prefill_chunk, max_batch: 8, ..Default::default() };
+        let r = run_open_loop(serving, &spec).expect("sim load run");
+        let itl = r.agg.itl_summary();
+        let ttft = r.agg.ttft_summary();
+        let qd = r.agg.queue_delay_summary();
+        println!(
+            "    lifecycle/{label:<16} {:7.1} tok/s | ITL p99 {:7.1} ms | TTFT p95 {:8.1} ms | queue p99 {:8.1} ms | {} ok / {} rejected",
+            r.throughput_tok_s(),
+            itl.p99 / 1e3,
+            ttft.p95 / 1e3,
+            qd.p99 / 1e3,
+            r.completed,
+            r.rejected
+        );
+        let mut o = Json::obj();
+        o.set("throughput_tok_s", Json::Num(r.throughput_tok_s()));
+        o.set("itl_p99_ms", Json::Num(itl.p99 / 1e3));
+        o.set("itl_mean_ms", Json::Num(itl.mean / 1e3));
+        o.set("ttft_p95_ms", Json::Num(ttft.p95 / 1e3));
+        o.set("queue_delay_p99_ms", Json::Num(qd.p99 / 1e3));
+        o.set("completed", Json::from(r.completed));
+        o.set("rejected", Json::from(r.rejected));
+        section.set(label, o);
+    }
+    section
+}
+
 fn main() {
     let mut b = Bench::new();
 
@@ -166,6 +223,18 @@ fn main() {
     let out = std::env::var("FIDDLER_BENCH_OUT").unwrap_or_else(|_| "BENCH_PR2.json".into());
     std::fs::write(&out, root.to_string()).expect("write bench json");
     println!("  wrote {out}");
+
+    // PR 4: request-lifecycle scheduler under open-loop load (virtual
+    // time — no artifacts needed, always produced).
+    println!("  lifecycle scheduler load comparison (virtual time):");
+    let lifecycle = bench_lifecycle_load();
+    let mut root4 = Json::obj();
+    root4.set("bench", Json::from("pr4-request-lifecycle-scheduler"));
+    root4.set("lifecycle", lifecycle);
+    let out4 =
+        std::env::var("FIDDLER_BENCH_OUT_PR4").unwrap_or_else(|_| "BENCH_PR4.json".into());
+    std::fs::write(&out4, root4.to_string()).expect("write bench json");
+    println!("  wrote {out4}");
 
     b.report("e2e decode/prefill (serial vs parallel executor + per-policy)");
 }

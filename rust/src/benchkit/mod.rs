@@ -76,7 +76,7 @@ impl Bench {
         }
 
         // Trim the top/bottom 5% (scheduler noise).
-        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples_ns.sort_by(f64::total_cmp);
         let trim = samples_ns.len() / 20;
         let trimmed = &samples_ns[trim..samples_ns.len() - trim.min(samples_ns.len() - 1)];
 

@@ -74,9 +74,15 @@ pub struct HardwareConfig {
     pub lm_head_us: f64,
 }
 
-const MIB: u64 = 1024 * 1024;
+pub const MIB: u64 = 1024 * 1024;
 /// One Mixtral-8x7B expert: 3 x 4096 x 14336 params x 2 bytes.
 pub const PAPER_EXPERT_BYTES: u64 = 3 * 4096 * 14336 * 2;
+/// KV-cache bytes of ONE token at paper scale (Mixtral-8x7B: 32 layers x
+/// kv_dim 1024 x 2 (K and V) x 2 bytes bf16 = 128 KiB/token).  The serving
+/// scheduler budgets KV memory in these units so it arbitrates coherently
+/// against [`PAPER_EXPERT_BYTES`]-sized expert slots (~2.7k tokens of KV
+/// per expert slot).
+pub const PAPER_KV_BYTES_PER_TOKEN: u64 = 32 * 1024 * 2 * 2;
 
 impl HardwareConfig {
     /// Environment 1: Quadro RTX 6000 24 GiB + Xeon Gold 6126, PCIe Gen3.
@@ -209,6 +215,14 @@ mod tests {
         let act = env.act_copy_us(4096 * 2); // one token's activation, bf16
         let cpu1 = env.cpu_expert_base_us + env.cpu_expert_per_token_us;
         assert!(act < 0.01 * cpu1, "act={act} cpu1={cpu1}");
+    }
+
+    #[test]
+    fn kv_and_expert_scales_are_coherent() {
+        // One expert slot is worth thousands of KV tokens — the
+        // arbitration only makes sense when the units share a scale.
+        let tokens_per_slot = PAPER_EXPERT_BYTES / PAPER_KV_BYTES_PER_TOKEN;
+        assert!((1_000..10_000).contains(&tokens_per_slot), "{tokens_per_slot}");
     }
 
     #[test]

@@ -89,6 +89,42 @@ impl EvictionKind {
     }
 }
 
+/// Admission/priority policy of the request-lifecycle scheduler
+/// ([`crate::server::lifecycle`]): which queued request the serve loop
+/// admits next when a batch slot frees up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmissionKind {
+    /// First come, first served (the original demo loop's behavior).
+    Fcfs,
+    /// Shortest prompt first (MoE-Lens-style: short prefills out of the
+    /// way keeps the decode batch full).
+    ShortestFirst,
+    /// Earliest TTFT deadline first, driven by the virtual clock; the
+    /// per-request deadline defaults to `slo_ttft_ms` past enqueue.
+    Deadline,
+}
+
+impl AdmissionKind {
+    pub fn by_name(name: &str) -> anyhow::Result<AdmissionKind> {
+        Ok(match name {
+            "fcfs" => AdmissionKind::Fcfs,
+            "sjf" | "shortest" | "shortest-first" => AdmissionKind::ShortestFirst,
+            "slo" | "edf" | "deadline" => AdmissionKind::Deadline,
+            other => anyhow::bail!(
+                "unknown admission policy {other:?} (have fcfs, sjf, slo)"
+            ),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AdmissionKind::Fcfs => "fcfs",
+            AdmissionKind::ShortestFirst => "sjf",
+            AdmissionKind::Deadline => "slo",
+        }
+    }
+}
+
 /// Expert placement strategy at initialization (paper §3.4 + Appendix C).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlacementStrategy {
@@ -135,6 +171,25 @@ pub struct ServingConfig {
     /// 1 = serial (the pre-parallel engine, bit-for-bit); `--threads 0` on
     /// the CLI resolves to the host's available parallelism.
     pub threads: usize,
+    /// Prefill chunk size (tokens) of the request-lifecycle scheduler:
+    /// each serve-loop iteration advances an admitted prompt by at most
+    /// this many tokens, interleaved with decode steps of the running
+    /// sequences so their inter-token latency stays bounded.  0 (default)
+    /// = monolithic prefill (the whole prompt in one iteration).
+    pub prefill_chunk: usize,
+    /// Admission/priority policy of the serve loop.
+    pub admission: AdmissionKind,
+    /// KV-cache memory budget in MiB at paper scale
+    /// ([`crate::config::hardware::PAPER_KV_BYTES_PER_TOKEN`]); admission
+    /// reserves each request's worst-case footprint against it and queues
+    /// (or rejects outright-infeasible requests) instead of OOMing.  When
+    /// the pool runs dry the scheduler borrows headroom by shrinking the
+    /// [`crate::expertcache::ExpertCache`]'s unpinned capacity — the
+    /// MoE-Lightning-style KV/weight arbitration.  0 = unlimited.
+    pub kv_budget_mb: usize,
+    /// Default TTFT service-level objective (virtual ms) used to derive a
+    /// deadline for requests that carry none (admission `slo` mode).
+    pub slo_ttft_ms: f64,
 }
 
 impl Default for ServingConfig {
@@ -150,6 +205,10 @@ impl Default for ServingConfig {
             cache_eviction: EvictionKind::Lru,
             cache_pin_fraction: 0.5,
             threads: 1,
+            prefill_chunk: 0,
+            admission: AdmissionKind::Fcfs,
+            kv_budget_mb: 0,
+            slo_ttft_ms: 5_000.0,
         }
     }
 }
@@ -180,6 +239,13 @@ impl ServingConfig {
             0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             n => n,
         };
+        c.prefill_chunk = args.usize_or("prefill-chunk", c.prefill_chunk);
+        if let Some(a) = args.get("admission") {
+            c.admission = AdmissionKind::by_name(a)?;
+        }
+        c.kv_budget_mb = args.usize_or("kv-budget-mb", c.kv_budget_mb);
+        c.slo_ttft_ms = args.f64_or("slo-ttft-ms", c.slo_ttft_ms);
+        anyhow::ensure!(c.slo_ttft_ms > 0.0, "--slo-ttft-ms must be positive");
         Ok(c)
     }
 
@@ -243,6 +309,38 @@ mod tests {
         // 0 = auto: resolves to this host's parallelism, never 0.
         let auto = Args::parse("--threads 0".split_whitespace().map(String::from));
         assert!(ServingConfig::from_args(&auto).unwrap().threads >= 1);
+    }
+
+    #[test]
+    fn admission_names() {
+        assert_eq!(AdmissionKind::by_name("fcfs").unwrap(), AdmissionKind::Fcfs);
+        assert_eq!(AdmissionKind::by_name("sjf").unwrap(), AdmissionKind::ShortestFirst);
+        assert_eq!(AdmissionKind::by_name("slo").unwrap(), AdmissionKind::Deadline);
+        assert_eq!(AdmissionKind::by_name("deadline").unwrap(), AdmissionKind::Deadline);
+        assert!(AdmissionKind::by_name("lifo").is_err());
+    }
+
+    #[test]
+    fn lifecycle_args_parse_and_default() {
+        let d = ServingConfig::default();
+        assert_eq!(d.prefill_chunk, 0, "monolithic prefill by default");
+        assert_eq!(d.admission, AdmissionKind::Fcfs);
+        assert_eq!(d.kv_budget_mb, 0, "unlimited KV by default");
+
+        let a = Args::parse(
+            "--prefill-chunk 64 --admission slo --kv-budget-mb 2048 --slo-ttft-ms 800"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ServingConfig::from_args(&a).unwrap();
+        assert_eq!(c.prefill_chunk, 64);
+        assert_eq!(c.admission, AdmissionKind::Deadline);
+        assert_eq!(c.kv_budget_mb, 2048);
+        assert!((c.slo_ttft_ms - 800.0).abs() < 1e-12);
+
+        let bad =
+            Args::parse("--slo-ttft-ms 0".split_whitespace().map(String::from));
+        assert!(ServingConfig::from_args(&bad).is_err());
     }
 
     #[test]

@@ -17,6 +17,7 @@
 use super::engine::{log_softmax, Engine};
 use crate::kvcache::SequenceCache;
 use crate::metrics::GenMetrics;
+use crate::util::rank_key;
 use anyhow::Result;
 
 pub struct BeamOutput {
@@ -34,6 +35,16 @@ struct Beam {
     score: f32,
 }
 
+/// Indices of the `k` largest entries of `vals`, descending, NaN-safe;
+/// ties break toward the lower index (matching the stable sort the beam
+/// update always used).
+pub fn top_indices_desc(vals: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| rank_key(vals[b]).total_cmp(&rank_key(vals[a])).then(a.cmp(&b)));
+    idx.truncate(k.min(vals.len()));
+    idx
+}
+
 /// Select the `width` best (score, parent, token) continuations from the
 /// per-beam log-softmax rows — pure, property-tested beam-update kernel.
 pub fn select_candidates(
@@ -42,17 +53,14 @@ pub fn select_candidates(
     width: usize,
 ) -> Vec<(f32, usize, usize)> {
     assert_eq!(scores.len(), all_lsm.len());
-    let vocab = all_lsm[0].len();
     let mut cands: Vec<(f32, usize, usize)> = Vec::with_capacity(scores.len() * width);
     for (bi, lsm) in all_lsm.iter().enumerate() {
         // Only the per-beam top `width` tokens can survive globally.
-        let mut idx: Vec<usize> = (0..vocab).collect();
-        idx.sort_by(|&a, &b| lsm[b].partial_cmp(&lsm[a]).unwrap());
-        for &t in &idx[..width.min(vocab)] {
+        for t in top_indices_desc(lsm, width) {
             cands.push((scores[bi] + lsm[t], bi, t));
         }
     }
-    cands.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    cands.sort_by(|a, b| rank_key(b.0).total_cmp(&rank_key(a.0)));
     cands.truncate(width);
     cands
 }
@@ -94,9 +102,8 @@ impl Engine {
         let h = self.runner.prefill(prompt, &mut cache0, &mut self.cx)?;
         let logits = self.runner.lm_head(&h, &mut self.cx)?;
         let lsm = log_softmax(logits.row(0));
-        let mut first: Vec<usize> = (0..lsm.len()).collect();
-        first.sort_by(|&a, &b| lsm[b].partial_cmp(&lsm[a]).unwrap());
-        let mut beams: Vec<Beam> = first[..width]
+        let first = top_indices_desc(&lsm, width);
+        let mut beams: Vec<Beam> = first
             .iter()
             .map(|&t| Beam {
                 cache: cache0.fork(),
@@ -167,7 +174,7 @@ impl Engine {
 
         let best = beams
             .into_iter()
-            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+            .max_by(|a, b| rank_key(a.score).total_cmp(&rank_key(b.score)))
             .unwrap();
         metrics.cache = Some(self.cx.memory.stats().clone());
         Ok(BeamOutput { tokens: best.tokens, score: best.score, metrics })
@@ -221,6 +228,33 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn nan_logit_never_panics_or_wins() {
+        // Regression: the old partial_cmp(..).unwrap() sorts panicked on a
+        // NaN logit; now NaN ranks last and is never selected while finite
+        // candidates remain.
+        let scores = [0.0f32, -1.0];
+        let lsm = vec![
+            vec![f32::NAN, -0.5, -3.0],
+            vec![-0.2, f32::NAN, -4.0],
+        ];
+        let c = select_candidates(&scores, &lsm, 2);
+        assert_eq!(c.len(), 2);
+        for &(s, bi, t) in &c {
+            assert!(s.is_finite(), "NaN candidate selected");
+            assert!(!lsm[bi][t].is_nan());
+        }
+        assert_eq!((c[0].1, c[0].2), (0, 1)); // 0.0 - 0.5
+        assert_eq!((c[1].1, c[1].2), (1, 0)); // -1.0 - 0.2
+
+        // All-NaN rows still terminate with the full width, NaNs last.
+        let all_nan = vec![vec![f32::NAN; 3], vec![f32::NAN; 3]];
+        assert_eq!(select_candidates(&scores, &all_nan, 2).len(), 2);
+
+        // The shared ranking helper keeps ties stable and NaN last.
+        assert_eq!(top_indices_desc(&[1.0, f32::NAN, 2.0, 1.0], 4), vec![2, 0, 3, 1]);
     }
 
     #[test]

@@ -150,13 +150,18 @@ impl Engine {
         Ok((tok, self.cx.clock.now_us() - t0))
     }
 
-    /// Batched decode of several independent sequences (continuous
-    /// batching in the server): one step for all of them.
-    pub fn decode_batch_step(
+    /// One batched decode step, reducing each sequence's logits row to `T`
+    /// in batch order through `f` — the shared core of
+    /// [`Engine::decode_batch_step`] (samples in place, no row copies) and
+    /// [`Engine::decode_batch_logits`] (owned rows for the lifecycle
+    /// scheduler's beam groups).  Batches larger than the biggest decode
+    /// bucket are split transparently.
+    fn decode_batch_with<T>(
         &mut self,
         last_tokens: &[u32],
         caches: &mut [&mut SequenceCache],
-    ) -> Result<Vec<u32>> {
+        mut f: impl FnMut(&[f32], &mut Rng) -> T,
+    ) -> Result<Vec<T>> {
         assert_eq!(last_tokens.len(), caches.len());
         let max_b = *crate::config::model::DECODE_BATCH_BUCKETS.last().unwrap();
         let mut out = Vec::with_capacity(last_tokens.len());
@@ -174,11 +179,36 @@ impl Engine {
             let h = self.runner.decode_step(&xs, &mut chunk, &mut self.cx)?;
             let logits = self.runner.lm_head(&h, &mut self.cx)?;
             for r in 0..(j - i) {
-                out.push(sample_token(logits.row(r), self.serving.temperature, &mut self.rng));
+                out.push(f(logits.row(r), &mut self.rng));
             }
             i = j;
         }
         Ok(out)
+    }
+
+    /// Batched decode returning each sequence's next-token logits row
+    /// (owned — the lifecycle scheduler's beam groups score and fork from
+    /// them after the call).
+    pub fn decode_batch_logits(
+        &mut self,
+        last_tokens: &[u32],
+        caches: &mut [&mut SequenceCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.decode_batch_with(last_tokens, caches, |row, _| row.to_vec())
+    }
+
+    /// Batched decode + sampling, fused: samples straight from each logits
+    /// row with zero copies, in batch order (the RNG stream is unchanged
+    /// from the pre-refactor loop).
+    pub fn decode_batch_step(
+        &mut self,
+        last_tokens: &[u32],
+        caches: &mut [&mut SequenceCache],
+    ) -> Result<Vec<u32>> {
+        let temperature = self.serving.temperature;
+        self.decode_batch_with(last_tokens, caches, |row, rng| {
+            sample_token(row, temperature, rng)
+        })
     }
 }
 

@@ -93,6 +93,21 @@ impl CacheStats {
         }
     }
 
+    /// Counters accumulated since `base` was snapshotted (per-request
+    /// attribution under continuous batching: snapshot at admission,
+    /// delta at completion).  Saturating, so a stale base never underflows.
+    pub fn delta_since(&self, base: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(base.hits),
+            misses: self.misses.saturating_sub(base.misses),
+            evictions: self.evictions.saturating_sub(base.evictions),
+            transfers_in: self.transfers_in.saturating_sub(base.transfers_in),
+            bytes_in: self.bytes_in.saturating_sub(base.bytes_in),
+            prefetches: self.prefetches.saturating_sub(base.prefetches),
+            prefetch_hits: self.prefetch_hits.saturating_sub(base.prefetch_hits),
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("hits", Json::Num(self.hits as f64));
@@ -177,6 +192,33 @@ impl ExpertCache {
 
     pub fn resident_count(&self) -> usize {
         self.entries.len()
+    }
+
+    /// Number of pinned (never-evictable) entries — the floor below which
+    /// [`ExpertCache::set_capacity`] will not shrink.
+    pub fn pinned_count(&self) -> usize {
+        self.entries.values().filter(|e| e.pinned).count()
+    }
+
+    /// Re-size the cache's expert capacity at runtime (KV-cache/weight
+    /// memory arbitration: the serving scheduler converts unpinned expert
+    /// slots into KV headroom under memory pressure and returns them when
+    /// it subsides).  Shrinking evicts unpinned victims through the
+    /// eviction policy; capacity never drops below the pinned count.
+    /// Returns the capacity actually in effect.
+    pub fn set_capacity(&mut self, capacity_experts: usize) -> usize {
+        let n = capacity_experts.max(self.pinned_count());
+        while self.entries.len() > n {
+            match self.choose_victim() {
+                Some(v) => {
+                    self.entries.remove(&v);
+                    self.stats.evictions += 1;
+                }
+                None => break, // everything left is pinned
+            }
+        }
+        self.capacity_experts = n;
+        n
     }
 
     pub fn is_resident(&self, id: ExpertId) -> bool {
@@ -467,6 +509,48 @@ mod tests {
         assert!(m.prefetch((0, 3), 0.0, 100.0).is_none(), "backlog must cap");
         // Time advances: the lane drains and speculation resumes.
         assert!(m.prefetch((0, 3), 250.0, 100.0).is_some());
+    }
+
+    #[test]
+    fn set_capacity_shrinks_evicting_and_respects_pins() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.pin((0, 0));
+        m.pin((0, 1));
+        m.fetch((1, 0));
+        m.fetch((1, 1));
+        assert_eq!(m.resident_count(), 4);
+        // Shrink to 3: one unpinned victim evicted.
+        assert_eq!(m.set_capacity(3), 3);
+        assert_eq!(m.capacity(), 3);
+        assert_eq!(m.resident_count(), 3);
+        assert!(m.is_resident((0, 0)) && m.is_resident((0, 1)));
+        // Below the pinned floor: clamps to pinned count.
+        assert_eq!(m.set_capacity(0), 2);
+        assert_eq!(m.resident_count(), 2);
+        assert_eq!(m.pinned_count(), 2);
+        // Grow back: capacity restored, pins untouched.
+        assert_eq!(m.set_capacity(4), 4);
+        assert!(m.fetch((2, 2)));
+        assert_eq!(m.resident_count(), 3);
+    }
+
+    #[test]
+    fn stats_delta_since_attributes_per_window() {
+        let mut m = ExpertCache::with_capacity(2);
+        m.fetch((0, 0)); // miss
+        m.fetch((0, 0)); // hit
+        let base = m.stats().clone();
+        m.fetch((0, 1)); // miss
+        m.fetch((0, 1)); // hit
+        m.fetch((0, 0)); // hit
+        let d = m.stats().delta_since(&base);
+        assert_eq!(d.lookups(), 3);
+        assert_eq!(d.hits, 2);
+        assert_eq!(d.misses, 1);
+        assert_eq!(d.transfers_in, 1);
+        // A stale (future) base saturates instead of underflowing.
+        let z = base.delta_since(m.stats());
+        assert_eq!(z.lookups(), 0);
     }
 
     #[test]

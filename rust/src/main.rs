@@ -43,7 +43,7 @@ fn print_help() {
          \n\
          COMMANDS:\n\
            serve      --model M --env E --policy P --requests N --inp L --out L\n\
-                      [--listen 127.0.0.1:7777]  (newline-JSON TCP protocol)\n\
+                      [--width W] [--listen 127.0.0.1:7777]  (newline-JSON TCP)\n\
            generate   --model M --env E --policy P --inp L --out L [--prompt 1,2,3]\n\
            beam       --model M --env E --policy P --width W --inp L --out L\n\
            calibrate  --env E [--measured] [--threads N]\n\
@@ -54,6 +54,16 @@ fn print_help() {
                    static (llama.cpp*) | fiddler-prefetch | fiddler-cached\n\
          CACHE:    fiddler-cached takes --cache-eviction lru|scored|transition\n\
                    and --cache-pin-fraction F (default 0.5)\n\
+         SERVING:  --prefill-chunk N   chunked prefill (0 = monolithic) so long\n\
+                                       prompts don't stall running sequences\n\
+                   --admission fcfs|sjf|slo   queue policy (slo = earliest TTFT\n\
+                                       deadline first, --slo-ttft-ms D default)\n\
+                   --kv-budget-mb M    paper-scale KV memory pool; queues or\n\
+                                       rejects instead of OOM, borrowing expert\n\
+                                       cache slots under pressure (0 = off)\n\
+                   --max-batch B       decode batch cap (clamped to the AOT\n\
+                                       bucket ceiling)\n\
+                   see also: cargo run --release --example load_gen -- --compare\n\
          EXECUTOR: --threads N sizes the parallel CPU expert executor\n\
                    (1 = serial, 0 = one worker per core); set\n\
                    FIDDLER_HOST_KERNEL=1 to run CPU-planned experts through\n\
@@ -156,16 +166,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
         return handle.shutdown();
     }
 
+    let width = args.usize_or("width", 1);
     let mut gen = WorkloadGen::new(Dataset::sharegpt(), 512, args.u64_or("seed", 0));
-    let receivers: Vec<_> =
-        (0..n_requests).map(|_| handle.submit(gen.prompt(inp), out)).collect();
+    let receivers: Vec<_> = (0..n_requests)
+        .map(|_| {
+            if width > 1 {
+                handle.submit_beam(gen.prompt(inp), out, width)
+            } else {
+                handle.submit(gen.prompt(inp), out)
+            }
+        })
+        .collect();
     let mut tps = Vec::new();
     for (i, rx) in receivers.iter().enumerate() {
         let (tokens, m) = collect(rx)?;
         println!(
-            "req {i}: {} tokens | ttft {:.1} ms | {:.2} tok/s",
+            "req {i}: {} tokens | ttft {:.1} ms | queue {:.1} ms | {:.2} tok/s",
             tokens.len(),
             m.ttft_us() / 1e3,
+            m.queue_delay_us() / 1e3,
             m.tokens_per_s()
         );
         tps.push(m.tokens_per_s());

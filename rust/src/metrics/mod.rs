@@ -8,14 +8,22 @@ use crate::util::stats::Summary;
 #[derive(Clone, Debug, Default)]
 pub struct GenMetrics {
     pub enqueue_us: f64,
+    /// Time the scheduler admitted the request (prefill start).  Equal to
+    /// `enqueue_us` for direct engine-level generation; under the serving
+    /// scheduler the difference is the queue delay.
+    pub admitted_us: f64,
     /// Time the first output token is ready (end of prefill + first decode).
     pub first_token_us: f64,
     /// Completion time of each generated token.
     pub token_done_us: Vec<f64>,
     pub prompt_tokens: usize,
-    /// Snapshot of the engine's expert-cache counters when the generation
-    /// finished (cumulative over the engine's lifetime — under continuous
-    /// batching the cache is shared across requests).
+    /// Expert-cache counters attributed to this generation.  Engine-level
+    /// generation stamps the engine's cumulative snapshot; the serving
+    /// scheduler stamps the *delta* between admission and completion
+    /// ([`crate::expertcache::CacheStats::delta_since`]) — i.e. all cache
+    /// activity during this request's window, which excludes history from
+    /// before admission but still includes concurrently-batched requests
+    /// (the cache is shared, so overlapping windows overlap-count).
     pub cache: Option<crate::expertcache::CacheStats>,
 }
 
@@ -23,6 +31,12 @@ impl GenMetrics {
     /// Time To First Token (paper scenario b metric).
     pub fn ttft_us(&self) -> f64 {
         self.first_token_us - self.enqueue_us
+    }
+
+    /// Time spent queued before the scheduler admitted the request
+    /// (0 for engine-level generation, which never queues).
+    pub fn queue_delay_us(&self) -> f64 {
+        (self.admitted_us - self.enqueue_us).max(0.0)
     }
 
     /// Inter-token latencies (paper Fig. 12).
@@ -56,6 +70,7 @@ impl GenMetrics {
         o.set("prompt_tokens", Json::from(self.prompt_tokens));
         o.set("output_tokens", Json::from(self.token_done_us.len()));
         o.set("ttft_us", Json::Num(self.ttft_us()));
+        o.set("queue_delay_us", Json::Num(self.queue_delay_us()));
         o.set("mean_itl_us", Json::Num(self.mean_itl_us()));
         o.set("tokens_per_s", Json::Num(self.tokens_per_s()));
         if let Some(c) = &self.cache {
@@ -71,6 +86,7 @@ pub struct Aggregate {
     pub tps: Vec<f64>,
     pub ttft_us: Vec<f64>,
     pub itl_us: Vec<f64>,
+    pub queue_delay_us: Vec<f64>,
 }
 
 impl Aggregate {
@@ -78,6 +94,7 @@ impl Aggregate {
         self.tps.push(m.tokens_per_s());
         self.ttft_us.push(m.ttft_us());
         self.itl_us.extend(m.itl_us());
+        self.queue_delay_us.push(m.queue_delay_us());
     }
 
     pub fn tps_summary(&self) -> Summary {
@@ -90,6 +107,10 @@ impl Aggregate {
 
     pub fn itl_summary(&self) -> Summary {
         Summary::of(&self.itl_us)
+    }
+
+    pub fn queue_delay_summary(&self) -> Summary {
+        Summary::of(&self.queue_delay_us)
     }
 }
 
@@ -142,6 +163,7 @@ mod tests {
     fn m() -> GenMetrics {
         GenMetrics {
             enqueue_us: 100.0,
+            admitted_us: 250.0,
             first_token_us: 600.0,
             token_done_us: vec![600.0, 1100.0, 1600.0, 2100.0],
             prompt_tokens: 8,
@@ -155,6 +177,10 @@ mod tests {
         assert_eq!(m.ttft_us(), 500.0);
         assert_eq!(m.itl_us(), vec![500.0, 500.0, 500.0]);
         assert_eq!(m.mean_itl_us(), 500.0);
+        assert_eq!(m.queue_delay_us(), 150.0);
+        // Engine-level metrics never set admitted_us: delay clamps to 0.
+        let direct = GenMetrics { enqueue_us: 100.0, ..Default::default() };
+        assert_eq!(direct.queue_delay_us(), 0.0);
     }
 
     #[test]

@@ -426,6 +426,92 @@ impl ModelRunner {
         Ok(x.gather_rows_padded(&[n - 1], 1))
     }
 
+    /// Continue a prefill: process `tokens` — the next chunk of a prompt
+    /// whose preceding prefix is already in `cache` — and return the
+    /// chunk's last hidden state (`[1, hidden]`).  With an empty cache
+    /// this is exactly [`ModelRunner::prefill`].
+    ///
+    /// The AOT op set has no cache-consuming chunk-attention executable,
+    /// so a continuation chunk's attention runs token-by-token through the
+    /// decode executable (numerics within kernel tolerance of the
+    /// monolithic prefill executable), while the MoE half runs
+    /// chunk-batched: routing and expert dispatch see all of the chunk's
+    /// rows at once, preserving the cross-token expert batching the
+    /// paper's CPU path relies on.  Virtual time charges attention at the
+    /// prefill per-token rate (the simulated testbed's chunk-attention
+    /// kernel) and the experts through the normal per-layer accounting, so
+    /// chunked prefill pays the honest price of chunking — one expert-base
+    /// amortization per chunk instead of one per prompt.
+    pub fn prefill_chunk(
+        &self,
+        tokens: &[u32],
+        cache: &mut SequenceCache,
+        cx: &mut ExecContext,
+    ) -> Result<Tensor> {
+        if cache.is_empty() {
+            return self.prefill(tokens, cache, cx);
+        }
+        let m = tokens.len();
+        if m == 0 {
+            bail!("empty prefill chunk");
+        }
+        let max_c = *CACHE_BUCKETS.last().unwrap();
+        if cache.len() + m > max_c {
+            bail!("sequence of {} tokens exceeds max cache bucket {max_c}", cache.len() + m);
+        }
+        // Gate executables exist for every power-of-two token bucket.
+        let bucket = round_up_bucket(m, TOKEN_BUCKETS);
+        let mut x = Tensor::zeros(vec![bucket, self.cfg.hidden]);
+        let emb = self.ws.embed_tokens(tokens);
+        x.data[..m * self.cfg.hidden].copy_from_slice(&emb.data);
+
+        let kvd = self.cfg.kv_dim();
+        let (kvh, hd) = (self.cfg.n_kv_heads, self.cfg.head_dim);
+        for layer in 0..self.cfg.n_layers {
+            let wn = self.attn_weight_names(layer);
+            let mut h_attn = Tensor::zeros(vec![bucket, self.cfg.hidden]);
+            for t in 0..m {
+                let pos = cache.layers[layer].len;
+                let c = round_up_bucket(pos + 1, CACHE_BUCKETS);
+                let (mut kcb, mut vcb) = {
+                    let seq: &SequenceCache = cache;
+                    gather_batch_padded(&[seq], layer, 1, c, kvd)
+                };
+                kcb.shape = vec![1, c, kvh, hd];
+                vcb.shape = vec![1, c, kvh, hd];
+                let xt = x.gather_rows_padded(&[t], 1);
+                let pos_t = TensorI32::vec(vec![pos as i32]);
+                let out = self.execute_mixed(
+                    &format!("attn_decode_b1_c{c}"),
+                    &[
+                        MixedArg::F32(&xt),
+                        MixedArg::F32(&kcb),
+                        MixedArg::F32(&vcb),
+                        MixedArg::I32(&pos_t),
+                        MixedArg::Weight(&wn[0]),
+                        MixedArg::Weight(&wn[1]),
+                        MixedArg::Weight(&wn[2]),
+                        MixedArg::Weight(&wn[3]),
+                        MixedArg::Weight(&wn[4]),
+                    ],
+                )?;
+                h_attn.row_mut(t).copy_from_slice(out[0].row(0));
+                cache.layers[layer].append(&out[1].data[..kvd], &out[2].data[..kvd]);
+            }
+
+            let attn_dev = cx.policy.attn_device(layer);
+            let mut attn_us = cx.hw.attn_prefill_per_token_us * m as f64;
+            if attn_dev == DeviceKind::Cpu {
+                attn_us *= cx.hw.attn_cpu_factor;
+            }
+            cx.charge_serial(attn_dev, attn_us);
+
+            x = h_attn;
+            self.moe_layer(layer, &mut x, m, cx)?;
+        }
+        Ok(x.gather_rows_padded(&[m - 1], 1))
+    }
+
     /// One decode step for a batch of sequences: `xs` is `[b, hidden]`
     /// (embedded last tokens), caches/positions parallel arrays.
     /// Returns the new hidden states `[b, hidden]` and appends K/V.

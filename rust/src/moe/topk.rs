@@ -6,12 +6,16 @@
 //! `python/compile/model.reference_forward`: descending by probability,
 //! ties broken by the lower expert index, weights renormalized to sum 1.
 
+use crate::util::rank_key;
+
 /// Returns (expert ids, renormalized weights), both length k.
 pub fn top_k(probs: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
     assert!(k > 0 && k <= probs.len(), "top_k: k={k} over {} experts", probs.len());
     let mut idx: Vec<usize> = (0..probs.len()).collect();
     // Stable sort by descending prob; stability gives jax's tie-by-index.
-    idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+    // rank_key: a NaN router prob ranks LAST (total_cmp alone would rank
+    // positive NaN first and poison the renormalized weights).
+    idx.sort_by(|&a, &b| rank_key(probs[b]).total_cmp(&rank_key(probs[a])));
     idx.truncate(k);
     let total: f32 = idx.iter().map(|&i| probs[i]).sum();
     let weights = idx
@@ -72,6 +76,19 @@ mod tests {
     fn ties_break_by_lower_index() {
         let (ids, _) = top_k(&[0.25, 0.25, 0.25, 0.25], 2);
         assert_eq!(ids, vec![0, 1]);
+    }
+
+    #[test]
+    fn nan_prob_ranks_last_and_never_wins() {
+        // Regression: partial_cmp(..).unwrap() panicked; raw total_cmp let
+        // a positive NaN WIN (NaN > +inf in total order), poisoning every
+        // renormalized weight.  NaN must rank last.
+        let (ids, ws) = top_k(&[0.1, f32::NAN, 0.6], 2);
+        assert_eq!(ids, vec![2, 0]);
+        assert!(ws.iter().all(|w| w.is_finite()), "{ws:?}");
+        // Only selected when nothing finite is left to fill k.
+        let (ids, _) = top_k(&[f32::NAN, 0.4], 2);
+        assert_eq!(ids, vec![1, 0]);
     }
 
     #[test]

@@ -79,7 +79,7 @@ impl TransitionProfile {
             }
         }
         let mut idx: Vec<usize> = (0..self.n_experts).collect();
-        idx.sort_by(|&a, &b| score[b].partial_cmp(&score[a]).unwrap().then(a.cmp(&b)));
+        idx.sort_by(|&a, &b| score[b].total_cmp(&score[a]).then(a.cmp(&b)));
         idx
     }
 

@@ -1,0 +1,799 @@
+//! Request-lifecycle scheduler — the continuous-batching loop all three
+//! paper scenarios flow through.
+//!
+//! Every request advances through one state machine:
+//!
+//! ```text
+//!            admission (policy + KV budget)
+//!   Queued ────────────────────────────────▶ Prefilling(chunk cursor)
+//!                                                  │ prompt complete
+//!                                                  ▼
+//!   Failed ◀── error / reject / shutdown ──── Decoding(1..width slots)
+//!                                                  │ max_new reached
+//!                                                  ▼
+//!                                               Finished
+//! ```
+//!
+//! * **Chunked prefill** (`--prefill-chunk N`): an admitted prompt
+//!   advances at most `N` tokens per loop iteration, interleaved with one
+//!   decode step for every running sequence, so the inter-token latency of
+//!   running sequences is bounded by one chunk instead of one prompt.
+//!   `0` = monolithic prefill (the original demo-loop behavior).
+//! * **Admission policies** (`--admission fcfs|sjf|slo`): FCFS, shortest
+//!   prompt first, or earliest-TTFT-deadline first driven by the virtual
+//!   clock ([`AdmissionKind`]).
+//! * **KV-memory budget** (`--kv-budget-mb M`): admission reserves each
+//!   request's worst-case KV footprint (paper scale,
+//!   [`PAPER_KV_BYTES_PER_TOKEN`]) against a bounded pool and queues —
+//!   or rejects outright-infeasible requests — instead of OOMing.  Under
+//!   pressure the budget *borrows* headroom by shrinking the
+//!   [`ExpertCache`]'s unpinned capacity one expert slot at a time and
+//!   returns the slots when pressure subsides ([`KvBudget`]) — KV cache
+//!   and expert weights arbitrate over one GPU memory pool
+//!   (MoE-Lightning-style).
+//! * **Beam search in the batch** (paper scenario c): a `width > 1`
+//!   request prefills once, expands into `width` [`Slot`]s whose KV caches
+//!   fork copy-on-write, and decodes as ordinary batch rows alongside
+//!   unrelated requests; the beam update reuses the exact
+//!   [`select_candidates`] kernel of the standalone driver.
+//!
+//! The loop is generic over [`ServeBackend`] so the scheduler itself is
+//! testable in pure virtual time without model artifacts
+//! ([`crate::server::sim::SimBackend`]); the real [`Engine`] is the
+//! production backend.
+
+use super::{Event, Request};
+use crate::config::hardware::{MIB, PAPER_EXPERT_BYTES, PAPER_KV_BYTES_PER_TOKEN};
+use crate::config::model::DECODE_BATCH_BUCKETS;
+use crate::config::serving::{AdmissionKind, ServingConfig};
+use crate::coordinator::beam::{select_candidates, top_indices_desc};
+use crate::coordinator::engine::log_softmax;
+use crate::coordinator::Engine;
+use crate::expertcache::{CacheStats, ExpertCache};
+use crate::kvcache::SequenceCache;
+use crate::metrics::GenMetrics;
+use crate::util::rank_key;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc::Receiver;
+
+/// Everything the lifecycle scheduler needs from an inference engine.
+/// Implemented by the real [`Engine`] and by the artifact-free
+/// [`crate::server::sim::SimBackend`].
+pub trait ServeBackend {
+    fn serving(&self) -> &ServingConfig;
+    /// Current virtual time (µs).
+    fn now_us(&self) -> f64;
+    /// Jump the virtual clock forward to `t_us` (idle wait until the next
+    /// scheduled arrival); must be a no-op when `t_us` is in the past.
+    fn advance_to_us(&mut self, t_us: f64);
+    /// Fresh, empty per-sequence KV cache.
+    fn new_cache(&self) -> SequenceCache;
+    /// The GPU expert-residency cache (KV/weight arbitration shrinks and
+    /// re-grows its capacity).
+    fn expert_cache_mut(&mut self) -> &mut ExpertCache;
+    /// Snapshot of the expert cache's cumulative counters.
+    fn cache_stats(&self) -> CacheStats;
+    /// Run one prefill chunk, continuing whatever prefix `cache` already
+    /// holds.  Returns the next-token logits row when `is_last` completes
+    /// the prompt, `None` for interior chunks.
+    fn prefill_chunk(
+        &mut self,
+        chunk: &[u32],
+        cache: &mut SequenceCache,
+        is_last: bool,
+    ) -> Result<Option<Vec<f32>>>;
+    /// One decode step for a batch of sequences; returns one next-token
+    /// logits row per sequence, in batch order.  Rows are owned (beam
+    /// groups score and fork from them after the call), which costs one
+    /// vocab-sized copy per sequence per step at the trait boundary; the
+    /// engine keeps a fused zero-copy sampling path
+    /// ([`Engine::decode_batch_step`]) for direct width-1 callers, and a
+    /// fused variant through this trait is a ROADMAP follow-on.
+    fn decode_logits(
+        &mut self,
+        last: &[u32],
+        caches: &mut [&mut SequenceCache],
+    ) -> Result<Vec<Vec<f32>>>;
+    /// Sample a next token from a logits row (greedy at temperature 0).
+    fn sample(&mut self, logits: &[f32]) -> u32;
+}
+
+impl ServeBackend for Engine {
+    fn serving(&self) -> &ServingConfig {
+        &self.serving
+    }
+
+    fn now_us(&self) -> f64 {
+        self.cx.clock.now_us()
+    }
+
+    fn advance_to_us(&mut self, t_us: f64) {
+        self.cx.clock.advance_to_us(t_us);
+        let now = self.cx.clock.now_us();
+        self.cx.timeline.reset_to(now);
+    }
+
+    fn new_cache(&self) -> SequenceCache {
+        SequenceCache::new(self.model())
+    }
+
+    fn expert_cache_mut(&mut self) -> &mut ExpertCache {
+        &mut self.cx.memory
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cx.memory.stats().clone()
+    }
+
+    fn prefill_chunk(
+        &mut self,
+        chunk: &[u32],
+        cache: &mut SequenceCache,
+        is_last: bool,
+    ) -> Result<Option<Vec<f32>>> {
+        let h = self.runner.prefill_chunk(chunk, cache, &mut self.cx)?;
+        if !is_last {
+            return Ok(None);
+        }
+        let logits = self.runner.lm_head(&h, &mut self.cx)?;
+        Ok(Some(logits.row(0).to_vec()))
+    }
+
+    fn decode_logits(
+        &mut self,
+        last: &[u32],
+        caches: &mut [&mut SequenceCache],
+    ) -> Result<Vec<Vec<f32>>> {
+        self.decode_batch_logits(last, caches)
+    }
+
+    fn sample(&mut self, logits: &[f32]) -> u32 {
+        Engine::sample(self, logits)
+    }
+}
+
+/// Decode-batch cap actually in effect: the configured `max_batch`,
+/// clamped to the largest AOT decode-batch bucket (and to >= 1).  The
+/// second element reports whether the config exceeded the bucket ceiling
+/// (the serve loop warns once).
+pub fn effective_max_batch(configured: usize) -> (usize, bool) {
+    let ceiling = *DECODE_BATCH_BUCKETS.last().unwrap();
+    (configured.clamp(1, ceiling), configured > ceiling)
+}
+
+/// Worst-case KV footprint of one request at paper scale: every slot of
+/// the group may grow to `prompt + max_new` tokens.
+pub fn kv_worst_case_bytes(prompt_tokens: usize, max_new: usize, width: usize) -> u64 {
+    ((prompt_tokens + max_new) * width) as u64 * PAPER_KV_BYTES_PER_TOKEN
+}
+
+/// KV-cache memory budget, arbitrating against the expert cache.
+///
+/// Reservations draw from a fixed pool (`--kv-budget-mb`); when the pool
+/// alone cannot cover a reservation the budget converts unpinned expert
+/// slots into headroom by shrinking the [`ExpertCache`] capacity (each
+/// slot is worth [`PAPER_EXPERT_BYTES`]), and returns the slots as
+/// reservations release.  Pinned placement is never touched.  A pool of 0
+/// disables budgeting entirely.
+#[derive(Debug)]
+pub struct KvBudget {
+    pool_bytes: u64,
+    expert_bytes: u64,
+    used_bytes: u64,
+    borrowed_slots: usize,
+}
+
+impl KvBudget {
+    pub fn new(pool_mb: usize) -> KvBudget {
+        KvBudget {
+            pool_bytes: pool_mb as u64 * MIB,
+            expert_bytes: PAPER_EXPERT_BYTES,
+            used_bytes: 0,
+            borrowed_slots: 0,
+        }
+    }
+
+    pub fn unlimited(&self) -> bool {
+        self.pool_bytes == 0
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used_bytes
+    }
+
+    pub fn borrowed_slots(&self) -> usize {
+        self.borrowed_slots
+    }
+
+    /// Pool plus everything currently borrowed from the expert cache.
+    fn ceiling(&self) -> u64 {
+        self.pool_bytes + self.borrowed_slots as u64 * self.expert_bytes
+    }
+
+    /// Could `bytes` EVER be reserved — against the empty pool plus every
+    /// borrowable expert slot (slots currently lent out will return as
+    /// reservations drain, so they count)?  `false` means "reject";
+    /// anything else merely waits in the queue for `try_reserve`.
+    pub fn ever_feasible(&self, bytes: u64, cache: &ExpertCache) -> bool {
+        if self.unlimited() {
+            return true;
+        }
+        let unpinned =
+            cache.capacity().saturating_sub(cache.pinned_count()) + self.borrowed_slots;
+        bytes <= self.pool_bytes + unpinned as u64 * self.expert_bytes
+    }
+
+    /// Can `bytes` be covered *right now*, given current usage and the
+    /// cache's currently borrowable slots?
+    pub fn feasible(&self, bytes: u64, cache: &ExpertCache) -> bool {
+        if self.unlimited() {
+            return true;
+        }
+        let borrowable =
+            cache.capacity().saturating_sub(cache.pinned_count()) as u64 * self.expert_bytes;
+        self.used_bytes + bytes <= self.ceiling() + borrowable
+    }
+
+    /// Reserve `bytes`, shrinking `cache` one expert slot at a time when
+    /// the pool runs short.  Returns `false` — with no state changed —
+    /// when the reservation cannot be covered right now.
+    pub fn try_reserve(&mut self, bytes: u64, cache: &mut ExpertCache) -> bool {
+        if self.unlimited() {
+            return true;
+        }
+        if !self.feasible(bytes, cache) {
+            return false;
+        }
+        while self.used_bytes + bytes > self.ceiling() {
+            debug_assert!(cache.capacity() > cache.pinned_count());
+            cache.set_capacity(cache.capacity() - 1);
+            self.borrowed_slots += 1;
+        }
+        self.used_bytes += bytes;
+        true
+    }
+
+    /// Release a reservation, returning borrowed expert slots to the cache
+    /// as whole slots' worth of headroom free up.
+    pub fn release(&mut self, bytes: u64, cache: &mut ExpertCache) {
+        if self.unlimited() {
+            return;
+        }
+        self.used_bytes = self.used_bytes.saturating_sub(bytes);
+        while self.borrowed_slots > 0 && self.used_bytes + self.expert_bytes <= self.ceiling() {
+            cache.set_capacity(cache.capacity() + 1);
+            self.borrowed_slots -= 1;
+        }
+    }
+}
+
+/// One decoding slot of a sequence group: a beam, or the single lane of
+/// an ordinary request.
+struct Slot {
+    cache: SequenceCache,
+    last: u32,
+    tokens: Vec<u32>,
+    score: f32,
+}
+
+/// Lifecycle phase of a group.  `Queued` groups live in the scheduler's
+/// queue (admission swaps in `Prefilling` with a real KV cache); terminal
+/// groups are retired immediately, so no variant exists for them.
+enum Phase {
+    Queued,
+    Prefilling { cursor: usize, cache: SequenceCache },
+    Decoding { slots: Vec<Slot> },
+}
+
+/// One request moving through the lifecycle: an ordinary generation
+/// (`width == 1`) or a beam group (`width > 1`) — same machinery.
+struct SequenceGroup {
+    prompt: Vec<u32>,
+    max_new: usize,
+    width: usize,
+    stream: std::sync::mpsc::Sender<Event>,
+    metrics: GenMetrics,
+    /// Absolute virtual TTFT deadline (admission `slo` mode orders by it).
+    deadline_us: f64,
+    /// Paper-scale KV bytes reserved for this group at admission.
+    kv_reserved: u64,
+    /// Cumulative cache counters at admission; completion stamps the delta.
+    cache_base: CacheStats,
+    produced: usize,
+    phase: Phase,
+}
+
+impl SequenceGroup {
+    /// Batch slots this group occupies (or will occupy once its prefill
+    /// completes — a beam group reserves its full width up front).
+    fn slot_count(&self) -> usize {
+        match &self.phase {
+            Phase::Queued | Phase::Prefilling { .. } => self.width,
+            Phase::Decoding { slots } => slots.len(),
+        }
+    }
+
+    fn fail(self, msg: &str) {
+        let _ = self.stream.send(Event::Error(msg.to_string()));
+    }
+}
+
+/// Queue indices in the order the [`AdmissionKind`] would admit them;
+/// ties resolve to the earliest arrival (queue order — the sorts are
+/// stable).  The serve loop admits the FIRST candidate that fits the
+/// batch and the KV budget, so a wide beam group (or a KV-hungry prompt)
+/// at the head never starves narrow requests behind it (backfill).
+fn admission_order(queue: &VecDeque<SequenceGroup>, kind: AdmissionKind) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..queue.len()).collect();
+    match kind {
+        AdmissionKind::Fcfs => {}
+        AdmissionKind::ShortestFirst => idx.sort_by_key(|&i| queue[i].prompt.len()),
+        AdmissionKind::Deadline => {
+            idx.sort_by(|&a, &b| queue[a].deadline_us.total_cmp(&queue[b].deadline_us))
+        }
+    }
+    idx
+}
+
+/// Park a future-dated request in `pending`, keeping it sorted ascending
+/// by arrival time (stable for ties — earlier sends first).
+fn park_pending(r: Request, pending: &mut Vec<Request>) {
+    let t = r.arrive_at_us.unwrap_or(0.0);
+    let at =
+        pending.iter().position(|p| p.arrive_at_us.unwrap_or(0.0) > t).unwrap_or(pending.len());
+    pending.insert(at, r);
+}
+
+/// Run the lifecycle scheduler until `requests` disconnects (or a
+/// shutdown sentinel arrives) and all in-flight work drains.  On
+/// shutdown, queued-but-never-admitted requests receive a terminal
+/// [`Event::Error`] — their receivers never hang — while admitted
+/// sequences run to completion.
+pub fn serve_lifecycle<B: ServeBackend>(
+    backend: &mut B,
+    requests: Receiver<Request>,
+) -> Result<()> {
+    let cfg = backend.serving().clone();
+    let (max_batch, over_ceiling) = effective_max_batch(cfg.max_batch);
+    if over_ceiling {
+        // eprintln!, not log::warn! — the CLI installs no logger, and this
+        // must reach the user (once per server, the loop runs below).
+        eprintln!(
+            "warning: --max-batch {} exceeds the AOT decode-batch bucket ceiling {}; clamping",
+            cfg.max_batch, max_batch
+        );
+    }
+    let mut kv = KvBudget::new(cfg.kv_budget_mb);
+    let mut queue: VecDeque<SequenceGroup> = VecDeque::new();
+    // Requests scheduled to arrive at a future virtual time (open-loop
+    // drivers), sorted ascending by arrival.
+    let mut pending: Vec<Request> = Vec::new();
+    let mut groups: Vec<SequenceGroup> = Vec::new();
+    let mut shutting_down = false;
+
+    // Turn an arrived request into a queued group (or reject it with a
+    // terminal event).  Returns true when it was the shutdown sentinel.
+    let ingest = |r: Request,
+                  queue: &mut VecDeque<SequenceGroup>,
+                  kv: &KvBudget,
+                  backend: &mut B|
+     -> bool {
+        if r.shutdown {
+            return true;
+        }
+        let enqueue_us = r.arrive_at_us.unwrap_or_else(|| backend.now_us());
+        let reject = |r: &Request, msg: String| {
+            let _ = r.stream.send(Event::Error(msg));
+        };
+        if r.prompt.is_empty() {
+            reject(&r, "bad request: empty prompt".into());
+            return false;
+        }
+        if r.max_new == 0 {
+            reject(&r, "bad request: max_new must be at least 1".into());
+            return false;
+        }
+        if r.width == 0 || r.width > max_batch {
+            reject(&r, format!("bad request: beam width {} not in 1..={max_batch}", r.width));
+            return false;
+        }
+        if queue.len() >= cfg.queue_capacity {
+            reject(&r, format!("queue full ({} requests)", cfg.queue_capacity));
+            return false;
+        }
+        let worst = kv_worst_case_bytes(r.prompt.len(), r.max_new, r.width);
+        if !kv.ever_feasible(worst, backend.expert_cache_mut()) {
+            reject(
+                &r,
+                format!("request KV footprint ({} MiB) exceeds --kv-budget-mb", worst / MIB),
+            );
+            return false;
+        }
+        let deadline_us = enqueue_us + r.slo_us.unwrap_or(cfg.slo_ttft_ms * 1e3);
+        queue.push_back(SequenceGroup {
+            metrics: GenMetrics {
+                enqueue_us,
+                prompt_tokens: r.prompt.len(),
+                ..Default::default()
+            },
+            prompt: r.prompt,
+            max_new: r.max_new,
+            width: r.width,
+            stream: r.stream,
+            deadline_us,
+            kv_reserved: 0,
+            cache_base: CacheStats::default(),
+            produced: 0,
+            phase: Phase::Queued,
+        });
+        false
+    };
+
+    loop {
+        // 1. Drain newly arrived requests (non-blocking); future-dated
+        //    requests wait in `pending` until the virtual clock reaches
+        //    their arrival time.  Live requests (no arrival stamp) are
+        //    staged and ingested only AFTER step 2 promotes already-due
+        //    pending arrivals: those arrived at an earlier virtual time,
+        //    so they must reach the queue (FCFS order, capacity slots)
+        //    first.
+        let mut live: Vec<Request> = Vec::new();
+        loop {
+            match requests.try_recv() {
+                Ok(r) if r.arrive_at_us.map(|t| t > backend.now_us()).unwrap_or(false) => {
+                    park_pending(r, &mut pending);
+                }
+                Ok(r) => live.push(r),
+                Err(std::sync::mpsc::TryRecvError::Empty) => break,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    shutting_down = true;
+                    break;
+                }
+            }
+        }
+        // 2. Promote pending arrivals whose time has come, then the live
+        //    batch.
+        while pending.first().map(|r| r.arrive_at_us.unwrap_or(0.0) <= backend.now_us())
+            == Some(true)
+        {
+            let r = pending.remove(0);
+            if ingest(r, &mut queue, &kv, backend) {
+                shutting_down = true;
+            }
+        }
+        for r in live {
+            if ingest(r, &mut queue, &kv, backend) {
+                shutting_down = true;
+            }
+        }
+        // 3. Shutdown: everything not yet admitted gets a terminal event
+        //    (receivers must never hang); admitted groups drain below.
+        if shutting_down {
+            for g in queue.drain(..) {
+                g.fail("server shutting down before admission");
+            }
+            for r in pending.drain(..) {
+                if !r.shutdown {
+                    let _ = r.stream.send(Event::Error(
+                        "server shutting down before admission".to_string(),
+                    ));
+                }
+            }
+            if groups.is_empty() {
+                return Ok(());
+            }
+        }
+
+        // 4. Idle: nothing active, nothing admissible.
+        if groups.is_empty() && queue.is_empty() {
+            if let Some(t) = pending.first().and_then(|r| r.arrive_at_us) {
+                backend.advance_to_us(t);
+                continue;
+            }
+            match requests.recv() {
+                // A future-dated arrival waits in `pending` here too (the
+                // top-of-loop drain re-routes it), so live drivers get the
+                // same exact virtual-time replay as pre-loaded channels.
+                Ok(r) if r.arrive_at_us.map(|t| t > backend.now_us()).unwrap_or(false) => {
+                    park_pending(r, &mut pending);
+                    continue;
+                }
+                Ok(r) => {
+                    if ingest(r, &mut queue, &kv, backend) {
+                        shutting_down = true;
+                    }
+                    continue;
+                }
+                Err(_) => return Ok(()),
+            }
+        }
+
+        // 5. Admission: one request per iteration — the first candidate in
+        //    policy order that fits the free batch slots AND the KV budget
+        //    (backfill: a wide or KV-hungry head never starves admissible
+        //    requests behind it).  Held while a prefill is in flight so
+        //    its chunk cadence (and thus the running sequences' ITL bound)
+        //    is preserved.
+        let active_slots: usize = groups.iter().map(|g| g.slot_count()).sum();
+        let prefilling = groups.iter().any(|g| matches!(g.phase, Phase::Prefilling { .. }));
+        if !prefilling && !shutting_down {
+            for i in admission_order(&queue, cfg.admission) {
+                if active_slots + queue[i].width > max_batch {
+                    continue;
+                }
+                let worst =
+                    kv_worst_case_bytes(queue[i].prompt.len(), queue[i].max_new, queue[i].width);
+                if kv.try_reserve(worst, backend.expert_cache_mut()) {
+                    let mut g = queue.remove(i).unwrap();
+                    g.kv_reserved = worst;
+                    g.metrics.admitted_us = backend.now_us();
+                    g.cache_base = backend.cache_stats();
+                    g.phase = Phase::Prefilling { cursor: 0, cache: backend.new_cache() };
+                    groups.push(g);
+                    break;
+                }
+            }
+        }
+
+        // 6. Prefill: advance the in-flight prompt by one chunk (the whole
+        //    prompt when chunking is off); on completion, emit the first
+        //    token and expand into decode slots.
+        let mut failed: Option<usize> = None;
+        if let Some((gi, g)) = groups
+            .iter_mut()
+            .enumerate()
+            .find(|(_, g)| matches!(g.phase, Phase::Prefilling { .. }))
+        {
+            let Phase::Prefilling { cursor, cache } = &mut g.phase else { unreachable!() };
+            let remaining = g.prompt.len() - *cursor;
+            let step =
+                if cfg.prefill_chunk == 0 { remaining } else { cfg.prefill_chunk.min(remaining) };
+            let is_last = *cursor + step == g.prompt.len();
+            match backend.prefill_chunk(&g.prompt[*cursor..*cursor + step], cache, is_last) {
+                Err(e) => {
+                    let _ = g.stream.send(Event::Error(e.to_string()));
+                    failed = Some(gi);
+                }
+                Ok(None) => *cursor += step,
+                Ok(Some(logits)) => {
+                    let now = backend.now_us();
+                    g.metrics.first_token_us = now;
+                    g.metrics.token_done_us.push(now);
+                    g.produced = 1;
+                    let slots = if g.width == 1 {
+                        let tok = backend.sample(&logits);
+                        let _ = g.stream.send(Event::Token(tok));
+                        let cache = std::mem::replace(cache, SequenceCache { layers: Vec::new() });
+                        vec![Slot { cache, last: tok, tokens: vec![tok], score: 0.0 }]
+                    } else {
+                        // Beam expansion: top-width first tokens, caches
+                        // forked copy-on-write (scenario c).
+                        let lsm = log_softmax(&logits);
+                        top_indices_desc(&lsm, g.width)
+                            .into_iter()
+                            .map(|t| Slot {
+                                cache: cache.fork(),
+                                last: t as u32,
+                                tokens: vec![t as u32],
+                                score: lsm[t],
+                            })
+                            .collect()
+                    };
+                    g.phase = Phase::Decoding { slots };
+                }
+            }
+        }
+        if let Some(gi) = failed {
+            let g = groups.remove(gi);
+            kv.release(g.kv_reserved, backend.expert_cache_mut());
+        }
+
+        // 7. One decode step for every decoding slot (beam slots decode as
+        //    ordinary batch rows — cross-request batching per scenario c).
+        let rows = {
+            let mut last: Vec<u32> = Vec::new();
+            let mut caches: Vec<&mut SequenceCache> = Vec::new();
+            for g in groups.iter_mut() {
+                if g.produced >= g.max_new {
+                    continue; // already complete (e.g. max_new == 1): retire below
+                }
+                if let Phase::Decoding { slots } = &mut g.phase {
+                    for s in slots.iter_mut() {
+                        last.push(s.last);
+                        caches.push(&mut s.cache);
+                    }
+                }
+            }
+            if last.is_empty() { None } else { Some(backend.decode_logits(&last, &mut caches)?) }
+        };
+        if let Some(rows) = rows {
+            let now = backend.now_us();
+            let mut ri = 0;
+            for g in groups.iter_mut() {
+                if g.produced >= g.max_new {
+                    continue; // contributed no rows above
+                }
+                let Phase::Decoding { slots } = &mut g.phase else { continue };
+                let w = slots.len();
+                let rows_g = &rows[ri..ri + w];
+                ri += w;
+                if g.width == 1 {
+                    let tok = backend.sample(&rows_g[0]);
+                    let s = &mut slots[0];
+                    s.last = tok;
+                    s.tokens.push(tok);
+                    let _ = g.stream.send(Event::Token(tok));
+                } else {
+                    // Same beam-update kernel as the standalone driver.
+                    let scores: Vec<f32> = slots.iter().map(|s| s.score).collect();
+                    let all_lsm: Vec<Vec<f32>> =
+                        rows_g.iter().map(|r| log_softmax(r)).collect();
+                    let cands = select_candidates(&scores, &all_lsm, g.width);
+                    let next: Vec<Slot> = cands
+                        .iter()
+                        .map(|&(score, bi, t)| {
+                            let parent = &slots[bi];
+                            let mut tokens = parent.tokens.clone();
+                            tokens.push(t as u32);
+                            Slot { cache: parent.cache.fork(), last: t as u32, tokens, score }
+                        })
+                        .collect();
+                    *slots = next;
+                }
+                g.produced += 1;
+                g.metrics.token_done_us.push(now);
+            }
+        }
+
+        // 8. Retire finished groups: stamp the per-request cache-stat
+        //    delta, stream beam winners, release KV reservations.
+        let mut gi = 0;
+        while gi < groups.len() {
+            if groups[gi].produced < groups[gi].max_new {
+                gi += 1;
+                continue;
+            }
+            let mut g = groups.remove(gi);
+            g.metrics.cache = Some(backend.cache_stats().delta_since(&g.cache_base));
+            if g.width > 1 {
+                if let Phase::Decoding { slots } = &g.phase {
+                    let best = slots
+                        .iter()
+                        .max_by(|a, b| rank_key(a.score).total_cmp(&rank_key(b.score)))
+                        .expect("beam group without slots");
+                    for &t in &best.tokens {
+                        let _ = g.stream.send(Event::Token(t));
+                    }
+                }
+            }
+            let _ = g.stream.send(Event::Done(g.metrics.clone()));
+            kv.release(g.kv_reserved, backend.expert_cache_mut());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_max_batch_clamps_to_bucket_ceiling() {
+        let ceiling = *DECODE_BATCH_BUCKETS.last().unwrap();
+        assert_eq!(effective_max_batch(4), (4, false));
+        assert_eq!(effective_max_batch(ceiling), (ceiling, false));
+        assert_eq!(effective_max_batch(ceiling + 10), (ceiling, true));
+        assert_eq!(effective_max_batch(0), (1, false));
+    }
+
+    #[test]
+    fn kv_worst_case_scales_with_width() {
+        let one = kv_worst_case_bytes(10, 6, 1);
+        assert_eq!(one, 16 * PAPER_KV_BYTES_PER_TOKEN);
+        assert_eq!(kv_worst_case_bytes(10, 6, 4), 4 * one);
+    }
+
+    #[test]
+    fn kv_budget_zero_is_unlimited() {
+        let mut kv = KvBudget::new(0);
+        let mut cache = ExpertCache::with_capacity(2);
+        assert!(kv.try_reserve(u64::MAX, &mut cache));
+        assert_eq!(kv.used_bytes(), 0, "unlimited budget tracks nothing");
+        kv.release(u64::MAX, &mut cache);
+        assert_eq!(cache.capacity(), 2);
+    }
+
+    #[test]
+    fn kv_budget_reserves_and_releases() {
+        let mut kv = KvBudget::new(1); // 1 MiB pool
+        let mut cache = ExpertCache::with_capacity(4);
+        assert!(kv.try_reserve(MIB / 2, &mut cache));
+        assert!(kv.try_reserve(MIB / 2, &mut cache));
+        assert_eq!(kv.used_bytes(), MIB);
+        assert_eq!(kv.borrowed_slots(), 0);
+        kv.release(MIB / 2, &mut cache);
+        assert_eq!(kv.used_bytes(), MIB / 2);
+    }
+
+    #[test]
+    fn kv_budget_borrows_expert_slots_and_returns_them() {
+        let mut kv = KvBudget::new(1);
+        let mut cache = ExpertCache::with_capacity(4);
+        cache.pin((0, 0));
+        // Needs ~1 expert slot beyond the pool.
+        let big = MIB + PAPER_EXPERT_BYTES / 2;
+        assert!(kv.try_reserve(big, &mut cache));
+        assert_eq!(kv.borrowed_slots(), 1);
+        assert_eq!(cache.capacity(), 3, "one unpinned slot converted to KV headroom");
+        // Release: the slot comes back.
+        kv.release(big, &mut cache);
+        assert_eq!(kv.borrowed_slots(), 0);
+        assert_eq!(cache.capacity(), 4);
+    }
+
+    #[test]
+    fn kv_budget_transiently_full_pool_queues_instead_of_rejecting() {
+        // Regression: a request that fits the EMPTY pool must not be
+        // rejected just because another request currently holds it.
+        let mut kv = KvBudget::new(1);
+        let mut cache = ExpertCache::with_capacity(2);
+        cache.pin((0, 0));
+        cache.pin((0, 1)); // nothing borrowable
+        assert!(kv.try_reserve(MIB - MIB / 4, &mut cache));
+        let b = MIB / 2;
+        assert!(kv.ever_feasible(b, &cache), "fits the empty pool: must queue");
+        assert!(!kv.feasible(b, &cache), "but not right now");
+        kv.release(MIB - MIB / 4, &mut cache);
+        assert!(kv.try_reserve(b, &mut cache));
+        // Slots currently lent out still count toward "ever".
+        let mut kv2 = KvBudget::new(1);
+        let mut cache2 = ExpertCache::with_capacity(1);
+        assert!(kv2.try_reserve(MIB + PAPER_EXPERT_BYTES / 2, &mut cache2));
+        assert_eq!(kv2.borrowed_slots(), 1);
+        assert!(kv2.ever_feasible(MIB + PAPER_EXPERT_BYTES / 2, &cache2));
+    }
+
+    #[test]
+    fn kv_budget_infeasible_is_rejected_without_side_effects() {
+        let mut kv = KvBudget::new(1);
+        let mut cache = ExpertCache::with_capacity(2);
+        cache.pin((0, 0));
+        cache.pin((0, 1)); // nothing borrowable
+        let big = MIB + 3 * PAPER_EXPERT_BYTES;
+        assert!(!kv.feasible(big, &cache));
+        assert!(!kv.try_reserve(big, &mut cache));
+        assert_eq!(kv.used_bytes(), 0);
+        assert_eq!(cache.capacity(), 2, "failed reservation must not shrink the cache");
+    }
+
+    fn queued(prompt_len: usize, deadline_us: f64) -> SequenceGroup {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        SequenceGroup {
+            prompt: vec![1; prompt_len],
+            max_new: 1,
+            width: 1,
+            stream: tx,
+            metrics: GenMetrics::default(),
+            deadline_us,
+            kv_reserved: 0,
+            cache_base: CacheStats::default(),
+            produced: 0,
+            phase: Phase::Queued,
+        }
+    }
+
+    #[test]
+    fn admission_order_per_policy() {
+        let mut q = VecDeque::new();
+        q.push_back(queued(100, 900.0));
+        q.push_back(queued(4, 500.0));
+        q.push_back(queued(4, 700.0));
+        assert_eq!(admission_order(&q, AdmissionKind::Fcfs), vec![0, 1, 2]);
+        // Shortest prompt; ties resolve to the earlier arrival.
+        assert_eq!(admission_order(&q, AdmissionKind::ShortestFirst), vec![1, 2, 0]);
+        assert_eq!(admission_order(&q, AdmissionKind::Deadline), vec![1, 2, 0]);
+        q[1].deadline_us = 1_000.0;
+        assert_eq!(admission_order(&q, AdmissionKind::Deadline), vec![2, 0, 1]);
+        assert!(admission_order(&VecDeque::new(), AdmissionKind::Fcfs).is_empty());
+    }
+}

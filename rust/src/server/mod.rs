@@ -1,20 +1,23 @@
 //! Thread-based serving front end with continuous batching.
 //!
-//! A single worker thread owns the engine (the PJRT client is not shared
+//! A single worker thread owns the backend (the PJRT client is not shared
 //! across threads); clients submit [`Request`]s through a channel and
-//! receive streamed tokens on a per-request channel.  Scheduling is FCFS
-//! admission into a decode pool of at most `max_batch` sequences; each
-//! iteration admits (prefills) one queued request, then advances every
-//! active sequence by one token — the standard continuous-batching loop
-//! (Orca-style iteration-level scheduling).
+//! receive streamed tokens on a per-request channel.  Scheduling lives in
+//! [`lifecycle`]: iteration-level (Orca-style) continuous batching with a
+//! `Queued → Prefilling → Decoding → Finished/Failed` state machine per
+//! request, chunked prefill, pluggable admission policies, a KV-memory
+//! budget arbitrating against expert residency, and beam groups decoding
+//! inside the shared batch.
 
+pub mod lifecycle;
 pub mod net;
+pub mod sim;
+
+pub use lifecycle::{serve_lifecycle, ServeBackend};
 
 use crate::coordinator::Engine;
-use crate::kvcache::SequenceCache;
 use crate::metrics::GenMetrics;
 use anyhow::Result;
-use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
@@ -22,17 +25,56 @@ use std::thread::JoinHandle;
 pub struct Request {
     pub prompt: Vec<u32>,
     pub max_new: usize,
+    /// Beam width: 1 = ordinary sampled generation; >1 = beam search
+    /// through the same serve loop (paper scenario c).  Beam requests
+    /// stream the winning beam's tokens when the group finishes.
+    pub width: usize,
+    /// Relative TTFT service-level objective (virtual µs from enqueue);
+    /// `None` uses the server's `--slo-ttft-ms` default.  Orders admission
+    /// in `--admission slo` mode.
+    pub slo_us: Option<f64>,
+    /// Open-loop drivers: absolute virtual arrival time.  The scheduler
+    /// holds the request until the virtual clock reaches it (and fast-
+    /// forwards idle time to it), so Poisson traces replay exactly.
+    pub arrive_at_us: Option<f64>,
     /// Streamed output: one event per token, then `Done`.
     pub stream: Sender<Event>,
-    /// Shutdown sentinel: the serve loop drains in-flight work and exits.
-    /// Needed because auxiliary front ends (TCP accept loop) hold Sender
-    /// clones, so channel disconnection alone cannot signal shutdown.
+    /// Shutdown sentinel: in-flight sequences drain, queued-but-never-
+    /// admitted requests get a terminal [`Event::Error`], then the loop
+    /// exits.  Needed because auxiliary front ends (TCP accept loop) hold
+    /// Sender clones, so channel disconnection alone cannot signal
+    /// shutdown.
     pub shutdown: bool,
 }
 
 impl Request {
     pub fn new(prompt: Vec<u32>, max_new: usize, stream: Sender<Event>) -> Request {
-        Request { prompt, max_new, stream, shutdown: false }
+        Request {
+            prompt,
+            max_new,
+            width: 1,
+            slo_us: None,
+            arrive_at_us: None,
+            stream,
+            shutdown: false,
+        }
+    }
+
+    /// A beam-search request (`width` beams, winning beam streamed at the
+    /// end).
+    pub fn beam(
+        prompt: Vec<u32>,
+        max_new: usize,
+        width: usize,
+        stream: Sender<Event>,
+    ) -> Request {
+        Request { width, ..Request::new(prompt, max_new, stream) }
+    }
+
+    /// The shutdown sentinel.
+    pub fn shutdown_sentinel() -> Request {
+        let (tx, _rx) = channel();
+        Request { shutdown: true, ..Request::new(Vec::new(), 0, tx) }
     }
 }
 
@@ -43,116 +85,11 @@ pub enum Event {
     Error(String),
 }
 
-struct Active {
-    cache: SequenceCache,
-    last: u32,
-    produced: usize,
-    max_new: usize,
-    stream: Sender<Event>,
-    metrics: GenMetrics,
-}
-
 /// Run the serving loop until `requests` disconnects and all work drains.
+/// Thin wrapper over the request-lifecycle scheduler
+/// ([`lifecycle::serve_lifecycle`]) specialized to the real [`Engine`].
 pub fn serve_loop(engine: &mut Engine, requests: Receiver<Request>) -> Result<()> {
-    let mut queue: VecDeque<Request> = VecDeque::new();
-    let mut active: Vec<Active> = Vec::new();
-    let mut shutting_down = false;
-    let max_batch = engine.serving.max_batch.min(16);
-
-    loop {
-        // Drain newly arrived requests (non-blocking).
-        loop {
-            match requests.try_recv() {
-                Ok(r) if r.shutdown => shutting_down = true,
-                Ok(r) => queue.push_back(r),
-                Err(std::sync::mpsc::TryRecvError::Empty) => break,
-                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
-                    shutting_down = true;
-                    break;
-                }
-            }
-        }
-        if shutting_down && queue.is_empty() && active.is_empty() {
-            return Ok(());
-        }
-
-        // Admission: prefill one queued request per iteration if a slot
-        // is free (prefill is long; interleaving one at a time keeps ITL
-        // of running sequences bounded).
-        if active.len() < max_batch {
-            if let Some(req) = queue.pop_front() {
-                let mut metrics = GenMetrics {
-                    enqueue_us: engine.cx.clock.now_us(),
-                    prompt_tokens: req.prompt.len(),
-                    ..Default::default()
-                };
-                let mut cache = SequenceCache::new(engine.model());
-                match engine
-                    .runner
-                    .prefill(&req.prompt, &mut cache, &mut engine.cx)
-                    .and_then(|h| engine.runner.lm_head(&h, &mut engine.cx))
-                {
-                    Ok(logits) => {
-                        let tok = engine.sample(logits.row(0));
-                        metrics.first_token_us = engine.cx.clock.now_us();
-                        metrics.token_done_us.push(metrics.first_token_us);
-                        let _ = req.stream.send(Event::Token(tok));
-                        active.push(Active {
-                            cache,
-                            last: tok,
-                            produced: 1,
-                            max_new: req.max_new,
-                            stream: req.stream,
-                            metrics,
-                        });
-                    }
-                    Err(e) => {
-                        let _ = req.stream.send(Event::Error(e.to_string()));
-                    }
-                }
-            }
-        }
-
-        if active.is_empty() {
-            if queue.is_empty() {
-                if shutting_down {
-                    return Ok(());
-                }
-                // Idle: block for the next request or shutdown.
-                match requests.recv() {
-                    Ok(r) if r.shutdown => return Ok(()),
-                    Ok(r) => queue.push_back(r),
-                    Err(_) => return Ok(()),
-                }
-            }
-            continue;
-        }
-
-        // One decode step for every active sequence.
-        let last: Vec<u32> = active.iter().map(|a| a.last).collect();
-        let mut caches: Vec<&mut SequenceCache> =
-            active.iter_mut().map(|a| &mut a.cache).collect();
-        let next = engine.decode_batch_step(&last, &mut caches)?;
-        let now = engine.cx.clock.now_us();
-        for (a, tok) in active.iter_mut().zip(next) {
-            a.last = tok;
-            a.produced += 1;
-            a.metrics.token_done_us.push(now);
-            let _ = a.stream.send(Event::Token(tok));
-        }
-        // Retire finished sequences, stamping the engine's cache counters
-        // into their final metrics (shared cache: cumulative snapshot).
-        let cache_stats = engine.cx.memory.stats().clone();
-        active.retain_mut(|a| {
-            if a.produced >= a.max_new {
-                a.metrics.cache = Some(cache_stats.clone());
-                let _ = a.stream.send(Event::Done(a.metrics.clone()));
-                false
-            } else {
-                true
-            }
-        });
-    }
+    lifecycle::serve_lifecycle(engine, requests)
 }
 
 /// Handle to a background server thread.
@@ -162,17 +99,19 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Spawn the worker thread; the engine is constructed *inside* it by
+    /// Spawn the worker thread; the backend is constructed *inside* it by
     /// `make` (the PJRT client is thread-affine — `!Send` — so it must be
-    /// born on the thread that uses it).
-    pub fn spawn<F>(make: F) -> ServerHandle
+    /// born on the thread that uses it).  Works for any [`ServeBackend`]:
+    /// the real [`Engine`] or the artifact-free [`sim::SimBackend`].
+    pub fn spawn<B, F>(make: F) -> ServerHandle
     where
-        F: FnOnce() -> Result<Engine> + Send + 'static,
+        B: ServeBackend,
+        F: FnOnce() -> Result<B> + Send + 'static,
     {
         let (tx, rx) = channel();
         let worker = std::thread::spawn(move || {
-            let mut engine = make()?;
-            serve_loop(&mut engine, rx)
+            let mut backend = make()?;
+            lifecycle::serve_lifecycle(&mut backend, rx)
         });
         ServerHandle { requests: tx, worker }
     }
@@ -186,15 +125,20 @@ impl ServerHandle {
         rx
     }
 
-    /// Signal shutdown (drains in-flight work) and join the worker.
+    /// Submit a beam-search request (`width` beams); the winning beam's
+    /// tokens stream when the group finishes.
+    pub fn submit_beam(&self, prompt: Vec<u32>, max_new: usize, width: usize) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        self.requests
+            .send(Request::beam(prompt, max_new, width, tx))
+            .expect("server thread gone");
+        rx
+    }
+
+    /// Signal shutdown (drains in-flight work, fails queued-but-never-
+    /// admitted requests with a terminal event) and join the worker.
     pub fn shutdown(self) -> Result<()> {
-        let (tx, _rx) = channel();
-        let _ = self.requests.send(Request {
-            prompt: Vec::new(),
-            max_new: 0,
-            stream: tx,
-            shutdown: true,
-        });
+        let _ = self.requests.send(Request::shutdown_sentinel());
         drop(self.requests);
         self.worker.join().expect("server thread panicked")
     }

@@ -2,8 +2,12 @@
 //!
 //! Protocol (one JSON object per line):
 //!   client -> {"prompt": [1, 2, 3], "max_new": 16}
+//!             optional: "width": W   (beam search; winning beam streams
+//!                                     when the group finishes)
+//!                       "slo_ms": D  (TTFT deadline for --admission slo)
 //!   server -> {"token": 42}            (streamed, one per generated token)
-//!   server -> {"done": true, "ttft_us": ..., "itl_us": ..., "tokens_per_s": ...}
+//!   server -> {"done": true, "ttft_us": ..., "queue_delay_us": ...,
+//!              "itl_us": ..., "tokens_per_s": ...}
 //!   server -> {"error": "..."}         (on bad requests)
 //!
 //! The listener thread accepts connections and forwards requests into the
@@ -17,8 +21,8 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};
 
-/// Parse one request line.
-fn parse_request(line: &str) -> Result<(Vec<u32>, usize)> {
+/// Parse one request line into (prompt, max_new, width, slo_us).
+fn parse_request(line: &str) -> Result<(Vec<u32>, usize, usize, Option<f64>)> {
     let v = Json::parse(line)?;
     let prompt = v
         .get("prompt")?
@@ -28,7 +32,20 @@ fn parse_request(line: &str) -> Result<(Vec<u32>, usize)> {
         .collect::<Result<Vec<u32>>>()?;
     let max_new = v.get("max_new")?.as_usize()?;
     anyhow::ensure!(max_new > 0 && max_new <= 4096, "max_new out of range");
-    Ok((prompt, max_new))
+    let width = match v.get("width") {
+        Ok(w) => w.as_usize()?,
+        Err(_) => 1,
+    };
+    anyhow::ensure!(width >= 1 && width <= 16, "width out of range");
+    let slo_us = match v.get("slo_ms") {
+        Ok(d) => {
+            let ms = d.as_f64()?;
+            anyhow::ensure!(ms > 0.0, "slo_ms must be positive");
+            Some(ms * 1e3)
+        }
+        Err(_) => None,
+    };
+    Ok((prompt, max_new, width, slo_us))
 }
 
 fn event_line(ev: &Event) -> String {
@@ -38,6 +55,7 @@ fn event_line(ev: &Event) -> String {
         Event::Done(m) => {
             o.set("done", Json::Bool(true));
             o.set("ttft_us", Json::Num(m.ttft_us()));
+            o.set("queue_delay_us", Json::Num(m.queue_delay_us()));
             o.set("itl_us", Json::Num(m.mean_itl_us()));
             o.set("tokens_per_s", Json::Num(m.tokens_per_s()));
             if let Some(c) = &m.cache {
@@ -62,7 +80,7 @@ fn handle_conn(stream: TcpStream, requests: Sender<Request>) {
             Ok(_) => continue,
             Err(_) => break,
         };
-        let (prompt, max_new) = match parse_request(&line) {
+        let (prompt, max_new, width, slo_us) = match parse_request(&line) {
             Ok(r) => r,
             Err(e) => {
                 let _ = writer.write_all(
@@ -72,7 +90,8 @@ fn handle_conn(stream: TcpStream, requests: Sender<Request>) {
             }
         };
         let (tx, rx) = channel();
-        if requests.send(Request::new(prompt, max_new, tx)).is_err() {
+        let req = Request { width, slo_us, ..Request::new(prompt, max_new, tx) };
+        if requests.send(req).is_err() {
             let _ = writer
                 .write_all(event_line(&Event::Error("server shutting down".into())).as_bytes());
             break;
@@ -120,9 +139,17 @@ mod tests {
 
     #[test]
     fn parse_request_validates() {
-        assert!(parse_request(r#"{"prompt": [1, 2], "max_new": 4}"#).is_ok());
+        let (p, n, w, slo) = parse_request(r#"{"prompt": [1, 2], "max_new": 4}"#).unwrap();
+        assert_eq!((p, n, w, slo), (vec![1, 2], 4, 1, None));
+        let (_, _, w, slo) =
+            parse_request(r#"{"prompt": [1], "max_new": 4, "width": 8, "slo_ms": 250}"#)
+                .unwrap();
+        assert_eq!(w, 8);
+        assert_eq!(slo, Some(250_000.0));
         assert!(parse_request(r#"{"prompt": "x", "max_new": 4}"#).is_err());
         assert!(parse_request(r#"{"prompt": [1], "max_new": 0}"#).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new": 4, "width": 0}"#).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new": 4, "width": 99}"#).is_err());
         assert!(parse_request("garbage").is_err());
     }
 
@@ -138,6 +165,7 @@ mod tests {
             token_done_us: vec![10.0, 20.0],
             prompt_tokens: 1,
             cache: Some(stats),
+            ..Default::default()
         };
         let l = event_line(&Event::Done(m));
         let v = Json::parse(l.trim()).unwrap();

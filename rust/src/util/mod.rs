@@ -8,6 +8,20 @@ pub mod json;
 pub mod rng;
 pub mod stats;
 
+/// Ranking key for descending `total_cmp` sorts over scores/probabilities:
+/// NaN ranks strictly LAST.  Raw `total_cmp` would rank a positive NaN
+/// above +inf — letting a poisoned logit win a beam slot or a NaN router
+/// prob win expert selection; `partial_cmp(..).unwrap()` panicked.  Shared
+/// by beam selection (driver + lifecycle scheduler) and router top-k so
+/// they can never disagree on NaN handling.
+pub fn rank_key(v: f32) -> f32 {
+    if v.is_nan() {
+        f32::NEG_INFINITY
+    } else {
+        v
+    }
+}
+
 /// Round `n` up to the nearest value in `buckets` (ascending).  Returns the
 /// largest bucket if `n` exceeds all of them (callers must then split).
 pub fn round_up_bucket(n: usize, buckets: &[usize]) -> usize {

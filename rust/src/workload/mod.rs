@@ -237,6 +237,40 @@ impl DriftingExpertTrace {
     }
 }
 
+/// Open-loop Poisson arrival process in virtual time — the stand-in for
+/// production request traffic driving the lifecycle scheduler
+/// ([`crate::server::lifecycle`]): arrivals are independent of service
+/// completions, so queueing delay under load is actually measured instead
+/// of being hidden by a closed loop.  Deterministic per seed.
+pub struct PoissonArrivals {
+    /// Mean arrival rate (requests per virtual second).
+    rate_per_s: f64,
+    t_us: f64,
+    rng: Rng,
+}
+
+impl PoissonArrivals {
+    pub fn new(rate_per_s: f64, seed: u64) -> PoissonArrivals {
+        assert!(rate_per_s > 0.0, "arrival rate must be positive");
+        PoissonArrivals { rate_per_s, t_us: 0.0, rng: Rng::new(seed ^ 0xA221) }
+    }
+
+    /// Next absolute arrival time (virtual µs); exponential inter-arrival
+    /// gaps with mean `1e6 / rate_per_s`.
+    pub fn next_arrival_us(&mut self) -> f64 {
+        // Inverse-CDF; f64() is in [0, 1), so 1 - u is in (0, 1] and the
+        // log never sees 0.
+        let u = self.rng.f64();
+        self.t_us += -(1.0 - u).ln() / self.rate_per_s * 1e6;
+        self.t_us
+    }
+
+    /// The first `n` arrival times.
+    pub fn times_us(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_arrival_us()).collect()
+    }
+}
+
 /// The paper's scenario (a) grid: input {32,64,128,256} x output
 /// {64,128,256,512}, minus the (256,512) cell = 15 configurations.
 pub fn scenario_a_grid() -> Vec<(usize, usize)> {
@@ -294,6 +328,25 @@ mod tests {
     #[test]
     fn grid_is_15() {
         assert_eq!(scenario_a_grid().len(), 15);
+    }
+
+    #[test]
+    fn poisson_arrivals_monotone_and_mean_matches_rate() {
+        let mut p = PoissonArrivals::new(50.0, 7); // 50 req/s => 20 ms mean gap
+        let times = p.times_us(4000);
+        assert!(times.windows(2).all(|w| w[1] > w[0]), "arrivals must be increasing");
+        let mean_gap =
+            times.last().unwrap() / times.len() as f64;
+        assert!((mean_gap - 20_000.0).abs() < 1_500.0, "mean gap {mean_gap}");
+    }
+
+    #[test]
+    fn poisson_arrivals_deterministic_per_seed() {
+        let mut a = PoissonArrivals::new(10.0, 3);
+        let mut b = PoissonArrivals::new(10.0, 3);
+        assert_eq!(a.times_us(50), b.times_us(50));
+        let mut c = PoissonArrivals::new(10.0, 4);
+        assert_ne!(a.times_us(50), c.times_us(50));
     }
 
     #[test]

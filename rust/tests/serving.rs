@@ -1,0 +1,414 @@
+//! Integration tests for the request-lifecycle scheduler
+//! (`server::lifecycle`): chunked prefill, admission policies, the KV
+//! budget, beam groups in the batch loop, and shutdown semantics.
+//!
+//! Most tests drive the scheduler through the artifact-free
+//! [`SimBackend`] in pure virtual time — fully deterministic, no PJRT
+//! needed.  The engine-level parity tests at the bottom additionally need
+//! the build-time artifacts and skip gracefully without them, like their
+//! siblings in `tests/engine.rs`.
+
+use fiddler::config::serving::{AdmissionKind, ServingConfig};
+use fiddler::metrics::GenMetrics;
+use fiddler::server::sim::SimBackend;
+use fiddler::server::{collect, serve_lifecycle, Request, ServeBackend, ServerHandle};
+use fiddler::util::stats::percentile;
+use std::sync::mpsc::channel;
+
+/// Request spec for the direct-drive helper.
+struct Req {
+    prompt: Vec<u32>,
+    max_new: usize,
+    width: usize,
+    slo_us: Option<f64>,
+    arrive_at_us: Option<f64>,
+}
+
+impl Req {
+    fn new(prompt: Vec<u32>, max_new: usize) -> Req {
+        Req { prompt, max_new, width: 1, slo_us: None, arrive_at_us: None }
+    }
+}
+
+/// Run the lifecycle scheduler synchronously over a pre-loaded request
+/// sequence plus a shutdown sentinel at `shutdown_at_us` (defaults to the
+/// far future, i.e. "after all work drains"), in pure virtual time.
+/// Returns the backend (for cache-state assertions) and each request's
+/// collected outcome.
+#[allow(clippy::type_complexity)]
+fn run_sim(
+    serving: ServingConfig,
+    reqs: Vec<Req>,
+    shutdown_at_us: Option<f64>,
+) -> (SimBackend, Vec<anyhow::Result<(Vec<u32>, GenMetrics)>>) {
+    let (tx, rx) = channel();
+    let receivers: Vec<_> = reqs
+        .into_iter()
+        .map(|r| {
+            let (etx, erx) = channel();
+            tx.send(Request {
+                prompt: r.prompt,
+                max_new: r.max_new,
+                width: r.width,
+                slo_us: r.slo_us,
+                arrive_at_us: r.arrive_at_us,
+                stream: etx,
+                shutdown: false,
+            })
+            .unwrap();
+            erx
+        })
+        .collect();
+    let mut sentinel = Request::shutdown_sentinel();
+    sentinel.arrive_at_us = Some(shutdown_at_us.unwrap_or(1e15));
+    tx.send(sentinel).unwrap();
+    // NOTE: tx stays alive until the loop returns — dropping it early
+    // would read as disconnection (= shutdown) in the very first drain.
+    let mut backend = SimBackend::new(serving);
+    serve_lifecycle(&mut backend, rx).unwrap();
+    drop(tx);
+    let results = receivers.iter().map(collect).collect();
+    (backend, results)
+}
+
+fn long_prompt(n: usize) -> Vec<u32> {
+    (0..n).map(|i| ((i * 7 + 3) % 512) as u32).collect()
+}
+
+/// Acceptance: with one long-prompt request admitted mid-stream, chunked
+/// prefill strictly lowers the p99 inter-token latency of the already-
+/// running sequence, and token outputs are identical in both modes.
+#[test]
+fn chunked_prefill_bounds_itl_with_identical_tokens() {
+    let run = |prefill_chunk: usize| {
+        let serving = ServingConfig { prefill_chunk, max_batch: 4, ..Default::default() };
+        let reqs = vec![
+            Req::new((1..=8).collect(), 40), // the running sequence
+            Req::new(long_prompt(400), 2),   // the mid-stream long prefill
+        ];
+        let (_, mut results) = run_sim(serving, reqs, None);
+        let b = results.pop().unwrap().unwrap();
+        let a = results.pop().unwrap().unwrap();
+        (a, b)
+    };
+
+    let (a_mono, b_mono) = run(0);
+    let (a_chunk, b_chunk) = run(64);
+
+    // Token outputs are identical in both modes, for both requests.
+    assert_eq!(a_mono.0, a_chunk.0, "chunking changed the running sequence's tokens");
+    assert_eq!(b_mono.0, b_chunk.0, "chunking changed the long request's tokens");
+    assert_eq!(a_mono.0.len(), 40);
+    assert_eq!(b_mono.0.len(), 2);
+
+    // The running sequence's tail latency is strictly better chunked: the
+    // monolithic 400-token prefill stalls it for one whole prompt, the
+    // chunked one for at most 64 tokens per iteration.
+    let p99_mono = percentile(&a_mono.1.itl_us(), 99.0);
+    let p99_chunk = percentile(&a_chunk.1.itl_us(), 99.0);
+    assert!(
+        p99_chunk < p99_mono,
+        "chunked p99 ITL {p99_chunk} not below monolithic {p99_mono}"
+    );
+    // And the bound is structural: no chunked-mode gap may contain a
+    // whole-prompt prefill.
+    let max_chunk_gap = a_chunk.1.itl_us().into_iter().fold(0.0f64, f64::max);
+    assert!(
+        max_chunk_gap < p99_mono,
+        "worst chunked gap {max_chunk_gap} >= monolithic p99 {p99_mono}"
+    );
+}
+
+/// Shutdown semantics: queued-but-never-admitted requests receive a
+/// terminal event (their receivers never hang) while in-flight sequences
+/// drain to completion.  Timed deterministically via virtual arrivals.
+#[test]
+fn shutdown_fails_queued_and_drains_inflight() {
+    let serving = ServingConfig { max_batch: 1, ..Default::default() };
+    let reqs = vec![
+        Req::new((1..=4).collect(), 50), // in flight at shutdown
+        Req {
+            arrive_at_us: Some(100_000.0), // queued behind A (max_batch 1)
+            ..Req::new((5..=9).collect(), 4)
+        },
+    ];
+    let (_, results) = run_sim(serving, reqs, Some(200_000.0));
+
+    let a = results[0].as_ref().expect("in-flight request must drain");
+    assert_eq!(a.0.len(), 50, "drain truncated the in-flight sequence");
+    let b_err = results[1].as_ref().expect_err("queued request must get a terminal event");
+    assert!(
+        b_err.to_string().contains("shutting down"),
+        "unexpected terminal event: {b_err}"
+    );
+}
+
+/// Beam groups ride the shared continuous-batching loop: a width-4 group
+/// decodes alongside ordinary traffic and produces exactly the tokens it
+/// produces when served alone.
+#[test]
+fn beam_group_unchanged_by_concurrent_traffic() {
+    let beam_req = || Req { width: 4, ..Req::new((10..22).collect(), 6) };
+    let solo = {
+        let (_, results) = run_sim(ServingConfig::default(), vec![beam_req()], None);
+        results[0].as_ref().unwrap().clone()
+    };
+    assert_eq!(solo.0.len(), 6);
+
+    let (_, results) = run_sim(
+        ServingConfig { max_batch: 8, ..Default::default() },
+        vec![beam_req(), Req::new((1..=6).collect(), 10), Req::new((7..=9).collect(), 12)],
+        None,
+    );
+    let mixed = results[0].as_ref().unwrap();
+    assert_eq!(solo.0, mixed.0, "concurrent traffic changed the beam result");
+    // The ordinary requests also match their solo runs.
+    let (_, solo_ord) =
+        run_sim(ServingConfig::default(), vec![Req::new((1..=6).collect(), 10)], None);
+    assert_eq!(solo_ord[0].as_ref().unwrap().0, results[1].as_ref().unwrap().0);
+}
+
+/// KV budget: a request beyond the pool borrows expert slots (shrinking
+/// the cache), a second one queues until the first releases, slots return
+/// afterwards, and an outright-infeasible request is rejected.
+#[test]
+fn kv_budget_queues_borrows_and_rejects() {
+    let serving = ServingConfig { kv_budget_mb: 100, max_batch: 8, ..Default::default() };
+    let mut backend_probe = SimBackend::new(serving.clone());
+    // Leave exactly one borrowable slot.
+    for i in 0..7 {
+        backend_probe.expert_cache_mut().pin((1, i));
+    }
+    // 2008 tokens x 128 KiB = ~251 MiB >> the 100 MiB pool: admission
+    // must borrow the unpinned expert slot (~336 MiB) to cover it.
+    let big = || Req::new(long_prompt(2000), 8);
+    let giant = Req::new(long_prompt(4000), 96); // 512 MiB: never feasible
+
+    let (tx, rx) = channel();
+    let mk_rx = |r: Req| {
+        let (etx, erx) = channel();
+        tx.send(Request {
+            prompt: r.prompt,
+            max_new: r.max_new,
+            width: r.width,
+            slo_us: r.slo_us,
+            arrive_at_us: r.arrive_at_us,
+            stream: etx,
+            shutdown: false,
+        })
+        .unwrap();
+        erx
+    };
+    let rx_a = mk_rx(big());
+    let rx_b = mk_rx(big());
+    let rx_giant = mk_rx(giant);
+    let mut sentinel = Request::shutdown_sentinel();
+    sentinel.arrive_at_us = Some(1e15);
+    tx.send(sentinel).unwrap();
+
+    serve_lifecycle(&mut backend_probe, rx).unwrap();
+    drop(tx);
+
+    let a = collect(&rx_a).expect("first big request serves");
+    let b = collect(&rx_b).expect("second big request serves after the first releases");
+    assert_eq!(a.0.len(), 8);
+    assert_eq!(b.0.len(), 8);
+    assert_eq!(a.1.queue_delay_us(), 0.0, "first request admits immediately");
+    assert!(
+        b.1.queue_delay_us() > 0.0,
+        "second request must wait for the first's KV reservation"
+    );
+    assert!(
+        b.1.admitted_us >= a.1.token_done_us.last().copied().unwrap() - 1e-6,
+        "B admitted before A finished"
+    );
+    // Borrowed slots were returned once the reservations drained.
+    assert_eq!(backend_probe.expert_cache().capacity(), 8);
+    assert_eq!(backend_probe.expert_cache().pinned_count(), 7);
+
+    let giant_err = collect(&rx_giant).expect_err("infeasible request must be rejected");
+    assert!(giant_err.to_string().contains("KV footprint"), "{giant_err}");
+}
+
+/// Admission policies reorder the queue as specified: SJF by prompt
+/// length, SLO by earliest virtual deadline, FCFS by arrival.
+#[test]
+fn admission_policies_order_the_queue() {
+    let admitted_order = |admission: AdmissionKind, slo: [Option<f64>; 2]| {
+        let serving = ServingConfig { admission, max_batch: 1, ..Default::default() };
+        let reqs = vec![
+            Req { slo_us: slo[0], ..Req::new(long_prompt(64), 3) }, // long, arrives first
+            Req { slo_us: slo[1], ..Req::new((1..=4).collect(), 3) }, // short, arrives second
+        ];
+        let (_, results) = run_sim(serving, reqs, None);
+        let a = results[0].as_ref().unwrap().1.clone();
+        let b = results[1].as_ref().unwrap().1.clone();
+        (a, b)
+    };
+
+    let (a, b) = admitted_order(AdmissionKind::Fcfs, [None, None]);
+    assert!(a.admitted_us < b.admitted_us, "FCFS must admit the earlier arrival first");
+    assert_eq!(a.queue_delay_us(), 0.0);
+    assert!(b.queue_delay_us() > 0.0, "the blocked request's queue delay must be visible");
+
+    let (a, b) = admitted_order(AdmissionKind::ShortestFirst, [None, None]);
+    assert!(b.admitted_us < a.admitted_us, "SJF must admit the short prompt first");
+
+    // Deadlines invert the FCFS order when the later arrival is tighter.
+    let (a, b) =
+        admitted_order(AdmissionKind::Deadline, [Some(10_000_000.0), Some(100_000.0)]);
+    assert!(b.admitted_us < a.admitted_us, "SLO must admit the tighter deadline first");
+}
+
+/// Backfill: a wide beam group at the head of the queue must not starve
+/// narrow requests behind it that fit the free slots.
+#[test]
+fn admission_backfills_past_wide_group() {
+    let serving = ServingConfig { max_batch: 4, ..Default::default() };
+    let reqs = vec![
+        Req::new((1..=4).collect(), 30),                     // A: w1, long-running
+        Req { width: 4, ..Req::new((10..18).collect(), 4) }, // B: w4, can't fit while A runs
+        Req::new((5..=8).collect(), 4),                      // C: w1, fits alongside A
+    ];
+    let (_, results) = run_sim(serving, reqs, None);
+    let a = results[0].as_ref().unwrap().1.clone();
+    let b = results[1].as_ref().unwrap().1.clone();
+    let c = results[2].as_ref().unwrap().1.clone();
+    let a_done = *a.token_done_us.last().unwrap();
+    // C is admitted while A still runs, even though B arrived earlier and
+    // is still waiting for 4 free slots.
+    assert!(c.admitted_us < b.admitted_us, "backfill must admit C past the wide B");
+    assert!(c.admitted_us < a_done, "C must run alongside A, not after");
+    // B gets its 4 slots only once A (the last narrow holdout) retires.
+    assert!(b.admitted_us >= a_done - 1e-6, "B admitted before slots freed");
+    assert_eq!(results[1].as_ref().unwrap().0.len(), 4, "B still completes");
+}
+
+/// Per-request cache-stat deltas: each request's metrics count only its
+/// own window, not the engine's cumulative history.
+#[test]
+fn cache_stats_are_per_request_deltas() {
+    let serving = ServingConfig { max_batch: 1, ..Default::default() };
+    // The sim does one expert-cache access per prefill token and one per
+    // decode step: prompt + (max_new - 1) lookups per request.
+    let reqs = vec![Req::new((1..=6).collect(), 4), Req::new((7..=12).collect(), 4)];
+    let (_, results) = run_sim(serving, reqs, None);
+    for r in &results {
+        let (_, m) = r.as_ref().unwrap();
+        let c = m.cache.as_ref().expect("cache stats missing");
+        assert_eq!(
+            c.lookups(),
+            6 + 3,
+            "per-request delta must cover exactly this request's window"
+        );
+    }
+}
+
+/// The generic server handle runs a SimBackend worker thread end to end
+/// (same spawn/submit/shutdown surface as the engine-backed server).
+#[test]
+fn sim_backend_serves_through_server_handle() {
+    let handle = ServerHandle::spawn(move || anyhow::Ok(SimBackend::new(ServingConfig::default())));
+    let rx1 = handle.submit((1..=8).collect(), 5);
+    let rx2 = handle.submit_beam((1..=8).collect(), 5, 4);
+    let (t1, m1) = collect(&rx1).unwrap();
+    let (t2, _) = collect(&rx2).unwrap();
+    assert_eq!(t1.len(), 5);
+    assert_eq!(t2.len(), 5);
+    assert!(m1.tokens_per_s() > 0.0);
+    handle.shutdown().unwrap();
+}
+
+/// Rejections at enqueue (empty prompt, width beyond the batch ceiling)
+/// terminate the stream instead of hanging it.
+#[test]
+fn invalid_requests_get_terminal_events() {
+    let (_, results) = run_sim(
+        ServingConfig { max_batch: 4, ..Default::default() },
+        vec![Req::new(vec![], 4), Req { width: 9, ..Req::new(vec![1, 2], 4) }],
+        None,
+    );
+    assert!(results[0].as_ref().unwrap_err().to_string().contains("empty prompt"));
+    assert!(results[1].as_ref().unwrap_err().to_string().contains("width"));
+}
+
+// --- engine-level parity (needs `make artifacts`, skips gracefully) ---
+
+fn artifacts_available() -> bool {
+    fiddler::figures::artifact_dir("mixtral-tiny").join("weights_manifest.json").exists()
+}
+
+fn prompt(len: usize, seed: u64) -> Vec<u32> {
+    fiddler::workload::WorkloadGen::new(fiddler::workload::Dataset::sharegpt(), 512, seed)
+        .prompt(len)
+}
+
+/// Acceptance: a beam request served through `serve_loop`, concurrently
+/// with an ordinary decode request, returns the same best-beam tokens as
+/// the standalone `beam_search` driver on the golden artifacts.
+#[test]
+fn server_beam_matches_standalone_driver() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let hw = fiddler::config::HardwareConfig::env1();
+    let p = prompt(12, 91);
+    let mut engine =
+        fiddler::figures::make_engine("mixtral-tiny", &hw, fiddler::config::serving::Policy::Fiddler, 0)
+            .unwrap();
+    let standalone = engine.beam_search(&p, 4, 6).unwrap();
+
+    let hw2 = hw.clone();
+    let handle = ServerHandle::spawn(move || {
+        fiddler::figures::make_engine(
+            "mixtral-tiny",
+            &hw2,
+            fiddler::config::serving::Policy::Fiddler,
+            0,
+        )
+    });
+    let rx_beam = handle.submit_beam(p.clone(), 6, 4);
+    let rx_plain = handle.submit(prompt(8, 92), 6);
+    let (beam_tokens, _) = collect(&rx_beam).unwrap();
+    let (plain_tokens, _) = collect(&rx_plain).unwrap();
+    handle.shutdown().unwrap();
+
+    assert_eq!(beam_tokens, standalone.tokens, "served beam diverged from the driver");
+    assert_eq!(plain_tokens.len(), 6);
+}
+
+/// Chunked prefill on the real engine: a chunk covering the whole prompt
+/// takes the monolithic code path (bitwise identical), and sub-prompt
+/// chunks preserve the greedy tokens (the continuation chunks run the
+/// decode attention executable — same math, different kernel).
+#[test]
+fn engine_chunked_prefill_preserves_tokens() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let hw = fiddler::config::HardwareConfig::env1();
+    let p = prompt(24, 93);
+    let serve = |prefill_chunk: usize| {
+        let hw2 = hw.clone();
+        let p2 = p.clone();
+        let handle = ServerHandle::spawn(move || {
+            let serving = ServingConfig { prefill_chunk, ..Default::default() };
+            fiddler::coordinator::Engine::new(
+                fiddler::figures::artifact_dir("mixtral-tiny"),
+                &hw2,
+                serving,
+            )
+        });
+        let rx = handle.submit(p2, 6);
+        let out = collect(&rx).unwrap();
+        handle.shutdown().unwrap();
+        out
+    };
+    let mono = serve(0);
+    let whole = serve(64); // chunk >= prompt: same code path as monolithic
+    let chunked = serve(8);
+    assert_eq!(mono.0, whole.0);
+    assert_eq!(mono.0, chunked.0, "chunked prefill changed the greedy tokens");
+}
