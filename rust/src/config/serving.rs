@@ -190,6 +190,13 @@ pub struct ServingConfig {
     /// Default TTFT service-level objective (virtual ms) used to derive a
     /// deadline for requests that carry none (admission `slo` mode).
     pub slo_ttft_ms: f64,
+    /// Lookahead window (in layers) of the pipelined layer executor
+    /// ([`crate::pipeline`]): while layer `L` runs, asynchronous PCIe
+    /// prefetches are issued for the experts predicted at layers
+    /// `L+1..L+W`, and still-in-flight transfers may win Algorithm 1 over
+    /// the demand paths.  0 (default) = the serial legacy layer loop,
+    /// bit-for-bit.
+    pub pipeline_lookahead: usize,
 }
 
 impl Default for ServingConfig {
@@ -209,6 +216,7 @@ impl Default for ServingConfig {
             admission: AdmissionKind::Fcfs,
             kv_budget_mb: 0,
             slo_ttft_ms: 5_000.0,
+            pipeline_lookahead: 0,
         }
     }
 }
@@ -246,6 +254,7 @@ impl ServingConfig {
         c.kv_budget_mb = args.usize_or("kv-budget-mb", c.kv_budget_mb);
         c.slo_ttft_ms = args.f64_or("slo-ttft-ms", c.slo_ttft_ms);
         anyhow::ensure!(c.slo_ttft_ms > 0.0, "--slo-ttft-ms must be positive");
+        c.pipeline_lookahead = args.usize_or("pipeline-lookahead", c.pipeline_lookahead);
         Ok(c)
     }
 
@@ -341,6 +350,17 @@ mod tests {
         let bad =
             Args::parse("--slo-ttft-ms 0".split_whitespace().map(String::from));
         assert!(ServingConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn pipeline_lookahead_parses_and_defaults_to_serial() {
+        assert_eq!(
+            ServingConfig::default().pipeline_lookahead,
+            0,
+            "lookahead must default to the serial legacy loop"
+        );
+        let a = Args::parse("--pipeline-lookahead 2".split_whitespace().map(String::from));
+        assert_eq!(ServingConfig::from_args(&a).unwrap().pipeline_lookahead, 2);
     }
 
     #[test]

@@ -90,7 +90,7 @@ impl Engine {
         let policy = make_policy(&serving, &runner.cfg);
         // serving.threads sizes the parallel expert executor AND selects
         // the multi-core latency calibration Algorithm 1 decides against.
-        let cx = ExecContext::with_threads(
+        let mut cx = ExecContext::with_threads(
             policy,
             hw,
             &runner.cfg,
@@ -98,6 +98,17 @@ impl Engine {
             serving.seed,
             serving.threads,
         );
+        // serving.pipeline_lookahead opens the pipelined layer executor's
+        // cross-layer prefetch window (0 = serial legacy loop): transition
+        // predictions feed decode/prefill lookahead, observed routing
+        // feeds chunked-prefill continuation.
+        if serving.pipeline_lookahead > 0 {
+            cx.enable_pipeline(crate::pipeline::PipelineState::new(
+                serving.pipeline_lookahead,
+                runner.cfg.top_k.max(2),
+                Some(load_transitions(&runner.cfg)),
+            ));
+        }
         let rng = Rng::new(serving.seed ^ 0xC0FFEE);
         Ok(Engine { runner, cx, serving, rng })
     }

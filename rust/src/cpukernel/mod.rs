@@ -197,11 +197,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
-        let n = shape.iter().product();
-        Tensor {
-            shape,
-            data: (0..n).map(|_| (rng.normal() as f32) * scale).collect(),
-        }
+        Tensor::randn(rng, shape, scale)
     }
 
     #[test]

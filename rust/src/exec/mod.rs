@@ -6,11 +6,15 @@
 //! This module closes that gap:
 //!
 //! * [`pool::ExecutorPool`] — persistent CPU workers executing all
-//!   CPU-planned experts of a layer concurrently;
+//!   CPU-planned experts of a layer concurrently, with caller-side work
+//!   stealing ([`ExecutorPool::try_run_one`] /
+//!   [`PendingBatch::wait_stealing`]): at the layer join the engine thread
+//!   drains still-queued chunks instead of idling behind the workers;
 //! * [`partition_rows`] — intra-expert row partitioning, so one large-`s`
 //!   prefill expert also spreads across cores;
-//! * [`run_expert_chunks`] / [`run_cpu_experts`] — the dispatch + ordered
-//!   merge the MoE layer loop (and the benches/tests) drive.
+//! * [`run_expert_chunks`] / [`run_cpu_experts`] — the
+//!   longest-chunk-first (per-expert priority) dispatch + ordered merge
+//!   the pipelined layer executor (and the benches/tests) drive.
 //!
 //! Determinism contract: for fixed inputs the merged outputs are
 //! **bit-identical for every thread count and every chunking**.  Two
@@ -92,11 +96,25 @@ pub fn partition_rows(rows: usize, threads: usize) -> Vec<(usize, usize)> {
 }
 
 /// Dispatch expert chunks to the pool.  Non-blocking on a threaded pool:
-/// the caller overlaps GPU work and joins via [`PendingBatch::wait`].
+/// the caller overlaps GPU work and joins via [`PendingBatch::wait`] (or
+/// [`PendingBatch::wait_stealing`], which drains leftover chunks on the
+/// calling thread).
+///
+/// Chunks enter the queue with per-expert priority: longest first (LPT
+/// scheduling), deterministically tie-broken, so one oversized prefill
+/// expert starts immediately instead of queueing behind its siblings and
+/// serializing the layer join.  Execution order never affects the outputs
+/// — the merge is positional and the kernel chunk-invariant.
 pub fn run_expert_chunks(
     pool: &ExecutorPool,
-    chunks: Vec<ExpertChunk>,
+    mut chunks: Vec<ExpertChunk>,
 ) -> PendingBatch<ChunkOut> {
+    chunks.sort_by(|a, b| {
+        b.x.shape[0]
+            .cmp(&a.x.shape[0])
+            .then(a.expert.cmp(&b.expert))
+            .then(a.row0.cmp(&b.row0))
+    });
     let jobs: Vec<_> = chunks
         .into_iter()
         .map(|c| {
@@ -135,7 +153,7 @@ pub fn run_cpu_experts(pool: &ExecutorPool, tasks: &[CpuExpertTask]) -> Vec<Tens
             });
         }
     }
-    for c in run_expert_chunks(pool, chunks).wait() {
+    for c in run_expert_chunks(pool, chunks).wait_stealing(pool) {
         let h = c.out.shape[1];
         outputs[c.expert].data[c.row0 * h..c.row0 * h + c.out.data.len()]
             .copy_from_slice(&c.out.data);
@@ -151,11 +169,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn rand_tensor(rng: &mut Rng, shape: Vec<usize>, scale: f32) -> Tensor {
-        let n = shape.iter().product();
-        Tensor {
-            shape,
-            data: (0..n).map(|_| (rng.normal() as f32) * scale).collect(),
-        }
+        Tensor::randn(rng, shape, scale)
     }
 
     fn rand_task(rng: &mut Rng, expert: usize, s: usize, h: usize, f: usize) -> CpuExpertTask {
@@ -258,6 +272,35 @@ mod tests {
             let got = run_cpu_experts(&pool, &tasks);
             assert_eq!(bits(&got[0]), bits(&want), "threads={threads}");
         }
+    }
+
+    #[test]
+    fn chunks_dispatch_longest_first() {
+        // The inline pool executes submission order, and wait() returns
+        // results in that same order — so the result sequence reveals the
+        // dispatch priority: descending rows, ties by (expert, row0).
+        let mut rng = Rng::new(3);
+        let h = 8;
+        let sizes = [3usize, 90, 17, 90, 1];
+        let chunks: Vec<ExpertChunk> = sizes
+            .iter()
+            .enumerate()
+            .map(|(e, &s)| ExpertChunk {
+                expert: e,
+                row0: 0,
+                x: rand_tensor(&mut rng, vec![s, h], 0.1),
+                w1: Arc::new(rand_tensor(&mut rng, vec![h, h], 0.1)),
+                w3: Arc::new(rand_tensor(&mut rng, vec![h, h], 0.1)),
+                w2: Arc::new(rand_tensor(&mut rng, vec![h, h], 0.1)),
+            })
+            .collect();
+        let pool = ExecutorPool::new(1);
+        let order: Vec<usize> = run_expert_chunks(&pool, chunks)
+            .wait()
+            .iter()
+            .map(|c| c.expert)
+            .collect();
+        assert_eq!(order, vec![1, 3, 2, 0, 4], "LPT order with deterministic ties");
     }
 
     #[test]

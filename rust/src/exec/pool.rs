@@ -75,6 +75,26 @@ impl ExecutorPool {
         self.workers.is_empty()
     }
 
+    /// Work stealing: pop one queued job and run it on the calling
+    /// thread.  Returns false when the queue is empty (always, for the
+    /// inline pool — `submit` leaves it nothing to steal).  A stolen job
+    /// that panics is contained exactly like on a worker: the panic
+    /// surfaces at its batch's `wait()` through the dropped result sender,
+    /// never on this thread.
+    pub fn try_run_one(&self) -> bool {
+        let job = {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.pop_front()
+        };
+        match job {
+            Some(j) => {
+                let _ = catch_unwind(AssertUnwindSafe(j));
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Submit a batch of independent jobs.  Non-blocking when the pool has
     /// workers; the returned handle yields results in submission order.
     pub fn submit<T, F>(&self, jobs: Vec<F>) -> PendingBatch<T>
@@ -152,6 +172,20 @@ impl<T> PendingBatch<T> {
         self.expected == 0
     }
 
+    /// [`PendingBatch::wait`], with the calling thread first *stealing*
+    /// still-queued jobs and running them itself.  Once the submitter has
+    /// finished its own overlapped (GPU) work, any chunk left in the queue
+    /// would otherwise wait behind the workers' in-progress jobs — with
+    /// one oversized prefill expert, exactly the serialization that used
+    /// to stall the layer join.  Steals may execute jobs of other
+    /// batches; their results flow to their own channels.  Determinism is
+    /// unaffected: who runs a job never changes its output, and results
+    /// are still merged by submission index.
+    pub fn wait_stealing(self, pool: &ExecutorPool) -> Vec<T> {
+        while pool.try_run_one() {}
+        self.wait()
+    }
+
     /// Block until every job of the batch has finished; panics if any job
     /// panicked (the layer must not silently drop an expert's output).
     pub fn wait(self) -> Vec<T> {
@@ -219,6 +253,60 @@ mod tests {
         let pool = ExecutorPool::new(2);
         let jobs: Vec<fn() -> usize> = Vec::new();
         assert!(pool.submit(jobs).wait().is_empty());
+    }
+
+    #[test]
+    fn stealing_wait_matches_plain_wait() {
+        // Same jobs, same ordered results — whether the caller steals or
+        // idles at the join.
+        let pool = ExecutorPool::new(3);
+        let mk = || (0..40usize).map(|i| move || i * 3).collect::<Vec<_>>();
+        let waited = pool.submit(mk()).wait();
+        let stolen = pool.submit(mk()).wait_stealing(&pool);
+        assert_eq!(waited, stolen);
+        assert_eq!(stolen[13], 39);
+    }
+
+    #[test]
+    fn inline_pool_has_nothing_to_steal() {
+        let pool = ExecutorPool::new(1);
+        assert!(!pool.try_run_one());
+        let out = pool.submit(vec![|| 7]).wait_stealing(&pool);
+        assert_eq!(out, vec![7]);
+    }
+
+    #[test]
+    fn caller_steals_queued_jobs() {
+        // Both workers are parked inside long jobs; newly queued jobs can
+        // then only run if the submitter steals them — which is exactly
+        // what wait_stealing's drain does at the layer join.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::{Arc, Barrier};
+        let pool = ExecutorPool::new(2);
+        let entered = Arc::new(AtomicUsize::new(0));
+        let release = Arc::new(Barrier::new(3));
+        let blockers: Vec<_> = (0..2)
+            .map(|_| {
+                let entered = Arc::clone(&entered);
+                let release = Arc::clone(&release);
+                move || {
+                    entered.fetch_add(1, Ordering::SeqCst);
+                    release.wait();
+                    0usize
+                }
+            })
+            .collect();
+        let blocked = pool.submit(blockers);
+        // Wait until both workers are provably inside the blockers, so the
+        // steal below cannot pick one up and deadlock on the barrier.
+        while entered.load(Ordering::SeqCst) < 2 {
+            std::thread::yield_now();
+        }
+        let stealable = pool.submit((1..=4usize).map(|i| move || i).collect::<Vec<_>>());
+        while pool.try_run_one() {}
+        release.wait(); // let the workers finish
+        assert_eq!(blocked.wait(), vec![0, 0]);
+        assert_eq!(stealable.wait(), vec![1, 2, 3, 4]);
     }
 
     #[test]

@@ -58,6 +58,11 @@ struct Entry {
     ready_us: f64,
     /// Pinned entries are never evicted (initialization-time placement).
     pinned: bool,
+    /// Tick at which the entry was pinned (0 = never pinned).  Placement
+    /// pins in descending popularity order, so a HIGHER pin tick means a
+    /// less popular expert — the release order of
+    /// [`ExpertCache::release_pins`].  Unlike `last_use`, never refreshed.
+    pin_tick: u64,
     /// Inserted speculatively; the first hit counts as a prefetch hit.
     prefetched: bool,
 }
@@ -234,6 +239,84 @@ impl ExpertCache {
         self.entries.get(&id).map(|e| e.ready_us <= now_us).unwrap_or(false)
     }
 
+    /// Transfer-completion timestamp of a resident entry (0.0 for pinned
+    /// entries and synchronous fetches); `None` when the expert occupies
+    /// no slot at all.  The pipelined layer executor uses this to price
+    /// "wait out the in-flight prefetch" against the demand paths.
+    pub fn ready_at(&self, id: ExpertId) -> Option<f64> {
+        self.entries.get(&id).map(|e| e.ready_us)
+    }
+
+    /// Virtual time at which the serialized PCIe lane can start the next
+    /// speculative transfer — the pipeline's issuance gate projects each
+    /// candidate prefetch's completion from this.
+    pub fn lane_free_at(&self) -> f64 {
+        self.pcie_free_us
+    }
+
+    /// Reverse the accounting of a demand transfer the pipeline decided
+    /// not to perform: a dynamic policy's plan-time `admit` promoted an
+    /// in-flight entry (charging a second transfer), but the in-flight
+    /// override supersedes it — the expert waits out the original
+    /// prefetch instead.  Un-charges one transfer, restores the entry's
+    /// transfer-completion time and speculative provenance (so its use
+    /// counts as a prefetch hit).  No-op when the expert occupies no slot.
+    pub fn cancel_demand_transfer(&mut self, id: ExpertId, ready_us: f64) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.ready_us = ready_us;
+            e.prefetched = true;
+            self.stats.transfers_in = self.stats.transfers_in.saturating_sub(1);
+            self.stats.bytes_in = self.stats.bytes_in.saturating_sub(self.expert_bytes);
+        }
+    }
+
+    /// Reclassify the plan-time miss of an in-flight entry the pipeline
+    /// decided to wait for: the provisional miss becomes a hit (and a
+    /// prefetch hit while the entry is still speculative), and the
+    /// entry's recency refreshes — the expert IS being served from the
+    /// prefetched weights, just a little later.  Keeps `lookups()`
+    /// invariant.  No-op when the expert occupies no slot.
+    pub fn claim_inflight(&mut self, id: ExpertId) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            self.tick += 1;
+            e.last_use = self.tick;
+            if e.prefetched {
+                e.prefetched = false;
+                self.stats.prefetch_hits += 1;
+            }
+            self.stats.misses = self.stats.misses.saturating_sub(1);
+            self.stats.hits += 1;
+        }
+    }
+
+    /// Unpin up to `k` pinned entries — most recently pinned first (the
+    /// initialization placement pins in descending popularity order, so
+    /// these are the least popular) — converting them into ordinary
+    /// evictable residents.  This is how the pipelined executor carves a
+    /// speculative working set out of a fully pinned cache without
+    /// touching its popular core.  Returns how many pins were released.
+    pub fn release_pins(&mut self, k: usize) -> usize {
+        let mut pinned: Vec<(u64, ExpertId)> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.pinned)
+            .map(|(&id, e)| (e.pin_tick, id))
+            .collect();
+        // Newest pin first — by the pin-time tick, which (unlike
+        // `last_use`) no amount of traffic refreshes, so the popular core
+        // stays protected even on a warm cache.  Ids break (impossible)
+        // tick ties for determinism.
+        pinned.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        let mut freed = 0;
+        for (_, id) in pinned.into_iter().take(k) {
+            if let Some(e) = self.entries.get_mut(&id) {
+                e.pinned = false;
+                freed += 1;
+            }
+        }
+        freed
+    }
+
     pub fn stats(&self) -> &CacheStats {
         &self.stats
     }
@@ -250,7 +333,13 @@ impl ExpertCache {
         self.tick += 1;
         self.entries.insert(
             id,
-            Entry { last_use: self.tick, ready_us: 0.0, pinned: true, prefetched: false },
+            Entry {
+                last_use: self.tick,
+                ready_us: 0.0,
+                pinned: true,
+                pin_tick: self.tick,
+                prefetched: false,
+            },
         );
     }
 
@@ -373,7 +462,7 @@ impl ExpertCache {
         self.tick += 1;
         self.entries.insert(
             id,
-            Entry { last_use: self.tick, ready_us, pinned: false, prefetched },
+            Entry { last_use: self.tick, ready_us, pinned: false, pin_tick: 0, prefetched },
         );
         true
     }
@@ -509,6 +598,86 @@ mod tests {
         assert!(m.prefetch((0, 3), 0.0, 100.0).is_none(), "backlog must cap");
         // Time advances: the lane drains and speculation resumes.
         assert!(m.prefetch((0, 3), 250.0, 100.0).is_some());
+    }
+
+    #[test]
+    fn ready_at_reports_transfer_completion() {
+        let mut m = ExpertCache::with_capacity(4);
+        assert_eq!(m.ready_at((0, 0)), None);
+        m.pin((0, 0));
+        assert_eq!(m.ready_at((0, 0)), Some(0.0));
+        m.prefetch((0, 1), 100.0, 50.0).unwrap();
+        assert_eq!(m.ready_at((0, 1)), Some(150.0));
+        // Demand promotion zeroes the completion time.
+        m.admit((0, 1));
+        assert_eq!(m.ready_at((0, 1)), Some(0.0));
+    }
+
+    #[test]
+    fn cancel_demand_transfer_reverts_admit_over_inflight_prefetch() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.prefetch((0, 0), 0.0, 100.0).unwrap(); // ready at 100, 1 transfer
+        assert!(!m.lookup((0, 0), 10.0)); // plan-time miss
+        m.admit((0, 0)); // policy demand-admits: 2nd transfer, promoted
+        assert_eq!(m.stats().transfers_in, 2);
+        assert!(m.is_ready((0, 0), 10.0));
+        // The pipeline overrides to wait out the prefetch instead: the
+        // demand transfer is taken back entirely.
+        m.cancel_demand_transfer((0, 0), 100.0);
+        assert_eq!(m.stats().transfers_in, 1);
+        assert!(!m.is_ready((0, 0), 10.0), "completion time restored");
+        m.claim_inflight((0, 0));
+        assert_eq!(m.stats().prefetch_hits, 1, "speculative provenance restored");
+        assert_eq!((m.stats().hits, m.stats().misses), (1, 0));
+        // Absent experts are a no-op.
+        m.cancel_demand_transfer((9, 9), 0.0);
+        assert_eq!(m.stats().transfers_in, 1);
+    }
+
+    #[test]
+    fn claim_inflight_reclassifies_the_provisional_miss() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.prefetch((0, 0), 0.0, 100.0).unwrap();
+        assert!(!m.lookup((0, 0), 10.0), "in flight: plan-time miss");
+        assert_eq!((m.stats().hits, m.stats().misses), (0, 1));
+        m.claim_inflight((0, 0));
+        assert_eq!((m.stats().hits, m.stats().misses), (1, 0));
+        assert_eq!(m.stats().prefetch_hits, 1);
+        assert_eq!(m.stats().lookups(), 1, "reclassification, not a new lookup");
+        // The speculative flag is consumed: a later ready-time hit is an
+        // ordinary hit.
+        assert!(m.lookup((0, 0), 200.0));
+        assert_eq!(m.stats().prefetch_hits, 1);
+        // Absent experts are a no-op.
+        m.claim_inflight((9, 9));
+        assert_eq!(m.stats().lookups(), 2);
+    }
+
+    #[test]
+    fn release_pins_frees_newest_pins_first() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.pin((0, 0)); // oldest pin = most popular under placement order
+        m.pin((0, 1));
+        m.pin((0, 2));
+        // Warm cache: the popular pin gets used constantly.  Recency must
+        // NOT make it look like the newest pin — release order follows
+        // pin time, not last use.
+        m.touch((0, 0));
+        m.lookup((0, 0), 0.0);
+        assert_eq!(m.release_pins(2), 2);
+        assert_eq!(m.pinned_count(), 1);
+        assert!(m.is_pinned((0, 0)), "the popular core must stay pinned");
+        assert!(m.is_resident((0, 1)) && !m.is_pinned((0, 1)));
+        assert!(m.is_resident((0, 2)) && !m.is_pinned((0, 2)));
+        // Released entries are now ordinary eviction victims.
+        m.fetch((1, 0));
+        m.fetch((1, 1)); // cache full: next insert must evict an unpinned one
+        m.fetch((1, 2));
+        assert!(m.is_pinned((0, 0)));
+        assert_eq!(m.resident_count(), 4);
+        // Releasing more than exist is clamped.
+        assert_eq!(m.release_pins(10), 1);
+        assert_eq!(m.pinned_count(), 0);
     }
 
     #[test]

@@ -14,6 +14,7 @@
 
 use super::LatencyModel;
 use crate::config::HardwareConfig;
+use crate::exec::ExecutorPool;
 use crate::util::rng::Rng;
 use crate::util::stats::linear_fit;
 
@@ -114,6 +115,88 @@ pub fn calibrate_multicore(hw: &HardwareConfig, threads: usize, seed: u64) -> La
     fit(&cpu, &gpu, hw.weight_transfer_us())
 }
 
+/// Time the host expert kernel through a real [`ExecutorPool`] at each
+/// input size — the *measured* (not modeled) multicore calibration
+/// source.  The timed region is exactly the engine's layer-join
+/// discipline: priority dispatch, chunked rows, work-stealing join.
+/// Synthetic weights (`hidden x ffn`), so no artifacts are needed.
+pub fn measure_pool_expert(
+    pool: &ExecutorPool,
+    sizes: &[usize],
+    repeats: usize,
+    hidden: usize,
+    ffn: usize,
+    seed: u64,
+) -> Vec<Sample> {
+    use crate::exec::{run_cpu_experts, CpuExpertTask};
+    use crate::runtime::Tensor;
+    use std::sync::Arc;
+
+    let mut rng = Rng::new(seed);
+    let w1 = Arc::new(Tensor::randn(&mut rng, vec![hidden, ffn], 0.2));
+    let w3 = Arc::new(Tensor::randn(&mut rng, vec![hidden, ffn], 0.2));
+    let w2 = Arc::new(Tensor::randn(&mut rng, vec![ffn, hidden], 0.2));
+    let mut out = Vec::new();
+    for &s in sizes {
+        let tasks = [CpuExpertTask {
+            expert: 0,
+            x: Tensor::randn(&mut rng, vec![s, hidden], 0.5),
+            w1: Arc::clone(&w1),
+            w3: Arc::clone(&w3),
+            w2: Arc::clone(&w2),
+        }];
+        let _ = run_cpu_experts(pool, &tasks); // warm thread-local scratch
+        for _ in 0..repeats {
+            let t0 = std::time::Instant::now();
+            let _ = run_cpu_experts(pool, &tasks);
+            out.push(Sample { tokens: s, us: t0.elapsed().as_nanos() as f64 / 1e3 });
+        }
+    }
+    out
+}
+
+/// Measured multicore speedup of the executor pool on THIS host: wall
+/// time of a prefill-sized expert through a 1-thread pool over a
+/// `threads`-wide pool.  Can come out below 1 on oversubscribed hosts —
+/// [`LatencyModel::from_hardware_threaded_with_speedup`] clamps.
+pub fn measure_pool_speedup(threads: usize, seed: u64) -> f64 {
+    let threads = threads.max(1);
+    if threads == 1 {
+        return 1.0;
+    }
+    const SIZE: usize = 192; // several MIN_CHUNK_ROWS chunks per worker
+    const REPEATS: usize = 3;
+    let (hidden, ffn) = (128, 256);
+    let serial = ExecutorPool::new(1);
+    let parallel = ExecutorPool::new(threads);
+    let ts = measure_pool_expert(&serial, &[SIZE], REPEATS, hidden, ffn, seed);
+    let tp = measure_pool_expert(&parallel, &[SIZE], REPEATS, hidden, ffn, seed);
+    let ms = crate::util::stats::mean(&ts.iter().map(|x| x.us).collect::<Vec<_>>());
+    let mp = crate::util::stats::mean(&tp.iter().map(|x| x.us).collect::<Vec<_>>());
+    if ms > 0.0 && mp > 0.0 {
+        ms / mp
+    } else {
+        1.0
+    }
+}
+
+/// Measured-mode multicore calibration (`FIDDLER_MEASURED_CALIB=1`, and
+/// `fiddler calibrate --measured-pool`): the paper-environment CPU curve
+/// scaled by the speedup the executor pool *realized* on this host,
+/// replacing [`crate::latency::cpu_parallel_speedup`]'s assumed
+/// contention curve.
+pub fn calibrate_multicore_measured(
+    hw: &HardwareConfig,
+    threads: usize,
+    seed: u64,
+) -> LatencyModel {
+    LatencyModel::from_hardware_threaded_with_speedup(
+        hw,
+        threads,
+        measure_pool_speedup(threads, seed),
+    )
+}
+
 /// Measured mode: time the ACTUAL expert executable on this host at each
 /// batch bucket and fit the affine model.  Exercises the full calibration
 /// machinery end to end (`fiddler calibrate --measured=1`); the numbers
@@ -200,6 +283,42 @@ mod tests {
             fitted.crossover_tokens(),
             single.crossover_tokens()
         );
+    }
+
+    #[test]
+    fn measured_pool_samples_grow_with_input_size() {
+        // Wall-clock measurement, so only the coarse shape is asserted:
+        // samples exist for every size and a 16x bigger input is not
+        // cheaper than a tiny one on the serial pool.
+        let pool = ExecutorPool::new(1);
+        let samples = measure_pool_expert(&pool, &[4, 64], 3, 64, 128, 7);
+        assert_eq!(samples.len(), 6);
+        let small: Vec<f64> =
+            samples.iter().filter(|s| s.tokens == 4).map(|s| s.us).collect();
+        let big: Vec<f64> =
+            samples.iter().filter(|s| s.tokens == 64).map(|s| s.us).collect();
+        assert!(crate::util::stats::mean(&big) >= crate::util::stats::mean(&small) * 0.5);
+        assert!(samples.iter().all(|s| s.us > 0.0));
+    }
+
+    #[test]
+    fn measured_calibration_yields_a_sane_model() {
+        // The measured speedup is whatever this host delivers; the model
+        // built from it must stay within the clamp contract: never slower
+        // than single-core, never faster than linear in threads.
+        let hw = HardwareConfig::env1();
+        let threads = 2;
+        let sp = measure_pool_speedup(threads, 5);
+        assert!(sp.is_finite() && sp > 0.0, "speedup {sp}");
+        let m = calibrate_multicore_measured(&hw, threads, 5);
+        let serial = LatencyModel::from_hardware(&hw);
+        assert!(m.cpu_per_token_us <= serial.cpu_per_token_us + 1e-9);
+        assert!(m.cpu_per_token_us >= serial.cpu_per_token_us / threads as f64 - 1e-9);
+        // GPU-side and link terms untouched by CPU calibration.
+        assert!((m.gpu_const_us - serial.gpu_const_us).abs() < 1e-12);
+        assert!((m.transfer_us - serial.transfer_us).abs() < 1e-12);
+        // threads == 1 short-circuits to the serial model exactly.
+        assert_eq!(measure_pool_speedup(1, 5), 1.0);
     }
 
     #[test]

@@ -68,11 +68,29 @@ impl LatencyModel {
     /// a faster CPU pushes the crossover out and keeps more experts off
     /// the PCIe link.
     pub fn from_hardware_threaded(hw: &HardwareConfig, threads: usize) -> LatencyModel {
+        let t = threads.max(1).min(hw.cpu_cores.max(1));
+        Self::from_hardware_threaded_with_speedup(hw, threads, cpu_parallel_speedup(t))
+    }
+
+    /// [`LatencyModel::from_hardware_threaded`] with an explicit speedup —
+    /// the *measured* calibration path
+    /// ([`calib::measure_pool_speedup`] / `FIDDLER_MEASURED_CALIB=1`):
+    /// scale the CPU curve by the speedup the executor pool actually
+    /// realized on this host instead of the assumed contention curve.
+    /// Clamped to `[1, effective threads]` — the pool cannot exceed linear
+    /// scaling, and a pool measured slower than serial must not push
+    /// Algorithm 1's crossover below the serial model's (the engine would
+    /// be planning against a slowdown the layer join never charges).
+    pub fn from_hardware_threaded_with_speedup(
+        hw: &HardwareConfig,
+        threads: usize,
+        speedup: f64,
+    ) -> LatencyModel {
         let mut m = Self::from_hardware(hw);
         let t = threads.max(1).min(hw.cpu_cores.max(1));
-        let speedup = cpu_parallel_speedup(t);
-        m.cpu_base_us /= speedup;
-        m.cpu_per_token_us /= speedup;
+        let s = if speedup.is_finite() { speedup.clamp(1.0, t as f64) } else { 1.0 };
+        m.cpu_base_us /= s;
+        m.cpu_per_token_us /= s;
         m
     }
 
@@ -186,6 +204,29 @@ mod tests {
         // The decision-relevant consequence: the CPU stays the right
         // choice for larger inputs (Algorithm 1 crossover moves out).
         assert!(m8.crossover_tokens() > m1.crossover_tokens());
+    }
+
+    #[test]
+    fn explicit_speedup_is_clamped_and_applied() {
+        let hw = HardwareConfig::env1();
+        let base = LatencyModel::from_hardware(&hw);
+        // A measured 3x at 4 threads scales the CPU curve by exactly 3.
+        let m = LatencyModel::from_hardware_threaded_with_speedup(&hw, 4, 3.0);
+        assert!((m.cpu_per_token_us - base.cpu_per_token_us / 3.0).abs() < 1e-9);
+        assert!((m.cpu_base_us - base.cpu_base_us / 3.0).abs() < 1e-9);
+        // Sub-serial and non-finite measurements clamp to the serial model.
+        for bad in [0.3, f64::NAN, f64::INFINITY] {
+            let m = LatencyModel::from_hardware_threaded_with_speedup(&hw, 4, bad);
+            let capped = bad.is_finite() && bad > 4.0;
+            if capped {
+                assert!((m.cpu_per_token_us - base.cpu_per_token_us / 4.0).abs() < 1e-9);
+            } else {
+                assert!((m.cpu_per_token_us - base.cpu_per_token_us).abs() < 1e-9);
+            }
+        }
+        // Superlinear claims cap at the thread count.
+        let m = LatencyModel::from_hardware_threaded_with_speedup(&hw, 4, 40.0);
+        assert!((m.cpu_per_token_us - base.cpu_per_token_us / 4.0).abs() < 1e-9);
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //!   residency subsystem (pluggable eviction + async transfer tracking),
 //!   the wall-clock parallel expert executor [`exec`] (worker pool +
 //!   CPU/GPU overlap inside the layer loop, feeding the [`cpukernel`]
-//!   host kernel), the serving [`coordinator`] (continuous batching, beam
+//!   host kernel), the [`pipeline`]d layer executor (one forward driver
+//!   for all generation paths, with cross-layer expert prefetch and
+//!   work-stealing dispatch), the serving [`coordinator`] (continuous
+//!   batching, beam
 //!   search), and the [`baselines`] it is evaluated against, over a
 //!   simulated heterogeneous [`hardware`] substrate (virtual clock +
 //!   calibrated [`latency`] model).
@@ -34,6 +37,7 @@ pub mod kvcache;
 pub mod latency;
 pub mod metrics;
 pub mod moe;
+pub mod pipeline;
 pub mod placement;
 pub mod popularity;
 pub mod scheduler;

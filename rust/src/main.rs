@@ -46,7 +46,7 @@ fn print_help() {
                       [--width W] [--listen 127.0.0.1:7777]  (newline-JSON TCP)\n\
            generate   --model M --env E --policy P --inp L --out L [--prompt 1,2,3]\n\
            beam       --model M --env E --policy P --width W --inp L --out L\n\
-           calibrate  --env E [--measured] [--threads N]\n\
+           calibrate  --env E [--measured] [--measured-pool] [--threads N]\n\
            inspect    --model M --env E\n\
          \n\
          DEFAULTS: --model mixtral-tiny --env env1 --policy fiddler\n\
@@ -67,7 +67,11 @@ fn print_help() {
          EXECUTOR: --threads N sizes the parallel CPU expert executor\n\
                    (1 = serial, 0 = one worker per core); set\n\
                    FIDDLER_HOST_KERNEL=1 to run CPU-planned experts through\n\
-                   the dedicated host kernel"
+                   the dedicated host kernel\n\
+         PIPELINE: --pipeline-lookahead W   cross-layer expert prefetch\n\
+                   window of the pipelined layer executor (0 = serial\n\
+                   legacy loop); FIDDLER_MEASURED_CALIB=1 calibrates the\n\
+                   multicore CPU curve by measuring the executor pool"
     );
 }
 
@@ -226,6 +230,20 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
             mc.cpu_per_token_us / 1e3,
             mc.crossover_tokens(),
             threads
+        );
+    }
+    if args.has("measured-pool") {
+        // Measured (not modeled) multicore calibration: time the host
+        // expert kernel through real executor pools and feed the realized
+        // speedup into the threaded latency model (no artifacts needed).
+        let seed = args.u64_or("seed", 42);
+        let sp = calib::measure_pool_speedup(threads, seed);
+        let m = LatencyModel::from_hardware_threaded_with_speedup(&hw, threads, sp);
+        println!(
+            " measured-pool ({threads} threads): speedup {sp:.2}x | cpu {:.2} + {:.3}*s ms | crossover s*={}",
+            m.cpu_base_us / 1e3,
+            m.cpu_per_token_us / 1e3,
+            m.crossover_tokens()
         );
     }
     if args.has("measured") {

@@ -1,6 +1,14 @@
 //! MoE model runner: composes the per-op HLO executables into decoder
 //! steps, with the execution policy deciding where each expert runs and the
 //! simulated substrate accounting the time (DESIGN.md §2/§3).
+//!
+//! Since PR 5 every forward path — `prefill`, `prefill_chunk`,
+//! `decode_step` — drives its layers through the single
+//! [`crate::pipeline::run_layers`] loop: this module keeps the
+//! path-specific *attention stages* (which executable runs, how K/V
+//! append, what attention time costs) and the op plumbing; the shared
+//! route → prefetch → dispatch → join machinery lives in
+//! [`crate::pipeline`].
 
 pub mod topk;
 
@@ -12,10 +20,10 @@ use crate::expertcache::ExpertCache;
 use crate::hardware::{DeviceTimeline, PcieLink, VirtualClock};
 use crate::kvcache::{gather_batch_padded, SequenceCache};
 use crate::latency::LatencyModel;
+use crate::pipeline::{ForwardKind, PipelineState};
 use crate::popularity::Profile;
 use crate::runtime::{Runtime, Tensor, TensorI32, WeightStore};
 use crate::scheduler::policy::ExecPolicy;
-use crate::scheduler::ExpertPlan;
 use crate::util::round_up_bucket;
 use anyhow::{bail, Result};
 
@@ -25,6 +33,9 @@ pub struct ExpertEvents {
     pub resident: u64,
     pub transferred: u64,
     pub cpu: u64,
+    /// Resident executions that waited out a still-in-flight pipeline
+    /// prefetch instead of taking a demand path (subset of `resident`).
+    pub prefetch_overlapped: u64,
 }
 
 impl ExpertEvents {
@@ -40,11 +51,26 @@ impl ExpertEvents {
             self.resident as f64 / t as f64
         }
     }
+
+    /// Counters accumulated since `base` was snapshotted (per-window
+    /// attribution, like [`crate::expertcache::CacheStats::delta_since`]).
+    /// Saturating, so a stale base never underflows.
+    pub fn delta_since(&self, base: &ExpertEvents) -> ExpertEvents {
+        ExpertEvents {
+            resident: self.resident.saturating_sub(base.resident),
+            transferred: self.transferred.saturating_sub(base.transferred),
+            cpu: self.cpu.saturating_sub(base.cpu),
+            prefetch_overlapped: self
+                .prefetch_overlapped
+                .saturating_sub(base.prefetch_overlapped),
+        }
+    }
 }
 
 /// Mutable execution state threaded through a serving session: the policy,
-/// the simulated memory/link/clock, online profiling, and the wall-clock
-/// worker pool executing CPU-planned experts.
+/// the simulated memory/link/clock, online profiling, the wall-clock
+/// worker pool executing CPU-planned experts, and the layer pipeline's
+/// lookahead state.
 pub struct ExecContext {
     pub policy: Box<dyn ExecPolicy>,
     pub memory: ExpertCache,
@@ -60,6 +86,9 @@ pub struct ExecContext {
     pub threads: usize,
     /// Persistent worker pool for CPU-planned experts (see [`crate::exec`]).
     pub pool: crate::exec::ExecutorPool,
+    /// Cross-layer lookahead state of the pipelined layer executor
+    /// ([`crate::pipeline`]); disabled (lookahead 0) by default.
+    pub pipeline: PipelineState,
 }
 
 impl ExecContext {
@@ -83,6 +112,12 @@ impl ExecContext {
     /// throughput (a faster CPU keeps more experts off the PCIe link).
     /// With the host kernel off the single-core model is kept — the
     /// engine must never plan against a speedup it does not realize.
+    ///
+    /// The multi-core curve is analytic by default
+    /// ([`LatencyModel::from_hardware_threaded`]); with
+    /// `FIDDLER_MEASURED_CALIB=1` it is instead *measured* on this host by
+    /// timing the host expert kernel through real executor pools
+    /// ([`crate::latency::calib::calibrate_multicore_measured`]).
     pub fn with_threads(
         mut policy: Box<dyn ExecPolicy>,
         hw: &HardwareConfig,
@@ -94,6 +129,13 @@ impl ExecContext {
         let threads = threads.max(1);
         let lat_threads =
             if crate::cpukernel::host_kernel_enabled() { threads } else { 1 };
+        let measured = lat_threads > 1
+            && std::env::var("FIDDLER_MEASURED_CALIB").map(|v| v == "1").unwrap_or(false);
+        let lat = if measured {
+            crate::latency::calib::calibrate_multicore_measured(hw, lat_threads, seed)
+        } else {
+            LatencyModel::from_hardware_threaded(hw, lat_threads)
+        };
         // Scale the paper-environment expert capacity to this model's
         // expert count (capacity fractions are what transfer: 56/256 and
         // 125/256 in the paper).
@@ -106,7 +148,7 @@ impl ExecContext {
             policy,
             memory,
             link: PcieLink::new(hw),
-            lat: LatencyModel::from_hardware_threaded(hw, lat_threads),
+            lat,
             hw: hw.clone(),
             timeline: DeviceTimeline::new(),
             clock: VirtualClock::new(),
@@ -114,7 +156,19 @@ impl ExecContext {
             events: ExpertEvents::default(),
             threads,
             pool: crate::exec::ExecutorPool::new(threads),
+            pipeline: PipelineState::disabled(),
         }
+    }
+
+    /// Install the layer pipeline's lookahead state.  Speculative
+    /// prefetches need unpinned cache slots, but initialization placement
+    /// pins the full capacity — the pipeline releases the least popular
+    /// pins *lazily*, one per slot a gated-profitable prefetch actually
+    /// needs (capped at half the cache), so workloads where the window
+    /// never pays keep the full pinned placement and run exactly like the
+    /// serial loop.
+    pub fn enable_pipeline(&mut self, state: PipelineState) {
+        self.pipeline = state;
     }
 
     /// Charge serial (blocking) work on one device: the clock advances to
@@ -211,6 +265,50 @@ impl ModelRunner {
         ]
     }
 
+    /// Router half of an MoE layer: fused norm + gate over `h`
+    /// (`[n, hidden]`), returning `(probs, xn)`.
+    pub(crate) fn gate_outputs(&self, layer: usize, h: &Tensor) -> Result<(Tensor, Tensor)> {
+        let n = h.shape[0];
+        let gate_op = format!("gate_b{n}");
+        let ffn_norm = format!("layers.{layer}.ffn_norm");
+        let gate_w = format!("layers.{layer}.gate");
+        let mut out = self.execute_mixed(
+            &gate_op,
+            &[
+                MixedArg::F32(h),
+                MixedArg::Weight(&ffn_norm),
+                MixedArg::Weight(&gate_w),
+            ],
+        )?;
+        let xn = out.swap_remove(1);
+        let probs = out.swap_remove(0);
+        Ok((probs, xn))
+    }
+
+    /// One expert's PJRT executable over gathered input `xe`
+    /// (`[bucket, hidden]`), returning its `[bucket, hidden]` output.
+    pub(crate) fn expert_gpu(
+        &self,
+        layer: usize,
+        j: usize,
+        xe: &Tensor,
+        bucket: usize,
+    ) -> Result<Tensor> {
+        let w1 = format!("layers.{layer}.experts.{j}.w1");
+        let w3 = format!("layers.{layer}.experts.{j}.w3");
+        let w2 = format!("layers.{layer}.experts.{j}.w2");
+        let mut out = self.execute_mixed(
+            &format!("expert_b{bucket}"),
+            &[
+                MixedArg::F32(xe),
+                MixedArg::Weight(&w1),
+                MixedArg::Weight(&w3),
+                MixedArg::Weight(&w2),
+            ],
+        )?;
+        Ok(out.swap_remove(0))
+    }
+
     /// One MoE (expert) layer over `h` (`[n, hidden]`, rows >= `valid`
     /// are padding): router + top-k + per-expert dispatch per the policy,
     /// combining outputs back into `h` (residual add included).
@@ -221,25 +319,14 @@ impl ModelRunner {
         valid: usize,
         cx: &mut ExecContext,
     ) -> Result<()> {
-        let n = h.shape[0];
-        let gate_op = format!("gate_b{n}");
-        let ffn_norm = format!("layers.{layer}.ffn_norm");
-        let gate_w = format!("layers.{layer}.gate");
-        let out = self.execute_mixed(
-            &gate_op,
-            &[
-                MixedArg::F32(h),
-                MixedArg::Weight(&ffn_norm),
-                MixedArg::Weight(&gate_w),
-            ],
-        )?;
-        let (probs, xn) = (&out[0], &out[1]);
-        self.moe_experts(layer, h, probs, xn, valid, cx)
+        let (probs, xn) = self.gate_outputs(layer, h)?;
+        self.moe_experts(layer, h, &probs, &xn, valid, cx)
     }
 
     /// Expert dispatch half of an MoE layer, with router outputs already
-    /// in hand (the fused attention+gate executables produce them — see
-    /// EXPERIMENTS.md §Perf, L2 fusion).
+    /// in hand.  Delegates to the pipelined layer executor's MoE stage —
+    /// THE single implementation shared by all forward paths
+    /// ([`crate::pipeline::run_layers`]).
     pub fn moe_experts(
         &self,
         layer: usize,
@@ -249,124 +336,7 @@ impl ModelRunner {
         valid: usize,
         cx: &mut ExecContext,
     ) -> Result<()> {
-        let routing =
-            topk::route(&probs.data[..valid * self.cfg.n_experts], valid, self.cfg.n_experts, self.cfg.top_k);
-        for (e, &s) in routing.inp_size.iter().enumerate() {
-            cx.online_profile.record(layer, e, s as u64);
-        }
-
-        let t0 = cx.clock.now_us();
-        let plans = cx
-            .policy
-            .plan_layer(layer, &routing.inp_size, &mut cx.memory, &cx.lat, t0);
-        // Speculative policies overlap next-layer weight prefetches with
-        // this layer's compute.
-        cx.policy
-            .post_layer(layer, &routing.inp_size, &mut cx.memory, &cx.lat, t0);
-
-        // Wall-clock execution now mirrors the simulated overlap (§3.3):
-        // the worker pool chews CPU-planned experts through the dedicated
-        // host kernel (§3.4) while this thread runs the GPU-planned
-        // experts' executables, and both join at the layer barrier below.
-        // Outputs are stashed per expert and combined afterwards in
-        // expert-index order — the same reduction order as the old serial
-        // loop, independent of plan, thread count, and completion
-        // schedule, so the numerics are unchanged to the bit.
-        let host_kernel = crate::cpukernel::host_kernel_enabled();
-        let on_pool = |plan: &ExpertPlan| *plan == ExpertPlan::Cpu && host_kernel;
-
-        let mut outputs: Vec<Option<Tensor>> = plans.iter().map(|_| None).collect();
-        let mut chunks: Vec<crate::exec::ExpertChunk> = Vec::new();
-        for (j, plan) in plans.iter().enumerate() {
-            let Some(plan) = plan else { continue };
-            if !on_pool(plan) {
-                continue;
-            }
-            let rows = &routing.rows_for[j];
-            let s = rows.len();
-            outputs[j] = Some(Tensor::zeros(vec![s, self.cfg.hidden]));
-            let w1 = self.ws.expert_shared(layer, j, "w1");
-            let w3 = self.ws.expert_shared(layer, j, "w3");
-            let w2 = self.ws.expert_shared(layer, j, "w2");
-            // Large-s (prefill) experts additionally split across workers.
-            for (r0, r1) in crate::exec::partition_rows(s, cx.pool.threads()) {
-                chunks.push(crate::exec::ExpertChunk {
-                    expert: j,
-                    row0: r0,
-                    // Exact size, no bucket: the host kernel pads nothing.
-                    x: xn.gather_rows_padded(&rows[r0..r1], r1 - r0),
-                    w1: w1.clone(),
-                    w3: w3.clone(),
-                    w2: w2.clone(),
-                });
-            }
-        }
-        let pending = crate::exec::run_expert_chunks(&cx.pool, chunks);
-
-        // GPU-planned experts (and the PJRT fallback for CPU plans when the
-        // host kernel is off) execute on this thread, overlapping the pool.
-        for (j, plan) in plans.iter().enumerate() {
-            let Some(plan) = plan else { continue };
-            if on_pool(plan) {
-                continue;
-            }
-            let rows = &routing.rows_for[j];
-            let s = rows.len();
-            let bucket = round_up_bucket(s, TOKEN_BUCKETS);
-            let xe = xn.gather_rows_padded(rows, bucket);
-            let w1 = format!("layers.{layer}.experts.{j}.w1");
-            let w3 = format!("layers.{layer}.experts.{j}.w3");
-            let w2 = format!("layers.{layer}.experts.{j}.w2");
-            let mut expert_out = self.execute_mixed(
-                &format!("expert_b{bucket}"),
-                &[
-                    MixedArg::F32(&xe),
-                    MixedArg::Weight(&w1),
-                    MixedArg::Weight(&w3),
-                    MixedArg::Weight(&w2),
-                ],
-            )?;
-            outputs[j] = Some(expert_out.swap_remove(0));
-        }
-
-        // Layer barrier: join the pool, scatter chunk outputs into the
-        // per-expert buffers (positional — order-free).
-        let hidden = self.cfg.hidden;
-        for c in pending.wait() {
-            let dst = outputs[c.expert].as_mut().expect("chunk for unplanned expert");
-            dst.data[c.row0 * hidden..c.row0 * hidden + c.out.data.len()]
-                .copy_from_slice(&c.out.data);
-        }
-
-        // Combine + simulated accounting, in expert-index order.
-        for (j, plan) in plans.iter().enumerate() {
-            let Some(plan) = plan else { continue };
-            let rows = &routing.rows_for[j];
-            let s = rows.len();
-            let out = outputs[j].as_ref().expect("planned expert without output");
-            h.axpy_rows(rows, &routing.weights_for[j], out);
-
-            // Account simulated time + link/memory bookkeeping.
-            let cost = cx.policy.expert_cost_us(*plan, s, &cx.lat);
-            cx.timeline.schedule(plan.device(), t0, cost);
-            match plan {
-                ExpertPlan::GpuResident => cx.events.resident += 1,
-                ExpertPlan::GpuTransfer => {
-                    cx.events.transferred += 1;
-                    cx.link.weight_transfer();
-                }
-                ExpertPlan::Cpu => {
-                    cx.events.cpu += 1;
-                    cx.link.activation_transfer(s); // out
-                    cx.link.activation_transfer(s); // back
-                }
-            }
-        }
-        // Layer boundary: expert outputs must be combined before the next
-        // layer — both device queues join.
-        let done = cx.timeline.barrier();
-        cx.clock.advance_to_us(done);
-        Ok(())
+        crate::pipeline::moe_stage(self, layer, h, probs, xn, valid, cx)
     }
 
     /// Prefill a prompt into `cache`; returns the last token's hidden state
@@ -390,38 +360,44 @@ impl ModelRunner {
         let emb = self.ws.embed_tokens(tokens);
         x.data[..n * self.cfg.hidden].copy_from_slice(&emb.data);
 
-        for layer in 0..self.cfg.n_layers {
-            // Attention, then router (separate executables: the fused
-            // attn+gate variant measured SLOWER under XLA-CPU — see the
-            // perf_ab_fused ablation and EXPERIMENTS.md §Perf).
-            let valid = TensorI32::scalar(n as i32);
-            let wn = self.attn_weight_names(layer);
-            let out = self.execute_mixed(
-                &format!("attn_prefill_s{s}"),
-                &[
-                    MixedArg::F32(&x),
-                    MixedArg::I32(&valid),
-                    MixedArg::Weight(&wn[0]),
-                    MixedArg::Weight(&wn[1]),
-                    MixedArg::Weight(&wn[2]),
-                    MixedArg::Weight(&wn[3]),
-                    MixedArg::Weight(&wn[4]),
-                ],
-            )?;
-            let (h_attn, k, v) = (&out[0], &out[1], &out[2]);
-            let kvd = self.cfg.kv_dim();
-            cache.layers[layer].extend(n, &k.data[..n * kvd], &v.data[..n * kvd]);
+        let kvd = self.cfg.kv_dim();
+        let x = crate::pipeline::run_layers(
+            self,
+            cx,
+            x,
+            n,
+            ForwardKind::Prefill,
+            // Attention stage: the monolithic prefill executable (separate
+            // from the router — the fused attn+gate variant measured
+            // SLOWER under XLA-CPU; see the perf_ab_fused ablation and
+            // EXPERIMENTS.md §Perf).
+            &mut |layer, x, cx| {
+                let valid = TensorI32::scalar(n as i32);
+                let wn = self.attn_weight_names(layer);
+                let out = self.execute_mixed(
+                    &format!("attn_prefill_s{s}"),
+                    &[
+                        MixedArg::F32(x),
+                        MixedArg::I32(&valid),
+                        MixedArg::Weight(&wn[0]),
+                        MixedArg::Weight(&wn[1]),
+                        MixedArg::Weight(&wn[2]),
+                        MixedArg::Weight(&wn[3]),
+                        MixedArg::Weight(&wn[4]),
+                    ],
+                )?;
+                let (h_attn, k, v) = (&out[0], &out[1], &out[2]);
+                cache.layers[layer].extend(n, &k.data[..n * kvd], &v.data[..n * kvd]);
 
-            let attn_dev = cx.policy.attn_device(layer);
-            let mut attn_us = cx.hw.attn_prefill_per_token_us * n as f64;
-            if attn_dev == DeviceKind::Cpu {
-                attn_us *= cx.hw.attn_cpu_factor;
-            }
-            cx.charge_serial(attn_dev, attn_us);
-
-            x = h_attn.clone();
-            self.moe_layer(layer, &mut x, n, cx)?;
-        }
+                let attn_dev = cx.policy.attn_device(layer);
+                let mut attn_us = cx.hw.attn_prefill_per_token_us * n as f64;
+                if attn_dev == DeviceKind::Cpu {
+                    attn_us *= cx.hw.attn_cpu_factor;
+                }
+                cx.charge_serial(attn_dev, attn_us);
+                Ok(h_attn.clone())
+            },
+        )?;
         // Last valid row only.
         Ok(x.gather_rows_padded(&[n - 1], 1))
     }
@@ -467,48 +443,56 @@ impl ModelRunner {
 
         let kvd = self.cfg.kv_dim();
         let (kvh, hd) = (self.cfg.n_kv_heads, self.cfg.head_dim);
-        for layer in 0..self.cfg.n_layers {
-            let wn = self.attn_weight_names(layer);
-            let mut h_attn = Tensor::zeros(vec![bucket, self.cfg.hidden]);
-            for t in 0..m {
-                let pos = cache.layers[layer].len;
-                let c = round_up_bucket(pos + 1, CACHE_BUCKETS);
-                let (mut kcb, mut vcb) = {
-                    let seq: &SequenceCache = cache;
-                    gather_batch_padded(&[seq], layer, 1, c, kvd)
-                };
-                kcb.shape = vec![1, c, kvh, hd];
-                vcb.shape = vec![1, c, kvh, hd];
-                let xt = x.gather_rows_padded(&[t], 1);
-                let pos_t = TensorI32::vec(vec![pos as i32]);
-                let out = self.execute_mixed(
-                    &format!("attn_decode_b1_c{c}"),
-                    &[
-                        MixedArg::F32(&xt),
-                        MixedArg::F32(&kcb),
-                        MixedArg::F32(&vcb),
-                        MixedArg::I32(&pos_t),
-                        MixedArg::Weight(&wn[0]),
-                        MixedArg::Weight(&wn[1]),
-                        MixedArg::Weight(&wn[2]),
-                        MixedArg::Weight(&wn[3]),
-                        MixedArg::Weight(&wn[4]),
-                    ],
-                )?;
-                h_attn.row_mut(t).copy_from_slice(out[0].row(0));
-                cache.layers[layer].append(&out[1].data[..kvd], &out[2].data[..kvd]);
-            }
+        let x = crate::pipeline::run_layers(
+            self,
+            cx,
+            x,
+            m,
+            // Continuation: the previous pass of this prompt already
+            // observed the per-layer routing — the pipeline's lookahead
+            // prefetch reuses it as the predictor.
+            ForwardKind::ChunkContinuation,
+            &mut |layer, x, cx| {
+                let wn = self.attn_weight_names(layer);
+                let mut h_attn = Tensor::zeros(vec![bucket, self.cfg.hidden]);
+                for t in 0..m {
+                    let pos = cache.layers[layer].len;
+                    let c = round_up_bucket(pos + 1, CACHE_BUCKETS);
+                    let (mut kcb, mut vcb) = {
+                        let seq: &SequenceCache = cache;
+                        gather_batch_padded(&[seq], layer, 1, c, kvd)
+                    };
+                    kcb.shape = vec![1, c, kvh, hd];
+                    vcb.shape = vec![1, c, kvh, hd];
+                    let xt = x.gather_rows_padded(&[t], 1);
+                    let pos_t = TensorI32::vec(vec![pos as i32]);
+                    let out = self.execute_mixed(
+                        &format!("attn_decode_b1_c{c}"),
+                        &[
+                            MixedArg::F32(&xt),
+                            MixedArg::F32(&kcb),
+                            MixedArg::F32(&vcb),
+                            MixedArg::I32(&pos_t),
+                            MixedArg::Weight(&wn[0]),
+                            MixedArg::Weight(&wn[1]),
+                            MixedArg::Weight(&wn[2]),
+                            MixedArg::Weight(&wn[3]),
+                            MixedArg::Weight(&wn[4]),
+                        ],
+                    )?;
+                    h_attn.row_mut(t).copy_from_slice(out[0].row(0));
+                    cache.layers[layer].append(&out[1].data[..kvd], &out[2].data[..kvd]);
+                }
 
-            let attn_dev = cx.policy.attn_device(layer);
-            let mut attn_us = cx.hw.attn_prefill_per_token_us * m as f64;
-            if attn_dev == DeviceKind::Cpu {
-                attn_us *= cx.hw.attn_cpu_factor;
-            }
-            cx.charge_serial(attn_dev, attn_us);
-
-            x = h_attn;
-            self.moe_layer(layer, &mut x, m, cx)?;
-        }
+                let attn_dev = cx.policy.attn_device(layer);
+                let mut attn_us = cx.hw.attn_prefill_per_token_us * m as f64;
+                if attn_dev == DeviceKind::Cpu {
+                    attn_us *= cx.hw.attn_cpu_factor;
+                }
+                cx.charge_serial(attn_dev, attn_us);
+                Ok(h_attn)
+            },
+        )?;
         Ok(x.gather_rows_padded(&[m - 1], 1))
     }
 
@@ -543,46 +527,53 @@ impl ModelRunner {
 
         let kvd = self.cfg.kv_dim();
         let (kvh, hd) = (self.cfg.n_kv_heads, self.cfg.head_dim);
-        for layer in 0..self.cfg.n_layers {
-            let refs: Vec<&SequenceCache> = caches.iter().map(|c| &**c).collect();
-            // Single-copy gather straight into the padded [bb, c, kv, d]
-            // layout (perf iteration 2 — EXPERIMENTS.md §Perf).
-            let (mut kcb, mut vcb) = gather_batch_padded(&refs, layer, bb, c, kvd);
-            kcb.shape = vec![bb, c, kvh, hd];
-            vcb.shape = vec![bb, c, kvh, hd];
+        let x = crate::pipeline::run_layers(
+            self,
+            cx,
+            x,
+            b,
+            ForwardKind::Decode,
+            &mut |layer, x, cx| {
+                let refs: Vec<&SequenceCache> = caches.iter().map(|c| &**c).collect();
+                // Single-copy gather straight into the padded [bb, c, kv, d]
+                // layout (perf iteration 2 — EXPERIMENTS.md §Perf).
+                let (mut kcb, mut vcb) = gather_batch_padded(&refs, layer, bb, c, kvd);
+                kcb.shape = vec![bb, c, kvh, hd];
+                vcb.shape = vec![bb, c, kvh, hd];
 
-            let pos_t = TensorI32::vec(pos.clone());
-            let wn = self.attn_weight_names(layer);
-            let out = self.execute_mixed(
-                &format!("attn_decode_b{bb}_c{c}"),
-                &[
-                    MixedArg::F32(&x),
-                    MixedArg::F32(&kcb),
-                    MixedArg::F32(&vcb),
-                    MixedArg::I32(&pos_t),
-                    MixedArg::Weight(&wn[0]),
-                    MixedArg::Weight(&wn[1]),
-                    MixedArg::Weight(&wn[2]),
-                    MixedArg::Weight(&wn[3]),
-                    MixedArg::Weight(&wn[4]),
-                ],
-            )?;
-            let (h_attn, k_new, v_new) = (&out[0], &out[1], &out[2]);
-            for (i, cache) in caches.iter_mut().enumerate() {
-                cache.layers[layer]
-                    .append(&k_new.data[i * kvd..(i + 1) * kvd], &v_new.data[i * kvd..(i + 1) * kvd]);
-            }
+                let pos_t = TensorI32::vec(pos.clone());
+                let wn = self.attn_weight_names(layer);
+                let out = self.execute_mixed(
+                    &format!("attn_decode_b{bb}_c{c}"),
+                    &[
+                        MixedArg::F32(x),
+                        MixedArg::F32(&kcb),
+                        MixedArg::F32(&vcb),
+                        MixedArg::I32(&pos_t),
+                        MixedArg::Weight(&wn[0]),
+                        MixedArg::Weight(&wn[1]),
+                        MixedArg::Weight(&wn[2]),
+                        MixedArg::Weight(&wn[3]),
+                        MixedArg::Weight(&wn[4]),
+                    ],
+                )?;
+                let (h_attn, k_new, v_new) = (&out[0], &out[1], &out[2]);
+                for (i, cache) in caches.iter_mut().enumerate() {
+                    cache.layers[layer].append(
+                        &k_new.data[i * kvd..(i + 1) * kvd],
+                        &v_new.data[i * kvd..(i + 1) * kvd],
+                    );
+                }
 
-            let attn_dev = cx.policy.attn_device(layer);
-            let mut attn_us = cx.hw.attn_decode_us;
-            if attn_dev == DeviceKind::Cpu {
-                attn_us *= cx.hw.attn_cpu_factor;
-            }
-            cx.charge_serial(attn_dev, attn_us);
-
-            x = h_attn.clone();
-            self.moe_layer(layer, &mut x, b, cx)?;
-        }
+                let attn_dev = cx.policy.attn_device(layer);
+                let mut attn_us = cx.hw.attn_decode_us;
+                if attn_dev == DeviceKind::Cpu {
+                    attn_us *= cx.hw.attn_cpu_factor;
+                }
+                cx.charge_serial(attn_dev, attn_us);
+                Ok(h_attn.clone())
+            },
+        )?;
         Ok(x.take_rows(b))
     }
 

@@ -1,0 +1,685 @@
+//! Pipelined layer executor — the single forward driver behind every
+//! generation path.
+//!
+//! Before this module, `ModelRunner::prefill`, `prefill_chunk`, and
+//! `decode_step` each carried their own copy of the per-layer loop, and
+//! every layer ended in a hard barrier: expert transfers and CPU staging
+//! for layer `L+1` could not start until layer `L`'s MoE join.  The
+//! pipeline models each layer as explicit stages —
+//!
+//! ```text
+//!   attention(L) ─▶ route(L) ─▶ dispatch(L) ─▶ join(L)
+//!                      │
+//!                      ├─ prefetch(L+1..L+W)   (async PCIe, overlapped)
+//!                      └─ record routing       (next chunk's predictor)
+//! ```
+//!
+//! — and opens the overlap window across the attention boundary
+//! (HybriMoE's impact-driven prefetch, MoE-Lightning's CPU-GPU
+//! pipelining; see PAPERS.md):
+//!
+//! * **Cross-layer expert prefetch** (`--pipeline-lookahead W`, 0 = the
+//!   serial legacy loop): once layer `L`'s routing is known, the pipeline
+//!   issues asynchronous PCIe transfers for the experts predicted at
+//!   layers `L+1..L+W` — scored by [`TransitionProfile`] chains for
+//!   decode/fresh prefill, or by the *already observed* routing of the
+//!   previous chunk for chunked-prefill continuation (the same prompt
+//!   keeps the same expert affinity).  Transfers ride the
+//!   [`ExpertCache`](crate::expertcache::ExpertCache)'s serialized PCIe
+//!   lane and only count as resident once complete, so hidden transfers
+//!   are exactly the ones layer `L`'s compute paid for.
+//! * **In-flight overrides** (Algorithm 1 extended): when layer `L` plans
+//!   an expert whose prefetch is still mid-flight, waiting out the
+//!   residual transfer and running on the GPU can beat both demand
+//!   options ([`crate::scheduler::inflight_wins`]); the override is
+//!   charged at its true ready time, so the virtual timeline reflects the
+//!   partial overlap instead of a full transfer.
+//! * **Work-stealing CPU dispatch**: CPU-planned expert chunks enter the
+//!   [`ExecutorPool`](crate::exec::ExecutorPool) longest-first
+//!   (per-expert priority), and at the join the engine thread steals
+//!   still-queued chunks instead of idling, so one oversized prefill
+//!   expert no longer serializes the layer barrier
+//!   ([`crate::exec::PendingBatch::wait_stealing`]).
+//!
+//! Determinism contract: for a fixed lookahead *plan effect* the numerics
+//! are bit-identical at every thread count (expert-index-ordered
+//! reduction, chunk-invariant host kernel — PR 2's contract, unchanged).
+//! Across lookahead values the outputs are also bit-identical with the
+//! host kernel off (every plan runs the same PJRT expert executable;
+//! prefetch changes *where time goes*, never the arithmetic); with
+//! `FIDDLER_HOST_KERNEL=1` a prefetch-flipped plan switches an expert
+//! between the host kernel and the XLA executable, which agree to ~1e-3 —
+//! the same caveat PR 2 documents for `--threads`.
+
+use crate::config::model::TOKEN_BUCKETS;
+use crate::moe::{ExecContext, ModelRunner};
+use crate::prefetch::TransitionProfile;
+use crate::runtime::Tensor;
+use crate::scheduler::ExpertPlan;
+use crate::util::round_up_bucket;
+use anyhow::Result;
+
+/// Which generation path is driving the pipeline — selects the layer-ahead
+/// expert predictor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ForwardKind {
+    /// Fresh prompt: transition-profile predictions.
+    Prefill,
+    /// Continuation chunk of a prompt whose prefix already ran: the
+    /// previous pass's *observed* per-layer routing is the predictor.
+    ChunkContinuation,
+    /// Batched decode step: transition-profile predictions.
+    Decode,
+}
+
+impl ForwardKind {
+    fn idx(self) -> usize {
+        match self {
+            ForwardKind::Prefill => 0,
+            ForwardKind::ChunkContinuation => 1,
+            ForwardKind::Decode => 2,
+        }
+    }
+}
+
+/// Per-context pipeline state: the lookahead window, the cross-layer
+/// predictor, and the routing observed on the previous forward pass.
+#[derive(Debug, Default)]
+pub struct PipelineState {
+    /// Layer-ahead prefetch window; 0 = serial legacy behavior (no
+    /// prefetch, no overrides — the pre-pipeline engine, bit-for-bit).
+    pub lookahead: usize,
+    /// Experts prefetched per looked-ahead layer.
+    pub depth: usize,
+    /// Cross-layer routing transitions (None disables prediction-based
+    /// prefetch; continuation chunks still reuse observed routing).
+    pub transitions: Option<TransitionProfile>,
+    /// Current pass reuses the chunk log as its predictor.
+    continuation: bool,
+    /// Current pass records into the chunk log (prefill passes only).
+    recording: bool,
+    /// Index of the current pass kind into the per-kind gap EWMAs.
+    kind_idx: usize,
+    /// EWMA of consecutive layer-start gaps per pass kind (µs; 0 = no
+    /// sample yet) — the lead-time estimate behind the issuance gate: a
+    /// prefetch for layer `L+d` has roughly `d * gap` of compute to hide
+    /// under.  Kept per kind because decode layers run ~ms while chunked
+    /// prefill layers run tens of ms.
+    gap_ewma: [f64; 3],
+    /// Start time of the previous layer in this pass (reset per pass so
+    /// inter-pass gaps — lm_head, sampling, scheduling — never pollute
+    /// the estimate).
+    last_layer_start: Option<f64>,
+    /// Pins released so far into the speculative working set (lazy: a pin
+    /// is only broken when a gated-profitable prefetch actually needs the
+    /// slot, so workloads the gate rejects pay nothing).
+    released: usize,
+    /// inp_size per layer observed during the current prompt's prefill —
+    /// written ONLY by `Prefill`/`ChunkContinuation` passes and reset when
+    /// a fresh prompt starts, so the interleaved decode steps of the
+    /// continuous-batching serve loop can never clobber the predictor
+    /// between two chunks of the same prompt.  (The lifecycle scheduler
+    /// admits at most one prefilling prompt at a time, which is what makes
+    /// a single log per context sufficient.)  Entries are overwritten
+    /// in-place as the current chunk advances, so a lookahead read at
+    /// layer `L+d` still sees the *previous* chunk's routing there.
+    chunk_routing: Vec<Option<Vec<usize>>>,
+}
+
+impl PipelineState {
+    /// Disabled pipeline (lookahead 0): every path degenerates to the
+    /// serial per-layer loop.
+    pub fn disabled() -> PipelineState {
+        PipelineState::default()
+    }
+
+    pub fn new(
+        lookahead: usize,
+        depth: usize,
+        transitions: Option<TransitionProfile>,
+    ) -> PipelineState {
+        PipelineState {
+            lookahead,
+            depth: depth.max(1),
+            transitions,
+            continuation: false,
+            recording: false,
+            kind_idx: 0,
+            gap_ewma: [0.0; 3],
+            last_layer_start: None,
+            released: 0,
+            chunk_routing: Vec::new(),
+        }
+    }
+
+    /// Start a forward pass: select this pass's predictor and whether it
+    /// feeds the chunk log.
+    fn begin_pass(&mut self, n_layers: usize, kind: ForwardKind) {
+        if self.lookahead == 0 {
+            return;
+        }
+        self.continuation = kind == ForwardKind::ChunkContinuation;
+        self.recording = kind != ForwardKind::Decode;
+        self.kind_idx = kind.idx();
+        self.last_layer_start = None;
+        match kind {
+            // A fresh prompt: reset the log; this pass repopulates it.
+            ForwardKind::Prefill => self.chunk_routing = vec![None; n_layers],
+            ForwardKind::ChunkContinuation => self.chunk_routing.resize(n_layers, None),
+            ForwardKind::Decode => {}
+        }
+    }
+
+    /// Feed one layer-start timestamp into this pass kind's gap EWMA.
+    fn observe_layer_start(&mut self, t0: f64) {
+        if let Some(prev) = self.last_layer_start {
+            if t0 > prev {
+                let g = t0 - prev;
+                let e = &mut self.gap_ewma[self.kind_idx];
+                *e = if *e == 0.0 { g } else { 0.7 * *e + 0.3 * g };
+            }
+        }
+        self.last_layer_start = Some(t0);
+    }
+
+    /// Expected gap between consecutive layer starts for the current pass
+    /// kind; 0.0 until the first pass of this kind has produced a sample.
+    fn expected_layer_gap(&self) -> f64 {
+        self.gap_ewma[self.kind_idx]
+    }
+
+    fn record_routing(&mut self, layer: usize, inp_size: &[usize]) {
+        if !self.recording {
+            return;
+        }
+        if let Some(slot) = self.chunk_routing.get_mut(layer) {
+            *slot = Some(inp_size.to_vec());
+        }
+    }
+
+    /// Predicted experts for `layer + d`, best first — observed routing
+    /// when this pass continues a prompt the predictor has already seen
+    /// (every active expert is a real target), transition-chain scores
+    /// otherwise (filtered to clearly-above-uniform mass: a speculative
+    /// transfer on a noise-level prediction evicts a slot for nothing).
+    fn predict(&self, layer: usize, inp_size: &[usize], d: usize) -> Vec<usize> {
+        if self.continuation {
+            if let Some(Some(prev)) = self.chunk_routing.get(layer + d) {
+                if prev.len() == inp_size.len() && prev.iter().any(|&s| s > 0) {
+                    let mut idx: Vec<usize> =
+                        (0..prev.len()).filter(|&j| prev[j] > 0).collect();
+                    idx.sort_by(|&a, &b| prev[b].cmp(&prev[a]).then(a.cmp(&b)));
+                    return idx;
+                }
+            }
+        }
+        match &self.transitions {
+            Some(t)
+                if t.n_experts == inp_size.len() && layer + d < t.n_layers =>
+            {
+                let mut mass: Vec<f64> =
+                    inp_size.iter().map(|&s| s as f64).collect();
+                for step in 0..d {
+                    mass = t.propagate_mass(layer + step, &mass);
+                }
+                // Confidence floor scales with chain length: every extra
+                // transition step compounds prediction noise, and a
+                // speculative transfer on a noise-level target evicts a
+                // slot for nothing.
+                let floor = (1.0 + 0.5 * d as f64) / t.n_experts as f64;
+                let mut idx: Vec<usize> =
+                    (0..t.n_experts).filter(|&j| mass[j] >= floor).collect();
+                idx.sort_by(|&a, &b| mass[b].total_cmp(&mass[a]).then(a.cmp(&b)));
+                idx
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Drive all decoder layers of one forward pass: the single layer loop
+/// shared by `prefill`, `prefill_chunk`, and `decode_step`.  `attn` is the
+/// path-specific attention stage (executes the right attention
+/// executable, appends K/V, charges attention time) — everything else
+/// (route → prefetch → dispatch → join) is common pipeline machinery.
+pub fn run_layers(
+    runner: &ModelRunner,
+    cx: &mut ExecContext,
+    mut x: Tensor,
+    valid: usize,
+    kind: ForwardKind,
+    attn: &mut dyn FnMut(usize, &Tensor, &mut ExecContext) -> Result<Tensor>,
+) -> Result<Tensor> {
+    cx.pipeline.begin_pass(runner.cfg.n_layers, kind);
+    for layer in 0..runner.cfg.n_layers {
+        x = attn(layer, &x, cx)?;
+        runner.moe_layer(layer, &mut x, valid, cx)?;
+    }
+    Ok(x)
+}
+
+/// The MoE stage of one layer — route → prefetch → dispatch → join — with
+/// router outputs already in hand.  THE single implementation; the old
+/// `ModelRunner::moe_experts` delegates here.
+pub(crate) fn moe_stage(
+    runner: &ModelRunner,
+    layer: usize,
+    h: &mut Tensor,
+    probs: &Tensor,
+    xn: &Tensor,
+    valid: usize,
+    cx: &mut ExecContext,
+) -> Result<()> {
+    let routing = crate::moe::topk::route(
+        &probs.data[..valid * runner.cfg.n_experts],
+        valid,
+        runner.cfg.n_experts,
+        runner.cfg.top_k,
+    );
+    for (e, &s) in routing.inp_size.iter().enumerate() {
+        cx.online_profile.record(layer, e, s as u64);
+    }
+
+    let t0 = cx.clock.now_us();
+    // Snapshot which of this layer's experts have a transfer still in
+    // flight BEFORE the policy plans: dynamic-caching policies admit() on
+    // their demand-transfer plans, which promotes an in-flight entry to
+    // ready and would otherwise hide exactly the residual wait the
+    // override exists to price.
+    let inflight: Vec<Option<f64>> = if cx.pipeline.lookahead > 0 {
+        routing
+            .inp_size
+            .iter()
+            .enumerate()
+            .map(|(j, &s)| {
+                if s == 0 {
+                    return None;
+                }
+                cx.memory.ready_at((layer, j)).filter(|&r| r > t0)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let mut plans = cx
+        .policy
+        .plan_layer(layer, &routing.inp_size, &mut cx.memory, &cx.lat, t0);
+    // Speculative policies overlap next-layer weight prefetches with
+    // this layer's compute.
+    cx.policy
+        .post_layer(layer, &routing.inp_size, &mut cx.memory, &cx.lat, t0);
+
+    // Pipeline stages beyond the serial loop (lookahead >= 1): issue the
+    // cross-layer prefetch window, then let still-in-flight transfers win
+    // this layer's plan where waiting them out is cheapest.  `waits[j]` is
+    // the residual transfer time charged before expert j's GPU slot.
+    let mut waits = vec![0.0f64; plans.len()];
+    if cx.pipeline.lookahead > 0 {
+        cx.pipeline.observe_layer_start(t0);
+        prefetch_window(cx, layer, &routing.inp_size, runner.cfg.n_layers, t0);
+        apply_inflight_overrides(
+            cx,
+            layer,
+            &routing.inp_size,
+            &inflight,
+            t0,
+            &mut plans,
+            &mut waits,
+        );
+        cx.pipeline.record_routing(layer, &routing.inp_size);
+    }
+
+    // Wall-clock execution mirrors the simulated overlap (§3.3): the
+    // worker pool chews CPU-planned experts through the dedicated host
+    // kernel (§3.4) while this thread runs the GPU-planned experts'
+    // executables, and both join at the layer barrier below.  Outputs are
+    // stashed per expert and combined afterwards in expert-index order —
+    // the same reduction order as the old serial loop, independent of
+    // plan, thread count, and completion schedule, so the numerics are
+    // unchanged to the bit.
+    let host_kernel = crate::cpukernel::host_kernel_enabled();
+    let on_pool = |plan: &ExpertPlan| *plan == ExpertPlan::Cpu && host_kernel;
+
+    let mut outputs: Vec<Option<Tensor>> = plans.iter().map(|_| None).collect();
+    let mut chunks: Vec<crate::exec::ExpertChunk> = Vec::new();
+    for (j, plan) in plans.iter().enumerate() {
+        let Some(plan) = plan else { continue };
+        if !on_pool(plan) {
+            continue;
+        }
+        let rows = &routing.rows_for[j];
+        let s = rows.len();
+        outputs[j] = Some(Tensor::zeros(vec![s, runner.cfg.hidden]));
+        let w1 = runner.ws.expert_shared(layer, j, "w1");
+        let w3 = runner.ws.expert_shared(layer, j, "w3");
+        let w2 = runner.ws.expert_shared(layer, j, "w2");
+        // Large-s (prefill) experts additionally split across workers.
+        for (r0, r1) in crate::exec::partition_rows(s, cx.pool.threads()) {
+            chunks.push(crate::exec::ExpertChunk {
+                expert: j,
+                row0: r0,
+                // Exact size, no bucket: the host kernel pads nothing.
+                x: xn.gather_rows_padded(&rows[r0..r1], r1 - r0),
+                w1: w1.clone(),
+                w3: w3.clone(),
+                w2: w2.clone(),
+            });
+        }
+    }
+    // Dispatch longest-first (per-expert priority; see `exec`).
+    let pending = crate::exec::run_expert_chunks(&cx.pool, chunks);
+
+    // GPU-planned experts (and the PJRT fallback for CPU plans when the
+    // host kernel is off) execute on this thread, overlapping the pool.
+    for (j, plan) in plans.iter().enumerate() {
+        let Some(plan) = plan else { continue };
+        if on_pool(plan) {
+            continue;
+        }
+        let rows = &routing.rows_for[j];
+        let bucket = round_up_bucket(rows.len(), TOKEN_BUCKETS);
+        let xe = xn.gather_rows_padded(rows, bucket);
+        outputs[j] = Some(runner.expert_gpu(layer, j, &xe, bucket)?);
+    }
+
+    // Layer barrier: steal still-queued chunks onto this thread, join the
+    // pool, scatter chunk outputs into the per-expert buffers (positional
+    // — order-free).
+    let hidden = runner.cfg.hidden;
+    for c in pending.wait_stealing(&cx.pool) {
+        let dst = outputs[c.expert].as_mut().expect("chunk for unplanned expert");
+        dst.data[c.row0 * hidden..c.row0 * hidden + c.out.data.len()]
+            .copy_from_slice(&c.out.data);
+    }
+
+    // Combine + simulated accounting, in expert-index order.  An
+    // overridden expert's GPU slot starts no earlier than its weights'
+    // arrival (`t0 + waits[j]`), so overlapped transfers are charged
+    // exactly their un-hidden residue.
+    for (j, plan) in plans.iter().enumerate() {
+        let Some(plan) = plan else { continue };
+        let rows = &routing.rows_for[j];
+        let s = rows.len();
+        let out = outputs[j].as_ref().expect("planned expert without output");
+        h.axpy_rows(rows, &routing.weights_for[j], out);
+
+        // Account simulated time + link/memory bookkeeping.
+        let cost = cx.policy.expert_cost_us(*plan, s, &cx.lat);
+        cx.timeline.schedule(plan.device(), t0 + waits[j], cost);
+        match plan {
+            ExpertPlan::GpuResident => cx.events.resident += 1,
+            ExpertPlan::GpuTransfer => {
+                cx.events.transferred += 1;
+                cx.link.weight_transfer();
+            }
+            ExpertPlan::Cpu => {
+                cx.events.cpu += 1;
+                cx.link.activation_transfer(s); // out
+                cx.link.activation_transfer(s); // back
+            }
+        }
+    }
+    // Layer boundary: expert outputs must be combined before the next
+    // layer — both device queues join.
+    let done = cx.timeline.barrier();
+    cx.clock.advance_to_us(done);
+    Ok(())
+}
+
+/// Issue the asynchronous prefetch window: the top `depth` predicted
+/// experts of the NEAREST profitably-reachable lookahead layer, on the
+/// cache's serialized PCIe lane, overlapping this layer's compute.
+///
+/// Speculation gets its own Algorithm 1: a transfer is only issued when
+/// its *projected* residual wait at use time — lane position plus one
+/// transfer, minus `d` layers of estimated lead
+/// ([`PipelineState::expected_layer_gap`]) — still beats the demand paths
+/// ([`crate::scheduler::inflight_wins`]).  Distances whose lead cannot
+/// hide enough of the transfer are skipped (on fast decode layers `d = 1`
+/// often cannot pay while `d = 2` can), and only the minimal profitable
+/// distance issues: nearer layers re-evaluate the farther ones next call
+/// with better predictions.  Pins are broken lazily, one per needed slot
+/// up to the working-set budget, so a workload the gate rejects keeps the
+/// full pinned placement and runs exactly like the serial loop.
+fn prefetch_window(
+    cx: &mut ExecContext,
+    layer: usize,
+    inp_size: &[usize],
+    n_layers: usize,
+    now_us: f64,
+) {
+    let gap = cx.pipeline.expected_layer_gap();
+    if gap <= 0.0 {
+        return; // no lead-time estimate yet (first layers of a fresh kind)
+    }
+    let transfer = cx.lat.transfer_lat();
+    let active = inp_size.iter().filter(|&&s| s > 0).count().max(1);
+    let s_pred = (inp_size.iter().sum::<usize>() / active).max(1);
+    let budget = (2 * cx.pipeline.depth).min(cx.memory.capacity() / 2);
+    // Projected residual wait if the next transfer were issued now and
+    // consumed `d` layers from now; re-evaluated per issued transfer —
+    // each issue pushes the serialized lane one transfer further out, so
+    // a distance that paid for its first transfer may not pay for its
+    // second.
+    let wait_at = |lane_free: f64, d: usize| {
+        (lane_free.max(now_us) + transfer - (now_us + d as f64 * gap)).max(0.0)
+    };
+    for d in 1..=cx.pipeline.lookahead {
+        if layer + d >= n_layers {
+            break;
+        }
+        if !crate::scheduler::inflight_wins(wait_at(cx.memory.lane_free_at(), d), s_pred, &cx.lat)
+        {
+            continue; // not enough lead at this distance; try farther
+        }
+        let targets = cx.pipeline.predict(layer, inp_size, d);
+        let mut issued = 0;
+        for j in targets {
+            if issued >= cx.pipeline.depth {
+                break;
+            }
+            if cx.memory.is_resident((layer + d, j)) {
+                continue; // pinned, cached, or already in flight
+            }
+            if !crate::scheduler::inflight_wins(
+                wait_at(cx.memory.lane_free_at(), d),
+                s_pred,
+                &cx.lat,
+            ) {
+                break; // the lane moved out from under this distance
+            }
+            match cx.memory.prefetch((layer + d, j), now_us, transfer) {
+                Some(_) => issued += 1,
+                None => {
+                    // Distinguish "lane backlogged" (nothing helps) from
+                    // "every slot pinned" (lazily carve one working-set
+                    // slot and retry once).
+                    let lane_full = cx.memory.lane_free_at()
+                        > now_us + cx.memory.max_lane_depth * transfer;
+                    if !lane_full
+                        && cx.pipeline.released < budget
+                        && cx.memory.release_pins(1) == 1
+                    {
+                        cx.pipeline.released += 1;
+                        if cx.memory.prefetch((layer + d, j), now_us, transfer).is_some() {
+                            issued += 1;
+                            continue;
+                        }
+                    }
+                    return;
+                }
+            }
+        }
+        break; // only the minimal profitable distance issues
+    }
+}
+
+/// Algorithm 1 extended for in-flight transfers: where the policy planned
+/// a demand path (CPU or synchronous transfer) for an expert whose
+/// prefetch is still mid-flight, waiting out the residual transfer and
+/// running on the GPU wins whenever it undercuts what the policy would
+/// actually charge for its own plan.  The comparison prices the kept plan
+/// through `expert_cost_us` — NOT the closed-form Algorithm 1 costs
+/// ([`crate::scheduler::inflight_wins`] is that pure form) — because
+/// policies discount their demand paths (Fiddler streams transfers behind
+/// compute, pricing `GpuTransfer` at `max(transfer, gpu)`), and an
+/// override that beats the undiscounted price but loses to the
+/// discounted one would make the modeled layer *slower*.
+fn apply_inflight_overrides(
+    cx: &mut ExecContext,
+    layer: usize,
+    inp_size: &[usize],
+    inflight: &[Option<f64>],
+    t0: f64,
+    plans: &mut [Option<ExpertPlan>],
+    waits: &mut [f64],
+) {
+    for (j, plan) in plans.iter_mut().enumerate() {
+        let s = inp_size[j];
+        if s == 0 {
+            continue;
+        }
+        let cur = match plan {
+            Some(p @ (ExpertPlan::Cpu | ExpertPlan::GpuTransfer)) => *p,
+            _ => continue,
+        };
+        // Plan-time snapshot, NOT the current cache state: a dynamic
+        // policy's demand admit() may have promoted the entry since.
+        let Some(Some(ready)) = inflight.get(j) else { continue };
+        let wait = *ready - t0;
+        let overridden =
+            wait + cx.policy.expert_cost_us(ExpertPlan::GpuResident, s, &cx.lat);
+        if overridden < cx.policy.expert_cost_us(cur, s, &cx.lat) {
+            *plan = Some(ExpertPlan::GpuResident);
+            waits[j] = wait;
+            if cur == ExpertPlan::GpuTransfer
+                && cx.memory.ready_at((layer, j)).is_some_and(|r| r <= t0)
+            {
+                // A dynamic policy demand-admitted the in-flight entry
+                // while planning; the override supersedes that transfer —
+                // take its charge (and the entry's promotion) back.
+                cx.memory.cancel_demand_transfer((layer, j), *ready);
+            }
+            // The provisional plan-time miss becomes a (prefetch) hit —
+            // the expert is served from the speculative transfer.
+            cx.memory.claim_inflight((layer, j));
+            cx.events.prefetch_overlapped += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diag_transitions(n_layers: usize, e: usize) -> TransitionProfile {
+        let mut counts = vec![vec![vec![1u64; e]; e]; n_layers - 1];
+        for l in counts.iter_mut() {
+            for (i, row) in l.iter_mut().enumerate() {
+                row[i] = 1_000;
+            }
+        }
+        TransitionProfile { n_layers, n_experts: e, counts }
+    }
+
+    #[test]
+    fn disabled_state_records_and_predicts_nothing() {
+        let mut st = PipelineState::disabled();
+        st.begin_pass(4, ForwardKind::Prefill);
+        st.record_routing(0, &[1, 0, 0, 0]);
+        assert!(st.chunk_routing.is_empty(), "lookahead 0 must not log routing");
+        assert!(st.predict(0, &[1, 0, 0, 0], 1).is_empty());
+    }
+
+    #[test]
+    fn transition_predictor_follows_the_chain() {
+        let mut st = PipelineState::new(2, 2, Some(diag_transitions(4, 4)));
+        st.begin_pass(4, ForwardKind::Decode);
+        // Diagonal transitions: expert 2 active now predicts expert 2 at
+        // every lookahead distance — and the noise-level off-diagonal
+        // experts are filtered by the above-uniform mass floor.
+        assert_eq!(st.predict(0, &[0, 0, 5, 0], 1), vec![2]);
+        assert_eq!(st.predict(0, &[0, 0, 5, 0], 2), vec![2]);
+    }
+
+    #[test]
+    fn weak_transition_targets_are_filtered() {
+        // Uniform transitions put every expert at exactly uniform mass —
+        // all below the 1.5x-uniform floor: no prediction is worth a
+        // speculative transfer (the no-artifacts fallback profile must
+        // not flood the PCIe lane with guesses).
+        let uni = TransitionProfile::uniform(3, 4);
+        let mut st = PipelineState::new(1, 2, Some(uni));
+        st.begin_pass(3, ForwardKind::Decode);
+        assert!(st.predict(0, &[1, 1, 0, 0], 1).is_empty());
+    }
+
+    #[test]
+    fn gap_ewma_is_tracked_per_pass_kind() {
+        let mut st = PipelineState::new(1, 2, None);
+        st.begin_pass(4, ForwardKind::Decode);
+        st.observe_layer_start(0.0);
+        st.observe_layer_start(100.0);
+        assert!((st.expected_layer_gap() - 100.0).abs() < 1e-9);
+        // Chunk passes keep their own (much larger) estimate.
+        st.begin_pass(4, ForwardKind::ChunkContinuation);
+        assert_eq!(st.expected_layer_gap(), 0.0, "no chunk sample yet");
+        st.observe_layer_start(0.0);
+        st.observe_layer_start(5_000.0);
+        assert!((st.expected_layer_gap() - 5_000.0).abs() < 1e-9);
+        // Back to decode: the estimate survives, and the huge inter-pass
+        // gap is NOT sampled (begin_pass resets the anchor).
+        st.begin_pass(4, ForwardKind::Decode);
+        st.observe_layer_start(1e9);
+        assert!((st.expected_layer_gap() - 100.0).abs() < 1e-9);
+        st.observe_layer_start(1e9 + 200.0);
+        let g = st.expected_layer_gap();
+        assert!(g > 100.0 && g < 200.0, "EWMA must blend, got {g}");
+    }
+
+    #[test]
+    fn continuation_reuses_prior_chunk_routing_across_interleaved_decodes() {
+        let mut st = PipelineState::new(1, 2, Some(diag_transitions(3, 4)));
+        // Chunk 1 of the prompt observed expert 3 dominating layer 1.
+        st.begin_pass(3, ForwardKind::Prefill);
+        st.record_routing(0, &[1, 0, 0, 0]);
+        st.record_routing(1, &[0, 1, 2, 9]);
+        // The serve loop interleaves decode steps of OTHER sequences
+        // between chunks; their routing must not clobber the predictor.
+        st.begin_pass(3, ForwardKind::Decode);
+        st.record_routing(1, &[9, 0, 0, 0]);
+        // Chunk 2 continues the prompt: layer 0's lookahead into layer 1
+        // must rank expert 3 first (observed in chunk 1), not expert 0
+        // (the decode pass's routing, or the diagonal transition).
+        st.begin_pass(3, ForwardKind::ChunkContinuation);
+        let pred = st.predict(0, &[7, 0, 0, 0], 1);
+        assert_eq!(pred[0], 3);
+        // Idle experts are not predicted at all from observed routing.
+        assert!(!pred.contains(&0));
+    }
+
+    #[test]
+    fn fresh_prompt_clears_the_observed_predictor() {
+        let mut st = PipelineState::new(1, 2, None);
+        st.begin_pass(3, ForwardKind::Prefill);
+        st.record_routing(1, &[0, 9, 0, 0]);
+        // Decode passes never consult the chunk log (transitions are None
+        // here, so prediction is empty)...
+        st.begin_pass(3, ForwardKind::Decode);
+        assert!(st.predict(0, &[1, 1, 0, 0], 1).is_empty());
+        // ...and a NEW prompt's first chunk resets it: its continuation
+        // must not inherit the previous prompt's routing.
+        st.begin_pass(3, ForwardKind::Prefill);
+        st.begin_pass(3, ForwardKind::ChunkContinuation);
+        assert!(st.predict(0, &[1, 1, 0, 0], 1).is_empty());
+    }
+
+    #[test]
+    fn mismatched_transition_shape_is_skipped() {
+        // A transitions profile for a different model (wrong expert
+        // count) must be ignored, not panic.
+        let mut st = PipelineState::new(1, 2, Some(diag_transitions(3, 8)));
+        st.begin_pass(3, ForwardKind::Decode);
+        assert!(st.predict(0, &[1, 0, 0, 0], 1).is_empty());
+    }
+}

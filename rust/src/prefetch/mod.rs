@@ -66,20 +66,48 @@ impl TransitionProfile {
     /// counts) at layer `l`; returns expert indices sorted by descending
     /// predicted mass.
     pub fn predict_next(&self, layer: usize, inp_size: &[usize]) -> Vec<usize> {
+        self.predict_ahead(layer, inp_size, 1)
+    }
+
+    /// One transition step: propagate an expert-mass vector from layer
+    /// `layer` to layer `layer + 1`, normalized to unit sum (so chained
+    /// propagation stays in range regardless of count magnitudes).
+    pub fn propagate_mass(&self, layer: usize, mass: &[f64]) -> Vec<f64> {
         assert!(layer + 1 < self.n_layers, "no transitions out of the last layer");
-        assert_eq!(inp_size.len(), self.n_experts);
+        assert_eq!(mass.len(), self.n_experts);
         let t = &self.counts[layer];
         let mut score = vec![0f64; self.n_experts];
-        for (i, &s) in inp_size.iter().enumerate() {
-            if s == 0 {
+        for (i, &m) in mass.iter().enumerate() {
+            if m <= 0.0 {
                 continue;
             }
             for (j, sc) in score.iter_mut().enumerate() {
-                *sc += s as f64 * t[i][j] as f64;
+                *sc += m * t[i][j] as f64;
             }
         }
+        let sum: f64 = score.iter().sum();
+        if sum > 0.0 {
+            for sc in score.iter_mut() {
+                *sc /= sum;
+            }
+        }
+        score
+    }
+
+    /// Predict the experts of layer `layer + d` from the routing observed
+    /// at `layer`, chaining `d` transition steps (the pipelined layer
+    /// executor's lookahead window); indices sorted by descending mass,
+    /// ties by index.
+    pub fn predict_ahead(&self, layer: usize, inp_size: &[usize], d: usize) -> Vec<usize> {
+        assert!(d >= 1, "lookahead distance must be at least 1");
+        assert!(layer + d < self.n_layers, "lookahead beyond the last layer");
+        assert_eq!(inp_size.len(), self.n_experts);
+        let mut mass: Vec<f64> = inp_size.iter().map(|&s| s as f64).collect();
+        for step in 0..d {
+            mass = self.propagate_mass(layer + step, &mass);
+        }
         let mut idx: Vec<usize> = (0..self.n_experts).collect();
-        idx.sort_by(|&a, &b| score[b].total_cmp(&score[a]).then(a.cmp(&b)));
+        idx.sort_by(|&a, &b| mass[b].total_cmp(&mass[a]).then(a.cmp(&b)));
         idx
     }
 
@@ -220,6 +248,33 @@ mod tests {
     fn uniform_profile_is_deterministic_order() {
         let p = TransitionProfile::uniform(3, 4);
         assert_eq!(p.predict_next(0, &[1, 1, 0, 0]), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn predict_ahead_chains_the_diagonal() {
+        let p = diag_profile();
+        // Strongly diagonal transitions: expert 1 active at layer 0
+        // predicts expert 1 two layers out.
+        let pred = p.predict_ahead(0, &[0, 6, 0, 0], 2);
+        assert_eq!(pred[0], 1);
+        // d = 1 must agree with predict_next exactly (same ordering).
+        assert_eq!(p.predict_ahead(0, &[5, 0, 0, 0], 1), p.predict_next(0, &[5, 0, 0, 0]));
+        // Always a permutation of the expert set.
+        let mut sorted = pred.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn propagate_mass_normalizes() {
+        let p = diag_profile();
+        let m = p.propagate_mass(0, &[3.0, 0.0, 1.0, 0.0]);
+        let sum: f64 = m.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!(m[0] > m[1], "diagonal mass dominates");
+        // All-zero mass stays all-zero (no NaN from the 0/0 guard).
+        let z = p.propagate_mass(0, &[0.0; 4]);
+        assert!(z.iter().all(|&v| v == 0.0));
     }
 
     #[test]

@@ -27,6 +27,17 @@ impl Tensor {
         Tensor { shape: vec![], data: vec![v] }
     }
 
+    /// Gaussian-random tensor — the synthetic weights/activations used by
+    /// calibration ([`crate::latency::calib::measure_pool_expert`]),
+    /// benches, and tests.
+    pub fn randn(rng: &mut crate::util::rng::Rng, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: (0..n).map(|_| (rng.normal() as f32) * scale).collect(),
+        }
+    }
+
     pub fn numel(&self) -> usize {
         self.data.len()
     }

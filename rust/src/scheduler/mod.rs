@@ -67,6 +67,18 @@ pub fn decide_expert(
     }
 }
 
+/// Algorithm 1 extended for the pipelined layer executor: the expert's
+/// weights are already mid-flight on the PCIe lane, arriving `wait_us`
+/// from now.  Waiting the transfer out and running on the GPU wins when
+/// the residual wait plus the GPU run undercuts BOTH demand options (CPU
+/// execution, or a fresh synchronous transfer).  A prefetch that the
+/// previous layers' compute fully hid has `wait_us == 0` — its transfer
+/// is free.
+pub fn inflight_wins(wait_us: f64, s: usize, lat: &LatencyModel) -> bool {
+    debug_assert!(s > 0);
+    wait_us + lat.gpu_lat(s) < lat.cpu_lat(s).min(lat.gpu_lat(s) + lat.transfer_lat())
+}
+
 /// Plan a whole MoE layer: `inp_size[j]` tokens per expert.
 /// Returns `plans[j] = None` for idle experts.
 pub fn plan_layer(
@@ -96,6 +108,33 @@ pub fn predict_layer_us(
         match plan {
             Some(p @ (ExpertPlan::GpuResident | ExpertPlan::GpuTransfer)) => {
                 gpu += p.cost_us(lat, s)
+            }
+            Some(p @ ExpertPlan::Cpu) => cpu += p.cost_us(lat, s),
+            None => {}
+        }
+    }
+    gpu.max(cpu)
+}
+
+/// [`predict_layer_us`] with per-expert GPU ready offsets: `waits[j]` is
+/// how long after layer start expert `j`'s weights arrive (0 = already
+/// there).  GPU-planned experts serialize in expert-index order, each
+/// starting no earlier than its arrival — so a prefetch-hidden transfer
+/// costs only its un-hidden residue, never a full `transfer_lat()`.  With
+/// all-zero waits this is exactly [`predict_layer_us`].
+pub fn predict_layer_us_with_waits(
+    plans: &[Option<ExpertPlan>],
+    inp_size: &[usize],
+    waits: &[f64],
+    lat: &LatencyModel,
+) -> f64 {
+    assert_eq!(plans.len(), waits.len());
+    let mut gpu = 0.0f64;
+    let mut cpu = 0.0f64;
+    for ((plan, &s), &w) in plans.iter().zip(inp_size).zip(waits) {
+        match plan {
+            Some(p @ (ExpertPlan::GpuResident | ExpertPlan::GpuTransfer)) => {
+                gpu = gpu.max(w) + p.cost_us(lat, s);
             }
             Some(p @ ExpertPlan::Cpu) => cpu += p.cost_us(lat, s),
             None => {}
@@ -183,6 +222,83 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn inflight_decision_is_cost_argmin_property() {
+        // Waiting out an in-flight transfer must be chosen exactly when it
+        // is the cheapest of the three options.
+        check("inflight argmin", 256, |g: &mut Gen| {
+            let lat = LatencyModel {
+                gpu_const_us: g.f64_in(100.0, 10_000.0),
+                gpu_single_extra_us: g.f64_in(0.0, 1_000.0),
+                cpu_base_us: g.f64_in(0.0, 10_000.0),
+                cpu_per_token_us: g.f64_in(1.0, 2_000.0),
+                transfer_us: g.f64_in(100.0, 50_000.0),
+                act_roundtrip_per_token_us: g.f64_in(0.0, 5.0),
+            };
+            let s = g.usize_in(1..4096);
+            let wait = g.f64_in(0.0, 60_000.0);
+            let win = inflight_wins(wait, s, &lat);
+            let waited = wait + lat.gpu_lat(s);
+            let demand = lat.cpu_lat(s).min(lat.gpu_lat(s) + lat.transfer_lat());
+            assert_eq!(win, waited < demand);
+            // A fully hidden transfer (wait 0) always beats a fresh one.
+            assert!(
+                inflight_wins(0.0, s, &lat)
+                    || lat.cpu_lat(s) <= lat.gpu_lat(s),
+                "free weights must win unless the CPU is faster than resident GPU"
+            );
+        });
+    }
+
+    #[test]
+    fn zero_waits_match_plain_prediction() {
+        let lat = lat();
+        let plans = vec![
+            Some(ExpertPlan::Cpu),
+            Some(ExpertPlan::GpuResident),
+            None,
+            Some(ExpertPlan::GpuTransfer),
+        ];
+        let sizes = vec![1, 2, 0, 700];
+        let waits = vec![0.0; 4];
+        assert_eq!(
+            predict_layer_us_with_waits(&plans, &sizes, &waits, &lat),
+            predict_layer_us(&plans, &sizes, &lat)
+        );
+    }
+
+    #[test]
+    fn hidden_transfer_beats_demand_transfer_in_prediction() {
+        // The pipeline's accounting claim: an expert whose transfer was
+        // prefetch-hidden (GpuResident + small wait) costs the layer less
+        // than the same expert on the demand-transfer path.
+        let lat = lat();
+        let sizes = vec![512];
+        let demand = predict_layer_us(&[Some(ExpertPlan::GpuTransfer)], &sizes, &lat);
+        for wait_frac in [0.0, 0.25, 0.5] {
+            let wait = lat.transfer_lat() * wait_frac;
+            let hidden = predict_layer_us_with_waits(
+                &[Some(ExpertPlan::GpuResident)],
+                &sizes,
+                &[wait],
+                &lat,
+            );
+            assert!(
+                hidden < demand,
+                "wait {wait}: hidden {hidden} not below demand {demand}"
+            );
+        }
+        // And the wait is not free: prediction is monotone in it.
+        let a = predict_layer_us_with_waits(&[Some(ExpertPlan::GpuResident)], &sizes, &[0.0], &lat);
+        let b = predict_layer_us_with_waits(
+            &[Some(ExpertPlan::GpuResident)],
+            &sizes,
+            &[1_000.0],
+            &lat,
+        );
+        assert!(b > a);
     }
 
     #[test]

@@ -86,15 +86,30 @@ pub trait ServeBackend {
     /// One decode step for a batch of sequences; returns one next-token
     /// logits row per sequence, in batch order.  Rows are owned (beam
     /// groups score and fork from them after the call), which costs one
-    /// vocab-sized copy per sequence per step at the trait boundary; the
-    /// engine keeps a fused zero-copy sampling path
-    /// ([`Engine::decode_batch_step`]) for direct width-1 callers, and a
-    /// fused variant through this trait is a ROADMAP follow-on.
+    /// vocab-sized copy per sequence per step at the trait boundary — the
+    /// serve loop only takes this path when a beam group is decoding;
+    /// width-1 batches go through [`ServeBackend::decode_sample`].
     fn decode_logits(
         &mut self,
         last: &[u32],
         caches: &mut [&mut SequenceCache],
     ) -> Result<Vec<Vec<f32>>>;
+    /// Fused decode + sample: one next token per sequence, in batch
+    /// order.  For batches of width-1 groups nobody needs the logits
+    /// rows, so this path skips the per-sequence vocab-row copy that
+    /// [`ServeBackend::decode_logits`] pays at the trait boundary.  The
+    /// default routes through `decode_logits` and samples each row in
+    /// batch order — bit- and RNG-stream-identical to the unfused path —
+    /// while [`Engine`] overrides with its zero-copy fused kernel
+    /// ([`Engine::decode_batch_step`]).
+    fn decode_sample(
+        &mut self,
+        last: &[u32],
+        caches: &mut [&mut SequenceCache],
+    ) -> Result<Vec<u32>> {
+        let rows = self.decode_logits(last, caches)?;
+        Ok(rows.iter().map(|r| self.sample(r)).collect())
+    }
     /// Sample a next token from a logits row (greedy at temperature 0).
     fn sample(&mut self, logits: &[f32]) -> u32;
 }
@@ -146,6 +161,17 @@ impl ServeBackend for Engine {
         caches: &mut [&mut SequenceCache],
     ) -> Result<Vec<Vec<f32>>> {
         self.decode_batch_logits(last, caches)
+    }
+
+    fn decode_sample(
+        &mut self,
+        last: &[u32],
+        caches: &mut [&mut SequenceCache],
+    ) -> Result<Vec<u32>> {
+        // Fused engine kernel: samples straight from each logits row with
+        // zero copies; same RNG stream as sampling decode_logits rows in
+        // batch order.
+        self.decode_batch_step(last, caches)
     }
 
     fn sample(&mut self, logits: &[f32]) -> u32 {
@@ -591,23 +617,43 @@ pub fn serve_lifecycle<B: ServeBackend>(
 
         // 7. One decode step for every decoding slot (beam slots decode as
         //    ordinary batch rows — cross-request batching per scenario c).
-        let rows = {
+        //    A batch of pure width-1 groups takes the fused decode+sample
+        //    path — nobody needs the logits rows, so the per-sequence
+        //    vocab-row copy at the trait boundary is skipped; any beam
+        //    group in the batch forces the logits path for everyone (its
+        //    update scores whole rows).  Sampling order — and with it the
+        //    RNG stream — is identical either way: batch order.
+        enum StepOut {
+            Tokens(Vec<u32>),
+            Logits(Vec<Vec<f32>>),
+        }
+        let step = {
             let mut last: Vec<u32> = Vec::new();
             let mut caches: Vec<&mut SequenceCache> = Vec::new();
+            let mut all_width1 = true;
             for g in groups.iter_mut() {
                 if g.produced >= g.max_new {
                     continue; // already complete (e.g. max_new == 1): retire below
                 }
                 if let Phase::Decoding { slots } = &mut g.phase {
+                    if g.width > 1 {
+                        all_width1 = false;
+                    }
                     for s in slots.iter_mut() {
                         last.push(s.last);
                         caches.push(&mut s.cache);
                     }
                 }
             }
-            if last.is_empty() { None } else { Some(backend.decode_logits(&last, &mut caches)?) }
+            if last.is_empty() {
+                None
+            } else if all_width1 {
+                Some(StepOut::Tokens(backend.decode_sample(&last, &mut caches)?))
+            } else {
+                Some(StepOut::Logits(backend.decode_logits(&last, &mut caches)?))
+            }
         };
-        if let Some(rows) = rows {
+        if let Some(step) = step {
             let now = backend.now_us();
             let mut ri = 0;
             for g in groups.iter_mut() {
@@ -616,6 +662,19 @@ pub fn serve_lifecycle<B: ServeBackend>(
                 }
                 let Phase::Decoding { slots } = &mut g.phase else { continue };
                 let w = slots.len();
+                if let StepOut::Tokens(toks) = &step {
+                    debug_assert_eq!(w, 1, "fused path only runs width-1 batches");
+                    let tok = toks[ri];
+                    ri += w;
+                    let s = &mut slots[0];
+                    s.last = tok;
+                    s.tokens.push(tok);
+                    let _ = g.stream.send(Event::Token(tok));
+                    g.produced += 1;
+                    g.metrics.token_done_us.push(now);
+                    continue;
+                }
+                let StepOut::Logits(rows) = &step else { unreachable!() };
                 let rows_g = &rows[ri..ri + w];
                 ri += w;
                 if g.width == 1 {

@@ -1,0 +1,202 @@
+//! Pipelined-layer-executor contracts (PR 5).
+//!
+//! The acceptance property: all three forward paths (`prefill`,
+//! `prefill_chunk`, `decode_step`) run through the single
+//! [`fiddler::pipeline::run_layers`] driver, and their outputs are
+//! **bit-identical** across every lookahead x thread-count combination —
+//! the pipeline moves time around (prefetch-hidden transfers, overlapped
+//! dispatch), never the arithmetic.  Holds with the host kernel off (the
+//! default here): every plan runs the same PJRT expert executable, so even
+//! a prefetch-flipped plan cannot perturb a bit.
+//!
+//! The engine-level tests need the build-time artifacts and skip
+//! gracefully without them (like `tests/engine.rs`); the panic-drain
+//! property at the bottom runs everywhere.
+
+use fiddler::config::serving::{Policy, ServingConfig};
+use fiddler::config::HardwareConfig;
+use fiddler::coordinator::Engine;
+use fiddler::figures;
+use fiddler::kvcache::SequenceCache;
+use fiddler::runtime::Tensor;
+use fiddler::workload::{Dataset, WorkloadGen};
+
+fn artifacts_available() -> bool {
+    figures::artifact_dir("mixtral-tiny").join("weights_manifest.json").exists()
+}
+
+fn engine(lookahead: usize, threads: usize, policy: Policy) -> Engine {
+    let serving = ServingConfig {
+        policy,
+        pipeline_lookahead: lookahead,
+        threads,
+        ..Default::default()
+    };
+    Engine::new(figures::artifact_dir("mixtral-tiny"), &HardwareConfig::env1(), serving)
+        .expect("make artifacts first")
+}
+
+fn prompt(len: usize, seed: u64) -> Vec<u32> {
+    WorkloadGen::new(Dataset::sharegpt(), 512, seed).prompt(len)
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+fn cache_bits(c: &SequenceCache) -> Vec<u32> {
+    let mut out = Vec::new();
+    for l in &c.layers {
+        out.extend(l.k.iter().map(|v| v.to_bits()));
+        out.extend(l.v.iter().map(|v| v.to_bits()));
+    }
+    out
+}
+
+/// One run of all three forward paths; returns the bit patterns of every
+/// hidden-state output plus the final KV cache.
+fn run_all_paths(lookahead: usize, threads: usize, policy: Policy) -> Vec<Vec<u32>> {
+    let mut e = engine(lookahead, threads, policy);
+    let mut out: Vec<Vec<u32>> = Vec::new();
+
+    // Path 1: monolithic prefill.
+    let p = prompt(24, 11);
+    let mut cache = SequenceCache::new(e.model());
+    let h = e.runner.prefill(&p, &mut cache, &mut e.cx).unwrap();
+    out.push(bits(&h));
+
+    // Path 3 input state comes from path 1: three decode steps.
+    for t in [7u32, 19, 42] {
+        let xs = e.runner.ws.embed_tokens(&[t]);
+        let mut caches = [&mut cache];
+        let h = e.runner.decode_step(&xs, &mut caches, &mut e.cx).unwrap();
+        out.push(bits(&h));
+    }
+    out.push(cache_bits(&cache));
+
+    // Path 2: chunked prefill — first chunk (monolithic under the hood),
+    // then two continuation chunks, which exercise the observed-routing
+    // predictor when lookahead > 0.
+    let pc = prompt(30, 23);
+    let mut chunk_cache = SequenceCache::new(e.model());
+    let h = e.runner.prefill_chunk(&pc[..12], &mut chunk_cache, &mut e.cx).unwrap();
+    out.push(bits(&h));
+    let h = e.runner.prefill_chunk(&pc[12..22], &mut chunk_cache, &mut e.cx).unwrap();
+    out.push(bits(&h));
+    let h = e.runner.prefill_chunk(&pc[22..], &mut chunk_cache, &mut e.cx).unwrap();
+    out.push(bits(&h));
+    out.push(cache_bits(&chunk_cache));
+
+    out
+}
+
+/// The acceptance matrix: lookahead {0, 1, 2} x threads {1, 2, 4}, all
+/// bit-identical to the serial reference (lookahead 0, threads 1).
+#[test]
+fn pipelined_forward_bit_identical_across_lookahead_and_threads() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let reference = run_all_paths(0, 1, Policy::Fiddler);
+    assert!(!reference.is_empty());
+    for lookahead in [0usize, 1, 2] {
+        for threads in [1usize, 2, 4] {
+            if (lookahead, threads) == (0, 1) {
+                continue;
+            }
+            let got = run_all_paths(lookahead, threads, Policy::Fiddler);
+            assert_eq!(got.len(), reference.len());
+            for (i, (g, want)) in got.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    g, want,
+                    "lookahead={lookahead} threads={threads}: output {i} not bit-identical"
+                );
+            }
+        }
+    }
+}
+
+/// The pipeline must compose with dynamically managed residency too: the
+/// cached policy's outputs are equally lookahead-invariant.
+#[test]
+fn pipelined_forward_bit_identical_under_cached_policy() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let reference = run_all_paths(0, 1, Policy::FiddlerCached);
+    let got = run_all_paths(2, 2, Policy::FiddlerCached);
+    assert_eq!(got, reference, "cached-policy outputs changed under the pipeline");
+}
+
+/// Lookahead must never *slow down* the modeled step: with prefetch-hidden
+/// transfers, per-token virtual time at lookahead >= 1 stays at or below
+/// the serial loop's whenever the serial plan mixes CPU and GPU experts.
+#[test]
+fn lookahead_does_not_increase_virtual_decode_time() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let decode_us = |lookahead: usize| {
+        let mut e = engine(lookahead, 1, Policy::Fiddler);
+        let p = prompt(24, 31);
+        let mut cache = SequenceCache::new(e.model());
+        e.runner.prefill(&p, &mut cache, &mut e.cx).unwrap();
+        let t0 = e.cx.clock.now_us();
+        let mut tok = 5u32;
+        for _ in 0..16 {
+            let xs = e.runner.ws.embed_tokens(&[tok]);
+            let mut caches = [&mut cache];
+            let h = e.runner.decode_step(&xs, &mut caches, &mut e.cx).unwrap();
+            let logits = e.runner.lm_head(&h, &mut e.cx).unwrap();
+            tok = e.sample(logits.row(0));
+        }
+        let mixed = e.cx.events.cpu > 0 && (e.cx.events.resident + e.cx.events.transferred) > 0;
+        ((e.cx.clock.now_us() - t0) / 16.0, mixed, e.cx.events.clone())
+    };
+    let (serial_us, mixed, _) = decode_us(0);
+    if !mixed {
+        eprintln!("skipping: serial decode plan has no CPU/GPU mix on this profile");
+        return;
+    }
+    for lookahead in [1usize, 2] {
+        let (us, _, ev) = decode_us(lookahead);
+        // Not meaningfully worse than serial — the strict-reduction claim
+        // is reported (with exact numbers) by the BENCH_PR5.json pipeline
+        // section; here a small tolerance absorbs the residency reshuffle
+        // of carving the speculative working set out of the pinned cache.
+        assert!(
+            us <= serial_us * 1.10,
+            "lookahead {lookahead}: {us:.1} us/token well above serial {serial_us:.1}"
+        );
+        let _ = ev;
+    }
+}
+
+/// Mirror of `exec`'s panic-path property at the pipeline's join: a
+/// panicking stage surfaces at the work-stealing join, never kills a
+/// worker, and the pool keeps serving subsequent layers.  Artifact-free.
+#[test]
+fn panicking_stage_drains_through_stealing_join() {
+    use fiddler::exec::ExecutorPool;
+    use std::panic::AssertUnwindSafe;
+
+    for threads in [1usize, 2, 4] {
+        let pool = ExecutorPool::new(threads);
+        let jobs: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(|| 1),
+            Box::new(|| panic!("expert stage exploded")),
+            Box::new(|| 3),
+        ];
+        let pending = pool.submit(jobs);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| pending.wait_stealing(&pool)));
+        assert!(r.is_err(), "threads={threads}: stage panic must reach the join");
+        // The next "layer" still runs to completion on the same pool.
+        let out = pool
+            .submit((0..6usize).map(|i| move || i * i).collect::<Vec<_>>())
+            .wait_stealing(&pool);
+        assert_eq!(out, vec![0, 1, 4, 9, 16, 25], "threads={threads}");
+    }
+}

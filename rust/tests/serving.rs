@@ -119,6 +119,46 @@ fn chunked_prefill_bounds_itl_with_identical_tokens() {
     );
 }
 
+/// Fused width-1 sampling: the serve loop's fused decode+sample path (all
+/// groups width-1) must produce exactly the tokens of the logits path,
+/// including the RNG stream at temperature > 0.  The trait default and the
+/// by-hand decode_logits + sample sequence are compared on twin backends.
+#[test]
+fn fused_decode_sample_matches_logits_path() {
+    // Temperature > 0 so the RNG stream itself is under test: a reordered
+    // or extra sample() call would diverge immediately.
+    let serving = ServingConfig { temperature: 0.8, ..Default::default() };
+    let mut fused = SimBackend::new(serving.clone());
+    let mut unfused = SimBackend::new(serving);
+
+    let prompt: Vec<u32> = (1..=6).collect();
+    let mut cf1 = fused.new_cache();
+    let mut cf2 = fused.new_cache();
+    let mut cu1 = unfused.new_cache();
+    let mut cu2 = unfused.new_cache();
+    fused.prefill_chunk(&prompt, &mut cf1, true).unwrap();
+    fused.prefill_chunk(&[9, 9, 9], &mut cf2, true).unwrap();
+    unfused.prefill_chunk(&prompt, &mut cu1, true).unwrap();
+    unfused.prefill_chunk(&[9, 9, 9], &mut cu2, true).unwrap();
+
+    let mut last_f = [3u32, 4];
+    let mut last_u = [3u32, 4];
+    for _ in 0..5 {
+        let toks_f = {
+            let mut caches = [&mut cf1, &mut cf2];
+            fused.decode_sample(&last_f, &mut caches).unwrap()
+        };
+        let toks_u = {
+            let mut caches = [&mut cu1, &mut cu2];
+            let rows = unfused.decode_logits(&last_u, &mut caches).unwrap();
+            rows.iter().map(|r| unfused.sample(r)).collect::<Vec<u32>>()
+        };
+        assert_eq!(toks_f, toks_u, "fused path diverged from logits + sample");
+        last_f.copy_from_slice(&toks_f);
+        last_u.copy_from_slice(&toks_u);
+    }
+}
+
 /// Shutdown semantics: queued-but-never-admitted requests receive a
 /// terminal event (their receivers never hang) while in-flight sequences
 /// drain to completion.  Timed deterministically via virtual arrivals.
