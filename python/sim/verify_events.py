@@ -1,0 +1,349 @@
+"""Faithful Python port of PR 6's typed event stream logic.
+
+Mirrors the Rust: the JSONL codec (compact sorted-key objects keyed by
+"ev", integer-valued numbers rendered without a fraction, unknown kinds
+preserved as opaque passthrough), the bounded drop-newest sink queue with
+its SinkDropped marker, trace folding (token index-overwrite semantics
+for beam re-emission), deterministic record->fold->replay through a
+virtual-time mini scheduler, and the flame summary's active-window
+attribution of shared cache events.
+
+Acceptance checks:
+ 1. codec: every event kind encodes -> parses -> re-encodes to a fixed
+    point; unknown kinds and unknown fields survive a rewrite.
+ 2. record -> fold -> replay is bit-identical: the replayed scheduler
+    (workload reconstructed ONLY from the trace) produces the same token
+    streams and finish times as the recorded run.  (3 seeds)
+ 3. recording is free in virtual time: the same run with the sink
+    disabled produces identical tokens and clocks (emission never
+    advances the clock, by construction).
+ 4. sink overflow drops newest and appends one SinkDropped{count}.
+ 5. summary attribution: shared cache events charge every request active
+    at their timestamp, and only those.
+"""
+
+# ---------------------------------------------------------------- codec
+
+def _num(x):
+    if isinstance(x, float) and x.is_integer():
+        return str(int(x))
+    if isinstance(x, float):
+        return repr(x)
+    return str(x)
+
+def encode(v):
+    """Compact sorted-key JSON, matching util/json.rs Display."""
+    if v is None:
+        return "null"
+    if isinstance(v, bool):
+        return "true" if v else "false"
+    if isinstance(v, (int, float)):
+        return _num(v)
+    if isinstance(v, str):
+        return '"' + v.replace("\\", "\\\\").replace('"', '\\"') + '"'
+    if isinstance(v, list):
+        return "[" + ",".join(encode(x) for x in v) + "]"
+    return "{" + ",".join(f'{encode(k)}:{encode(v[k])}' for k in sorted(v)) + "}"
+
+def parse(s):
+    """Minimal JSON parser (objects/arrays/strings/numbers/atoms)."""
+    def skip(i):
+        while i < len(s) and s[i] in " \t\r\n":
+            i += 1
+        return i
+    def value(i):
+        i = skip(i)
+        c = s[i]
+        if c == "{":
+            obj, i = {}, skip(i + 1)
+            if s[i] == "}":
+                return obj, i + 1
+            while True:
+                k, i = value(i)
+                i = skip(i)
+                assert s[i] == ":", s[i:]
+                v, i = value(i + 1)
+                obj[k] = v
+                i = skip(i)
+                if s[i] == ",":
+                    i = skip(i + 1)
+                    continue
+                assert s[i] == "}"
+                return obj, i + 1
+        if c == "[":
+            arr, i = [], skip(i + 1)
+            if s[i] == "]":
+                return arr, i + 1
+            while True:
+                v, i = value(i)
+                arr.append(v)
+                i = skip(i)
+                if s[i] == ",":
+                    i = skip(i + 1)
+                    continue
+                assert s[i] == "]"
+                return arr, i + 1
+        if c == '"':
+            out, i = [], i + 1
+            while s[i] != '"':
+                if s[i] == "\\":
+                    i += 1
+                out.append(s[i])
+                i += 1
+            return "".join(out), i + 1
+        for lit, val in (("true", True), ("false", False), ("null", None)):
+            if s.startswith(lit, i):
+                return val, i + len(lit)
+        j = i
+        while j < len(s) and s[j] in "+-0123456789.eE":
+            j += 1
+        tok = s[i:j]
+        return (float(tok) if any(c in tok for c in ".eE") else int(tok)), j
+    v, i = value(0)
+    assert skip(i) == len(s), "trailing garbage"
+    return v
+
+KNOWN_KINDS = {
+    "meta", "request_arrived", "request_rejected", "request_admitted",
+    "kv_budget", "prefill_chunk", "token", "request_finished",
+    "request_failed", "cache_lookup", "cache_evict", "cache_transfer",
+    "cache_prefetch", "prefetch_issued", "prefetch_overlapped",
+    "prefetch_cancelled", "exec_dispatch", "exec_join", "sink_dropped",
+}
+
+def parse_line(line):
+    """Rust TraceEvent::parse_line: errors only on non-JSON; unknown
+    kinds become opaque passthrough (the whole object is retained)."""
+    v = parse(line)
+    assert isinstance(v, dict) and "ev" in v
+    return v  # dict IS the event; kind() == v["ev"] if known else "unknown"
+
+EXAMPLES = [
+    {"ev": "meta", "seed": 41, "temperature": 0.8, "max_batch": 4,
+     "queue_capacity": 64, "prefill_chunk": 16, "admission": "fcfs",
+     "kv_budget_mb": 8, "slo_ttft_ms": 300.0, "lookahead": 1},
+    {"ev": "request_arrived", "req": 0, "t_us": 10.5, "prompt": [1, 2, 3],
+     "max_new": 8, "width": 1},
+    {"ev": "request_rejected", "req": 1, "t_us": 11.0, "reason": "queue full"},
+    {"ev": "request_admitted", "req": 0, "t_us": 12.0, "kv_reserved": 4096,
+     "queue_delay_us": 1.5},
+    {"ev": "kv_budget", "t_us": 12.0, "used_bytes": 4096, "borrowed_slots": 0},
+    {"ev": "prefill_chunk", "req": 0, "t_us": 40.0, "start": 0, "len": 3,
+     "is_last": True},
+    {"ev": "token", "req": 0, "t_us": 40.0, "token": 7, "index": 0},
+    {"ev": "request_finished", "req": 0, "t_us": 90.0, "tokens": 8,
+     "ttft_us": 30.0, "queue_delay_us": 1.5},
+    {"ev": "request_failed", "req": 2, "t_us": 95.0, "reason": "shutdown"},
+    {"ev": "cache_lookup", "t_us": 41.0, "layer": 2, "expert": 5,
+     "hit": True, "prefetch_hit": False},
+    {"ev": "cache_evict", "t_us": 42.0, "layer": 0, "expert": 1},
+    {"ev": "cache_transfer", "t_us": 43.0, "layer": 1, "expert": 3,
+     "bytes": 352 * 1024 * 1024},
+    {"ev": "cache_prefetch", "t_us": 44.0, "layer": 3, "expert": 0,
+     "ready_us": 60.0},
+    {"ev": "prefetch_issued", "t_us": 45.0, "layer": 1, "target_layer": 2,
+     "expert": 4, "distance": 1, "ready_us": 61.0},
+    {"ev": "prefetch_overlapped", "t_us": 46.0, "layer": 2, "expert": 4,
+     "wait_us": 3.0},
+    {"ev": "prefetch_cancelled", "t_us": 47.0, "layer": 2, "expert": 6},
+    {"ev": "exec_dispatch", "t_us": 48.0, "layer": 0, "chunks": 5,
+     "cpu_experts": 2, "gpu_experts": 4},
+    {"ev": "exec_join", "t_us": 49.0, "layer": 0, "stolen": 2},
+    {"ev": "sink_dropped", "count": 17},
+]
+
+for ev in EXAMPLES:
+    line = encode(ev)
+    back = parse_line(line)
+    assert back == ev, (ev, back)
+    assert encode(back) == line  # fixed point: lossless log rewrite
+    assert ev["ev"] in KNOWN_KINDS
+# Unknown kind and unknown fields survive a rewrite.
+fut = parse_line('{"ev":"warp_drive","flux":3}')
+assert fut["ev"] not in KNOWN_KINDS and parse_line(encode(fut)) == fut
+ext = parse_line('{"ev":"token","req":9,"new_field":true}')
+assert ext["req"] == 9
+try:
+    parse_line("not json")
+    raise SystemExit("parse_line accepted garbage")
+except (AssertionError, ValueError):
+    pass
+print(f"check1 OK: {len(EXAMPLES)} kinds round-trip, unknowns pass through")
+
+# ------------------------------------------------------- sink semantics
+
+class Sink:
+    """Bounded drop-newest queue (events/sink.rs). None = disabled."""
+    def __init__(self, cap=None):
+        self.cap, self.q, self.dropped = cap, [], 0
+    def emit(self, make_event):
+        if self.cap is None:
+            return  # disabled: one branch, closure never runs
+        if len(self.q) >= self.cap:
+            self.dropped += 1
+            return
+        self.q.append(make_event())
+    def drain(self):
+        out = list(self.q)
+        if self.dropped:
+            out.append({"ev": "sink_dropped", "count": self.dropped})
+        return out
+
+s = Sink(cap=4)
+for i in range(9):
+    s.emit(lambda i=i: {"ev": "token", "req": 0, "t_us": float(i),
+                        "token": i, "index": i})
+log = s.drain()
+assert [e["token"] for e in log[:4]] == [0, 1, 2, 3]  # newest dropped
+assert log[-1] == {"ev": "sink_dropped", "count": 5}
+print("check4 OK: overflow drops newest, one SinkDropped marker")
+
+# --------------------------------------------- mini lifecycle scheduler
+
+def rng_stream(seed):
+    x = seed | 1
+    while True:
+        x ^= (x << 13) & 0xFFFFFFFFFFFFFFFF
+        x ^= x >> 7
+        x ^= (x << 17) & 0xFFFFFFFFFFFFFFFF
+        yield x
+
+def run(requests, seed, prefill_chunk, max_batch, sink):
+    """Virtual-time chunked-prefill + decode loop, Rust-shaped: ids in
+    ingest order, Meta first, admission FCFS into max_batch slots, one
+    chunk or one decode round per iteration.  Emission never touches
+    the clock."""
+    sink.emit(lambda: {"ev": "meta", "seed": seed, "max_batch": max_batch,
+                       "prefill_chunk": prefill_chunk})
+    rng = rng_stream(seed)
+    queued = []
+    for rid, (arrive, prompt, max_new) in enumerate(requests):
+        sink.emit(lambda rid=rid, arrive=arrive, prompt=prompt, max_new=max_new: {
+            "ev": "request_arrived", "req": rid, "t_us": float(arrive),
+            "prompt": list(prompt), "max_new": max_new, "width": 1})
+        queued.append(dict(rid=rid, arrive=arrive, prompt=prompt,
+                           max_new=max_new, cursor=0, tokens=[], done_t=None))
+    now, active, out = 0.0, [], []
+    while queued or active:
+        while queued and len(active) < max_batch and queued[0]["arrive"] <= now:
+            g = queued.pop(0)
+            sink.emit(lambda g=g: {"ev": "request_admitted", "req": g["rid"],
+                                   "t_us": now, "queue_delay_us": now - g["arrive"]})
+            active.append(g)
+        if not active:
+            now = max(now, queued[0]["arrive"])
+            continue
+        g = active[0]
+        if g["cursor"] < len(g["prompt"]):
+            step = min(prefill_chunk, len(g["prompt"]) - g["cursor"])
+            start = g["cursor"]
+            g["cursor"] += step
+            now += 50.0 * step  # chunk cost
+            last = g["cursor"] == len(g["prompt"])
+            sink.emit(lambda g=g, start=start, step=step, last=last: {
+                "ev": "prefill_chunk", "req": g["rid"], "t_us": now,
+                "start": start, "len": step, "is_last": last})
+            if not last:
+                continue
+        # one decode round over the batch (shared step cost)
+        now += 100.0 + 10.0 * len(active)
+        sink.emit(lambda n=len(active): {"ev": "cache_lookup", "t_us": now,
+                                         "layer": 0, "expert": n % 8,
+                                         "hit": n % 2 == 0,
+                                         "prefetch_hit": False})
+        for g in list(active):
+            if g["cursor"] < len(g["prompt"]):
+                continue  # still prefilling behind the head
+            tok = (next(rng) ^ hash(tuple(g["prompt"]))) % 32000
+            g["tokens"].append(tok)
+            sink.emit(lambda g=g, tok=tok: {"ev": "token", "req": g["rid"],
+                                            "t_us": now, "token": tok,
+                                            "index": len(g["tokens"]) - 1})
+            if len(g["tokens"]) == g["max_new"]:
+                g["done_t"] = now
+                sink.emit(lambda g=g: {"ev": "request_finished",
+                                       "req": g["rid"], "t_us": now,
+                                       "tokens": len(g["tokens"]),
+                                       "ttft_us": 0.0, "queue_delay_us": 0.0})
+                active.remove(g)
+                out.append(g)
+    out.sort(key=lambda g: g["rid"])
+    return out
+
+def fold(events):
+    """replay.rs fold_trace: meta + requests, token index-overwrite."""
+    meta, reqs = None, {}
+    for e in events:
+        k = e["ev"]
+        if k == "meta":
+            meta = e
+        elif k == "request_arrived":
+            reqs[e["req"]] = dict(arrive=e["t_us"], prompt=e["prompt"],
+                                  max_new=e["max_new"], tokens=[])
+        elif k == "token":
+            t = reqs[e["req"]]["tokens"]
+            if e["index"] == len(t):
+                t.append(e["token"])
+            elif e["index"] < len(t):
+                t[e["index"]] = e["token"]  # beam retire re-emission
+    return meta, [reqs[k] for k in sorted(reqs)]
+
+for seed in (7, 23, 991):
+    reqs = [(i * 120.0, [seed + i, i, i + 1] * (3 if i % 3 == 2 else 1), 6)
+            for i in range(10)]
+    sink = Sink(cap=1 << 16)
+    rec = run(reqs, seed, prefill_chunk=4, max_batch=3, sink=sink)
+    # Serialize the whole trace and parse it back — the replay input is
+    # ONLY the JSONL text, as in the Rust.
+    trace = [parse_line(encode(e)) for e in sink.drain()]
+    meta, folded = fold(trace)
+    assert meta["seed"] == seed and meta["prefill_chunk"] == 4
+    rebuilt = [(r["arrive"], r["prompt"], r["max_new"]) for r in folded]
+    rep = run(rebuilt, meta["seed"], meta["prefill_chunk"],
+              meta["max_batch"], Sink(cap=None))
+    assert [g["tokens"] for g in rep] == [g["tokens"] for g in rec]
+    assert [g["tokens"] for g in rep] == [r["tokens"] for r in folded]
+    assert [g["done_t"] for g in rep] == [g["done_t"] for g in rec]
+    # check3: disabled sink changes nothing (same clock, same tokens).
+    off = run(reqs, seed, 4, 3, Sink(cap=None))
+    assert [g["tokens"] for g in off] == [g["tokens"] for g in rec]
+    assert [g["done_t"] for g in off] == [g["done_t"] for g in rec]
+print("check2 OK: record->fold->replay bit-identical (3 seeds)")
+print("check3 OK: disabled sink leaves tokens and virtual clocks unchanged")
+
+# ----------------------------------------------------- flame attribution
+
+def summarize(events):
+    """summary.rs: shared cache events charge every active request."""
+    rows, active = {}, []
+    for e in events:
+        k = e["ev"]
+        if k == "request_arrived":
+            rows[e["req"]] = dict(hits=0, misses=0, overlapped=0)
+        elif k == "request_admitted":
+            active.append(e["req"])
+        elif k in ("request_finished", "request_failed", "request_rejected"):
+            if e["req"] in active:
+                active.remove(e["req"])
+        elif k == "cache_lookup":
+            for rid in active:
+                rows[rid]["hits" if e["hit"] else "misses"] += 1
+        elif k == "prefetch_overlapped":
+            for rid in active:
+                rows[rid]["overlapped"] += 1
+    return rows
+
+evs = [
+    {"ev": "request_arrived", "req": 0}, {"ev": "request_arrived", "req": 1},
+    {"ev": "request_admitted", "req": 0},
+    {"ev": "request_admitted", "req": 1},
+    {"ev": "prefetch_overlapped"},                      # both active
+    {"ev": "request_finished", "req": 0},
+    {"ev": "cache_lookup", "hit": False},               # only req 1 active
+]
+rows = summarize(evs)
+assert rows[0] == dict(hits=0, misses=0, overlapped=1)
+assert rows[1] == dict(hits=0, misses=1, overlapped=1)
+print("check5 OK: shared events attribute to exactly the active window")
+
+print("ALL CHECKS PASSED")

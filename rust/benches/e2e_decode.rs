@@ -320,6 +320,67 @@ fn bench_lifecycle_load() -> Json {
     section
 }
 
+/// Event-stream overhead (PR 6): the same open-loop workload with the
+/// sink disabled vs recording to a JSONL trace.  Virtual-time metrics
+/// must be identical by construction (the writer thread never advances
+/// the sim clock); the JSON records the host wall-clock ratio and the
+/// trace volume so a regression in the hot-path `emit_with` branch shows
+/// up as `wall_overhead_ratio` drifting above ~1.
+fn bench_events() -> Json {
+    let fast = std::env::var("FIDDLER_BENCH_FAST").is_ok();
+    let spec = LoadSpec {
+        n_requests: if fast { 40 } else { 160 },
+        ..LoadSpec::default()
+    };
+    let serving = || ServingConfig {
+        prefill_chunk: 64,
+        max_batch: 8,
+        temperature: 0.7,
+        ..Default::default()
+    };
+    let trace = std::env::temp_dir()
+        .join(format!("fiddler-bench-events-{}.jsonl", std::process::id()));
+
+    // Warm once (page in the workload generator), then measure each mode.
+    run_open_loop(serving(), &LoadSpec { n_requests: 8, ..spec.clone() }).expect("warmup");
+    let w_off = std::time::Instant::now();
+    let off = run_open_loop(serving(), &spec).expect("events-off run");
+    let off_wall_ms = w_off.elapsed().as_secs_f64() * 1e3;
+    let w_on = std::time::Instant::now();
+    let on = run_open_loop(
+        ServingConfig { events_out: Some(trace.display().to_string()), ..serving() },
+        &spec,
+    )
+    .expect("events-on run");
+    let on_wall_ms = w_on.elapsed().as_secs_f64() * 1e3;
+
+    assert_eq!(off.completed, on.completed, "event sink changed sim outcome");
+    assert_eq!(off.output_tokens, on.output_tokens, "event sink changed sim outcome");
+    assert_eq!(off.agg.itl_us, on.agg.itl_us, "event sink changed decode ITLs");
+
+    let n_events = std::fs::read_to_string(&trace)
+        .map(|t| t.lines().filter(|l| !l.trim().is_empty()).count())
+        .unwrap_or(0);
+    std::fs::remove_file(&trace).ok();
+
+    let itl = off.agg.itl_summary();
+    let ratio = on_wall_ms / off_wall_ms.max(1e-9);
+    println!(
+        "    events: off {off_wall_ms:.1} ms | on {on_wall_ms:.1} ms (ratio {ratio:.3}) | {n_events} events | ITL p99 {:.1} ms (identical both modes)",
+        itl.p99 / 1e3
+    );
+    let mut o = Json::obj();
+    o.set("n_requests", Json::from(spec.n_requests));
+    o.set("wall_ms_events_off", Json::Num(off_wall_ms));
+    o.set("wall_ms_events_on", Json::Num(on_wall_ms));
+    o.set("wall_overhead_ratio", Json::Num(ratio));
+    o.set("events_recorded", Json::from(n_events));
+    o.set("decode_itl_p99_ms", Json::Num(itl.p99 / 1e3));
+    o.set("decode_itl_mean_ms", Json::Num(itl.mean / 1e3));
+    o.set("virtual_metrics_identical", Json::Bool(true));
+    o
+}
+
 fn main() {
     let mut b = Bench::new();
 
@@ -359,6 +420,18 @@ fn main() {
         std::env::var("FIDDLER_BENCH_OUT_PR4").unwrap_or_else(|_| "BENCH_PR4.json".into());
     std::fs::write(&out4, root4.to_string()).expect("write bench json");
     println!("  wrote {out4}");
+
+    // PR 6: typed event stream — recording overhead on the same open-loop
+    // workload, with the identical-virtual-metrics invariant asserted.
+    println!("  event stream overhead (events off vs on):");
+    let events = bench_events();
+    let mut root6 = Json::obj();
+    root6.set("bench", Json::from("pr6-typed-event-stream"));
+    root6.set("events", events);
+    let out6 =
+        std::env::var("FIDDLER_BENCH_OUT_PR6").unwrap_or_else(|_| "BENCH_PR6.json".into());
+    std::fs::write(&out6, root6.to_string()).expect("write bench json");
+    println!("  wrote {out6}");
 
     b.report("e2e decode/prefill (serial vs parallel executor + per-policy)");
 }

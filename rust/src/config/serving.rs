@@ -197,6 +197,13 @@ pub struct ServingConfig {
     /// the demand paths.  0 (default) = the serial legacy layer loop,
     /// bit-for-bit.
     pub pipeline_lookahead: usize,
+    /// Path of the JSONL engine-event log (`--events-out trace.jsonl`):
+    /// the serve loop attaches a [`crate::events::EventSink`] writing
+    /// every [`crate::events::TraceEvent`] here.  The log is a replayable
+    /// trace (`fiddler trace-replay`) and folds into per-request flame
+    /// summaries (`fiddler trace-summary`).  `None` (default) = sink
+    /// disabled, costing one branch per would-be event.
+    pub events_out: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -217,6 +224,7 @@ impl Default for ServingConfig {
             kv_budget_mb: 0,
             slo_ttft_ms: 5_000.0,
             pipeline_lookahead: 0,
+            events_out: None,
         }
     }
 }
@@ -255,6 +263,7 @@ impl ServingConfig {
         c.slo_ttft_ms = args.f64_or("slo-ttft-ms", c.slo_ttft_ms);
         anyhow::ensure!(c.slo_ttft_ms > 0.0, "--slo-ttft-ms must be positive");
         c.pipeline_lookahead = args.usize_or("pipeline-lookahead", c.pipeline_lookahead);
+        c.events_out = args.get("events-out").map(String::from);
         Ok(c)
     }
 
@@ -361,6 +370,16 @@ mod tests {
         );
         let a = Args::parse("--pipeline-lookahead 2".split_whitespace().map(String::from));
         assert_eq!(ServingConfig::from_args(&a).unwrap().pipeline_lookahead, 2);
+    }
+
+    #[test]
+    fn events_out_parses_and_defaults_off() {
+        assert_eq!(ServingConfig::default().events_out, None);
+        let a = Args::parse("--events-out trace.jsonl".split_whitespace().map(String::from));
+        assert_eq!(
+            ServingConfig::from_args(&a).unwrap().events_out.as_deref(),
+            Some("trace.jsonl")
+        );
     }
 
     #[test]

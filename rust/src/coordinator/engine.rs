@@ -117,6 +117,14 @@ impl Engine {
         &self.runner.cfg
     }
 
+    /// Install a trace-event sink on the execution context and its expert
+    /// cache: every generation path (engine-level and serve-loop) then
+    /// streams typed [`crate::events::TraceEvent`]s through it.
+    pub fn set_event_sink(&mut self, sink: crate::events::EventSink) {
+        self.cx.memory.set_event_sink(sink.clone());
+        self.cx.sink = sink;
+    }
+
     /// Sample the next token from logits (greedy at temperature 0).
     pub fn sample(&mut self, logits: &[f32]) -> u32 {
         sample_token(logits, self.serving.temperature, &mut self.rng)
@@ -147,6 +155,7 @@ impl Engine {
             metrics.token_done_us.push(self.cx.clock.now_us());
         }
         metrics.cache = Some(self.cx.memory.stats().clone());
+        metrics.experts = Some(self.cx.events.clone());
         Ok(GenOutput { tokens, metrics })
     }
 

@@ -1,0 +1,615 @@
+//! Typed engine-wide event stream, serialized as JSONL.
+//!
+//! One enum ([`TraceEvent`]) covers the whole engine — request lifecycle
+//! transitions, admission/KV-budget decisions, prefill chunk boundaries,
+//! per-layer pipeline prefetch decisions, expert-cache traffic, and
+//! exec-pool dispatch/steal — and one codec serves every consumer: the
+//! live sink ([`EventSink`]), saved logs, the wire protocol
+//! (`server/net.rs` encodes its lines through [`wire_event_json`]), the
+//! trace [`replay`] driver, and the per-request flame [`summary`] folder.
+//! Stream and replay go through the same decoder, so the live protocol
+//! and the on-disk log cannot drift apart.
+//!
+//! Schema: every line is one JSON object whose `"ev"` field names the
+//! variant (snake_case).  Decoding is *lenient* by construction —
+//! unknown `"ev"` values decode to [`TraceEvent::Unknown`], unknown
+//! fields are ignored, and missing fields default — so an old parser
+//! reads a newer log without erroring (forward compatibility), and a
+//! grep-ed/truncated log still folds.  All timestamps are **virtual
+//! microseconds** (`t_us`), the same clock every metric in this repo
+//! uses.
+
+pub mod replay;
+pub mod sink;
+pub mod summary;
+
+pub use sink::EventSink;
+
+use crate::util::json::Json;
+
+/// One engine event.  See the module docs for schema and conventions;
+/// [`TraceEvent::examples`] enumerates one instance of every variant
+/// (the round-trip tests and the README schema table lean on it).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TraceEvent {
+    /// Run header: the serving configuration a replay needs to rebuild
+    /// the scheduler bit-identically.  First line of every log.
+    Meta {
+        seed: u64,
+        temperature: f64,
+        max_batch: usize,
+        queue_capacity: usize,
+        prefill_chunk: usize,
+        admission: String,
+        kv_budget_mb: usize,
+        slo_ttft_ms: f64,
+        lookahead: usize,
+    },
+    /// A request reached the scheduler (its full prompt is recorded —
+    /// this is what makes a log a replayable trace).
+    RequestArrived {
+        req: u64,
+        t_us: f64,
+        prompt: Vec<u32>,
+        max_new: usize,
+        width: usize,
+        slo_us: Option<f64>,
+    },
+    /// Rejected at ingest (queue full, KV-infeasible, malformed).
+    RequestRejected { req: u64, t_us: f64, reason: String },
+    /// Admission: the scheduler reserved KV and started prefill.
+    RequestAdmitted { req: u64, t_us: f64, kv_reserved: u64, queue_delay_us: f64 },
+    /// KV budget snapshot after a reservation or release.
+    KvBudget { t_us: f64, used_bytes: u64, borrowed_slots: usize },
+    /// One chunk of chunked prefill completed (`start..start+len` of the
+    /// prompt; `is_last` chunks produce the first token).
+    PrefillChunk { req: u64, t_us: f64, start: usize, len: usize, is_last: bool },
+    /// One output token (index is the position in the output stream).
+    TokenEmitted { req: u64, t_us: f64, token: u32, index: usize },
+    /// Terminal: the group retired normally.
+    RequestFinished { req: u64, t_us: f64, tokens: usize, ttft_us: f64, queue_delay_us: f64 },
+    /// Terminal: error or shutdown before/while running.
+    RequestFailed { req: u64, t_us: f64, reason: String },
+    /// Expert-cache lookup (`hit == false` means a demand transfer was
+    /// charged; `prefetch_hit` marks hits on prefetched entries).
+    CacheLookup { t_us: f64, layer: usize, expert: usize, hit: bool, prefetch_hit: bool },
+    /// Expert evicted to make room (capacity pressure or KV borrowing).
+    CacheEvict { t_us: f64, layer: usize, expert: usize },
+    /// Host-to-GPU expert weight transfer charged to the PCIe lane.
+    CacheTransfer { t_us: f64, layer: usize, expert: usize, bytes: u64 },
+    /// Speculative transfer admitted by the cache (`ready_us` = when the
+    /// weights land).
+    CachePrefetch { t_us: f64, layer: usize, expert: usize, ready_us: f64 },
+    /// Pipeline driver issued a cross-layer prefetch from `layer` for
+    /// `target_layer` (`distance` layers ahead).
+    PrefetchIssued {
+        t_us: f64,
+        layer: usize,
+        target_layer: usize,
+        expert: usize,
+        distance: usize,
+        ready_us: f64,
+    },
+    /// A predicted expert's in-flight transfer overlapped compute: the
+    /// plan flipped to GPU-resident, waiting `wait_us` instead of a full
+    /// demand transfer.
+    PrefetchOverlapped { t_us: f64, layer: usize, expert: usize, wait_us: f64 },
+    /// A queued demand transfer was cancelled in favor of an in-flight
+    /// prefetch of the same expert.
+    PrefetchCancelled { t_us: f64, layer: usize, expert: usize },
+    /// Exec-pool dispatch for one MoE layer: CPU expert chunks queued,
+    /// split of experts across devices.
+    ExecDispatch { t_us: f64, layer: usize, chunks: usize, cpu_experts: usize, gpu_experts: usize },
+    /// The layer's CPU work joined; `stolen` chunks ran inline on the
+    /// engine thread (work stealing) during the wait.
+    ExecJoin { t_us: f64, layer: usize, stolen: u64 },
+    /// Writer-thread marker: `count` events were dropped on queue
+    /// overflow (the log is truncated, not silently complete).
+    SinkDropped { count: u64 },
+    /// Forward-compat catch-all: an `"ev"` this build doesn't know.
+    Unknown { kind: String },
+}
+
+impl TraceEvent {
+    /// The `"ev"` discriminator string for this variant.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            TraceEvent::Meta { .. } => "meta",
+            TraceEvent::RequestArrived { .. } => "request_arrived",
+            TraceEvent::RequestRejected { .. } => "request_rejected",
+            TraceEvent::RequestAdmitted { .. } => "request_admitted",
+            TraceEvent::KvBudget { .. } => "kv_budget",
+            TraceEvent::PrefillChunk { .. } => "prefill_chunk",
+            TraceEvent::TokenEmitted { .. } => "token",
+            TraceEvent::RequestFinished { .. } => "request_finished",
+            TraceEvent::RequestFailed { .. } => "request_failed",
+            TraceEvent::CacheLookup { .. } => "cache_lookup",
+            TraceEvent::CacheEvict { .. } => "cache_evict",
+            TraceEvent::CacheTransfer { .. } => "cache_transfer",
+            TraceEvent::CachePrefetch { .. } => "cache_prefetch",
+            TraceEvent::PrefetchIssued { .. } => "prefetch_issued",
+            TraceEvent::PrefetchOverlapped { .. } => "prefetch_overlapped",
+            TraceEvent::PrefetchCancelled { .. } => "prefetch_cancelled",
+            TraceEvent::ExecDispatch { .. } => "exec_dispatch",
+            TraceEvent::ExecJoin { .. } => "exec_join",
+            TraceEvent::SinkDropped { .. } => "sink_dropped",
+            TraceEvent::Unknown { .. } => "unknown",
+        }
+    }
+
+    /// Serialize to one JSON object (the `"ev"` key carries the kind).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("ev", Json::from(self.kind()));
+        match self {
+            TraceEvent::Meta {
+                seed,
+                temperature,
+                max_batch,
+                queue_capacity,
+                prefill_chunk,
+                admission,
+                kv_budget_mb,
+                slo_ttft_ms,
+                lookahead,
+            } => {
+                o.set("seed", Json::Num(*seed as f64));
+                o.set("temperature", Json::Num(*temperature));
+                o.set("max_batch", Json::from(*max_batch));
+                o.set("queue_capacity", Json::from(*queue_capacity));
+                o.set("prefill_chunk", Json::from(*prefill_chunk));
+                o.set("admission", Json::from(admission.as_str()));
+                o.set("kv_budget_mb", Json::from(*kv_budget_mb));
+                o.set("slo_ttft_ms", Json::Num(*slo_ttft_ms));
+                o.set("lookahead", Json::from(*lookahead));
+            }
+            TraceEvent::RequestArrived { req, t_us, prompt, max_new, width, slo_us } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set(
+                    "prompt",
+                    Json::Arr(prompt.iter().map(|&t| Json::from(t as usize)).collect()),
+                );
+                o.set("max_new", Json::from(*max_new));
+                o.set("width", Json::from(*width));
+                if let Some(d) = slo_us {
+                    o.set("slo_us", Json::Num(*d));
+                }
+            }
+            TraceEvent::RequestRejected { req, t_us, reason } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("reason", Json::from(reason.as_str()));
+            }
+            TraceEvent::RequestAdmitted { req, t_us, kv_reserved, queue_delay_us } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("kv_reserved", Json::Num(*kv_reserved as f64));
+                o.set("queue_delay_us", Json::Num(*queue_delay_us));
+            }
+            TraceEvent::KvBudget { t_us, used_bytes, borrowed_slots } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("used_bytes", Json::Num(*used_bytes as f64));
+                o.set("borrowed_slots", Json::from(*borrowed_slots));
+            }
+            TraceEvent::PrefillChunk { req, t_us, start, len, is_last } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("start", Json::from(*start));
+                o.set("len", Json::from(*len));
+                o.set("is_last", Json::from(*is_last));
+            }
+            TraceEvent::TokenEmitted { req, t_us, token, index } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("token", Json::from(*token as usize));
+                o.set("index", Json::from(*index));
+            }
+            TraceEvent::RequestFinished { req, t_us, tokens, ttft_us, queue_delay_us } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("tokens", Json::from(*tokens));
+                o.set("ttft_us", Json::Num(*ttft_us));
+                o.set("queue_delay_us", Json::Num(*queue_delay_us));
+            }
+            TraceEvent::RequestFailed { req, t_us, reason } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("reason", Json::from(reason.as_str()));
+            }
+            TraceEvent::CacheLookup { t_us, layer, expert, hit, prefetch_hit } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+                o.set("hit", Json::from(*hit));
+                o.set("prefetch_hit", Json::from(*prefetch_hit));
+            }
+            TraceEvent::CacheEvict { t_us, layer, expert } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+            }
+            TraceEvent::CacheTransfer { t_us, layer, expert, bytes } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+                o.set("bytes", Json::Num(*bytes as f64));
+            }
+            TraceEvent::CachePrefetch { t_us, layer, expert, ready_us } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+                o.set("ready_us", Json::Num(*ready_us));
+            }
+            TraceEvent::PrefetchIssued { t_us, layer, target_layer, expert, distance, ready_us } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("target_layer", Json::from(*target_layer));
+                o.set("expert", Json::from(*expert));
+                o.set("distance", Json::from(*distance));
+                o.set("ready_us", Json::Num(*ready_us));
+            }
+            TraceEvent::PrefetchOverlapped { t_us, layer, expert, wait_us } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+                o.set("wait_us", Json::Num(*wait_us));
+            }
+            TraceEvent::PrefetchCancelled { t_us, layer, expert } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+            }
+            TraceEvent::ExecDispatch { t_us, layer, chunks, cpu_experts, gpu_experts } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("chunks", Json::from(*chunks));
+                o.set("cpu_experts", Json::from(*cpu_experts));
+                o.set("gpu_experts", Json::from(*gpu_experts));
+            }
+            TraceEvent::ExecJoin { t_us, layer, stolen } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("stolen", Json::Num(*stolen as f64));
+            }
+            TraceEvent::SinkDropped { count } => {
+                o.set("count", Json::Num(*count as f64));
+            }
+            TraceEvent::Unknown { kind } => {
+                o.set("ev", Json::from(kind.as_str()));
+            }
+        }
+        o
+    }
+
+    /// One JSONL line (compact JSON + newline).
+    pub fn encode_line(&self) -> String {
+        format!("{}\n", self.to_json())
+    }
+
+    /// Decode from a parsed JSON object.  Infallible and lenient: an
+    /// unknown or missing `"ev"` yields [`TraceEvent::Unknown`]; unknown
+    /// fields are ignored; missing fields default (0 / "" / false) —
+    /// forward compatibility for old parsers reading newer logs.
+    pub fn from_json(v: &Json) -> TraceEvent {
+        let kind = v.get("ev").ok().and_then(|k| k.as_str().ok()).unwrap_or("").to_string();
+        match kind.as_str() {
+            "meta" => TraceEvent::Meta {
+                seed: j64(v, "seed", 0),
+                temperature: jf(v, "temperature", 0.0),
+                max_batch: ju(v, "max_batch", 0),
+                queue_capacity: ju(v, "queue_capacity", 0),
+                prefill_chunk: ju(v, "prefill_chunk", 0),
+                admission: js(v, "admission"),
+                kv_budget_mb: ju(v, "kv_budget_mb", 0),
+                slo_ttft_ms: jf(v, "slo_ttft_ms", 0.0),
+                lookahead: ju(v, "lookahead", 0),
+            },
+            "request_arrived" => TraceEvent::RequestArrived {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                prompt: v
+                    .get("prompt")
+                    .ok()
+                    .and_then(|p| p.as_arr().ok())
+                    .map(|a| a.iter().filter_map(|t| t.as_f64().ok().map(|n| n as u32)).collect())
+                    .unwrap_or_default(),
+                max_new: ju(v, "max_new", 0),
+                width: ju(v, "width", 1),
+                slo_us: v.get("slo_us").ok().and_then(|d| d.as_f64().ok()),
+            },
+            "request_rejected" => TraceEvent::RequestRejected {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                reason: js(v, "reason"),
+            },
+            "request_admitted" => TraceEvent::RequestAdmitted {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                kv_reserved: j64(v, "kv_reserved", 0),
+                queue_delay_us: jf(v, "queue_delay_us", 0.0),
+            },
+            "kv_budget" => TraceEvent::KvBudget {
+                t_us: jf(v, "t_us", 0.0),
+                used_bytes: j64(v, "used_bytes", 0),
+                borrowed_slots: ju(v, "borrowed_slots", 0),
+            },
+            "prefill_chunk" => TraceEvent::PrefillChunk {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                start: ju(v, "start", 0),
+                len: ju(v, "len", 0),
+                is_last: jb(v, "is_last", false),
+            },
+            "token" => TraceEvent::TokenEmitted {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                token: ju(v, "token", 0) as u32,
+                index: ju(v, "index", 0),
+            },
+            "request_finished" => TraceEvent::RequestFinished {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                tokens: ju(v, "tokens", 0),
+                ttft_us: jf(v, "ttft_us", 0.0),
+                queue_delay_us: jf(v, "queue_delay_us", 0.0),
+            },
+            "request_failed" => TraceEvent::RequestFailed {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                reason: js(v, "reason"),
+            },
+            "cache_lookup" => TraceEvent::CacheLookup {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+                hit: jb(v, "hit", false),
+                prefetch_hit: jb(v, "prefetch_hit", false),
+            },
+            "cache_evict" => TraceEvent::CacheEvict {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+            },
+            "cache_transfer" => TraceEvent::CacheTransfer {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+                bytes: j64(v, "bytes", 0),
+            },
+            "cache_prefetch" => TraceEvent::CachePrefetch {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+                ready_us: jf(v, "ready_us", 0.0),
+            },
+            "prefetch_issued" => TraceEvent::PrefetchIssued {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                target_layer: ju(v, "target_layer", 0),
+                expert: ju(v, "expert", 0),
+                distance: ju(v, "distance", 0),
+                ready_us: jf(v, "ready_us", 0.0),
+            },
+            "prefetch_overlapped" => TraceEvent::PrefetchOverlapped {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+                wait_us: jf(v, "wait_us", 0.0),
+            },
+            "prefetch_cancelled" => TraceEvent::PrefetchCancelled {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+            },
+            "exec_dispatch" => TraceEvent::ExecDispatch {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                chunks: ju(v, "chunks", 0),
+                cpu_experts: ju(v, "cpu_experts", 0),
+                gpu_experts: ju(v, "gpu_experts", 0),
+            },
+            "exec_join" => TraceEvent::ExecJoin {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                stolen: j64(v, "stolen", 0),
+            },
+            "sink_dropped" => TraceEvent::SinkDropped { count: j64(v, "count", 0) },
+            _ => TraceEvent::Unknown { kind },
+        }
+    }
+
+    /// Parse one JSONL line.  Errors only on non-JSON input; any valid
+    /// JSON object decodes (possibly to [`TraceEvent::Unknown`]).
+    pub fn parse_line(line: &str) -> anyhow::Result<TraceEvent> {
+        Ok(TraceEvent::from_json(&Json::parse(line.trim())?))
+    }
+
+    /// One instance of every variant — the schema catalog the round-trip
+    /// tests iterate (keep in sync with the enum; `kind()` is the
+    /// compiler-checked list).
+    pub fn examples() -> Vec<TraceEvent> {
+        vec![
+            TraceEvent::Meta {
+                seed: 7,
+                temperature: 0.75,
+                max_batch: 8,
+                queue_capacity: 64,
+                prefill_chunk: 16,
+                admission: "slo".into(),
+                kv_budget_mb: 256,
+                slo_ttft_ms: 250.0,
+                lookahead: 2,
+            },
+            TraceEvent::RequestArrived {
+                req: 1,
+                t_us: 1_234.5,
+                prompt: vec![3, 1, 4, 1, 5],
+                max_new: 24,
+                width: 4,
+                slo_us: Some(250_000.0),
+            },
+            TraceEvent::RequestRejected { req: 2, t_us: 1_300.0, reason: "queue full".into() },
+            TraceEvent::RequestAdmitted {
+                req: 1,
+                t_us: 2_000.0,
+                kv_reserved: 1 << 20,
+                queue_delay_us: 765.5,
+            },
+            TraceEvent::KvBudget { t_us: 2_000.0, used_bytes: 1 << 20, borrowed_slots: 1 },
+            TraceEvent::PrefillChunk { req: 1, t_us: 2_500.0, start: 0, len: 16, is_last: false },
+            TraceEvent::TokenEmitted { req: 1, t_us: 3_000.0, token: 42, index: 0 },
+            TraceEvent::RequestFinished {
+                req: 1,
+                t_us: 9_000.0,
+                tokens: 24,
+                ttft_us: 1_765.5,
+                queue_delay_us: 765.5,
+            },
+            TraceEvent::RequestFailed { req: 3, t_us: 9_100.0, reason: "shutdown".into() },
+            TraceEvent::CacheLookup {
+                t_us: 2_500.0,
+                layer: 3,
+                expert: 5,
+                hit: true,
+                prefetch_hit: true,
+            },
+            TraceEvent::CacheEvict { t_us: 2_600.0, layer: 0, expert: 7 },
+            TraceEvent::CacheTransfer { t_us: 2_600.0, layer: 3, expert: 6, bytes: 1 << 24 },
+            TraceEvent::CachePrefetch { t_us: 2_700.0, layer: 4, expert: 2, ready_us: 3_400.0 },
+            TraceEvent::PrefetchIssued {
+                t_us: 2_700.0,
+                layer: 3,
+                target_layer: 4,
+                expert: 2,
+                distance: 1,
+                ready_us: 3_400.0,
+            },
+            TraceEvent::PrefetchOverlapped { t_us: 3_300.0, layer: 4, expert: 2, wait_us: 100.0 },
+            TraceEvent::PrefetchCancelled { t_us: 3_300.0, layer: 4, expert: 2 },
+            TraceEvent::ExecDispatch {
+                t_us: 2_500.0,
+                layer: 3,
+                chunks: 4,
+                cpu_experts: 2,
+                gpu_experts: 6,
+            },
+            TraceEvent::ExecJoin { t_us: 2_900.0, layer: 3, stolen: 2 },
+            TraceEvent::SinkDropped { count: 17 },
+            TraceEvent::Unknown { kind: "from_the_future".into() },
+        ]
+    }
+}
+
+/// Encode a wire-protocol server event ([`crate::server::Event`]) as the
+/// JSON object `server/net.rs` writes — the single encoder shared by the
+/// TCP surface, so the wire protocol and the event log cannot drift.
+/// `Done` lines carry the full [`crate::metrics::GenMetrics::to_json`]
+/// payload (including per-request `cache` and `experts` counters) plus
+/// `"done": true`.
+pub fn wire_event_json(ev: &crate::server::Event) -> Json {
+    let mut o = Json::obj();
+    match ev {
+        crate::server::Event::Token(t) => o.set("token", Json::from(*t as usize)),
+        crate::server::Event::Done(m) => {
+            o = m.to_json();
+            o.set("done", Json::Bool(true));
+        }
+        crate::server::Event::Error(e) => o.set("error", Json::from(e.as_str())),
+    }
+    o
+}
+
+/// Lenient field readers: absent or mistyped fields yield the default.
+fn jf(v: &Json, k: &str, d: f64) -> f64 {
+    v.get(k).ok().and_then(|x| x.as_f64().ok()).unwrap_or(d)
+}
+
+fn ju(v: &Json, k: &str, d: usize) -> usize {
+    jf(v, k, d as f64) as usize
+}
+
+fn j64(v: &Json, k: &str, d: u64) -> u64 {
+    jf(v, k, d as f64) as u64
+}
+
+fn jb(v: &Json, k: &str, d: bool) -> bool {
+    v.get(k).ok().and_then(|x| x.as_bool().ok()).unwrap_or(d)
+}
+
+fn js(v: &Json, k: &str) -> String {
+    v.get(k).ok().and_then(|x| x.as_str().ok()).unwrap_or("").to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_variant_round_trips() {
+        for ev in TraceEvent::examples() {
+            let line = ev.encode_line();
+            let back = TraceEvent::parse_line(&line)
+                .unwrap_or_else(|e| panic!("parse {line:?}: {e}"));
+            assert_eq!(back, ev, "round trip changed {line:?}");
+        }
+    }
+
+    #[test]
+    fn examples_cover_distinct_kinds() {
+        let kinds: std::collections::BTreeSet<&str> =
+            TraceEvent::examples().iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds.len(), TraceEvent::examples().len(), "duplicate kind in examples");
+    }
+
+    #[test]
+    fn unknown_variant_and_fields_are_forward_compatible() {
+        // A newer writer's variant this build doesn't know.
+        let ev = TraceEvent::parse_line(r#"{"ev":"warp_drive","flux":3.5}"#).unwrap();
+        assert_eq!(ev, TraceEvent::Unknown { kind: "warp_drive".into() });
+        // A known variant with extra fields: parsed, extras ignored.
+        let ev =
+            TraceEvent::parse_line(r#"{"ev":"cache_evict","t_us":5,"layer":1,"expert":2,"new_field":"x"}"#)
+                .unwrap();
+        assert_eq!(ev, TraceEvent::CacheEvict { t_us: 5.0, layer: 1, expert: 2 });
+        // Missing fields default instead of erroring.
+        let ev = TraceEvent::parse_line(r#"{"ev":"token","req":9}"#).unwrap();
+        assert_eq!(ev, TraceEvent::TokenEmitted { req: 9, t_us: 0.0, token: 0, index: 0 });
+        // Only non-JSON errors.
+        assert!(TraceEvent::parse_line("not json").is_err());
+    }
+
+    #[test]
+    fn slo_us_key_is_omitted_when_none() {
+        let ev = TraceEvent::RequestArrived {
+            req: 0,
+            t_us: 0.0,
+            prompt: vec![1],
+            max_new: 1,
+            width: 1,
+            slo_us: None,
+        };
+        let j = ev.to_json();
+        assert!(j.get("slo_us").is_err());
+        assert_eq!(TraceEvent::from_json(&j), ev);
+    }
+
+    #[test]
+    fn wire_encoding_matches_protocol() {
+        let j = wire_event_json(&crate::server::Event::Token(7));
+        assert_eq!(j.get("token").unwrap().as_usize().unwrap(), 7);
+        let j = wire_event_json(&crate::server::Event::Error("boom".into()));
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+        let m = crate::metrics::GenMetrics {
+            enqueue_us: 0.0,
+            first_token_us: 10.0,
+            token_done_us: vec![10.0, 20.0],
+            prompt_tokens: 1,
+            ..Default::default()
+        };
+        let j = wire_event_json(&crate::server::Event::Done(m));
+        assert!(j.get("done").unwrap().as_bool().unwrap());
+        assert!(j.get("mean_itl_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,366 @@
+//! Trace record/replay: fold a recorded JSONL event stream back into the
+//! workload and serving configuration that produced it, re-run that
+//! workload through the deterministic [`SimBackend`], and diff the token
+//! streams.
+//!
+//! Determinism argument: the trace records every request's exact virtual
+//! arrival time, prompt, and sampling-relevant config (seed, temperature,
+//! scheduler knobs) in its [`TraceEvent::Meta`] line.  Re-submitting the
+//! same arrivals under the same config to a fresh [`SimBackend`] replays
+//! the same admission decisions, chunk boundaries, batch compositions,
+//! and RNG stream — so the replayed token streams are bit-identical to
+//! the recorded ones.  A non-empty [`diff_replay`] therefore means either
+//! the log is from a different build/config, or the scheduler has lost
+//! determinism — both worth failing CI over.
+
+use super::TraceEvent;
+use crate::config::serving::{AdmissionKind, ServingConfig};
+use crate::metrics::GenMetrics;
+use crate::server::sim::SimBackend;
+use crate::server::{serve_lifecycle, Event, Request};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Parse a JSONL trace file (skipping blank lines).  Unknown event kinds
+/// parse as [`TraceEvent::Unknown`] — logs from newer builds still load.
+pub fn read_log(path: impl AsRef<Path>) -> Result<Vec<TraceEvent>> {
+    let path = path.as_ref();
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {}", path.display()))?;
+    text.lines()
+        .enumerate()
+        .filter(|(_, l)| !l.trim().is_empty())
+        .map(|(i, l)| {
+            TraceEvent::parse_line(l)
+                .with_context(|| format!("{}:{}", path.display(), i + 1))
+        })
+        .collect()
+}
+
+/// One request reconstructed from a trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RecordedRequest {
+    pub id: u64,
+    pub arrive_us: f64,
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub width: usize,
+    pub slo_us: Option<f64>,
+    /// Client-visible token stream (beam groups: the winning beam).
+    pub tokens: Vec<u32>,
+    /// Completion time of each streamed token (virtual µs).
+    pub token_t_us: Vec<f64>,
+    pub finished: bool,
+    /// Terminal error: rejected at ingest, failed mid-flight, or drained
+    /// at shutdown.
+    pub failed: bool,
+}
+
+/// A trace folded into replayable form.
+#[derive(Clone, Debug, Default)]
+pub struct RecordedTrace {
+    /// The run's `meta` line (always [`TraceEvent::Meta`] when present).
+    pub meta: Option<TraceEvent>,
+    /// Requests in ingest order (= `req` id order: ids are assigned at
+    /// ingest).
+    pub requests: Vec<RecordedRequest>,
+}
+
+/// Fold a parsed event stream into per-request records.
+pub fn fold_trace(events: &[TraceEvent]) -> RecordedTrace {
+    let mut trace = RecordedTrace::default();
+    for ev in events {
+        match ev {
+            TraceEvent::Meta { .. } => trace.meta = Some(ev.clone()),
+            TraceEvent::RequestArrived { req, t_us, prompt, max_new, width, slo_us } => {
+                trace.requests.push(RecordedRequest {
+                    id: *req,
+                    arrive_us: *t_us,
+                    prompt: prompt.clone(),
+                    max_new: *max_new,
+                    width: *width,
+                    slo_us: *slo_us,
+                    ..RecordedRequest::default()
+                });
+            }
+            TraceEvent::TokenEmitted { req, t_us, token, index } => {
+                if let Some(r) = trace.requests.iter_mut().find(|r| r.id == *req) {
+                    if *index == r.tokens.len() {
+                        r.tokens.push(*token);
+                        r.token_t_us.push(*t_us);
+                    } else if *index < r.tokens.len() {
+                        r.tokens[*index] = *token;
+                        r.token_t_us[*index] = *t_us;
+                    }
+                }
+            }
+            TraceEvent::RequestFinished { req, .. } => {
+                if let Some(r) = trace.requests.iter_mut().find(|r| r.id == *req) {
+                    r.finished = true;
+                }
+            }
+            TraceEvent::RequestRejected { req, .. } | TraceEvent::RequestFailed { req, .. } => {
+                if let Some(r) = trace.requests.iter_mut().find(|r| r.id == *req) {
+                    r.failed = true;
+                }
+            }
+            _ => {}
+        }
+    }
+    trace
+}
+
+impl RecordedTrace {
+    /// Reconstruct the [`ServingConfig`] the trace's `meta` line records.
+    /// Knobs the meta line does not carry keep their defaults — they do
+    /// not affect SimBackend scheduling or sampling.
+    pub fn serving_config(&self) -> Result<ServingConfig> {
+        let Some(TraceEvent::Meta {
+            seed,
+            temperature,
+            max_batch,
+            queue_capacity,
+            prefill_chunk,
+            admission,
+            kv_budget_mb,
+            slo_ttft_ms,
+            lookahead,
+        }) = &self.meta
+        else {
+            anyhow::bail!("trace has no meta line; cannot reconstruct the serving config");
+        };
+        Ok(ServingConfig {
+            seed: *seed,
+            temperature: *temperature,
+            max_batch: *max_batch,
+            queue_capacity: *queue_capacity,
+            prefill_chunk: *prefill_chunk,
+            admission: AdmissionKind::by_name(admission)
+                .with_context(|| format!("meta admission {admission:?}"))?,
+            kv_budget_mb: *kv_budget_mb,
+            slo_ttft_ms: *slo_ttft_ms,
+            pipeline_lookahead: *lookahead,
+            // A replay never overwrites the source trace.
+            events_out: None,
+            ..ServingConfig::default()
+        })
+    }
+}
+
+/// Outcome of one replayed request.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayOutcome {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub metrics: Option<GenMetrics>,
+    pub error: Option<String>,
+}
+
+/// Re-run the recorded workload through a fresh [`SimBackend`] under the
+/// trace's own serving config, entirely in virtual time.
+pub fn replay_trace(rec: &RecordedTrace) -> Result<Vec<ReplayOutcome>> {
+    let serving = rec.serving_config()?;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let receivers: Vec<_> = rec
+        .requests
+        .iter()
+        .map(|r| {
+            let (etx, erx) = std::sync::mpsc::channel();
+            let mut q = Request::new(r.prompt.clone(), r.max_new, etx);
+            q.width = r.width;
+            q.slo_us = r.slo_us;
+            q.arrive_at_us = Some(r.arrive_us);
+            tx.send(q).expect("loop not started yet");
+            (r.id, erx)
+        })
+        .collect();
+    let mut sentinel = Request::shutdown_sentinel();
+    sentinel.arrive_at_us = Some(1e15); // fires once the loop idles out
+    tx.send(sentinel).expect("loop not started yet");
+
+    let mut backend = SimBackend::new(serving);
+    serve_lifecycle(&mut backend, rx)?;
+    drop(tx);
+
+    Ok(receivers
+        .into_iter()
+        .map(|(id, rx)| {
+            let mut out = ReplayOutcome { id, ..ReplayOutcome::default() };
+            for ev in rx.try_iter() {
+                match ev {
+                    Event::Token(t) => out.tokens.push(t),
+                    Event::Done(m) => out.metrics = Some(m),
+                    Event::Error(e) => out.error = Some(e),
+                }
+            }
+            out
+        })
+        .collect())
+}
+
+/// Compare a recorded trace against its replay.  Empty = bit-identical
+/// client-visible outcome (same token streams, same terminal states).
+pub fn diff_replay(rec: &RecordedTrace, replayed: &[ReplayOutcome]) -> Vec<String> {
+    let mut diffs = Vec::new();
+    if rec.requests.len() != replayed.len() {
+        diffs.push(format!(
+            "request count diverged: recorded {} vs replayed {}",
+            rec.requests.len(),
+            replayed.len()
+        ));
+        return diffs;
+    }
+    for (r, o) in rec.requests.iter().zip(replayed) {
+        if r.id != o.id {
+            diffs.push(format!("request order diverged: recorded id {} vs replayed {}", r.id, o.id));
+            continue;
+        }
+        if r.failed {
+            if o.error.is_none() {
+                diffs.push(format!("req {}: recorded a terminal error, replay succeeded", r.id));
+            }
+            continue;
+        }
+        if let Some(e) = &o.error {
+            diffs.push(format!("req {}: replay failed ({e}), recording succeeded", r.id));
+            continue;
+        }
+        if r.tokens != o.tokens {
+            diffs.push(format!(
+                "req {}: token stream diverged ({} recorded vs {} replayed tokens{})",
+                r.id,
+                r.tokens.len(),
+                o.tokens.len(),
+                r.tokens
+                    .iter()
+                    .zip(&o.tokens)
+                    .position(|(a, b)| a != b)
+                    .map(|i| format!(", first mismatch at index {i}"))
+                    .unwrap_or_default()
+            ));
+        }
+    }
+    diffs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> TraceEvent {
+        TraceEvent::Meta {
+            seed: 7,
+            temperature: 0.5,
+            max_batch: 4,
+            queue_capacity: 16,
+            prefill_chunk: 8,
+            admission: "sjf".to_string(),
+            kv_budget_mb: 64,
+            slo_ttft_ms: 400.0,
+            lookahead: 2,
+        }
+    }
+
+    #[test]
+    fn fold_reconstructs_requests_and_token_streams() {
+        let events = vec![
+            meta(),
+            TraceEvent::RequestArrived {
+                req: 0,
+                t_us: 10.0,
+                prompt: vec![1, 2],
+                max_new: 2,
+                width: 1,
+                slo_us: None,
+            },
+            TraceEvent::TokenEmitted { req: 0, t_us: 50.0, token: 9, index: 0 },
+            TraceEvent::TokenEmitted { req: 0, t_us: 80.0, token: 4, index: 1 },
+            TraceEvent::RequestFinished {
+                req: 0,
+                t_us: 80.0,
+                tokens: 2,
+                ttft_us: 40.0,
+                queue_delay_us: 0.0,
+            },
+            TraceEvent::RequestArrived {
+                req: 1,
+                t_us: 20.0,
+                prompt: vec![3],
+                max_new: 1,
+                width: 1,
+                slo_us: Some(9e5),
+            },
+            TraceEvent::RequestRejected { req: 1, t_us: 20.0, reason: "queue full".into() },
+        ];
+        let t = fold_trace(&events);
+        assert_eq!(t.requests.len(), 2);
+        assert_eq!(t.requests[0].tokens, vec![9, 4]);
+        assert_eq!(t.requests[0].token_t_us, vec![50.0, 80.0]);
+        assert!(t.requests[0].finished && !t.requests[0].failed);
+        assert!(t.requests[1].failed && !t.requests[1].finished);
+        assert_eq!(t.requests[1].slo_us, Some(9e5));
+        let cfg = t.serving_config().unwrap();
+        assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.admission, AdmissionKind::ShortestFirst);
+        assert_eq!(cfg.prefill_chunk, 8);
+        assert_eq!(cfg.pipeline_lookahead, 2);
+        assert!(cfg.events_out.is_none());
+    }
+
+    #[test]
+    fn beam_retire_reemission_overwrites_in_place() {
+        // Beam winners are streamed at retire with indexes from 0; the
+        // fold must not double-count them against interim emissions.
+        let events = vec![
+            TraceEvent::RequestArrived {
+                req: 0,
+                t_us: 0.0,
+                prompt: vec![1],
+                max_new: 2,
+                width: 2,
+                slo_us: None,
+            },
+            TraceEvent::TokenEmitted { req: 0, t_us: 99.0, token: 5, index: 0 },
+            TraceEvent::TokenEmitted { req: 0, t_us: 99.0, token: 6, index: 1 },
+        ];
+        let t = fold_trace(&events);
+        assert_eq!(t.requests[0].tokens, vec![5, 6]);
+    }
+
+    #[test]
+    fn metaless_trace_cannot_replay() {
+        let t = fold_trace(&[]);
+        assert!(t.serving_config().is_err());
+    }
+
+    #[test]
+    fn diff_flags_divergence_and_accepts_identity() {
+        let events = vec![
+            TraceEvent::RequestArrived {
+                req: 0,
+                t_us: 0.0,
+                prompt: vec![1],
+                max_new: 2,
+                width: 1,
+                slo_us: None,
+            },
+            TraceEvent::TokenEmitted { req: 0, t_us: 1.0, token: 7, index: 0 },
+            TraceEvent::TokenEmitted { req: 0, t_us: 2.0, token: 8, index: 1 },
+            TraceEvent::RequestFinished {
+                req: 0,
+                t_us: 2.0,
+                tokens: 2,
+                ttft_us: 1.0,
+                queue_delay_us: 0.0,
+            },
+        ];
+        let rec = fold_trace(&events);
+        let good = vec![ReplayOutcome { id: 0, tokens: vec![7, 8], ..Default::default() }];
+        assert!(diff_replay(&rec, &good).is_empty());
+        let bad = vec![ReplayOutcome { id: 0, tokens: vec![7, 9], ..Default::default() }];
+        let d = diff_replay(&rec, &bad);
+        assert_eq!(d.len(), 1);
+        assert!(d[0].contains("index 1"), "{d:?}");
+        assert_eq!(diff_replay(&rec, &[]).len(), 1);
+    }
+}

@@ -1,0 +1,255 @@
+//! Lock-light JSONL event sink: a bounded in-memory queue drained by one
+//! background writer thread.
+//!
+//! Hot-path cost contract (ISSUE 6): a *disabled* sink is one `Option`
+//! branch — [`EventSink::emit_with`] takes a closure so callers never
+//! construct a [`TraceEvent`] (or clone a prompt, or format a string)
+//! unless a sink is actually attached.  An *enabled* sink costs one
+//! short mutex-protected push; serialization and I/O happen on the
+//! writer thread, never on the engine thread.
+//!
+//! Back-pressure policy: the queue is bounded ([`QUEUE_CAP`]) and
+//! overflow **drops the newest event** rather than blocking the engine —
+//! observability must not perturb the schedule it observes.  Drops are
+//! counted and recorded as a final [`TraceEvent::SinkDropped`] line so a
+//! truncated log is detectable, never silent.
+//!
+//! Flush/ordering contract: [`EventSink`] is a cheap `Arc` clone; when
+//! the **last** clone drops, the writer thread is joined and the output
+//! flushed.  Holders (backend, `ExpertCache`, `ExecContext`) all hang off
+//! the backend, so dropping the backend completes the log file.
+
+use std::collections::VecDeque;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use super::TraceEvent;
+
+/// Bounded queue depth; past this, new events are dropped (and counted).
+pub const QUEUE_CAP: usize = 1 << 16;
+
+struct Queue {
+    buf: VecDeque<TraceEvent>,
+    closed: bool,
+}
+
+struct Shared {
+    q: Mutex<Queue>,
+    ready: Condvar,
+    dropped: AtomicU64,
+}
+
+/// Owns the writer thread; joining it on the final drop is what makes
+/// "backend dropped => log complete" hold.
+struct Handle {
+    shared: Arc<Shared>,
+    writer: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Drop for Handle {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.q.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.ready.notify_all();
+        if let Some(h) = self.writer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Cloneable handle to the event stream; `Default` is the disabled sink.
+#[derive(Clone, Default)]
+pub struct EventSink(Option<Arc<Handle>>);
+
+impl std::fmt::Debug for EventSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("EventSink").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+impl EventSink {
+    /// The no-op sink (also what `EventSink::default()` gives you).
+    pub fn disabled() -> EventSink {
+        EventSink(None)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Sink writing JSONL to a file at `path` (truncating).
+    pub fn to_path(path: impl AsRef<std::path::Path>) -> anyhow::Result<EventSink> {
+        let path = path.as_ref();
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating event log {}: {e}", path.display()))?;
+        Ok(EventSink::to_writer(std::io::BufWriter::new(f)))
+    }
+
+    /// Sink writing JSONL to any writer (tests use `Vec<u8>` behind a
+    /// shared buffer; the server could hand a socket here).
+    pub fn to_writer<W: Write + Send + 'static>(w: W) -> EventSink {
+        let shared = Arc::new(Shared {
+            q: Mutex::new(Queue { buf: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            dropped: AtomicU64::new(0),
+        });
+        let worker_shared = Arc::clone(&shared);
+        let writer = std::thread::Builder::new()
+            .name("fiddler-events".into())
+            .spawn(move || writer_loop(worker_shared, w))
+            .expect("spawn event-sink writer");
+        EventSink(Some(Arc::new(Handle { shared, writer: Mutex::new(Some(writer)) })))
+    }
+
+    /// Enqueue one event (no-op when disabled).  Prefer
+    /// [`EventSink::emit_with`] on hot paths where even *constructing*
+    /// the event costs something.
+    pub fn emit(&self, ev: TraceEvent) {
+        if let Some(h) = &self.0 {
+            push(&h.shared, ev);
+        }
+    }
+
+    /// Enqueue the event produced by `f`, which runs only when the sink
+    /// is enabled — the disabled-path cost is exactly one branch.
+    #[inline]
+    pub fn emit_with(&self, f: impl FnOnce() -> TraceEvent) {
+        if let Some(h) = &self.0 {
+            push(&h.shared, f());
+        }
+    }
+
+    /// Events dropped so far due to queue overflow.
+    pub fn dropped(&self) -> u64 {
+        self.0.as_ref().map_or(0, |h| h.shared.dropped.load(Ordering::Relaxed))
+    }
+}
+
+fn push(shared: &Shared, ev: TraceEvent) {
+    let mut q = shared.q.lock().unwrap();
+    if q.closed {
+        return;
+    }
+    if q.buf.len() >= QUEUE_CAP {
+        shared.dropped.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    q.buf.push_back(ev);
+    drop(q);
+    shared.ready.notify_one();
+}
+
+fn writer_loop<W: Write>(shared: Arc<Shared>, mut w: W) {
+    let mut batch: Vec<TraceEvent> = Vec::new();
+    loop {
+        {
+            let mut q = shared.q.lock().unwrap();
+            while q.buf.is_empty() && !q.closed {
+                q = shared.ready.wait(q).unwrap();
+            }
+            if q.buf.is_empty() && q.closed {
+                break;
+            }
+            batch.extend(q.buf.drain(..));
+        }
+        // Serialize + write outside the lock; producers never wait on I/O.
+        for ev in batch.drain(..) {
+            let _ = w.write_all(ev.encode_line().as_bytes());
+        }
+    }
+    let dropped = shared.dropped.load(Ordering::Relaxed);
+    if dropped > 0 {
+        let line = TraceEvent::SinkDropped { count: dropped }.encode_line();
+        let _ = w.write_all(line.as_bytes());
+    }
+    let _ = w.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// `Vec<u8>` behind a mutex so the test can read what the writer
+    /// thread wrote after the sink drops.
+    #[derive(Clone, Default)]
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn disabled_sink_is_a_noop() {
+        let s = EventSink::disabled();
+        assert!(!s.is_enabled());
+        s.emit(TraceEvent::SinkDropped { count: 1 });
+        let mut ran = false;
+        s.emit_with(|| {
+            ran = true;
+            TraceEvent::SinkDropped { count: 2 }
+        });
+        assert!(!ran, "emit_with must not construct events when disabled");
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn events_drain_in_order_and_flush_on_drop() {
+        let buf = SharedBuf::default();
+        let sink = EventSink::to_writer(buf.clone());
+        for i in 0..100u64 {
+            sink.emit(TraceEvent::SinkDropped { count: i });
+        }
+        let clone = sink.clone();
+        drop(sink);
+        drop(clone); // last clone: joins the writer, flushes
+        let bytes = buf.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 100);
+        for (i, l) in lines.iter().enumerate() {
+            match TraceEvent::parse_line(l).unwrap() {
+                TraceEvent::SinkDropped { count } => assert_eq!(count, i as u64),
+                other => panic!("unexpected event {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_drops_newest_and_records_a_marker() {
+        // Stall the writer by holding the queue lock while overfilling.
+        let buf = SharedBuf::default();
+        let sink = EventSink::to_writer(buf.clone());
+        {
+            let h = sink.0.as_ref().unwrap();
+            let mut q = h.shared.q.lock().unwrap();
+            for i in 0..(QUEUE_CAP + 5) as u64 {
+                if q.buf.len() >= QUEUE_CAP {
+                    h.shared.dropped.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    q.buf.push_back(TraceEvent::SinkDropped { count: i });
+                }
+            }
+        }
+        sink.0.as_ref().unwrap().shared.ready.notify_all();
+        assert_eq!(sink.dropped(), 5);
+        drop(sink);
+        let bytes = buf.0.lock().unwrap().clone();
+        let text = String::from_utf8(bytes).unwrap();
+        let last = text.lines().last().unwrap();
+        match TraceEvent::parse_line(last).unwrap() {
+            TraceEvent::SinkDropped { count } => assert_eq!(count, 5),
+            other => panic!("expected drop marker, got {other:?}"),
+        }
+        assert_eq!(text.lines().count(), QUEUE_CAP + 1);
+    }
+}

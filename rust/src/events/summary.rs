@@ -1,0 +1,286 @@
+//! Per-request flame summaries from a trace: where each request's
+//! wall-clock went — queue wait, prefill chunk cadence, decode ITLs — and
+//! what the shared caches did during its window.
+//!
+//! Cache / prefetch / exec events carry no request id (the caches are
+//! shared across the batch), so they are attributed to every request
+//! *active* (admitted, not yet finished) at their timestamp — the same
+//! overlap-counting semantics as the per-request
+//! [`CacheStats::delta_since`](crate::expertcache::CacheStats::delta_since)
+//! stamping in [`GenMetrics`](crate::metrics::GenMetrics).
+
+use super::TraceEvent;
+use crate::util::stats::{mean, percentile};
+
+/// Flame summary of one request's lifecycle.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RequestSummary {
+    pub req: u64,
+    pub prompt_tokens: usize,
+    pub width: usize,
+    pub arrived_us: f64,
+    pub admitted_us: f64,
+    pub finished_us: f64,
+    /// Arrival to admission (0 when never admitted).
+    pub queue_us: f64,
+    pub prefill_chunks: usize,
+    /// Admission to last prefill chunk completing.
+    pub prefill_us: f64,
+    pub tokens: usize,
+    /// Decode inter-token latencies (successive token timestamps).
+    pub itl: Vec<f64>,
+    /// Shared-cache activity overlapping this request's active window.
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    pub prefetch_hits: usize,
+    pub overlapped: usize,
+    pub failed: bool,
+}
+
+impl RequestSummary {
+    pub fn end_to_end_us(&self) -> f64 {
+        (self.finished_us - self.arrived_us).max(0.0)
+    }
+}
+
+/// Fold a parsed event stream into per-request flame summaries, in
+/// request-id order.
+pub fn summarize(events: &[TraceEvent]) -> Vec<RequestSummary> {
+    let mut reqs: Vec<RequestSummary> = Vec::new();
+    let mut token_t: Vec<Vec<f64>> = Vec::new();
+    let find =
+        |reqs: &[RequestSummary], id: u64| -> Option<usize> { reqs.iter().position(|r| r.req == id) };
+    // A request is "active" between admission and finish/failure; shared
+    // cache events at time t are attributed to every active request.
+    let mut active: Vec<u64> = Vec::new();
+    let charge = |reqs: &mut [RequestSummary], active: &[u64], f: &dyn Fn(&mut RequestSummary)| {
+        for id in active {
+            if let Some(i) = reqs.iter().position(|r| r.req == *id) {
+                f(&mut reqs[i]);
+            }
+        }
+    };
+    for ev in events {
+        match ev {
+            TraceEvent::RequestArrived { req, t_us, prompt, width, .. } => {
+                reqs.push(RequestSummary {
+                    req: *req,
+                    prompt_tokens: prompt.len(),
+                    width: *width,
+                    arrived_us: *t_us,
+                    ..RequestSummary::default()
+                });
+                token_t.push(Vec::new());
+            }
+            TraceEvent::RequestAdmitted { req, t_us, queue_delay_us, .. } => {
+                if let Some(i) = find(&reqs, *req) {
+                    reqs[i].admitted_us = *t_us;
+                    reqs[i].queue_us = *queue_delay_us;
+                    active.push(*req);
+                }
+            }
+            TraceEvent::PrefillChunk { req, t_us, .. } => {
+                if let Some(i) = find(&reqs, *req) {
+                    reqs[i].prefill_chunks += 1;
+                    reqs[i].prefill_us = (*t_us - reqs[i].admitted_us).max(0.0);
+                }
+            }
+            TraceEvent::TokenEmitted { req, t_us, index, .. } => {
+                if let Some(i) = find(&reqs, *req) {
+                    if *index == token_t[i].len() {
+                        token_t[i].push(*t_us);
+                    } else if *index < token_t[i].len() {
+                        token_t[i][*index] = *t_us;
+                    }
+                }
+            }
+            TraceEvent::RequestFinished { req, t_us, tokens, .. } => {
+                if let Some(i) = find(&reqs, *req) {
+                    reqs[i].finished_us = *t_us;
+                    reqs[i].tokens = *tokens;
+                }
+                active.retain(|id| id != req);
+            }
+            TraceEvent::RequestRejected { req, t_us, .. }
+            | TraceEvent::RequestFailed { req, t_us, .. } => {
+                if let Some(i) = find(&reqs, *req) {
+                    reqs[i].failed = true;
+                    reqs[i].finished_us = *t_us;
+                }
+                active.retain(|id| id != req);
+            }
+            TraceEvent::CacheLookup { hit, prefetch_hit, .. } => {
+                let (h, p) = (*hit, *prefetch_hit);
+                charge(&mut reqs, &active, &|r| {
+                    if h {
+                        r.cache_hits += 1;
+                    } else {
+                        r.cache_misses += 1;
+                    }
+                    if p {
+                        r.prefetch_hits += 1;
+                    }
+                });
+            }
+            TraceEvent::PrefetchOverlapped { .. } => {
+                charge(&mut reqs, &active, &|r| r.overlapped += 1);
+            }
+            _ => {}
+        }
+    }
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.itl = token_t[i].windows(2).map(|w| w[1] - w[0]).collect();
+        if r.tokens == 0 {
+            r.tokens = token_t[i].len();
+        }
+    }
+    reqs
+}
+
+/// Render summaries as a fixed-width flame table (one row per request)
+/// plus an aggregate footer.
+pub fn render(summaries: &[RequestSummary]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:>4} {:>6} {:>3} {:>9} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5}\n",
+        "req",
+        "prompt",
+        "w",
+        "queue_ms",
+        "prefil_ms",
+        "chunks",
+        "itl_p50",
+        "itl_p99",
+        "e2e_ms",
+        "hits",
+        "miss",
+        "pfhit",
+        "ovl",
+    ));
+    for r in summaries {
+        if r.failed {
+            out.push_str(&format!(
+                "{:>4} {:>6} {:>3} {:>9.1} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5}\n",
+                r.req, r.prompt_tokens, r.width, r.queue_us / 1e3,
+                "-", "-", "-", "-", "FAILED", "-", "-", "-", "-",
+            ));
+            continue;
+        }
+        out.push_str(&format!(
+            "{:>4} {:>6} {:>3} {:>9.1} {:>9.1} {:>7} {:>9.1} {:>9.1} {:>9.1} {:>6} {:>6} {:>5} {:>5}\n",
+            r.req,
+            r.prompt_tokens,
+            r.width,
+            r.queue_us / 1e3,
+            r.prefill_us / 1e3,
+            r.prefill_chunks,
+            percentile(&r.itl, 50.0) / 1e3,
+            percentile(&r.itl, 99.0) / 1e3,
+            r.end_to_end_us() / 1e3,
+            r.cache_hits,
+            r.cache_misses,
+            r.prefetch_hits,
+            r.overlapped,
+        ));
+    }
+    let done: Vec<&RequestSummary> = summaries.iter().filter(|r| !r.failed).collect();
+    let all_itl: Vec<f64> = done.iter().flat_map(|r| r.itl.iter().copied()).collect();
+    let queues: Vec<f64> = done.iter().map(|r| r.queue_us).collect();
+    out.push_str(&format!(
+        "\n{} requests ({} failed) | queue mean {:.1} ms | ITL p50 {:.1} / p99 {:.1} ms | tokens {}\n",
+        summaries.len(),
+        summaries.len() - done.len(),
+        mean(&queues) / 1e3,
+        percentile(&all_itl, 50.0) / 1e3,
+        percentile(&all_itl, 99.0) / 1e3,
+        done.iter().map(|r| r.tokens).sum::<usize>(),
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arrived(req: u64, t: f64) -> TraceEvent {
+        TraceEvent::RequestArrived {
+            req,
+            t_us: t,
+            prompt: vec![1, 2, 3],
+            max_new: 3,
+            width: 1,
+            slo_us: None,
+        }
+    }
+
+    #[test]
+    fn summarize_builds_flame_rows() {
+        let events = vec![
+            arrived(0, 100.0),
+            TraceEvent::RequestAdmitted {
+                req: 0,
+                t_us: 300.0,
+                kv_reserved: 64,
+                queue_delay_us: 200.0,
+            },
+            TraceEvent::PrefillChunk { req: 0, t_us: 900.0, start: 0, len: 2, is_last: false },
+            TraceEvent::CacheLookup { t_us: 950.0, layer: 0, expert: 1, hit: true, prefetch_hit: false },
+            TraceEvent::PrefillChunk { req: 0, t_us: 1500.0, start: 2, len: 1, is_last: true },
+            TraceEvent::TokenEmitted { req: 0, t_us: 1500.0, token: 7, index: 0 },
+            TraceEvent::TokenEmitted { req: 0, t_us: 2500.0, token: 8, index: 1 },
+            TraceEvent::TokenEmitted { req: 0, t_us: 4000.0, token: 9, index: 2 },
+            TraceEvent::RequestFinished {
+                req: 0,
+                t_us: 4000.0,
+                tokens: 3,
+                ttft_us: 1400.0,
+                queue_delay_us: 200.0,
+            },
+            // After the finish: must not be attributed to request 0.
+            TraceEvent::CacheLookup { t_us: 4100.0, layer: 0, expert: 2, hit: false, prefetch_hit: false },
+        ];
+        let s = summarize(&events);
+        assert_eq!(s.len(), 1);
+        let r = &s[0];
+        assert_eq!(r.queue_us, 200.0);
+        assert_eq!(r.prefill_chunks, 2);
+        assert_eq!(r.prefill_us, 1200.0);
+        assert_eq!(r.tokens, 3);
+        assert_eq!(r.itl, vec![1000.0, 1500.0]);
+        assert_eq!((r.cache_hits, r.cache_misses), (1, 0));
+        assert!(!r.failed);
+        let table = render(&s);
+        assert!(table.contains("req"), "{table}");
+        assert!(table.lines().count() >= 3);
+    }
+
+    #[test]
+    fn shared_events_attribute_to_all_active_requests() {
+        let events = vec![
+            arrived(0, 0.0),
+            arrived(1, 0.0),
+            TraceEvent::RequestAdmitted { req: 0, t_us: 10.0, kv_reserved: 0, queue_delay_us: 10.0 },
+            TraceEvent::RequestAdmitted { req: 1, t_us: 20.0, kv_reserved: 0, queue_delay_us: 20.0 },
+            TraceEvent::PrefetchOverlapped { t_us: 30.0, layer: 1, expert: 2, wait_us: 5.0 },
+            TraceEvent::RequestFinished { req: 0, t_us: 40.0, tokens: 1, ttft_us: 30.0, queue_delay_us: 10.0 },
+            // Only request 1 is still active here.
+            TraceEvent::CacheLookup { t_us: 50.0, layer: 0, expert: 0, hit: false, prefetch_hit: false },
+        ];
+        let s = summarize(&events);
+        assert_eq!(s[0].overlapped, 1);
+        assert_eq!(s[1].overlapped, 1);
+        assert_eq!(s[0].cache_misses, 0);
+        assert_eq!(s[1].cache_misses, 1);
+    }
+
+    #[test]
+    fn failed_requests_render_without_panicking() {
+        let events = vec![
+            arrived(0, 0.0),
+            TraceEvent::RequestRejected { req: 0, t_us: 0.0, reason: "queue full".into() },
+        ];
+        let s = summarize(&events);
+        assert!(s[0].failed);
+        assert!(render(&s).contains("FAILED"));
+    }
+}

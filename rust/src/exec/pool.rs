@@ -21,7 +21,7 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -31,6 +31,10 @@ struct Shared {
     queue: Mutex<VecDeque<Job>>,
     available: Condvar,
     shutdown: AtomicBool,
+    /// Jobs run via [`ExecutorPool::try_run_one`] (work stealing).  Only
+    /// the engine thread steals (at the layer join), so per-layer deltas
+    /// of this counter are deterministic observability data.
+    steals: AtomicU64,
 }
 
 /// A fixed-size pool of persistent worker threads (or the inline stub).
@@ -49,6 +53,7 @@ impl ExecutorPool {
             queue: Mutex::new(VecDeque::new()),
             available: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            steals: AtomicU64::new(0),
         });
         let mut workers = Vec::new();
         if threads > 1 {
@@ -88,11 +93,17 @@ impl ExecutorPool {
         };
         match job {
             Some(j) => {
+                self.shared.steals.fetch_add(1, Ordering::Relaxed);
                 let _ = catch_unwind(AssertUnwindSafe(j));
                 true
             }
             None => false,
         }
+    }
+
+    /// Cumulative count of jobs stolen through [`ExecutorPool::try_run_one`].
+    pub fn steal_count(&self) -> u64 {
+        self.shared.steals.load(Ordering::Relaxed)
     }
 
     /// Submit a batch of independent jobs.  Non-blocking when the pool has
@@ -307,6 +318,41 @@ mod tests {
         release.wait(); // let the workers finish
         assert_eq!(blocked.wait(), vec![0, 0]);
         assert_eq!(stealable.wait(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn steal_count_tracks_try_run_one() {
+        let pool = ExecutorPool::new(1);
+        assert_eq!(pool.steal_count(), 0);
+        assert!(!pool.try_run_one());
+        assert_eq!(pool.steal_count(), 0, "empty queue: nothing stolen");
+        // Park both workers of a threaded pool, queue jobs only the
+        // caller can run, and steal them (the wait_stealing pattern).
+        use std::sync::{Arc, Barrier};
+        let pool = ExecutorPool::new(2);
+        let entered = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let release = Arc::new(Barrier::new(3));
+        let blockers: Vec<_> = (0..2)
+            .map(|_| {
+                let entered = Arc::clone(&entered);
+                let release = Arc::clone(&release);
+                move || {
+                    entered.fetch_add(1, Ordering::SeqCst);
+                    release.wait();
+                    0usize
+                }
+            })
+            .collect();
+        let blocked = pool.submit(blockers);
+        while entered.load(Ordering::SeqCst) < 2 {
+            std::thread::yield_now();
+        }
+        let stealable = pool.submit((0..3usize).map(|i| move || i).collect::<Vec<_>>());
+        while pool.try_run_one() {}
+        assert_eq!(pool.steal_count(), 3, "caller ran all three queued jobs");
+        release.wait();
+        assert_eq!(blocked.wait(), vec![0, 0]);
+        assert_eq!(stealable.wait(), vec![0, 1, 2]);
     }
 
     #[test]

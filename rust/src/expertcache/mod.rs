@@ -68,7 +68,7 @@ struct Entry {
 }
 
 /// Hit/miss/eviction/transfer counters of one cache.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
@@ -145,6 +145,14 @@ pub struct ExpertCache {
     /// Bytes charged per expert transfer (paper-scale by default).
     expert_bytes: u64,
     stats: CacheStats,
+    /// Engine-event stream; disabled by default (one branch per event).
+    sink: crate::events::EventSink,
+    /// Timestamp stamped on events from the *clockless* paths
+    /// ([`ExpertCache::fetch`]/[`ExpertCache::admit`] and their
+    /// evictions carry no virtual time of their own); callers that know
+    /// the current virtual time set it per step
+    /// ([`ExpertCache::set_time_hint`]).
+    time_hint_us: f64,
 }
 
 impl std::fmt::Debug for ExpertCache {
@@ -178,7 +186,20 @@ impl ExpertCache {
             max_lane_depth: 4.0,
             expert_bytes: PAPER_EXPERT_BYTES,
             stats: CacheStats::default(),
+            sink: crate::events::EventSink::default(),
+            time_hint_us: 0.0,
         }
+    }
+
+    /// Attach (or detach, with a disabled sink) the engine-event stream.
+    pub fn set_event_sink(&mut self, sink: crate::events::EventSink) {
+        self.sink = sink;
+    }
+
+    /// Virtual time stamped on events emitted from clockless paths; see
+    /// the field docs.
+    pub fn set_time_hint(&mut self, now_us: f64) {
+        self.time_hint_us = now_us;
     }
 
     /// Swap the eviction policy (exec policies install theirs during
@@ -218,6 +239,7 @@ impl ExpertCache {
                 Some(v) => {
                     self.entries.remove(&v);
                     self.stats.evictions += 1;
+                    self.emit_evict(v);
                 }
                 None => break, // everything left is pinned
             }
@@ -355,22 +377,32 @@ impl ExpertCache {
     /// miss; an in-flight prefetch whose transfer has not completed by
     /// `now_us` counts as a miss.
     pub fn lookup(&mut self, id: ExpertId, now_us: f64) -> bool {
-        match self.entries.get_mut(&id) {
+        let (hit, prefetch_hit) = match self.entries.get_mut(&id) {
             Some(e) if e.ready_us <= now_us => {
                 self.tick += 1;
                 e.last_use = self.tick;
-                if e.prefetched {
+                let was_speculative = e.prefetched;
+                if was_speculative {
                     e.prefetched = false;
                     self.stats.prefetch_hits += 1;
                 }
                 self.stats.hits += 1;
-                true
+                (true, was_speculative)
             }
             _ => {
                 self.stats.misses += 1;
-                false
+                (false, false)
             }
-        }
+        };
+        let t_us = if now_us > 0.0 { now_us } else { self.time_hint_us };
+        self.sink.emit_with(|| crate::events::TraceEvent::CacheLookup {
+            t_us,
+            layer: id.0,
+            expert: id.1,
+            hit,
+            prefetch_hit,
+        });
+        hit
     }
 
     /// Insert `id` after a synchronous (demand) weight transfer, evicting
@@ -391,10 +423,12 @@ impl ExpertCache {
             e.last_use = self.tick;
             self.stats.transfers_in += 1;
             self.stats.bytes_in += self.expert_bytes;
+            self.emit_transfer(id);
             return true;
         }
         self.stats.transfers_in += 1;
         self.stats.bytes_in += self.expert_bytes;
+        self.emit_transfer(id);
         self.insert_evicting(id, 0.0, false)
     }
 
@@ -409,6 +443,13 @@ impl ExpertCache {
             return false;
         }
         self.stats.misses += 1;
+        self.sink.emit_with(|| crate::events::TraceEvent::CacheLookup {
+            t_us: self.time_hint_us,
+            layer: id.0,
+            expert: id.1,
+            hit: false,
+            prefetch_hit: false,
+        });
         self.admit(id);
         true
     }
@@ -434,6 +475,12 @@ impl ExpertCache {
         self.stats.prefetches += 1;
         self.stats.transfers_in += 1;
         self.stats.bytes_in += self.expert_bytes;
+        self.sink.emit_with(|| crate::events::TraceEvent::CachePrefetch {
+            t_us: now_us,
+            layer: id.0,
+            expert: id.1,
+            ready_us: ready,
+        });
         Some(ready)
     }
 
@@ -455,6 +502,7 @@ impl ExpertCache {
                 Some(v) => {
                     self.entries.remove(&v);
                     self.stats.evictions += 1;
+                    self.emit_evict(v);
                 }
                 None => return false,
             }
@@ -465,6 +513,23 @@ impl ExpertCache {
             Entry { last_use: self.tick, ready_us, pinned: false, pin_tick: 0, prefetched },
         );
         true
+    }
+
+    fn emit_transfer(&self, id: ExpertId) {
+        self.sink.emit_with(|| crate::events::TraceEvent::CacheTransfer {
+            t_us: self.time_hint_us,
+            layer: id.0,
+            expert: id.1,
+            bytes: self.expert_bytes,
+        });
+    }
+
+    fn emit_evict(&self, id: ExpertId) {
+        self.sink.emit_with(|| crate::events::TraceEvent::CacheEvict {
+            t_us: self.time_hint_us,
+            layer: id.0,
+            expert: id.1,
+        });
     }
 
     /// Unpinned resident expert with the lowest retention score; ties are

@@ -30,6 +30,7 @@ pub mod util;
 
 pub mod baselines;
 pub mod coordinator;
+pub mod events;
 pub mod exec;
 pub mod expertcache;
 pub mod hardware;

@@ -1,11 +1,14 @@
 //! `fiddler` CLI — leader entrypoint for the serving system.
 //!
 //! Subcommands:
-//!   serve      run the continuous-batching server on a synthetic workload
-//!   generate   single-request generation
-//!   beam       beam-search generation
-//!   calibrate  print the latency model / run measured calibration
-//!   inspect    show model + artifact + environment info
+//!   serve          run the continuous-batching server on a synthetic workload
+//!   generate       single-request generation
+//!   beam           beam-search generation
+//!   calibrate      print the latency model / run measured calibration
+//!   inspect        show model + artifact + environment info
+//!   trace-record   record a typed JSONL event trace of an open-loop sim run
+//!   trace-replay   re-run a recorded trace and diff the token streams
+//!   trace-summary  per-request flame summaries from a recorded trace
 //!
 //! Figure/table reproduction lives in `examples/` (see DESIGN.md §5).
 
@@ -28,6 +31,9 @@ fn main() -> Result<()> {
         "beam" => cmd_beam(&args),
         "calibrate" => cmd_calibrate(&args),
         "inspect" => cmd_inspect(&args),
+        "trace-record" => cmd_trace_record(&args),
+        "trace-replay" => cmd_trace_replay(&args),
+        "trace-summary" => cmd_trace_summary(&args),
         _ => {
             print_help();
             Ok(())
@@ -48,6 +54,16 @@ fn print_help() {
            beam       --model M --env E --policy P --width W --inp L --out L\n\
            calibrate  --env E [--measured] [--measured-pool] [--threads N]\n\
            inspect    --model M --env E\n\
+           trace-record   --trace T.jsonl [--requests N] [--rate R] [--inp L]\n\
+                          [--out L] [--seed S] + any SERVING flag; records a\n\
+                          typed JSONL event trace of an open-loop sim run\n\
+           trace-replay   --trace T.jsonl   re-runs the recorded workload and\n\
+                          diffs token streams (exit 1 on divergence)\n\
+           trace-summary  --trace T.jsonl   per-request flame summaries\n\
+                          (queue / prefill chunks / ITL / cache hits)\n\
+         \n\
+         OBSERVABILITY: every engine path accepts --events-out T.jsonl to\n\
+                   stream typed events (see rust/src/events/)\n\
          \n\
          DEFAULTS: --model mixtral-tiny --env env1 --policy fiddler\n\
          POLICIES: fiddler | mii (DeepSpeed-MII*) | lru (Mixtral-Offloading*) |\n\
@@ -198,6 +214,66 @@ fn cmd_serve(args: &Args) -> Result<()> {
         fiddler::util::stats::mean(&tps)
     );
     handle.shutdown()
+}
+
+/// `LoadSpec` from CLI flags (shared by trace-record and the bench).
+fn load_spec_from(args: &Args) -> fiddler::server::sim::LoadSpec {
+    let d = fiddler::server::sim::LoadSpec::default();
+    fiddler::server::sim::LoadSpec {
+        n_requests: args.usize_or("requests", 32),
+        rate_per_s: args.f64_or("rate", d.rate_per_s),
+        inp: args.usize_or("inp", d.inp),
+        out: args.usize_or("out", d.out),
+        long_every: args.usize_or("long-every", d.long_every),
+        long_inp: args.usize_or("long-inp", d.long_inp),
+        seed: args.u64_or("seed", d.seed),
+    }
+}
+
+fn cmd_trace_record(args: &Args) -> Result<()> {
+    let path = args.str_or("trace", "trace.jsonl").to_string();
+    let mut serving = ServingConfig::from_args(args)?;
+    serving.events_out = Some(path.clone());
+    let spec = load_spec_from(args);
+    let report = fiddler::server::sim::run_open_loop(serving, &spec)?;
+    println!(
+        "recorded {path}: {} completed / {} rejected | {:.2} tok/s | makespan {:.2} s (virtual)",
+        report.completed,
+        report.rejected,
+        report.throughput_tok_s(),
+        report.makespan_s
+    );
+    let events = fiddler::events::replay::read_log(&path)?;
+    println!("{} events on {} requests", events.len(), spec.n_requests);
+    Ok(())
+}
+
+fn cmd_trace_replay(args: &Args) -> Result<()> {
+    let path = args.str_or("trace", "trace.jsonl");
+    let events = fiddler::events::replay::read_log(path)?;
+    let rec = fiddler::events::replay::fold_trace(&events);
+    let outcomes = fiddler::events::replay::replay_trace(&rec)?;
+    let diffs = fiddler::events::replay::diff_replay(&rec, &outcomes);
+    if diffs.is_empty() {
+        println!(
+            "replay of {path}: {} requests bit-identical ({} events)",
+            rec.requests.len(),
+            events.len()
+        );
+        return Ok(());
+    }
+    for d in &diffs {
+        eprintln!("DIVERGED: {d}");
+    }
+    anyhow::bail!("{} of {} requests diverged on replay", diffs.len(), rec.requests.len());
+}
+
+fn cmd_trace_summary(args: &Args) -> Result<()> {
+    let path = args.str_or("trace", "trace.jsonl");
+    let events = fiddler::events::replay::read_log(path)?;
+    let summaries = fiddler::events::summary::summarize(&events);
+    print!("{}", fiddler::events::summary::render(&summaries));
+    Ok(())
 }
 
 fn cmd_calibrate(args: &Args) -> Result<()> {

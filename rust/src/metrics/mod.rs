@@ -5,7 +5,7 @@ use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Timing record of one generation (all timestamps virtual µs).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct GenMetrics {
     pub enqueue_us: f64,
     /// Time the scheduler admitted the request (prefill start).  Equal to
@@ -25,6 +25,11 @@ pub struct GenMetrics {
     /// before admission but still includes concurrently-batched requests
     /// (the cache is shared, so overlapping windows overlap-count).
     pub cache: Option<crate::expertcache::CacheStats>,
+    /// Expert-execution counters (resident / transferred / CPU /
+    /// prefetch-overlapped) attributed to this generation, with the same
+    /// windowing semantics as `cache`
+    /// ([`crate::moe::ExpertEvents::delta_since`]).
+    pub experts: Option<crate::moe::ExpertEvents>,
 }
 
 impl GenMetrics {
@@ -75,6 +80,9 @@ impl GenMetrics {
         o.set("tokens_per_s", Json::Num(self.tokens_per_s()));
         if let Some(c) = &self.cache {
             o.set("cache", c.to_json());
+        }
+        if let Some(e) = &self.experts {
+            o.set("experts", e.to_json());
         }
         o
     }
@@ -168,6 +176,7 @@ mod tests {
             token_done_us: vec![600.0, 1100.0, 1600.0, 2100.0],
             prompt_tokens: 8,
             cache: None,
+            experts: None,
         }
     }
 
@@ -225,5 +234,21 @@ mod tests {
         let cache = j.get("cache").unwrap();
         assert_eq!(cache.get("hits").unwrap().as_usize().unwrap(), 3);
         assert!((cache.get("hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expert_events_surface_in_json() {
+        let mut m = m();
+        assert!(m.to_json().get("experts").is_err(), "no counters => no key");
+        m.experts = Some(crate::moe::ExpertEvents {
+            resident: 6,
+            transferred: 1,
+            cpu: 1,
+            prefetch_overlapped: 2,
+        });
+        let j = m.to_json();
+        let e = j.get("experts").unwrap();
+        assert_eq!(e.get("prefetch_overlapped").unwrap().as_usize().unwrap(), 2);
+        assert!((e.get("hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
     }
 }

@@ -28,7 +28,7 @@ use crate::util::round_up_bucket;
 use anyhow::{bail, Result};
 
 /// Counters over expert executions (hit-rate metrics, Fig. 8 analysis).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ExpertEvents {
     pub resident: u64,
     pub transferred: u64,
@@ -65,6 +65,19 @@ impl ExpertEvents {
                 .saturating_sub(base.prefetch_overlapped),
         }
     }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        let mut o = crate::util::json::Json::obj();
+        o.set("resident", crate::util::json::Json::Num(self.resident as f64));
+        o.set("transferred", crate::util::json::Json::Num(self.transferred as f64));
+        o.set("cpu", crate::util::json::Json::Num(self.cpu as f64));
+        o.set(
+            "prefetch_overlapped",
+            crate::util::json::Json::Num(self.prefetch_overlapped as f64),
+        );
+        o.set("hit_rate", crate::util::json::Json::Num(self.hit_rate()));
+        o
+    }
 }
 
 /// Mutable execution state threaded through a serving session: the policy,
@@ -89,6 +102,10 @@ pub struct ExecContext {
     /// Cross-layer lookahead state of the pipelined layer executor
     /// ([`crate::pipeline`]); disabled (lookahead 0) by default.
     pub pipeline: PipelineState,
+    /// Engine-event stream ([`crate::events`]); disabled by default (one
+    /// branch per would-be event).  The serve loop attaches a live sink
+    /// via [`crate::server::ServeBackend::set_event_sink`].
+    pub sink: crate::events::EventSink,
 }
 
 impl ExecContext {
@@ -157,6 +174,7 @@ impl ExecContext {
             threads,
             pool: crate::exec::ExecutorPool::new(threads),
             pipeline: PipelineState::disabled(),
+            sink: crate::events::EventSink::default(),
         }
     }
 

@@ -281,6 +281,9 @@ pub(crate) fn moe_stage(
     }
 
     let t0 = cx.clock.now_us();
+    // Clockless cache paths (policy fetch/admit) stamp their trace events
+    // with the layer-start time.
+    cx.memory.set_time_hint(t0);
     // Snapshot which of this layer's experts have a transfer still in
     // flight BEFORE the policy plans: dynamic-caching policies admit() on
     // their demand-transfer plans, which promotes an in-flight entry to
@@ -367,6 +370,17 @@ pub(crate) fn moe_stage(
         }
     }
     // Dispatch longest-first (per-expert priority; see `exec`).
+    let n_chunks = chunks.len();
+    let cpu_experts = plans.iter().flatten().filter(|p| on_pool(p)).count();
+    let gpu_experts = plans.iter().flatten().filter(|p| !on_pool(p)).count();
+    let steal0 = cx.pool.steal_count();
+    cx.sink.emit_with(|| crate::events::TraceEvent::ExecDispatch {
+        t_us: t0,
+        layer,
+        chunks: n_chunks,
+        cpu_experts,
+        gpu_experts,
+    });
     let pending = crate::exec::run_expert_chunks(&cx.pool, chunks);
 
     // GPU-planned experts (and the PJRT fallback for CPU plans when the
@@ -391,6 +405,9 @@ pub(crate) fn moe_stage(
         dst.data[c.row0 * hidden..c.row0 * hidden + c.out.data.len()]
             .copy_from_slice(&c.out.data);
     }
+    let stolen = cx.pool.steal_count() - steal0;
+    cx.sink
+        .emit_with(|| crate::events::TraceEvent::ExecJoin { t_us: t0, layer, stolen });
 
     // Combine + simulated accounting, in expert-index order.  An
     // overridden expert's GPU slot starts no earlier than its weights'
@@ -489,7 +506,17 @@ fn prefetch_window(
                 break; // the lane moved out from under this distance
             }
             match cx.memory.prefetch((layer + d, j), now_us, transfer) {
-                Some(_) => issued += 1,
+                Some(ready_us) => {
+                    issued += 1;
+                    cx.sink.emit_with(|| crate::events::TraceEvent::PrefetchIssued {
+                        t_us: now_us,
+                        layer,
+                        target_layer: layer + d,
+                        expert: j,
+                        distance: d,
+                        ready_us,
+                    });
+                }
                 None => {
                     // Distinguish "lane backlogged" (nothing helps) from
                     // "every slot pinned" (lazily carve one working-set
@@ -501,8 +528,20 @@ fn prefetch_window(
                         && cx.memory.release_pins(1) == 1
                     {
                         cx.pipeline.released += 1;
-                        if cx.memory.prefetch((layer + d, j), now_us, transfer).is_some() {
+                        if let Some(ready_us) =
+                            cx.memory.prefetch((layer + d, j), now_us, transfer)
+                        {
                             issued += 1;
+                            cx.sink.emit_with(|| {
+                                crate::events::TraceEvent::PrefetchIssued {
+                                    t_us: now_us,
+                                    layer,
+                                    target_layer: layer + d,
+                                    expert: j,
+                                    distance: d,
+                                    ready_us,
+                                }
+                            });
                             continue;
                         }
                     }
@@ -559,11 +598,22 @@ fn apply_inflight_overrides(
                 // while planning; the override supersedes that transfer —
                 // take its charge (and the entry's promotion) back.
                 cx.memory.cancel_demand_transfer((layer, j), *ready);
+                cx.sink.emit_with(|| crate::events::TraceEvent::PrefetchCancelled {
+                    t_us: t0,
+                    layer,
+                    expert: j,
+                });
             }
             // The provisional plan-time miss becomes a (prefetch) hit —
             // the expert is served from the speculative transfer.
             cx.memory.claim_inflight((layer, j));
             cx.events.prefetch_overlapped += 1;
+            cx.sink.emit_with(|| crate::events::TraceEvent::PrefetchOverlapped {
+                t_us: t0,
+                layer,
+                expert: j,
+                wait_us: wait,
+            });
         }
     }
 }

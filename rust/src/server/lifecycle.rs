@@ -112,6 +112,21 @@ pub trait ServeBackend {
     }
     /// Sample a next token from a logits row (greedy at temperature 0).
     fn sample(&mut self, logits: &[f32]) -> u32;
+    /// The backend's trace-event sink (disabled unless installed via
+    /// [`ServeBackend::set_event_sink`]).  Cloning shares the sink.
+    fn event_sink(&self) -> crate::events::EventSink {
+        crate::events::EventSink::disabled()
+    }
+    /// Install a trace-event sink on the backend AND its expert cache, so
+    /// cache/prefetch/exec events interleave with the lifecycle stream.
+    /// The default drops the sink (backend emits nothing of its own).
+    fn set_event_sink(&mut self, _sink: crate::events::EventSink) {}
+    /// Snapshot of the backend's cumulative expert-execution counters
+    /// (resident / transferred / CPU / prefetch-overlapped); the serve
+    /// loop stamps per-request deltas of this into [`GenMetrics`].
+    fn expert_events(&self) -> crate::moe::ExpertEvents {
+        crate::moe::ExpertEvents::default()
+    }
 }
 
 impl ServeBackend for Engine {
@@ -176,6 +191,18 @@ impl ServeBackend for Engine {
 
     fn sample(&mut self, logits: &[f32]) -> u32 {
         Engine::sample(self, logits)
+    }
+
+    fn event_sink(&self) -> crate::events::EventSink {
+        self.cx.sink.clone()
+    }
+
+    fn set_event_sink(&mut self, sink: crate::events::EventSink) {
+        Engine::set_event_sink(self, sink);
+    }
+
+    fn expert_events(&self) -> crate::moe::ExpertEvents {
+        self.cx.events.clone()
     }
 }
 
@@ -315,6 +342,9 @@ enum Phase {
 /// One request moving through the lifecycle: an ordinary generation
 /// (`width == 1`) or a beam group (`width > 1`) — same machinery.
 struct SequenceGroup {
+    /// Serve-loop-scoped request id (ingest order, starting at 0) — the
+    /// `req` field correlating this group's trace events.
+    id: u64,
     prompt: Vec<u32>,
     max_new: usize,
     width: usize,
@@ -326,6 +356,9 @@ struct SequenceGroup {
     kv_reserved: u64,
     /// Cumulative cache counters at admission; completion stamps the delta.
     cache_base: CacheStats,
+    /// Cumulative expert-execution counters at admission (same delta
+    /// stamping as `cache_base`).
+    events_base: crate::moe::ExpertEvents,
     produced: usize,
     phase: Phase,
 }
@@ -390,6 +423,31 @@ pub fn serve_lifecycle<B: ServeBackend>(
             cfg.max_batch, max_batch
         );
     }
+    // Install the file sink requested by --events-out unless the caller
+    // already armed one (trace-record passes its own through the config).
+    if let Some(path) = cfg.events_out.as_deref() {
+        if !backend.event_sink().is_enabled() {
+            match crate::events::EventSink::to_path(path) {
+                Ok(s) => backend.set_event_sink(s),
+                Err(e) => eprintln!("warning: --events-out {path}: {e}"),
+            }
+        }
+    }
+    let sink = backend.event_sink();
+    sink.emit_with(|| crate::events::TraceEvent::Meta {
+        seed: cfg.seed,
+        temperature: cfg.temperature,
+        max_batch,
+        queue_capacity: cfg.queue_capacity,
+        prefill_chunk: cfg.prefill_chunk,
+        admission: cfg.admission.label().to_string(),
+        kv_budget_mb: cfg.kv_budget_mb,
+        slo_ttft_ms: cfg.slo_ttft_ms,
+        lookahead: cfg.pipeline_lookahead,
+    });
+    // Serve-loop request ids, in ingest order (Cell: the ingest closure
+    // and the loop body both touch it).
+    let next_id = std::cell::Cell::new(0u64);
     let mut kv = KvBudget::new(cfg.kv_budget_mb);
     let mut queue: VecDeque<SequenceGroup> = VecDeque::new();
     // Requests scheduled to arrive at a future virtual time (open-loop
@@ -408,8 +466,23 @@ pub fn serve_lifecycle<B: ServeBackend>(
         if r.shutdown {
             return true;
         }
+        let id = next_id.get();
+        next_id.set(id + 1);
         let enqueue_us = r.arrive_at_us.unwrap_or_else(|| backend.now_us());
+        sink.emit_with(|| crate::events::TraceEvent::RequestArrived {
+            req: id,
+            t_us: enqueue_us,
+            prompt: r.prompt.clone(),
+            max_new: r.max_new,
+            width: r.width,
+            slo_us: r.slo_us,
+        });
         let reject = |r: &Request, msg: String| {
+            sink.emit_with(|| crate::events::TraceEvent::RequestRejected {
+                req: id,
+                t_us: enqueue_us,
+                reason: msg.clone(),
+            });
             let _ = r.stream.send(Event::Error(msg));
         };
         if r.prompt.is_empty() {
@@ -438,6 +511,7 @@ pub fn serve_lifecycle<B: ServeBackend>(
         }
         let deadline_us = enqueue_us + r.slo_us.unwrap_or(cfg.slo_ttft_ms * 1e3);
         queue.push_back(SequenceGroup {
+            id,
             metrics: GenMetrics {
                 enqueue_us,
                 prompt_tokens: r.prompt.len(),
@@ -450,6 +524,7 @@ pub fn serve_lifecycle<B: ServeBackend>(
             deadline_us,
             kv_reserved: 0,
             cache_base: CacheStats::default(),
+            events_base: crate::moe::ExpertEvents::default(),
             produced: 0,
             phase: Phase::Queued,
         });
@@ -497,6 +572,12 @@ pub fn serve_lifecycle<B: ServeBackend>(
         //    (receivers must never hang); admitted groups drain below.
         if shutting_down {
             for g in queue.drain(..) {
+                let (id, t) = (g.id, backend.now_us());
+                sink.emit_with(|| crate::events::TraceEvent::RequestFailed {
+                    req: id,
+                    t_us: t,
+                    reason: "server shutting down before admission".to_string(),
+                });
                 g.fail("server shutting down before admission");
             }
             for r in pending.drain(..) {
@@ -555,7 +636,21 @@ pub fn serve_lifecycle<B: ServeBackend>(
                     g.kv_reserved = worst;
                     g.metrics.admitted_us = backend.now_us();
                     g.cache_base = backend.cache_stats();
+                    g.events_base = backend.expert_events();
                     g.phase = Phase::Prefilling { cursor: 0, cache: backend.new_cache() };
+                    let (id, t, qd) = (g.id, backend.now_us(), g.metrics.queue_delay_us());
+                    sink.emit_with(|| crate::events::TraceEvent::RequestAdmitted {
+                        req: id,
+                        t_us: t,
+                        kv_reserved: worst,
+                        queue_delay_us: qd,
+                    });
+                    let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
+                    sink.emit_with(|| crate::events::TraceEvent::KvBudget {
+                        t_us: t,
+                        used_bytes: used,
+                        borrowed_slots: borrowed,
+                    });
                     groups.push(g);
                     break;
                 }
@@ -576,20 +671,52 @@ pub fn serve_lifecycle<B: ServeBackend>(
             let step =
                 if cfg.prefill_chunk == 0 { remaining } else { cfg.prefill_chunk.min(remaining) };
             let is_last = *cursor + step == g.prompt.len();
+            let chunk_start = *cursor;
             match backend.prefill_chunk(&g.prompt[*cursor..*cursor + step], cache, is_last) {
                 Err(e) => {
-                    let _ = g.stream.send(Event::Error(e.to_string()));
+                    let reason = e.to_string();
+                    let (id, t) = (g.id, backend.now_us());
+                    let _ = g.stream.send(Event::Error(reason.clone()));
+                    sink.emit_with(|| crate::events::TraceEvent::RequestFailed {
+                        req: id,
+                        t_us: t,
+                        reason,
+                    });
                     failed = Some(gi);
                 }
-                Ok(None) => *cursor += step,
+                Ok(None) => {
+                    *cursor += step;
+                    let (id, t) = (g.id, backend.now_us());
+                    sink.emit_with(|| crate::events::TraceEvent::PrefillChunk {
+                        req: id,
+                        t_us: t,
+                        start: chunk_start,
+                        len: step,
+                        is_last: false,
+                    });
+                }
                 Ok(Some(logits)) => {
                     let now = backend.now_us();
+                    let id = g.id;
+                    sink.emit_with(|| crate::events::TraceEvent::PrefillChunk {
+                        req: id,
+                        t_us: now,
+                        start: chunk_start,
+                        len: step,
+                        is_last: true,
+                    });
                     g.metrics.first_token_us = now;
                     g.metrics.token_done_us.push(now);
                     g.produced = 1;
                     let slots = if g.width == 1 {
                         let tok = backend.sample(&logits);
                         let _ = g.stream.send(Event::Token(tok));
+                        sink.emit_with(|| crate::events::TraceEvent::TokenEmitted {
+                            req: id,
+                            t_us: now,
+                            token: tok,
+                            index: 0,
+                        });
                         let cache = std::mem::replace(cache, SequenceCache { layers: Vec::new() });
                         vec![Slot { cache, last: tok, tokens: vec![tok], score: 0.0 }]
                     } else {
@@ -670,6 +797,13 @@ pub fn serve_lifecycle<B: ServeBackend>(
                     s.last = tok;
                     s.tokens.push(tok);
                     let _ = g.stream.send(Event::Token(tok));
+                    let (id, idx) = (g.id, g.produced);
+                    sink.emit_with(|| crate::events::TraceEvent::TokenEmitted {
+                        req: id,
+                        t_us: now,
+                        token: tok,
+                        index: idx,
+                    });
                     g.produced += 1;
                     g.metrics.token_done_us.push(now);
                     continue;
@@ -683,6 +817,13 @@ pub fn serve_lifecycle<B: ServeBackend>(
                     s.last = tok;
                     s.tokens.push(tok);
                     let _ = g.stream.send(Event::Token(tok));
+                    let (id, idx) = (g.id, g.produced);
+                    sink.emit_with(|| crate::events::TraceEvent::TokenEmitted {
+                        req: id,
+                        t_us: now,
+                        token: tok,
+                        index: idx,
+                    });
                 } else {
                     // Same beam-update kernel as the standalone driver.
                     let scores: Vec<f32> = slots.iter().map(|s| s.score).collect();
@@ -715,19 +856,42 @@ pub fn serve_lifecycle<B: ServeBackend>(
             }
             let mut g = groups.remove(gi);
             g.metrics.cache = Some(backend.cache_stats().delta_since(&g.cache_base));
+            g.metrics.experts = Some(backend.expert_events().delta_since(&g.events_base));
+            let (id, t) = (g.id, backend.now_us());
             if g.width > 1 {
                 if let Phase::Decoding { slots } = &g.phase {
                     let best = slots
                         .iter()
                         .max_by(|a, b| rank_key(a.score).total_cmp(&rank_key(b.score)))
                         .expect("beam group without slots");
-                    for &t in &best.tokens {
-                        let _ = g.stream.send(Event::Token(t));
+                    for (i, &tok) in best.tokens.iter().enumerate() {
+                        let _ = g.stream.send(Event::Token(tok));
+                        sink.emit_with(|| crate::events::TraceEvent::TokenEmitted {
+                            req: id,
+                            t_us: t,
+                            token: tok,
+                            index: i,
+                        });
                     }
                 }
             }
             let _ = g.stream.send(Event::Done(g.metrics.clone()));
+            let (tokens, ttft, qd) =
+                (g.metrics.token_done_us.len(), g.metrics.ttft_us(), g.metrics.queue_delay_us());
+            sink.emit_with(|| crate::events::TraceEvent::RequestFinished {
+                req: id,
+                t_us: t,
+                tokens,
+                ttft_us: ttft,
+                queue_delay_us: qd,
+            });
             kv.release(g.kv_reserved, backend.expert_cache_mut());
+            let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
+            sink.emit_with(|| crate::events::TraceEvent::KvBudget {
+                t_us: t,
+                used_bytes: used,
+                borrowed_slots: borrowed,
+            });
         }
     }
 }
@@ -828,6 +992,7 @@ mod tests {
     fn queued(prompt_len: usize, deadline_us: f64) -> SequenceGroup {
         let (tx, _rx) = std::sync::mpsc::channel();
         SequenceGroup {
+            id: 0,
             prompt: vec![1; prompt_len],
             max_new: 1,
             width: 1,
@@ -836,6 +1001,7 @@ mod tests {
             deadline_us,
             kv_reserved: 0,
             cache_base: CacheStats::default(),
+            events_base: crate::moe::ExpertEvents::default(),
             produced: 0,
             phase: Phase::Queued,
         }

@@ -7,8 +7,13 @@
 //!                       "slo_ms": D  (TTFT deadline for --admission slo)
 //!   server -> {"token": 42}            (streamed, one per generated token)
 //!   server -> {"done": true, "ttft_us": ..., "queue_delay_us": ...,
-//!              "itl_us": ..., "tokens_per_s": ...}
+//!              "mean_itl_us": ..., "tokens_per_s": ...,
+//!              "prompt_tokens": ..., "output_tokens": ...,
+//!              "cache": {...}, "experts": {...}}   (optional counters)
 //!   server -> {"error": "..."}         (on bad requests)
+//!
+//! Wire encoding is the shared [`crate::events::wire_event_json`] encoder
+//! — the same `GenMetrics::to_json` shape the trace tooling parses.
 //!
 //! The listener thread accepts connections and forwards requests into the
 //! engine worker's queue (`serve_loop`); one relay thread per connection
@@ -49,22 +54,7 @@ fn parse_request(line: &str) -> Result<(Vec<u32>, usize, usize, Option<f64>)> {
 }
 
 fn event_line(ev: &Event) -> String {
-    let mut o = Json::obj();
-    match ev {
-        Event::Token(t) => o.set("token", Json::from(*t as usize)),
-        Event::Done(m) => {
-            o.set("done", Json::Bool(true));
-            o.set("ttft_us", Json::Num(m.ttft_us()));
-            o.set("queue_delay_us", Json::Num(m.queue_delay_us()));
-            o.set("itl_us", Json::Num(m.mean_itl_us()));
-            o.set("tokens_per_s", Json::Num(m.tokens_per_s()));
-            if let Some(c) = &m.cache {
-                o.set("cache", c.to_json());
-            }
-        }
-        Event::Error(e) => o.set("error", Json::from(e.clone())),
-    }
-    format!("{o}\n")
+    format!("{}\n", crate::events::wire_event_json(ev))
 }
 
 fn handle_conn(stream: TcpStream, requests: Sender<Request>) {
@@ -167,10 +157,18 @@ mod tests {
             cache: Some(stats),
             ..Default::default()
         };
-        let l = event_line(&Event::Done(m));
+        let l = event_line(&Event::Done(m.clone()));
         let v = Json::parse(l.trim()).unwrap();
         assert!(v.get("done").unwrap().as_bool().unwrap());
         assert_eq!(v.get("cache").unwrap().get("hits").unwrap().as_usize().unwrap(), 2);
+        // The wire line IS the shared encoder's output — no hand-rolled
+        // drift between the TCP front end and the trace tooling.
+        assert_eq!(
+            l,
+            format!("{}\n", crate::events::wire_event_json(&Event::Done(m)))
+        );
+        assert!(v.get("mean_itl_us").is_ok());
+        assert!(v.get("output_tokens").is_ok());
     }
 
     #[test]

@@ -35,6 +35,8 @@ pub struct SimBackend {
     clock: VirtualClock,
     cache: ExpertCache,
     rng: Rng,
+    sink: crate::events::EventSink,
+    events: crate::moe::ExpertEvents,
     /// Fixed per-chunk cost (expert-base amortization lost to chunking).
     pub prefill_chunk_base_us: f64,
     pub prefill_per_token_us: f64,
@@ -50,6 +52,8 @@ impl SimBackend {
             clock: VirtualClock::new(),
             cache: ExpertCache::with_capacity(8),
             rng,
+            sink: crate::events::EventSink::disabled(),
+            events: crate::moe::ExpertEvents::default(),
             prefill_chunk_base_us: 2_000.0,
             prefill_per_token_us: 1_000.0,
             decode_base_us: 20_000.0,
@@ -77,7 +81,11 @@ impl SimBackend {
         // One expert-cache access per token: gives per-request cache-stat
         // deltas real counters, and keeps the arbitration path (capacity
         // shrink/grow) exercised under load.
-        self.cache.fetch((0, tok as usize % self.cfg.n_experts));
+        if self.cache.fetch((0, tok as usize % self.cfg.n_experts)) {
+            self.events.transferred += 1;
+        } else {
+            self.events.resident += 1;
+        }
     }
 
     /// Deterministic next-token logits from the sequence's KV state: an
@@ -134,6 +142,7 @@ impl ServeBackend for SimBackend {
         anyhow::ensure!(!chunk.is_empty(), "empty prefill chunk");
         self.clock
             .advance_us(self.prefill_chunk_base_us + chunk.len() as f64 * self.prefill_per_token_us);
+        self.cache.set_time_hint(self.clock.now_us());
         for &t in chunk {
             self.append_token(cache, t);
         }
@@ -148,6 +157,7 @@ impl ServeBackend for SimBackend {
         assert_eq!(last.len(), caches.len());
         self.clock
             .advance_us(self.decode_base_us + last.len() as f64 * self.decode_per_seq_us);
+        self.cache.set_time_hint(self.clock.now_us());
         let mut rows = Vec::with_capacity(last.len());
         for (i, cache) in caches.iter_mut().enumerate() {
             self.append_token(cache, last[i]);
@@ -158,6 +168,19 @@ impl ServeBackend for SimBackend {
 
     fn sample(&mut self, logits: &[f32]) -> u32 {
         sample_token(logits, self.serving.temperature, &mut self.rng)
+    }
+
+    fn event_sink(&self) -> crate::events::EventSink {
+        self.sink.clone()
+    }
+
+    fn set_event_sink(&mut self, sink: crate::events::EventSink) {
+        self.cache.set_event_sink(sink.clone());
+        self.sink = sink;
+    }
+
+    fn expert_events(&self) -> crate::moe::ExpertEvents {
+        self.events.clone()
     }
 }
 
