@@ -1,0 +1,710 @@
+"""Faithful Python port of PR 7's serving-robustness logic: the lifecycle
+scheduler (admission, KV budget + expert-slot borrowing, chunked prefill,
+prefill token budget, preemption + drop-and-recompute requeue, hard
+deadlines, cancel/reload/drain controls) over the SimBackend virtual-time
+cost model, with the exact Rust RNG (SplitMix64 -> Xoshiro256**) so the
+seeded fault-injection draw stream matches bit for bit.
+
+Mirrored Rust semantics (rust/src/server/{lifecycle,sim}.rs):
+ - costs: prefill chunk of n tokens = 2000 + n*1000 us, decode step over
+   b sequences = 20000 + b*2000 us
+ - faults: 3 draws per backend step (stall, spike, err) from
+   Rng(fault_seed ^ 0xFA17); stalls/spikes burn clock, err aborts step
+ - KvBudget: pool + borrowed expert slots (336 MiB each), 128 KiB/token
+ - serve loop order: triage -> controls -> shutdown-fail -> idle ->
+   deadlines -> admission (one/iter, one preemption/iter) -> prefill
+   (budgeted) -> decode -> retire
+ - greedy tokens: FNV-1a over the fed-token history picks the peak
+
+Acceptance checks:
+ 1. seeded faults are deterministic, and the Rust test's seed-3
+    "stall=0.2:30000,err=0.05" spec kills at least one of 16 requests
+    (validates injected_faults_are_seed_deterministic's rejected>0).
+ 2. cancel mid-decode releases the KV reservation AND the borrowed
+    expert-cache slot; the blocked request then admits and completes.
+ 3. preempt-then-requeue reproduces the undisturbed token stream exactly
+    (greedy), with the tight request admitted mid-flight.
+ 4. a hard deadline fails at a chunk boundary with ~2 of 40 tokens done;
+    a deadline-free peer completes.
+ 5. reload + drain preserve in-flight work; post-drain arrivals fail.
+ 6. --prefill-tokens strictly improves the second prompt's TTFT with
+    identical token streams.
+ 7. the events.rs robust-trace workload completes some, fails some, and
+    records cancellations and injected faults.
+ 8. the BENCH_PR7 workload shows preemption strictly improving tight-SLO
+    attainment over reject-only at every swept deadline.
+"""
+
+M64 = (1 << 64) - 1
+MIB = 1 << 20
+EXPERT_BYTES = 3 * 4096 * 14336 * 2
+KV_PER_TOK = 32 * 1024 * 2 * 2
+VOCAB = 512
+
+
+# --- exact port of rust/src/util/rng.rs -------------------------------
+class Rng:
+    def __init__(self, seed):
+        s = seed & M64
+        st = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & M64
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            st.append(z ^ (z >> 31))
+        self.s = st
+
+    def next_u64(self):
+        s = self.s
+        r = s[1] * 5 & M64
+        r = ((r << 7) | (r >> 57)) & M64
+        r = r * 9 & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & M64
+        return r
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+
+class Poisson:
+    def __init__(self, rate_per_s, seed):
+        self.rate, self.t, self.rng = rate_per_s, 0.0, Rng(seed ^ 0xA221)
+
+    def next_us(self):
+        import math
+        self.t += -math.log(1.0 - self.rng.f64()) / self.rate * 1e6
+        return self.t
+
+
+def fnv_peak(hist):
+    h = 0xCBF29CE484222325
+    for t in hist:
+        h = ((h ^ t) * 0x100000001B3) & M64
+    return h % VOCAB
+
+
+class Fault(Exception):
+    pass
+
+
+class Backend:
+    """SimBackend: virtual clock + cost model + seeded fault layer."""
+
+    def __init__(self, faults_spec=None, fault_seed=0, pinned=0):
+        self.now = 0.0
+        self.capacity, self.pinned = 8, pinned
+        self.enabled = False
+        self.fault_count = 0
+        if faults_spec:
+            self.frng = Rng(fault_seed ^ 0xFA17)
+            kv = dict(p.split("=") for p in faults_spec.split(","))
+            self.stall_p, self.stall_us = 0.0, 0.0
+            self.spike_p, self.spike_us = 0.0, 0.0
+            self.err_p = 0.0
+            if "stall" in kv:
+                p, us = kv["stall"].split(":")
+                self.stall_p, self.stall_us = float(p), float(us)
+            if "spike" in kv:
+                p, us = kv["spike"].split(":")
+                self.spike_p, self.spike_us = float(p), float(us)
+            if "err" in kv:
+                self.err_p = float(kv["err"])
+            self.enabled = self.stall_p > 0 or self.spike_p > 0 or self.err_p > 0
+
+    def _faults(self, site):
+        if not self.enabled:
+            return
+        stall = self.frng.f64() < self.stall_p
+        spike = self.frng.f64() < self.spike_p
+        err = self.frng.f64() < self.err_p
+        if stall:
+            self.now += self.stall_us
+            self.fault_count += 1
+        if spike:
+            self.now += self.spike_us
+            self.fault_count += 1
+        if err:
+            self.fault_count += 1
+            raise Fault(f"injected backend fault ({site})")
+
+    def prefill(self, n):
+        self._faults("prefill")
+        self.now += 2000.0 + n * 1000.0
+
+    def decode(self, b):
+        self._faults("decode")
+        self.now += 20000.0 + b * 2000.0
+
+    def advance_to(self, t):
+        self.now = max(self.now, t)
+
+
+class Kv:
+    """Exact port of KvBudget (pool + expert-slot borrowing)."""
+
+    def __init__(self, pool_mb):
+        self.pool = pool_mb * MIB
+        self.used = 0
+        self.borrowed = 0
+
+    def unlimited(self):
+        return self.pool == 0
+
+    def ceiling(self):
+        return self.pool + self.borrowed * EXPERT_BYTES
+
+    def ever_feasible(self, bytes_, be):
+        if self.unlimited():
+            return True
+        unpinned = max(0, be.capacity - be.pinned) + self.borrowed
+        return bytes_ <= self.pool + unpinned * EXPERT_BYTES
+
+    def feasible(self, bytes_, be):
+        if self.unlimited():
+            return True
+        borrowable = max(0, be.capacity - be.pinned) * EXPERT_BYTES
+        return self.used + bytes_ <= self.ceiling() + borrowable
+
+    def try_reserve(self, bytes_, be):
+        if self.unlimited():
+            return True
+        if not self.feasible(bytes_, be):
+            return False
+        while self.used + bytes_ > self.ceiling():
+            be.capacity -= 1
+            self.borrowed += 1
+        self.used += bytes_
+        return True
+
+    def release(self, bytes_, be):
+        if self.unlimited():
+            return
+        self.used = max(0, self.used - bytes_)
+        while self.borrowed > 0 and self.used + EXPERT_BYTES <= self.ceiling():
+            be.capacity += 1
+            self.borrowed -= 1
+
+    def set_pool_mb(self, pool_mb, be):
+        self.pool = pool_mb * MIB
+        if self.unlimited():
+            be.capacity += self.borrowed
+            self.borrowed = 0
+            self.used = 0
+            return
+        while self.borrowed > 0 and self.used + EXPERT_BYTES <= self.ceiling():
+            be.capacity += 1
+            self.borrowed -= 1
+        while self.used > self.ceiling() and be.capacity > be.pinned:
+            be.capacity -= 1
+            self.borrowed += 1
+
+
+def kv_worst(prompt, max_new, width=1):
+    return (prompt + max_new) * width * KV_PER_TOK
+
+
+class Cfg:
+    def __init__(self, **kw):
+        self.max_batch = 16
+        self.queue_capacity = 256
+        self.prefill_chunk = 0
+        self.admission = "fcfs"
+        self.kv_budget_mb = 0
+        self.slo_ttft_ms = 5000.0
+        self.prefill_tokens = 0
+        self.max_preemptions = 0
+        for k, v in kw.items():
+            setattr(self, k, v)
+
+
+def req(prompt, max_new, slo_us=None, deadline_us=None, arrive=None, idx=None):
+    return dict(kind="req", prompt=prompt, max_new=max_new, slo_us=slo_us,
+                deadline_us=deadline_us, arrive=arrive, idx=idx)
+
+
+def ctl(msg, arrive):
+    return dict(kind="ctl", msg=msg, arrive=arrive)
+
+
+SENTINEL = dict(kind="sentinel", arrive=1e15)
+
+
+def serve(cfg, be, sends, track=False):
+    """Port of serve_lifecycle over a pre-loaded channel."""
+    kv = Kv(cfg.kv_budget_mb)
+    chan = list(sends)
+    pending, inbox, queue, groups = [], [], [], []
+    outcomes = {}
+    shutting = False
+    next_id = [0]
+
+    def outcome(g):
+        return outcomes.setdefault(g["idx"], dict(
+            tokens=[], failed=None, enqueue=g["enqueue"], admitted=None,
+            first_token=None, token_times=[], preemptions=0))
+
+    def fail(g, reason, msg):
+        o = outcome(g)
+        o["failed"] = reason
+        o["msg"] = msg
+        o["preemptions"] = g["preemptions"]
+
+    def ingest(r):
+        gid = next_id[0]
+        next_id[0] += 1
+        enq = r["arrive"] if r["arrive"] is not None else be.now
+        g = dict(id=gid, idx=r["idx"], prompt=r["prompt"], max_new=r["max_new"],
+                 width=1, enqueue=enq,
+                 deadline=enq + (r["slo_us"] if r["slo_us"] is not None
+                                 else cfg.slo_ttft_ms * 1e3),
+                 hard=enq + r["deadline_us"] if r["deadline_us"] is not None else None,
+                 preemptions=0, resume=None, kv=0, produced=0,
+                 phase="queued", cursor=0, tokens=[], hist=None)
+        o = outcome(g)
+        if not r["prompt"]:
+            o["failed"] = "bad_request"
+            return
+        if len(queue) >= cfg.queue_capacity:
+            o["failed"] = "queue_full"
+            return
+        if not kv.ever_feasible(kv_worst(len(r["prompt"]), r["max_new"]), be):
+            o["failed"] = "kv_infeasible"
+            return
+        queue.append(g)
+
+    while True:
+        live = inbox[:]
+        inbox.clear()
+        while chan:
+            r = chan.pop(0)
+            if r["arrive"] is not None and r["arrive"] > be.now:
+                at = next((i for i, p in enumerate(pending)
+                           if (p["arrive"] or 0.0) > r["arrive"]), len(pending))
+                pending.insert(at, r)
+            else:
+                live.append(r)
+        controls = []
+        while pending and (pending[0]["arrive"] or 0.0) <= be.now:
+            r = pending.pop(0)
+            if r["kind"] == "ctl":
+                controls.append(r)
+            elif r["kind"] == "sentinel":
+                shutting = True
+            else:
+                ingest(r)
+        for r in live:
+            if r["kind"] == "ctl":
+                controls.append(r)
+            elif r["kind"] == "sentinel":
+                shutting = True
+            else:
+                ingest(r)
+        for c in controls:
+            m = c["msg"]
+            if m[0] == "cancel":
+                rid = m[1]
+                qi = next((i for i, g in enumerate(queue) if g["id"] == rid), None)
+                if qi is not None:
+                    fail(queue.pop(qi), "cancelled", "request cancelled")
+                else:
+                    gi = next((i for i, g in enumerate(groups) if g["id"] == rid), None)
+                    if gi is not None:
+                        g = groups.pop(gi)
+                        kv.release(g["kv"], be)
+                        fail(g, "cancelled", "request cancelled")
+            elif m[0] == "reload":
+                for k, v in m[1].items():
+                    setattr(cfg, k, v)
+                    if k == "kv_budget_mb":
+                        kv.set_pool_mb(v, be)
+            elif m[0] == "drain":
+                shutting = True
+        if shutting:
+            for g in queue:
+                fail(g, "shutdown", "server shutting down before admission")
+            queue.clear()
+            for r in pending:
+                if r["kind"] == "req":
+                    outcomes.setdefault(r["idx"], dict(
+                        tokens=[], failed="shutdown", enqueue=None, admitted=None,
+                        first_token=None, token_times=[], preemptions=0))
+                    outcomes[r["idx"]]["failed"] = "shutdown"
+            pending.clear()
+            if not groups:
+                return outcomes
+        if not groups and not queue:
+            if pending:
+                be.advance_to(pending[0]["arrive"] or 0.0)
+                continue
+            return outcomes
+        # 4b. deadline enforcement
+        now = be.now
+        for coll, holds_kv in ((queue, False), (groups, True)):
+            i = 0
+            while i < len(coll):
+                g = coll[i]
+                if g["hard"] is not None and now > g["hard"]:
+                    coll.pop(i)
+                    if holds_kv:
+                        kv.release(g["kv"], be)
+                    fail(g, "deadline", "deadline exceeded before completion")
+                else:
+                    i += 1
+        # 5. admission (one per iteration; at most one preemption)
+        active = sum(1 if g["phase"] != "decode" else 1 for g in groups)
+        hold = cfg.prefill_tokens == 0 and any(
+            g["phase"] == "prefill" for g in groups)
+        if not hold and not shutting:
+            order = list(range(len(queue)))
+            if cfg.admission == "sjf":
+                order.sort(key=lambda i: len(queue[i]["prompt"]))
+            elif cfg.admission == "slo":
+                order.sort(key=lambda i: queue[i]["deadline"])
+            preempted = False
+            for i in order:
+                if active + queue[i]["width"] > cfg.max_batch:
+                    continue
+                worst = kv_worst(len(queue[i]["prompt"]), queue[i]["max_new"])
+                ok = kv.try_reserve(worst, be)
+                if not ok and cfg.max_preemptions > 0 and not preempted:
+                    cand_d = queue[i]["deadline"]
+                    vi, best = None, None
+                    for j, g in enumerate(groups):
+                        if (g["width"] == 1 and g["phase"] == "decode"
+                                and g["preemptions"] < cfg.max_preemptions
+                                and g["deadline"] > cand_d):
+                            if best is None or g["deadline"] >= best:
+                                best, vi = g["deadline"], j
+                    if vi is not None:
+                        v = groups.pop(vi)
+                        kv.release(v["kv"], be)
+                        v["kv"] = 0
+                        v["preemptions"] += 1
+                        v["resume"] = v["prompt"] + v["tokens"]
+                        v["phase"] = "queued"
+                        v["cursor"] = 0
+                        queue.append(v)
+                        preempted = True
+                        ok = kv.try_reserve(worst, be)
+                if ok:
+                    g = queue.pop(i)
+                    g["kv"] = worst
+                    g["phase"] = "prefill"
+                    outcome(g)["admitted"] = be.now
+                    groups.append(g)
+                    break
+        # 6. prefill (budgeted)
+        failed = []
+        pf = [i for i, g in enumerate(groups) if g["phase"] == "prefill"]
+        budget = cfg.prefill_tokens
+        for k, gi in enumerate(pf):
+            if k > 0 and cfg.prefill_tokens == 0:
+                break
+            g = groups[gi]
+            prefix = g["resume"] if g["resume"] is not None else g["prompt"]
+            remaining = len(prefix) - g["cursor"]
+            step = remaining if cfg.prefill_chunk == 0 else min(
+                cfg.prefill_chunk, remaining)
+            if cfg.prefill_tokens > 0:
+                if k > 0:
+                    step = min(step, budget)
+                if step == 0:
+                    break
+                budget = max(0, budget - step)
+            is_last = g["cursor"] + step == len(prefix)
+            try:
+                be.prefill(step)
+            except Fault as e:
+                failed.append((gi, str(e)))
+                continue
+            if not is_last:
+                g["cursor"] += step
+            else:
+                o = outcome(g)
+                if g["produced"] == 0:
+                    o["first_token"] = be.now
+                o["token_times"].append(be.now)
+                carry = prefix[len(g["prompt"]):]
+                g["hist"] = list(prefix) if track else None
+                tok = fnv_peak(g["hist"]) if track else 0
+                g["tokens"] = list(carry) + [tok]
+                g["produced"] += 1
+                g["resume"] = None
+                g["phase"] = "decode"
+        for gi, msg in reversed(failed):
+            g = groups.pop(gi)
+            kv.release(g["kv"], be)
+            fail(g, "backend", msg)
+        # 7. decode
+        parts = [g for g in groups if g["produced"] < g["max_new"]
+                 and g["phase"] == "decode"]
+        if parts:
+            err = None
+            try:
+                be.decode(len(parts))
+            except Fault as e:
+                err = f"decode step failed: {e}"
+            if err:
+                for g in parts:
+                    groups.remove(g)
+                    kv.release(g["kv"], be)
+                    fail(g, "backend", err)
+            else:
+                for g in parts:
+                    if track:
+                        g["hist"].append(g["tokens"][-1])
+                        tok = fnv_peak(g["hist"])
+                    else:
+                        tok = 0
+                    g["tokens"].append(tok)
+                    g["produced"] += 1
+                    outcome(g)["token_times"].append(be.now)
+        # 8. retire
+        i = 0
+        while i < len(groups):
+            g = groups[i]
+            if g["produced"] < g["max_new"]:
+                i += 1
+                continue
+            groups.pop(i)
+            o = outcome(g)
+            o["tokens"] = g["tokens"]
+            o["preemptions"] = g["preemptions"]
+            kv.release(g["kv"], be)
+
+
+def long_prompt(n):
+    return [(i * 7 + 3) % 512 for i in range(n)]
+
+
+def run_open_loop(cfg, n, rate, inp, out, long_every, long_inp, seed,
+                  tight_every=0, tight_deadline_us=0.0,
+                  cancel_every=0, cancel_after_us=0.0, controls=(),
+                  faults=None, fault_seed=0):
+    arr = Poisson(rate, seed)
+    sends, tight, first = [], [False] * n, None
+    for i in range(n):
+        length = long_inp if long_every > 0 and i % long_every == long_every - 1 else inp
+        t = arr.next_us()
+        first = t if first is None else min(first, t)
+        slo = deadline = None
+        if tight_every > 0 and i % tight_every == tight_every - 1:
+            slo = deadline = tight_deadline_us
+            tight[i] = True
+        if cancel_every > 0 and i % cancel_every == cancel_every - 1:
+            sends.append(ctl(("cancel", i), t + cancel_after_us))
+        sends.append(req([1] * length, out, slo, deadline, t, i))
+    for t, msg in controls:
+        sends.append(ctl(msg, t))
+    sends.append(dict(SENTINEL))
+    be = Backend(faults, fault_seed)
+    outs = serve(cfg, be, sends)
+    completed = rejected = attained = eligible = preempts = 0
+    reasons = {}
+    makespan = 0.0
+    for i in range(n):
+        o = outs.get(i)
+        if tight[i]:
+            eligible += 1
+        if o and o["failed"] is None and len(o["tokens"]) == out:
+            completed += 1
+            preempts += o["preemptions"]
+            if o["token_times"]:
+                makespan = max(makespan, o["token_times"][-1])
+            if tight[i]:
+                attained += 1
+        else:
+            rejected += 1
+            r = o["failed"] if o else "disconnected"
+            reasons[r] = reasons.get(r, 0) + 1
+    return dict(completed=completed, rejected=rejected, reasons=reasons,
+                eligible=eligible, attained=attained, preemptions=preempts,
+                makespan_s=(makespan - first) / 1e6 if completed else 0.0,
+                faults=be.fault_count)
+
+
+# --- check 1: seeded fault determinism --------------------------------
+def check1():
+    def run(fault_seed):
+        return run_open_loop(Cfg(), n=16, rate=6.0, inp=24, out=8,
+                             long_every=8, long_inp=320, seed=11,
+                             faults="stall=0.2:30000,err=0.05",
+                             fault_seed=fault_seed)
+    a, b = run(3), run(3)
+    assert (a["completed"], a["rejected"], a["makespan_s"]) == \
+           (b["completed"], b["rejected"], b["makespan_s"])
+    assert a["rejected"] > 0, f"seed-3 err=0.05 must kill >=1 of 16: {a}"
+    assert a["completed"] > 0, f"workload too hostile: {a}"
+    c = run(1717)
+    assert (a["completed"], a["rejected"]) != (c["completed"], c["rejected"]) \
+        or abs(a["makespan_s"] - c["makespan_s"]) > 1e-9
+    print(f"check1 OK: seed-3 faults deterministic, kill {a['rejected']}/16 "
+          f"(completed {a['completed']}, {a['faults']} fault events)")
+
+
+# --- check 2: cancel releases KV + borrowed capacity ------------------
+def check2():
+    cfg = Cfg(kv_budget_mb=100, max_batch=8)
+    be = Backend(pinned=7)
+    sends = [req(long_prompt(2000), 64, idx=0),
+             req(long_prompt(2000), 4, arrive=1_000.0, idx=1),
+             ctl(("cancel", 0), 2_300_000.0),
+             dict(SENTINEL)]
+    outs = serve(cfg, be, sends)
+    assert outs[0]["failed"] == "cancelled"
+    assert outs[1]["failed"] is None and len(outs[1]["tokens"]) == 4
+    qd = outs[1]["admitted"] - outs[1]["enqueue"]
+    assert qd > 0, "B must have been blocked on the KV budget"
+    assert be.capacity == 8 and be.pinned == 7, (be.capacity, be.pinned)
+    print(f"check2 OK: cancel at 2.3s freed 258 MiB + 1 borrowed slot; "
+          f"blocked request admitted after {qd/1e6:.2f}s queue delay")
+
+
+# --- check 3: preempt-then-requeue token identity ---------------------
+def check3():
+    def cfg():
+        return Cfg(kv_budget_mb=300, max_batch=4, max_preemptions=1)
+    solo = serve(cfg(), Backend(pinned=8),
+                 [req(long_prompt(2000), 8, slo_us=1e9, idx=0), dict(SENTINEL)],
+                 track=True)
+    assert len(solo[0]["tokens"]) == 8 and solo[0]["preemptions"] == 0
+    outs = serve(cfg(), Backend(pinned=8),
+                 [req(long_prompt(2000), 8, slo_us=1e9, idx=0),
+                  req(long_prompt(2000), 4, slo_us=10_000.0,
+                      arrive=2_050_000.0, idx=1),
+                  dict(SENTINEL)], track=True)
+    assert len(outs[1]["tokens"]) == 4, outs[1]
+    assert outs[0]["preemptions"] == 1, outs[0]["preemptions"]
+    assert outs[0]["tokens"] == solo[0]["tokens"], "drop-and-recompute drift"
+    assert outs[1]["admitted"] < outs[0]["token_times"][-1], \
+        "B never actually preempted A"
+    print(f"check3 OK: preempted request resumed with identical 8 tokens "
+          f"{outs[0]['tokens'][:3]}...; tight request admitted mid-flight")
+
+
+# --- check 4: hard deadline at the chunk boundary ---------------------
+def check4():
+    cfg = Cfg(max_batch=4)
+    outs = serve(cfg, Backend(),
+                 [req(list(range(1, 9)), 40, deadline_us=60_000.0, idx=0),
+                  req(list(range(9, 13)), 5, idx=1), dict(SENTINEL)])
+    assert outs[0]["failed"] == "deadline", outs[0]["failed"]
+    done = len(outs[0]["token_times"])
+    assert 1 <= done <= 3, f"~2 tokens should fit in 60 ms, got {done}"
+    assert outs[1]["failed"] is None and len(outs[1]["tokens"]) == 5
+    print(f"check4 OK: 60 ms deadline fired after {done} of 40 tokens; "
+          f"deadline-free peer completed 5")
+
+
+# --- check 5: reload + drain preserve in-flight work ------------------
+def check5():
+    cfg = Cfg(max_batch=2, prefill_chunk=16)
+    outs = serve(cfg, Backend(),
+                 [req(long_prompt(64), 30, idx=0),
+                  req(list(range(1, 7)), 4, arrive=5_000.0, idx=1),
+                  ctl(("reload", dict(admission="sjf", prefill_chunk=8)),
+                      200_000.0),
+                  ctl(("drain",), 400_000.0),
+                  req(list(range(7, 10)), 4, arrive=500_000.0, idx=2),
+                  dict(SENTINEL)])
+    assert outs[0]["failed"] is None and len(outs[0]["tokens"]) == 30
+    assert outs[1]["failed"] is None and len(outs[1]["tokens"]) == 4
+    assert outs[2]["failed"] == "shutdown", outs[2]["failed"]
+    assert cfg.prefill_chunk == 8 and cfg.admission == "sjf"
+    print("check5 OK: reload swapped knobs mid-run, drain finished "
+          "in-flight 30+4 tokens and refused the post-drain arrival")
+
+
+# --- check 6: prefill token budget improves TTFT, tokens identical ----
+def check6():
+    def run(prefill_tokens):
+        cfg = Cfg(prefill_chunk=64, prefill_tokens=prefill_tokens, max_batch=4)
+        return serve(cfg, Backend(),
+                     [req(long_prompt(400), 4, idx=0),
+                      req(long_prompt(400), 4, idx=1), dict(SENTINEL)],
+                     track=True)
+    serial, budget = run(0), run(128)
+    assert serial[0]["tokens"] == budget[0]["tokens"]
+    assert serial[1]["tokens"] == budget[1]["tokens"]
+    ts = serial[1]["first_token"] - serial[1]["enqueue"]
+    tb = budget[1]["first_token"] - budget[1]["enqueue"]
+    assert tb < ts, f"budgeted TTFT {tb} must beat serial {ts}"
+    print(f"check6 OK: --prefill-tokens 128 cut request 2's TTFT "
+          f"{ts/1e3:.0f} -> {tb/1e3:.0f} ms with identical tokens")
+
+
+# --- check 7: the events.rs robust-trace workload ---------------------
+def check7():
+    cfg = Cfg(prefill_chunk=16, max_batch=4, kv_budget_mb=8,
+              prefill_tokens=32, max_preemptions=1)
+    r = run_open_loop(cfg, n=18, rate=5.0, inp=10, out=8, long_every=5,
+                      long_inp=96, seed=23,
+                      tight_every=6, tight_deadline_us=2.5e6,
+                      cancel_every=5, cancel_after_us=60_000.0,
+                      controls=[(4e5, ("reload", dict(prefill_chunk=8,
+                                                      kv_budget_mb=6))),
+                                (3.0e6, ("drain",))],
+                      faults="stall=0.15:30000,spike=0.1:40000", fault_seed=5)
+    assert r["completed"] > 0, r
+    assert r["rejected"] > 0, r
+    assert "cancelled" in r["reasons"], r["reasons"]
+    assert r["faults"] > 0, "stall/spike faults must fire in this trace"
+    print(f"check7 OK: robust trace completed {r['completed']}, "
+          f"failed {r['reasons']}, {r['faults']} fault events")
+
+
+# --- check 8: preemption strictly improves tight-SLO attainment -------
+# Decode-heavy requests keep victims in the preemptible Decoding phase
+# for ~95% of their lifetime, and (400+2600)*128KiB = 375 MiB per request
+# caps KV concurrency at 7 of the 8 batch slots, so a tight arrival into
+# a full house must either preempt or wait out a whole retirement.
+BENCH = dict(rate=0.07, inp=400, out=2600, long_every=0, long_inp=0,
+             seed=9, tight_every=4)
+BENCH_CFG = dict(admission="slo", prefill_chunk=64, prefill_tokens=128,
+                 max_batch=8, kv_budget_mb=64, slo_ttft_ms=3_600_000.0)
+BENCH_DEADLINES_S = [90.0, 95.0, 100.0]
+
+
+def check8():
+    for n in (36, 24):  # full bench and FIDDLER_BENCH_FAST sizes
+        rows = []
+        for d_s in BENCH_DEADLINES_S:
+            pair = {}
+            for mp in (0, 3):
+                cfg = Cfg(max_preemptions=mp, **BENCH_CFG)
+                r = run_open_loop(cfg, n=n, tight_deadline_us=d_s * 1e6,
+                                  **BENCH)
+                pair[mp] = r
+            a0 = pair[0]["attained"] / max(1, pair[0]["eligible"])
+            a3 = pair[3]["attained"] / max(1, pair[3]["eligible"])
+            rows.append((d_s, a0, a3, pair[3]["preemptions"]))
+            print(f"  n={n} deadline {d_s:5.1f}s: attainment preempt-off "
+                  f"{a0:.2f} ({pair[0]['attained']}/{pair[0]['eligible']}) vs "
+                  f"preempt-on {a3:.2f} "
+                  f"({pair[3]['attained']}/{pair[3]['eligible']}), "
+                  f"{pair[3]['preemptions']} preemptions")
+        assert all(a3 > a0 for _, a0, a3, _ in rows), \
+            f"preemption must strictly improve attainment (n={n}): {rows}"
+        assert all(p > 0 for *_, p in rows), "no preemptions happened"
+    print("check8 OK: preemption strictly improves tight-SLO attainment "
+          "at every swept deadline (full and fast sizes)")
+
+
+if __name__ == "__main__":
+    check1()
+    check2()
+    check3()
+    check4()
+    check5()
+    check6()
+    print("check8 sweep (BENCH_PR7 parameters):")
+    check8()
+    check7()
+    print("ALL CHECKS PASSED")

@@ -381,6 +381,88 @@ fn bench_events() -> Json {
     o
 }
 
+/// SLO-attainment under preemption (PR 7): a decode-heavy open-loop
+/// workload where each request's worst-case KV footprint caps residency
+/// at 7 of the 8 batch slots, so a deadline-tight arrival into a full
+/// house must either preempt the latest-deadline decoder or wait out an
+/// entire retirement.  Swept over three tight deadlines with preemption
+/// off (reject-only) vs on (`--max-preemptions 3`); the bench asserts the
+/// paper-motivating invariant that preemption strictly improves tight-SLO
+/// attainment at every deadline.
+fn bench_preemption_slo() -> Json {
+    let fast = std::env::var("FIDDLER_BENCH_FAST").is_ok();
+    let spec = |deadline_us: f64| LoadSpec {
+        n_requests: if fast { 24 } else { 36 },
+        rate_per_s: 0.07,
+        inp: 400,
+        out: 2600,
+        long_every: 0,
+        seed: 9,
+        tight_every: 4,
+        tight_deadline_us: deadline_us,
+        ..LoadSpec::default()
+    };
+    let serving = |max_preemptions: usize| ServingConfig {
+        admission: AdmissionKind::Deadline,
+        prefill_chunk: 64,
+        prefill_tokens: 128,
+        max_batch: 8,
+        kv_budget_mb: 64,
+        slo_ttft_ms: 3_600_000.0,
+        max_preemptions,
+        ..Default::default()
+    };
+
+    let mut section = Json::obj();
+    let mut work = Json::obj();
+    let s0 = spec(0.0);
+    work.set("n_requests", Json::from(s0.n_requests));
+    work.set("rate_per_s", Json::Num(s0.rate_per_s));
+    work.set("inp", Json::from(s0.inp));
+    work.set("out", Json::from(s0.out));
+    work.set("tight_every", Json::from(s0.tight_every));
+    section.set("workload", work);
+
+    let mut sweep = Vec::new();
+    for deadline_s in [90.0f64, 95.0, 100.0] {
+        let off = run_open_loop(serving(0), &spec(deadline_s * 1e6)).expect("preempt-off run");
+        let on = run_open_loop(serving(3), &spec(deadline_s * 1e6)).expect("preempt-on run");
+        println!(
+            "    preemption/deadline{deadline_s:.0}s: attainment {:.2} ({}/{}) reject-only vs {:.2} ({}/{}) preempting | {} preemptions",
+            off.slo_attainment(),
+            off.slo_attained,
+            off.slo_eligible,
+            on.slo_attainment(),
+            on.slo_attained,
+            on.slo_eligible,
+            on.preemptions
+        );
+        assert!(
+            on.slo_attainment() > off.slo_attainment(),
+            "preemption must strictly improve tight-SLO attainment at {deadline_s}s: \
+             off {}/{} vs on {}/{}",
+            off.slo_attained,
+            off.slo_eligible,
+            on.slo_attained,
+            on.slo_eligible
+        );
+        assert!(on.preemptions > 0, "preempt-on run never actually preempted");
+        let mut o = Json::obj();
+        o.set("deadline_s", Json::Num(deadline_s));
+        o.set("attainment_reject_only", Json::Num(off.slo_attainment()));
+        o.set("attainment_preempting", Json::Num(on.slo_attainment()));
+        o.set("slo_eligible", Json::from(off.slo_eligible));
+        o.set("preemptions", Json::from(on.preemptions));
+        o.set("completed_reject_only", Json::from(off.completed));
+        o.set("completed_preempting", Json::from(on.completed));
+        o.set("makespan_s_preempting", Json::Num(on.makespan_s));
+        sweep.push(o);
+    }
+    section.set("deadline_sweep", Json::Arr(sweep));
+    section.set("strict_improvement", Json::Bool(true));
+    section
+}
+
 fn main() {
     let mut b = Bench::new();
 
@@ -432,6 +514,18 @@ fn main() {
         std::env::var("FIDDLER_BENCH_OUT_PR6").unwrap_or_else(|_| "BENCH_PR6.json".into());
     std::fs::write(&out6, root6.to_string()).expect("write bench json");
     println!("  wrote {out6}");
+
+    // PR 7: preemption vs reject-only under deadline-tight load (virtual
+    // time — no artifacts needed, always produced).
+    println!("  tight-SLO attainment (reject-only vs preemption):");
+    let preemption = bench_preemption_slo();
+    let mut root7 = Json::obj();
+    root7.set("bench", Json::from("pr7-preemption-slo-attainment"));
+    root7.set("preemption", preemption);
+    let out7 =
+        std::env::var("FIDDLER_BENCH_OUT_PR7").unwrap_or_else(|_| "BENCH_PR7.json".into());
+    std::fs::write(&out7, root7.to_string()).expect("write bench json");
+    println!("  wrote {out7}");
 
     b.report("e2e decode/prefill (serial vs parallel executor + per-policy)");
 }

@@ -197,6 +197,33 @@ pub struct ServingConfig {
     /// the demand paths.  0 (default) = the serial legacy layer loop,
     /// bit-for-bit.
     pub pipeline_lookahead: usize,
+    /// Per-iteration prefill token budget (`--prefill-tokens`).  0
+    /// (default) = legacy: one chunked prefill in flight at a time, with
+    /// admission held until it completes.  `N > 0` is the Sarathi-style
+    /// budget: admission stays open while prompts prefill and each serve
+    /// iteration advances *several* concurrent prefills, spending at most
+    /// `N` prompt tokens across them (the first in-flight prefill always
+    /// advances so progress never stalls on a small budget).
+    pub prefill_tokens: usize,
+    /// Per-request preemption bound (`--max-preemptions`).  0 (default) =
+    /// preemption off.  `N > 0` lets admission preempt the decoding
+    /// width-1 sequence with the *latest* deadline when a tighter-deadline
+    /// arrival would otherwise be rejected by the KV budget; the victim
+    /// requeues and recomputes its KV on readmission (Sarathi-style
+    /// drop-and-recompute), at most `N` times so no request starves.
+    pub max_preemptions: usize,
+    /// Deterministic fault-injection spec for the sim backend
+    /// (`--faults "stall=P:US,spike=P:US,err=P"`); see
+    /// [`crate::server::sim::FailPoints`].  `None` (default) = no faults.
+    pub faults: Option<String>,
+    /// Seed of the fault-injection RNG stream (`--fault-seed`); kept
+    /// separate from `seed` so the same workload can be replayed under
+    /// different fault schedules.
+    pub fault_seed: u64,
+    /// Per-connection read timeout of the TCP front end in wall-clock ms
+    /// (`--conn-timeout-ms`); an idle connection gets a typed `error`
+    /// line and is closed.  0 (default) = no timeout.
+    pub conn_timeout_ms: u64,
     /// Path of the JSONL engine-event log (`--events-out trace.jsonl`):
     /// the serve loop attaches a [`crate::events::EventSink`] writing
     /// every [`crate::events::TraceEvent`] here.  The log is a replayable
@@ -223,6 +250,11 @@ impl Default for ServingConfig {
             admission: AdmissionKind::Fcfs,
             kv_budget_mb: 0,
             slo_ttft_ms: 5_000.0,
+            prefill_tokens: 0,
+            max_preemptions: 0,
+            faults: None,
+            fault_seed: 0,
+            conn_timeout_ms: 0,
             pipeline_lookahead: 0,
             events_out: None,
         }
@@ -262,6 +294,11 @@ impl ServingConfig {
         c.kv_budget_mb = args.usize_or("kv-budget-mb", c.kv_budget_mb);
         c.slo_ttft_ms = args.f64_or("slo-ttft-ms", c.slo_ttft_ms);
         anyhow::ensure!(c.slo_ttft_ms > 0.0, "--slo-ttft-ms must be positive");
+        c.prefill_tokens = args.usize_or("prefill-tokens", c.prefill_tokens);
+        c.max_preemptions = args.usize_or("max-preemptions", c.max_preemptions);
+        c.faults = args.get("faults").map(String::from).filter(|s| !s.is_empty());
+        c.fault_seed = args.u64_or("fault-seed", c.fault_seed);
+        c.conn_timeout_ms = args.u64_or("conn-timeout-ms", c.conn_timeout_ms);
         c.pipeline_lookahead = args.usize_or("pipeline-lookahead", c.pipeline_lookahead);
         c.events_out = args.get("events-out").map(String::from);
         Ok(c)
@@ -359,6 +396,29 @@ mod tests {
         let bad =
             Args::parse("--slo-ttft-ms 0".split_whitespace().map(String::from));
         assert!(ServingConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn robustness_args_parse_and_default_off() {
+        let d = ServingConfig::default();
+        assert_eq!(d.prefill_tokens, 0, "legacy one-prefill-at-a-time by default");
+        assert_eq!(d.max_preemptions, 0, "preemption off by default");
+        assert_eq!(d.faults, None);
+        assert_eq!(d.fault_seed, 0);
+        assert_eq!(d.conn_timeout_ms, 0, "no read timeout by default");
+
+        let a = Args::parse(
+            "--prefill-tokens 128 --max-preemptions 2 \
+             --faults stall=0.05:30000,err=0.01 --fault-seed 7 --conn-timeout-ms 250"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ServingConfig::from_args(&a).unwrap();
+        assert_eq!(c.prefill_tokens, 128);
+        assert_eq!(c.max_preemptions, 2);
+        assert_eq!(c.faults.as_deref(), Some("stall=0.05:30000,err=0.01"));
+        assert_eq!(c.fault_seed, 7);
+        assert_eq!(c.conn_timeout_ms, 250);
     }
 
     #[test]

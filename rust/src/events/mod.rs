@@ -44,6 +44,14 @@ pub enum TraceEvent {
         kv_budget_mb: usize,
         slo_ttft_ms: f64,
         lookahead: usize,
+        /// Per-iteration prefill token budget (0 = legacy one-at-a-time).
+        prefill_tokens: usize,
+        /// Per-request preemption bound (0 = preemption off).
+        max_preemptions: usize,
+        /// Fault-injection spec string ("" = none) + its RNG seed; both
+        /// are scheduling-relevant, so replay must reconstruct them.
+        faults: String,
+        fault_seed: u64,
     },
     /// A request reached the scheduler (its full prompt is recorded —
     /// this is what makes a log a replayable trace).
@@ -54,9 +62,13 @@ pub enum TraceEvent {
         max_new: usize,
         width: usize,
         slo_us: Option<f64>,
+        /// Enforced end-to-end deadline (µs from enqueue); key omitted
+        /// when the request carries none.
+        deadline_us: Option<f64>,
     },
-    /// Rejected at ingest (queue full, KV-infeasible, malformed).
-    RequestRejected { req: u64, t_us: f64, reason: String },
+    /// Rejected at ingest (queue full, KV-infeasible, malformed);
+    /// `kind` is the typed [`crate::server::FailReason`] label.
+    RequestRejected { req: u64, t_us: f64, reason: String, kind: String },
     /// Admission: the scheduler reserved KV and started prefill.
     RequestAdmitted { req: u64, t_us: f64, kv_reserved: u64, queue_delay_us: f64 },
     /// KV budget snapshot after a reservation or release.
@@ -68,8 +80,43 @@ pub enum TraceEvent {
     TokenEmitted { req: u64, t_us: f64, token: u32, index: usize },
     /// Terminal: the group retired normally.
     RequestFinished { req: u64, t_us: f64, tokens: usize, ttft_us: f64, queue_delay_us: f64 },
-    /// Terminal: error or shutdown before/while running.
-    RequestFailed { req: u64, t_us: f64, reason: String },
+    /// Terminal: error or shutdown before/while running; `kind` is the
+    /// typed [`crate::server::FailReason`] label.
+    RequestFailed { req: u64, t_us: f64, reason: String, kind: String },
+    /// Terminal: client cancelled the request mid-flight; `phase` names
+    /// the state it was cancelled from (queued / prefilling / decoding).
+    RequestCancelled { req: u64, t_us: f64, phase: String },
+    /// A decoding sequence was preempted for a tighter-deadline arrival:
+    /// its KV reservation (`kv_released` bytes) was dropped for
+    /// recomputation on readmission; `preemptions` is the running count
+    /// for this request and `tokens_done` how many tokens it had
+    /// already streamed (they are not re-streamed).
+    RequestPreempted {
+        req: u64,
+        t_us: f64,
+        kv_released: u64,
+        preemptions: usize,
+        tokens_done: usize,
+    },
+    /// The preempted request re-entered the admission queue.
+    RequestRequeued { req: u64, t_us: f64 },
+    /// Hot config reload applied between iterations; fields are the full
+    /// post-reload snapshot (what replay re-applies at `t_us`).
+    ConfigReloaded {
+        t_us: f64,
+        admission: String,
+        kv_budget_mb: usize,
+        prefill_chunk: usize,
+        prefill_tokens: usize,
+        slo_ttft_ms: f64,
+        max_preemptions: usize,
+    },
+    /// Graceful drain began: admission stops, queued requests fail,
+    /// in-flight sequences finish, then the loop exits.
+    DrainStarted { t_us: f64 },
+    /// Deterministic fault injection fired in the sim backend (`kind` is
+    /// stall / spike / error; `delay_us` the extra virtual time charged).
+    FaultInjected { t_us: f64, kind: String, delay_us: f64 },
     /// Expert-cache lookup (`hit == false` means a demand transfer was
     /// charged; `prefetch_hit` marks hits on prefetched entries).
     CacheLookup { t_us: f64, layer: usize, expert: usize, hit: bool, prefetch_hit: bool },
@@ -123,6 +170,12 @@ impl TraceEvent {
             TraceEvent::TokenEmitted { .. } => "token",
             TraceEvent::RequestFinished { .. } => "request_finished",
             TraceEvent::RequestFailed { .. } => "request_failed",
+            TraceEvent::RequestCancelled { .. } => "request_cancelled",
+            TraceEvent::RequestPreempted { .. } => "request_preempted",
+            TraceEvent::RequestRequeued { .. } => "request_requeued",
+            TraceEvent::ConfigReloaded { .. } => "config_reloaded",
+            TraceEvent::DrainStarted { .. } => "drain_started",
+            TraceEvent::FaultInjected { .. } => "fault_injected",
             TraceEvent::CacheLookup { .. } => "cache_lookup",
             TraceEvent::CacheEvict { .. } => "cache_evict",
             TraceEvent::CacheTransfer { .. } => "cache_transfer",
@@ -152,6 +205,10 @@ impl TraceEvent {
                 kv_budget_mb,
                 slo_ttft_ms,
                 lookahead,
+                prefill_tokens,
+                max_preemptions,
+                faults,
+                fault_seed,
             } => {
                 o.set("seed", Json::Num(*seed as f64));
                 o.set("temperature", Json::Num(*temperature));
@@ -162,8 +219,12 @@ impl TraceEvent {
                 o.set("kv_budget_mb", Json::from(*kv_budget_mb));
                 o.set("slo_ttft_ms", Json::Num(*slo_ttft_ms));
                 o.set("lookahead", Json::from(*lookahead));
+                o.set("prefill_tokens", Json::from(*prefill_tokens));
+                o.set("max_preemptions", Json::from(*max_preemptions));
+                o.set("faults", Json::from(faults.as_str()));
+                o.set("fault_seed", Json::Num(*fault_seed as f64));
             }
-            TraceEvent::RequestArrived { req, t_us, prompt, max_new, width, slo_us } => {
+            TraceEvent::RequestArrived { req, t_us, prompt, max_new, width, slo_us, deadline_us } => {
                 o.set("req", Json::Num(*req as f64));
                 o.set("t_us", Json::Num(*t_us));
                 o.set(
@@ -175,11 +236,15 @@ impl TraceEvent {
                 if let Some(d) = slo_us {
                     o.set("slo_us", Json::Num(*d));
                 }
+                if let Some(d) = deadline_us {
+                    o.set("deadline_us", Json::Num(*d));
+                }
             }
-            TraceEvent::RequestRejected { req, t_us, reason } => {
+            TraceEvent::RequestRejected { req, t_us, reason, kind } => {
                 o.set("req", Json::Num(*req as f64));
                 o.set("t_us", Json::Num(*t_us));
                 o.set("reason", Json::from(reason.as_str()));
+                o.set("kind", Json::from(kind.as_str()));
             }
             TraceEvent::RequestAdmitted { req, t_us, kv_reserved, queue_delay_us } => {
                 o.set("req", Json::Num(*req as f64));
@@ -212,10 +277,52 @@ impl TraceEvent {
                 o.set("ttft_us", Json::Num(*ttft_us));
                 o.set("queue_delay_us", Json::Num(*queue_delay_us));
             }
-            TraceEvent::RequestFailed { req, t_us, reason } => {
+            TraceEvent::RequestFailed { req, t_us, reason, kind } => {
                 o.set("req", Json::Num(*req as f64));
                 o.set("t_us", Json::Num(*t_us));
                 o.set("reason", Json::from(reason.as_str()));
+                o.set("kind", Json::from(kind.as_str()));
+            }
+            TraceEvent::RequestCancelled { req, t_us, phase } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("phase", Json::from(phase.as_str()));
+            }
+            TraceEvent::RequestPreempted { req, t_us, kv_released, preemptions, tokens_done } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("kv_released", Json::Num(*kv_released as f64));
+                o.set("preemptions", Json::from(*preemptions));
+                o.set("tokens_done", Json::from(*tokens_done));
+            }
+            TraceEvent::RequestRequeued { req, t_us } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+            }
+            TraceEvent::ConfigReloaded {
+                t_us,
+                admission,
+                kv_budget_mb,
+                prefill_chunk,
+                prefill_tokens,
+                slo_ttft_ms,
+                max_preemptions,
+            } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("admission", Json::from(admission.as_str()));
+                o.set("kv_budget_mb", Json::from(*kv_budget_mb));
+                o.set("prefill_chunk", Json::from(*prefill_chunk));
+                o.set("prefill_tokens", Json::from(*prefill_tokens));
+                o.set("slo_ttft_ms", Json::Num(*slo_ttft_ms));
+                o.set("max_preemptions", Json::from(*max_preemptions));
+            }
+            TraceEvent::DrainStarted { t_us } => {
+                o.set("t_us", Json::Num(*t_us));
+            }
+            TraceEvent::FaultInjected { t_us, kind, delay_us } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("kind", Json::from(kind.as_str()));
+                o.set("delay_us", Json::Num(*delay_us));
             }
             TraceEvent::CacheLookup { t_us, layer, expert, hit, prefetch_hit } => {
                 o.set("t_us", Json::Num(*t_us));
@@ -304,6 +411,10 @@ impl TraceEvent {
                 kv_budget_mb: ju(v, "kv_budget_mb", 0),
                 slo_ttft_ms: jf(v, "slo_ttft_ms", 0.0),
                 lookahead: ju(v, "lookahead", 0),
+                prefill_tokens: ju(v, "prefill_tokens", 0),
+                max_preemptions: ju(v, "max_preemptions", 0),
+                faults: js(v, "faults"),
+                fault_seed: j64(v, "fault_seed", 0),
             },
             "request_arrived" => TraceEvent::RequestArrived {
                 req: j64(v, "req", 0),
@@ -317,11 +428,13 @@ impl TraceEvent {
                 max_new: ju(v, "max_new", 0),
                 width: ju(v, "width", 1),
                 slo_us: v.get("slo_us").ok().and_then(|d| d.as_f64().ok()),
+                deadline_us: v.get("deadline_us").ok().and_then(|d| d.as_f64().ok()),
             },
             "request_rejected" => TraceEvent::RequestRejected {
                 req: j64(v, "req", 0),
                 t_us: jf(v, "t_us", 0.0),
                 reason: js(v, "reason"),
+                kind: js(v, "kind"),
             },
             "request_admitted" => TraceEvent::RequestAdmitted {
                 req: j64(v, "req", 0),
@@ -358,6 +471,38 @@ impl TraceEvent {
                 req: j64(v, "req", 0),
                 t_us: jf(v, "t_us", 0.0),
                 reason: js(v, "reason"),
+                kind: js(v, "kind"),
+            },
+            "request_cancelled" => TraceEvent::RequestCancelled {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                phase: js(v, "phase"),
+            },
+            "request_preempted" => TraceEvent::RequestPreempted {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                kv_released: j64(v, "kv_released", 0),
+                preemptions: ju(v, "preemptions", 0),
+                tokens_done: ju(v, "tokens_done", 0),
+            },
+            "request_requeued" => TraceEvent::RequestRequeued {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+            },
+            "config_reloaded" => TraceEvent::ConfigReloaded {
+                t_us: jf(v, "t_us", 0.0),
+                admission: js(v, "admission"),
+                kv_budget_mb: ju(v, "kv_budget_mb", 0),
+                prefill_chunk: ju(v, "prefill_chunk", 0),
+                prefill_tokens: ju(v, "prefill_tokens", 0),
+                slo_ttft_ms: jf(v, "slo_ttft_ms", 0.0),
+                max_preemptions: ju(v, "max_preemptions", 0),
+            },
+            "drain_started" => TraceEvent::DrainStarted { t_us: jf(v, "t_us", 0.0) },
+            "fault_injected" => TraceEvent::FaultInjected {
+                t_us: jf(v, "t_us", 0.0),
+                kind: js(v, "kind"),
+                delay_us: jf(v, "delay_us", 0.0),
             },
             "cache_lookup" => TraceEvent::CacheLookup {
                 t_us: jf(v, "t_us", 0.0),
@@ -440,6 +585,10 @@ impl TraceEvent {
                 kv_budget_mb: 256,
                 slo_ttft_ms: 250.0,
                 lookahead: 2,
+                prefill_tokens: 128,
+                max_preemptions: 2,
+                faults: "stall=0.05:30000,err=0.01".into(),
+                fault_seed: 13,
             },
             TraceEvent::RequestArrived {
                 req: 1,
@@ -448,8 +597,14 @@ impl TraceEvent {
                 max_new: 24,
                 width: 4,
                 slo_us: Some(250_000.0),
+                deadline_us: Some(900_000.0),
             },
-            TraceEvent::RequestRejected { req: 2, t_us: 1_300.0, reason: "queue full".into() },
+            TraceEvent::RequestRejected {
+                req: 2,
+                t_us: 1_300.0,
+                reason: "queue full".into(),
+                kind: "queue_full".into(),
+            },
             TraceEvent::RequestAdmitted {
                 req: 1,
                 t_us: 2_000.0,
@@ -466,7 +621,32 @@ impl TraceEvent {
                 ttft_us: 1_765.5,
                 queue_delay_us: 765.5,
             },
-            TraceEvent::RequestFailed { req: 3, t_us: 9_100.0, reason: "shutdown".into() },
+            TraceEvent::RequestFailed {
+                req: 3,
+                t_us: 9_100.0,
+                reason: "server shutting down".into(),
+                kind: "shutdown".into(),
+            },
+            TraceEvent::RequestCancelled { req: 4, t_us: 9_150.0, phase: "decoding".into() },
+            TraceEvent::RequestPreempted {
+                req: 5,
+                t_us: 9_200.0,
+                kv_released: 6 << 20,
+                preemptions: 1,
+                tokens_done: 7,
+            },
+            TraceEvent::RequestRequeued { req: 5, t_us: 9_200.0 },
+            TraceEvent::ConfigReloaded {
+                t_us: 9_300.0,
+                admission: "slo".into(),
+                kv_budget_mb: 128,
+                prefill_chunk: 32,
+                prefill_tokens: 64,
+                slo_ttft_ms: 400.0,
+                max_preemptions: 1,
+            },
+            TraceEvent::DrainStarted { t_us: 9_400.0 },
+            TraceEvent::FaultInjected { t_us: 9_500.0, kind: "stall".into(), delay_us: 30_000.0 },
             TraceEvent::CacheLookup {
                 t_us: 2_500.0,
                 layer: 3,
@@ -510,12 +690,17 @@ impl TraceEvent {
 pub fn wire_event_json(ev: &crate::server::Event) -> Json {
     let mut o = Json::obj();
     match ev {
+        crate::server::Event::Queued(id) => o.set("queued", Json::Num(*id as f64)),
         crate::server::Event::Token(t) => o.set("token", Json::from(*t as usize)),
         crate::server::Event::Done(m) => {
             o = m.to_json();
             o.set("done", Json::Bool(true));
         }
-        crate::server::Event::Error(e) => o.set("error", Json::from(e.as_str())),
+        crate::server::Event::Failed { reason, message, .. } => {
+            o.set("error", Json::from(message.as_str()));
+            o.set("reason", Json::from(reason.label()));
+        }
+        crate::server::Event::ControlAck { op } => o.set("ok", Json::from(*op)),
     }
     o
 }
@@ -588,9 +773,11 @@ mod tests {
             max_new: 1,
             width: 1,
             slo_us: None,
+            deadline_us: None,
         };
         let j = ev.to_json();
         assert!(j.get("slo_us").is_err());
+        assert!(j.get("deadline_us").is_err());
         assert_eq!(TraceEvent::from_json(&j), ev);
     }
 
@@ -598,8 +785,16 @@ mod tests {
     fn wire_encoding_matches_protocol() {
         let j = wire_event_json(&crate::server::Event::Token(7));
         assert_eq!(j.get("token").unwrap().as_usize().unwrap(), 7);
-        let j = wire_event_json(&crate::server::Event::Error("boom".into()));
+        let j = wire_event_json(&crate::server::Event::Queued(3));
+        assert_eq!(j.get("queued").unwrap().as_usize().unwrap(), 3);
+        let j = wire_event_json(&crate::server::Event::error(
+            crate::server::FailReason::Backend,
+            "boom",
+        ));
         assert_eq!(j.get("error").unwrap().as_str().unwrap(), "boom");
+        assert_eq!(j.get("reason").unwrap().as_str().unwrap(), "backend");
+        let j = wire_event_json(&crate::server::Event::ControlAck { op: "drain" });
+        assert_eq!(j.get("ok").unwrap().as_str().unwrap(), "drain");
         let m = crate::metrics::GenMetrics {
             enqueue_us: 0.0,
             first_token_us: 10.0,

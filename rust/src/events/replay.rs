@@ -17,7 +17,7 @@ use super::TraceEvent;
 use crate::config::serving::{AdmissionKind, ServingConfig};
 use crate::metrics::GenMetrics;
 use crate::server::sim::SimBackend;
-use crate::server::{serve_lifecycle, Event, Request};
+use crate::server::{serve_lifecycle, ControlMsg, Event, ReloadSpec, Request};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -46,13 +46,19 @@ pub struct RecordedRequest {
     pub max_new: usize,
     pub width: usize,
     pub slo_us: Option<f64>,
+    /// Enforced end-to-end deadline (relative virtual µs), when recorded.
+    pub deadline_us: Option<f64>,
+    /// Virtual time the request was cancelled (from
+    /// [`TraceEvent::RequestCancelled`]); replay re-sends the cancel at
+    /// this exact time so the control applies at the same iteration.
+    pub cancel_at_us: Option<f64>,
     /// Client-visible token stream (beam groups: the winning beam).
     pub tokens: Vec<u32>,
     /// Completion time of each streamed token (virtual µs).
     pub token_t_us: Vec<f64>,
     pub finished: bool,
-    /// Terminal error: rejected at ingest, failed mid-flight, or drained
-    /// at shutdown.
+    /// Terminal error: rejected at ingest, failed mid-flight, cancelled,
+    /// or drained at shutdown.
     pub failed: bool,
 }
 
@@ -64,6 +70,13 @@ pub struct RecordedTrace {
     /// Requests in ingest order (= `req` id order: ids are assigned at
     /// ingest).
     pub requests: Vec<RecordedRequest>,
+    /// Control-plane actions in trace order: `(t_us, msg)`.  Reloads are
+    /// folded from the FULL post-reload [`TraceEvent::ConfigReloaded`]
+    /// snapshot (replay re-applies the snapshot, so one event suffices
+    /// regardless of which fields the original delta carried); drains
+    /// from [`TraceEvent::DrainStarted`].  Cancels live on their request
+    /// (`cancel_at_us`), not here, because they are addressed by id.
+    pub controls: Vec<(f64, ControlMsg)>,
 }
 
 /// Fold a parsed event stream into per-request records.
@@ -72,7 +85,15 @@ pub fn fold_trace(events: &[TraceEvent]) -> RecordedTrace {
     for ev in events {
         match ev {
             TraceEvent::Meta { .. } => trace.meta = Some(ev.clone()),
-            TraceEvent::RequestArrived { req, t_us, prompt, max_new, width, slo_us } => {
+            TraceEvent::RequestArrived {
+                req,
+                t_us,
+                prompt,
+                max_new,
+                width,
+                slo_us,
+                deadline_us,
+            } => {
                 trace.requests.push(RecordedRequest {
                     id: *req,
                     arrive_us: *t_us,
@@ -80,6 +101,7 @@ pub fn fold_trace(events: &[TraceEvent]) -> RecordedTrace {
                     max_new: *max_new,
                     width: *width,
                     slo_us: *slo_us,
+                    deadline_us: *deadline_us,
                     ..RecordedRequest::default()
                 });
             }
@@ -104,6 +126,34 @@ pub fn fold_trace(events: &[TraceEvent]) -> RecordedTrace {
                     r.failed = true;
                 }
             }
+            TraceEvent::RequestCancelled { req, t_us, .. } => {
+                if let Some(r) = trace.requests.iter_mut().find(|r| r.id == *req) {
+                    r.failed = true;
+                    r.cancel_at_us = Some(*t_us);
+                }
+            }
+            TraceEvent::ConfigReloaded {
+                t_us,
+                admission,
+                kv_budget_mb,
+                prefill_chunk,
+                prefill_tokens,
+                slo_ttft_ms,
+                max_preemptions,
+            } => {
+                let spec = ReloadSpec {
+                    admission: AdmissionKind::by_name(admission).ok(),
+                    kv_budget_mb: Some(*kv_budget_mb),
+                    prefill_chunk: Some(*prefill_chunk),
+                    prefill_tokens: Some(*prefill_tokens),
+                    slo_ttft_ms: Some(*slo_ttft_ms),
+                    max_preemptions: Some(*max_preemptions),
+                };
+                trace.controls.push((*t_us, ControlMsg::Reload(spec)));
+            }
+            TraceEvent::DrainStarted { t_us } => {
+                trace.controls.push((*t_us, ControlMsg::Drain));
+            }
             _ => {}
         }
     }
@@ -125,6 +175,10 @@ impl RecordedTrace {
             kv_budget_mb,
             slo_ttft_ms,
             lookahead,
+            prefill_tokens,
+            max_preemptions,
+            faults,
+            fault_seed,
         }) = &self.meta
         else {
             anyhow::bail!("trace has no meta line; cannot reconstruct the serving config");
@@ -140,6 +194,10 @@ impl RecordedTrace {
             kv_budget_mb: *kv_budget_mb,
             slo_ttft_ms: *slo_ttft_ms,
             pipeline_lookahead: *lookahead,
+            prefill_tokens: *prefill_tokens,
+            max_preemptions: *max_preemptions,
+            faults: if faults.is_empty() { None } else { Some(faults.clone()) },
+            fault_seed: *fault_seed,
             // A replay never overwrites the source trace.
             events_out: None,
             ..ServingConfig::default()
@@ -161,6 +219,7 @@ pub struct ReplayOutcome {
 pub fn replay_trace(rec: &RecordedTrace) -> Result<Vec<ReplayOutcome>> {
     let serving = rec.serving_config()?;
     let (tx, rx) = std::sync::mpsc::channel();
+    let mut control_rx = Vec::new();
     let receivers: Vec<_> = rec
         .requests
         .iter()
@@ -169,11 +228,29 @@ pub fn replay_trace(rec: &RecordedTrace) -> Result<Vec<ReplayOutcome>> {
             let mut q = Request::new(r.prompt.clone(), r.max_new, etx);
             q.width = r.width;
             q.slo_us = r.slo_us;
+            q.deadline_us = r.deadline_us;
             q.arrive_at_us = Some(r.arrive_us);
             tx.send(q).expect("loop not started yet");
+            // Re-send the recorded cancel at its recorded time: the
+            // scheduler parks it until the virtual clock reaches it, so
+            // it applies at the same iteration boundary as the original.
+            if let Some(ct) = r.cancel_at_us {
+                let (ctx, crx) = std::sync::mpsc::channel();
+                let mut c = Request::control(ControlMsg::Cancel { req: r.id }, ctx);
+                c.arrive_at_us = Some(ct);
+                tx.send(c).expect("loop not started yet");
+                control_rx.push(crx);
+            }
             (r.id, erx)
         })
         .collect();
+    for (t, msg) in &rec.controls {
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let mut c = Request::control(msg.clone(), ctx);
+        c.arrive_at_us = Some(*t);
+        tx.send(c).expect("loop not started yet");
+        control_rx.push(crx);
+    }
     let mut sentinel = Request::shutdown_sentinel();
     sentinel.arrive_at_us = Some(1e15); // fires once the loop idles out
     tx.send(sentinel).expect("loop not started yet");
@@ -181,6 +258,7 @@ pub fn replay_trace(rec: &RecordedTrace) -> Result<Vec<ReplayOutcome>> {
     let mut backend = SimBackend::new(serving);
     serve_lifecycle(&mut backend, rx)?;
     drop(tx);
+    drop(control_rx);
 
     Ok(receivers
         .into_iter()
@@ -188,9 +266,10 @@ pub fn replay_trace(rec: &RecordedTrace) -> Result<Vec<ReplayOutcome>> {
             let mut out = ReplayOutcome { id, ..ReplayOutcome::default() };
             for ev in rx.try_iter() {
                 match ev {
+                    Event::Queued(_) | Event::ControlAck { .. } => {}
                     Event::Token(t) => out.tokens.push(t),
                     Event::Done(m) => out.metrics = Some(m),
-                    Event::Error(e) => out.error = Some(e),
+                    Event::Failed { message, .. } => out.error = Some(message),
                 }
             }
             out
@@ -258,6 +337,10 @@ mod tests {
             kv_budget_mb: 64,
             slo_ttft_ms: 400.0,
             lookahead: 2,
+            prefill_tokens: 0,
+            max_preemptions: 0,
+            faults: String::new(),
+            fault_seed: 0,
         }
     }
 
@@ -272,6 +355,7 @@ mod tests {
                 max_new: 2,
                 width: 1,
                 slo_us: None,
+                deadline_us: None,
             },
             TraceEvent::TokenEmitted { req: 0, t_us: 50.0, token: 9, index: 0 },
             TraceEvent::TokenEmitted { req: 0, t_us: 80.0, token: 4, index: 1 },
@@ -289,8 +373,14 @@ mod tests {
                 max_new: 1,
                 width: 1,
                 slo_us: Some(9e5),
+                deadline_us: None,
             },
-            TraceEvent::RequestRejected { req: 1, t_us: 20.0, reason: "queue full".into() },
+            TraceEvent::RequestRejected {
+                req: 1,
+                t_us: 20.0,
+                reason: "queue full".into(),
+                kind: "queue_full".into(),
+            },
         ];
         let t = fold_trace(&events);
         assert_eq!(t.requests.len(), 2);
@@ -308,6 +398,49 @@ mod tests {
     }
 
     #[test]
+    fn fold_captures_cancels_and_control_timeline() {
+        let events = vec![
+            meta(),
+            TraceEvent::RequestArrived {
+                req: 0,
+                t_us: 0.0,
+                prompt: vec![1],
+                max_new: 4,
+                width: 1,
+                slo_us: None,
+                deadline_us: Some(5e5),
+            },
+            TraceEvent::RequestCancelled { req: 0, t_us: 120.0, phase: "decoding".into() },
+            TraceEvent::ConfigReloaded {
+                t_us: 200.0,
+                admission: "fcfs".into(),
+                kv_budget_mb: 32,
+                prefill_chunk: 4,
+                prefill_tokens: 16,
+                slo_ttft_ms: 250.0,
+                max_preemptions: 2,
+            },
+            TraceEvent::DrainStarted { t_us: 300.0 },
+        ];
+        let t = fold_trace(&events);
+        assert_eq!(t.requests[0].deadline_us, Some(5e5));
+        assert!(t.requests[0].failed);
+        assert_eq!(t.requests[0].cancel_at_us, Some(120.0));
+        assert_eq!(t.controls.len(), 2);
+        assert_eq!(t.controls[0].0, 200.0);
+        match &t.controls[0].1 {
+            ControlMsg::Reload(spec) => {
+                assert_eq!(spec.admission, Some(AdmissionKind::Fcfs));
+                assert_eq!(spec.kv_budget_mb, Some(32));
+                assert_eq!(spec.prefill_tokens, Some(16));
+                assert_eq!(spec.max_preemptions, Some(2));
+            }
+            other => panic!("expected reload, got {other:?}"),
+        }
+        assert!(matches!(t.controls[1].1, ControlMsg::Drain));
+    }
+
+    #[test]
     fn beam_retire_reemission_overwrites_in_place() {
         // Beam winners are streamed at retire with indexes from 0; the
         // fold must not double-count them against interim emissions.
@@ -319,6 +452,7 @@ mod tests {
                 max_new: 2,
                 width: 2,
                 slo_us: None,
+                deadline_us: None,
             },
             TraceEvent::TokenEmitted { req: 0, t_us: 99.0, token: 5, index: 0 },
             TraceEvent::TokenEmitted { req: 0, t_us: 99.0, token: 6, index: 1 },
@@ -343,6 +477,7 @@ mod tests {
                 max_new: 2,
                 width: 1,
                 slo_us: None,
+                deadline_us: None,
             },
             TraceEvent::TokenEmitted { req: 0, t_us: 1.0, token: 7, index: 0 },
             TraceEvent::TokenEmitted { req: 0, t_us: 2.0, token: 8, index: 1 },

@@ -35,6 +35,11 @@ pub struct RequestSummary {
     pub prefetch_hits: usize,
     pub overlapped: usize,
     pub failed: bool,
+    /// Machine-readable terminal reason for failed requests (mirrors the
+    /// `kind` field of reject/fail events; "cancelled" for cancels).
+    pub fail_reason: String,
+    /// Times this request was preempted and requeued.
+    pub preemptions: usize,
 }
 
 impl RequestSummary {
@@ -76,7 +81,10 @@ pub fn summarize(events: &[TraceEvent]) -> Vec<RequestSummary> {
                 if let Some(i) = find(&reqs, *req) {
                     reqs[i].admitted_us = *t_us;
                     reqs[i].queue_us = *queue_delay_us;
-                    active.push(*req);
+                    // Preempted requests are re-admitted; keep one entry.
+                    if !active.contains(req) {
+                        active.push(*req);
+                    }
                 }
             }
             TraceEvent::PrefillChunk { req, t_us, .. } => {
@@ -101,12 +109,29 @@ pub fn summarize(events: &[TraceEvent]) -> Vec<RequestSummary> {
                 }
                 active.retain(|id| id != req);
             }
-            TraceEvent::RequestRejected { req, t_us, .. }
-            | TraceEvent::RequestFailed { req, t_us, .. } => {
+            TraceEvent::RequestRejected { req, t_us, kind, .. }
+            | TraceEvent::RequestFailed { req, t_us, kind, .. } => {
                 if let Some(i) = find(&reqs, *req) {
                     reqs[i].failed = true;
                     reqs[i].finished_us = *t_us;
+                    reqs[i].fail_reason = kind.clone();
                 }
+                active.retain(|id| id != req);
+            }
+            TraceEvent::RequestCancelled { req, t_us, .. } => {
+                if let Some(i) = find(&reqs, *req) {
+                    reqs[i].failed = true;
+                    reqs[i].finished_us = *t_us;
+                    reqs[i].fail_reason = "cancelled".into();
+                }
+                active.retain(|id| id != req);
+            }
+            TraceEvent::RequestPreempted { req, preemptions, .. } => {
+                if let Some(i) = find(&reqs, *req) {
+                    reqs[i].preemptions = *preemptions;
+                }
+                // Back to the queue: shared cache traffic while waiting
+                // for re-admission is not this request's.
                 active.retain(|id| id != req);
             }
             TraceEvent::CacheLookup { hit, prefetch_hit, .. } => {
@@ -142,7 +167,7 @@ pub fn summarize(events: &[TraceEvent]) -> Vec<RequestSummary> {
 pub fn render(summaries: &[RequestSummary]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:>4} {:>6} {:>3} {:>9} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5}\n",
+        "{:>4} {:>6} {:>3} {:>9} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5} {:>4} {:<13}\n",
         "req",
         "prompt",
         "w",
@@ -156,18 +181,21 @@ pub fn render(summaries: &[RequestSummary]) -> String {
         "miss",
         "pfhit",
         "ovl",
+        "pre",
+        "outcome",
     ));
     for r in summaries {
         if r.failed {
+            let reason = if r.fail_reason.is_empty() { "FAILED" } else { r.fail_reason.as_str() };
             out.push_str(&format!(
-                "{:>4} {:>6} {:>3} {:>9.1} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5}\n",
+                "{:>4} {:>6} {:>3} {:>9.1} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5} {:>4} {:<13}\n",
                 r.req, r.prompt_tokens, r.width, r.queue_us / 1e3,
-                "-", "-", "-", "-", "FAILED", "-", "-", "-", "-",
+                "-", "-", "-", "-", "-", "-", "-", "-", "-", r.preemptions, reason,
             ));
             continue;
         }
         out.push_str(&format!(
-            "{:>4} {:>6} {:>3} {:>9.1} {:>9.1} {:>7} {:>9.1} {:>9.1} {:>9.1} {:>6} {:>6} {:>5} {:>5}\n",
+            "{:>4} {:>6} {:>3} {:>9.1} {:>9.1} {:>7} {:>9.1} {:>9.1} {:>9.1} {:>6} {:>6} {:>5} {:>5} {:>4} {:<13}\n",
             r.req,
             r.prompt_tokens,
             r.width,
@@ -181,19 +209,37 @@ pub fn render(summaries: &[RequestSummary]) -> String {
             r.cache_misses,
             r.prefetch_hits,
             r.overlapped,
+            r.preemptions,
+            "ok",
         ));
     }
     let done: Vec<&RequestSummary> = summaries.iter().filter(|r| !r.failed).collect();
     let all_itl: Vec<f64> = done.iter().flat_map(|r| r.itl.iter().copied()).collect();
     let queues: Vec<f64> = done.iter().map(|r| r.queue_us).collect();
+    // Terminal-reason histogram for the failed set, alphabetical.
+    let mut reasons: std::collections::BTreeMap<&str, usize> = std::collections::BTreeMap::new();
+    for r in summaries.iter().filter(|r| r.failed) {
+        let k = if r.fail_reason.is_empty() { "unknown" } else { r.fail_reason.as_str() };
+        *reasons.entry(k).or_insert(0) += 1;
+    }
+    let reason_str = if reasons.is_empty() {
+        String::new()
+    } else {
+        format!(
+            " | failures: {}",
+            reasons.iter().map(|(k, n)| format!("{k}={n}")).collect::<Vec<_>>().join(" ")
+        )
+    };
     out.push_str(&format!(
-        "\n{} requests ({} failed) | queue mean {:.1} ms | ITL p50 {:.1} / p99 {:.1} ms | tokens {}\n",
+        "\n{} requests ({} failed, {} preemptions) | queue mean {:.1} ms | ITL p50 {:.1} / p99 {:.1} ms | tokens {}{}\n",
         summaries.len(),
         summaries.len() - done.len(),
+        summaries.iter().map(|r| r.preemptions).sum::<usize>(),
         mean(&queues) / 1e3,
         percentile(&all_itl, 50.0) / 1e3,
         percentile(&all_itl, 99.0) / 1e3,
         done.iter().map(|r| r.tokens).sum::<usize>(),
+        reason_str,
     ));
     out
 }
@@ -210,6 +256,7 @@ mod tests {
             max_new: 3,
             width: 1,
             slo_us: None,
+            deadline_us: None,
         }
     }
 
@@ -274,13 +321,52 @@ mod tests {
     }
 
     #[test]
-    fn failed_requests_render_without_panicking() {
+    fn failed_requests_render_their_terminal_reason() {
         let events = vec![
             arrived(0, 0.0),
-            TraceEvent::RequestRejected { req: 0, t_us: 0.0, reason: "queue full".into() },
+            TraceEvent::RequestRejected {
+                req: 0,
+                t_us: 0.0,
+                reason: "queue full".into(),
+                kind: "queue_full".into(),
+            },
+            arrived(1, 0.0),
+            TraceEvent::RequestAdmitted { req: 1, t_us: 5.0, kv_reserved: 0, queue_delay_us: 5.0 },
+            TraceEvent::RequestCancelled { req: 1, t_us: 9.0, phase: "decoding".into() },
         ];
         let s = summarize(&events);
-        assert!(s[0].failed);
-        assert!(render(&s).contains("FAILED"));
+        assert!(s[0].failed && s[0].fail_reason == "queue_full");
+        assert!(s[1].failed && s[1].fail_reason == "cancelled");
+        let table = render(&s);
+        assert!(table.contains("queue_full"), "{table}");
+        assert!(table.contains("cancelled"), "{table}");
+        assert!(table.contains("failures: cancelled=1 queue_full=1"), "{table}");
+    }
+
+    #[test]
+    fn preemption_requeues_and_counts_without_double_charging() {
+        let events = vec![
+            arrived(0, 0.0),
+            TraceEvent::RequestAdmitted { req: 0, t_us: 10.0, kv_reserved: 64, queue_delay_us: 10.0 },
+            TraceEvent::RequestPreempted {
+                req: 0,
+                t_us: 50.0,
+                kv_released: 64,
+                preemptions: 1,
+                tokens_done: 1,
+            },
+            // Shared traffic while parked must not charge request 0.
+            TraceEvent::CacheLookup { t_us: 60.0, layer: 0, expert: 0, hit: false, prefetch_hit: false },
+            TraceEvent::RequestRequeued { req: 0, t_us: 50.0 },
+            TraceEvent::RequestAdmitted { req: 0, t_us: 90.0, kv_reserved: 64, queue_delay_us: 90.0 },
+            TraceEvent::CacheLookup { t_us: 95.0, layer: 0, expert: 0, hit: true, prefetch_hit: false },
+            TraceEvent::RequestFinished { req: 0, t_us: 120.0, tokens: 3, ttft_us: 40.0, queue_delay_us: 90.0 },
+        ];
+        let s = summarize(&events);
+        assert_eq!(s[0].preemptions, 1);
+        assert_eq!(s[0].cache_misses, 0);
+        assert_eq!(s[0].cache_hits, 1);
+        assert!(!s[0].failed);
+        assert!(render(&s).contains("1 preemptions"), "{}", render(&s));
     }
 }

@@ -56,7 +56,14 @@ fn print_help() {
            inspect    --model M --env E\n\
            trace-record   --trace T.jsonl [--requests N] [--rate R] [--inp L]\n\
                           [--out L] [--seed S] + any SERVING flag; records a\n\
-                          typed JSONL event trace of an open-loop sim run\n\
+                          typed JSONL event trace of an open-loop sim run.\n\
+                          Workload shaping: --tight-every K --tight-slo-ms D\n\
+                          (every Kth request gets a hard deadline), \n\
+                          --cancel-every K --cancel-after-ms T (client cancels),\n\
+                          --reload-at-ms T [--reload-admission P]\n\
+                          [--reload-kv-budget-mb M] [--reload-prefill-tokens N]\n\
+                          [--reload-prefill-chunk C] [--reload-slo-ttft-ms D]\n\
+                          [--reload-max-preemptions P], --drain-at-ms T\n\
            trace-replay   --trace T.jsonl   re-runs the recorded workload and\n\
                           diffs token streams (exit 1 on divergence)\n\
            trace-summary  --trace T.jsonl   per-request flame summaries\n\
@@ -79,6 +86,19 @@ fn print_help() {
                                        cache slots under pressure (0 = off)\n\
                    --max-batch B       decode batch cap (clamped to the AOT\n\
                                        bucket ceiling)\n\
+                   --prefill-tokens N  per-iteration prefill token budget: admit\n\
+                                       several concurrent prefills up to N\n\
+                                       tokens per step (0 = one prefill at a\n\
+                                       time, legacy)\n\
+                   --max-preemptions P preempt up to P times per decoding\n\
+                                       sequence to admit SLO-tight arrivals\n\
+                                       (drop-and-recompute KV; 0 = reject-only)\n\
+                   --faults SPEC       deterministic fault injection, e.g.\n\
+                                       stall=0.1:30000,spike=0.05:50000,err=0.01\n\
+                                       (--fault-seed S decorrelates from --seed)\n\
+                   --conn-timeout-ms T per-connection TCP read timeout (0 = off)\n\
+                   protocol extras: {{\"cancel\":ID}} | {{\"drain\":true}} |\n\
+                                    {{\"reload\":{{...}}}} | \"deadline_ms\" per req\n\
                    see also: cargo run --release --example load_gen -- --compare\n\
          EXECUTOR: --threads N sizes the parallel CPU expert executor\n\
                    (1 = serial, 0 = one worker per core); set\n\
@@ -173,6 +193,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("ngl").is_none() {
         serving.ngl = ServingConfig::paper_ngl_for(&hw.name);
     }
+    let conn_timeout_ms = serving.conn_timeout_ms;
     let hw2 = hw.clone();
     let handle = ServerHandle::spawn(move || {
         Engine::new(figures::artifact_dir(&model), &hw2, serving)
@@ -182,7 +203,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(addr) = args.get("listen") {
         let listener = std::net::TcpListener::bind(addr)?;
         println!("listening on {addr} (protocol: see rust/src/server/net.rs)");
-        fiddler::server::net::serve_tcp(listener, handle.requests.clone())?;
+        fiddler::server::net::serve_tcp(listener, handle.requests.clone(), conn_timeout_ms)?;
         return handle.shutdown();
     }
 
@@ -217,9 +238,32 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 /// `LoadSpec` from CLI flags (shared by trace-record and the bench).
-fn load_spec_from(args: &Args) -> fiddler::server::sim::LoadSpec {
+fn load_spec_from(args: &Args) -> Result<fiddler::server::sim::LoadSpec> {
+    use fiddler::server::ControlMsg;
     let d = fiddler::server::sim::LoadSpec::default();
-    fiddler::server::sim::LoadSpec {
+    let mut controls = Vec::new();
+    if let Some(t) = args.get("reload-at-ms") {
+        let t_us = t.parse::<f64>().map_err(|_| anyhow::anyhow!("--reload-at-ms wants a number"))?
+            * 1e3;
+        let spec = fiddler::server::ReloadSpec {
+            admission: match args.get("reload-admission") {
+                Some(name) => Some(fiddler::config::serving::AdmissionKind::by_name(name)?),
+                None => None,
+            },
+            kv_budget_mb: args.get("reload-kv-budget-mb").map(|_| args.usize_or("reload-kv-budget-mb", 0)),
+            prefill_chunk: args.get("reload-prefill-chunk").map(|_| args.usize_or("reload-prefill-chunk", 0)),
+            prefill_tokens: args.get("reload-prefill-tokens").map(|_| args.usize_or("reload-prefill-tokens", 0)),
+            slo_ttft_ms: args.get("reload-slo-ttft-ms").map(|_| args.f64_or("reload-slo-ttft-ms", 0.0)),
+            max_preemptions: args.get("reload-max-preemptions").map(|_| args.usize_or("reload-max-preemptions", 0)),
+        };
+        controls.push((t_us, ControlMsg::Reload(spec)));
+    }
+    if let Some(t) = args.get("drain-at-ms") {
+        let t_us = t.parse::<f64>().map_err(|_| anyhow::anyhow!("--drain-at-ms wants a number"))?
+            * 1e3;
+        controls.push((t_us, ControlMsg::Drain));
+    }
+    Ok(fiddler::server::sim::LoadSpec {
         n_requests: args.usize_or("requests", 32),
         rate_per_s: args.f64_or("rate", d.rate_per_s),
         inp: args.usize_or("inp", d.inp),
@@ -227,14 +271,24 @@ fn load_spec_from(args: &Args) -> fiddler::server::sim::LoadSpec {
         long_every: args.usize_or("long-every", d.long_every),
         long_inp: args.usize_or("long-inp", d.long_inp),
         seed: args.u64_or("seed", d.seed),
-    }
+        tight_every: args.usize_or("tight-every", d.tight_every),
+        tight_deadline_us: args.f64_or("tight-slo-ms", d.tight_deadline_us / 1e3) * 1e3,
+        cancel_every: args.usize_or("cancel-every", d.cancel_every),
+        cancel_after_us: args.f64_or("cancel-after-ms", d.cancel_after_us / 1e3) * 1e3,
+        controls,
+    })
 }
 
 fn cmd_trace_record(args: &Args) -> Result<()> {
     let path = args.str_or("trace", "trace.jsonl").to_string();
     let mut serving = ServingConfig::from_args(args)?;
     serving.events_out = Some(path.clone());
-    let spec = load_spec_from(args);
+    // Surface a bad --faults spec before the run, not as a silent
+    // disabled-faults fallback deep in the sim.
+    if let Some(f) = &serving.faults {
+        fiddler::server::sim::FailPoints::parse(f, serving.fault_seed)?;
+    }
+    let spec = load_spec_from(args)?;
     let report = fiddler::server::sim::run_open_loop(serving, &spec)?;
     println!(
         "recorded {path}: {} completed / {} rejected | {:.2} tok/s | makespan {:.2} s (virtual)",
@@ -243,6 +297,20 @@ fn cmd_trace_record(args: &Args) -> Result<()> {
         report.throughput_tok_s(),
         report.makespan_s
     );
+    if !report.reasons.is_empty() {
+        let hist: Vec<String> =
+            report.reasons.iter().map(|(k, n)| format!("{k}={n}")).collect();
+        println!("terminal reasons: {}", hist.join(" "));
+    }
+    if report.slo_eligible > 0 {
+        println!(
+            "tight-SLO attainment: {}/{} ({:.1}%) | {} preemptions",
+            report.slo_attained,
+            report.slo_eligible,
+            report.slo_attainment() * 100.0,
+            report.preemptions
+        );
+    }
     let events = fiddler::events::replay::read_log(&path)?;
     println!("{} events on {} requests", events.len(), spec.n_requests);
     Ok(())

@@ -30,6 +30,14 @@ pub struct GenMetrics {
     /// windowing semantics as `cache`
     /// ([`crate::moe::ExpertEvents::delta_since`]).
     pub experts: Option<crate::moe::ExpertEvents>,
+    /// Terminal reason label when the request did not finish normally
+    /// (`"deadline"`, `"cancelled"`, `"queue_full"`, ... — see
+    /// [`crate::server::FailReason`]); `None` for completed requests.
+    pub fail_reason: Option<String>,
+    /// How many times the serving scheduler preempted and requeued this
+    /// request (KV dropped and recomputed on readmission); 0 outside the
+    /// preemption path.
+    pub preemptions: usize,
 }
 
 impl GenMetrics {
@@ -83,6 +91,12 @@ impl GenMetrics {
         }
         if let Some(e) = &self.experts {
             o.set("experts", e.to_json());
+        }
+        if let Some(r) = &self.fail_reason {
+            o.set("fail_reason", Json::Str(r.clone()));
+        }
+        if self.preemptions > 0 {
+            o.set("preemptions", Json::from(self.preemptions));
         }
         o
     }
@@ -175,8 +189,7 @@ mod tests {
             first_token_us: 600.0,
             token_done_us: vec![600.0, 1100.0, 1600.0, 2100.0],
             prompt_tokens: 8,
-            cache: None,
-            experts: None,
+            ..Default::default()
         }
     }
 
@@ -234,6 +247,18 @@ mod tests {
         let cache = j.get("cache").unwrap();
         assert_eq!(cache.get("hits").unwrap().as_usize().unwrap(), 3);
         assert!((cache.get("hit_rate").unwrap().as_f64().unwrap() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn terminal_reason_surfaces_in_json() {
+        let mut m = m();
+        assert!(m.to_json().get("fail_reason").is_err(), "completed => no key");
+        assert!(m.to_json().get("preemptions").is_err(), "no preemptions => no key");
+        m.fail_reason = Some("deadline".into());
+        m.preemptions = 2;
+        let j = m.to_json();
+        assert_eq!(j.get("fail_reason").unwrap().as_str().unwrap(), "deadline");
+        assert_eq!(j.get("preemptions").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

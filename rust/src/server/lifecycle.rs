@@ -42,7 +42,7 @@
 //! ([`crate::server::sim::SimBackend`]); the real [`Engine`] is the
 //! production backend.
 
-use super::{Event, Request};
+use super::{ControlMsg, Event, FailReason, Request, MAX_REQUEST_TOKENS};
 use crate::config::hardware::{MIB, PAPER_EXPERT_BYTES, PAPER_KV_BYTES_PER_TOKEN};
 use crate::config::model::DECODE_BATCH_BUCKETS;
 use crate::config::serving::{AdmissionKind, ServingConfig};
@@ -127,6 +127,10 @@ pub trait ServeBackend {
     fn expert_events(&self) -> crate::moe::ExpertEvents {
         crate::moe::ExpertEvents::default()
     }
+    /// Hot-reload hook: the serve loop calls this after applying a
+    /// `Reload` control so the backend can pick up the serving knobs it
+    /// caches (e.g. pipeline lookahead).  Default: nothing to refresh.
+    fn reload(&mut self, _cfg: &ServingConfig) {}
 }
 
 impl ServeBackend for Engine {
@@ -319,6 +323,35 @@ impl KvBudget {
             self.borrowed_slots -= 1;
         }
     }
+
+    /// Hot-reload the pool size (`Reload{kv_budget_mb}`), rebalancing the
+    /// expert-cache borrow: a grown pool returns borrowed slots, a shrunk
+    /// pool borrows unpinned slots to keep covering current reservations.
+    /// A shrink that cannot be covered leaves the budget transiently
+    /// overcommitted — no new reservation fits until enough in-flight
+    /// requests release.  Going unlimited (0) returns every borrowed slot
+    /// and stops tracking; the reverse transition starts tracking from
+    /// zero (in-flight reservations made under the unlimited regime
+    /// release as no-ops via `saturating_sub`).
+    pub fn set_pool_mb(&mut self, pool_mb: usize, cache: &mut ExpertCache) {
+        self.pool_bytes = pool_mb as u64 * MIB;
+        if self.unlimited() {
+            while self.borrowed_slots > 0 {
+                cache.set_capacity(cache.capacity() + 1);
+                self.borrowed_slots -= 1;
+            }
+            self.used_bytes = 0;
+            return;
+        }
+        while self.borrowed_slots > 0 && self.used_bytes + self.expert_bytes <= self.ceiling() {
+            cache.set_capacity(cache.capacity() + 1);
+            self.borrowed_slots -= 1;
+        }
+        while self.used_bytes > self.ceiling() && cache.capacity() > cache.pinned_count() {
+            cache.set_capacity(cache.capacity() - 1);
+            self.borrowed_slots += 1;
+        }
+    }
 }
 
 /// One decoding slot of a sequence group: a beam, or the single lane of
@@ -352,6 +385,19 @@ struct SequenceGroup {
     metrics: GenMetrics,
     /// Absolute virtual TTFT deadline (admission `slo` mode orders by it).
     deadline_us: f64,
+    /// Absolute *enforced* end-to-end deadline, when the request carried
+    /// `deadline_ms` on the wire: past this instant the scheduler fails
+    /// the request with [`FailReason::Deadline`] at the next chunk
+    /// boundary.  `None` = never expire (the SLO deadline above only
+    /// orders admission).
+    hard_deadline_us: Option<f64>,
+    /// Times this group has been preempted (KV dropped, requeued).
+    preemptions: usize,
+    /// Prompt plus already-generated tokens, set at preemption: the
+    /// readmitted group recomputes its KV by prefilling this prefix
+    /// (drop-and-recompute, Sarathi-style) and resumes decoding at token
+    /// index `produced`.
+    resume_prefix: Option<Vec<u32>>,
     /// Paper-scale KV bytes reserved for this group at admission.
     kv_reserved: u64,
     /// Cumulative cache counters at admission; completion stamps the delta.
@@ -373,8 +419,23 @@ impl SequenceGroup {
         }
     }
 
-    fn fail(self, msg: &str) {
-        let _ = self.stream.send(Event::Error(msg.to_string()));
+    /// The token prefix prefill must process: the original prompt, or —
+    /// after a preemption — prompt plus everything already generated.
+    fn prefill_prefix(&self) -> &[u32] {
+        self.resume_prefix.as_deref().unwrap_or(&self.prompt)
+    }
+
+    /// Terminal failure: stamp the typed reason into the metrics and send
+    /// the typed terminal event (receivers never hang).
+    fn fail(self, reason: FailReason, msg: &str) {
+        let mut metrics = self.metrics;
+        metrics.fail_reason = Some(reason.label().to_string());
+        metrics.preemptions = self.preemptions;
+        let _ = self.stream.send(Event::Failed {
+            reason,
+            message: msg.to_string(),
+            metrics,
+        });
     }
 }
 
@@ -405,15 +466,15 @@ fn park_pending(r: Request, pending: &mut Vec<Request>) {
 }
 
 /// Run the lifecycle scheduler until `requests` disconnects (or a
-/// shutdown sentinel arrives) and all in-flight work drains.  On
-/// shutdown, queued-but-never-admitted requests receive a terminal
-/// [`Event::Error`] — their receivers never hang — while admitted
-/// sequences run to completion.
+/// shutdown sentinel / `Drain` control arrives) and all in-flight work
+/// drains.  On shutdown, queued-but-never-admitted requests receive a
+/// terminal [`Event::Failed`] — their receivers never hang — while
+/// admitted sequences run to completion.
 pub fn serve_lifecycle<B: ServeBackend>(
     backend: &mut B,
     requests: Receiver<Request>,
 ) -> Result<()> {
-    let cfg = backend.serving().clone();
+    let mut cfg = backend.serving().clone();
     let (max_batch, over_ceiling) = effective_max_batch(cfg.max_batch);
     if over_ceiling {
         // eprintln!, not log::warn! — the CLI installs no logger, and this
@@ -444,24 +505,49 @@ pub fn serve_lifecycle<B: ServeBackend>(
         kv_budget_mb: cfg.kv_budget_mb,
         slo_ttft_ms: cfg.slo_ttft_ms,
         lookahead: cfg.pipeline_lookahead,
+        prefill_tokens: cfg.prefill_tokens,
+        max_preemptions: cfg.max_preemptions,
+        faults: cfg.faults.clone().unwrap_or_default(),
+        fault_seed: cfg.fault_seed,
     });
     // Serve-loop request ids, in ingest order (Cell: the ingest closure
     // and the loop body both touch it).
     let next_id = std::cell::Cell::new(0u64);
     let mut kv = KvBudget::new(cfg.kv_budget_mb);
+    // Fail loudly at startup when the budget cannot EVER fit a single
+    // max-length request — every long request would otherwise be
+    // rejected one by one with no hint at the real cause.
+    if !kv.unlimited() {
+        let one_max = kv_worst_case_bytes(MAX_REQUEST_TOKENS, 0, 1);
+        if !kv.ever_feasible(one_max, backend.expert_cache_mut()) {
+            eprintln!(
+                "warning: --kv-budget-mb {} cannot hold one max-length request \
+                 ({MAX_REQUEST_TOKENS} tokens = {} MiB) even after borrowing every \
+                 unpinned expert slot; such requests will be rejected at ingest",
+                cfg.kv_budget_mb,
+                one_max / MIB
+            );
+        }
+    }
     let mut queue: VecDeque<SequenceGroup> = VecDeque::new();
     // Requests scheduled to arrive at a future virtual time (open-loop
     // drivers), sorted ascending by arrival.
     let mut pending: Vec<Request> = Vec::new();
+    // Requests re-routed from the blocking idle receive back to the
+    // top-of-loop triage (keeps ONE ingest/control application point).
+    let mut inbox: VecDeque<Request> = VecDeque::new();
     let mut groups: Vec<SequenceGroup> = Vec::new();
     let mut shutting_down = false;
 
     // Turn an arrived request into a queued group (or reject it with a
     // terminal event).  Returns true when it was the shutdown sentinel.
+    // `cfg` is passed per call (not captured) so hot reload can mutate it
+    // between iterations.
     let ingest = |r: Request,
                   queue: &mut VecDeque<SequenceGroup>,
                   kv: &KvBudget,
-                  backend: &mut B|
+                  backend: &mut B,
+                  cfg: &ServingConfig|
      -> bool {
         if r.shutdown {
             return true;
@@ -476,40 +562,51 @@ pub fn serve_lifecycle<B: ServeBackend>(
             max_new: r.max_new,
             width: r.width,
             slo_us: r.slo_us,
+            deadline_us: r.deadline_us,
         });
-        let reject = |r: &Request, msg: String| {
+        let reject = |r: &Request, reason: FailReason, msg: String| {
+            let kind = reason.label().to_string();
             sink.emit_with(|| crate::events::TraceEvent::RequestRejected {
                 req: id,
                 t_us: enqueue_us,
                 reason: msg.clone(),
+                kind: kind.clone(),
             });
-            let _ = r.stream.send(Event::Error(msg));
+            let _ = r.stream.send(Event::error(reason, msg));
         };
         if r.prompt.is_empty() {
-            reject(&r, "bad request: empty prompt".into());
+            reject(&r, FailReason::BadRequest, "bad request: empty prompt".into());
             return false;
         }
         if r.max_new == 0 {
-            reject(&r, "bad request: max_new must be at least 1".into());
+            reject(&r, FailReason::BadRequest, "bad request: max_new must be at least 1".into());
             return false;
         }
         if r.width == 0 || r.width > max_batch {
-            reject(&r, format!("bad request: beam width {} not in 1..={max_batch}", r.width));
+            reject(
+                &r,
+                FailReason::BadRequest,
+                format!("bad request: beam width {} not in 1..={max_batch}", r.width),
+            );
             return false;
         }
         if queue.len() >= cfg.queue_capacity {
-            reject(&r, format!("queue full ({} requests)", cfg.queue_capacity));
+            reject(&r, FailReason::QueueFull, format!("queue full ({} requests)", cfg.queue_capacity));
             return false;
         }
         let worst = kv_worst_case_bytes(r.prompt.len(), r.max_new, r.width);
         if !kv.ever_feasible(worst, backend.expert_cache_mut()) {
             reject(
                 &r,
+                FailReason::KvInfeasible,
                 format!("request KV footprint ({} MiB) exceeds --kv-budget-mb", worst / MIB),
             );
             return false;
         }
         let deadline_us = enqueue_us + r.slo_us.unwrap_or(cfg.slo_ttft_ms * 1e3);
+        // Ingest ack carrying the serve-loop id — the handle `Cancel`
+        // needs.  Client-stream-only (not a trace event).
+        let _ = r.stream.send(Event::Queued(id));
         queue.push_back(SequenceGroup {
             id,
             metrics: GenMetrics {
@@ -522,6 +619,9 @@ pub fn serve_lifecycle<B: ServeBackend>(
             width: r.width,
             stream: r.stream,
             deadline_us,
+            hard_deadline_us: r.deadline_us.map(|d| enqueue_us + d),
+            preemptions: 0,
+            resume_prefix: None,
             kv_reserved: 0,
             cache_base: CacheStats::default(),
             events_base: crate::moe::ExpertEvents::default(),
@@ -539,7 +639,7 @@ pub fn serve_lifecycle<B: ServeBackend>(
         //    pending arrivals: those arrived at an earlier virtual time,
         //    so they must reach the queue (FCFS order, capacity slots)
         //    first.
-        let mut live: Vec<Request> = Vec::new();
+        let mut live: Vec<Request> = inbox.drain(..).collect();
         loop {
             match requests.try_recv() {
                 Ok(r) if r.arrive_at_us.map(|t| t > backend.now_us()).unwrap_or(false) => {
@@ -554,19 +654,123 @@ pub fn serve_lifecycle<B: ServeBackend>(
             }
         }
         // 2. Promote pending arrivals whose time has come, then the live
-        //    batch.
+        //    batch.  Control messages are staged and applied AFTER every
+        //    same-iteration ingest, at one fixed point — a recorded
+        //    control replays at the same iteration boundary whether it
+        //    originally arrived live (TCP) or time-stamped (replay).
+        let mut controls: Vec<Request> = Vec::new();
         while pending.first().map(|r| r.arrive_at_us.unwrap_or(0.0) <= backend.now_us())
             == Some(true)
         {
             let r = pending.remove(0);
-            if ingest(r, &mut queue, &kv, backend) {
+            if r.control.is_some() {
+                controls.push(r);
+            } else if ingest(r, &mut queue, &kv, backend, &cfg) {
                 shutting_down = true;
             }
         }
         for r in live {
-            if ingest(r, &mut queue, &kv, backend) {
+            if r.control.is_some() {
+                controls.push(r);
+            } else if ingest(r, &mut queue, &kv, backend, &cfg) {
                 shutting_down = true;
             }
+        }
+        // 2b. Apply staged controls between iterations: cancel releases
+        //     everything the request holds; reload swaps scheduling knobs
+        //     without touching in-flight groups; drain flips shutdown.
+        for r in controls {
+            let now = backend.now_us();
+            let msg = r.control.clone().expect("staged control");
+            match &msg {
+                ControlMsg::Cancel { req } => {
+                    let req = *req;
+                    if let Some(pos) = queue.iter().position(|g| g.id == req) {
+                        let g = queue.remove(pos).unwrap();
+                        sink.emit_with(|| crate::events::TraceEvent::RequestCancelled {
+                            req,
+                            t_us: now,
+                            phase: "queued".to_string(),
+                        });
+                        g.fail(FailReason::Cancelled, "request cancelled");
+                    } else if let Some(pos) = groups.iter().position(|g| g.id == req) {
+                        let g = groups.remove(pos);
+                        let phase = match &g.phase {
+                            Phase::Queued => "queued",
+                            Phase::Prefilling { .. } => "prefilling",
+                            Phase::Decoding { .. } => "decoding",
+                        };
+                        sink.emit_with(|| crate::events::TraceEvent::RequestCancelled {
+                            req,
+                            t_us: now,
+                            phase: phase.to_string(),
+                        });
+                        kv.release(g.kv_reserved, backend.expert_cache_mut());
+                        let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
+                        sink.emit_with(|| crate::events::TraceEvent::KvBudget {
+                            t_us: now,
+                            used_bytes: used,
+                            borrowed_slots: borrowed,
+                        });
+                        g.fail(FailReason::Cancelled, "request cancelled");
+                    }
+                    // Unknown / already-finished id: ack only, no trace
+                    // event — replay never re-sends a no-op cancel.
+                }
+                ControlMsg::Reload(spec) => {
+                    if let Some(a) = spec.admission {
+                        cfg.admission = a;
+                    }
+                    if let Some(mb) = spec.kv_budget_mb {
+                        cfg.kv_budget_mb = mb;
+                        kv.set_pool_mb(mb, backend.expert_cache_mut());
+                        let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
+                        sink.emit_with(|| crate::events::TraceEvent::KvBudget {
+                            t_us: now,
+                            used_bytes: used,
+                            borrowed_slots: borrowed,
+                        });
+                    }
+                    if let Some(p) = spec.prefill_chunk {
+                        cfg.prefill_chunk = p;
+                    }
+                    if let Some(p) = spec.prefill_tokens {
+                        cfg.prefill_tokens = p;
+                    }
+                    if let Some(s) = spec.slo_ttft_ms {
+                        cfg.slo_ttft_ms = s;
+                    }
+                    if let Some(m) = spec.max_preemptions {
+                        cfg.max_preemptions = m;
+                    }
+                    backend.reload(&cfg);
+                    // Full post-reload snapshot: replay re-applies the
+                    // snapshot rather than the delta, so one recorded
+                    // event suffices regardless of which fields changed.
+                    let snap = (
+                        cfg.admission.label().to_string(),
+                        cfg.kv_budget_mb,
+                        cfg.prefill_chunk,
+                        cfg.prefill_tokens,
+                        cfg.slo_ttft_ms,
+                        cfg.max_preemptions,
+                    );
+                    sink.emit_with(|| crate::events::TraceEvent::ConfigReloaded {
+                        t_us: now,
+                        admission: snap.0.clone(),
+                        kv_budget_mb: snap.1,
+                        prefill_chunk: snap.2,
+                        prefill_tokens: snap.3,
+                        slo_ttft_ms: snap.4,
+                        max_preemptions: snap.5,
+                    });
+                }
+                ControlMsg::Drain => {
+                    shutting_down = true;
+                    sink.emit_with(|| crate::events::TraceEvent::DrainStarted { t_us: now });
+                }
+            }
+            let _ = r.stream.send(Event::ControlAck { op: msg.op() });
         }
         // 3. Shutdown: everything not yet admitted gets a terminal event
         //    (receivers must never hang); admitted groups drain below.
@@ -577,13 +781,15 @@ pub fn serve_lifecycle<B: ServeBackend>(
                     req: id,
                     t_us: t,
                     reason: "server shutting down before admission".to_string(),
+                    kind: FailReason::Shutdown.label().to_string(),
                 });
-                g.fail("server shutting down before admission");
+                g.fail(FailReason::Shutdown, "server shutting down before admission");
             }
             for r in pending.drain(..) {
                 if !r.shutdown {
-                    let _ = r.stream.send(Event::Error(
-                        "server shutting down before admission".to_string(),
+                    let _ = r.stream.send(Event::error(
+                        FailReason::Shutdown,
+                        "server shutting down before admission",
                     ));
                 }
             }
@@ -599,39 +805,149 @@ pub fn serve_lifecycle<B: ServeBackend>(
                 continue;
             }
             match requests.recv() {
-                // A future-dated arrival waits in `pending` here too (the
-                // top-of-loop drain re-routes it), so live drivers get the
-                // same exact virtual-time replay as pre-loaded channels.
-                Ok(r) if r.arrive_at_us.map(|t| t > backend.now_us()).unwrap_or(false) => {
-                    park_pending(r, &mut pending);
-                    continue;
-                }
+                // Everything received here re-enters through the
+                // top-of-loop triage (park / ingest / stage-control), so
+                // live drivers get the same exact virtual-time replay as
+                // pre-loaded channels.
                 Ok(r) => {
-                    if ingest(r, &mut queue, &kv, backend) {
-                        shutting_down = true;
-                    }
+                    inbox.push_back(r);
                     continue;
                 }
                 Err(_) => return Ok(()),
             }
         }
 
+        // 4b. Deadline enforcement at the iteration (= chunk) boundary:
+        //     any request — queued, prefilling, or decoding — whose
+        //     enforced deadline has lapsed fails with a typed reason and
+        //     releases whatever it holds.
+        {
+            let now = backend.now_us();
+            let lapsed = |g: &SequenceGroup| g.hard_deadline_us.map(|d| now > d).unwrap_or(false);
+            let mut qi = 0;
+            while qi < queue.len() {
+                if !lapsed(&queue[qi]) {
+                    qi += 1;
+                    continue;
+                }
+                let g = queue.remove(qi).unwrap();
+                let id = g.id;
+                sink.emit_with(|| crate::events::TraceEvent::RequestFailed {
+                    req: id,
+                    t_us: now,
+                    reason: "deadline exceeded before completion".to_string(),
+                    kind: FailReason::Deadline.label().to_string(),
+                });
+                g.fail(FailReason::Deadline, "deadline exceeded before completion");
+            }
+            let mut gi = 0;
+            while gi < groups.len() {
+                if !lapsed(&groups[gi]) {
+                    gi += 1;
+                    continue;
+                }
+                let g = groups.remove(gi);
+                let id = g.id;
+                sink.emit_with(|| crate::events::TraceEvent::RequestFailed {
+                    req: id,
+                    t_us: now,
+                    reason: "deadline exceeded before completion".to_string(),
+                    kind: FailReason::Deadline.label().to_string(),
+                });
+                kv.release(g.kv_reserved, backend.expert_cache_mut());
+                let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
+                sink.emit_with(|| crate::events::TraceEvent::KvBudget {
+                    t_us: now,
+                    used_bytes: used,
+                    borrowed_slots: borrowed,
+                });
+                g.fail(FailReason::Deadline, "deadline exceeded before completion");
+            }
+        }
+
         // 5. Admission: one request per iteration — the first candidate in
         //    policy order that fits the free batch slots AND the KV budget
         //    (backfill: a wide or KV-hungry head never starves admissible
-        //    requests behind it).  Held while a prefill is in flight so
-        //    its chunk cadence (and thus the running sequences' ITL bound)
-        //    is preserved.
+        //    requests behind it).  With the legacy single-prefill cadence
+        //    (`--prefill-tokens 0`) admission is held while a prefill is
+        //    in flight so the running sequences' ITL bound is preserved;
+        //    with a prefill token budget admission stays open and the
+        //    budget bounds ITL instead.
+        //
+        //    Preemption (`--max-preemptions N`): when the candidate fits
+        //    the batch but not the KV budget, evict the width-1 decoding
+        //    group with the LATEST admission deadline — provided that
+        //    deadline is strictly later than the candidate's (preempting
+        //    never helps an already-later request) and the victim has
+        //    preemptions left.  The victim's KV is dropped and recomputed
+        //    from prompt + generated tokens on readmission; at most one
+        //    victim per iteration keeps the policy conservative.
         let active_slots: usize = groups.iter().map(|g| g.slot_count()).sum();
-        let prefilling = groups.iter().any(|g| matches!(g.phase, Phase::Prefilling { .. }));
-        if !prefilling && !shutting_down {
+        let hold_for_prefill = cfg.prefill_tokens == 0
+            && groups.iter().any(|g| matches!(g.phase, Phase::Prefilling { .. }));
+        if !hold_for_prefill && !shutting_down {
+            let mut preempted_this_iter = false;
             for i in admission_order(&queue, cfg.admission) {
                 if active_slots + queue[i].width > max_batch {
                     continue;
                 }
                 let worst =
                     kv_worst_case_bytes(queue[i].prompt.len(), queue[i].max_new, queue[i].width);
-                if kv.try_reserve(worst, backend.expert_cache_mut()) {
+                let mut reserved = kv.try_reserve(worst, backend.expert_cache_mut());
+                if !reserved && cfg.max_preemptions > 0 && !preempted_this_iter {
+                    let cand_deadline = queue[i].deadline_us;
+                    let victim = groups
+                        .iter()
+                        .enumerate()
+                        .filter(|(_, g)| {
+                            g.width == 1
+                                && matches!(g.phase, Phase::Decoding { .. })
+                                && g.preemptions < cfg.max_preemptions
+                                && g.deadline_us > cand_deadline
+                        })
+                        .max_by(|(_, a), (_, b)| a.deadline_us.total_cmp(&b.deadline_us))
+                        .map(|(vi, _)| vi);
+                    if let Some(vi) = victim {
+                        let mut v = groups.remove(vi);
+                        let now = backend.now_us();
+                        kv.release(v.kv_reserved, backend.expert_cache_mut());
+                        let released = v.kv_reserved;
+                        v.kv_reserved = 0;
+                        v.preemptions += 1;
+                        // Drop-and-recompute: prefill prompt + generated
+                        // on readmission, resume at token `produced`.
+                        let generated = match &v.phase {
+                            Phase::Decoding { slots } => slots[0].tokens.clone(),
+                            _ => unreachable!("victim filter keeps only decoding groups"),
+                        };
+                        let mut prefix = v.prompt.clone();
+                        prefix.extend_from_slice(&generated);
+                        v.resume_prefix = Some(prefix);
+                        v.phase = Phase::Queued;
+                        let (vid, n_pre, n_tok) = (v.id, v.preemptions, v.produced);
+                        sink.emit_with(|| crate::events::TraceEvent::RequestPreempted {
+                            req: vid,
+                            t_us: now,
+                            kv_released: released,
+                            preemptions: n_pre,
+                            tokens_done: n_tok,
+                        });
+                        sink.emit_with(|| crate::events::TraceEvent::RequestRequeued {
+                            req: vid,
+                            t_us: now,
+                        });
+                        let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
+                        sink.emit_with(|| crate::events::TraceEvent::KvBudget {
+                            t_us: now,
+                            used_bytes: used,
+                            borrowed_slots: borrowed,
+                        });
+                        queue.push_back(v);
+                        preempted_this_iter = true;
+                        reserved = kv.try_reserve(worst, backend.expert_cache_mut());
+                    }
+                }
+                if reserved {
                     let mut g = queue.remove(i).unwrap();
                     g.kv_reserved = worst;
                     g.metrics.admitted_us = backend.now_us();
@@ -657,32 +973,52 @@ pub fn serve_lifecycle<B: ServeBackend>(
             }
         }
 
-        // 6. Prefill: advance the in-flight prompt by one chunk (the whole
-        //    prompt when chunking is off); on completion, emit the first
-        //    token and expand into decode slots.
-        let mut failed: Option<usize> = None;
-        if let Some((gi, g)) = groups
-            .iter_mut()
+        // 6. Prefill.  Legacy cadence (`--prefill-tokens 0`): exactly one
+        //    prefill in flight, one chunk per iteration.  Budgeted
+        //    cadence (`--prefill-tokens B`): every prefilling group
+        //    advances in admission order until the iteration's token
+        //    budget is spent — the FIRST group always advances one full
+        //    chunk (progress guarantee even when B < chunk), later ones
+        //    consume what remains of B.  On completion a group emits its
+        //    next token at index `produced` (0 for fresh prompts, the
+        //    resume index after a preemption) and expands into decode
+        //    slots.
+        let mut failed: Vec<(usize, String)> = Vec::new();
+        let prefill_idx: Vec<usize> = groups
+            .iter()
             .enumerate()
-            .find(|(_, g)| matches!(g.phase, Phase::Prefilling { .. }))
-        {
+            .filter(|(_, g)| matches!(g.phase, Phase::Prefilling { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let mut budget_left = cfg.prefill_tokens;
+        for (k, &gi) in prefill_idx.iter().enumerate() {
+            if k > 0 && cfg.prefill_tokens == 0 {
+                break; // legacy: a single prefill holds admission anyway
+            }
+            let g = &mut groups[gi];
             let Phase::Prefilling { cursor, cache } = &mut g.phase else { unreachable!() };
-            let remaining = g.prompt.len() - *cursor;
-            let step =
+            // Split borrows: prefix fields are disjoint from `phase`.
+            let prefix: &[u32] = match &g.resume_prefix {
+                Some(p) => p,
+                None => &g.prompt,
+            };
+            let remaining = prefix.len() - *cursor;
+            let mut step =
                 if cfg.prefill_chunk == 0 { remaining } else { cfg.prefill_chunk.min(remaining) };
-            let is_last = *cursor + step == g.prompt.len();
+            if cfg.prefill_tokens > 0 {
+                if k > 0 {
+                    step = step.min(budget_left);
+                }
+                if step == 0 {
+                    break; // budget spent: later prefills wait their turn
+                }
+                budget_left = budget_left.saturating_sub(step);
+            }
+            let is_last = *cursor + step == prefix.len();
             let chunk_start = *cursor;
-            match backend.prefill_chunk(&g.prompt[*cursor..*cursor + step], cache, is_last) {
+            match backend.prefill_chunk(&prefix[*cursor..*cursor + step], cache, is_last) {
                 Err(e) => {
-                    let reason = e.to_string();
-                    let (id, t) = (g.id, backend.now_us());
-                    let _ = g.stream.send(Event::Error(reason.clone()));
-                    sink.emit_with(|| crate::events::TraceEvent::RequestFailed {
-                        req: id,
-                        t_us: t,
-                        reason,
-                    });
-                    failed = Some(gi);
+                    failed.push((gi, e.to_string()));
                 }
                 Ok(None) => {
                     *cursor += step;
@@ -705,23 +1041,35 @@ pub fn serve_lifecycle<B: ServeBackend>(
                         len: step,
                         is_last: true,
                     });
-                    g.metrics.first_token_us = now;
+                    if g.produced == 0 {
+                        g.metrics.first_token_us = now;
+                    }
                     g.metrics.token_done_us.push(now);
-                    g.produced = 1;
                     let slots = if g.width == 1 {
                         let tok = backend.sample(&logits);
                         let _ = g.stream.send(Event::Token(tok));
+                        let idx = g.produced;
                         sink.emit_with(|| crate::events::TraceEvent::TokenEmitted {
                             req: id,
                             t_us: now,
                             token: tok,
-                            index: 0,
+                            index: idx,
                         });
                         let cache = std::mem::replace(cache, SequenceCache { layers: Vec::new() });
-                        vec![Slot { cache, last: tok, tokens: vec![tok], score: 0.0 }]
+                        // A resumed group carries its first-stint tokens
+                        // forward (a second preemption rebuilds its
+                        // prefix from this list).
+                        let mut tokens: Vec<u32> = g
+                            .resume_prefix
+                            .as_ref()
+                            .map(|p| p[g.prompt.len()..].to_vec())
+                            .unwrap_or_default();
+                        tokens.push(tok);
+                        vec![Slot { cache, last: tok, tokens, score: 0.0 }]
                     } else {
                         // Beam expansion: top-width first tokens, caches
-                        // forked copy-on-write (scenario c).
+                        // forked copy-on-write (scenario c).  Beam groups
+                        // are never preempted, so no resume path here.
                         let lsm = log_softmax(&logits);
                         top_indices_desc(&lsm, g.width)
                             .into_iter()
@@ -733,13 +1081,30 @@ pub fn serve_lifecycle<B: ServeBackend>(
                             })
                             .collect()
                     };
+                    g.produced += 1;
+                    g.resume_prefix = None;
                     g.phase = Phase::Decoding { slots };
                 }
             }
         }
-        if let Some(gi) = failed {
+        for (gi, msg) in failed.into_iter().rev() {
             let g = groups.remove(gi);
+            let (id, t) = (g.id, backend.now_us());
+            let reason = msg.clone();
+            sink.emit_with(|| crate::events::TraceEvent::RequestFailed {
+                req: id,
+                t_us: t,
+                reason,
+                kind: FailReason::Backend.label().to_string(),
+            });
             kv.release(g.kv_reserved, backend.expert_cache_mut());
+            let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
+            sink.emit_with(|| crate::events::TraceEvent::KvBudget {
+                t_us: t,
+                used_bytes: used,
+                borrowed_slots: borrowed,
+            });
+            g.fail(FailReason::Backend, &msg);
         }
 
         // 7. One decode step for every decoding slot (beam slots decode as
@@ -753,6 +1118,7 @@ pub fn serve_lifecycle<B: ServeBackend>(
         enum StepOut {
             Tokens(Vec<u32>),
             Logits(Vec<Vec<f32>>),
+            Error(String),
         }
         let step = {
             let mut last: Vec<u32> = Vec::new();
@@ -775,12 +1141,52 @@ pub fn serve_lifecycle<B: ServeBackend>(
             if last.is_empty() {
                 None
             } else if all_width1 {
-                Some(StepOut::Tokens(backend.decode_sample(&last, &mut caches)?))
+                match backend.decode_sample(&last, &mut caches) {
+                    Ok(toks) => Some(StepOut::Tokens(toks)),
+                    Err(e) => Some(StepOut::Error(e.to_string())),
+                }
             } else {
-                Some(StepOut::Logits(backend.decode_logits(&last, &mut caches)?))
+                match backend.decode_logits(&last, &mut caches) {
+                    Ok(rows) => Some(StepOut::Logits(rows)),
+                    Err(e) => Some(StepOut::Error(e.to_string())),
+                }
             }
         };
-        if let Some(step) = step {
+        // A failed decode step fails every group that contributed a row —
+        // their KV histories are suspect — and the server keeps serving
+        // everyone else (a backend fault is a request-scoped incident,
+        // not a process-scoped one).
+        if let Some(StepOut::Error(msg)) = &step {
+            let msg = format!("decode step failed: {msg}");
+            let now = backend.now_us();
+            let mut gi = 0;
+            while gi < groups.len() {
+                let contributed = groups[gi].produced < groups[gi].max_new
+                    && matches!(groups[gi].phase, Phase::Decoding { .. });
+                if !contributed {
+                    gi += 1;
+                    continue;
+                }
+                let g = groups.remove(gi);
+                let id = g.id;
+                let reason = msg.clone();
+                sink.emit_with(|| crate::events::TraceEvent::RequestFailed {
+                    req: id,
+                    t_us: now,
+                    reason,
+                    kind: FailReason::Backend.label().to_string(),
+                });
+                kv.release(g.kv_reserved, backend.expert_cache_mut());
+                let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
+                sink.emit_with(|| crate::events::TraceEvent::KvBudget {
+                    t_us: now,
+                    used_bytes: used,
+                    borrowed_slots: borrowed,
+                });
+                g.fail(FailReason::Backend, &msg);
+            }
+        }
+        if let Some(step) = step.filter(|s| !matches!(s, StepOut::Error(_))) {
             let now = backend.now_us();
             let mut ri = 0;
             for g in groups.iter_mut() {
@@ -857,6 +1263,7 @@ pub fn serve_lifecycle<B: ServeBackend>(
             let mut g = groups.remove(gi);
             g.metrics.cache = Some(backend.cache_stats().delta_since(&g.cache_base));
             g.metrics.experts = Some(backend.expert_events().delta_since(&g.events_base));
+            g.metrics.preemptions = g.preemptions;
             let (id, t) = (g.id, backend.now_us());
             if g.width > 1 {
                 if let Phase::Decoding { slots } = &g.phase {
@@ -999,12 +1406,55 @@ mod tests {
             stream: tx,
             metrics: GenMetrics::default(),
             deadline_us,
+            hard_deadline_us: None,
+            preemptions: 0,
+            resume_prefix: None,
             kv_reserved: 0,
             cache_base: CacheStats::default(),
             events_base: crate::moe::ExpertEvents::default(),
             produced: 0,
             phase: Phase::Queued,
         }
+    }
+
+    #[test]
+    fn kv_budget_pool_reload_rebalances_borrow() {
+        // Shrink under load: borrows unpinned slots to keep covering the
+        // in-flight reservation.
+        let mut kv = KvBudget::new(2);
+        let mut cache = ExpertCache::with_capacity(4);
+        cache.pin((0, 0));
+        assert!(kv.try_reserve(2 * MIB, &mut cache));
+        assert_eq!(kv.borrowed_slots(), 0);
+        kv.set_pool_mb(1, &mut cache);
+        assert!(kv.borrowed_slots() >= 1, "shrunk pool must borrow to cover usage");
+        assert!(kv.used_bytes() <= kv.ceiling());
+        // Grow back: the borrow returns.
+        kv.set_pool_mb(2, &mut cache);
+        assert_eq!(kv.borrowed_slots(), 0);
+        assert_eq!(cache.capacity(), 4);
+        // Going unlimited returns everything and stops tracking.
+        assert!(kv.try_reserve(MIB + PAPER_EXPERT_BYTES / 2, &mut cache));
+        kv.set_pool_mb(0, &mut cache);
+        assert!(kv.unlimited());
+        assert_eq!(kv.borrowed_slots(), 0);
+        assert_eq!(kv.used_bytes(), 0);
+        assert_eq!(cache.capacity(), 4);
+    }
+
+    #[test]
+    fn kv_budget_unsatisfiable_shrink_overcommits_transiently() {
+        let mut kv = KvBudget::new(4);
+        let mut cache = ExpertCache::with_capacity(1);
+        cache.pin((0, 0)); // nothing borrowable
+        assert!(kv.try_reserve(4 * MIB, &mut cache));
+        kv.set_pool_mb(1, &mut cache);
+        // Cannot cover: overcommitted, so nothing new fits ...
+        assert!(kv.used_bytes() > kv.ceiling());
+        assert!(!kv.try_reserve(1, &mut cache));
+        // ... until the in-flight reservation releases.
+        kv.release(4 * MIB, &mut cache);
+        assert!(kv.try_reserve(MIB / 2, &mut cache));
     }
 
     #[test]

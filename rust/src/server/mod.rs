@@ -15,11 +15,97 @@ pub mod sim;
 
 pub use lifecycle::{serve_lifecycle, ServeBackend};
 
+use crate::config::serving::AdmissionKind;
 use crate::coordinator::Engine;
 use crate::metrics::GenMetrics;
 use anyhow::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
+
+/// Hard cap on `prompt + max_new` tokens of one request: the largest
+/// sequence the TCP front end accepts and the sizing unit of the
+/// startup KV-budget feasibility warning (one max-length width-1 request
+/// at [`crate::config::hardware::PAPER_KV_BYTES_PER_TOKEN`]).
+pub const MAX_REQUEST_TOKENS: usize = 4096;
+
+/// Why a request terminated without finishing.  Carried on
+/// [`Event::Failed`], stamped into [`GenMetrics::fail_reason`], and
+/// surfaced as the `reason` field of the TCP `error` line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailReason {
+    /// Ingest validation failed (empty prompt, bad width, ...).
+    BadRequest,
+    /// Admission queue at capacity.
+    QueueFull,
+    /// Worst-case KV footprint exceeds the entire `--kv-budget-mb` pool.
+    KvInfeasible,
+    /// Per-request deadline lapsed (checked at chunk boundaries).
+    Deadline,
+    /// Client sent `Cancel{id}` (or the connection demanded it).
+    Cancelled,
+    /// Server shut down / drained before or during service.
+    Shutdown,
+    /// Backend step error (real engine failure or injected fault).
+    Backend,
+    /// TCP front end: connection idle past `--conn-timeout-ms`.
+    Timeout,
+}
+
+impl FailReason {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FailReason::BadRequest => "bad_request",
+            FailReason::QueueFull => "queue_full",
+            FailReason::KvInfeasible => "kv_infeasible",
+            FailReason::Deadline => "deadline",
+            FailReason::Cancelled => "cancelled",
+            FailReason::Shutdown => "shutdown",
+            FailReason::Backend => "backend",
+            FailReason::Timeout => "timeout",
+        }
+    }
+}
+
+/// Fields of a hot config reload; `None` keeps the current value.
+/// Applied between serve-loop iterations, so in-flight requests are
+/// never dropped by a reload.
+#[derive(Clone, Debug, Default)]
+pub struct ReloadSpec {
+    pub admission: Option<AdmissionKind>,
+    pub kv_budget_mb: Option<usize>,
+    pub prefill_chunk: Option<usize>,
+    pub prefill_tokens: Option<usize>,
+    pub slo_ttft_ms: Option<f64>,
+    pub max_preemptions: Option<usize>,
+}
+
+/// Control-plane message riding the same request channel as generation
+/// traffic (ordering with respect to arrivals is therefore well defined,
+/// which is what makes recorded control actions replayable).
+#[derive(Clone, Debug)]
+pub enum ControlMsg {
+    /// Cancel a request by serve-loop id (the id streamed back in
+    /// [`Event::Queued`]); releases its KV reservation, beam slots, and
+    /// any borrowed expert-cache capacity whether queued, prefilling, or
+    /// decoding.  Unknown/finished ids ack without effect.
+    Cancel { req: u64 },
+    /// Swap admission policy / budgets between iterations.
+    Reload(ReloadSpec),
+    /// Graceful drain: stop admission, fail queued requests, finish
+    /// in-flight sequences, then exit the serve loop cleanly.
+    Drain,
+}
+
+impl ControlMsg {
+    /// Label echoed in the [`Event::ControlAck`] and the TCP `ok` line.
+    pub fn op(&self) -> &'static str {
+        match self {
+            ControlMsg::Cancel { .. } => "cancel",
+            ControlMsg::Reload(_) => "reload",
+            ControlMsg::Drain => "drain",
+        }
+    }
+}
 
 /// A generation request.
 pub struct Request {
@@ -31,20 +117,31 @@ pub struct Request {
     pub width: usize,
     /// Relative TTFT service-level objective (virtual µs from enqueue);
     /// `None` uses the server's `--slo-ttft-ms` default.  Orders admission
-    /// in `--admission slo` mode.
+    /// in `--admission slo` mode.  Ordering only — see `deadline_us` for
+    /// the enforced variant.
     pub slo_us: Option<f64>,
+    /// Enforced end-to-end deadline (virtual µs from enqueue): the
+    /// scheduler fails the request with [`FailReason::Deadline`] at the
+    /// first chunk boundary past it.  `None` (default) = never enforced.
+    pub deadline_us: Option<f64>,
     /// Open-loop drivers: absolute virtual arrival time.  The scheduler
     /// holds the request until the virtual clock reaches it (and fast-
     /// forwards idle time to it), so Poisson traces replay exactly.
     pub arrive_at_us: Option<f64>,
-    /// Streamed output: one event per token, then `Done`.
+    /// Streamed output: `Queued{id}` at ingest, one event per token, then
+    /// `Done` (or a terminal `Failed`).
     pub stream: Sender<Event>,
     /// Shutdown sentinel: in-flight sequences drain, queued-but-never-
-    /// admitted requests get a terminal [`Event::Error`], then the loop
+    /// admitted requests get a terminal [`Event::Failed`], then the loop
     /// exits.  Needed because auxiliary front ends (TCP accept loop) hold
     /// Sender clones, so channel disconnection alone cannot signal
     /// shutdown.
     pub shutdown: bool,
+    /// Control-plane message: when `Some`, every other request field is
+    /// ignored and the scheduler applies the control at its next
+    /// iteration boundary (honoring `arrive_at_us` if set), answering
+    /// with [`Event::ControlAck`] on `stream`.
+    pub control: Option<ControlMsg>,
 }
 
 impl Request {
@@ -54,9 +151,11 @@ impl Request {
             max_new,
             width: 1,
             slo_us: None,
+            deadline_us: None,
             arrive_at_us: None,
             stream,
             shutdown: false,
+            control: None,
         }
     }
 
@@ -71,6 +170,11 @@ impl Request {
         Request { width, ..Request::new(prompt, max_new, stream) }
     }
 
+    /// A control-plane message (cancel / reload / drain).
+    pub fn control(msg: ControlMsg, stream: Sender<Event>) -> Request {
+        Request { control: Some(msg), ..Request::new(Vec::new(), 0, stream) }
+    }
+
     /// The shutdown sentinel.
     pub fn shutdown_sentinel() -> Request {
         let (tx, _rx) = channel();
@@ -80,9 +184,30 @@ impl Request {
 
 #[derive(Clone, Debug)]
 pub enum Event {
+    /// Ingest ack: the serve-loop id under which this request is tracked —
+    /// the handle a client needs to `Cancel` it later.
+    Queued(u64),
     Token(u32),
     Done(GenMetrics),
-    Error(String),
+    /// Terminal failure with a typed reason; `metrics` carries whatever
+    /// timing the request accrued before failing (with
+    /// [`GenMetrics::fail_reason`] stamped).
+    Failed { reason: FailReason, message: String, metrics: GenMetrics },
+    /// Terminal ack of a control-plane message.
+    ControlAck { op: &'static str },
+}
+
+impl Event {
+    /// Back-compat constructor for terminal errors without a typed
+    /// reason (ingest validation paths).
+    pub fn error(reason: FailReason, message: impl Into<String>) -> Event {
+        let message = message.into();
+        let metrics = GenMetrics {
+            fail_reason: Some(reason.label().to_string()),
+            ..Default::default()
+        };
+        Event::Failed { reason, message, metrics }
+    }
 }
 
 /// Run the serving loop until `requests` disconnects and all work drains.
@@ -135,6 +260,14 @@ impl ServerHandle {
         rx
     }
 
+    /// Send a control-plane message (cancel / reload / drain); the
+    /// returned receiver yields the terminal [`Event::ControlAck`].
+    pub fn control(&self, msg: ControlMsg) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        self.requests.send(Request::control(msg, tx)).expect("server thread gone");
+        rx
+    }
+
     /// Signal shutdown (drains in-flight work, fails queued-but-never-
     /// admitted requests with a terminal event) and join the worker.
     pub fn shutdown(self) -> Result<()> {
@@ -144,14 +277,50 @@ impl ServerHandle {
     }
 }
 
+/// Terminal outcome of one request stream: either completed tokens +
+/// metrics, or a typed failure (whose partial metrics are still kept for
+/// per-reason accounting).
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub tokens: Vec<u32>,
+    pub metrics: GenMetrics,
+    pub failure: Option<(FailReason, String)>,
+}
+
+impl Outcome {
+    pub fn completed(&self) -> bool {
+        self.failure.is_none()
+    }
+}
+
+/// Drain a stream to its terminal event, keeping the typed failure
+/// instead of erasing it into an `anyhow` error.  Returns `Err` only if
+/// the sender vanished without a terminal event.
+pub fn collect_outcome(rx: &Receiver<Event>) -> Result<Outcome> {
+    let mut tokens = Vec::new();
+    loop {
+        match rx.recv()? {
+            Event::Queued(_) | Event::ControlAck { .. } => {}
+            Event::Token(t) => tokens.push(t),
+            Event::Done(m) => {
+                return Ok(Outcome { tokens, metrics: m, failure: None })
+            }
+            Event::Failed { reason, message, metrics } => {
+                return Ok(Outcome { tokens, metrics, failure: Some((reason, message)) })
+            }
+        }
+    }
+}
+
 /// Collect a full generation from a stream (blocking helper for clients).
 pub fn collect(rx: &Receiver<Event>) -> Result<(Vec<u32>, GenMetrics)> {
     let mut tokens = Vec::new();
     loop {
         match rx.recv()? {
+            Event::Queued(_) | Event::ControlAck { .. } => {}
             Event::Token(t) => tokens.push(t),
             Event::Done(m) => return Ok((tokens, m)),
-            Event::Error(e) => anyhow::bail!("server error: {e}"),
+            Event::Failed { message, .. } => anyhow::bail!("server error: {message}"),
         }
     }
 }

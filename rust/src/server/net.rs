@@ -2,33 +2,100 @@
 //!
 //! Protocol (one JSON object per line):
 //!   client -> {"prompt": [1, 2, 3], "max_new": 16}
-//!             optional: "width": W   (beam search; winning beam streams
-//!                                     when the group finishes)
-//!                       "slo_ms": D  (TTFT deadline for --admission slo)
-//!   server -> {"token": 42}            (streamed, one per generated token)
+//!             optional: "width": W       (beam search; winning beam
+//!                                         streams when the group finishes)
+//!                       "slo_ms": D      (TTFT deadline for --admission slo;
+//!                                         ordering only)
+//!                       "deadline_ms": D (ENFORCED end-to-end deadline:
+//!                                         past it the request fails with
+//!                                         reason "deadline")
+//!   client -> {"cancel": ID}             (ID from the "queued" ack line)
+//!   client -> {"reload": {"admission": "slo", "kv_budget_mb": 512,
+//!              "prefill_chunk": 32, "prefill_tokens": 128,
+//!              "slo_ttft_ms": 250, "max_preemptions": 2}}   (all optional)
+//!   client -> {"drain": true}            (graceful drain, then exit)
+//!   server -> {"queued": ID}             (ingest ack: the cancel handle)
+//!   server -> {"token": 42}              (streamed, one per token)
 //!   server -> {"done": true, "ttft_us": ..., "queue_delay_us": ...,
 //!              "mean_itl_us": ..., "tokens_per_s": ...,
 //!              "prompt_tokens": ..., "output_tokens": ...,
 //!              "cache": {...}, "experts": {...}}   (optional counters)
-//!   server -> {"error": "..."}         (on bad requests)
+//!   server -> {"error": "...", "reason": "bad_request" | "deadline" |
+//!              "cancelled" | "timeout" | ...}      (typed terminal)
+//!   server -> {"ok": "cancel" | "reload" | "drain"}  (control ack)
 //!
 //! Wire encoding is the shared [`crate::events::wire_event_json`] encoder
 //! — the same `GenMetrics::to_json` shape the trace tooling parses.
+//!
+//! Robustness: request lines are capped at [`MAX_LINE_BYTES`] (an
+//! oversized line gets a typed error and the connection closes — the
+//! parser never buffers unbounded garbage), and `--conn-timeout-ms N`
+//! arms a per-connection read timeout (an idle connection gets a typed
+//! "timeout" error line, then closes).
 //!
 //! The listener thread accepts connections and forwards requests into the
 //! engine worker's queue (`serve_loop`); one relay thread per connection
 //! streams events back.  `fiddler serve --listen 127.0.0.1:PORT` wires it.
 
-use super::{Event, Request};
+use super::{ControlMsg, Event, FailReason, ReloadSpec, Request, MAX_REQUEST_TOKENS};
+use crate::config::serving::AdmissionKind;
 use crate::util::json::Json;
 use anyhow::Result;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Sender};
 
-/// Parse one request line into (prompt, max_new, width, slo_us).
-fn parse_request(line: &str) -> Result<(Vec<u32>, usize, usize, Option<f64>)> {
+/// Hard cap on one request line: a client that streams an endless line
+/// gets a typed error instead of an unbounded buffer.
+pub const MAX_LINE_BYTES: u64 = 1 << 20;
+
+/// One parsed client line: a generation request or a control message.
+#[derive(Debug)]
+enum Parsed {
+    Gen {
+        prompt: Vec<u32>,
+        max_new: usize,
+        width: usize,
+        slo_us: Option<f64>,
+        deadline_us: Option<f64>,
+    },
+    Control(ControlMsg),
+}
+
+/// Parse one request line (generation or control).
+fn parse_request(line: &str) -> Result<Parsed> {
     let v = Json::parse(line)?;
+    if let Ok(id) = v.get("cancel") {
+        return Ok(Parsed::Control(ControlMsg::Cancel { req: id.as_usize()? as u64 }));
+    }
+    if let Ok(d) = v.get("drain") {
+        anyhow::ensure!(d.as_bool()?, "drain must be true");
+        return Ok(Parsed::Control(ControlMsg::Drain));
+    }
+    if let Ok(spec) = v.get("reload") {
+        let mut r = ReloadSpec::default();
+        if let Ok(a) = spec.get("admission") {
+            r.admission = Some(AdmissionKind::by_name(a.as_str()?)?);
+        }
+        if let Ok(x) = spec.get("kv_budget_mb") {
+            r.kv_budget_mb = Some(x.as_usize()?);
+        }
+        if let Ok(x) = spec.get("prefill_chunk") {
+            r.prefill_chunk = Some(x.as_usize()?);
+        }
+        if let Ok(x) = spec.get("prefill_tokens") {
+            r.prefill_tokens = Some(x.as_usize()?);
+        }
+        if let Ok(x) = spec.get("slo_ttft_ms") {
+            let ms = x.as_f64()?;
+            anyhow::ensure!(ms > 0.0, "slo_ttft_ms must be positive");
+            r.slo_ttft_ms = Some(ms);
+        }
+        if let Ok(x) = spec.get("max_preemptions") {
+            r.max_preemptions = Some(x.as_usize()?);
+        }
+        return Ok(Parsed::Control(ControlMsg::Reload(r)));
+    }
     let prompt = v
         .get("prompt")?
         .as_arr()?
@@ -36,60 +103,136 @@ fn parse_request(line: &str) -> Result<(Vec<u32>, usize, usize, Option<f64>)> {
         .map(|t| Ok(t.as_usize()? as u32))
         .collect::<Result<Vec<u32>>>()?;
     let max_new = v.get("max_new")?.as_usize()?;
-    anyhow::ensure!(max_new > 0 && max_new <= 4096, "max_new out of range");
+    anyhow::ensure!(max_new > 0 && max_new <= MAX_REQUEST_TOKENS, "max_new out of range");
+    anyhow::ensure!(
+        prompt.len() + max_new <= MAX_REQUEST_TOKENS,
+        "prompt + max_new exceeds {MAX_REQUEST_TOKENS} tokens"
+    );
     let width = match v.get("width") {
         Ok(w) => w.as_usize()?,
         Err(_) => 1,
     };
     anyhow::ensure!(width >= 1 && width <= 16, "width out of range");
-    let slo_us = match v.get("slo_ms") {
-        Ok(d) => {
-            let ms = d.as_f64()?;
-            anyhow::ensure!(ms > 0.0, "slo_ms must be positive");
-            Some(ms * 1e3)
+    let ms_field = |key: &str| -> Result<Option<f64>> {
+        match v.get(key) {
+            Ok(d) => {
+                let ms = d.as_f64()?;
+                anyhow::ensure!(ms > 0.0, "{key} must be positive");
+                Ok(Some(ms * 1e3))
+            }
+            Err(_) => Ok(None),
         }
-        Err(_) => None,
     };
-    Ok((prompt, max_new, width, slo_us))
+    let slo_us = ms_field("slo_ms")?;
+    let deadline_us = ms_field("deadline_ms")?;
+    Ok(Parsed::Gen { prompt, max_new, width, slo_us, deadline_us })
 }
 
 fn event_line(ev: &Event) -> String {
     format!("{}\n", crate::events::wire_event_json(ev))
 }
 
-fn handle_conn(stream: TcpStream, requests: Sender<Request>) {
+/// Read one `\n`-terminated line, enforcing [`MAX_LINE_BYTES`].
+/// `Ok(None)` = clean EOF; `Err(Oversized)` = cap blown (connection must
+/// close — the rest of the line is unread garbage); `Err(Io)` = socket
+/// error or read timeout.
+enum LineErr {
+    Oversized,
+    Io(std::io::Error),
+}
+
+fn read_capped_line<R: BufRead>(reader: &mut R) -> std::result::Result<Option<String>, LineErr> {
+    let mut buf = Vec::new();
+    let n = reader
+        .by_ref()
+        .take(MAX_LINE_BYTES)
+        .read_until(b'\n', &mut buf)
+        .map_err(LineErr::Io)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if buf.last() != Some(&b'\n') && n as u64 == MAX_LINE_BYTES {
+        return Err(LineErr::Oversized);
+    }
+    Ok(Some(String::from_utf8_lossy(&buf).trim().to_string()))
+}
+
+fn handle_conn(stream: TcpStream, requests: Sender<Request>, conn_timeout_ms: u64) {
     let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-    let reader = BufReader::new(match stream.try_clone() {
+    if conn_timeout_ms > 0 {
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_millis(conn_timeout_ms)))
+            .ok();
+    }
+    let mut reader = BufReader::new(match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     });
     let mut writer = stream;
-    for line in reader.lines() {
-        let line = match line {
-            Ok(l) if !l.trim().is_empty() => l,
-            Ok(_) => continue,
-            Err(_) => break,
+    loop {
+        let line = match read_capped_line(&mut reader) {
+            Ok(Some(l)) if !l.is_empty() => l,
+            Ok(Some(_)) => continue,
+            Ok(None) => break,
+            Err(LineErr::Oversized) => {
+                let _ = writer.write_all(
+                    event_line(&Event::error(
+                        FailReason::BadRequest,
+                        format!("bad request: line exceeds {MAX_LINE_BYTES} bytes"),
+                    ))
+                    .as_bytes(),
+                );
+                break;
+            }
+            Err(LineErr::Io(e))
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                let _ = writer.write_all(
+                    event_line(&Event::error(
+                        FailReason::Timeout,
+                        format!("connection idle past --conn-timeout-ms {conn_timeout_ms}"),
+                    ))
+                    .as_bytes(),
+                );
+                break;
+            }
+            Err(LineErr::Io(_)) => break,
         };
-        let (prompt, max_new, width, slo_us) = match parse_request(&line) {
-            Ok(r) => r,
+        let parsed = match parse_request(&line) {
+            Ok(p) => p,
             Err(e) => {
                 let _ = writer.write_all(
-                    event_line(&Event::Error(format!("bad request: {e}"))).as_bytes(),
+                    event_line(&Event::error(FailReason::BadRequest, format!("bad request: {e}")))
+                        .as_bytes(),
                 );
                 continue;
             }
         };
         let (tx, rx) = channel();
-        let req = Request { width, slo_us, ..Request::new(prompt, max_new, tx) };
+        let req = match parsed {
+            Parsed::Gen { prompt, max_new, width, slo_us, deadline_us } => Request {
+                width,
+                slo_us,
+                deadline_us,
+                ..Request::new(prompt, max_new, tx)
+            },
+            Parsed::Control(msg) => Request::control(msg, tx),
+        };
         if requests.send(req).is_err() {
-            let _ = writer
-                .write_all(event_line(&Event::Error("server shutting down".into())).as_bytes());
+            let _ = writer.write_all(
+                event_line(&Event::error(FailReason::Shutdown, "server shutting down"))
+                    .as_bytes(),
+            );
             break;
         }
         // Relay the stream back; one request at a time per connection.
         let mut ok = true;
         for ev in rx.iter() {
-            let done = matches!(ev, Event::Done(_) | Event::Error(_));
+            let done =
+                matches!(ev, Event::Done(_) | Event::Failed { .. } | Event::ControlAck { .. });
             if writer.write_all(event_line(&ev).as_bytes()).is_err() {
                 ok = false;
                 break;
@@ -108,13 +251,18 @@ fn handle_conn(stream: TcpStream, requests: Sender<Request>) {
 
 /// Accept-loop: forwards socket requests into the engine queue.  Returns
 /// when the listener errors or `requests`' receiver hangs up (detected on
-/// the next accepted connection).
-pub fn serve_tcp(listener: TcpListener, requests: Sender<Request>) -> Result<()> {
+/// the next accepted connection).  `conn_timeout_ms` > 0 arms a
+/// per-connection read timeout.
+pub fn serve_tcp(
+    listener: TcpListener,
+    requests: Sender<Request>,
+    conn_timeout_ms: u64,
+) -> Result<()> {
     for stream in listener.incoming() {
         let stream = stream?;
         stream.set_nodelay(true).ok();
         let tx = requests.clone();
-        std::thread::spawn(move || handle_conn(stream, tx));
+        std::thread::spawn(move || handle_conn(stream, tx, conn_timeout_ms));
     }
     Ok(())
 }
@@ -129,18 +277,66 @@ mod tests {
 
     #[test]
     fn parse_request_validates() {
-        let (p, n, w, slo) = parse_request(r#"{"prompt": [1, 2], "max_new": 4}"#).unwrap();
-        assert_eq!((p, n, w, slo), (vec![1, 2], 4, 1, None));
-        let (_, _, w, slo) =
-            parse_request(r#"{"prompt": [1], "max_new": 4, "width": 8, "slo_ms": 250}"#)
-                .unwrap();
-        assert_eq!(w, 8);
-        assert_eq!(slo, Some(250_000.0));
+        let Parsed::Gen { prompt, max_new, width, slo_us, deadline_us } =
+            parse_request(r#"{"prompt": [1, 2], "max_new": 4}"#).unwrap()
+        else {
+            panic!("expected gen request")
+        };
+        assert_eq!(
+            (prompt, max_new, width, slo_us, deadline_us),
+            (vec![1, 2], 4, 1, None, None)
+        );
+        let Parsed::Gen { width, slo_us, deadline_us, .. } = parse_request(
+            r#"{"prompt": [1], "max_new": 4, "width": 8, "slo_ms": 250, "deadline_ms": 800}"#,
+        )
+        .unwrap() else {
+            panic!("expected gen request")
+        };
+        assert_eq!(width, 8);
+        assert_eq!(slo_us, Some(250_000.0));
+        assert_eq!(deadline_us, Some(800_000.0));
         assert!(parse_request(r#"{"prompt": "x", "max_new": 4}"#).is_err());
         assert!(parse_request(r#"{"prompt": [1], "max_new": 0}"#).is_err());
         assert!(parse_request(r#"{"prompt": [1], "max_new": 4, "width": 0}"#).is_err());
         assert!(parse_request(r#"{"prompt": [1], "max_new": 4, "width": 99}"#).is_err());
+        assert!(parse_request(r#"{"prompt": [1], "max_new": 4, "deadline_ms": -5}"#).is_err());
         assert!(parse_request("garbage").is_err());
+    }
+
+    #[test]
+    fn parse_request_controls() {
+        let Parsed::Control(ControlMsg::Cancel { req }) =
+            parse_request(r#"{"cancel": 7}"#).unwrap()
+        else {
+            panic!("expected cancel")
+        };
+        assert_eq!(req, 7);
+        assert!(matches!(
+            parse_request(r#"{"drain": true}"#).unwrap(),
+            Parsed::Control(ControlMsg::Drain)
+        ));
+        assert!(parse_request(r#"{"drain": false}"#).is_err());
+        let Parsed::Control(ControlMsg::Reload(spec)) = parse_request(
+            r#"{"reload": {"admission": "slo", "kv_budget_mb": 512, "max_preemptions": 2}}"#,
+        )
+        .unwrap() else {
+            panic!("expected reload")
+        };
+        assert_eq!(spec.admission, Some(AdmissionKind::Deadline));
+        assert_eq!(spec.kv_budget_mb, Some(512));
+        assert_eq!(spec.max_preemptions, Some(2));
+        assert_eq!(spec.prefill_chunk, None);
+        assert!(parse_request(r#"{"reload": {"admission": "wedge"}}"#).is_err());
+    }
+
+    #[test]
+    fn capped_line_reader_enforces_cap() {
+        let mut small = std::io::Cursor::new(b"hello\nworld\n".to_vec());
+        assert_eq!(read_capped_line(&mut small).ok().flatten().unwrap(), "hello");
+        assert_eq!(read_capped_line(&mut small).ok().flatten().unwrap(), "world");
+        assert!(read_capped_line(&mut small).ok().flatten().is_none(), "EOF");
+        let mut huge = std::io::Cursor::new(vec![b'x'; MAX_LINE_BYTES as usize + 10]);
+        assert!(matches!(read_capped_line(&mut huge), Err(LineErr::Oversized)));
     }
 
     #[test]
@@ -180,15 +376,18 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let req_tx = handle.requests.clone();
-        std::thread::spawn(move || serve_tcp(listener, req_tx));
+        std::thread::spawn(move || serve_tcp(listener, req_tx, 0));
 
         let mut sock = TcpStream::connect(addr).unwrap();
         sock.write_all(b"{\"prompt\": [1, 2, 3, 4], \"max_new\": 3}\n").unwrap();
         let mut tokens = Vec::new();
+        let mut queued = false;
         let mut done = false;
         for line in BufReader::new(sock.try_clone().unwrap()).lines() {
             let v = Json::parse(&line.unwrap()).unwrap();
-            if let Ok(t) = v.get("token") {
+            if v.get("queued").is_ok() {
+                queued = true;
+            } else if let Ok(t) = v.get("token") {
                 tokens.push(t.as_usize().unwrap());
             } else if v.get("done").is_ok() {
                 assert!(v.get("tokens_per_s").unwrap().as_f64().unwrap() > 0.0);
@@ -196,6 +395,7 @@ mod tests {
                 break;
             }
         }
+        assert!(queued, "ingest must ack with the serve-loop id");
         assert!(done);
         assert_eq!(tokens.len(), 3);
         drop(sock);
@@ -203,7 +403,7 @@ mod tests {
     }
 
     #[test]
-    fn tcp_bad_request_gets_error_line() {
+    fn tcp_bad_request_gets_typed_error_line() {
         let hw = HardwareConfig::env1();
         let handle = ServerHandle::spawn(move || {
             figures::make_engine("mixtral-tiny", &hw, Policy::Fiddler, 0)
@@ -211,13 +411,38 @@ mod tests {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         let req_tx = handle.requests.clone();
-        std::thread::spawn(move || serve_tcp(listener, req_tx));
+        std::thread::spawn(move || serve_tcp(listener, req_tx, 0));
 
         let mut sock = TcpStream::connect(addr).unwrap();
         sock.write_all(b"not json\n").unwrap();
         let mut line = String::new();
         BufReader::new(sock.try_clone().unwrap()).read_line(&mut line).unwrap();
-        assert!(Json::parse(line.trim()).unwrap().get("error").is_ok());
+        let v = Json::parse(line.trim()).unwrap();
+        assert!(v.get("error").is_ok());
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(), "bad_request");
+        drop(sock);
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn tcp_idle_connection_times_out_with_typed_error() {
+        let hw = HardwareConfig::env1();
+        let handle = ServerHandle::spawn(move || {
+            figures::make_engine("mixtral-tiny", &hw, Policy::Fiddler, 0)
+        });
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let req_tx = handle.requests.clone();
+        std::thread::spawn(move || serve_tcp(listener, req_tx, 50));
+
+        let sock = TcpStream::connect(addr).unwrap();
+        // Send nothing: the 50 ms read timeout must answer with a typed
+        // "timeout" error line and close.
+        let mut line = String::new();
+        BufReader::new(sock.try_clone().unwrap()).read_line(&mut line).unwrap();
+        let v = Json::parse(line.trim()).unwrap();
+        assert!(v.get("error").is_ok());
+        assert_eq!(v.get("reason").unwrap().as_str().unwrap(), "timeout");
         drop(sock);
         handle.shutdown().unwrap();
     }

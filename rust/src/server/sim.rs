@@ -17,7 +17,7 @@
 //! per-request cache-stat deltas have real counters to attribute.
 
 use super::lifecycle::{serve_lifecycle, ServeBackend};
-use super::{collect, Request};
+use super::{collect_outcome, ControlMsg, Request};
 use crate::config::serving::ServingConfig;
 use crate::config::ModelConfig;
 use crate::coordinator::engine::sample_token;
@@ -29,6 +29,84 @@ use crate::util::rng::Rng;
 use crate::workload::{Dataset, PoissonArrivals, WorkloadGen};
 use anyhow::Result;
 
+/// Deterministic fault-injection layer for the sim backend: a seeded RNG
+/// draws once per fault class per backend step, in a fixed order
+/// (stall, spike, err), so the whole fault schedule is a pure function of
+/// `(--faults, --fault-seed)` and the backend call sequence — which is
+/// exactly what lets a recorded faulty run replay bit-identically.
+///
+/// Spec grammar (`--faults`): comma-separated `stall=P:US`, `spike=P:US`,
+/// `err=P` — probabilities in [0,1], delays in virtual µs.  E.g.
+/// `stall=0.05:30000,err=0.01`: 5% of steps stall 30 ms (a CPU-GPU
+/// transfer hiccup), 1% fail outright.
+#[derive(Debug)]
+pub struct FailPoints {
+    pub enabled: bool,
+    /// P(transfer stall) per backend step, and its virtual-µs delay.
+    pub stall_p: f64,
+    pub stall_us: f64,
+    /// P(step-time spike) per backend step, and its virtual-µs delay.
+    pub spike_p: f64,
+    pub spike_us: f64,
+    /// P(backend step error) per backend step.
+    pub err_p: f64,
+    rng: Rng,
+}
+
+impl FailPoints {
+    pub fn disabled() -> FailPoints {
+        FailPoints {
+            enabled: false,
+            stall_p: 0.0,
+            stall_us: 0.0,
+            spike_p: 0.0,
+            spike_us: 0.0,
+            err_p: 0.0,
+            rng: Rng::new(0),
+        }
+    }
+
+    /// Parse a `--faults` spec.  An empty spec is the disabled layer.
+    pub fn parse(spec: &str, seed: u64) -> Result<FailPoints> {
+        let mut fp = FailPoints { rng: Rng::new(seed ^ 0xFA17), ..FailPoints::disabled() };
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--faults: expected key=value in {part:?}"))?;
+            let parse_p = |s: &str| -> Result<f64> {
+                let p: f64 = s
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--faults: bad probability {s:?} in {part:?}"))?;
+                anyhow::ensure!((0.0..=1.0).contains(&p), "--faults: probability {p} not in [0,1]");
+                Ok(p)
+            };
+            match key {
+                "stall" | "spike" => {
+                    let (p, us) = val.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("--faults: {key} needs prob:delay_us, got {val:?}")
+                    })?;
+                    let p = parse_p(p)?;
+                    let us: f64 = us.parse().map_err(|_| {
+                        anyhow::anyhow!("--faults: bad delay {us:?} in {part:?}")
+                    })?;
+                    anyhow::ensure!(us >= 0.0, "--faults: negative delay in {part:?}");
+                    if key == "stall" {
+                        fp.stall_p = p;
+                        fp.stall_us = us;
+                    } else {
+                        fp.spike_p = p;
+                        fp.spike_us = us;
+                    }
+                }
+                "err" => fp.err_p = parse_p(val)?,
+                _ => anyhow::bail!("--faults: unknown fault class {key:?} (stall|spike|err)"),
+            }
+        }
+        fp.enabled = fp.stall_p > 0.0 || fp.spike_p > 0.0 || fp.err_p > 0.0;
+        Ok(fp)
+    }
+}
+
 pub struct SimBackend {
     pub serving: ServingConfig,
     cfg: ModelConfig,
@@ -37,6 +115,7 @@ pub struct SimBackend {
     rng: Rng,
     sink: crate::events::EventSink,
     events: crate::moe::ExpertEvents,
+    faults: FailPoints,
     /// Fixed per-chunk cost (expert-base amortization lost to chunking).
     pub prefill_chunk_base_us: f64,
     pub prefill_per_token_us: f64,
@@ -47,6 +126,16 @@ pub struct SimBackend {
 impl SimBackend {
     pub fn new(serving: ServingConfig) -> SimBackend {
         let rng = Rng::new(serving.seed ^ 0x51A4);
+        let faults = match serving.faults.as_deref() {
+            Some(spec) => match FailPoints::parse(spec, serving.fault_seed) {
+                Ok(fp) => fp,
+                Err(e) => {
+                    eprintln!("warning: ignoring --faults: {e}");
+                    FailPoints::disabled()
+                }
+            },
+            None => FailPoints::disabled(),
+        };
         SimBackend {
             cfg: ModelConfig::test_tiny(),
             clock: VirtualClock::new(),
@@ -54,12 +143,55 @@ impl SimBackend {
             rng,
             sink: crate::events::EventSink::disabled(),
             events: crate::moe::ExpertEvents::default(),
+            faults,
             prefill_chunk_base_us: 2_000.0,
             prefill_per_token_us: 1_000.0,
             decode_base_us: 20_000.0,
             decode_per_seq_us: 2_000.0,
             serving,
         }
+    }
+
+    /// One fault-injection pass at a backend step boundary: always three
+    /// RNG draws (stall, spike, err — fixed order) when enabled, so the
+    /// draw stream stays aligned across runs regardless of which faults
+    /// fire.  Stalls/spikes burn extra virtual time; an err aborts the
+    /// step.
+    fn apply_faults(&mut self, site: &'static str) -> Result<()> {
+        if !self.faults.enabled {
+            return Ok(());
+        }
+        let stall = self.faults.rng.f64() < self.faults.stall_p;
+        let spike = self.faults.rng.f64() < self.faults.spike_p;
+        let err = self.faults.rng.f64() < self.faults.err_p;
+        if stall {
+            self.clock.advance_us(self.faults.stall_us);
+            let (t, us) = (self.clock.now_us(), self.faults.stall_us);
+            self.sink.emit_with(|| crate::events::TraceEvent::FaultInjected {
+                t_us: t,
+                kind: format!("stall:{site}"),
+                delay_us: us,
+            });
+        }
+        if spike {
+            self.clock.advance_us(self.faults.spike_us);
+            let (t, us) = (self.clock.now_us(), self.faults.spike_us);
+            self.sink.emit_with(|| crate::events::TraceEvent::FaultInjected {
+                t_us: t,
+                kind: format!("spike:{site}"),
+                delay_us: us,
+            });
+        }
+        if err {
+            let t = self.clock.now_us();
+            self.sink.emit_with(|| crate::events::TraceEvent::FaultInjected {
+                t_us: t,
+                kind: format!("err:{site}"),
+                delay_us: 0.0,
+            });
+            anyhow::bail!("injected backend fault ({site})");
+        }
+        Ok(())
     }
 
     pub fn expert_cache(&self) -> &ExpertCache {
@@ -140,6 +272,7 @@ impl ServeBackend for SimBackend {
         is_last: bool,
     ) -> Result<Option<Vec<f32>>> {
         anyhow::ensure!(!chunk.is_empty(), "empty prefill chunk");
+        self.apply_faults("prefill")?;
         self.clock
             .advance_us(self.prefill_chunk_base_us + chunk.len() as f64 * self.prefill_per_token_us);
         self.cache.set_time_hint(self.clock.now_us());
@@ -155,6 +288,10 @@ impl ServeBackend for SimBackend {
         caches: &mut [&mut SequenceCache],
     ) -> Result<Vec<Vec<f32>>> {
         assert_eq!(last.len(), caches.len());
+        // Single injection site for decode: `decode_sample` routes through
+        // here (SimBackend keeps the default), so fused and unfused paths
+        // share one draw stream.
+        self.apply_faults("decode")?;
         self.clock
             .advance_us(self.decode_base_us + last.len() as f64 * self.decode_per_seq_us);
         self.cache.set_time_hint(self.clock.now_us());
@@ -198,6 +335,21 @@ pub struct LoadSpec {
     pub long_every: usize,
     pub long_inp: usize,
     pub seed: u64,
+    /// Every `tight_every`-th request carries an ENFORCED end-to-end
+    /// deadline of `tight_deadline_us` (and the same value as its
+    /// admission SLO) — the tight-SLO traffic preemption exists to save.
+    /// 0 = no deadline-carrying requests.
+    pub tight_every: usize,
+    pub tight_deadline_us: f64,
+    /// Every `cancel_every`-th request is cancelled `cancel_after_us`
+    /// virtual µs after its arrival (serve-loop ids equal submission
+    /// index for open-loop monotone arrivals, so the driver can address
+    /// them up front).  0 = no cancellations.
+    pub cancel_every: usize,
+    pub cancel_after_us: f64,
+    /// Scripted control-plane actions: `(virtual_t_us, msg)` — reloads
+    /// and drains injected mid-run.
+    pub controls: Vec<(f64, ControlMsg)>,
 }
 
 impl Default for LoadSpec {
@@ -210,6 +362,11 @@ impl Default for LoadSpec {
             long_every: 8,
             long_inp: 320,
             seed: 11,
+            tight_every: 0,
+            tight_deadline_us: 0.0,
+            cancel_every: 0,
+            cancel_after_us: 0.0,
+            controls: Vec::new(),
         }
     }
 }
@@ -218,8 +375,19 @@ impl Default for LoadSpec {
 #[derive(Debug, Default)]
 pub struct LoadReport {
     pub completed: usize,
-    /// Terminal-error outcomes (queue-full / KV-infeasible rejections).
+    /// Terminal-failure outcomes of any kind (rejections, deadlines,
+    /// cancellations, faults, shutdown) — `reasons` has the breakdown.
     pub rejected: usize,
+    /// Failure count per typed reason label ("deadline", "cancelled",
+    /// "queue_full", ...).
+    pub reasons: std::collections::BTreeMap<String, usize>,
+    /// Deadline-carrying requests sent / completed within their deadline.
+    /// (Deadline enforcement fails a request the moment it lapses, so
+    /// completion implies attainment.)
+    pub slo_eligible: usize,
+    pub slo_attained: usize,
+    /// Total preemptions across completed requests.
+    pub preemptions: usize,
     /// First arrival to last token, virtual seconds.
     pub makespan_s: f64,
     pub output_tokens: usize,
@@ -233,6 +401,15 @@ impl LoadReport {
         }
         self.output_tokens as f64 / self.makespan_s
     }
+
+    /// Fraction of deadline-carrying requests that finished in time
+    /// (1.0 when the workload had none).
+    pub fn slo_attainment(&self) -> f64 {
+        if self.slo_eligible == 0 {
+            return 1.0;
+        }
+        self.slo_attained as f64 / self.slo_eligible as f64
+    }
 }
 
 /// Replay an open-loop Poisson workload through the lifecycle scheduler
@@ -244,6 +421,8 @@ pub fn run_open_loop(serving: ServingConfig, spec: &LoadSpec) -> Result<LoadRepo
     let mut gen = WorkloadGen::new(Dataset::sharegpt(), 512, spec.seed ^ 0x10AD);
     let (tx, rx) = std::sync::mpsc::channel();
     let mut first_arrival_us = f64::INFINITY;
+    let mut tight: Vec<bool> = vec![false; spec.n_requests];
+    let mut control_rx = Vec::new();
     let receivers: Vec<_> = (0..spec.n_requests)
         .map(|i| {
             let len = if spec.long_every > 0 && i % spec.long_every == spec.long_every - 1 {
@@ -256,10 +435,31 @@ pub fn run_open_loop(serving: ServingConfig, spec: &LoadSpec) -> Result<LoadRepo
             let t = arrivals.next_arrival_us();
             first_arrival_us = first_arrival_us.min(t);
             r.arrive_at_us = Some(t);
+            if spec.tight_every > 0 && i % spec.tight_every == spec.tight_every - 1 {
+                r.slo_us = Some(spec.tight_deadline_us);
+                r.deadline_us = Some(spec.tight_deadline_us);
+                tight[i] = true;
+            }
+            if spec.cancel_every > 0 && i % spec.cancel_every == spec.cancel_every - 1 {
+                // Open-loop arrivals are monotone, so serve-loop ids equal
+                // submission index: the cancel can be addressed up front.
+                let (ctx, crx) = std::sync::mpsc::channel();
+                let mut c = Request::control(ControlMsg::Cancel { req: i as u64 }, ctx);
+                c.arrive_at_us = Some(t + spec.cancel_after_us);
+                tx.send(c).expect("loop not started yet");
+                control_rx.push(crx);
+            }
             tx.send(r).expect("loop not started yet");
             erx
         })
         .collect();
+    for (t, msg) in &spec.controls {
+        let (ctx, crx) = std::sync::mpsc::channel();
+        let mut c = Request::control(msg.clone(), ctx);
+        c.arrive_at_us = Some(*t);
+        tx.send(c).expect("loop not started yet");
+        control_rx.push(crx);
+    }
     let mut sentinel = Request::shutdown_sentinel();
     sentinel.arrive_at_us = Some(1e15); // fires once the loop idles out
     tx.send(sentinel).expect("loop not started yet");
@@ -269,17 +469,32 @@ pub fn run_open_loop(serving: ServingConfig, spec: &LoadSpec) -> Result<LoadRepo
     drop(tx);
 
     let mut report = LoadReport::default();
-    for rx in &receivers {
-        match collect(rx) {
-            Ok((tokens, m)) => {
+    for (i, rx) in receivers.iter().enumerate() {
+        if tight[i] {
+            report.slo_eligible += 1;
+        }
+        match collect_outcome(rx) {
+            Ok(o) if o.completed() => {
                 report.completed += 1;
-                report.output_tokens += tokens.len();
-                if let Some(&t) = m.token_done_us.last() {
+                report.output_tokens += o.tokens.len();
+                if let Some(&t) = o.metrics.token_done_us.last() {
                     report.makespan_s = report.makespan_s.max(t / 1e6);
                 }
-                report.agg.push(&m);
+                report.preemptions += o.metrics.preemptions;
+                if tight[i] {
+                    report.slo_attained += 1;
+                }
+                report.agg.push(&o.metrics);
             }
-            Err(_) => report.rejected += 1,
+            Ok(o) => {
+                report.rejected += 1;
+                let label = o.failure.map(|(r, _)| r.label()).unwrap_or("unknown");
+                *report.reasons.entry(label.to_string()).or_insert(0) += 1;
+            }
+            Err(_) => {
+                report.rejected += 1;
+                *report.reasons.entry("disconnected".to_string()).or_insert(0) += 1;
+            }
         }
     }
     // makespan is "first arrival to last token", not "virtual epoch to
@@ -325,6 +540,7 @@ mod tests {
             long_every: 4,
             long_inp: 64,
             seed: 5,
+            ..LoadSpec::default()
         };
         let report = run_open_loop(ServingConfig::default(), &spec).unwrap();
         assert_eq!(report.completed, 12);
@@ -335,6 +551,58 @@ mod tests {
         // Open loop: the makespan at 3 req/s over 12 requests spans at
         // least the arrival horizon (~4 s mean).
         assert!(report.makespan_s > 1.0, "arrivals not replayed in virtual time");
+    }
+
+    #[test]
+    fn failpoints_parse_and_reject_junk() {
+        let fp = FailPoints::parse("stall=0.05:30000,spike=0.1:5000,err=0.01", 7).unwrap();
+        assert!(fp.enabled);
+        assert!((fp.stall_p - 0.05).abs() < 1e-12);
+        assert!((fp.stall_us - 30000.0).abs() < 1e-12);
+        assert!((fp.spike_p - 0.1).abs() < 1e-12);
+        assert!((fp.err_p - 0.01).abs() < 1e-12);
+        assert!(!FailPoints::parse("", 7).unwrap().enabled);
+        assert!(!FailPoints::parse("stall=0:1000,err=0", 7).unwrap().enabled);
+        assert!(FailPoints::parse("wedge=0.5", 7).is_err());
+        assert!(FailPoints::parse("err=1.5", 7).is_err());
+        assert!(FailPoints::parse("stall=0.5", 7).is_err(), "stall needs a delay");
+        assert!(FailPoints::parse("err", 7).is_err());
+    }
+
+    #[test]
+    fn injected_faults_are_seed_deterministic() {
+        let run = |fault_seed: u64| -> (usize, usize, f64) {
+            let serving = ServingConfig {
+                faults: Some("stall=0.2:30000,err=0.05".to_string()),
+                fault_seed,
+                ..ServingConfig::default()
+            };
+            let spec = LoadSpec { n_requests: 16, out: 8, ..LoadSpec::default() };
+            let r = run_open_loop(serving, &spec).unwrap();
+            (r.completed, r.rejected, r.makespan_s)
+        };
+        let a = run(3);
+        let b = run(3);
+        assert_eq!(a, b, "same fault seed must reproduce the same run");
+        assert!(a.1 > 0, "5% err rate over 16 requests x 8 tokens should kill at least one");
+        let c = run(1717);
+        assert!(a != c || a.1 == 0, "different fault seed should reshuffle the schedule");
+    }
+
+    #[test]
+    fn backend_errors_fail_requests_not_the_server() {
+        // err=1: every backend step fails — every request must come back
+        // with a typed backend failure, and the loop must still exit
+        // cleanly (no Err bubbled out of serve_lifecycle).
+        let serving = ServingConfig {
+            faults: Some("err=1".to_string()),
+            ..ServingConfig::default()
+        };
+        let spec = LoadSpec { n_requests: 4, out: 4, ..LoadSpec::default() };
+        let r = run_open_loop(serving, &spec).unwrap();
+        assert_eq!(r.completed, 0);
+        assert_eq!(r.rejected, 4);
+        assert_eq!(r.reasons.get("backend"), Some(&4));
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn spec() -> LoadSpec {
         long_every: 5,
         long_inp: 96,
         seed: 23,
+        ..LoadSpec::default()
     }
 }
 
@@ -173,6 +174,58 @@ fn expert_counters_surface_in_done_metrics_and_wire_line() {
     let e = wire.get("experts").unwrap();
     assert!(e.get("resident").is_ok() && e.get("prefetch_overlapped").is_ok());
     assert!(wire.get("mean_itl_us").unwrap().as_f64().unwrap() > 0.0);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn record_replay_survives_cancels_faults_reload_and_drain() {
+    // The PR 7 robustness surface folded into one trace: client cancels,
+    // seeded fault injection, a mid-run hot reload, and a drain — replay
+    // must still be bit-identical on the client-visible token streams.
+    let path = tmp_trace("robust-replay");
+    let serving = ServingConfig {
+        events_out: Some(path.display().to_string()),
+        faults: Some("stall=0.15:30000,spike=0.1:40000".into()),
+        fault_seed: 5,
+        prefill_tokens: 32,
+        max_preemptions: 1,
+        ..serving()
+    };
+    let spec = LoadSpec {
+        cancel_every: 5,
+        cancel_after_us: 60_000.0,
+        tight_every: 6,
+        tight_deadline_us: 2.5e6,
+        controls: vec![
+            (
+                4e5,
+                fiddler::server::ControlMsg::Reload(fiddler::server::ReloadSpec {
+                    prefill_chunk: Some(8),
+                    kv_budget_mb: Some(6),
+                    ..Default::default()
+                }),
+            ),
+            (3.0e6, fiddler::server::ControlMsg::Drain),
+        ],
+        ..spec()
+    };
+    let report = run_open_loop(serving, &spec).unwrap();
+    assert!(report.completed > 0, "workload too hostile: nothing completed");
+    assert!(report.rejected > 0, "expected at least the cancelled requests to fail");
+    assert!(report.reasons.contains_key("cancelled"), "reasons: {:?}", report.reasons);
+
+    let events = read_log(&path).unwrap();
+    let kinds: std::collections::BTreeSet<&str> = events.iter().map(|e| e.kind()).collect();
+    assert!(kinds.contains("request_cancelled"), "kinds: {kinds:?}");
+    assert!(kinds.contains("config_reloaded"), "kinds: {kinds:?}");
+    assert!(kinds.contains("drain_started"), "kinds: {kinds:?}");
+    assert!(kinds.contains("fault_injected"), "kinds: {kinds:?}");
+
+    let rec = fold_trace(&events);
+    assert_eq!(rec.controls.len(), 2, "reload + drain fold into the control timeline");
+    let outcomes = replay_trace(&rec).unwrap();
+    let diffs = diff_replay(&rec, &outcomes);
+    assert!(diffs.is_empty(), "replay diverged: {diffs:?}");
     std::fs::remove_file(&path).ok();
 }
 

@@ -11,7 +11,9 @@
 use fiddler::config::serving::{AdmissionKind, ServingConfig};
 use fiddler::metrics::GenMetrics;
 use fiddler::server::sim::SimBackend;
-use fiddler::server::{collect, serve_lifecycle, Request, ServeBackend, ServerHandle};
+use fiddler::server::{
+    collect, serve_lifecycle, ControlMsg, Event, ReloadSpec, Request, ServeBackend, ServerHandle,
+};
 use fiddler::util::stats::percentile;
 use std::sync::mpsc::channel;
 
@@ -21,12 +23,13 @@ struct Req {
     max_new: usize,
     width: usize,
     slo_us: Option<f64>,
+    deadline_us: Option<f64>,
     arrive_at_us: Option<f64>,
 }
 
 impl Req {
     fn new(prompt: Vec<u32>, max_new: usize) -> Req {
-        Req { prompt, max_new, width: 1, slo_us: None, arrive_at_us: None }
+        Req { prompt, max_new, width: 1, slo_us: None, deadline_us: None, arrive_at_us: None }
     }
 }
 
@@ -51,9 +54,11 @@ fn run_sim(
                 max_new: r.max_new,
                 width: r.width,
                 slo_us: r.slo_us,
+                deadline_us: r.deadline_us,
                 arrive_at_us: r.arrive_at_us,
                 stream: etx,
                 shutdown: false,
+                control: None,
             })
             .unwrap();
             erx
@@ -232,9 +237,11 @@ fn kv_budget_queues_borrows_and_rejects() {
             max_new: r.max_new,
             width: r.width,
             slo_us: r.slo_us,
+            deadline_us: r.deadline_us,
             arrive_at_us: r.arrive_at_us,
             stream: etx,
             shutdown: false,
+            control: None,
         })
         .unwrap();
         erx
@@ -370,6 +377,227 @@ fn invalid_requests_get_terminal_events() {
     );
     assert!(results[0].as_ref().unwrap_err().to_string().contains("empty prompt"));
     assert!(results[1].as_ref().unwrap_err().to_string().contains("width"));
+}
+
+// --- PR 7 robustness: cancel / preempt / deadline / reload / budget ---
+
+/// Send a pre-timed request and return its receiver (channel-level
+/// harness for tests that also need control messages).
+fn send_req(tx: &std::sync::mpsc::Sender<Request>, r: Req) -> std::sync::mpsc::Receiver<Event> {
+    let (etx, erx) = channel();
+    tx.send(Request {
+        prompt: r.prompt,
+        max_new: r.max_new,
+        width: r.width,
+        slo_us: r.slo_us,
+        deadline_us: r.deadline_us,
+        arrive_at_us: r.arrive_at_us,
+        stream: etx,
+        shutdown: false,
+        control: None,
+    })
+    .unwrap();
+    erx
+}
+
+/// Send a pre-timed control message and return its ack receiver.
+fn send_ctl(
+    tx: &std::sync::mpsc::Sender<Request>,
+    msg: ControlMsg,
+    at_us: f64,
+) -> std::sync::mpsc::Receiver<Event> {
+    let (etx, erx) = channel();
+    let mut c = Request::control(msg, etx);
+    c.arrive_at_us = Some(at_us);
+    tx.send(c).unwrap();
+    erx
+}
+
+/// Cancellation mid-flight releases the KV reservation AND the borrowed
+/// expert-cache capacity: a queued request blocked on the budget admits
+/// as soon as the running one is cancelled, and the cache is whole again
+/// once everything drains.
+#[test]
+fn cancel_releases_kv_and_borrowed_capacity() {
+    let serving = ServingConfig { kv_budget_mb: 100, max_batch: 8, ..Default::default() };
+    let mut backend = SimBackend::new(serving);
+    // Leave exactly one borrowable slot: a ~251 MiB reservation must
+    // borrow it, so the second request cannot fit until the first dies.
+    for i in 0..7 {
+        backend.expert_cache_mut().pin((1, i));
+    }
+    let (tx, rx) = channel();
+    let rx_a = send_req(&tx, Req::new(long_prompt(2000), 64)); // id 0, long decode
+    let rx_b = send_req(&tx, Req { arrive_at_us: Some(1_000.0), ..Req::new(long_prompt(2000), 4) });
+    // Cancel A mid-decode: prefill is ~2.0 s virtual, decode ~22 ms/step.
+    let rx_c = send_ctl(&tx, ControlMsg::Cancel { req: 0 }, 2_300_000.0);
+    let mut sentinel = Request::shutdown_sentinel();
+    sentinel.arrive_at_us = Some(1e15);
+    tx.send(sentinel).unwrap();
+    serve_lifecycle(&mut backend, rx).unwrap();
+    drop(tx);
+
+    let a_err = collect(&rx_a).expect_err("cancelled request must fail");
+    assert!(a_err.to_string().contains("request cancelled"), "{a_err}");
+    let b = collect(&rx_b).expect("B admits once A's reservation is released");
+    assert_eq!(b.0.len(), 4);
+    assert!(b.1.queue_delay_us() > 0.0, "B was blocked on the KV budget first");
+    assert!(
+        rx_c.try_iter().any(|e| matches!(e, Event::ControlAck { op: "cancel" })),
+        "cancel must be acked"
+    );
+    // Borrowed capacity is back once all reservations drained.
+    assert_eq!(backend.expert_cache().capacity(), 8);
+    assert_eq!(backend.expert_cache().pinned_count(), 7);
+}
+
+/// Preemption + requeue: an SLO-tight arrival that the KV budget would
+/// otherwise reject preempts the slackest decoding sequence, which is
+/// requeued, re-prefilled from prompt + generated tokens, and finishes
+/// with EXACTLY the tokens of an undisturbed run (greedy sampling).
+#[test]
+fn preempted_request_resumes_with_identical_tokens() {
+    let serving = || ServingConfig {
+        kv_budget_mb: 300,
+        max_batch: 4,
+        max_preemptions: 1,
+        temperature: 0.0, // greedy: token identity must be exact
+        ..Default::default()
+    };
+    let pin_all = |backend: &mut SimBackend| {
+        for i in 0..8 {
+            backend.expert_cache_mut().pin((1, i));
+        }
+    };
+
+    // Solo run: A undisturbed.
+    let mut solo_backend = SimBackend::new(serving());
+    pin_all(&mut solo_backend);
+    let (tx, rx) = channel();
+    let rx_a = send_req(&tx, Req { slo_us: Some(1e9), ..Req::new(long_prompt(2000), 8) });
+    let mut sentinel = Request::shutdown_sentinel();
+    sentinel.arrive_at_us = Some(1e15);
+    tx.send(sentinel).unwrap();
+    serve_lifecycle(&mut solo_backend, rx).unwrap();
+    drop(tx);
+    let solo = collect(&rx_a).unwrap();
+    assert_eq!(solo.0.len(), 8);
+    assert_eq!(solo.1.preemptions, 0);
+
+    // Mixed run: tight B arrives while A decodes; no slots to borrow and
+    // no pool headroom, so admission must preempt A.
+    let mut backend = SimBackend::new(serving());
+    pin_all(&mut backend);
+    let (tx, rx) = channel();
+    let rx_a = send_req(&tx, Req { slo_us: Some(1e9), ..Req::new(long_prompt(2000), 8) });
+    let rx_b = send_req(
+        &tx,
+        Req {
+            slo_us: Some(10_000.0),
+            arrive_at_us: Some(2_050_000.0), // mid-decode for A
+            ..Req::new(long_prompt(2000), 4)
+        },
+    );
+    let mut sentinel = Request::shutdown_sentinel();
+    sentinel.arrive_at_us = Some(1e15);
+    tx.send(sentinel).unwrap();
+    serve_lifecycle(&mut backend, rx).unwrap();
+    drop(tx);
+
+    let a = collect(&rx_a).expect("preempted request still completes");
+    let b = collect(&rx_b).expect("tight request admits via preemption");
+    assert_eq!(b.0.len(), 4);
+    assert_eq!(a.1.preemptions, 1, "A must have been preempted exactly once");
+    assert_eq!(a.0, solo.0, "drop-and-recompute changed A's tokens");
+    // B got in while A was mid-flight, not after it.
+    assert!(
+        b.1.admitted_us < a.1.token_done_us.last().copied().unwrap(),
+        "B never actually preempted A"
+    );
+}
+
+/// A hard per-request deadline fires at the next scheduling boundary with
+/// the typed `deadline` reason; requests without one are untouched.
+#[test]
+fn deadline_exceeded_fails_with_typed_reason() {
+    let serving = ServingConfig { max_batch: 4, ..Default::default() };
+    let reqs = vec![
+        // ~10 ms prefill then ~22 ms per decode step: 60 ms covers only
+        // the first couple of tokens of the 40 requested.
+        Req { deadline_us: Some(60_000.0), ..Req::new((1..=8).collect(), 40) },
+        Req::new((9..=12).collect(), 5), // no deadline: completes
+    ];
+    let (_, results) = run_sim(serving, reqs, None);
+    let err = results[0].as_ref().expect_err("deadline must be enforced");
+    assert!(err.to_string().contains("deadline exceeded"), "{err}");
+    assert_eq!(results[1].as_ref().unwrap().0.len(), 5);
+}
+
+/// Hot reload swaps scheduler knobs between iterations without dropping
+/// in-flight or queued work, and drain finishes in-flight requests while
+/// refusing new arrivals.
+#[test]
+fn reload_and_drain_preserve_inflight_work() {
+    let serving = ServingConfig { max_batch: 2, prefill_chunk: 16, ..Default::default() };
+    let mut backend = SimBackend::new(serving);
+    let (tx, rx) = channel();
+    let rx_a = send_req(&tx, Req::new(long_prompt(64), 30)); // in flight at reload
+    let rx_b = send_req(&tx, Req { arrive_at_us: Some(5_000.0), ..Req::new((1..=6).collect(), 4) });
+    // Mid-run: switch admission + widen the batch; both requests live on.
+    let rx_ctl = send_ctl(
+        &tx,
+        ControlMsg::Reload(ReloadSpec {
+            admission: Some(AdmissionKind::ShortestFirst),
+            prefill_chunk: Some(8),
+            ..Default::default()
+        }),
+        200_000.0,
+    );
+    // Then drain: queued-but-unserved arrivals after this fail typed.
+    let rx_drain = send_ctl(&tx, ControlMsg::Drain, 400_000.0);
+    let rx_late = send_req(
+        &tx,
+        Req { arrive_at_us: Some(500_000.0), ..Req::new((7..=9).collect(), 4) },
+    );
+    serve_lifecycle(&mut backend, rx).unwrap();
+    drop(tx);
+
+    assert_eq!(collect(&rx_a).expect("in-flight survives reload + drain").0.len(), 30);
+    assert_eq!(collect(&rx_b).expect("queued survives reload").0.len(), 4);
+    assert!(rx_ctl.try_iter().any(|e| matches!(e, Event::ControlAck { op: "reload" })));
+    assert!(rx_drain.try_iter().any(|e| matches!(e, Event::ControlAck { op: "drain" })));
+    let late_err = collect(&rx_late).expect_err("post-drain arrival must be refused");
+    assert!(late_err.to_string().contains("shutting down"), "{late_err}");
+}
+
+/// `--prefill-tokens B` admits several concurrent prefills: the second
+/// long prompt no longer waits for the first's full prefill, so its TTFT
+/// strictly improves while both token streams stay identical.
+#[test]
+fn prefill_token_budget_overlaps_prefills_with_identical_tokens() {
+    let run = |prefill_tokens: usize| {
+        let serving = ServingConfig {
+            prefill_chunk: 64,
+            prefill_tokens,
+            max_batch: 4,
+            ..Default::default()
+        };
+        let reqs = vec![Req::new(long_prompt(400), 4), Req::new(long_prompt(400), 4)];
+        let (_, mut results) = run_sim(serving, reqs, None);
+        let b = results.pop().unwrap().unwrap();
+        let a = results.pop().unwrap().unwrap();
+        (a, b)
+    };
+    let (a_serial, b_serial) = run(0);
+    let (a_budget, b_budget) = run(128);
+    assert_eq!(a_serial.0, a_budget.0);
+    assert_eq!(b_serial.0, b_budget.0);
+    assert!(
+        b_budget.1.ttft_us() < b_serial.1.ttft_us(),
+        "budgeted prefill did not improve the second request's TTFT ({} vs {})",
+        b_budget.1.ttft_us(),
+        b_serial.1.ttft_us()
+    );
 }
 
 // --- engine-level parity (needs `make artifacts`, skips gracefully) ---
