@@ -19,7 +19,7 @@ use fiddler::exec::{run_cpu_experts, CpuExpertTask, ExecutorPool};
 use fiddler::figures;
 use fiddler::kvcache::SequenceCache;
 use fiddler::runtime::Tensor;
-use fiddler::server::sim::{run_open_loop, LoadSpec};
+use fiddler::server::sim::{run_fleet_open_loop, run_open_loop, LoadSpec};
 use fiddler::util::json::Json;
 use fiddler::util::rng::Rng;
 use fiddler::workload::{Dataset, WorkloadGen};
@@ -463,6 +463,85 @@ fn bench_preemption_slo() -> Json {
     section
 }
 
+/// Fleet shard-count sweep (PR 8): the same open-loop workload pushed
+/// through 1, 2, 3, and 4 expert-sharded engines, reporting virtual
+/// throughput, the sharding planner's chosen plan, and its priced
+/// bottleneck per shard.  Shards=1 doubles as a live check of the
+/// bit-identity contract against the single-engine scheduler.
+fn bench_fleet_sweep() -> Json {
+    let fast = std::env::var("FIDDLER_BENCH_FAST").is_ok();
+    let spec = LoadSpec {
+        n_requests: if fast { 32 } else { 96 },
+        rate_per_s: 12.0,
+        inp: 24,
+        out: 16,
+        long_every: 6,
+        long_inp: 160,
+        seed: 17,
+        ..LoadSpec::default()
+    };
+    let serving = |shards: usize| ServingConfig {
+        shards,
+        prefill_chunk: 32,
+        max_batch: 6,
+        ..Default::default()
+    };
+
+    let baseline = run_open_loop(serving(1), &spec).expect("single-engine baseline");
+    let mut section = Json::obj();
+    let mut work = Json::obj();
+    work.set("n_requests", Json::from(spec.n_requests));
+    work.set("rate_per_s", Json::Num(spec.rate_per_s));
+    work.set("inp", Json::from(spec.inp));
+    work.set("out", Json::from(spec.out));
+    section.set("workload", work);
+
+    let mut sweep = Vec::new();
+    for shards in [1usize, 2, 3, 4] {
+        let wall = std::time::Instant::now();
+        let fleet = run_fleet_open_loop(serving(shards), &spec).expect("fleet run");
+        let wall_ms = wall.elapsed().as_secs_f64() * 1e3;
+        let r = &fleet.report;
+        let tput = r.output_tokens as f64 / r.makespan_s.max(1e-9);
+        println!(
+            "    fleet/shards{shards}: {}/{} completed | {:.1} tok/s virtual | plan {} | per-shard {:?} | bottlenecks [{}] | priced step {:.2} ms",
+            r.completed,
+            spec.n_requests,
+            tput,
+            fleet.plan,
+            fleet.per_shard,
+            fleet.bottlenecks,
+            fleet.max_step_us / 1e3
+        );
+        if shards == 1 {
+            assert_eq!(
+                baseline.outcomes,
+                r.outcomes,
+                "shards=1 fleet diverged from the single-engine scheduler"
+            );
+        }
+        let mut o = Json::obj();
+        o.set("shards", Json::from(shards));
+        o.set("completed", Json::from(r.completed));
+        o.set("failed", Json::from(r.rejected));
+        o.set("output_tokens", Json::from(r.output_tokens));
+        o.set("virtual_tok_per_s", Json::Num(tput));
+        o.set("makespan_s", Json::Num(r.makespan_s));
+        o.set("plan", Json::from(fleet.plan.as_str()));
+        o.set("bottlenecks", Json::from(fleet.bottlenecks.as_str()));
+        o.set("priced_step_ms", Json::Num(fleet.max_step_us / 1e3));
+        o.set(
+            "per_shard_requests",
+            Json::Arr(fleet.per_shard.iter().map(|&n| Json::from(n)).collect()),
+        );
+        o.set("wall_ms", Json::Num(wall_ms));
+        sweep.push(o);
+    }
+    section.set("shard_sweep", Json::Arr(sweep));
+    section.set("shards1_bit_identical", Json::Bool(true));
+    section
+}
+
 fn main() {
     let mut b = Bench::new();
 
@@ -526,6 +605,19 @@ fn main() {
         std::env::var("FIDDLER_BENCH_OUT_PR7").unwrap_or_else(|_| "BENCH_PR7.json".into());
     std::fs::write(&out7, root7.to_string()).expect("write bench json");
     println!("  wrote {out7}");
+
+    // PR 8: expert-sharded fleet — shard-count sweep with the planner's
+    // chosen plan and priced bottleneck per shard (virtual time — no
+    // artifacts needed, always produced).
+    println!("  fleet shard sweep (planner plan + bottleneck per shard):");
+    let fleet = bench_fleet_sweep();
+    let mut root8 = Json::obj();
+    root8.set("bench", Json::from("pr8-expert-sharded-fleet"));
+    root8.set("fleet", fleet);
+    let out8 =
+        std::env::var("FIDDLER_BENCH_OUT_PR8").unwrap_or_else(|_| "BENCH_PR8.json".into());
+    std::fs::write(&out8, root8.to_string()).expect("write bench json");
+    println!("  wrote {out8}");
 
     b.report("e2e decode/prefill (serial vs parallel executor + per-policy)");
 }

@@ -125,6 +125,40 @@ impl AdmissionKind {
     }
 }
 
+/// How the fleet partitions the expert set across engine shards
+/// (`--shard-plan`; see [`crate::server::fleet`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardPlan {
+    /// Contiguous layer ranges per shard: each engine owns every expert
+    /// of its layers, so a request's layer walk stays on one engine.
+    Layer,
+    /// Hash partition of (layer, expert) ids: spreads hot experts across
+    /// engines at the cost of cross-shard activation traffic.
+    Hash,
+    /// Price both candidates against the MoE-Lens bottleneck model and
+    /// pick the layout with the lower max-shard step time.
+    Auto,
+}
+
+impl ShardPlan {
+    pub fn by_name(name: &str) -> anyhow::Result<ShardPlan> {
+        Ok(match name {
+            "layer" => ShardPlan::Layer,
+            "hash" => ShardPlan::Hash,
+            "auto" => ShardPlan::Auto,
+            other => anyhow::bail!("unknown shard plan {other:?} (have layer, hash, auto)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardPlan::Layer => "layer",
+            ShardPlan::Hash => "hash",
+            ShardPlan::Auto => "auto",
+        }
+    }
+}
+
 /// Expert placement strategy at initialization (paper §3.4 + Appendix C).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlacementStrategy {
@@ -231,6 +265,18 @@ pub struct ServingConfig {
     /// summaries (`fiddler trace-summary`).  `None` (default) = sink
     /// disabled, costing one branch per would-be event.
     pub events_out: Option<String>,
+    /// Engine shards of the serving fleet (`--shards N`).  1 (default) =
+    /// the single-engine scheduler, token-bit-identical to the
+    /// pre-fleet serving stack; `N > 1` fronts N per-shard schedulers
+    /// with the [`crate::server::fleet`] router.
+    pub shards: usize,
+    /// Expert partition layout across shards (`--shard-plan`).
+    pub shard_plan: ShardPlan,
+    /// Hot-expert replication threshold (`--replicate-hot F`): an expert
+    /// whose measured popularity share exceeds `F` gets
+    /// `ceil(share / F)` replicas across the fleet (capped at the shard
+    /// count).  0 (default) = replication off.
+    pub replicate_hot: f64,
 }
 
 impl Default for ServingConfig {
@@ -257,6 +303,9 @@ impl Default for ServingConfig {
             conn_timeout_ms: 0,
             pipeline_lookahead: 0,
             events_out: None,
+            shards: 1,
+            shard_plan: ShardPlan::Auto,
+            replicate_hot: 0.0,
         }
     }
 }
@@ -301,6 +350,16 @@ impl ServingConfig {
         c.conn_timeout_ms = args.u64_or("conn-timeout-ms", c.conn_timeout_ms);
         c.pipeline_lookahead = args.usize_or("pipeline-lookahead", c.pipeline_lookahead);
         c.events_out = args.get("events-out").map(String::from);
+        c.shards = args.usize_or("shards", c.shards);
+        anyhow::ensure!(c.shards >= 1, "--shards must be at least 1");
+        if let Some(p) = args.get("shard-plan") {
+            c.shard_plan = ShardPlan::by_name(p)?;
+        }
+        c.replicate_hot = args.f64_or("replicate-hot", c.replicate_hot);
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&c.replicate_hot),
+            "--replicate-hot must be in [0, 1]"
+        );
         Ok(c)
     }
 
@@ -440,6 +499,40 @@ mod tests {
             ServingConfig::from_args(&a).unwrap().events_out.as_deref(),
             Some("trace.jsonl")
         );
+    }
+
+    #[test]
+    fn shard_plan_names() {
+        assert_eq!(ShardPlan::by_name("layer").unwrap(), ShardPlan::Layer);
+        assert_eq!(ShardPlan::by_name("hash").unwrap(), ShardPlan::Hash);
+        assert_eq!(ShardPlan::by_name("auto").unwrap(), ShardPlan::Auto);
+        assert!(ShardPlan::by_name("ring").is_err());
+        assert_eq!(ShardPlan::Layer.label(), "layer");
+    }
+
+    #[test]
+    fn fleet_args_parse_and_default_to_single_engine() {
+        let d = ServingConfig::default();
+        assert_eq!(d.shards, 1, "single engine by default");
+        assert_eq!(d.shard_plan, ShardPlan::Auto);
+        assert_eq!(d.replicate_hot, 0.0, "replication off by default");
+
+        let a = Args::parse(
+            "--shards 3 --shard-plan hash --replicate-hot 0.25"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ServingConfig::from_args(&a).unwrap();
+        assert_eq!(c.shards, 3);
+        assert_eq!(c.shard_plan, ShardPlan::Hash);
+        assert!((c.replicate_hot - 0.25).abs() < 1e-12);
+
+        let bad = Args::parse("--shards 0".split_whitespace().map(String::from));
+        assert!(ServingConfig::from_args(&bad).is_err());
+        let bad = Args::parse("--replicate-hot 1.5".split_whitespace().map(String::from));
+        assert!(ServingConfig::from_args(&bad).is_err());
+        let bad = Args::parse("--shard-plan ring".split_whitespace().map(String::from));
+        assert!(ServingConfig::from_args(&bad).is_err());
     }
 
     #[test]

@@ -52,6 +52,13 @@ pub enum TraceEvent {
         /// are scheduling-relevant, so replay must reconstruct them.
         faults: String,
         fault_seed: u64,
+        /// Fleet shape: engine count, shard-plan label ("layer" / "hash"
+        /// / "auto"), and hot-expert replication threshold.  Replay needs
+        /// them to rebuild the router bit-identically (`shards` 0 decodes
+        /// as 1 for pre-fleet logs).
+        shards: usize,
+        shard_plan: String,
+        replicate_hot: f64,
     },
     /// A request reached the scheduler (its full prompt is recorded —
     /// this is what makes a log a replayable trace).
@@ -117,6 +124,19 @@ pub enum TraceEvent {
     /// Deterministic fault injection fired in the sim backend (`kind` is
     /// stall / spike / error; `delay_us` the extra virtual time charged).
     FaultInjected { t_us: f64, kind: String, delay_us: f64 },
+    /// Fleet router dispatched a request to an engine shard.  Emitted by
+    /// the front-end router at ingest, before the owning shard's own
+    /// `request_arrived`; replay routes by this record instead of
+    /// re-running the demand predictor.
+    ShardAssigned { req: u64, t_us: f64, shard: usize },
+    /// Cross-engine load accounting raised a hot expert's replica count
+    /// (`replicas` = new total across the fleet).
+    ReplicaScaled { t_us: f64, layer: usize, expert: usize, replicas: usize },
+    /// The sharding planner committed a layout: `plan` is the partition
+    /// kind actually chosen ("layer" / "hash"), `shards` the engine
+    /// count, `bottleneck` the per-shard saturating resource labels
+    /// (comma-joined, e.g. "cpu-bw,pcie,gpu").
+    PlanChosen { t_us: f64, plan: String, shards: usize, bottleneck: String },
     /// Expert-cache lookup (`hit == false` means a demand transfer was
     /// charged; `prefetch_hit` marks hits on prefetched entries).
     CacheLookup { t_us: f64, layer: usize, expert: usize, hit: bool, prefetch_hit: bool },
@@ -176,6 +196,9 @@ impl TraceEvent {
             TraceEvent::ConfigReloaded { .. } => "config_reloaded",
             TraceEvent::DrainStarted { .. } => "drain_started",
             TraceEvent::FaultInjected { .. } => "fault_injected",
+            TraceEvent::ShardAssigned { .. } => "shard_assigned",
+            TraceEvent::ReplicaScaled { .. } => "replica_scaled",
+            TraceEvent::PlanChosen { .. } => "plan_chosen",
             TraceEvent::CacheLookup { .. } => "cache_lookup",
             TraceEvent::CacheEvict { .. } => "cache_evict",
             TraceEvent::CacheTransfer { .. } => "cache_transfer",
@@ -209,6 +232,9 @@ impl TraceEvent {
                 max_preemptions,
                 faults,
                 fault_seed,
+                shards,
+                shard_plan,
+                replicate_hot,
             } => {
                 o.set("seed", Json::Num(*seed as f64));
                 o.set("temperature", Json::Num(*temperature));
@@ -223,6 +249,9 @@ impl TraceEvent {
                 o.set("max_preemptions", Json::from(*max_preemptions));
                 o.set("faults", Json::from(faults.as_str()));
                 o.set("fault_seed", Json::Num(*fault_seed as f64));
+                o.set("shards", Json::from(*shards));
+                o.set("shard_plan", Json::from(shard_plan.as_str()));
+                o.set("replicate_hot", Json::Num(*replicate_hot));
             }
             TraceEvent::RequestArrived { req, t_us, prompt, max_new, width, slo_us, deadline_us } => {
                 o.set("req", Json::Num(*req as f64));
@@ -324,6 +353,23 @@ impl TraceEvent {
                 o.set("kind", Json::from(kind.as_str()));
                 o.set("delay_us", Json::Num(*delay_us));
             }
+            TraceEvent::ShardAssigned { req, t_us, shard } => {
+                o.set("req", Json::Num(*req as f64));
+                o.set("t_us", Json::Num(*t_us));
+                o.set("shard", Json::from(*shard));
+            }
+            TraceEvent::ReplicaScaled { t_us, layer, expert, replicas } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+                o.set("replicas", Json::from(*replicas));
+            }
+            TraceEvent::PlanChosen { t_us, plan, shards, bottleneck } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("plan", Json::from(plan.as_str()));
+                o.set("shards", Json::from(*shards));
+                o.set("bottleneck", Json::from(bottleneck.as_str()));
+            }
             TraceEvent::CacheLookup { t_us, layer, expert, hit, prefetch_hit } => {
                 o.set("t_us", Json::Num(*t_us));
                 o.set("layer", Json::from(*layer));
@@ -415,6 +461,9 @@ impl TraceEvent {
                 max_preemptions: ju(v, "max_preemptions", 0),
                 faults: js(v, "faults"),
                 fault_seed: j64(v, "fault_seed", 0),
+                shards: ju(v, "shards", 1).max(1),
+                shard_plan: js(v, "shard_plan"),
+                replicate_hot: jf(v, "replicate_hot", 0.0),
             },
             "request_arrived" => TraceEvent::RequestArrived {
                 req: j64(v, "req", 0),
@@ -504,6 +553,23 @@ impl TraceEvent {
                 kind: js(v, "kind"),
                 delay_us: jf(v, "delay_us", 0.0),
             },
+            "shard_assigned" => TraceEvent::ShardAssigned {
+                req: j64(v, "req", 0),
+                t_us: jf(v, "t_us", 0.0),
+                shard: ju(v, "shard", 0),
+            },
+            "replica_scaled" => TraceEvent::ReplicaScaled {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+                replicas: ju(v, "replicas", 1),
+            },
+            "plan_chosen" => TraceEvent::PlanChosen {
+                t_us: jf(v, "t_us", 0.0),
+                plan: js(v, "plan"),
+                shards: ju(v, "shards", 1),
+                bottleneck: js(v, "bottleneck"),
+            },
             "cache_lookup" => TraceEvent::CacheLookup {
                 t_us: jf(v, "t_us", 0.0),
                 layer: ju(v, "layer", 0),
@@ -589,6 +655,9 @@ impl TraceEvent {
                 max_preemptions: 2,
                 faults: "stall=0.05:30000,err=0.01".into(),
                 fault_seed: 13,
+                shards: 3,
+                shard_plan: "auto".into(),
+                replicate_hot: 0.25,
             },
             TraceEvent::RequestArrived {
                 req: 1,
@@ -647,6 +716,14 @@ impl TraceEvent {
             },
             TraceEvent::DrainStarted { t_us: 9_400.0 },
             TraceEvent::FaultInjected { t_us: 9_500.0, kind: "stall".into(), delay_us: 30_000.0 },
+            TraceEvent::ShardAssigned { req: 6, t_us: 9_600.0, shard: 2 },
+            TraceEvent::ReplicaScaled { t_us: 9_700.0, layer: 3, expert: 5, replicas: 2 },
+            TraceEvent::PlanChosen {
+                t_us: 0.0,
+                plan: "layer".into(),
+                shards: 3,
+                bottleneck: "cpu-bw,pcie,gpu".into(),
+            },
             TraceEvent::CacheLookup {
                 t_us: 2_500.0,
                 layer: 3,

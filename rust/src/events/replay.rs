@@ -14,10 +14,10 @@
 //! determinism — both worth failing CI over.
 
 use super::TraceEvent;
-use crate::config::serving::{AdmissionKind, ServingConfig};
+use crate::config::serving::{AdmissionKind, ServingConfig, ShardPlan};
 use crate::metrics::GenMetrics;
 use crate::server::sim::SimBackend;
-use crate::server::{serve_lifecycle, ControlMsg, Event, ReloadSpec, Request};
+use crate::server::{serve_lifecycle, ControlMsg, Event, ReloadSpec, Request, ServeBackend};
 use anyhow::{Context, Result};
 use std::path::Path;
 
@@ -52,6 +52,9 @@ pub struct RecordedRequest {
     /// [`TraceEvent::RequestCancelled`]); replay re-sends the cancel at
     /// this exact time so the control applies at the same iteration.
     pub cancel_at_us: Option<f64>,
+    /// Owning engine from the router's [`TraceEvent::ShardAssigned`]
+    /// line (`None` on single-engine traces, which predate the fleet).
+    pub shard: Option<usize>,
     /// Client-visible token stream (beam groups: the winning beam).
     pub tokens: Vec<u32>,
     /// Completion time of each streamed token (virtual µs).
@@ -82,9 +85,15 @@ pub struct RecordedTrace {
 /// Fold a parsed event stream into per-request records.
 pub fn fold_trace(events: &[TraceEvent]) -> RecordedTrace {
     let mut trace = RecordedTrace::default();
+    // The router assigns shards at routing time, which can precede the
+    // owning engine's RequestArrived line — collect them on the side.
+    let mut shards = std::collections::HashMap::new();
     for ev in events {
         match ev {
             TraceEvent::Meta { .. } => trace.meta = Some(ev.clone()),
+            TraceEvent::ShardAssigned { req, shard, .. } => {
+                shards.insert(*req, *shard);
+            }
             TraceEvent::RequestArrived {
                 req,
                 t_us,
@@ -157,6 +166,9 @@ pub fn fold_trace(events: &[TraceEvent]) -> RecordedTrace {
             _ => {}
         }
     }
+    for r in &mut trace.requests {
+        r.shard = shards.get(&r.id).copied();
+    }
     trace
 }
 
@@ -179,6 +191,9 @@ impl RecordedTrace {
             max_preemptions,
             faults,
             fault_seed,
+            shards,
+            shard_plan,
+            replicate_hot,
         }) = &self.meta
         else {
             anyhow::bail!("trace has no meta line; cannot reconstruct the serving config");
@@ -198,10 +213,27 @@ impl RecordedTrace {
             max_preemptions: *max_preemptions,
             faults: if faults.is_empty() { None } else { Some(faults.clone()) },
             fault_seed: *fault_seed,
+            shards: (*shards).max(1),
+            // Legacy single-engine traces predate the field and record "".
+            shard_plan: if shard_plan.is_empty() {
+                ShardPlan::Auto
+            } else {
+                ShardPlan::by_name(shard_plan)
+                    .with_context(|| format!("meta shard_plan {shard_plan:?}"))?
+            },
+            replicate_hot: *replicate_hot,
             // A replay never overwrites the source trace.
             events_out: None,
             ..ServingConfig::default()
         })
+    }
+
+    /// Engine count the trace was recorded under (1 for legacy traces).
+    pub fn recorded_shards(&self) -> usize {
+        match &self.meta {
+            Some(TraceEvent::Meta { shards, .. }) => (*shards).max(1),
+            _ => 1,
+        }
     }
 }
 
@@ -214,23 +246,107 @@ pub struct ReplayOutcome {
     pub error: Option<String>,
 }
 
-/// Re-run the recorded workload through a fresh [`SimBackend`] under the
+/// Re-run the recorded workload through fresh [`SimBackend`]s under the
 /// trace's own serving config, entirely in virtual time.
 pub fn replay_trace(rec: &RecordedTrace) -> Result<Vec<ReplayOutcome>> {
-    let serving = rec.serving_config()?;
-    let (tx, rx) = std::sync::mpsc::channel();
+    replay_with_config(rec, rec.serving_config()?)
+}
+
+/// Fold the per-shard copies of each broadcast control back into one
+/// action per broadcast: a fleet recording carries one `config_reloaded`
+/// / `drain_started` line PER SHARD (the router broadcasts, every
+/// engine's lifecycle logs its own application).  Copies are grouped by
+/// op kind and per-shard sequence position; each group replays at the
+/// EARLIEST recorded application time, which every shard's own
+/// iteration-boundary clock then rounds back up to exactly its recorded
+/// application point.  Counts that don't divide evenly (a shard died
+/// before a control reached it) keep every copy rather than guess.
+fn dedup_broadcast_controls(
+    controls: &[(f64, ControlMsg)],
+    recorded_shards: usize,
+) -> Vec<(f64, ControlMsg)> {
+    if recorded_shards <= 1 || controls.is_empty() {
+        return controls.to_vec();
+    }
+    let mut by_kind: std::collections::BTreeMap<&'static str, Vec<&(f64, ControlMsg)>> =
+        std::collections::BTreeMap::new();
+    for c in controls {
+        by_kind.entry(c.1.op()).or_default().push(c);
+    }
+    let mut out = Vec::new();
+    for group in by_kind.into_values() {
+        if group.len() % recorded_shards != 0 {
+            out.extend(group.into_iter().cloned());
+            continue;
+        }
+        let per_shard = group.len() / recorded_shards;
+        for j in 0..per_shard {
+            let copies: Vec<_> = (0..recorded_shards).map(|s| group[s * per_shard + j]).collect();
+            let t = copies.iter().map(|c| c.0).fold(f64::INFINITY, f64::min);
+            out.push((t, copies[0].1.clone()));
+        }
+    }
+    out.sort_by(|a, b| a.0.total_cmp(&b.0));
+    out
+}
+
+/// Re-run the recorded workload under an arbitrary serving config — the
+/// substrate of `trace-replay --config-override` A/B runs.  Under the
+/// trace's own config this reproduces the recording bit-for-bit (the
+/// pin/plan derivations below are pure functions of the recorded
+/// prompts and placements, shared with the live fleet driver); under an
+/// override the client-visible streams may legitimately change, which
+/// is why A/B comparisons diff aggregates ([`aggregate_outcomes`]), not
+/// tokens.
+pub fn replay_with_config(
+    rec: &RecordedTrace,
+    serving: ServingConfig,
+) -> Result<Vec<ReplayOutcome>> {
+    use crate::config::HardwareConfig;
+    use crate::latency::LatencyModel;
+    use crate::server::fleet::{pin_worthwhile, plan_shards};
+    use crate::server::sim::{
+        sim_arrival_horizon_s, sim_demand_profile, SIM_FLEET_GPU_CAPACITY, SIM_FLEET_MAX_PINS,
+    };
+
+    let n = serving.shards.max(1);
+    let recorded = rec.recorded_shards();
+    // Recorded placement is honored when the engine count is unchanged;
+    // otherwise fall back to deterministic round-robin by request id.
+    let shard_of: Vec<usize> = rec
+        .requests
+        .iter()
+        .map(|r| match r.shard {
+            Some(s) if n == recorded && s < n => s,
+            _ => (r.id % n as u64) as usize,
+        })
+        .collect();
+    let mut per_shard = vec![0usize; n];
+    for &s in &shard_of {
+        per_shard[s] += 1;
+    }
+
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
     let mut control_rx = Vec::new();
     let receivers: Vec<_> = rec
         .requests
         .iter()
-        .map(|r| {
+        .enumerate()
+        .map(|(i, r)| {
             let (etx, erx) = std::sync::mpsc::channel();
             let mut q = Request::new(r.prompt.clone(), r.max_new, etx);
+            q.id = Some(r.id);
             q.width = r.width;
             q.slo_us = r.slo_us;
             q.deadline_us = r.deadline_us;
             q.arrive_at_us = Some(r.arrive_us);
-            tx.send(q).expect("loop not started yet");
+            txs[shard_of[i]].send(q).expect("loop not started yet");
             // Re-send the recorded cancel at its recorded time: the
             // scheduler parks it until the virtual clock reaches it, so
             // it applies at the same iteration boundary as the original.
@@ -238,26 +354,52 @@ pub fn replay_trace(rec: &RecordedTrace) -> Result<Vec<ReplayOutcome>> {
                 let (ctx, crx) = std::sync::mpsc::channel();
                 let mut c = Request::control(ControlMsg::Cancel { req: r.id }, ctx);
                 c.arrive_at_us = Some(ct);
-                tx.send(c).expect("loop not started yet");
+                txs[shard_of[i]].send(c).expect("loop not started yet");
                 control_rx.push(crx);
             }
             (r.id, erx)
         })
         .collect();
-    for (t, msg) in &rec.controls {
-        let (ctx, crx) = std::sync::mpsc::channel();
-        let mut c = Request::control(msg.clone(), ctx);
-        c.arrive_at_us = Some(*t);
-        tx.send(c).expect("loop not started yet");
-        control_rx.push(crx);
+    for (t, msg) in dedup_broadcast_controls(&rec.controls, recorded) {
+        for tx in &txs {
+            let (ctx, crx) = std::sync::mpsc::channel();
+            let mut c = Request::control(msg.clone(), ctx);
+            c.arrive_at_us = Some(t);
+            tx.send(c).expect("loop not started yet");
+            control_rx.push(crx);
+        }
     }
-    let mut sentinel = Request::shutdown_sentinel();
-    sentinel.arrive_at_us = Some(1e15); // fires once the loop idles out
-    tx.send(sentinel).expect("loop not started yet");
+    for tx in &txs {
+        let mut sentinel = Request::shutdown_sentinel();
+        sentinel.arrive_at_us = Some(1e15); // fires once the loop idles out
+        tx.send(sentinel).expect("loop not started yet");
+    }
 
-    let mut backend = SimBackend::new(serving);
-    serve_lifecycle(&mut backend, rx)?;
-    drop(tx);
+    // Same plan/pin derivation as the live fleet driver (`sim.rs`):
+    // demand profile and per-shard rates are pure functions of the
+    // recorded prompts and placements, so the pins reproduce exactly.
+    let profile = sim_demand_profile(rec.requests.iter().map(|r| r.prompt.as_slice()));
+    let model = LatencyModel::from_hardware(&HardwareConfig::env1());
+    let plan = plan_shards(&profile, &model, n, serving.shard_plan, SIM_FLEET_GPU_CAPACITY);
+    let horizon_s = sim_arrival_horizon_s(rec.requests.iter().map(|r| r.arrive_us));
+    for (s, rx) in rxs.into_iter().enumerate() {
+        let mut backend = SimBackend::new(serving.clone());
+        if n > 1 {
+            let shard_rate = per_shard[s] as f64 / horizon_s;
+            pin_worthwhile(
+                backend.expert_cache_mut(),
+                &profile,
+                &plan,
+                s,
+                shard_rate,
+                horizon_s,
+                &model,
+                SIM_FLEET_MAX_PINS,
+            );
+        }
+        serve_lifecycle(&mut backend, rx)?;
+    }
+    drop(txs);
     drop(control_rx);
 
     Ok(receivers
@@ -275,6 +417,122 @@ pub fn replay_trace(rec: &RecordedTrace) -> Result<Vec<ReplayOutcome>> {
             out
         })
         .collect())
+}
+
+/// Parse a `--config-override` spec (`key=value`, comma-separated, CLI
+/// flag spellings — underscores also accepted) onto a serving config.
+pub fn apply_config_overrides(cfg: &mut ServingConfig, spec: &str) -> Result<()> {
+    for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (key, val) = part.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--config-override: expected key=value in {part:?}")
+        })?;
+        let key = key.trim().replace('_', "-");
+        let val = val.trim();
+        let parse_usize = |v: &str| -> Result<usize> {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("--config-override: bad value {v:?} in {part:?}"))
+        };
+        let parse_f64 = |v: &str| -> Result<f64> {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("--config-override: bad value {v:?} in {part:?}"))
+        };
+        match key.as_str() {
+            "shards" => cfg.shards = parse_usize(val)?.max(1),
+            "shard-plan" => cfg.shard_plan = ShardPlan::by_name(val)?,
+            "replicate-hot" => cfg.replicate_hot = parse_f64(val)?,
+            "admission" => cfg.admission = AdmissionKind::by_name(val)?,
+            "max-batch" => cfg.max_batch = parse_usize(val)?,
+            "queue-capacity" => cfg.queue_capacity = parse_usize(val)?,
+            "prefill-chunk" => cfg.prefill_chunk = parse_usize(val)?,
+            "prefill-tokens" => cfg.prefill_tokens = parse_usize(val)?,
+            "kv-budget-mb" => cfg.kv_budget_mb = parse_usize(val)?,
+            "slo-ttft-ms" => cfg.slo_ttft_ms = parse_f64(val)?,
+            "max-preemptions" => cfg.max_preemptions = parse_usize(val)?,
+            "lookahead" => cfg.pipeline_lookahead = parse_usize(val)?,
+            _ => anyhow::bail!("--config-override: unknown key {key:?}"),
+        }
+    }
+    Ok(())
+}
+
+/// Aggregate client-visible metrics of one replay run — the surface
+/// `trace-replay --config-override` A/B comparisons diff (token streams
+/// legitimately change under a different config; throughput and latency
+/// aggregates are what stays comparable).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ReplayAggregate {
+    pub completed: usize,
+    pub failed: usize,
+    pub output_tokens: usize,
+    pub mean_ttft_ms: f64,
+    pub mean_itl_ms: f64,
+    /// Last token completion on any engine's clock (virtual seconds).
+    pub last_token_s: f64,
+}
+
+pub fn aggregate_outcomes(outcomes: &[ReplayOutcome]) -> ReplayAggregate {
+    let mut a = ReplayAggregate::default();
+    let (mut ttft_sum, mut ttft_n) = (0.0, 0usize);
+    let (mut itl_sum, mut itl_n) = (0.0, 0usize);
+    for o in outcomes {
+        if o.error.is_some() {
+            a.failed += 1;
+            continue;
+        }
+        a.completed += 1;
+        a.output_tokens += o.tokens.len();
+        if let Some(m) = &o.metrics {
+            ttft_sum += m.ttft_us();
+            ttft_n += 1;
+            for itl in m.itl_us() {
+                itl_sum += itl;
+                itl_n += 1;
+            }
+            if let Some(&t) = m.token_done_us.last() {
+                a.last_token_s = a.last_token_s.max(t / 1e6);
+            }
+        }
+    }
+    if ttft_n > 0 {
+        a.mean_ttft_ms = ttft_sum / ttft_n as f64 / 1e3;
+    }
+    if itl_n > 0 {
+        a.mean_itl_ms = itl_sum / itl_n as f64 / 1e3;
+    }
+    a
+}
+
+/// Human-readable baseline → override deltas, one line per metric.
+pub fn diff_aggregates(base: &ReplayAggregate, over: &ReplayAggregate) -> Vec<String> {
+    fn pct(b: f64, o: f64) -> String {
+        if b.abs() < 1e-12 {
+            return "n/a".to_string();
+        }
+        format!("{:+.1}%", (o - b) / b * 100.0)
+    }
+    vec![
+        format!("completed: {} -> {}", base.completed, over.completed),
+        format!("failed: {} -> {}", base.failed, over.failed),
+        format!("output_tokens: {} -> {}", base.output_tokens, over.output_tokens),
+        format!(
+            "mean_ttft_ms: {:.2} -> {:.2} ({})",
+            base.mean_ttft_ms,
+            over.mean_ttft_ms,
+            pct(base.mean_ttft_ms, over.mean_ttft_ms)
+        ),
+        format!(
+            "mean_itl_ms: {:.2} -> {:.2} ({})",
+            base.mean_itl_ms,
+            over.mean_itl_ms,
+            pct(base.mean_itl_ms, over.mean_itl_ms)
+        ),
+        format!(
+            "last_token_s: {:.3} -> {:.3} ({})",
+            base.last_token_s,
+            over.last_token_s,
+            pct(base.last_token_s, over.last_token_s)
+        ),
+    ]
 }
 
 /// Compare a recorded trace against its replay.  Empty = bit-identical
@@ -341,6 +599,9 @@ mod tests {
             max_preemptions: 0,
             faults: String::new(),
             fault_seed: 0,
+            shards: 1,
+            shard_plan: "auto".to_string(),
+            replicate_hot: 0.0,
         }
     }
 
@@ -465,6 +726,126 @@ mod tests {
     fn metaless_trace_cannot_replay() {
         let t = fold_trace(&[]);
         assert!(t.serving_config().is_err());
+        assert_eq!(t.recorded_shards(), 1);
+    }
+
+    #[test]
+    fn fold_assigns_shards_from_router_events() {
+        // The router emits shard_assigned at routing time, BEFORE the
+        // owning engine logs the arrival — the fold must still land it.
+        let events = vec![
+            TraceEvent::ShardAssigned { req: 0, t_us: 5.0, shard: 2 },
+            TraceEvent::RequestArrived {
+                req: 0,
+                t_us: 10.0,
+                prompt: vec![1],
+                max_new: 1,
+                width: 1,
+                slo_us: None,
+                deadline_us: None,
+            },
+            TraceEvent::RequestArrived {
+                req: 1,
+                t_us: 20.0,
+                prompt: vec![2],
+                max_new: 1,
+                width: 1,
+                slo_us: None,
+                deadline_us: None,
+            },
+        ];
+        let t = fold_trace(&events);
+        assert_eq!(t.requests[0].shard, Some(2));
+        assert_eq!(t.requests[1].shard, None, "unrouted request keeps no shard");
+    }
+
+    #[test]
+    fn meta_roundtrips_fleet_fields_into_the_config() {
+        let mut t = fold_trace(&[meta()]);
+        let Some(TraceEvent::Meta { shards, shard_plan, replicate_hot, .. }) = &mut t.meta else {
+            unreachable!()
+        };
+        *shards = 3;
+        *shard_plan = "hash".to_string();
+        *replicate_hot = 0.2;
+        let cfg = t.serving_config().unwrap();
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.shard_plan, ShardPlan::Hash);
+        assert!((cfg.replicate_hot - 0.2).abs() < 1e-12);
+        assert_eq!(t.recorded_shards(), 3);
+        // Legacy traces record no shard_plan; fold must not choke.
+        let Some(TraceEvent::Meta { shard_plan, .. }) = &mut t.meta else { unreachable!() };
+        *shard_plan = String::new();
+        assert_eq!(t.serving_config().unwrap().shard_plan, ShardPlan::Auto);
+    }
+
+    #[test]
+    fn broadcast_controls_fold_back_to_one_per_action() {
+        // 2-shard recording, shards logged sequentially: each shard saw
+        // the same reload-then-drain sequence at its own clock times.
+        let reload = ControlMsg::Reload(ReloadSpec::default());
+        let controls = vec![
+            (100.0, reload.clone()),
+            (300.0, ControlMsg::Drain),
+            (120.0, reload.clone()),
+            (310.0, ControlMsg::Drain),
+        ];
+        let d = dedup_broadcast_controls(&controls, 2);
+        assert_eq!(d.len(), 2);
+        assert_eq!(d[0].0, 100.0, "earliest application time wins");
+        assert_eq!(d[0].1.op(), "reload");
+        assert_eq!(d[1].0, 300.0);
+        assert_eq!(d[1].1.op(), "drain");
+        // Non-divisible counts are kept verbatim, not guessed at.
+        assert_eq!(dedup_broadcast_controls(&controls[..3], 2).len(), 3);
+        // Single-engine recordings pass through untouched.
+        assert_eq!(dedup_broadcast_controls(&controls, 1).len(), 4);
+    }
+
+    #[test]
+    fn config_overrides_parse_and_reject_junk() {
+        let mut cfg = ServingConfig::default();
+        apply_config_overrides(
+            &mut cfg,
+            "shards=3, shard-plan=layer, replicate_hot=0.25, admission=sjf, kv-budget-mb=64",
+        )
+        .unwrap();
+        assert_eq!(cfg.shards, 3);
+        assert_eq!(cfg.shard_plan, ShardPlan::Layer);
+        assert!((cfg.replicate_hot - 0.25).abs() < 1e-12);
+        assert_eq!(cfg.admission, AdmissionKind::ShortestFirst);
+        assert_eq!(cfg.kv_budget_mb, 64);
+        assert!(apply_config_overrides(&mut cfg, "shards").is_err());
+        assert!(apply_config_overrides(&mut cfg, "wedge=1").is_err());
+        assert!(apply_config_overrides(&mut cfg, "shards=zero").is_err());
+        assert!(apply_config_overrides(&mut cfg, "").is_ok(), "empty spec is a no-op");
+    }
+
+    #[test]
+    fn aggregates_summarize_and_diff() {
+        let outcomes = vec![
+            ReplayOutcome {
+                id: 0,
+                tokens: vec![1, 2],
+                metrics: Some(GenMetrics {
+                    enqueue_us: 0.0,
+                    first_token_us: 1_000.0,
+                    token_done_us: vec![1_000.0, 3_000.0],
+                    ..GenMetrics::default()
+                }),
+                error: None,
+            },
+            ReplayOutcome { id: 1, error: Some("cancelled".into()), ..Default::default() },
+        ];
+        let a = aggregate_outcomes(&outcomes);
+        assert_eq!(a.completed, 1);
+        assert_eq!(a.failed, 1);
+        assert_eq!(a.output_tokens, 2);
+        assert!((a.mean_itl_ms - 2.0).abs() < 1e-9);
+        assert!((a.last_token_s - 0.003).abs() < 1e-12);
+        let d = diff_aggregates(&a, &a);
+        assert_eq!(d.len(), 6);
+        assert!(d[0].contains("1 -> 1"), "{d:?}");
     }
 
     #[test]

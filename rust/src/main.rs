@@ -65,7 +65,11 @@ fn print_help() {
                           [--reload-prefill-chunk C] [--reload-slo-ttft-ms D]\n\
                           [--reload-max-preemptions P], --drain-at-ms T\n\
            trace-replay   --trace T.jsonl   re-runs the recorded workload and\n\
-                          diffs token streams (exit 1 on divergence)\n\
+                          diffs token streams (exit 1 on divergence);\n\
+                          --config-override \"k=v,...\" replays A/B under an\n\
+                          overridden config and diffs aggregate metrics\n\
+                          (keys: shards, shard-plan, replicate-hot, admission,\n\
+                          max-batch, kv-budget-mb, prefill-chunk, ...)\n\
            trace-summary  --trace T.jsonl   per-request flame summaries\n\
                           (queue / prefill chunks / ITL / cache hits)\n\
          \n\
@@ -93,6 +97,16 @@ fn print_help() {
                    --max-preemptions P preempt up to P times per decoding\n\
                                        sequence to admit SLO-tight arrivals\n\
                                        (drop-and-recompute KV; 0 = reject-only)\n\
+                   --shards N          expert-sharded fleet: N engines behind\n\
+                                       one router (1 = single engine, default;\n\
+                                       bit-identical to previous releases)\n\
+                   --shard-plan P      layer | hash | auto — expert partition\n\
+                                       across shards; auto prices both against\n\
+                                       the latency model and picks the lower\n\
+                                       worst-shard step time\n\
+                   --replicate-hot F   replicate experts whose routed-token\n\
+                                       share exceeds F onto extra shards\n\
+                                       (0 = off)\n\
                    --faults SPEC       deterministic fault injection, e.g.\n\
                                        stall=0.1:30000,spike=0.05:50000,err=0.01\n\
                                        (--fault-seed S decorrelates from --seed)\n\
@@ -193,6 +207,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if args.get("ngl").is_none() {
         serving.ngl = ServingConfig::paper_ngl_for(&hw.name);
     }
+    // --shards N > 1: route through the expert-sharded fleet instead of
+    // a single engine (--shards 1 stays on the single-engine scheduler,
+    // token-bit-identical to previous releases).
+    if serving.shards > 1 {
+        return cmd_serve_fleet(args, model, hw, serving);
+    }
     let conn_timeout_ms = serving.conn_timeout_ms;
     let hw2 = hw.clone();
     let handle = ServerHandle::spawn(move || {
@@ -218,6 +238,93 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
         })
         .collect();
+    let mut tps = Vec::new();
+    for (i, rx) in receivers.iter().enumerate() {
+        let (tokens, m) = collect(rx)?;
+        println!(
+            "req {i}: {} tokens | ttft {:.1} ms | queue {:.1} ms | {:.2} tok/s",
+            tokens.len(),
+            m.ttft_us() / 1e3,
+            m.queue_delay_us() / 1e3,
+            m.tokens_per_s()
+        );
+        tps.push(m.tokens_per_s());
+    }
+    println!(
+        "aggregate: {:.2} tok/s mean over {n_requests} requests (virtual time)",
+        fiddler::util::stats::mean(&tps)
+    );
+    handle.shutdown()
+}
+
+/// N-shard fleet serving: a front-end router owns global ingest order
+/// and dispatches each request to one of `--shards` engines by predicted
+/// expert demand; the sharding planner prices `--shard-plan layer|hash`
+/// against the latency model's bottleneck decomposition before the first
+/// request lands.
+fn cmd_serve_fleet(
+    args: &Args,
+    model: String,
+    hw: HardwareConfig,
+    serving: ServingConfig,
+) -> Result<()> {
+    use fiddler::events::EventSink;
+    use fiddler::popularity::Profile;
+    use fiddler::prefetch::TransitionProfile;
+    use fiddler::server::fleet::{plan_shards, FleetHandle, FleetRouter};
+
+    let dir = figures::artifact_dir(&model);
+    let analysis = dir.join("analysis/analysis.json");
+    // Planner inputs: the build-time popularity/transition profiles when
+    // the artifacts carry them, a flat single-layer profile otherwise.
+    let profile = Profile::load(&analysis).unwrap_or_else(|_| Profile::new(1, 8));
+    let transitions = TransitionProfile::load(&analysis).ok();
+    let lat = LatencyModel::from_hardware(&hw);
+    let plan =
+        plan_shards(&profile, &lat, serving.shards, serving.shard_plan, serving.ngl.max(1));
+    println!(
+        "fleet: {} shards | plan {} | bottlenecks [{}] | priced step {:.2} ms",
+        plan.n_shards,
+        plan.plan.label(),
+        plan.bottleneck_summary(),
+        plan.max_step_us() / 1e3
+    );
+    let sink = match serving.events_out.as_deref() {
+        Some(path) => EventSink::to_path(path)?,
+        None => EventSink::disabled(),
+    };
+    let router = FleetRouter::new(plan, transitions, serving.replicate_hot, sink.clone());
+    let conn_timeout_ms = serving.conn_timeout_ms;
+    let make_serving = serving.clone();
+    let handle = FleetHandle::spawn(router, move |_shard| {
+        let mut engine =
+            Engine::new(figures::artifact_dir(&model), &hw, make_serving.clone())?;
+        // One shared sink across the fleet: each shard's serve loop sees
+        // it pre-armed and skips opening --events-out itself (N engines
+        // opening one path would clobber each other).
+        if sink.is_enabled() {
+            engine.set_event_sink(sink.clone());
+        }
+        Ok(engine)
+    });
+
+    if let Some(addr) = args.get("listen") {
+        let listener = std::net::TcpListener::bind(addr)?;
+        println!("listening on {addr} (protocol: see rust/src/server/net.rs)");
+        fiddler::server::net::serve_tcp(listener, handle.requests.clone(), conn_timeout_ms)?;
+        return handle.shutdown();
+    }
+
+    anyhow::ensure!(
+        args.usize_or("width", 1) == 1,
+        "beam groups are not fleet-routed yet; use --shards 1 for --width > 1"
+    );
+    let n_requests = args.usize_or("requests", 8);
+    let inp = args.usize_or("inp", 32);
+    let out = args.usize_or("out", 64);
+    let mut gen = WorkloadGen::new(Dataset::sharegpt(), 512, args.u64_or("seed", 0));
+    let receivers: Vec<_> =
+        (0..n_requests).map(|_| handle.submit(gen.prompt(inp), out)).collect();
     let mut tps = Vec::new();
     for (i, rx) in receivers.iter().enumerate() {
         let (tokens, m) = collect(rx)?;
@@ -289,7 +396,18 @@ fn cmd_trace_record(args: &Args) -> Result<()> {
         fiddler::server::sim::FailPoints::parse(f, serving.fault_seed)?;
     }
     let spec = load_spec_from(args)?;
-    let report = fiddler::server::sim::run_open_loop(serving, &spec)?;
+    // --shards N > 1 records through the fleet harness (router events,
+    // per-shard engines); --shards 1 stays on the single-engine path.
+    let report = if serving.shards > 1 {
+        let fleet = fiddler::server::sim::run_fleet_open_loop(serving, &spec)?;
+        println!(
+            "fleet: plan {} | per-shard {:?} | bottlenecks [{}]",
+            fleet.plan, fleet.per_shard, fleet.bottlenecks
+        );
+        fleet.report
+    } else {
+        fiddler::server::sim::run_open_loop(serving, &spec)?
+    };
     println!(
         "recorded {path}: {} completed / {} rejected | {:.2} tok/s | makespan {:.2} s (virtual)",
         report.completed,
@@ -317,10 +435,27 @@ fn cmd_trace_record(args: &Args) -> Result<()> {
 }
 
 fn cmd_trace_replay(args: &Args) -> Result<()> {
+    use fiddler::events::replay;
     let path = args.str_or("trace", "trace.jsonl");
-    let events = fiddler::events::replay::read_log(path)?;
-    let rec = fiddler::events::replay::fold_trace(&events);
-    let outcomes = fiddler::events::replay::replay_trace(&rec)?;
+    let events = replay::read_log(path)?;
+    let rec = replay::fold_trace(&events);
+    // --config-override "k=v,...": A/B harness — replay the recorded
+    // workload under the trace's own config AND the overridden one, and
+    // diff aggregate metrics (token streams legitimately change under a
+    // different config, so bit-diffing them would only report noise).
+    if let Some(spec) = args.get("config-override") {
+        let base_cfg = rec.serving_config()?;
+        let mut over_cfg = base_cfg.clone();
+        replay::apply_config_overrides(&mut over_cfg, spec)?;
+        let base = replay::aggregate_outcomes(&replay::replay_with_config(&rec, base_cfg)?);
+        let over = replay::aggregate_outcomes(&replay::replay_with_config(&rec, over_cfg)?);
+        println!("A/B replay of {path} under --config-override {spec:?}:");
+        for line in replay::diff_aggregates(&base, &over) {
+            println!("  {line}");
+        }
+        return Ok(());
+    }
+    let outcomes = replay::replay_trace(&rec)?;
     let diffs = fiddler::events::replay::diff_replay(&rec, &outcomes);
     if diffs.is_empty() {
         println!(

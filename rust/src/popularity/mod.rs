@@ -92,6 +92,34 @@ impl Profile {
         hit as f64 / total as f64
     }
 
+    /// Per-(layer, expert) replica counts for fleet serving: an expert
+    /// whose share of total routed tokens exceeds `hot_fraction` is
+    /// replicated onto `ceil(share / hot_fraction)` engines (capped at
+    /// `max_replicas`, i.e. the shard count); everything else keeps one
+    /// replica.  `hot_fraction <= 0` disables replication entirely.
+    pub fn replica_counts(&self, hot_fraction: f64, max_replicas: usize) -> Vec<Vec<usize>> {
+        let total = self.total();
+        let max_replicas = max_replicas.max(1);
+        self.counts
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|&c| {
+                        if hot_fraction <= 0.0 || total == 0 {
+                            return 1;
+                        }
+                        let share = c as f64 / total as f64;
+                        if share > hot_fraction {
+                            ((share / hot_fraction).ceil() as usize).clamp(1, max_replicas)
+                        } else {
+                            1
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
     /// Appendix-C style analysis for a capacity: (best, worst, random)
     /// expected hit rates.
     pub fn hit_rate_analysis(&self, capacity: usize) -> (f64, f64, f64) {
@@ -154,6 +182,21 @@ mod tests {
         let n = p.normalized();
         let flat: Vec<f64> = n.iter().flatten().copied().collect();
         assert!((flat.iter().cloned().fold(0.0, f64::max) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn replica_counts_scale_with_share() {
+        let p = profile(); // totals 230; (0,0)=100 → share ~0.435
+        let r = p.replica_counts(0.25, 4);
+        assert_eq!(r[0][0], 2, "share 0.435 / 0.25 → 2 replicas");
+        assert_eq!(r[0][1], 1, "cold expert keeps one replica");
+        assert_eq!(r[1][3], 2, "share 0.370 / 0.25 → 2 replicas");
+        // Cap at the shard count.
+        let r = p.replica_counts(0.05, 3);
+        assert_eq!(r[0][0], 3);
+        // Disabled / empty profiles never replicate.
+        assert!(p.replica_counts(0.0, 4).iter().flatten().all(|&n| n == 1));
+        assert!(Profile::new(1, 2).replica_counts(0.25, 4).iter().flatten().all(|&n| n == 1));
     }
 
     #[test]

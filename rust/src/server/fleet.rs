@@ -1,0 +1,747 @@
+//! Expert-sharded multi-engine fleet (`--shards N`).
+//!
+//! One box runs Fiddler's Algorithm 1; a fleet runs N of them behind a
+//! front-end router that owns GLOBAL ingest order and dispatches each
+//! request to the engine predicted to already hold its experts:
+//!
+//! ```text
+//!                        ┌────────────┐     shard 0: serve_lifecycle
+//!   clients ──requests──▶│ FleetRouter│────▶ (own KvBudget, ExpertCache)
+//!                        │  ids, plan,│     shard 1: serve_lifecycle
+//!                        │  load acct │────▶   ...
+//!                        └────────────┘     shard N-1
+//!                          ▲        │
+//!                   popularity   ShardAssigned / ReplicaScaled /
+//!                   + chains     PlanChosen trace events
+//! ```
+//!
+//! * **Sharding planner** ([`plan_shards`]): partitions the expert set
+//!   per-layer (`layer`: layer `l` owned by shard `l % N`) or by hash
+//!   (`hash`: FNV over `(layer, expert)`), pricing each candidate layout
+//!   against a MoE-Lens-style bottleneck model — per shard, resident
+//!   demand runs on the GPU, missed demand runs on whichever of the CPU
+//!   path or the PCIe weight-copy path is cheaper, and the shard's step
+//!   time is the max of the overlapped streams.  `auto` picks the layout
+//!   with the lower worst-shard step time.
+//! * **Router** ([`FleetRouter`]): predicts a request's expert demand
+//!   from its prompt (layer-0 histogram propagated through the
+//!   [`TransitionProfile`] chain) and scores each shard by owned demand
+//!   mass minus a load-balance term; ids are assigned at the router so
+//!   trace `req` fields reflect global ingest order on every shard.
+//! * **Replica scaling**: the router accounts observed demand in a
+//!   [`Profile`] and replicates any expert whose share exceeds
+//!   `--replicate-hot F` onto `ceil(share/F)` shards
+//!   ([`Profile::replica_counts`]), emitting `replica_scaled` as counts
+//!   grow — a hot expert stops funneling every request to one engine.
+//! * **Batch-aware admission** ([`worth_admitting`]): an expert is worth
+//!   a pinned GPU slot on a shard only when its predicted reuse at that
+//!   shard's arrival rate beats the PCIe transfer it saves.
+//!
+//! With `--shards 1` the router degenerates to a pass-through (every
+//! request to shard 0, ids in arrival order) and the fleet is
+//! token-bit-identical to the single-engine scheduler — property-tested
+//! in `tests/fleet.rs`.
+
+use super::{ControlMsg, Event, Request, ServeBackend};
+use crate::config::serving::ShardPlan;
+use crate::events::{EventSink, TraceEvent};
+use crate::expertcache::ExpertCache;
+use crate::latency::LatencyModel;
+use crate::popularity::Profile;
+use crate::prefetch::TransitionProfile;
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// FNV-1a over `(layer, expert)` — the hash partition's shard pick.
+fn expert_hash(layer: usize, expert: usize) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in (layer as u64).to_le_bytes().into_iter().chain((expert as u64).to_le_bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Home shard of `(layer, expert)` under a RESOLVED partition (`auto`
+/// must be resolved by [`plan_shards`] first).
+pub fn shard_of_expert(plan: ShardPlan, layer: usize, expert: usize, n_shards: usize) -> usize {
+    match plan {
+        ShardPlan::Layer => layer % n_shards.max(1),
+        ShardPlan::Hash => (expert_hash(layer, expert) % n_shards.max(1) as u64) as usize,
+        ShardPlan::Auto => unreachable!("auto must be resolved by plan_shards"),
+    }
+}
+
+/// One shard's priced step-time decomposition (µs per unit of demand
+/// mass, MoE-Lens style): resident demand on the GPU, missed demand on
+/// the cheaper of the CPU path and the PCIe weight-copy path.
+#[derive(Clone, Debug)]
+pub struct ShardCost {
+    pub gpu_us: f64,
+    pub cpu_us: f64,
+    pub pcie_us: f64,
+}
+
+impl ShardCost {
+    /// Step time of the shard: the GPU stream overlaps the miss stream
+    /// (Fiddler's orchestration), and misses take the cheaper path.
+    pub fn step_us(&self) -> f64 {
+        self.gpu_us.max(self.cpu_us.min(self.pcie_us))
+    }
+
+    /// Which resource saturates first: `gpu`, `cpu-bw`, or `pcie`.
+    pub fn bottleneck(&self) -> &'static str {
+        let miss = self.cpu_us.min(self.pcie_us);
+        if self.gpu_us >= miss {
+            "gpu"
+        } else if self.cpu_us <= self.pcie_us {
+            "cpu-bw"
+        } else {
+            "pcie"
+        }
+    }
+}
+
+/// A priced expert partition: the resolved layout plus each shard's
+/// bottleneck decomposition.
+#[derive(Clone, Debug)]
+pub struct ShardingPlan {
+    /// Resolved partition — `Layer` or `Hash`, never `Auto`.
+    pub plan: ShardPlan,
+    pub n_shards: usize,
+    pub costs: Vec<ShardCost>,
+}
+
+impl ShardingPlan {
+    pub fn shard_of(&self, layer: usize, expert: usize) -> usize {
+        shard_of_expert(self.plan, layer, expert, self.n_shards)
+    }
+
+    /// Worst shard's step time — the fleet's throughput bound.
+    pub fn max_step_us(&self) -> f64 {
+        self.costs.iter().map(|c| c.step_us()).fold(0.0, f64::max)
+    }
+
+    /// Comma-joined per-shard bottleneck labels (the `plan_chosen`
+    /// event's `bottleneck` field), e.g. `"cpu-bw,pcie,gpu"`.
+    pub fn bottleneck_summary(&self) -> String {
+        self.costs.iter().map(|c| c.bottleneck()).collect::<Vec<_>>().join(",")
+    }
+}
+
+/// Price one candidate partition: each shard's owned demand mass is
+/// normalized to 1; the most popular owned experts up to
+/// `gpu_capacity_per_shard` are resident (GPU), the rest miss.
+fn price_plan(
+    plan: ShardPlan,
+    profile: &Profile,
+    model: &LatencyModel,
+    n_shards: usize,
+    gpu_capacity_per_shard: usize,
+) -> ShardingPlan {
+    let mut owned: Vec<Vec<(u64, usize, usize)>> = vec![Vec::new(); n_shards];
+    for l in 0..profile.n_layers {
+        for e in 0..profile.n_experts {
+            let s = shard_of_expert(plan, l, e, n_shards);
+            owned[s].push((profile.counts[l][e], l, e));
+        }
+    }
+    let costs = owned
+        .into_iter()
+        .map(|mut experts| {
+            // Most popular first; ties by (layer, expert) for determinism.
+            experts.sort_by_key(|&(c, l, e)| (std::cmp::Reverse(c), l, e));
+            let total: u64 = experts.iter().map(|&(c, _, _)| c).sum();
+            let resident: u64 =
+                experts.iter().take(gpu_capacity_per_shard).map(|&(c, _, _)| c).sum();
+            let (hit_mass, miss_mass) = if total == 0 {
+                // No demand signal: assume uniform residency coverage.
+                let k = gpu_capacity_per_shard.min(experts.len());
+                let f = if experts.is_empty() { 1.0 } else { k as f64 / experts.len() as f64 };
+                (f, 1.0 - f)
+            } else {
+                let h = resident as f64 / total as f64;
+                (h, 1.0 - h)
+            };
+            ShardCost {
+                gpu_us: hit_mass * model.gpu_lat(1),
+                cpu_us: miss_mass * model.cpu_lat(1),
+                pcie_us: miss_mass * (model.transfer_lat() + model.gpu_lat(1)),
+            }
+        })
+        .collect();
+    ShardingPlan { plan, n_shards, costs }
+}
+
+/// Choose and price the expert partition for an `n_shards` fleet.
+/// `requested = auto` prices both layouts and keeps the one with the
+/// lower worst-shard step time (ties prefer `layer` — contiguous layers
+/// keep chain prediction within one shard).
+pub fn plan_shards(
+    profile: &Profile,
+    model: &LatencyModel,
+    n_shards: usize,
+    requested: ShardPlan,
+    gpu_capacity_per_shard: usize,
+) -> ShardingPlan {
+    let n_shards = n_shards.max(1);
+    match requested {
+        ShardPlan::Layer | ShardPlan::Hash => {
+            price_plan(requested, profile, model, n_shards, gpu_capacity_per_shard)
+        }
+        ShardPlan::Auto => {
+            let cap = gpu_capacity_per_shard;
+            let layer = price_plan(ShardPlan::Layer, profile, model, n_shards, cap);
+            let hash = price_plan(ShardPlan::Hash, profile, model, n_shards, cap);
+            if hash.max_step_us() < layer.max_step_us() {
+                hash
+            } else {
+                layer
+            }
+        }
+    }
+}
+
+/// Batch-aware cache admission: is `share` (an expert's fraction of the
+/// shard's routed demand) worth a pinned GPU slot at this shard's
+/// `arrival_rate_per_s`?  Expected uses over the planning horizon save
+/// `cpu_lat(1) - gpu_lat(1)` each; admission costs one PCIe transfer.
+pub fn worth_admitting(
+    share: f64,
+    arrival_rate_per_s: f64,
+    horizon_s: f64,
+    model: &LatencyModel,
+) -> bool {
+    let expected_uses = share * arrival_rate_per_s * horizon_s;
+    expected_uses * (model.cpu_lat(1) - model.gpu_lat(1)) > model.transfer_lat()
+}
+
+/// Pre-pin the shard's worthwhile experts (most popular owned first)
+/// into its [`ExpertCache`], stopping at `max_pins`, at capacity, or at
+/// the first expert whose reuse no longer pays for its transfer.
+/// Returns the pinned ids.
+#[allow(clippy::too_many_arguments)]
+pub fn pin_worthwhile(
+    cache: &mut ExpertCache,
+    profile: &Profile,
+    plan: &ShardingPlan,
+    shard: usize,
+    arrival_rate_per_s: f64,
+    horizon_s: f64,
+    model: &LatencyModel,
+    max_pins: usize,
+) -> Vec<(usize, usize)> {
+    let total = profile.total();
+    let mut pinned = Vec::new();
+    if total == 0 {
+        return pinned;
+    }
+    for (l, e) in profile.ranked() {
+        if pinned.len() >= max_pins || cache.pinned_count() >= cache.capacity() {
+            break;
+        }
+        if plan.shard_of(l, e) != shard || cache.is_pinned((l, e)) {
+            continue;
+        }
+        let share = profile.counts[l][e] as f64 / total as f64;
+        if !worth_admitting(share, arrival_rate_per_s, horizon_s, model) {
+            break; // ranked order: nothing less popular is worth it either
+        }
+        cache.pin((l, e));
+        pinned.push((l, e));
+    }
+    pinned
+}
+
+/// Front-end router: owns global ingest ids, per-shard load accounting,
+/// demand-profile accumulation, and replica scaling.  Deterministic —
+/// the same request sequence always produces the same assignment, which
+/// is what makes the fleet replayable and property-testable.
+pub struct FleetRouter {
+    plan: ShardingPlan,
+    transitions: Option<TransitionProfile>,
+    /// Online demand accounting (layer-0 histogram propagated per layer).
+    demand: Profile,
+    replicate_hot: f64,
+    /// Current replica count per (layer, expert); grows monotonically.
+    replicas: Vec<Vec<usize>>,
+    /// Outstanding assigned work (prompt + max_new tokens) per shard.
+    load_tokens: Vec<u64>,
+    /// Owning shard of every routed request id (cancel routing).
+    assigned: HashMap<u64, usize>,
+    next_id: u64,
+    sink: EventSink,
+}
+
+impl FleetRouter {
+    pub fn new(
+        plan: ShardingPlan,
+        transitions: Option<TransitionProfile>,
+        replicate_hot: f64,
+        sink: EventSink,
+    ) -> FleetRouter {
+        let (n_layers, n_experts) = match &transitions {
+            Some(t) => (t.n_layers, t.n_experts),
+            None => (1, 8),
+        };
+        let n_shards = plan.n_shards;
+        let (plan_label, bottleneck) = (plan.plan.label().to_string(), plan.bottleneck_summary());
+        sink.emit_with(|| TraceEvent::PlanChosen {
+            t_us: 0.0,
+            plan: plan_label.clone(),
+            shards: n_shards,
+            bottleneck: bottleneck.clone(),
+        });
+        FleetRouter {
+            plan,
+            transitions,
+            demand: Profile::new(n_layers, n_experts),
+            replicate_hot,
+            replicas: vec![vec![1; n_experts]; n_layers],
+            load_tokens: vec![0; n_shards],
+            assigned: HashMap::new(),
+            next_id: 0,
+            sink,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.plan.n_shards
+    }
+
+    pub fn plan(&self) -> &ShardingPlan {
+        &self.plan
+    }
+
+    /// Shards holding a replica of `(layer, expert)`: the home shard and
+    /// the next `replicas - 1` shards, wrapping.
+    fn replica_shards(&self, layer: usize, expert: usize) -> impl Iterator<Item = usize> + '_ {
+        let base = self.plan.shard_of(layer, expert);
+        let n = self.plan.n_shards;
+        let k = self.replicas[layer][expert].min(n);
+        (0..k).map(move |j| (base + j) % n)
+    }
+
+    /// Per-layer demand mass predicted for a prompt: layer-0 histogram of
+    /// `token % n_experts` (the routing signal available before any
+    /// forward pass), propagated layer-to-layer through the transition
+    /// chains when available, uniform otherwise.
+    fn predicted_demand(&self, prompt: &[u32]) -> Vec<Vec<f64>> {
+        let (n_layers, n_experts) = (self.demand.n_layers, self.demand.n_experts);
+        let mut first = vec![0.0; n_experts];
+        for &t in prompt {
+            first[t as usize % n_experts] += 1.0;
+        }
+        let total: f64 = first.iter().sum();
+        if total > 0.0 {
+            for m in first.iter_mut() {
+                *m /= total;
+            }
+        } else {
+            first.fill(1.0 / n_experts as f64);
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        layers.push(first);
+        for l in 1..n_layers {
+            let next = match &self.transitions {
+                Some(t) if l < t.n_layers => {
+                    let mut m = t.propagate_mass(l - 1, layers.last().unwrap());
+                    let s: f64 = m.iter().sum();
+                    if s > 0.0 {
+                        for x in m.iter_mut() {
+                            *x /= s;
+                        }
+                    }
+                    m
+                }
+                _ => vec![1.0 / n_experts as f64; n_experts],
+            };
+            layers.push(next);
+        }
+        layers
+    }
+
+    /// Grow replica counts to match measured popularity, emitting
+    /// `replica_scaled` for every increase.
+    fn rescale_replicas(&mut self, t_us: f64) {
+        if self.replicate_hot <= 0.0 || self.plan.n_shards < 2 {
+            return;
+        }
+        let want = self.demand.replica_counts(self.replicate_hot, self.plan.n_shards);
+        for l in 0..self.demand.n_layers {
+            for e in 0..self.demand.n_experts {
+                if want[l][e] > self.replicas[l][e] {
+                    self.replicas[l][e] = want[l][e];
+                    let n = want[l][e];
+                    self.sink.emit_with(|| TraceEvent::ReplicaScaled {
+                        t_us,
+                        layer: l,
+                        expert: e,
+                        replicas: n,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Route one request: assign the next global id, pick the shard with
+    /// the most owned predicted-demand mass (minus a load-balance term),
+    /// account the demand, and emit `shard_assigned`.
+    pub fn route(&mut self, prompt: &[u32], max_new: usize, t_us: f64) -> (u64, usize) {
+        let id = self.next_id;
+        self.next_id += 1;
+        let shard = if self.plan.n_shards == 1 {
+            0
+        } else {
+            let demand = self.predicted_demand(prompt);
+            // Affinity normalized to a unit of total demand mass so the
+            // load-balance term below is on the same scale.
+            let norm = demand.len().max(1) as f64;
+            let mut affinity = vec![0.0f64; self.plan.n_shards];
+            for (l, layer_mass) in demand.iter().enumerate() {
+                for (e, &m) in layer_mass.iter().enumerate() {
+                    if m == 0.0 {
+                        continue;
+                    }
+                    // A replicated expert serves its mass from any holder.
+                    let k = self.replicas[l][e].min(self.plan.n_shards) as f64;
+                    for s in self.replica_shards(l, e) {
+                        affinity[s] += m / (k * norm);
+                    }
+                }
+            }
+            // Demand accounting feeds replica scaling (layer-0 signal is
+            // the measured one; deeper layers are model-predicted).
+            for (l, layer_mass) in demand.iter().enumerate() {
+                for (e, &m) in layer_mass.iter().enumerate() {
+                    let tokens = (m * prompt.len().max(1) as f64).round() as u64;
+                    if tokens > 0 {
+                        self.demand.record(l, e, tokens);
+                    }
+                }
+            }
+            self.rescale_replicas(t_us);
+            let total_load: u64 = self.load_tokens.iter().sum();
+            let score = |s: usize| {
+                let balance = if total_load == 0 {
+                    0.0
+                } else {
+                    0.5 * self.load_tokens[s] as f64 / total_load as f64
+                };
+                affinity[s] - balance
+            };
+            (0..self.plan.n_shards)
+                .max_by(|&a, &b| {
+                    score(a)
+                        .total_cmp(&score(b))
+                        // Ties: less loaded shard, then lower index.
+                        .then(self.load_tokens[b].cmp(&self.load_tokens[a]))
+                        .then(b.cmp(&a))
+                })
+                .unwrap_or(0)
+        };
+        self.load_tokens[shard] += (prompt.len() + max_new) as u64;
+        self.assigned.insert(id, shard);
+        self.sink.emit_with(|| TraceEvent::ShardAssigned { req: id, t_us, shard });
+        (id, shard)
+    }
+
+    /// Owning shard of a routed request (cancel routing).
+    pub fn shard_of_request(&self, id: u64) -> Option<usize> {
+        self.assigned.get(&id).copied()
+    }
+
+    /// Mark a request finished: its outstanding load leaves the balance
+    /// accounting (the id stays known for late cancels, which no-op).
+    pub fn complete(&mut self, id: u64, prompt_len: usize, max_new: usize) {
+        if let Some(&shard) = self.assigned.get(&id) {
+            self.load_tokens[shard] =
+                self.load_tokens[shard].saturating_sub((prompt_len + max_new) as u64);
+        }
+    }
+}
+
+/// Handle to a running fleet: a router thread fronting N shard worker
+/// threads, each owning its backend and running the full lifecycle
+/// scheduler.  The public [`FleetHandle::requests`] sender is what
+/// `serve_tcp` plugs into — the fleet is wire-compatible with the
+/// single-engine server.
+pub struct FleetHandle {
+    pub requests: Sender<Request>,
+    router: JoinHandle<()>,
+    shards: Vec<JoinHandle<Result<()>>>,
+}
+
+impl FleetHandle {
+    /// Spawn the fleet: `make(shard)` constructs each shard's backend on
+    /// its own thread (backends are thread-affine).  The router applies
+    /// [`FleetRouter`] policy to every generation request, routes
+    /// `Cancel` to the owning shard, and broadcasts `Reload` / `Drain` /
+    /// shutdown to every shard.
+    pub fn spawn<B, F>(mut router: FleetRouter, make: F) -> FleetHandle
+    where
+        B: ServeBackend,
+        F: Fn(usize) -> Result<B> + Send + Sync + 'static,
+    {
+        let n = router.n_shards();
+        let make = std::sync::Arc::new(make);
+        let mut shard_txs: Vec<Sender<Request>> = Vec::with_capacity(n);
+        let mut shards = Vec::with_capacity(n);
+        for s in 0..n {
+            let (tx, rx): (Sender<Request>, Receiver<Request>) = channel();
+            shard_txs.push(tx);
+            let make = make.clone();
+            shards.push(std::thread::spawn(move || {
+                let mut backend = make(s)?;
+                super::lifecycle::serve_lifecycle(&mut backend, rx)
+            }));
+        }
+        let (front_tx, front_rx): (Sender<Request>, Receiver<Request>) = channel();
+        let router_thread = std::thread::spawn(move || {
+            for r in front_rx {
+                if r.shutdown {
+                    for tx in &shard_txs {
+                        let _ = tx.send(Request::shutdown_sentinel());
+                    }
+                    break;
+                }
+                if let Some(ctl) = r.control.clone() {
+                    match &ctl {
+                        ControlMsg::Cancel { req } => {
+                            // Unknown ids go to shard 0, which acks the
+                            // no-op exactly like the single-engine path.
+                            let s = router.shard_of_request(*req).unwrap_or(0);
+                            let _ = shard_txs[s].send(r);
+                        }
+                        ControlMsg::Reload(_) | ControlMsg::Drain => {
+                            // Broadcast; every shard acks on the same
+                            // stream (clients treat acks as idempotent).
+                            for tx in &shard_txs {
+                                let mut c = Request::control(ctl.clone(), r.stream.clone());
+                                c.arrive_at_us = r.arrive_at_us;
+                                let _ = tx.send(c);
+                            }
+                        }
+                    }
+                    continue;
+                }
+                let t = r.arrive_at_us.unwrap_or(0.0);
+                let (id, shard) = router.route(&r.prompt, r.max_new, t);
+                let mut r = r;
+                r.id = Some(id);
+                // A dead shard drops the request; its stream disconnects
+                // and the client sees the channel close.
+                let _ = shard_txs[shard].send(r);
+            }
+            // front_tx dropped: shard channels close and shards drain.
+        });
+        FleetHandle { requests: front_tx, router: router_thread, shards }
+    }
+
+    /// Convenience mirror of [`super::ServerHandle::submit`].
+    pub fn submit(&self, prompt: Vec<u32>, max_new: usize) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        self.requests.send(Request::new(prompt, max_new, tx)).expect("fleet router gone");
+        rx
+    }
+
+    /// Send a control (cancel / reload / drain); broadcasts ack once per
+    /// shard for reload/drain.
+    pub fn control(&self, msg: ControlMsg) -> Receiver<Event> {
+        let (tx, rx) = channel();
+        self.requests.send(Request::control(msg, tx)).expect("fleet router gone");
+        rx
+    }
+
+    /// Shut the fleet down: every shard drains in-flight work, queued
+    /// requests fail with [`super::FailReason::Shutdown`], threads join.
+    pub fn shutdown(self) -> Result<()> {
+        let _ = self.requests.send(Request::shutdown_sentinel());
+        drop(self.requests);
+        self.router.join().expect("fleet router panicked");
+        let mut first_err = None;
+        for s in self.shards {
+            if let Err(e) = s.join().expect("shard thread panicked") {
+                first_err.get_or_insert(e);
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::HardwareConfig;
+
+    fn model() -> LatencyModel {
+        LatencyModel::from_hardware(&HardwareConfig::env1())
+    }
+
+    fn skewed_profile(n_layers: usize, n_experts: usize) -> Profile {
+        let mut p = Profile::new(n_layers, n_experts);
+        for l in 0..n_layers {
+            for e in 0..n_experts {
+                // One hot expert per layer, the rest cold.
+                p.counts[l][e] = if e == 0 { 1000 } else { 10 };
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn shard_of_expert_partitions_cover_all_shards() {
+        for plan in [ShardPlan::Layer, ShardPlan::Hash] {
+            let mut seen = vec![false; 3];
+            for l in 0..8 {
+                for e in 0..8 {
+                    let s = shard_of_expert(plan, l, e, 3);
+                    assert!(s < 3);
+                    seen[s] = true;
+                }
+            }
+            assert!(seen.iter().all(|&b| b), "{plan:?} left a shard empty");
+        }
+        // Single shard: everything home to 0.
+        assert_eq!(shard_of_expert(ShardPlan::Hash, 7, 5, 1), 0);
+    }
+
+    #[test]
+    fn plan_pricing_reports_bottlenecks_and_auto_picks_min_max() {
+        let p = skewed_profile(6, 8);
+        let m = model();
+        for requested in [ShardPlan::Layer, ShardPlan::Hash] {
+            let plan = plan_shards(&p, &m, 3, requested, 2);
+            assert_eq!(plan.plan, requested);
+            assert_eq!(plan.costs.len(), 3);
+            for c in &plan.costs {
+                assert!(c.step_us() > 0.0);
+                assert!(["gpu", "cpu-bw", "pcie"].contains(&c.bottleneck()));
+            }
+            assert_eq!(plan.bottleneck_summary().split(',').count(), 3);
+        }
+        let auto = plan_shards(&p, &m, 3, ShardPlan::Auto, 2);
+        let layer = plan_shards(&p, &m, 3, ShardPlan::Layer, 2);
+        let hash = plan_shards(&p, &m, 3, ShardPlan::Hash, 2);
+        assert!(auto.plan == ShardPlan::Layer || auto.plan == ShardPlan::Hash);
+        assert!(auto.max_step_us() <= layer.max_step_us() + 1e-9);
+        assert!(auto.max_step_us() <= hash.max_step_us() + 1e-9);
+    }
+
+    #[test]
+    fn full_residency_is_gpu_bound() {
+        // Capacity covers every expert: no misses, bottleneck is GPU.
+        let p = skewed_profile(2, 4);
+        let plan = plan_shards(&p, &model(), 2, ShardPlan::Layer, 100);
+        for c in &plan.costs {
+            assert_eq!(c.bottleneck(), "gpu");
+            assert!(c.cpu_us.abs() < 1e-9 && c.pcie_us.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn worth_admitting_thresholds_on_reuse() {
+        let m = model();
+        // A hot expert at high arrival rate easily repays one transfer.
+        assert!(worth_admitting(0.5, 100.0, 10.0, &m));
+        // A cold expert at a trickle does not.
+        assert!(!worth_admitting(1e-6, 0.1, 1.0, &m));
+        // Zero horizon: nothing is worth admitting.
+        assert!(!worth_admitting(1.0, 100.0, 0.0, &m));
+    }
+
+    #[test]
+    fn pin_worthwhile_respects_caps_and_order() {
+        let p = skewed_profile(2, 8);
+        let m = model();
+        let plan = plan_shards(&p, &m, 1, ShardPlan::Layer, 8);
+        let mut cache = ExpertCache::with_capacity(8);
+        let pinned = pin_worthwhile(&mut cache, &p, &plan, 0, 50.0, 10.0, &m, 3);
+        assert!(pinned.len() <= 3);
+        assert!(!pinned.is_empty(), "hot experts at heavy load must be pinned");
+        // The hot experts come first.
+        assert!(pinned.contains(&(0, 0)) || pinned.contains(&(1, 0)));
+        assert_eq!(cache.pinned_count(), pinned.len());
+        // Idempotent: nothing double-pins.
+        let again = pin_worthwhile(&mut cache, &p, &plan, 0, 50.0, 10.0, &m, 3);
+        for id in &again {
+            assert!(!pinned.contains(id));
+        }
+        // A dead shard rate pins nothing.
+        let mut cold = ExpertCache::with_capacity(8);
+        assert!(pin_worthwhile(&mut cold, &p, &plan, 0, 0.0, 10.0, &m, 3).is_empty());
+    }
+
+    fn router(n_shards: usize, replicate_hot: f64) -> FleetRouter {
+        let p = skewed_profile(4, 8);
+        let plan = plan_shards(&p, &model(), n_shards, ShardPlan::Layer, 2);
+        let t = TransitionProfile::uniform(4, 8);
+        FleetRouter::new(plan, Some(t), replicate_hot, EventSink::disabled())
+    }
+
+    #[test]
+    fn single_shard_routing_is_pass_through() {
+        let mut r = router(1, 0.25);
+        for i in 0..10u64 {
+            let (id, shard) = r.route(&[1, 2, 3], 8, i as f64);
+            assert_eq!(id, i, "ids are global ingest order");
+            assert_eq!(shard, 0);
+        }
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_balances_load() {
+        let route_all = || {
+            let mut r = router(3, 0.0);
+            (0..30u64)
+                .map(|i| r.route(&[i as u32, (i * 7) as u32, (i * 13) as u32], 16, i as f64))
+                .collect::<Vec<_>>()
+        };
+        let a = route_all();
+        let b = route_all();
+        assert_eq!(a, b, "routing must be deterministic");
+        // Every id unique and in ingest order.
+        for (i, &(id, shard)) in a.iter().enumerate() {
+            assert_eq!(id, i as u64);
+            assert!(shard < 3);
+        }
+        // The balance term keeps any one shard from taking everything.
+        let mut per_shard = [0usize; 3];
+        for &(_, s) in &a {
+            per_shard[s] += 1;
+        }
+        let used = per_shard.iter().filter(|&&n| n > 0).count();
+        assert!(used >= 2, "all load on one shard: {per_shard:?}");
+    }
+
+    #[test]
+    fn hot_drift_triggers_replica_scale_up() {
+        let mut r = router(3, 0.2);
+        assert!(r.replicas.iter().flatten().all(|&n| n == 1));
+        // Hammer one expert: token 5 → expert 5 at layer 0, every request.
+        for i in 0..50u64 {
+            r.route(&[5; 16], 8, i as f64);
+        }
+        assert!(
+            r.replicas[0][5] > 1,
+            "hot expert (0,5) must gain replicas, got {}",
+            r.replicas[0][5]
+        );
+    }
+
+    #[test]
+    fn cancel_routing_knows_the_owning_shard() {
+        let mut r = router(3, 0.0);
+        let (id, shard) = r.route(&[1, 2, 3, 4], 8, 0.0);
+        assert_eq!(r.shard_of_request(id), Some(shard));
+        assert_eq!(r.shard_of_request(999), None);
+        r.complete(id, 4, 8);
+        // Completion releases load but keeps the id known for late cancels.
+        assert_eq!(r.shard_of_request(id), Some(shard));
+    }
+}

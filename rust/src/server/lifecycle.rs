@@ -21,10 +21,11 @@
 //!   `0` = monolithic prefill (the original demo-loop behavior).
 //! * **Admission policies** (`--admission fcfs|sjf|slo`): FCFS, shortest
 //!   prompt first, or earliest-TTFT-deadline first driven by the virtual
-//!   clock ([`AdmissionKind`]).
+//!   clock ([`AdmissionKind`](crate::config::serving::AdmissionKind)).
 //! * **KV-memory budget** (`--kv-budget-mb M`): admission reserves each
 //!   request's worst-case KV footprint (paper scale,
-//!   [`PAPER_KV_BYTES_PER_TOKEN`]) against a bounded pool and queues —
+//!   [`PAPER_KV_BYTES_PER_TOKEN`](crate::config::hardware::PAPER_KV_BYTES_PER_TOKEN))
+//!   against a bounded pool and queues —
 //!   or rejects outright-infeasible requests — instead of OOMing.  Under
 //!   pressure the budget *borrows* headroom by shrinking the
 //!   [`ExpertCache`]'s unpinned capacity one expert slot at a time and
@@ -41,11 +42,15 @@
 //! testable in pure virtual time without model artifacts
 //! ([`crate::server::sim::SimBackend`]); the real [`Engine`] is the
 //! production backend.
+//!
+//! The engine-agnostic pieces — [`KvBudget`], the [`SequenceGroup`] /
+//! [`Phase`] / [`Slot`] state machine, admission ordering — live in
+//! [`super::core`] and are re-exported here; each shard of a
+//! [`super::fleet`] runs one `serve_lifecycle` instance over that core.
 
 use super::{ControlMsg, Event, FailReason, Request, MAX_REQUEST_TOKENS};
-use crate::config::hardware::{MIB, PAPER_EXPERT_BYTES, PAPER_KV_BYTES_PER_TOKEN};
-use crate::config::model::DECODE_BATCH_BUCKETS;
-use crate::config::serving::{AdmissionKind, ServingConfig};
+use crate::config::hardware::MIB;
+use crate::config::serving::ServingConfig;
 use crate::coordinator::beam::{select_candidates, top_indices_desc};
 use crate::coordinator::engine::log_softmax;
 use crate::coordinator::Engine;
@@ -56,6 +61,11 @@ use crate::util::rank_key;
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::mpsc::Receiver;
+
+pub use super::core::{
+    admission_order, effective_max_batch, kv_worst_case_bytes, park_pending, KvBudget, Phase,
+    SequenceGroup, Slot,
+};
 
 /// Everything the lifecycle scheduler needs from an inference engine.
 /// Implemented by the real [`Engine`] and by the artifact-free
@@ -210,261 +220,6 @@ impl ServeBackend for Engine {
     }
 }
 
-/// Decode-batch cap actually in effect: the configured `max_batch`,
-/// clamped to the largest AOT decode-batch bucket (and to >= 1).  The
-/// second element reports whether the config exceeded the bucket ceiling
-/// (the serve loop warns once).
-pub fn effective_max_batch(configured: usize) -> (usize, bool) {
-    let ceiling = *DECODE_BATCH_BUCKETS.last().unwrap();
-    (configured.clamp(1, ceiling), configured > ceiling)
-}
-
-/// Worst-case KV footprint of one request at paper scale: every slot of
-/// the group may grow to `prompt + max_new` tokens.
-pub fn kv_worst_case_bytes(prompt_tokens: usize, max_new: usize, width: usize) -> u64 {
-    ((prompt_tokens + max_new) * width) as u64 * PAPER_KV_BYTES_PER_TOKEN
-}
-
-/// KV-cache memory budget, arbitrating against the expert cache.
-///
-/// Reservations draw from a fixed pool (`--kv-budget-mb`); when the pool
-/// alone cannot cover a reservation the budget converts unpinned expert
-/// slots into headroom by shrinking the [`ExpertCache`] capacity (each
-/// slot is worth [`PAPER_EXPERT_BYTES`]), and returns the slots as
-/// reservations release.  Pinned placement is never touched.  A pool of 0
-/// disables budgeting entirely.
-#[derive(Debug)]
-pub struct KvBudget {
-    pool_bytes: u64,
-    expert_bytes: u64,
-    used_bytes: u64,
-    borrowed_slots: usize,
-}
-
-impl KvBudget {
-    pub fn new(pool_mb: usize) -> KvBudget {
-        KvBudget {
-            pool_bytes: pool_mb as u64 * MIB,
-            expert_bytes: PAPER_EXPERT_BYTES,
-            used_bytes: 0,
-            borrowed_slots: 0,
-        }
-    }
-
-    pub fn unlimited(&self) -> bool {
-        self.pool_bytes == 0
-    }
-
-    pub fn used_bytes(&self) -> u64 {
-        self.used_bytes
-    }
-
-    pub fn borrowed_slots(&self) -> usize {
-        self.borrowed_slots
-    }
-
-    /// Pool plus everything currently borrowed from the expert cache.
-    fn ceiling(&self) -> u64 {
-        self.pool_bytes + self.borrowed_slots as u64 * self.expert_bytes
-    }
-
-    /// Could `bytes` EVER be reserved — against the empty pool plus every
-    /// borrowable expert slot (slots currently lent out will return as
-    /// reservations drain, so they count)?  `false` means "reject";
-    /// anything else merely waits in the queue for `try_reserve`.
-    pub fn ever_feasible(&self, bytes: u64, cache: &ExpertCache) -> bool {
-        if self.unlimited() {
-            return true;
-        }
-        let unpinned =
-            cache.capacity().saturating_sub(cache.pinned_count()) + self.borrowed_slots;
-        bytes <= self.pool_bytes + unpinned as u64 * self.expert_bytes
-    }
-
-    /// Can `bytes` be covered *right now*, given current usage and the
-    /// cache's currently borrowable slots?
-    pub fn feasible(&self, bytes: u64, cache: &ExpertCache) -> bool {
-        if self.unlimited() {
-            return true;
-        }
-        let borrowable =
-            cache.capacity().saturating_sub(cache.pinned_count()) as u64 * self.expert_bytes;
-        self.used_bytes + bytes <= self.ceiling() + borrowable
-    }
-
-    /// Reserve `bytes`, shrinking `cache` one expert slot at a time when
-    /// the pool runs short.  Returns `false` — with no state changed —
-    /// when the reservation cannot be covered right now.
-    pub fn try_reserve(&mut self, bytes: u64, cache: &mut ExpertCache) -> bool {
-        if self.unlimited() {
-            return true;
-        }
-        if !self.feasible(bytes, cache) {
-            return false;
-        }
-        while self.used_bytes + bytes > self.ceiling() {
-            debug_assert!(cache.capacity() > cache.pinned_count());
-            cache.set_capacity(cache.capacity() - 1);
-            self.borrowed_slots += 1;
-        }
-        self.used_bytes += bytes;
-        true
-    }
-
-    /// Release a reservation, returning borrowed expert slots to the cache
-    /// as whole slots' worth of headroom free up.
-    pub fn release(&mut self, bytes: u64, cache: &mut ExpertCache) {
-        if self.unlimited() {
-            return;
-        }
-        self.used_bytes = self.used_bytes.saturating_sub(bytes);
-        while self.borrowed_slots > 0 && self.used_bytes + self.expert_bytes <= self.ceiling() {
-            cache.set_capacity(cache.capacity() + 1);
-            self.borrowed_slots -= 1;
-        }
-    }
-
-    /// Hot-reload the pool size (`Reload{kv_budget_mb}`), rebalancing the
-    /// expert-cache borrow: a grown pool returns borrowed slots, a shrunk
-    /// pool borrows unpinned slots to keep covering current reservations.
-    /// A shrink that cannot be covered leaves the budget transiently
-    /// overcommitted — no new reservation fits until enough in-flight
-    /// requests release.  Going unlimited (0) returns every borrowed slot
-    /// and stops tracking; the reverse transition starts tracking from
-    /// zero (in-flight reservations made under the unlimited regime
-    /// release as no-ops via `saturating_sub`).
-    pub fn set_pool_mb(&mut self, pool_mb: usize, cache: &mut ExpertCache) {
-        self.pool_bytes = pool_mb as u64 * MIB;
-        if self.unlimited() {
-            while self.borrowed_slots > 0 {
-                cache.set_capacity(cache.capacity() + 1);
-                self.borrowed_slots -= 1;
-            }
-            self.used_bytes = 0;
-            return;
-        }
-        while self.borrowed_slots > 0 && self.used_bytes + self.expert_bytes <= self.ceiling() {
-            cache.set_capacity(cache.capacity() + 1);
-            self.borrowed_slots -= 1;
-        }
-        while self.used_bytes > self.ceiling() && cache.capacity() > cache.pinned_count() {
-            cache.set_capacity(cache.capacity() - 1);
-            self.borrowed_slots += 1;
-        }
-    }
-}
-
-/// One decoding slot of a sequence group: a beam, or the single lane of
-/// an ordinary request.
-struct Slot {
-    cache: SequenceCache,
-    last: u32,
-    tokens: Vec<u32>,
-    score: f32,
-}
-
-/// Lifecycle phase of a group.  `Queued` groups live in the scheduler's
-/// queue (admission swaps in `Prefilling` with a real KV cache); terminal
-/// groups are retired immediately, so no variant exists for them.
-enum Phase {
-    Queued,
-    Prefilling { cursor: usize, cache: SequenceCache },
-    Decoding { slots: Vec<Slot> },
-}
-
-/// One request moving through the lifecycle: an ordinary generation
-/// (`width == 1`) or a beam group (`width > 1`) — same machinery.
-struct SequenceGroup {
-    /// Serve-loop-scoped request id (ingest order, starting at 0) — the
-    /// `req` field correlating this group's trace events.
-    id: u64,
-    prompt: Vec<u32>,
-    max_new: usize,
-    width: usize,
-    stream: std::sync::mpsc::Sender<Event>,
-    metrics: GenMetrics,
-    /// Absolute virtual TTFT deadline (admission `slo` mode orders by it).
-    deadline_us: f64,
-    /// Absolute *enforced* end-to-end deadline, when the request carried
-    /// `deadline_ms` on the wire: past this instant the scheduler fails
-    /// the request with [`FailReason::Deadline`] at the next chunk
-    /// boundary.  `None` = never expire (the SLO deadline above only
-    /// orders admission).
-    hard_deadline_us: Option<f64>,
-    /// Times this group has been preempted (KV dropped, requeued).
-    preemptions: usize,
-    /// Prompt plus already-generated tokens, set at preemption: the
-    /// readmitted group recomputes its KV by prefilling this prefix
-    /// (drop-and-recompute, Sarathi-style) and resumes decoding at token
-    /// index `produced`.
-    resume_prefix: Option<Vec<u32>>,
-    /// Paper-scale KV bytes reserved for this group at admission.
-    kv_reserved: u64,
-    /// Cumulative cache counters at admission; completion stamps the delta.
-    cache_base: CacheStats,
-    /// Cumulative expert-execution counters at admission (same delta
-    /// stamping as `cache_base`).
-    events_base: crate::moe::ExpertEvents,
-    produced: usize,
-    phase: Phase,
-}
-
-impl SequenceGroup {
-    /// Batch slots this group occupies (or will occupy once its prefill
-    /// completes — a beam group reserves its full width up front).
-    fn slot_count(&self) -> usize {
-        match &self.phase {
-            Phase::Queued | Phase::Prefilling { .. } => self.width,
-            Phase::Decoding { slots } => slots.len(),
-        }
-    }
-
-    /// The token prefix prefill must process: the original prompt, or —
-    /// after a preemption — prompt plus everything already generated.
-    fn prefill_prefix(&self) -> &[u32] {
-        self.resume_prefix.as_deref().unwrap_or(&self.prompt)
-    }
-
-    /// Terminal failure: stamp the typed reason into the metrics and send
-    /// the typed terminal event (receivers never hang).
-    fn fail(self, reason: FailReason, msg: &str) {
-        let mut metrics = self.metrics;
-        metrics.fail_reason = Some(reason.label().to_string());
-        metrics.preemptions = self.preemptions;
-        let _ = self.stream.send(Event::Failed {
-            reason,
-            message: msg.to_string(),
-            metrics,
-        });
-    }
-}
-
-/// Queue indices in the order the [`AdmissionKind`] would admit them;
-/// ties resolve to the earliest arrival (queue order — the sorts are
-/// stable).  The serve loop admits the FIRST candidate that fits the
-/// batch and the KV budget, so a wide beam group (or a KV-hungry prompt)
-/// at the head never starves narrow requests behind it (backfill).
-fn admission_order(queue: &VecDeque<SequenceGroup>, kind: AdmissionKind) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..queue.len()).collect();
-    match kind {
-        AdmissionKind::Fcfs => {}
-        AdmissionKind::ShortestFirst => idx.sort_by_key(|&i| queue[i].prompt.len()),
-        AdmissionKind::Deadline => {
-            idx.sort_by(|&a, &b| queue[a].deadline_us.total_cmp(&queue[b].deadline_us))
-        }
-    }
-    idx
-}
-
-/// Park a future-dated request in `pending`, keeping it sorted ascending
-/// by arrival time (stable for ties — earlier sends first).
-fn park_pending(r: Request, pending: &mut Vec<Request>) {
-    let t = r.arrive_at_us.unwrap_or(0.0);
-    let at =
-        pending.iter().position(|p| p.arrive_at_us.unwrap_or(0.0) > t).unwrap_or(pending.len());
-    pending.insert(at, r);
-}
-
 /// Run the lifecycle scheduler until `requests` disconnects (or a
 /// shutdown sentinel / `Drain` control arrives) and all in-flight work
 /// drains.  On shutdown, queued-but-never-admitted requests receive a
@@ -509,9 +264,14 @@ pub fn serve_lifecycle<B: ServeBackend>(
         max_preemptions: cfg.max_preemptions,
         faults: cfg.faults.clone().unwrap_or_default(),
         fault_seed: cfg.fault_seed,
+        shards: cfg.shards,
+        shard_plan: cfg.shard_plan.label().to_string(),
+        replicate_hot: cfg.replicate_hot,
     });
     // Serve-loop request ids, in ingest order (Cell: the ingest closure
-    // and the loop body both touch it).
+    // and the loop body both touch it).  Requests carrying a pre-assigned
+    // id (fleet router ingest order) keep it; the counter only serves
+    // locally-numbered requests.
     let next_id = std::cell::Cell::new(0u64);
     let mut kv = KvBudget::new(cfg.kv_budget_mb);
     // Fail loudly at startup when the budget cannot EVER fit a single
@@ -552,8 +312,14 @@ pub fn serve_lifecycle<B: ServeBackend>(
         if r.shutdown {
             return true;
         }
-        let id = next_id.get();
-        next_id.set(id + 1);
+        let id = match r.id {
+            Some(id) => id,
+            None => {
+                let id = next_id.get();
+                next_id.set(id + 1);
+                id
+            }
+        };
         let enqueue_us = r.arrive_at_us.unwrap_or_else(|| backend.now_us());
         sink.emit_with(|| crate::events::TraceEvent::RequestArrived {
             req: id,
@@ -1300,175 +1066,5 @@ pub fn serve_lifecycle<B: ServeBackend>(
                 borrowed_slots: borrowed,
             });
         }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn effective_max_batch_clamps_to_bucket_ceiling() {
-        let ceiling = *DECODE_BATCH_BUCKETS.last().unwrap();
-        assert_eq!(effective_max_batch(4), (4, false));
-        assert_eq!(effective_max_batch(ceiling), (ceiling, false));
-        assert_eq!(effective_max_batch(ceiling + 10), (ceiling, true));
-        assert_eq!(effective_max_batch(0), (1, false));
-    }
-
-    #[test]
-    fn kv_worst_case_scales_with_width() {
-        let one = kv_worst_case_bytes(10, 6, 1);
-        assert_eq!(one, 16 * PAPER_KV_BYTES_PER_TOKEN);
-        assert_eq!(kv_worst_case_bytes(10, 6, 4), 4 * one);
-    }
-
-    #[test]
-    fn kv_budget_zero_is_unlimited() {
-        let mut kv = KvBudget::new(0);
-        let mut cache = ExpertCache::with_capacity(2);
-        assert!(kv.try_reserve(u64::MAX, &mut cache));
-        assert_eq!(kv.used_bytes(), 0, "unlimited budget tracks nothing");
-        kv.release(u64::MAX, &mut cache);
-        assert_eq!(cache.capacity(), 2);
-    }
-
-    #[test]
-    fn kv_budget_reserves_and_releases() {
-        let mut kv = KvBudget::new(1); // 1 MiB pool
-        let mut cache = ExpertCache::with_capacity(4);
-        assert!(kv.try_reserve(MIB / 2, &mut cache));
-        assert!(kv.try_reserve(MIB / 2, &mut cache));
-        assert_eq!(kv.used_bytes(), MIB);
-        assert_eq!(kv.borrowed_slots(), 0);
-        kv.release(MIB / 2, &mut cache);
-        assert_eq!(kv.used_bytes(), MIB / 2);
-    }
-
-    #[test]
-    fn kv_budget_borrows_expert_slots_and_returns_them() {
-        let mut kv = KvBudget::new(1);
-        let mut cache = ExpertCache::with_capacity(4);
-        cache.pin((0, 0));
-        // Needs ~1 expert slot beyond the pool.
-        let big = MIB + PAPER_EXPERT_BYTES / 2;
-        assert!(kv.try_reserve(big, &mut cache));
-        assert_eq!(kv.borrowed_slots(), 1);
-        assert_eq!(cache.capacity(), 3, "one unpinned slot converted to KV headroom");
-        // Release: the slot comes back.
-        kv.release(big, &mut cache);
-        assert_eq!(kv.borrowed_slots(), 0);
-        assert_eq!(cache.capacity(), 4);
-    }
-
-    #[test]
-    fn kv_budget_transiently_full_pool_queues_instead_of_rejecting() {
-        // Regression: a request that fits the EMPTY pool must not be
-        // rejected just because another request currently holds it.
-        let mut kv = KvBudget::new(1);
-        let mut cache = ExpertCache::with_capacity(2);
-        cache.pin((0, 0));
-        cache.pin((0, 1)); // nothing borrowable
-        assert!(kv.try_reserve(MIB - MIB / 4, &mut cache));
-        let b = MIB / 2;
-        assert!(kv.ever_feasible(b, &cache), "fits the empty pool: must queue");
-        assert!(!kv.feasible(b, &cache), "but not right now");
-        kv.release(MIB - MIB / 4, &mut cache);
-        assert!(kv.try_reserve(b, &mut cache));
-        // Slots currently lent out still count toward "ever".
-        let mut kv2 = KvBudget::new(1);
-        let mut cache2 = ExpertCache::with_capacity(1);
-        assert!(kv2.try_reserve(MIB + PAPER_EXPERT_BYTES / 2, &mut cache2));
-        assert_eq!(kv2.borrowed_slots(), 1);
-        assert!(kv2.ever_feasible(MIB + PAPER_EXPERT_BYTES / 2, &cache2));
-    }
-
-    #[test]
-    fn kv_budget_infeasible_is_rejected_without_side_effects() {
-        let mut kv = KvBudget::new(1);
-        let mut cache = ExpertCache::with_capacity(2);
-        cache.pin((0, 0));
-        cache.pin((0, 1)); // nothing borrowable
-        let big = MIB + 3 * PAPER_EXPERT_BYTES;
-        assert!(!kv.feasible(big, &cache));
-        assert!(!kv.try_reserve(big, &mut cache));
-        assert_eq!(kv.used_bytes(), 0);
-        assert_eq!(cache.capacity(), 2, "failed reservation must not shrink the cache");
-    }
-
-    fn queued(prompt_len: usize, deadline_us: f64) -> SequenceGroup {
-        let (tx, _rx) = std::sync::mpsc::channel();
-        SequenceGroup {
-            id: 0,
-            prompt: vec![1; prompt_len],
-            max_new: 1,
-            width: 1,
-            stream: tx,
-            metrics: GenMetrics::default(),
-            deadline_us,
-            hard_deadline_us: None,
-            preemptions: 0,
-            resume_prefix: None,
-            kv_reserved: 0,
-            cache_base: CacheStats::default(),
-            events_base: crate::moe::ExpertEvents::default(),
-            produced: 0,
-            phase: Phase::Queued,
-        }
-    }
-
-    #[test]
-    fn kv_budget_pool_reload_rebalances_borrow() {
-        // Shrink under load: borrows unpinned slots to keep covering the
-        // in-flight reservation.
-        let mut kv = KvBudget::new(2);
-        let mut cache = ExpertCache::with_capacity(4);
-        cache.pin((0, 0));
-        assert!(kv.try_reserve(2 * MIB, &mut cache));
-        assert_eq!(kv.borrowed_slots(), 0);
-        kv.set_pool_mb(1, &mut cache);
-        assert!(kv.borrowed_slots() >= 1, "shrunk pool must borrow to cover usage");
-        assert!(kv.used_bytes() <= kv.ceiling());
-        // Grow back: the borrow returns.
-        kv.set_pool_mb(2, &mut cache);
-        assert_eq!(kv.borrowed_slots(), 0);
-        assert_eq!(cache.capacity(), 4);
-        // Going unlimited returns everything and stops tracking.
-        assert!(kv.try_reserve(MIB + PAPER_EXPERT_BYTES / 2, &mut cache));
-        kv.set_pool_mb(0, &mut cache);
-        assert!(kv.unlimited());
-        assert_eq!(kv.borrowed_slots(), 0);
-        assert_eq!(kv.used_bytes(), 0);
-        assert_eq!(cache.capacity(), 4);
-    }
-
-    #[test]
-    fn kv_budget_unsatisfiable_shrink_overcommits_transiently() {
-        let mut kv = KvBudget::new(4);
-        let mut cache = ExpertCache::with_capacity(1);
-        cache.pin((0, 0)); // nothing borrowable
-        assert!(kv.try_reserve(4 * MIB, &mut cache));
-        kv.set_pool_mb(1, &mut cache);
-        // Cannot cover: overcommitted, so nothing new fits ...
-        assert!(kv.used_bytes() > kv.ceiling());
-        assert!(!kv.try_reserve(1, &mut cache));
-        // ... until the in-flight reservation releases.
-        kv.release(4 * MIB, &mut cache);
-        assert!(kv.try_reserve(MIB / 2, &mut cache));
-    }
-
-    #[test]
-    fn admission_order_per_policy() {
-        let mut q = VecDeque::new();
-        q.push_back(queued(100, 900.0));
-        q.push_back(queued(4, 500.0));
-        q.push_back(queued(4, 700.0));
-        assert_eq!(admission_order(&q, AdmissionKind::Fcfs), vec![0, 1, 2]);
-        // Shortest prompt; ties resolve to the earlier arrival.
-        assert_eq!(admission_order(&q, AdmissionKind::ShortestFirst), vec![1, 2, 0]);
-        assert_eq!(admission_order(&q, AdmissionKind::Deadline), vec![1, 2, 0]);
-        q[1].deadline_us = 1_000.0;
-        assert_eq!(admission_order(&q, AdmissionKind::Deadline), vec![2, 0, 1]);
-        assert!(admission_order(&VecDeque::new(), AdmissionKind::Fcfs).is_empty());
     }
 }

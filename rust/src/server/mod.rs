@@ -8,7 +8,12 @@
 //! request, chunked prefill, pluggable admission policies, a KV-memory
 //! budget arbitrating against expert residency, and beam groups decoding
 //! inside the shared batch.
+//!
+//! The engine-agnostic scheduler pieces live in [`core`]; [`fleet`] runs
+//! N scheduler instances behind an expert-demand router (`--shards N`).
 
+pub mod core;
+pub mod fleet;
 pub mod lifecycle;
 pub mod net;
 pub mod sim;
@@ -109,6 +114,12 @@ impl ControlMsg {
 
 /// A generation request.
 pub struct Request {
+    /// Pre-assigned serve-loop id.  `None` (the default) lets the
+    /// scheduler number the request in its own ingest order; the fleet
+    /// router sets it so ids reflect GLOBAL ingest order regardless of
+    /// which shard serves the request (trace `req` fields stay unique
+    /// across the fleet).
+    pub id: Option<u64>,
     pub prompt: Vec<u32>,
     pub max_new: usize,
     /// Beam width: 1 = ordinary sampled generation; >1 = beam search
@@ -147,6 +158,7 @@ pub struct Request {
 impl Request {
     pub fn new(prompt: Vec<u32>, max_new: usize, stream: Sender<Event>) -> Request {
         Request {
+            id: None,
             prompt,
             max_new,
             width: 1,

@@ -36,6 +36,13 @@
 //! The listener thread accepts connections and forwards requests into the
 //! engine worker's queue (`serve_loop`); one relay thread per connection
 //! streams events back.  `fiddler serve --listen 127.0.0.1:PORT` wires it.
+//!
+//! Fleet front: the same [`serve_tcp`] plugs into an expert-sharded
+//! fleet unchanged — `fiddler serve --shards N --listen ...` hands it
+//! [`super::fleet::FleetHandle::requests`] instead of a single engine's
+//! queue.  The router assigns ids in global ingest order and owns
+//! cancel/reload/drain fan-out, so the wire protocol (including cancel
+//! ids from the "queued" ack) is identical in both modes.
 
 use super::{ControlMsg, Event, FailReason, ReloadSpec, Request, MAX_REQUEST_TOKENS};
 use crate::config::serving::AdmissionKind;

@@ -371,6 +371,50 @@ impl Default for LoadSpec {
     }
 }
 
+/// One planned open-loop request: the workload built from a [`LoadSpec`]
+/// before it reaches any scheduler.  Extracted so the single-engine
+/// driver ([`run_open_loop`]) and the fleet harness
+/// ([`run_fleet_open_loop`]) replay the SAME workload — byte-identical
+/// prompts, arrivals, deadlines, and cancel schedule — which is what the
+/// `--shards 1` bit-identity property rests on.
+#[derive(Clone, Debug)]
+pub struct PlannedRequest {
+    pub prompt: Vec<u32>,
+    pub max_new: usize,
+    pub arrive_at_us: f64,
+    /// Carries an enforced end-to-end deadline (and the same SLO).
+    pub tight: bool,
+    /// Scheduled cancel time, when this request is a cancel target.
+    pub cancel_at_us: Option<f64>,
+}
+
+/// Materialize the workload of a [`LoadSpec`]: same RNG streams
+/// (arrivals from `seed`, prompts from `seed ^ 0x10AD`) as the original
+/// inline driver, in the same draw order.
+pub fn plan_workload(spec: &LoadSpec) -> Vec<PlannedRequest> {
+    let mut arrivals = PoissonArrivals::new(spec.rate_per_s, spec.seed);
+    let mut gen = WorkloadGen::new(Dataset::sharegpt(), 512, spec.seed ^ 0x10AD);
+    (0..spec.n_requests)
+        .map(|i| {
+            let len = if spec.long_every > 0 && i % spec.long_every == spec.long_every - 1 {
+                spec.long_inp
+            } else {
+                spec.inp
+            };
+            let prompt = gen.prompt(len);
+            let t = arrivals.next_arrival_us();
+            let tight = spec.tight_every > 0 && i % spec.tight_every == spec.tight_every - 1;
+            let cancel_at_us =
+                if spec.cancel_every > 0 && i % spec.cancel_every == spec.cancel_every - 1 {
+                    Some(t + spec.cancel_after_us)
+                } else {
+                    None
+                };
+            PlannedRequest { prompt, max_new: spec.out, arrive_at_us: t, tight, cancel_at_us }
+        })
+        .collect()
+}
+
 /// Outcome of one open-loop run.
 #[derive(Debug, Default)]
 pub struct LoadReport {
@@ -392,6 +436,11 @@ pub struct LoadReport {
     pub makespan_s: f64,
     pub output_tokens: usize,
     pub agg: Aggregate,
+    /// Per-request terminal outcome, indexed by submission order: the
+    /// token stream (partial for failures) and the typed failure label
+    /// (`None` = completed).  What the fleet bit-identity and
+    /// identical-token-set properties compare.
+    pub outcomes: Vec<(Vec<u32>, Option<String>)>,
 }
 
 impl LoadReport {
@@ -417,35 +466,28 @@ impl LoadReport {
 /// load-generator substrate behind `examples/load_gen.rs` and the
 /// `BENCH_PR4.json` section of `benches/e2e_decode.rs`.
 pub fn run_open_loop(serving: ServingConfig, spec: &LoadSpec) -> Result<LoadReport> {
-    let mut arrivals = PoissonArrivals::new(spec.rate_per_s, spec.seed);
-    let mut gen = WorkloadGen::new(Dataset::sharegpt(), 512, spec.seed ^ 0x10AD);
+    let planned = plan_workload(spec);
     let (tx, rx) = std::sync::mpsc::channel();
     let mut first_arrival_us = f64::INFINITY;
-    let mut tight: Vec<bool> = vec![false; spec.n_requests];
     let mut control_rx = Vec::new();
-    let receivers: Vec<_> = (0..spec.n_requests)
-        .map(|i| {
-            let len = if spec.long_every > 0 && i % spec.long_every == spec.long_every - 1 {
-                spec.long_inp
-            } else {
-                spec.inp
-            };
+    let receivers: Vec<_> = planned
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
             let (etx, erx) = std::sync::mpsc::channel();
-            let mut r = Request::new(gen.prompt(len), spec.out, etx);
-            let t = arrivals.next_arrival_us();
-            first_arrival_us = first_arrival_us.min(t);
-            r.arrive_at_us = Some(t);
-            if spec.tight_every > 0 && i % spec.tight_every == spec.tight_every - 1 {
+            let mut r = Request::new(p.prompt.clone(), p.max_new, etx);
+            first_arrival_us = first_arrival_us.min(p.arrive_at_us);
+            r.arrive_at_us = Some(p.arrive_at_us);
+            if p.tight {
                 r.slo_us = Some(spec.tight_deadline_us);
                 r.deadline_us = Some(spec.tight_deadline_us);
-                tight[i] = true;
             }
-            if spec.cancel_every > 0 && i % spec.cancel_every == spec.cancel_every - 1 {
+            if let Some(cancel_at) = p.cancel_at_us {
                 // Open-loop arrivals are monotone, so serve-loop ids equal
                 // submission index: the cancel can be addressed up front.
                 let (ctx, crx) = std::sync::mpsc::channel();
                 let mut c = Request::control(ControlMsg::Cancel { req: i as u64 }, ctx);
-                c.arrive_at_us = Some(t + spec.cancel_after_us);
+                c.arrive_at_us = Some(cancel_at);
                 tx.send(c).expect("loop not started yet");
                 control_rx.push(crx);
             }
@@ -468,9 +510,19 @@ pub fn run_open_loop(serving: ServingConfig, spec: &LoadSpec) -> Result<LoadRepo
     serve_lifecycle(&mut backend, rx)?;
     drop(tx);
 
+    Ok(collect_report(&receivers, &planned, first_arrival_us))
+}
+
+/// Fold per-request terminal outcomes into a [`LoadReport`] (shared by
+/// the single-engine and fleet drivers).
+fn collect_report(
+    receivers: &[std::sync::mpsc::Receiver<super::Event>],
+    planned: &[PlannedRequest],
+    first_arrival_us: f64,
+) -> LoadReport {
     let mut report = LoadReport::default();
     for (i, rx) in receivers.iter().enumerate() {
-        if tight[i] {
+        if planned[i].tight {
             report.slo_eligible += 1;
         }
         match collect_outcome(rx) {
@@ -481,19 +533,22 @@ pub fn run_open_loop(serving: ServingConfig, spec: &LoadSpec) -> Result<LoadRepo
                     report.makespan_s = report.makespan_s.max(t / 1e6);
                 }
                 report.preemptions += o.metrics.preemptions;
-                if tight[i] {
+                if planned[i].tight {
                     report.slo_attained += 1;
                 }
                 report.agg.push(&o.metrics);
+                report.outcomes.push((o.tokens, None));
             }
             Ok(o) => {
                 report.rejected += 1;
                 let label = o.failure.map(|(r, _)| r.label()).unwrap_or("unknown");
                 *report.reasons.entry(label.to_string()).or_insert(0) += 1;
+                report.outcomes.push((o.tokens, Some(label.to_string())));
             }
             Err(_) => {
                 report.rejected += 1;
                 *report.reasons.entry("disconnected".to_string()).or_insert(0) += 1;
+                report.outcomes.push((Vec::new(), Some("disconnected".to_string())));
             }
         }
     }
@@ -502,7 +557,198 @@ pub fn run_open_loop(serving: ServingConfig, spec: &LoadSpec) -> Result<LoadRepo
     if report.completed > 0 {
         report.makespan_s = (report.makespan_s - first_arrival_us / 1e6).max(0.0);
     }
-    Ok(report)
+    report
+}
+
+/// Experts the fleet harness may pin per shard — well under the sim
+/// cache capacity so KV borrowing keeps unpinned slots to take.
+pub const SIM_FLEET_MAX_PINS: usize = 4;
+/// Per-shard GPU residency assumed by the fleet planner, matching the
+/// [`SimBackend`] expert-cache capacity.
+pub const SIM_FLEET_GPU_CAPACITY: usize = 8;
+
+/// Planner demand profile at sim geometry, a pure function of the
+/// workload's prompts: layer-0 counts from `tok % n_experts` (the sim
+/// routes token `t` to expert `t % n_experts`), deeper layers uniform.
+/// Shared by the live fleet driver and trace replay so both derive the
+/// SAME sharding plan and cache-admission pins.
+pub fn sim_demand_profile<'a>(
+    prompts: impl IntoIterator<Item = &'a [u32]>,
+) -> crate::popularity::Profile {
+    let geometry = ModelConfig::test_tiny();
+    let mut profile = crate::popularity::Profile::new(geometry.n_layers, geometry.n_experts);
+    for prompt in prompts {
+        for &t in prompt {
+            profile.record(0, t as usize % geometry.n_experts, 1);
+        }
+    }
+    for l in 1..geometry.n_layers {
+        for e in 0..geometry.n_experts {
+            profile.record(l, e, 1);
+        }
+    }
+    profile
+}
+
+/// Arrival horizon (virtual seconds, floored away from zero) — the
+/// admission-pricing window, derived from the arrivals themselves so the
+/// recorder and the replayer agree on it.
+pub fn sim_arrival_horizon_s(arrivals_us: impl IntoIterator<Item = f64>) -> f64 {
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for t in arrivals_us {
+        lo = lo.min(t);
+        hi = hi.max(t);
+    }
+    if lo.is_finite() && hi > lo { (hi - lo) / 1e6 } else { 1.0 }
+}
+
+/// Outcome of one fleet run: the global [`LoadReport`] plus the routing
+/// and planner decisions that produced it.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub report: LoadReport,
+    /// Owning shard per request, indexed by submission order.
+    pub shard_of: Vec<usize>,
+    /// Requests assigned per shard.
+    pub per_shard: Vec<usize>,
+    /// Resolved partition layout ("layer" or "hash").
+    pub plan: String,
+    /// Comma-joined per-shard bottleneck labels from the planner.
+    pub bottlenecks: String,
+    /// Worst-shard priced step time (µs) from the planner.
+    pub max_step_us: f64,
+}
+
+/// Replay an open-loop workload through an N-shard fleet
+/// (`serving.shards`), entirely in virtual time: requests are routed up
+/// front by the [`FleetRouter`] in global ingest order, then each
+/// shard's lifecycle scheduler drains its queue on its own
+/// [`SimBackend`] (own virtual clock — shards run concurrently in real
+/// deployments, so fleet makespan is the max over shards).  Cancels go
+/// to the owning shard; reloads and drains broadcast to every shard.
+/// With `shards == 1` this is token-bit-identical to [`run_open_loop`].
+pub fn run_fleet_open_loop(serving: ServingConfig, spec: &LoadSpec) -> Result<FleetReport> {
+    use super::fleet::{pin_worthwhile, plan_shards, FleetRouter};
+    use crate::latency::LatencyModel;
+    use crate::prefetch::TransitionProfile;
+
+    let n = serving.shards.max(1);
+    let planned = plan_workload(spec);
+    let first_arrival_us = planned.iter().map(|p| p.arrive_at_us).fold(f64::INFINITY, f64::min);
+
+    // Shared trace sink, pre-armed on every backend (each shard's serve
+    // loop sees it enabled and skips installing its own).
+    let sink = match serving.events_out.as_deref() {
+        Some(path) => crate::events::EventSink::to_path(path)?,
+        None => crate::events::EventSink::disabled(),
+    };
+
+    let geometry = ModelConfig::test_tiny();
+    let profile = sim_demand_profile(planned.iter().map(|p| p.prompt.as_slice()));
+    let model = LatencyModel::from_hardware(&crate::config::HardwareConfig::env1());
+    let plan = plan_shards(&profile, &model, n, serving.shard_plan, SIM_FLEET_GPU_CAPACITY);
+    let transitions = TransitionProfile::uniform(geometry.n_layers, geometry.n_experts);
+    let mut router =
+        FleetRouter::new(plan.clone(), Some(transitions), serving.replicate_hot, sink.clone());
+
+    // Route everything up front, in submission (= global ingest) order.
+    let shard_of: Vec<usize> = planned
+        .iter()
+        .map(|p| router.route(&p.prompt, p.max_new, p.arrive_at_us).1)
+        .collect();
+    let mut per_shard = vec![0usize; n];
+    for &s in &shard_of {
+        per_shard[s] += 1;
+    }
+
+    // Build each shard's pre-loaded channel: requests carry their global
+    // id, cancels go to the owning shard, controls broadcast everywhere.
+    let mut txs = Vec::with_capacity(n);
+    let mut rxs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (tx, rx) = std::sync::mpsc::channel::<Request>();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let mut control_rx = Vec::new();
+    let receivers: Vec<_> = planned
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let shard = shard_of[i];
+            let (etx, erx) = std::sync::mpsc::channel();
+            let mut r = Request::new(p.prompt.clone(), p.max_new, etx);
+            r.id = Some(i as u64);
+            r.arrive_at_us = Some(p.arrive_at_us);
+            if p.tight {
+                r.slo_us = Some(spec.tight_deadline_us);
+                r.deadline_us = Some(spec.tight_deadline_us);
+            }
+            if let Some(cancel_at) = p.cancel_at_us {
+                let (ctx, crx) = std::sync::mpsc::channel();
+                let mut c = Request::control(ControlMsg::Cancel { req: i as u64 }, ctx);
+                c.arrive_at_us = Some(cancel_at);
+                txs[shard].send(c).expect("loop not started yet");
+                control_rx.push(crx);
+            }
+            txs[shard].send(r).expect("loop not started yet");
+            erx
+        })
+        .collect();
+    for (t, msg) in &spec.controls {
+        for tx in &txs {
+            let (ctx, crx) = std::sync::mpsc::channel();
+            let mut c = Request::control(msg.clone(), ctx);
+            c.arrive_at_us = Some(*t);
+            tx.send(c).expect("loop not started yet");
+            control_rx.push(crx);
+        }
+    }
+    for tx in &txs {
+        let mut sentinel = Request::shutdown_sentinel();
+        sentinel.arrive_at_us = Some(1e15);
+        tx.send(sentinel).expect("loop not started yet");
+    }
+
+    // Drain each shard sequentially on its own backend and clock (the
+    // virtual-time analogue of N engines running in parallel).  The
+    // admission horizon and per-shard rates derive from the ARRIVALS,
+    // not the spec, so trace replay (which only sees arrivals) can
+    // reproduce the exact same pin decisions.
+    let horizon_s = sim_arrival_horizon_s(planned.iter().map(|p| p.arrive_at_us));
+    for (s, rx) in rxs.into_iter().enumerate() {
+        let mut backend = SimBackend::new(serving.clone());
+        backend.set_event_sink(sink.clone());
+        if n > 1 {
+            // Batch-aware cache admission: pre-pin the shard's experts
+            // whose predicted reuse at this shard's arrival rate beats
+            // their transfer cost.  Capped well under the cache capacity
+            // so KV borrowing keeps unpinned slots to take.
+            let shard_rate = per_shard[s] as f64 / horizon_s;
+            pin_worthwhile(
+                backend.expert_cache_mut(),
+                &profile,
+                &plan,
+                s,
+                shard_rate,
+                horizon_s,
+                &model,
+                SIM_FLEET_MAX_PINS,
+            );
+        }
+        serve_lifecycle(&mut backend, rx)?;
+    }
+    drop(txs);
+
+    let report = collect_report(&receivers, &planned, first_arrival_us);
+    Ok(FleetReport {
+        report,
+        shard_of,
+        per_shard,
+        plan: plan.plan.label().to_string(),
+        bottlenecks: plan.bottleneck_summary(),
+        max_step_us: plan.max_step_us(),
+    })
 }
 
 #[cfg(test)]
@@ -603,6 +849,59 @@ mod tests {
         assert_eq!(r.completed, 0);
         assert_eq!(r.rejected, 4);
         assert_eq!(r.reasons.get("backend"), Some(&4));
+    }
+
+    #[test]
+    fn plan_workload_is_deterministic_and_flags_requests() {
+        let spec = LoadSpec {
+            n_requests: 9,
+            long_every: 3,
+            long_inp: 64,
+            inp: 8,
+            tight_every: 4,
+            tight_deadline_us: 5e5,
+            cancel_every: 5,
+            cancel_after_us: 1e4,
+            ..LoadSpec::default()
+        };
+        let a = plan_workload(&spec);
+        let b = plan_workload(&spec);
+        assert_eq!(a.len(), 9);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.arrive_at_us, y.arrive_at_us);
+        }
+        assert_eq!(a[2].prompt.len(), 64, "every 3rd request is long");
+        assert_eq!(a[0].prompt.len(), 8);
+        assert!(a[3].tight && !a[0].tight);
+        assert!(a[4].cancel_at_us.is_some() && a[0].cancel_at_us.is_none());
+        assert!((a[4].cancel_at_us.unwrap() - a[4].arrive_at_us - 1e4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fleet_single_shard_matches_single_engine_bit_for_bit() {
+        let spec = LoadSpec { n_requests: 10, out: 8, ..LoadSpec::default() };
+        let single = run_open_loop(ServingConfig::default(), &spec).unwrap();
+        let serving = ServingConfig { shards: 1, ..ServingConfig::default() };
+        let fleet = run_fleet_open_loop(serving, &spec).unwrap();
+        assert_eq!(single.outcomes, fleet.report.outcomes, "shards=1 must be a pass-through");
+        assert_eq!(single.completed, fleet.report.completed);
+        assert!(fleet.shard_of.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn fleet_three_shards_serves_everything_and_reports_the_plan() {
+        let serving = ServingConfig { shards: 3, ..ServingConfig::default() };
+        let spec = LoadSpec { n_requests: 18, out: 6, ..LoadSpec::default() };
+        let fleet = run_fleet_open_loop(serving, &spec).unwrap();
+        assert_eq!(fleet.report.completed, 18);
+        assert_eq!(fleet.report.rejected, 0);
+        assert_eq!(fleet.per_shard.iter().sum::<usize>(), 18);
+        assert_eq!(fleet.per_shard.len(), 3);
+        assert!(fleet.per_shard.iter().filter(|&&c| c > 0).count() >= 2, "router never spread");
+        assert!(fleet.plan == "layer" || fleet.plan == "hash");
+        assert_eq!(fleet.bottlenecks.split(',').count(), 3);
+        assert!(fleet.max_step_us > 0.0);
     }
 
     #[test]

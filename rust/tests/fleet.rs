@@ -1,0 +1,189 @@
+//! Integration tests for the expert-sharded fleet (`server::fleet`):
+//! the `--shards 1` bit-identity contract against the single-engine
+//! scheduler, plan-independence of greedy token streams, hot-expert
+//! replica scale-up, and fleet trace record → replay determinism.
+
+use fiddler::config::serving::{ServingConfig, ShardPlan};
+use fiddler::events::replay::{
+    aggregate_outcomes, apply_config_overrides, diff_replay, fold_trace, read_log, replay_trace,
+    replay_with_config,
+};
+use fiddler::events::TraceEvent;
+use fiddler::server::sim::{run_fleet_open_loop, run_open_loop, LoadSpec};
+use fiddler::server::{ControlMsg, ReloadSpec};
+use std::path::PathBuf;
+
+fn tmp_trace(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fiddler-fleet-{}-{name}.jsonl", std::process::id()))
+}
+
+/// The headline invariant of the whole refactor: a fleet of one shard
+/// IS the old scheduler.  Property-checked over seeds and over configs
+/// that exercise cancels, enforced deadlines, and the KV/weight
+/// arbitration path (`kv_budget_mb`), at both greedy and sampled
+/// temperatures — outcomes must agree token-for-token and label-for-
+/// label.
+#[test]
+fn single_shard_fleet_is_bit_identical_to_the_engine_scheduler() {
+    for seed in [3u64, 11, 29] {
+        for (kv, temp) in [(0usize, 0.8), (8, 0.0)] {
+            let spec = LoadSpec {
+                n_requests: 14,
+                rate_per_s: 5.0,
+                inp: 10,
+                out: 8,
+                long_every: 4,
+                long_inp: 64,
+                seed,
+                tight_every: 5,
+                tight_deadline_us: 4e5,
+                cancel_every: 6,
+                cancel_after_us: 2e4,
+                ..LoadSpec::default()
+            };
+            let cfg = ServingConfig {
+                shards: 1,
+                temperature: temp,
+                kv_budget_mb: kv,
+                prefill_chunk: 16,
+                max_batch: 4,
+                seed: seed ^ 1,
+                ..ServingConfig::default()
+            };
+            let single = run_open_loop(cfg.clone(), &spec).unwrap();
+            let fleet = run_fleet_open_loop(cfg, &spec).unwrap();
+            assert_eq!(
+                single.outcomes,
+                fleet.report.outcomes,
+                "shards=1 diverged from the engine scheduler (seed {seed}, kv {kv}, temp {temp})"
+            );
+            assert_eq!(single.completed, fleet.report.completed);
+            assert_eq!(single.rejected, fleet.report.rejected);
+            assert_eq!(single.reasons, fleet.report.reasons);
+            assert!(fleet.shard_of.iter().all(|&s| s == 0));
+        }
+    }
+}
+
+/// At temperature 0 the token stream is a pure function of the prompt,
+/// so how the planner partitions experts across shards must not change
+/// ANY request's tokens — hash and layer plans drain identical streams,
+/// not merely identical multisets.
+#[test]
+fn hash_and_layer_plans_drain_identical_greedy_token_streams() {
+    let spec = LoadSpec {
+        n_requests: 20,
+        rate_per_s: 6.0,
+        inp: 12,
+        out: 8,
+        seed: 7,
+        ..LoadSpec::default()
+    };
+    let cfg = |plan: ShardPlan| ServingConfig {
+        shards: 3,
+        shard_plan: plan,
+        ..ServingConfig::default()
+    };
+    let layer = run_fleet_open_loop(cfg(ShardPlan::Layer), &spec).unwrap();
+    let hash = run_fleet_open_loop(cfg(ShardPlan::Hash), &spec).unwrap();
+    assert_eq!(layer.plan, "layer");
+    assert_eq!(hash.plan, "hash");
+    assert_eq!(layer.report.completed, 20);
+    assert_eq!(hash.report.completed, 20);
+    assert_eq!(layer.report.outcomes, hash.report.outcomes);
+    // The two plans place experts differently, so routing affinity —
+    // and thus the shard partition of the same workload — may differ.
+    assert_eq!(layer.shard_of.len(), hash.shard_of.len());
+}
+
+/// Hot-expert drift: when one expert's observed demand share clears the
+/// `--replicate-hot` threshold, the router widens its replica set and
+/// says so in the event stream.
+#[test]
+fn hot_expert_drift_scales_replicas_in_the_trace() {
+    let path = tmp_trace("replicas");
+    let serving = ServingConfig {
+        shards: 3,
+        replicate_hot: 0.02,
+        events_out: Some(path.display().to_string()),
+        ..ServingConfig::default()
+    };
+    let spec = LoadSpec {
+        n_requests: 24,
+        inp: 16,
+        out: 6,
+        seed: 13,
+        ..LoadSpec::default()
+    };
+    let fleet = run_fleet_open_loop(serving, &spec).unwrap();
+    assert!(fleet.report.completed > 0);
+    let events = read_log(&path).unwrap();
+    let scaled = events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::ReplicaScaled { .. }))
+        .count();
+    assert!(scaled > 0, "no replica_scaled events at replicate_hot=0.02");
+    let plans = events
+        .iter()
+        .filter(|e| matches!(e, TraceEvent::PlanChosen { .. }))
+        .count();
+    assert_eq!(plans, 1, "the router commits exactly one plan per run");
+    std::fs::remove_file(&path).ok();
+}
+
+/// Fleet record → replay: a 3-shard run with mid-run cancels and a hot
+/// reload folds into a trace that replays bit-identically (recorded
+/// shard placements honored, broadcast controls deduplicated back to
+/// one action each), and the same trace A/B-replays under an overridden
+/// config with aggregate — not token — comparison.
+#[test]
+fn fleet_trace_records_and_replays_bit_identically() {
+    let path = tmp_trace("replay3");
+    let serving = ServingConfig {
+        shards: 3,
+        prefill_chunk: 16,
+        events_out: Some(path.display().to_string()),
+        ..ServingConfig::default()
+    };
+    let spec = LoadSpec {
+        n_requests: 16,
+        inp: 10,
+        out: 8,
+        seed: 19,
+        cancel_every: 5,
+        cancel_after_us: 3e4,
+        controls: vec![(
+            2e5,
+            ControlMsg::Reload(ReloadSpec {
+                prefill_chunk: Some(8),
+                ..ReloadSpec::default()
+            }),
+        )],
+        ..LoadSpec::default()
+    };
+    let fleet = run_fleet_open_loop(serving, &spec).unwrap();
+    assert!(
+        fleet.report.reasons.contains_key("cancelled"),
+        "expected at least one mid-flight cancel, got {:?}",
+        fleet.report.reasons
+    );
+
+    let events = read_log(&path).unwrap();
+    let rec = fold_trace(&events);
+    assert_eq!(rec.recorded_shards(), 3);
+    assert_eq!(rec.requests.len(), 16);
+    assert!(
+        rec.requests.iter().all(|r| r.shard.is_some()),
+        "the router must tag every request with shard_assigned"
+    );
+
+    let outcomes = replay_trace(&rec).unwrap();
+    let diffs = diff_replay(&rec, &outcomes);
+    assert!(diffs.is_empty(), "fleet replay diverged: {diffs:?}");
+
+    let mut over = rec.serving_config().unwrap();
+    apply_config_overrides(&mut over, "shards=2,shard-plan=hash").unwrap();
+    let b = aggregate_outcomes(&replay_with_config(&rec, over).unwrap());
+    assert_eq!(b.completed + b.failed, 16);
+    std::fs::remove_file(&path).ok();
+}
