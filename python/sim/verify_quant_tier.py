@@ -1,0 +1,696 @@
+"""Faithful Python port of PR 9's three-tier expert hierarchy: the
+tier-enabled ExpertCache (fp slots + low-bit resident copies at identical
+HBM bytes), the three-way Algorithm 1 (`decide_expert_tiered`), the
+per-step error budget, and the trace-driven cache sims — with the exact
+Rust RNG (SplitMix64 -> Xoshiro256**) and Zipf sampler so the
+DriftingExpertTrace routing stream matches bit for bit.
+
+Mirrored Rust semantics (rust/src/{expertcache,scheduler,latency,quant}):
+ - enable_quant_tier(bits): fp = max(cap/2, 1), quant = (cap-fp)*16/bits
+   (bits clamped to [2,16]); excess fp residents demote, not evict
+ - decide_expert_tiered: fp resident short-circuits; quant resident
+   prices argmin(quant_gpu, gpu+transfer, cpu); else two-way decision
+ - quant_gpu_lat(s) = gpu_lat(s) * 1.12; quant_transfer_lat(b) =
+   transfer_us * b/16
+ - synthetic_expert_error(l, e, bits): 0.5/((1<<(b-1))-1) * FNV jitter
+   in [0.75, 1.25]
+ - run_cache_sim / run_cache_sim_tiered / run_pinned_cache_sim: per-layer
+   time = max(gpu queue, cpu queue); budget re-armed per decode step;
+   corrections promote the fp master synchronously
+ - --cache-partition layer: per-layer quota = max(cap/n_layers, 1),
+   a full layer evicts within itself
+
+Acceptance checks:
+ 1. tier split math: fp >= 1, fp*16 + quant*bits <= cap*16 (identical
+    HBM bytes), and quant copies per converted slot = 16/bits.
+ 2. decide_expert_tiered equals the brute-force argmin over s in 1..64
+    on env1 AND env2, and collapses to decide_expert exactly when no
+    quantized copy exists (the --quant-tier off contract).
+ 3. synthetic errors are deterministic, jittered within [0.75, 1.25] of
+    base, and Q4 errors are ~16x Q8 errors per expert.
+ 4. budget 0 corrects every chosen quant plan (plan_quant == 0,
+    corrected > 0); a generous budget accepts all (corrected == 0).
+ 5. capacity invariants hold after every sim step: fp residents <=
+    fp_cap, quant residents <= quant_cap, tiers disjoint; with the
+    layer partition every layer stays within its quota.
+ 6. THE PR 9 ACCEPTANCE CRITERION, on the exact BENCH_PR9 configuration
+    (seed 33, drifting trace, caps {6, 8, 12} x bits {8, 4}, decode and
+    chunked-prefill shapes, both the fast 200-step and full 600-step
+    budgets): at the asserted decode points (caps 6 and 8, fp-only miss
+    80-89% >= 30%) the tiered cache's mean decode-step time is strictly
+    lower at identical HBM bytes.  The unasserted points (cap 12, where
+    the halved fp tier gives back hits faster than the quant tier earns
+    them; CPU-bound small-cap chunked prefill) are printed with their
+    observed win/lose so the no-win regions stay visible — mirroring
+    exactly what bench_quant_tier() asserts vs records.
+    Also replays the rust/src/expertcache/sim.rs unit-test configs
+    (seed 11 cap 8 Q4 budget 10 must win; seed 7 Q8 budget 0.05 must
+    satisfy quant_hits == plan_quant + corrected with full plan sum).
+ 7. run_pinned_cache_sim: deterministic per seed, pins capped at
+    capacity-1, and a drifting phase erodes the stationary pin win.
+"""
+
+import sys
+
+M64 = (1 << 64) - 1
+
+
+# --- exact port of rust/src/util/rng.rs -------------------------------
+class Rng:
+    def __init__(self, seed):
+        s = seed & M64
+        st = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & M64
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+            st.append(z ^ (z >> 31))
+        self.s = st
+
+    def next_u64(self):
+        s = self.s
+        r = s[1] * 5 & M64
+        r = ((r << 7) | (r >> 57)) & M64
+        r = r * 9 & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = ((s[3] << 45) | (s[3] >> 19)) & M64
+        return r
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        # Lemire multiply-shift rejection, exactly as rng.rs.
+        x = self.next_u64()
+        m = x * n
+        l = m & M64
+        if l < n:
+            t = (-n) % n
+            while l < t:
+                x = self.next_u64()
+                m = x * n
+                l = m & M64
+        return m >> 64
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+
+class Zipf:
+    def __init__(self, n, a):
+        cdf, acc = [], 0.0
+        for r in range(n):
+            acc += 1.0 / float(r + 1) ** a
+            cdf.append(acc)
+        self.cdf = [v / acc for v in cdf]
+
+    def sample(self, rng):
+        u = rng.f64()
+        lo, hi = 0, len(self.cdf)
+        while lo < hi:  # binary search: first index with cdf > u
+            mid = (lo + hi) // 2
+            if self.cdf[mid] <= u:
+                lo = mid + 1
+            else:
+                hi = mid
+        return min(lo, len(self.cdf) - 1)
+
+
+# --- port of workload::DriftingExpertTrace ----------------------------
+class DriftingExpertTrace:
+    def __init__(self, n_layers, n_experts, top_k, phase_len, seed):
+        self.n_layers, self.n_experts, self.top_k = n_layers, n_experts, top_k
+        self.zipf = Zipf(n_experts, 1.2)
+        self.phase_len, self.steps, self.base_seed = phase_len, 0, seed
+        self.rng = Rng(seed ^ 0x7ACE)
+        self.roll_phase(0)
+
+    def roll_phase(self, phase):
+        prng = Rng(self.base_seed ^ (phase * 0x9E3779B97F4A7C15 & M64))
+        perm = list(range(self.n_experts))
+        prng.shuffle(perm)
+        self.perm = perm
+        self.shifts = [1 + prng.below(self.n_experts - 1)
+                       for _ in range(self.n_layers - 1)]
+
+    def step(self):
+        if self.steps > 0 and self.steps % self.phase_len == 0:
+            self.roll_phase(self.steps // self.phase_len)
+        self.steps += 1
+        chosen, guard = [], 0
+        while len(chosen) < self.top_k and guard < 64 * self.top_k:
+            e = self.perm[self.zipf.sample(self.rng)]
+            if e not in chosen:
+                chosen.append(e)
+            guard += 1
+        for e in range(self.n_experts):
+            if len(chosen) >= self.top_k:
+                break
+            if e not in chosen:
+                chosen.append(e)
+        out = [[0] * self.n_experts for _ in range(self.n_layers)]
+        for e in chosen:
+            out[0][e] = 1
+        for l in range(1, self.n_layers):
+            chosen = [(e + self.shifts[l - 1]) % self.n_experts for e in chosen]
+            for e in chosen:
+                out[l][e] = 1
+        return out
+
+
+# --- port of latency::LatencyModel ------------------------------------
+EXPERT_BYTES = 3 * 4096 * 14336 * 2
+TOKEN_ACT_BYTES = 4096 * 2
+DEQUANT_OVERHEAD_FRAC = 0.12
+
+ENVS = {
+    # (gpu_const, gpu_single_extra, cpu_base, cpu_per_tok,
+    #  pcie_bw, pcie_base, act_base, act_per_byte)
+    "env1": (4000.0, 400.0, 5000.0, 450.0, 32.0e9 * 0.70, 20.0,
+             15.0, 0.45e-3 / 8.0),
+    "env2": (2200.0, 220.0, 2400.0, 180.0, 64.0e9 * 0.70, 15.0,
+             12.0, 0.45e-3 / 12.0),
+}
+
+
+class LatencyModel:
+    def __init__(self, env):
+        (g, ge, cb, ct, bw, pb, ab, apb) = ENVS[env]
+        self.gpu_const_us, self.gpu_single_extra_us = g, ge
+        self.cpu_base_us, self.cpu_per_token_us = cb, ct
+        self.transfer_us = pb + EXPERT_BYTES / bw * 1e6
+        self.act_roundtrip_per_token_us = 2.0 * (ab + apb * TOKEN_ACT_BYTES)
+
+    def gpu_lat(self, s):
+        return self.gpu_const_us + (self.gpu_single_extra_us if s == 1 else 0.0)
+
+    def cpu_lat(self, s):
+        return (self.cpu_base_us + self.cpu_per_token_us * s
+                + self.act_roundtrip_per_token_us * s)
+
+    def transfer_lat(self):
+        return self.transfer_us
+
+    def quant_gpu_lat(self, s):
+        return self.gpu_lat(s) * (1.0 + DEQUANT_OVERHEAD_FRAC)
+
+    def quant_transfer_lat(self, bits):
+        return self.transfer_us * max(bits, 1) / 16.0
+
+
+# --- port of scheduler::{decide_expert, decide_expert_tiered} ---------
+RES, QUANT, XFER, CPU = "resident", "quant", "transfer", "cpu"
+
+
+def decide_expert(resident, s, lat):
+    if s == 0:
+        return None
+    if resident:
+        return RES
+    if lat.cpu_lat(s) > lat.gpu_lat(s) + lat.transfer_lat():
+        return XFER
+    return CPU
+
+
+def decide_expert_tiered(fp, quant, s, lat):
+    if s == 0:
+        return None
+    if fp:
+        return RES
+    if not quant:
+        return decide_expert(False, s, lat)
+    q = lat.quant_gpu_lat(s)
+    x = lat.gpu_lat(s) + lat.transfer_lat()
+    c = lat.cpu_lat(s)
+    if q <= x and q <= c:
+        return QUANT
+    return XFER if x < c else CPU
+
+
+# --- port of quant::synthetic_expert_error ----------------------------
+def synthetic_expert_error(layer, expert, bits):
+    b = min(max(bits, 2), 15)
+    levels = (1 << (b - 1)) - 1
+    base = 0.5 / levels
+    h = 0xCBF29CE484222325
+    for v in (layer, expert):
+        h = ((h ^ v) * 0x100000001B3) & M64
+    jitter = 0.75 + 0.5 * (h % 1024) / 1023.0
+    return base * jitter
+
+
+# --- port of expertcache::ExpertCache (LRU, tier-enabled) -------------
+class ExpertCache:
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.entries = {}       # id -> [last_use, ready_us, pinned]
+        self.tick = 0
+        self.pcie_free_us = 0.0
+        self.max_lane_depth = 4.0
+        self.quant_bits_v = None
+        self.quant_capacity = 0
+        self.quant_entries = {}  # id -> [last_use, ready_us]
+        self.layer_quota = None
+        self.st = dict(hits=0, misses=0, evictions=0, prefetches=0,
+                       quant_hits=0, quant_misses=0, quant_admits=0,
+                       promotions=0, demotions=0, quant_corrected=0)
+
+    def hit_rate(self):
+        n = self.st["hits"] + self.st["misses"]
+        return self.st["hits"] / n if n else 0.0
+
+    def enable_quant_tier(self, bits):
+        bits = min(max(bits, 2), 16)
+        fp = min(max(self.capacity // 2, 1), self.capacity)
+        self.quant_capacity = (self.capacity - fp) * 16 // bits
+        self.quant_bits_v = bits
+        self.set_capacity(fp)
+        return self.capacity, self.quant_capacity
+
+    def set_capacity(self, n):
+        pinned = sum(1 for e in self.entries.values() if e[2])
+        n = max(n, pinned)
+        while len(self.entries) > n:
+            v = self.choose_victim_in(None)
+            if v is None:
+                break
+            self.evict_demoting(v)
+        self.capacity = n
+        return n
+
+    def partition_by_layer(self, n_layers):
+        self.layer_quota = max(self.capacity // max(n_layers, 1), 1)
+
+    def pin(self, id_):
+        assert len(self.entries) < self.capacity, "pin beyond capacity"
+        assert id_ not in self.entries
+        self.quant_entries.pop(id_, None)
+        self.tick += 1
+        self.entries[id_] = [self.tick, 0.0, True]
+
+    def observe_layer(self, layer, inp):
+        pass  # LRU has no popularity state
+
+    def lookup(self, id_, now):
+        e = self.entries.get(id_)
+        if e is not None and e[1] <= now:
+            self.tick += 1
+            e[0] = self.tick
+            self.st["hits"] += 1
+            return True
+        self.st["misses"] += 1
+        return False
+
+    def admit(self, id_):
+        e = self.entries.get(id_)
+        if e is not None:
+            if e[1] == 0.0:
+                return False
+            e[1] = 0.0
+            self.tick += 1
+            e[0] = self.tick
+            return True
+        return self.insert_evicting(id_, 0.0)
+
+    def prefetch(self, id_, now, transfer_us):
+        if id_ in self.entries:
+            return None
+        if self.pcie_free_us > now + self.max_lane_depth * transfer_us:
+            return None
+        ready = max(self.pcie_free_us, now) + transfer_us
+        if not self.insert_evicting(id_, ready):
+            return None
+        self.pcie_free_us = ready
+        self.st["prefetches"] += 1
+        return ready
+
+    def lookup_quant(self, id_, now, err):
+        e = self.quant_entries.get(id_)
+        if e is not None and e[1] <= now:
+            self.tick += 1
+            e[0] = self.tick
+            self.st["quant_hits"] += 1
+            return True
+        self.st["quant_misses"] += 1
+        return False
+
+    def admit_quant(self, id_, now, transfer_us):
+        if self.quant_bits_v is None:
+            return None
+        if (self.quant_capacity == 0 or id_ in self.entries
+                or id_ in self.quant_entries):
+            return None
+        if self.pcie_free_us > now + self.max_lane_depth * transfer_us:
+            return None
+        ready = max(self.pcie_free_us, now) + transfer_us
+        self.make_quant_room()
+        self.tick += 1
+        self.quant_entries[id_] = [self.tick, ready]
+        self.pcie_free_us = ready
+        self.st["quant_admits"] += 1
+        return ready
+
+    def promote(self, id_):
+        if self.quant_entries.pop(id_, None) is None:
+            return False
+        self.st["promotions"] += 1
+        self.admit(id_)
+        return True
+
+    def note_quant_corrected(self, id_, now):
+        self.st["quant_corrected"] += 1
+
+    def insert_evicting(self, id_, ready_us):
+        if self.layer_quota is not None:
+            in_layer = sum(1 for k in self.entries if k[0] == id_[0])
+            if in_layer >= self.layer_quota:
+                v = self.choose_victim_in(id_[0])
+                if v is None:
+                    return False
+                self.evict_demoting(v)
+        if len(self.entries) >= self.capacity:
+            v = self.choose_victim_in(None)
+            if v is None:
+                return False
+            self.evict_demoting(v)
+        self.quant_entries.pop(id_, None)
+        self.tick += 1
+        self.entries[id_] = [self.tick, ready_us, False]
+        return True
+
+    def evict_demoting(self, v):
+        del self.entries[v]
+        self.st["evictions"] += 1
+        if self.quant_bits_v is None or self.quant_capacity == 0:
+            return
+        if v in self.quant_entries:
+            return
+        self.make_quant_room()
+        self.tick += 1
+        self.quant_entries[v] = [self.tick, 0.0]
+        self.st["demotions"] += 1
+
+    def make_quant_room(self):
+        while len(self.quant_entries) >= max(self.quant_capacity, 1):
+            v = min(self.quant_entries.items(), key=lambda kv: (kv[1][0], kv[0]))
+            del self.quant_entries[v[0]]
+
+    def choose_victim_in(self, layer):
+        cands = [(e[0], k) for k, e in self.entries.items()
+                 if not e[2] and (layer is None or k[0] == layer)]
+        return min(cands)[1] if cands else None
+
+
+# --- port of expertcache::sim -----------------------------------------
+def run_cache_sim(cache, trace, steps, lat, invariant=None):
+    now = 0.0
+    step_us = []
+    for _ in range(steps):
+        routing = trace.step()
+        t0 = now
+        for layer, inp in enumerate(routing):
+            cache.observe_layer(layer, inp)
+            gpu = cpu = 0.0
+            for j, s in enumerate(inp):
+                if s == 0:
+                    continue
+                id_ = (layer, j)
+                plan = decide_expert(cache.lookup(id_, now), s, lat)
+                if plan == RES:
+                    gpu += lat.gpu_lat(s)
+                elif plan == XFER:
+                    cache.admit(id_)
+                    gpu += max(lat.transfer_lat(), lat.gpu_lat(s))
+                elif plan == CPU:
+                    cache.prefetch(id_, now, lat.transfer_lat())
+                    cpu += lat.cpu_lat(s)
+            now += max(gpu, cpu)
+        step_us.append(now - t0)
+        if invariant:
+            invariant(cache)
+    return dict(mean_step_us=sum(step_us) / len(step_us),
+                hit_rate=cache.hit_rate(), stats=cache.st)
+
+
+def run_cache_sim_tiered(cache, trace, steps, lat, error_budget,
+                         invariant=None):
+    bits = cache.quant_bits_v
+    assert bits is not None, "tiered sim needs enable_quant_tier"
+    now = 0.0
+    step_us = []
+    n = dict(resident=0, quant=0, transfer=0, cpu=0, corrected=0)
+    for _ in range(steps):
+        routing = trace.step()
+        t0 = now
+        budget = error_budget
+        for layer, inp in enumerate(routing):
+            cache.observe_layer(layer, inp)
+            gpu = cpu = 0.0
+            for j, s in enumerate(inp):
+                if s == 0:
+                    continue
+                id_ = (layer, j)
+                fp = cache.lookup(id_, now)
+                err = synthetic_expert_error(layer, j, bits)
+                quant = cache.lookup_quant(id_, now, err)
+                plan = decide_expert_tiered(fp, quant, s, lat)
+                if plan == RES:
+                    n["resident"] += 1
+                    gpu += lat.gpu_lat(s)
+                elif plan == QUANT:
+                    if budget >= err:
+                        budget -= err
+                        n["quant"] += 1
+                        gpu += lat.quant_gpu_lat(s)
+                    else:
+                        cache.note_quant_corrected(id_, now)
+                        cache.promote(id_)
+                        n["corrected"] += 1
+                        n["transfer"] += 1
+                        gpu += max(lat.transfer_lat(), lat.gpu_lat(s))
+                elif plan == XFER:
+                    cache.admit(id_)
+                    n["transfer"] += 1
+                    gpu += max(lat.transfer_lat(), lat.gpu_lat(s))
+                elif plan == CPU:
+                    cache.admit_quant(id_, now, lat.quant_transfer_lat(bits))
+                    n["cpu"] += 1
+                    cpu += lat.cpu_lat(s)
+            now += max(gpu, cpu)
+        step_us.append(now - t0)
+        if invariant:
+            invariant(cache)
+    return dict(mean_step_us=sum(step_us) / len(step_us),
+                hit_rate=cache.hit_rate(), stats=cache.st, mix=n)
+
+
+def run_pinned_cache_sim(capacity, pin_fraction, layers, experts, top_k,
+                         phase_len, seed, steps, lat):
+    warmup = DriftingExpertTrace(layers, experts, top_k, phase_len, seed)
+    counts = [[0] * experts for _ in range(layers)]
+    for _ in range(min(steps, 100)):
+        for l, inp in enumerate(warmup.step()):
+            for e, s in enumerate(inp):
+                counts[l][e] += s
+    ranked = sorted(((counts[l][e], (l, e))
+                     for l in range(layers) for e in range(experts)),
+                    key=lambda kv: (-kv[0], kv[1]))
+    n_pin = min(int(capacity * pin_fraction), max(capacity - 1, 0))
+    cache = ExpertCache(capacity)
+    for _, id_ in ranked[:n_pin]:
+        cache.pin(id_)
+    trace = DriftingExpertTrace(layers, experts, top_k, phase_len, seed)
+    return run_cache_sim(cache, trace, steps, lat), n_pin
+
+
+# --- checks -----------------------------------------------------------
+def check(name, cond, detail=""):
+    tag = "ok" if cond else "FAIL"
+    print(f"  [{tag}] {name}{(' — ' + detail) if detail else ''}")
+    return bool(cond)
+
+
+def main():
+    ok = True
+    lat1, lat2 = LatencyModel("env1"), LatencyModel("env2")
+
+    print("1. tier capacity split at identical HBM bytes")
+    for cap in [1, 2, 6, 8, 12, 56]:
+        for bits in [2, 4, 8, 16]:
+            c = ExpertCache(cap)
+            fp, q = c.enable_quant_tier(bits)
+            ok &= check(
+                f"cap={cap} bits={bits} -> fp={fp} quant={q}",
+                fp >= 1 and fp * 16 + q * bits <= cap * 16
+                and q == (cap - fp) * 16 // bits)
+
+    print("2. decide_expert_tiered == brute-force argmin (env1 + env2)")
+    for name, lat in [("env1", lat1), ("env2", lat2)]:
+        agree = True
+        saw = set()
+        for s in range(1, 65):
+            costs = {QUANT: lat.quant_gpu_lat(s),
+                     XFER: lat.gpu_lat(s) + lat.transfer_lat(),
+                     CPU: lat.cpu_lat(s)}
+            best = min(costs, key=lambda k: (costs[k], [QUANT, XFER, CPU].index(k)))
+            got = decide_expert_tiered(False, True, s, lat)
+            saw.add(got)
+            agree &= got == best
+            agree &= decide_expert_tiered(False, False, s, lat) == \
+                decide_expert(False, s, lat)
+            agree &= decide_expert_tiered(True, True, s, lat) == RES
+        ok &= check(f"{name}: argmin agrees over s in 1..64", agree,
+                    f"plans seen: {sorted(saw)}")
+    ok &= check("s=0 skips", decide_expert_tiered(True, True, 0, lat1) is None)
+
+    print("3. synthetic expert errors")
+    e8 = [synthetic_expert_error(l, e, 8) for l in range(4) for e in range(8)]
+    e4 = [synthetic_expert_error(l, e, 4) for l in range(4) for e in range(8)]
+    b8, b4 = 0.5 / 127, 0.5 / 7
+    ok &= check("Q8 errors in [0.75, 1.25] x base",
+                all(b8 * 0.75 <= v <= b8 * 1.25 for v in e8),
+                f"range [{min(e8):.5f}, {max(e8):.5f}]")
+    ok &= check("Q4/Q8 ratio is the level ratio",
+                all(abs(a / b - 127 / 7) < 1e-9 for a, b in zip(e4, e8)))
+    ok &= check("deterministic",
+                synthetic_expert_error(2, 5, 8) == synthetic_expert_error(2, 5, 8))
+
+    print("4. error budget semantics")
+    c = ExpertCache(8)
+    c.enable_quant_tier(8)
+    t = DriftingExpertTrace(4, 8, 2, 100, 7)
+    r0 = run_cache_sim_tiered(c, t, 300, lat1, 0.0)
+    ok &= check("budget 0: every quant plan corrected",
+                r0["mix"]["quant"] == 0 and r0["mix"]["corrected"] > 0,
+                f"corrected={r0['mix']['corrected']}")
+    ok &= check("corrected counter matches",
+                r0["stats"]["quant_corrected"] == r0["mix"]["corrected"])
+    c = ExpertCache(8)
+    c.enable_quant_tier(8)
+    t = DriftingExpertTrace(4, 8, 2, 100, 7)
+    r1 = run_cache_sim_tiered(c, t, 300, lat1, 1e9)
+    ok &= check("generous budget: no corrections, quant hits flow",
+                r1["mix"]["corrected"] == 0 and r1["mix"]["quant"] > 0,
+                f"quant={r1['mix']['quant']}")
+    ok &= check("budget 0 is slower than accept-all (corrections pay fp)",
+                r0["mean_step_us"] >= r1["mean_step_us"],
+                f"{r0['mean_step_us']:.0f} vs {r1['mean_step_us']:.0f} us")
+
+    print("5. capacity invariants under churn")
+    c = ExpertCache(8)
+    fp_cap, q_cap = c.enable_quant_tier(8)
+    t = DriftingExpertTrace(4, 8, 2, 50, 13)
+    viol = []
+
+    def inv(cache):
+        if len(cache.entries) > fp_cap:
+            viol.append("fp over capacity")
+        if len(cache.quant_entries) > q_cap:
+            viol.append("quant over capacity")
+        if set(cache.entries) & set(cache.quant_entries):
+            viol.append("tiers overlap")
+
+    run_cache_sim_tiered(c, t, 400, lat1, 0.05, invariant=inv)
+    ok &= check("fp <= fp_cap, quant <= quant_cap, disjoint every step",
+                not viol, f"violations={set(viol) or '{}'}")
+    c = ExpertCache(8)
+    c.partition_by_layer(4)
+    quota = c.layer_quota
+    t = DriftingExpertTrace(4, 8, 2, 50, 13)
+    viol2 = []
+
+    def inv2(cache):
+        per = {}
+        for (l, _e) in cache.entries:
+            per[l] = per.get(l, 0) + 1
+        if any(v > quota for v in per.values()):
+            viol2.append(max(per.values()))
+
+    run_cache_sim(c, t, 400, lat1, invariant=inv2)
+    ok &= check(f"layer partition: every layer <= quota {quota}", not viol2)
+
+    print("6. ACCEPTANCE: tiered beats fp-only at identical bytes "
+          "(BENCH_PR9 configuration, seed 33)")
+    asserted = 0
+    for steps in [200, 600]:  # FIDDLER_BENCH_FAST and full bench budgets
+        for workload, top_k in [("decode", 2), ("chunked_prefill", 6)]:
+            for cap in [6, 8, 12]:
+                base = run_cache_sim(ExpertCache(cap),
+                                     DriftingExpertTrace(4, 8, top_k, 100, 33),
+                                     steps, lat1)
+                fp_miss = 1.0 - base["hit_rate"]
+                for bits, budget in [(8, 0.2), (4, 2.0)]:
+                    c = ExpertCache(cap)
+                    c.enable_quant_tier(bits)
+                    tier = run_cache_sim_tiered(
+                        c, DriftingExpertTrace(4, 8, top_k, 100, 33),
+                        steps, lat1, budget)
+                    win = tier["mean_step_us"] < base["mean_step_us"]
+                    tag = (f"{steps}st {workload}/cap{cap}/q{bits}: "
+                           f"fp {base['mean_step_us']:.0f} (miss {fp_miss:.0%})"
+                           f" vs tiered {tier['mean_step_us']:.0f} us")
+                    if workload == "decode" and cap <= 8:
+                        asserted += 1
+                        ok &= check(tag, fp_miss >= 0.30 and win)
+                    else:
+                        print(f"  [  --] {tag} "
+                              f"({'win' if win else 'no win'}, not asserted)")
+    ok &= check("every asserted point covers the >=30%-miss criterion",
+                asserted == 8, f"{asserted} points")
+
+    print("6b. rust sim unit-test configs replay")
+    base = run_cache_sim(ExpertCache(8), DriftingExpertTrace(4, 8, 2, 100, 11),
+                         300, lat1)
+    c = ExpertCache(8)
+    c.enable_quant_tier(4)
+    t = run_cache_sim_tiered(c, DriftingExpertTrace(4, 8, 2, 100, 11),
+                             300, lat1, 10.0)
+    ok &= check("seed 11 cap 8 Q4 budget 10 wins (tiered_sim_beats_fp_only)",
+                t["mean_step_us"] < base["mean_step_us"],
+                f"{base['mean_step_us']:.0f} -> {t['mean_step_us']:.0f} us")
+    c = ExpertCache(8)
+    c.enable_quant_tier(8)
+    r = run_cache_sim_tiered(c, DriftingExpertTrace(4, 8, 2, 100, 7),
+                             300, lat1, 0.05)
+    planned = sum(v for k, v in r["mix"].items() if k != "corrected")
+    ok &= check("seed 7 Q8 mix accounting (tiered_sim_serves_quantized_hits)",
+                r["mix"]["quant"] > 0 and planned == 300 * 4 * 2
+                and r["stats"]["quant_hits"] ==
+                r["mix"]["quant"] + r["mix"]["corrected"],
+                f"mix={r['mix']}")
+
+    print("7. pin-fraction ablation harness")
+    rows = {}
+    for phase, plen in [("stationary", 1_000_000), ("drifting", 100)]:
+        for f in [0.0, 0.5, 1.0]:
+            (r, n_pin), (r2, _) = (run_pinned_cache_sim(
+                10, f, 4, 8, 2, plen, 21, 600, lat1) for _ in range(2))
+            ok &= check(f"{phase} f={f}: deterministic, pins={n_pin} <= 9",
+                        r["mean_step_us"] == r2["mean_step_us"] and n_pin <= 9,
+                        f"hit {r['hit_rate']:.0%}, {r['mean_step_us']:.0f} us")
+            rows[(phase, f)] = r
+    gain_st = rows[("stationary", 0.0)]["mean_step_us"] - \
+        rows[("stationary", 1.0)]["mean_step_us"]
+    gain_dr = rows[("drifting", 0.0)]["mean_step_us"] - \
+        rows[("drifting", 1.0)]["mean_step_us"]
+    ok &= check("drift erodes the pinning win", gain_dr < gain_st,
+                f"stationary gain {gain_st:.0f} us vs drifting {gain_dr:.0f} us")
+
+    print()
+    if not ok:
+        print("FAILED")
+        return 1
+    print("all quant-tier checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -159,6 +159,34 @@ impl ShardPlan {
     }
 }
 
+/// How the expert cache's fp capacity is partitioned (`--cache-partition`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CachePartition {
+    /// One global pool: any layer's expert can evict any other layer's
+    /// (the seed behavior).
+    None,
+    /// Slots split evenly across layers: a hot layer evicts within its
+    /// own quota instead of flushing every other layer's residents.
+    Layer,
+}
+
+impl CachePartition {
+    pub fn by_name(name: &str) -> anyhow::Result<CachePartition> {
+        Ok(match name {
+            "none" | "" => CachePartition::None,
+            "layer" => CachePartition::Layer,
+            other => anyhow::bail!("unknown cache partition {other:?} (have none, layer)"),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CachePartition::None => "none",
+            CachePartition::Layer => "layer",
+        }
+    }
+}
+
 /// Expert placement strategy at initialization (paper §3.4 + Appendix C).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PlacementStrategy {
@@ -277,6 +305,25 @@ pub struct ServingConfig {
     /// `ceil(share / F)` replicas across the fleet (capped at the shard
     /// count).  0 (default) = replication off.
     pub replicate_hot: f64,
+    /// Quantized expert tier (`--quant-tier on|off`).  Off (default) =
+    /// the two-way Algorithm 1, bit-identical to the pre-tier engine.
+    /// On: half the fp expert capacity is converted into a low-bit
+    /// resident tier holding `16/quant_bits` copies per converted slot
+    /// (identical HBM bytes), and the scheduler prices a third option —
+    /// run the quantized resident copy now — against transfer-fp and
+    /// run-on-CPU per expert per layer.
+    pub quant_tier: bool,
+    /// Bit width of quantized resident copies (`--quant-bits`, 2..=16).
+    pub quant_bits: u32,
+    /// Per-request quantization error budget (`--error-budget`): each
+    /// accepted quantized hit spends its expert's max-abs error against
+    /// this budget; once exhausted, further quantized hits are
+    /// *corrected* — the expert runs at full precision via an fp
+    /// promotion instead.  0 forces correction on every quantized hit
+    /// (token streams match the fp-only run).
+    pub error_budget: f64,
+    /// Expert-cache capacity partitioning (`--cache-partition`).
+    pub cache_partition: CachePartition,
 }
 
 impl Default for ServingConfig {
@@ -306,6 +353,10 @@ impl Default for ServingConfig {
             shards: 1,
             shard_plan: ShardPlan::Auto,
             replicate_hot: 0.0,
+            quant_tier: false,
+            quant_bits: 8,
+            error_budget: 0.05,
+            cache_partition: CachePartition::None,
         }
     }
 }
@@ -360,6 +411,23 @@ impl ServingConfig {
             (0.0..=1.0).contains(&c.replicate_hot),
             "--replicate-hot must be in [0, 1]"
         );
+        if let Some(q) = args.get("quant-tier") {
+            c.quant_tier = match q {
+                "on" => true,
+                "off" => false,
+                other => anyhow::bail!("--quant-tier must be on or off, got {other:?}"),
+            };
+        }
+        c.quant_bits = args.usize_or("quant-bits", c.quant_bits as usize) as u32;
+        anyhow::ensure!(
+            (2..=16).contains(&c.quant_bits),
+            "--quant-bits must be in [2, 16]"
+        );
+        c.error_budget = args.f64_or("error-budget", c.error_budget);
+        anyhow::ensure!(c.error_budget >= 0.0, "--error-budget must be non-negative");
+        if let Some(p) = args.get("cache-partition") {
+            c.cache_partition = CachePartition::by_name(p)?;
+        }
         Ok(c)
     }
 
@@ -533,6 +601,40 @@ mod tests {
         assert!(ServingConfig::from_args(&bad).is_err());
         let bad = Args::parse("--shard-plan ring".split_whitespace().map(String::from));
         assert!(ServingConfig::from_args(&bad).is_err());
+    }
+
+    #[test]
+    fn quant_tier_args_parse_and_default_off() {
+        let d = ServingConfig::default();
+        assert!(!d.quant_tier, "quant tier must default off (seed behavior)");
+        assert_eq!(d.quant_bits, 8);
+        assert!((d.error_budget - 0.05).abs() < 1e-12);
+        assert_eq!(d.cache_partition, CachePartition::None);
+
+        let a = Args::parse(
+            "--quant-tier on --quant-bits 4 --error-budget 0.02 --cache-partition layer"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let c = ServingConfig::from_args(&a).unwrap();
+        assert!(c.quant_tier);
+        assert_eq!(c.quant_bits, 4);
+        assert!((c.error_budget - 0.02).abs() < 1e-12);
+        assert_eq!(c.cache_partition, CachePartition::Layer);
+
+        let off = Args::parse("--quant-tier off".split_whitespace().map(String::from));
+        assert!(!ServingConfig::from_args(&off).unwrap().quant_tier);
+
+        for bad in [
+            "--quant-tier maybe",
+            "--quant-bits 1",
+            "--quant-bits 32",
+            "--error-budget -0.5",
+            "--cache-partition expert",
+        ] {
+            let a = Args::parse(bad.split_whitespace().map(String::from));
+            assert!(ServingConfig::from_args(&a).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

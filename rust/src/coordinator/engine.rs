@@ -53,11 +53,20 @@ pub fn make_policy(serving: &ServingConfig, cfg: &ModelConfig) -> Box<dyn ExecPo
         Policy::FiddlerPrefetch => {
             Box::new(crate::prefetch::PrefetchingFiddlerPolicy::new(load_transitions(cfg), 2))
         }
-        Policy::FiddlerCached => Box::new(CachedFiddlerPolicy::new(
-            make_eviction(serving.cache_eviction, cfg),
-            serving.placement,
-            serving.cache_pin_fraction,
-        )),
+        Policy::FiddlerCached => {
+            let mut p = CachedFiddlerPolicy::new(
+                make_eviction(serving.cache_eviction, cfg),
+                serving.placement,
+                serving.cache_pin_fraction,
+            );
+            if serving.quant_tier {
+                p = p.with_quant_tier(serving.quant_bits, serving.error_budget);
+            }
+            if serving.cache_partition == crate::config::serving::CachePartition::Layer {
+                p = p.with_layer_partition(cfg.n_layers);
+            }
+            Box::new(p)
+        }
     }
 }
 

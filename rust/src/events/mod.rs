@@ -59,6 +59,14 @@ pub enum TraceEvent {
         shards: usize,
         shard_plan: String,
         replicate_hot: f64,
+        /// Quantized expert tier (PR9): enabled flag, resident copy
+        /// width in bits, per-request error budget, and cache partition
+        /// mode ("" / "none" = global pool).  All default to off so
+        /// pre-tier logs replay unchanged.
+        quant_tier: bool,
+        quant_bits: usize,
+        error_budget: f64,
+        cache_partition: String,
     },
     /// A request reached the scheduler (its full prompt is recorded —
     /// this is what makes a log a replayable trace).
@@ -147,6 +155,20 @@ pub enum TraceEvent {
     /// Speculative transfer admitted by the cache (`ready_us` = when the
     /// weights land).
     CachePrefetch { t_us: f64, layer: usize, expert: usize, ready_us: f64 },
+    /// A quantized resident copy was promoted to full precision — an fp
+    /// transfer on the PCIe lane (`ready_us` = when the fp weights are
+    /// usable; 0.0 for synchronous demand promotions).
+    TierPromoted { t_us: f64, layer: usize, expert: usize, ready_us: f64 },
+    /// An fp expert evicted under capacity pressure was re-quantized in
+    /// place into the low-bit tier (on-GPU, no PCIe traffic).
+    TierDemoted { t_us: f64, layer: usize, expert: usize },
+    /// A quantized resident copy served the layer; `err` is the
+    /// expert's precomputed max-abs quantization error charged against
+    /// the request's error budget.
+    QuantHit { t_us: f64, layer: usize, expert: usize, err: f64 },
+    /// The error budget could not absorb a quantized hit: the expert
+    /// ran at full precision instead (fp refresh scheduled).
+    QuantCorrected { t_us: f64, layer: usize, expert: usize },
     /// Pipeline driver issued a cross-layer prefetch from `layer` for
     /// `target_layer` (`distance` layers ahead).
     PrefetchIssued {
@@ -203,6 +225,10 @@ impl TraceEvent {
             TraceEvent::CacheEvict { .. } => "cache_evict",
             TraceEvent::CacheTransfer { .. } => "cache_transfer",
             TraceEvent::CachePrefetch { .. } => "cache_prefetch",
+            TraceEvent::TierPromoted { .. } => "tier_promoted",
+            TraceEvent::TierDemoted { .. } => "tier_demoted",
+            TraceEvent::QuantHit { .. } => "quant_hit",
+            TraceEvent::QuantCorrected { .. } => "quant_corrected",
             TraceEvent::PrefetchIssued { .. } => "prefetch_issued",
             TraceEvent::PrefetchOverlapped { .. } => "prefetch_overlapped",
             TraceEvent::PrefetchCancelled { .. } => "prefetch_cancelled",
@@ -235,6 +261,10 @@ impl TraceEvent {
                 shards,
                 shard_plan,
                 replicate_hot,
+                quant_tier,
+                quant_bits,
+                error_budget,
+                cache_partition,
             } => {
                 o.set("seed", Json::Num(*seed as f64));
                 o.set("temperature", Json::Num(*temperature));
@@ -252,6 +282,10 @@ impl TraceEvent {
                 o.set("shards", Json::from(*shards));
                 o.set("shard_plan", Json::from(shard_plan.as_str()));
                 o.set("replicate_hot", Json::Num(*replicate_hot));
+                o.set("quant_tier", Json::from(*quant_tier));
+                o.set("quant_bits", Json::from(*quant_bits));
+                o.set("error_budget", Json::Num(*error_budget));
+                o.set("cache_partition", Json::from(cache_partition.as_str()));
             }
             TraceEvent::RequestArrived { req, t_us, prompt, max_new, width, slo_us, deadline_us } => {
                 o.set("req", Json::Num(*req as f64));
@@ -394,6 +428,28 @@ impl TraceEvent {
                 o.set("expert", Json::from(*expert));
                 o.set("ready_us", Json::Num(*ready_us));
             }
+            TraceEvent::TierPromoted { t_us, layer, expert, ready_us } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+                o.set("ready_us", Json::Num(*ready_us));
+            }
+            TraceEvent::TierDemoted { t_us, layer, expert } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+            }
+            TraceEvent::QuantHit { t_us, layer, expert, err } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+                o.set("err", Json::Num(*err));
+            }
+            TraceEvent::QuantCorrected { t_us, layer, expert } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("layer", Json::from(*layer));
+                o.set("expert", Json::from(*expert));
+            }
             TraceEvent::PrefetchIssued { t_us, layer, target_layer, expert, distance, ready_us } => {
                 o.set("t_us", Json::Num(*t_us));
                 o.set("layer", Json::from(*layer));
@@ -464,6 +520,10 @@ impl TraceEvent {
                 shards: ju(v, "shards", 1).max(1),
                 shard_plan: js(v, "shard_plan"),
                 replicate_hot: jf(v, "replicate_hot", 0.0),
+                quant_tier: jb(v, "quant_tier", false),
+                quant_bits: ju(v, "quant_bits", 8),
+                error_budget: jf(v, "error_budget", 0.0),
+                cache_partition: js(v, "cache_partition"),
             },
             "request_arrived" => TraceEvent::RequestArrived {
                 req: j64(v, "req", 0),
@@ -594,6 +654,28 @@ impl TraceEvent {
                 expert: ju(v, "expert", 0),
                 ready_us: jf(v, "ready_us", 0.0),
             },
+            "tier_promoted" => TraceEvent::TierPromoted {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+                ready_us: jf(v, "ready_us", 0.0),
+            },
+            "tier_demoted" => TraceEvent::TierDemoted {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+            },
+            "quant_hit" => TraceEvent::QuantHit {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+                err: jf(v, "err", 0.0),
+            },
+            "quant_corrected" => TraceEvent::QuantCorrected {
+                t_us: jf(v, "t_us", 0.0),
+                layer: ju(v, "layer", 0),
+                expert: ju(v, "expert", 0),
+            },
             "prefetch_issued" => TraceEvent::PrefetchIssued {
                 t_us: jf(v, "t_us", 0.0),
                 layer: ju(v, "layer", 0),
@@ -658,6 +740,10 @@ impl TraceEvent {
                 shards: 3,
                 shard_plan: "auto".into(),
                 replicate_hot: 0.25,
+                quant_tier: true,
+                quant_bits: 4,
+                error_budget: 0.02,
+                cache_partition: "layer".into(),
             },
             TraceEvent::RequestArrived {
                 req: 1,
@@ -734,6 +820,10 @@ impl TraceEvent {
             TraceEvent::CacheEvict { t_us: 2_600.0, layer: 0, expert: 7 },
             TraceEvent::CacheTransfer { t_us: 2_600.0, layer: 3, expert: 6, bytes: 1 << 24 },
             TraceEvent::CachePrefetch { t_us: 2_700.0, layer: 4, expert: 2, ready_us: 3_400.0 },
+            TraceEvent::TierPromoted { t_us: 2_750.0, layer: 4, expert: 2, ready_us: 3_500.0 },
+            TraceEvent::TierDemoted { t_us: 2_760.0, layer: 0, expert: 7 },
+            TraceEvent::QuantHit { t_us: 2_770.0, layer: 3, expert: 5, err: 0.004 },
+            TraceEvent::QuantCorrected { t_us: 2_780.0, layer: 3, expert: 5 },
             TraceEvent::PrefetchIssued {
                 t_us: 2_700.0,
                 layer: 3,

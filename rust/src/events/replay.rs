@@ -14,7 +14,7 @@
 //! determinism — both worth failing CI over.
 
 use super::TraceEvent;
-use crate::config::serving::{AdmissionKind, ServingConfig, ShardPlan};
+use crate::config::serving::{AdmissionKind, CachePartition, ServingConfig, ShardPlan};
 use crate::metrics::GenMetrics;
 use crate::server::sim::SimBackend;
 use crate::server::{serve_lifecycle, ControlMsg, Event, ReloadSpec, Request, ServeBackend};
@@ -194,6 +194,10 @@ impl RecordedTrace {
             shards,
             shard_plan,
             replicate_hot,
+            quant_tier,
+            quant_bits,
+            error_budget,
+            cache_partition,
         }) = &self.meta
         else {
             anyhow::bail!("trace has no meta line; cannot reconstruct the serving config");
@@ -222,6 +226,12 @@ impl RecordedTrace {
                     .with_context(|| format!("meta shard_plan {shard_plan:?}"))?
             },
             replicate_hot: *replicate_hot,
+            quant_tier: *quant_tier,
+            quant_bits: (*quant_bits).clamp(2, 16) as u32,
+            error_budget: *error_budget,
+            // Legacy traces predate the field and record "".
+            cache_partition: CachePartition::by_name(cache_partition)
+                .with_context(|| format!("meta cache_partition {cache_partition:?}"))?,
             // A replay never overwrites the source trace.
             events_out: None,
             ..ServingConfig::default()
@@ -380,7 +390,9 @@ pub fn replay_with_config(
     // recorded prompts and placements, so the pins reproduce exactly.
     let profile = sim_demand_profile(rec.requests.iter().map(|r| r.prompt.as_slice()));
     let model = LatencyModel::from_hardware(&HardwareConfig::env1());
-    let plan = plan_shards(&profile, &model, n, serving.shard_plan, SIM_FLEET_GPU_CAPACITY);
+    let quant_bits = serving.quant_tier.then_some(serving.quant_bits);
+    let plan =
+        plan_shards(&profile, &model, n, serving.shard_plan, SIM_FLEET_GPU_CAPACITY, quant_bits);
     let horizon_s = sim_arrival_horizon_s(rec.requests.iter().map(|r| r.arrive_us));
     for (s, rx) in rxs.into_iter().enumerate() {
         let mut backend = SimBackend::new(serving.clone());
@@ -449,6 +461,22 @@ pub fn apply_config_overrides(cfg: &mut ServingConfig, spec: &str) -> Result<()>
             "slo-ttft-ms" => cfg.slo_ttft_ms = parse_f64(val)?,
             "max-preemptions" => cfg.max_preemptions = parse_usize(val)?,
             "lookahead" => cfg.pipeline_lookahead = parse_usize(val)?,
+            "quant-tier" => {
+                cfg.quant_tier = match val {
+                    "on" => true,
+                    "off" => false,
+                    other => anyhow::bail!(
+                        "--config-override: quant-tier must be on or off, got {other:?}"
+                    ),
+                }
+            }
+            "quant-bits" => {
+                let bits = parse_usize(val)?;
+                anyhow::ensure!((2..=16).contains(&bits), "quant-bits must be in [2, 16]");
+                cfg.quant_bits = bits as u32;
+            }
+            "error-budget" => cfg.error_budget = parse_f64(val)?.max(0.0),
+            "cache-partition" => cfg.cache_partition = CachePartition::by_name(val)?,
             _ => anyhow::bail!("--config-override: unknown key {key:?}"),
         }
     }
@@ -602,6 +630,10 @@ mod tests {
             shards: 1,
             shard_plan: "auto".to_string(),
             replicate_hot: 0.0,
+            quant_tier: false,
+            quant_bits: 8,
+            error_budget: 0.0,
+            cache_partition: String::new(),
         }
     }
 

@@ -67,6 +67,17 @@ struct Entry {
     prefetched: bool,
 }
 
+/// Residency record of one low-bit tier entry.  Quantized copies carry
+/// no pin state — the tier is purely dynamic — and their recency order
+/// is plain LRU (the fp tier keeps the pluggable policy).
+#[derive(Clone, Copy, Debug)]
+struct QuantEntry {
+    last_use: u64,
+    /// Transfer-completion time of a lane-admitted copy (0.0 for
+    /// demotions, which re-quantize in place on the GPU).
+    ready_us: f64,
+}
+
 /// Hit/miss/eviction/transfer counters of one cache.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
@@ -82,6 +93,20 @@ pub struct CacheStats {
     pub prefetches: u64,
     /// Hits whose entry was inserted speculatively.
     pub prefetch_hits: u64,
+    /// Low-bit tier lookups (zero whenever the tier is disabled — the
+    /// bit-identity contract of `--quant-tier off`).
+    pub quant_hits: u64,
+    pub quant_misses: u64,
+    /// Quantized copies admitted over the PCIe lane (bits/16 of an fp
+    /// transfer each).
+    pub quant_admits: u64,
+    /// Quantized copies promoted to full precision (fp transfer) and fp
+    /// evictions re-quantized in place into the low-bit tier.
+    pub promotions: u64,
+    pub demotions: u64,
+    /// Quantized hits the error budget could not absorb: the expert ran
+    /// at full precision instead.
+    pub quant_corrected: u64,
 }
 
 impl CacheStats {
@@ -110,6 +135,12 @@ impl CacheStats {
             bytes_in: self.bytes_in.saturating_sub(base.bytes_in),
             prefetches: self.prefetches.saturating_sub(base.prefetches),
             prefetch_hits: self.prefetch_hits.saturating_sub(base.prefetch_hits),
+            quant_hits: self.quant_hits.saturating_sub(base.quant_hits),
+            quant_misses: self.quant_misses.saturating_sub(base.quant_misses),
+            quant_admits: self.quant_admits.saturating_sub(base.quant_admits),
+            promotions: self.promotions.saturating_sub(base.promotions),
+            demotions: self.demotions.saturating_sub(base.demotions),
+            quant_corrected: self.quant_corrected.saturating_sub(base.quant_corrected),
         }
     }
 
@@ -123,6 +154,12 @@ impl CacheStats {
         o.set("bytes_in", Json::Num(self.bytes_in as f64));
         o.set("prefetches", Json::Num(self.prefetches as f64));
         o.set("prefetch_hits", Json::Num(self.prefetch_hits as f64));
+        o.set("quant_hits", Json::Num(self.quant_hits as f64));
+        o.set("quant_misses", Json::Num(self.quant_misses as f64));
+        o.set("quant_admits", Json::Num(self.quant_admits as f64));
+        o.set("promotions", Json::Num(self.promotions as f64));
+        o.set("demotions", Json::Num(self.demotions as f64));
+        o.set("quant_corrected", Json::Num(self.quant_corrected as f64));
         o
     }
 }
@@ -144,6 +181,16 @@ pub struct ExpertCache {
     pub max_lane_depth: f64,
     /// Bytes charged per expert transfer (paper-scale by default).
     expert_bytes: u64,
+    /// Low-bit resident tier (disabled by default — `None` keeps every
+    /// path bit-identical to the pre-tier cache).  Enabled, half the fp
+    /// slots are converted into `16/bits` quantized copies each at
+    /// identical HBM bytes ([`ExpertCache::enable_quant_tier`]).
+    quant_bits: Option<u32>,
+    quant_capacity: usize,
+    quant_entries: HashMap<ExpertId, QuantEntry>,
+    /// Per-layer fp slot quota (`--cache-partition layer`): a layer at
+    /// its quota evicts within itself even when global capacity is free.
+    layer_quota: Option<usize>,
     stats: CacheStats,
     /// Engine-event stream; disabled by default (one branch per event).
     sink: crate::events::EventSink,
@@ -185,6 +232,10 @@ impl ExpertCache {
             pcie_free_us: 0.0,
             max_lane_depth: 4.0,
             expert_bytes: PAPER_EXPERT_BYTES,
+            quant_bits: None,
+            quant_capacity: 0,
+            quant_entries: HashMap::new(),
+            layer_quota: None,
             stats: CacheStats::default(),
             sink: crate::events::EventSink::default(),
             time_hint_us: 0.0,
@@ -235,17 +286,57 @@ impl ExpertCache {
     pub fn set_capacity(&mut self, capacity_experts: usize) -> usize {
         let n = capacity_experts.max(self.pinned_count());
         while self.entries.len() > n {
-            match self.choose_victim() {
-                Some(v) => {
-                    self.entries.remove(&v);
-                    self.stats.evictions += 1;
-                    self.emit_evict(v);
-                }
+            match self.choose_victim_in(None) {
+                Some(v) => self.evict_demoting(v),
                 None => break, // everything left is pinned
             }
         }
         self.capacity_experts = n;
         n
+    }
+
+    /// Convert half the fp expert slots into a low-bit resident tier at
+    /// IDENTICAL total HBM bytes: the fp tier keeps `cap/2` slots (at
+    /// least one) and the bytes of the converted half hold `16/bits`
+    /// quantized copies each (fp weights are 16-bit).  Existing fp
+    /// residents beyond the new fp capacity demote rather than evict.
+    /// Returns `(fp_capacity, quant_capacity)`.
+    pub fn enable_quant_tier(&mut self, bits: u32) -> (usize, usize) {
+        let bits = bits.clamp(2, 16);
+        let fp = (self.capacity_experts / 2).max(1).min(self.capacity_experts);
+        self.quant_capacity = (self.capacity_experts - fp) * 16 / bits as usize;
+        self.quant_bits = Some(bits);
+        self.set_capacity(fp);
+        (self.capacity_experts, self.quant_capacity)
+    }
+
+    pub fn quant_tier_enabled(&self) -> bool {
+        self.quant_bits.is_some()
+    }
+
+    pub fn quant_bits(&self) -> Option<u32> {
+        self.quant_bits
+    }
+
+    pub fn quant_capacity(&self) -> usize {
+        self.quant_capacity
+    }
+
+    pub fn quant_resident_count(&self) -> usize {
+        self.quant_entries.len()
+    }
+
+    /// Partition the fp capacity evenly across `n_layers`
+    /// (`--cache-partition layer`): each layer's quota is
+    /// `capacity/n_layers` (at least one slot), so one hot layer can no
+    /// longer evict every other layer's residents.  Pinned entries count
+    /// toward their layer's quota.
+    pub fn partition_by_layer(&mut self, n_layers: usize) {
+        self.layer_quota = Some((self.capacity_experts / n_layers.max(1)).max(1));
+    }
+
+    pub fn layer_quota(&self) -> Option<usize> {
+        self.layer_quota
     }
 
     pub fn is_resident(&self, id: ExpertId) -> bool {
@@ -352,6 +443,7 @@ impl ExpertCache {
             self.capacity_experts
         );
         assert!(!self.is_resident(id), "pin() duplicate {id:?}");
+        self.quant_entries.remove(&id); // tiers stay disjoint
         self.tick += 1;
         self.entries.insert(
             id,
@@ -490,29 +582,205 @@ impl ExpertCache {
         self.policy.observe_layer(layer, inp_size);
     }
 
+    pub fn is_quant_resident(&self, id: ExpertId) -> bool {
+        self.quant_entries.contains_key(&id)
+    }
+
+    /// Quant-resident AND its (lane) transfer has completed by `now_us`.
+    pub fn is_quant_ready(&self, id: ExpertId, now_us: f64) -> bool {
+        self.quant_entries.get(&id).map(|e| e.ready_us <= now_us).unwrap_or(false)
+    }
+
+    /// Is a quantized copy of `id` usable right now?  Counts a tier hit
+    /// (refreshing the copy's recency, emitting a `quant_hit` event
+    /// carrying `err` — the expert's precomputed max-abs quantization
+    /// error the caller charges against its budget) or a tier miss.
+    pub fn lookup_quant(&mut self, id: ExpertId, now_us: f64, err: f64) -> bool {
+        let hit = match self.quant_entries.get_mut(&id) {
+            Some(e) if e.ready_us <= now_us => {
+                self.tick += 1;
+                e.last_use = self.tick;
+                self.stats.quant_hits += 1;
+                true
+            }
+            _ => {
+                self.stats.quant_misses += 1;
+                false
+            }
+        };
+        if hit {
+            let t_us = if now_us > 0.0 { now_us } else { self.time_hint_us };
+            self.sink.emit_with(|| crate::events::TraceEvent::QuantHit {
+                t_us,
+                layer: id.0,
+                expert: id.1,
+                err,
+            });
+        }
+        hit
+    }
+
+    /// Admit a quantized copy over the serialized PCIe lane — the cheap
+    /// speculative admit (`transfer_us` is the *quantized* transfer time,
+    /// `bits/16` of an fp transfer; the caller prices it via
+    /// [`crate::latency::LatencyModel::quant_transfer_lat`]).  Skipped
+    /// when the expert already resides in either tier or the lane is
+    /// backlogged past the speculation budget.
+    pub fn admit_quant(&mut self, id: ExpertId, now_us: f64, transfer_us: f64) -> Option<f64> {
+        let bits = self.quant_bits?;
+        if self.quant_capacity == 0 || self.is_resident(id) || self.is_quant_resident(id) {
+            return None;
+        }
+        if self.pcie_free_us > now_us + self.max_lane_depth * transfer_us {
+            return None;
+        }
+        let start = self.pcie_free_us.max(now_us);
+        let ready = start + transfer_us;
+        self.make_quant_room();
+        self.tick += 1;
+        self.quant_entries.insert(id, QuantEntry { last_use: self.tick, ready_us: ready });
+        self.pcie_free_us = ready;
+        self.stats.quant_admits += 1;
+        self.stats.transfers_in += 1;
+        self.stats.bytes_in += self.expert_bytes * bits as u64 / 16;
+        self.sink.emit_with(|| crate::events::TraceEvent::CachePrefetch {
+            t_us: now_us,
+            layer: id.0,
+            expert: id.1,
+            ready_us: ready,
+        });
+        Some(ready)
+    }
+
+    /// Promote a quantized copy to full precision via a synchronous
+    /// demand transfer (the error-budget correction path): the quant
+    /// slot is freed and the expert becomes fp-resident now.  Returns
+    /// false when the expert has no quantized copy.
+    pub fn promote(&mut self, id: ExpertId) -> bool {
+        if self.quant_entries.remove(&id).is_none() {
+            return false;
+        }
+        self.stats.promotions += 1;
+        self.sink.emit_with(|| crate::events::TraceEvent::TierPromoted {
+            t_us: self.time_hint_us,
+            layer: id.0,
+            expert: id.1,
+            ready_us: 0.0,
+        });
+        self.admit(id);
+        true
+    }
+
+    /// Asynchronous promotion over the PCIe lane (prefetch-side): the fp
+    /// transfer is issued and the quant slot freed once it lands a slot.
+    /// `transfer_us` is the FULL fp transfer time.  Returns the fp
+    /// ready time, or `None` when the expert has no quantized copy, the
+    /// lane is backlogged, or the fp tier is fully pinned.
+    pub fn promote_async(&mut self, id: ExpertId, now_us: f64, transfer_us: f64) -> Option<f64> {
+        if !self.is_quant_resident(id) {
+            return None;
+        }
+        let ready = self.prefetch(id, now_us, transfer_us)?;
+        // prefetch() -> insert_evicting() already dropped the quant copy
+        // to keep the tiers disjoint; count and announce the promotion.
+        self.stats.promotions += 1;
+        self.sink.emit_with(|| crate::events::TraceEvent::TierPromoted {
+            t_us: now_us,
+            layer: id.0,
+            expert: id.1,
+            ready_us: ready,
+        });
+        Some(ready)
+    }
+
+    /// Record a quantized hit the error budget could not absorb (the
+    /// caller re-runs the expert at full precision).
+    pub fn note_quant_corrected(&mut self, id: ExpertId, now_us: f64) {
+        self.stats.quant_corrected += 1;
+        let t_us = if now_us > 0.0 { now_us } else { self.time_hint_us };
+        self.sink.emit_with(|| crate::events::TraceEvent::QuantCorrected {
+            t_us,
+            layer: id.0,
+            expert: id.1,
+        });
+    }
+
     /// All currently resident experts (unordered).
     pub fn resident_experts(&self) -> Vec<ExpertId> {
         self.entries.keys().copied().collect()
     }
 
-    /// Insert with eviction; false when every slot is pinned and full.
+    /// Insert with eviction; false when every candidate victim is pinned.
+    /// Under `--cache-partition layer` the incoming expert's layer evicts
+    /// within its own quota before global capacity is consulted.
     fn insert_evicting(&mut self, id: ExpertId, ready_us: f64, prefetched: bool) -> bool {
-        if self.entries.len() >= self.capacity_experts {
-            match self.choose_victim() {
-                Some(v) => {
-                    self.entries.remove(&v);
-                    self.stats.evictions += 1;
-                    self.emit_evict(v);
+        if let Some(q) = self.layer_quota {
+            let in_layer = self.entries.keys().filter(|k| k.0 == id.0).count();
+            if in_layer >= q {
+                match self.choose_victim_in(Some(id.0)) {
+                    Some(v) => self.evict_demoting(v),
+                    None => return false, // the whole quota is pinned
                 }
+            }
+        }
+        if self.entries.len() >= self.capacity_experts {
+            match self.choose_victim_in(None) {
+                Some(v) => self.evict_demoting(v),
                 None => return false,
             }
         }
+        // The tiers stay disjoint: an fp insert supersedes any quantized
+        // copy (always a no-op while the tier is disabled).
+        self.quant_entries.remove(&id);
         self.tick += 1;
         self.entries.insert(
             id,
             Entry { last_use: self.tick, ready_us, pinned: false, pin_tick: 0, prefetched },
         );
         true
+    }
+
+    /// Evict `v` from the fp tier; with the quant tier enabled the
+    /// victim's weights re-quantize in place (on-GPU, no PCIe traffic)
+    /// into a low-bit copy instead of vanishing.
+    fn evict_demoting(&mut self, v: ExpertId) {
+        self.entries.remove(&v);
+        self.stats.evictions += 1;
+        self.emit_evict(v);
+        if self.quant_bits.is_none() || self.quant_capacity == 0 {
+            return;
+        }
+        if self.quant_entries.contains_key(&v) {
+            return; // already has a quantized copy
+        }
+        self.make_quant_room();
+        self.tick += 1;
+        self.quant_entries.insert(v, QuantEntry { last_use: self.tick, ready_us: 0.0 });
+        self.stats.demotions += 1;
+        self.sink.emit_with(|| crate::events::TraceEvent::TierDemoted {
+            t_us: self.time_hint_us,
+            layer: v.0,
+            expert: v.1,
+        });
+    }
+
+    /// Drop the LRU quantized copy if the tier is at capacity (quant
+    /// evictions are silent: the fp master on the host is authoritative,
+    /// so nothing is lost and no transfer is charged).
+    fn make_quant_room(&mut self) {
+        while self.quant_entries.len() >= self.quant_capacity.max(1) {
+            let victim = self
+                .quant_entries
+                .iter()
+                .min_by(|(a, ea), (b, eb)| ea.last_use.cmp(&eb.last_use).then(a.cmp(b)))
+                .map(|(&id, _)| id);
+            match victim {
+                Some(v) => {
+                    self.quant_entries.remove(&v);
+                }
+                None => break,
+            }
+        }
     }
 
     fn emit_transfer(&self, id: ExpertId) {
@@ -532,12 +800,14 @@ impl ExpertCache {
         });
     }
 
-    /// Unpinned resident expert with the lowest retention score; ties are
-    /// broken by id so eviction is deterministic regardless of hash order.
-    fn choose_victim(&self) -> Option<ExpertId> {
+    /// Unpinned resident expert with the lowest retention score,
+    /// optionally restricted to one layer (the `--cache-partition layer`
+    /// quota path); ties are broken by id so eviction is deterministic
+    /// regardless of hash order.
+    fn choose_victim_in(&self, layer: Option<usize>) -> Option<ExpertId> {
         self.entries
             .iter()
-            .filter(|(_, e)| !e.pinned)
+            .filter(|(id, e)| !e.pinned && layer.map(|l| id.0 == l).unwrap_or(true))
             .min_by(|(a, ea), (b, eb)| {
                 let sa = self.policy.retention_score(**a, ea.last_use);
                 let sb = self.policy.retention_score(**b, eb.last_use);
@@ -807,6 +1077,194 @@ mod tests {
         m.fetch((2, 2)); // evicts (0, 3): smallest id among score ties
         assert!(!m.is_resident((0, 3)));
         assert!(m.is_resident((1, 1)));
+    }
+
+    #[test]
+    fn enable_quant_tier_splits_capacity_at_identical_bytes() {
+        // 8 fp slots -> 4 fp + (4 converted * 16/8) = 8 Q8 copies: the
+        // converted bytes hold exactly twice as many experts.
+        let mut m = ExpertCache::with_capacity(8);
+        assert_eq!(m.enable_quant_tier(8), (4, 8));
+        assert!(m.quant_tier_enabled());
+        // Q4 packs 4x: 12 slots -> 6 fp + 6 * 4 = 24 quant.
+        let mut m = ExpertCache::with_capacity(12);
+        assert_eq!(m.enable_quant_tier(4), (6, 24));
+        // A one-slot cache keeps its fp slot (no bytes left to convert).
+        let mut m = ExpertCache::with_capacity(1);
+        assert_eq!(m.enable_quant_tier(8), (1, 0));
+    }
+
+    #[test]
+    fn fp_eviction_demotes_into_quant_tier() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.enable_quant_tier(8); // 2 fp + 4 quant
+        m.fetch((0, 0));
+        m.fetch((0, 1));
+        m.fetch((0, 2)); // evicts (0,0) -> demoted, not lost
+        assert!(!m.is_resident((0, 0)));
+        assert!(m.is_quant_resident((0, 0)));
+        assert!(m.is_quant_ready((0, 0), 0.0), "requantize-in-place is instant");
+        assert_eq!(m.stats().demotions, 1);
+        assert_eq!(m.stats().evictions, 1);
+        // The demoted copy serves quantized hits.
+        assert!(m.lookup_quant((0, 0), 0.0, 0.01));
+        assert_eq!(m.stats().quant_hits, 1);
+        assert!(!m.lookup_quant((3, 3), 0.0, 0.01));
+        assert_eq!(m.stats().quant_misses, 1);
+    }
+
+    #[test]
+    fn promote_frees_quant_slot_and_charges_fp_transfer() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.enable_quant_tier(8);
+        m.fetch((0, 0));
+        m.fetch((0, 1));
+        m.fetch((0, 2)); // (0,0) demoted
+        let transfers = m.stats().transfers_in;
+        assert!(m.promote((0, 0)));
+        assert!(m.is_resident((0, 0)), "promotion restores fp residency");
+        assert!(!m.is_quant_resident((0, 0)));
+        assert_eq!(m.stats().promotions, 1);
+        assert_eq!(m.stats().transfers_in, transfers + 1, "fp demand transfer charged");
+        // No quant copy -> no promotion.
+        assert!(!m.promote((9, 9)));
+    }
+
+    #[test]
+    fn quant_admit_rides_the_lane_at_reduced_cost() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.enable_quant_tier(8); // 2 fp + 4 quant
+        let ready = m.admit_quant((1, 0), 100.0, 50.0).unwrap();
+        assert_eq!(ready, 150.0);
+        assert!(!m.is_quant_ready((1, 0), 120.0), "in flight until the lane delivers");
+        assert!(m.is_quant_ready((1, 0), 150.0));
+        assert_eq!(m.stats().quant_admits, 1);
+        // The lane is shared with fp prefetches: the next transfer queues.
+        let r2 = m.prefetch((1, 1), 100.0, 100.0).unwrap();
+        assert_eq!(r2, 250.0, "quant admit must occupy the serialized lane");
+        // Already resident in either tier -> no-op.
+        assert!(m.admit_quant((1, 0), 0.0, 50.0).is_none());
+        m.fetch((1, 2));
+        assert!(m.admit_quant((1, 2), 0.0, 50.0).is_none());
+    }
+
+    #[test]
+    fn promote_async_is_an_fp_prefetch_plus_tier_move() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.enable_quant_tier(8);
+        m.admit_quant((1, 0), 0.0, 50.0).unwrap();
+        let ready = m.promote_async((1, 0), 100.0, 200.0).unwrap();
+        assert_eq!(ready, 300.0);
+        assert!(m.is_resident((1, 0)), "fp slot occupied while in flight");
+        assert!(!m.is_quant_resident((1, 0)), "quant slot freed");
+        assert_eq!(m.stats().promotions, 1);
+        assert!(m.promote_async((9, 9), 0.0, 100.0).is_none());
+    }
+
+    #[test]
+    fn disabled_tier_keeps_counters_at_zero() {
+        // The bit-identity contract of --quant-tier off: no tier state,
+        // no tier counters, demand paths untouched.
+        let mut m = ExpertCache::with_capacity(2);
+        m.fetch((0, 0));
+        m.fetch((0, 1));
+        m.fetch((0, 2)); // eviction must NOT demote
+        assert!(m.admit_quant((1, 1), 0.0, 50.0).is_none());
+        assert!(!m.promote((0, 0)));
+        let s = m.stats();
+        assert_eq!(
+            (s.quant_hits, s.quant_misses, s.quant_admits, s.promotions, s.demotions),
+            (0, 0, 0, 0, 0)
+        );
+        assert_eq!(m.quant_resident_count(), 0);
+    }
+
+    #[test]
+    fn layer_partition_contains_a_hot_layer() {
+        let mut m = ExpertCache::with_capacity(4);
+        m.partition_by_layer(2); // quota: 2 slots per layer
+        m.fetch((0, 0));
+        m.fetch((1, 0));
+        m.fetch((1, 1));
+        // Layer 1 is at quota: its next insert evicts within layer 1,
+        // leaving layer 0's resident alone despite free-looking recency.
+        m.fetch((1, 2));
+        assert!(m.is_resident((0, 0)), "partition must protect other layers");
+        assert_eq!(
+            m.resident_experts().iter().filter(|id| id.0 == 1).count(),
+            2,
+            "layer 1 stays within its quota"
+        );
+        assert_eq!(m.stats().evictions, 1);
+        // Global capacity still binds: layer 0 fills its own quota.
+        m.fetch((0, 1));
+        assert!(m.resident_count() <= 4);
+    }
+
+    #[test]
+    fn tier_capacities_never_exceeded_property() {
+        // Satellite 4b: across random op mixes with the tier enabled,
+        // neither tier overflows its capacity, the tiers stay disjoint,
+        // and the layer quota holds when partitioning is on.
+        check("quant tier invariants", 96, |g: &mut Gen| {
+            let layers = g.usize_in(1..4);
+            let experts = g.usize_in(2..8);
+            let capacity = g.usize_in(2..10);
+            let bits = [4u32, 8][g.usize_in(0..2)];
+            let partition = g.usize_in(0..2) == 1;
+            let mut cache = ExpertCache::with_capacity(capacity);
+            let (fp_cap, quant_cap) = cache.enable_quant_tier(bits);
+            assert!(fp_cap >= 1);
+            assert_eq!(
+                fp_cap + (capacity - fp_cap),
+                capacity,
+                "conversion accounts for every original slot"
+            );
+            if partition {
+                cache.partition_by_layer(layers);
+            }
+            let mut now = 0.0;
+            for _ in 0..g.usize_in(1..120) {
+                let id = (g.usize_in(0..layers), g.usize_in(0..experts));
+                match g.usize_in(0..6) {
+                    0 => {
+                        cache.fetch(id);
+                    }
+                    1 => {
+                        cache.lookup(id, now);
+                    }
+                    2 => {
+                        let _ = cache.prefetch(id, now, g.f64_in(1.0, 200.0));
+                    }
+                    3 => {
+                        let _ = cache.admit_quant(id, now, g.f64_in(1.0, 100.0));
+                    }
+                    4 => {
+                        let _ = cache.promote(id);
+                    }
+                    _ => {
+                        cache.lookup_quant(id, now, 0.01);
+                    }
+                }
+                now += g.f64_in(0.0, 100.0);
+
+                assert!(cache.resident_count() <= fp_cap, "fp tier overflow");
+                assert!(cache.quant_resident_count() <= quant_cap, "quant tier overflow");
+                for id in cache.resident_experts() {
+                    assert!(!cache.is_quant_resident(id), "{id:?} resident in both tiers");
+                }
+                if partition {
+                    let quota = cache.layer_quota().unwrap();
+                    for l in 0..layers {
+                        let n = cache.resident_experts().iter().filter(|id| id.0 == l).count();
+                        assert!(n <= quota, "layer {l} over quota: {n} > {quota}");
+                    }
+                }
+            }
+            let s = cache.stats();
+            assert!(s.quant_hits + s.quant_misses >= s.quant_hits);
+            assert!(s.demotions <= s.evictions, "every demotion rides an fp eviction");
+        });
     }
 
     #[test]

@@ -23,7 +23,7 @@ use crate::latency::LatencyModel;
 use crate::placement::choose_experts;
 use crate::popularity::Profile;
 use crate::scheduler::policy::ExecPolicy;
-use crate::scheduler::{decide_expert, ExpertPlan};
+use crate::scheduler::{decide_expert, decide_expert_tiered, ExpertPlan};
 
 pub struct CachedFiddlerPolicy {
     pub placement: PlacementStrategy,
@@ -33,6 +33,19 @@ pub struct CachedFiddlerPolicy {
     pub pin_fraction: f64,
     /// Installed into the cache during `init` (before dynamic entries).
     eviction: Option<Box<dyn EvictionPolicy>>,
+    /// Low-bit resident tier (`--quant-tier on`): bit width of quantized
+    /// copies.  `None` (default) plans exactly the two-way Algorithm 1 —
+    /// the `--quant-tier off` bit-identity contract.
+    quant_bits: Option<u32>,
+    /// Quantization error budget, re-armed at every layer-0 planning
+    /// call (i.e. per token step — the engine-side approximation of the
+    /// per-request budget the serving scheduler enforces).  Each
+    /// accepted quantized hit spends its expert's max-abs error; once
+    /// exhausted, quantized hits are corrected to fp promotions.
+    error_budget: f64,
+    budget_left: f64,
+    /// `--cache-partition layer`: installed on the cache during `init`.
+    partition_layers: Option<usize>,
 }
 
 impl CachedFiddlerPolicy {
@@ -42,7 +55,31 @@ impl CachedFiddlerPolicy {
         pin_fraction: f64,
     ) -> CachedFiddlerPolicy {
         assert!((0.0..=1.0).contains(&pin_fraction), "pin_fraction out of [0, 1]");
-        CachedFiddlerPolicy { placement, pin_fraction, eviction: Some(eviction) }
+        CachedFiddlerPolicy {
+            placement,
+            pin_fraction,
+            eviction: Some(eviction),
+            quant_bits: None,
+            error_budget: 0.0,
+            budget_left: 0.0,
+            partition_layers: None,
+        }
+    }
+
+    /// Enable the low-bit resident tier: `init` converts half the cache's
+    /// fp capacity into quantized copies and planning becomes the
+    /// three-way Algorithm 1 under `error_budget`.
+    pub fn with_quant_tier(mut self, bits: u32, error_budget: f64) -> Self {
+        assert!(error_budget >= 0.0, "error budget must be non-negative");
+        self.quant_bits = Some(bits.clamp(2, 16));
+        self.error_budget = error_budget;
+        self
+    }
+
+    /// Partition the cache's fp capacity evenly across `n_layers`.
+    pub fn with_layer_partition(mut self, n_layers: usize) -> Self {
+        self.partition_layers = Some(n_layers);
+        self
     }
 }
 
@@ -54,6 +91,15 @@ impl ExecPolicy for CachedFiddlerPolicy {
     fn init(&mut self, memory: &mut ExpertCache, profile: &Profile, seed: u64) {
         if let Some(p) = self.eviction.take() {
             memory.set_policy(p);
+        }
+        // Tier split and partition BEFORE pinning, so the popular core is
+        // pinned against the (possibly halved) fp capacity.
+        if let Some(bits) = self.quant_bits {
+            memory.enable_quant_tier(bits);
+            self.budget_left = self.error_budget;
+        }
+        if let Some(n) = self.partition_layers {
+            memory.partition_by_layer(n);
         }
         let budget = ((memory.capacity() as f64 * self.pin_fraction).floor() as usize)
             .min(memory.capacity().saturating_sub(1));
@@ -71,6 +117,10 @@ impl ExecPolicy for CachedFiddlerPolicy {
         now_us: f64,
     ) -> Vec<Option<ExpertPlan>> {
         memory.observe_layer(layer, inp_size);
+        // Per-token budget: a fresh layer-0 planning call starts a step.
+        if layer == 0 {
+            self.budget_left = self.error_budget;
+        }
         inp_size
             .iter()
             .enumerate()
@@ -80,18 +130,51 @@ impl ExecPolicy for CachedFiddlerPolicy {
                 }
                 let id = (layer, j);
                 let resident = memory.lookup(id, now_us);
-                let plan = decide_expert(resident, s, lat);
+                let Some(bits) = self.quant_bits else {
+                    // Tier off: exactly the seed two-way Algorithm 1.
+                    let plan = decide_expert(resident, s, lat);
+                    match plan {
+                        // The demand transfer just put the weights on the
+                        // GPU: keep them (prefill admissions warm the
+                        // decode phase).
+                        Some(ExpertPlan::GpuTransfer) => {
+                            memory.admit(id);
+                        }
+                        // Decode-regime miss: serve on the CPU now, and
+                        // bring the expert in over the idle PCIe lane for
+                        // future steps.
+                        Some(ExpertPlan::Cpu) => {
+                            let _ = memory.prefetch(id, now_us, lat.transfer_lat());
+                        }
+                        _ => {}
+                    }
+                    return plan;
+                };
+                // Three-way Algorithm 1 over the tier hierarchy.
+                let err = crate::quant::synthetic_expert_error(layer, j, bits);
+                let quant = memory.lookup_quant(id, now_us, err);
+                let mut plan = decide_expert_tiered(resident, quant, s, lat);
                 match plan {
-                    // The demand transfer just put the weights on the GPU:
-                    // keep them (prefill admissions warm the decode phase).
+                    Some(ExpertPlan::GpuQuant) => {
+                        if self.budget_left >= err {
+                            self.budget_left -= err;
+                        } else {
+                            // Budget exhausted: correct — promote the fp
+                            // master now and run at full precision.
+                            memory.note_quant_corrected(id, now_us);
+                            memory.promote(id);
+                            plan = Some(ExpertPlan::GpuTransfer);
+                        }
+                    }
                     Some(ExpertPlan::GpuTransfer) => {
                         memory.admit(id);
                     }
-                    // Decode-regime miss: serve on the CPU now, and bring
-                    // the expert in over the idle PCIe lane for future
-                    // steps.
                     Some(ExpertPlan::Cpu) => {
-                        let _ = memory.prefetch(id, now_us, lat.transfer_lat());
+                        // Decode-regime miss: a quantized admit rides the
+                        // lane at bits/16 of the fp cost, so residency
+                        // tracks the workload sooner; the pipeline may
+                        // later promote it to fp.
+                        let _ = memory.admit_quant(id, now_us, lat.quant_transfer_lat(bits));
                     }
                     _ => {}
                 }
@@ -170,6 +253,74 @@ mod tests {
         let plans = pol.plan_layer(0, &[0, 900, 0, 0], &mut mem, &lat, 0.0);
         assert_eq!(plans[1], Some(ExpertPlan::GpuTransfer));
         assert!(mem.is_ready((0, 1), 0.0), "demand admission is synchronous");
+    }
+
+    #[test]
+    fn quant_tier_serves_demoted_experts_from_the_low_bit_copy() {
+        let mut pol = CachedFiddlerPolicy::new(Box::new(Lru), PlacementStrategy::Popularity, 0.0)
+            .with_quant_tier(8, 10.0); // ample budget: hits are accepted
+        let mut mem = ExpertCache::with_capacity(4); // init -> 2 fp + 4 quant
+        let lat = lat();
+        pol.init(&mut mem, &profile(), 0);
+        assert_eq!(mem.capacity(), 2);
+        assert_eq!(mem.quant_capacity(), 4);
+        // Fill the fp tier, then demote expert 0 by pressure.
+        let _ = pol.plan_layer(0, &[0, 900, 0, 0], &mut mem, &lat, 0.0);
+        let _ = pol.plan_layer(0, &[0, 0, 900, 0], &mut mem, &lat, 0.0);
+        let _ = pol.plan_layer(0, &[900, 0, 0, 0], &mut mem, &lat, 0.0);
+        let _ = pol.plan_layer(0, &[0, 0, 0, 900], &mut mem, &lat, 0.0); // evicts+demotes
+        let demoted: Vec<bool> =
+            (0..4).map(|e| mem.is_quant_resident((0, e))).collect();
+        assert!(demoted.iter().any(|&d| d), "pressure must demote, not discard");
+        let victim = demoted.iter().position(|&d| d).unwrap();
+        // The demoted expert now serves a single token from the quantized
+        // copy (env1: quant beats both CPU and transfer at s=1).
+        let mut inp = vec![0usize; 4];
+        inp[victim] = 1;
+        let plans = pol.plan_layer(0, &inp, &mut mem, &lat, 0.0);
+        assert_eq!(plans[victim], Some(ExpertPlan::GpuQuant));
+        assert!(mem.stats().quant_hits >= 1);
+    }
+
+    #[test]
+    fn zero_budget_corrects_every_quantized_hit() {
+        // Satellite 4c at the planning layer: error budget 0 never yields
+        // a GpuQuant plan — every quantized hit promotes to fp.
+        let mut pol = CachedFiddlerPolicy::new(Box::new(Lru), PlacementStrategy::Popularity, 0.0)
+            .with_quant_tier(8, 0.0);
+        let mut mem = ExpertCache::with_capacity(4);
+        let lat = lat();
+        pol.init(&mut mem, &profile(), 0);
+        let _ = pol.plan_layer(0, &[0, 900, 0, 0], &mut mem, &lat, 0.0);
+        let _ = pol.plan_layer(0, &[0, 0, 900, 0], &mut mem, &lat, 0.0);
+        let _ = pol.plan_layer(0, &[900, 0, 0, 0], &mut mem, &lat, 0.0);
+        let demoted =
+            (0..4).find(|&e| mem.is_quant_resident((0, e))).expect("a demotion");
+        let mut inp = vec![0usize; 4];
+        inp[demoted] = 1;
+        let plans = pol.plan_layer(0, &inp, &mut mem, &lat, 0.0);
+        assert_eq!(
+            plans[demoted],
+            Some(ExpertPlan::GpuTransfer),
+            "zero budget must correct to an fp promotion"
+        );
+        assert_eq!(mem.stats().quant_corrected, 1);
+        assert_eq!(mem.stats().promotions, 1);
+        assert!(mem.is_resident((0, demoted)), "correction leaves the fp master resident");
+    }
+
+    #[test]
+    fn tier_off_policy_plans_are_unchanged() {
+        // The default-constructed policy must not touch any tier state.
+        let mut pol = CachedFiddlerPolicy::new(Box::new(Lru), PlacementStrategy::Popularity, 0.5);
+        let mut mem = ExpertCache::with_capacity(4);
+        let lat = lat();
+        pol.init(&mut mem, &profile(), 0);
+        assert!(!mem.quant_tier_enabled());
+        assert_eq!(mem.capacity(), 4, "capacity untouched with the tier off");
+        let _ = pol.plan_layer(0, &[1, 1, 900, 0], &mut mem, &lat, 0.0);
+        let s = mem.stats();
+        assert_eq!((s.quant_hits, s.quant_misses, s.demotions, s.promotions), (0, 0, 0, 0));
     }
 
     #[test]

@@ -13,7 +13,7 @@
 
 use super::ExpertCache;
 use crate::latency::LatencyModel;
-use crate::scheduler::{decide_expert, ExpertPlan};
+use crate::scheduler::{decide_expert, decide_expert_tiered, ExpertPlan};
 use crate::util::stats::mean;
 use crate::workload::DriftingExpertTrace;
 
@@ -82,6 +82,158 @@ pub fn run_cache_sim(
     }
 }
 
+/// Outcome of one tiered simulated run: the three-way plan mix on top of
+/// the base cache report.
+#[derive(Clone, Debug)]
+pub struct TieredCacheSimReport {
+    pub base: CacheSimReport,
+    /// Experts served from a ready fp resident.
+    pub plan_resident: u64,
+    /// Experts served from an accepted quantized resident copy.
+    pub plan_quant: u64,
+    /// Experts served via an fp demand transfer (including corrected
+    /// quantized hits).
+    pub plan_transfer: u64,
+    /// Experts served on the CPU.
+    pub plan_cpu: u64,
+    /// Quantized hits the error budget corrected to fp.
+    pub corrected: u64,
+}
+
+/// Drive a tier-enabled `cache` over `steps` decode steps of `trace`
+/// with the three-way Algorithm 1: fp resident -> run now, quantized
+/// resident -> argmin(quant-exec, fp transfer, CPU) under `error_budget`
+/// (re-armed per step), else the plain two-way decision.  Panics if
+/// [`ExpertCache::enable_quant_tier`] has not been called — the caller
+/// owns tier sizing so fp-only and tiered runs compare at identical
+/// bytes.
+pub fn run_cache_sim_tiered(
+    cache: &mut ExpertCache,
+    trace: &mut DriftingExpertTrace,
+    steps: usize,
+    lat: &LatencyModel,
+    error_budget: f64,
+) -> TieredCacheSimReport {
+    let bits = cache.quant_bits().expect("run_cache_sim_tiered needs enable_quant_tier");
+    let mut now = 0.0f64;
+    let mut layer_us = Vec::with_capacity(steps * trace.n_layers);
+    let mut step_us = Vec::with_capacity(steps);
+    let (mut n_res, mut n_quant, mut n_xfer, mut n_cpu, mut n_corr) = (0u64, 0, 0, 0, 0);
+    for _ in 0..steps {
+        let routing = trace.step();
+        let t_step = now;
+        let mut budget = error_budget;
+        for (layer, inp) in routing.iter().enumerate() {
+            cache.observe_layer(layer, inp);
+            let mut gpu = 0.0f64;
+            let mut cpu = 0.0f64;
+            for (j, &s) in inp.iter().enumerate() {
+                if s == 0 {
+                    continue;
+                }
+                let id = (layer, j);
+                let fp = cache.lookup(id, now);
+                let err = crate::quant::synthetic_expert_error(layer, j, bits);
+                let quant = cache.lookup_quant(id, now, err);
+                match decide_expert_tiered(fp, quant, s, lat) {
+                    Some(ExpertPlan::GpuResident) => {
+                        n_res += 1;
+                        gpu += lat.gpu_lat(s);
+                    }
+                    Some(ExpertPlan::GpuQuant) => {
+                        if budget >= err {
+                            budget -= err;
+                            n_quant += 1;
+                            gpu += lat.quant_gpu_lat(s);
+                        } else {
+                            // Correct: promote the fp master and run at
+                            // full precision (overlapped like a demand
+                            // transfer).
+                            cache.note_quant_corrected(id, now);
+                            cache.promote(id);
+                            n_corr += 1;
+                            n_xfer += 1;
+                            gpu += lat.transfer_lat().max(lat.gpu_lat(s));
+                        }
+                    }
+                    Some(ExpertPlan::GpuTransfer) => {
+                        cache.admit(id);
+                        n_xfer += 1;
+                        gpu += lat.transfer_lat().max(lat.gpu_lat(s));
+                    }
+                    Some(ExpertPlan::Cpu) => {
+                        let _ = cache.admit_quant(id, now, lat.quant_transfer_lat(bits));
+                        n_cpu += 1;
+                        cpu += lat.cpu_lat(s);
+                    }
+                    None => {}
+                }
+            }
+            let t = gpu.max(cpu);
+            layer_us.push(t);
+            now += t;
+        }
+        step_us.push(now - t_step);
+    }
+    TieredCacheSimReport {
+        base: CacheSimReport {
+            policy: cache.policy_name(),
+            hit_rate: cache.stats().hit_rate(),
+            evictions: cache.stats().evictions,
+            mean_layer_us: mean(&layer_us),
+            mean_step_us: mean(&step_us),
+            stats: cache.stats().clone(),
+        },
+        plan_resident: n_res,
+        plan_quant: n_quant,
+        plan_transfer: n_xfer,
+        plan_cpu: n_cpu,
+        corrected: n_corr,
+    }
+}
+
+/// Drive a popularity-pinned cache over a drifting trace — the
+/// `cache_pin_fraction` ablation harness.  `pin_fraction` of the
+/// capacity is pinned by the popularity observed over a same-parameter
+/// warmup trace (at most capacity-1 pins, mirroring
+/// [`super::CachedFiddlerPolicy`]); the rest stays dynamic under LRU.
+pub fn run_pinned_cache_sim(
+    capacity: usize,
+    pin_fraction: f64,
+    layers: usize,
+    experts: usize,
+    top_k: usize,
+    phase_len: usize,
+    seed: u64,
+    steps: usize,
+    lat: &LatencyModel,
+) -> CacheSimReport {
+    // Popularity from a warmup pass over the same trace parameters.
+    let mut warmup = DriftingExpertTrace::new(layers, experts, top_k, phase_len, seed);
+    let mut counts = vec![vec![0u64; experts]; layers];
+    for _ in 0..steps.min(100) {
+        for (l, inp) in warmup.step().iter().enumerate() {
+            for (e, &s) in inp.iter().enumerate() {
+                counts[l][e] += s as u64;
+            }
+        }
+    }
+    let mut ranked: Vec<(u64, (usize, usize))> = counts
+        .iter()
+        .enumerate()
+        .flat_map(|(l, row)| row.iter().enumerate().map(move |(e, &c)| (c, (l, e))))
+        .collect();
+    ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    let n_pin = ((capacity as f64 * pin_fraction).floor() as usize)
+        .min(capacity.saturating_sub(1));
+    let mut cache = ExpertCache::with_capacity(capacity);
+    for &(_, id) in ranked.iter().take(n_pin) {
+        cache.pin(id);
+    }
+    let mut trace = DriftingExpertTrace::new(layers, experts, top_k, phase_len, seed);
+    run_cache_sim(&mut cache, &mut trace, steps, lat)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -136,5 +288,55 @@ mod tests {
         let b = report("scored", 3);
         assert_eq!(a.stats.hits, b.stats.hits);
         assert_eq!(a.stats.evictions, b.stats.evictions);
+    }
+
+    #[test]
+    fn tiered_sim_serves_quantized_hits_and_counts_the_mix() {
+        let (layers, experts, top_k) = (4usize, 8usize, 2usize);
+        let mut cache = ExpertCache::with_capacity(8);
+        cache.enable_quant_tier(8);
+        let mut trace = DriftingExpertTrace::new(layers, experts, top_k, 100, 7);
+        let lat = LatencyModel::from_hardware(&HardwareConfig::env1());
+        let r = run_cache_sim_tiered(&mut cache, &mut trace, 300, &lat, 0.05);
+        assert!(r.plan_quant > 0, "no quantized hits accepted: {r:?}");
+        assert!(r.base.mean_step_us > 0.0);
+        let planned = r.plan_resident + r.plan_quant + r.plan_transfer + r.plan_cpu;
+        // Every active expert gets exactly one plan.
+        assert_eq!(planned, 300 * layers as u64 * top_k as u64);
+        assert_eq!(r.base.stats.quant_hits, r.plan_quant + r.corrected);
+        assert_eq!(r.base.stats.quant_corrected, r.corrected);
+    }
+
+    #[test]
+    fn tiered_sim_beats_fp_only_at_identical_hbm_bytes() {
+        // The acceptance-criteria shape: at a cache size where fp-only
+        // thrashes, splitting the same bytes into fp + Q4 copies buys
+        // more coverage and a cheaper step.
+        let (layers, experts, top_k, capacity) = (4usize, 8usize, 2usize, 8usize);
+        let lat = LatencyModel::from_hardware(&HardwareConfig::env1());
+        let mut fp = ExpertCache::with_capacity(capacity);
+        let mut t1 = DriftingExpertTrace::new(layers, experts, top_k, 100, 11);
+        let base = run_cache_sim(&mut fp, &mut t1, 300, &lat);
+        let mut tiered = ExpertCache::with_capacity(capacity);
+        tiered.enable_quant_tier(4);
+        let mut t2 = DriftingExpertTrace::new(layers, experts, top_k, 100, 11);
+        let tier = run_cache_sim_tiered(&mut tiered, &mut t2, 300, &lat, 10.0);
+        assert!(
+            tier.base.mean_step_us < base.mean_step_us,
+            "tiered {:.0}us !< fp-only {:.0}us",
+            tier.base.mean_step_us,
+            base.mean_step_us
+        );
+    }
+
+    #[test]
+    fn pinned_sim_is_deterministic_and_sane_across_fractions() {
+        let lat = LatencyModel::from_hardware(&HardwareConfig::env1());
+        for &f in &[0.0, 0.5, 1.0] {
+            let a = run_pinned_cache_sim(10, f, 4, 8, 2, 100, 5, 200, &lat);
+            let b = run_pinned_cache_sim(10, f, 4, 8, 2, 100, 5, 200, &lat);
+            assert!((0.0..=1.0).contains(&a.hit_rate), "fraction {f}");
+            assert_eq!(a.stats.hits, b.stats.hits, "fraction {f} not deterministic");
+        }
     }
 }

@@ -65,12 +65,18 @@ impl LayerCache {
 #[derive(Clone, Debug)]
 pub struct SequenceCache {
     pub layers: Vec<LayerCache>,
+    /// Remaining per-request quantization error budget (`--error-budget`);
+    /// `None` until the tier serves this sequence its first quantized hit.
+    /// Lives with the sequence so preemption, beam forks, and batching
+    /// carry it along.
+    pub quant_budget: Option<f64>,
 }
 
 impl SequenceCache {
     pub fn new(cfg: &ModelConfig) -> SequenceCache {
         SequenceCache {
             layers: (0..cfg.n_layers).map(|_| LayerCache::new(cfg.kv_dim())).collect(),
+            quant_budget: None,
         }
     }
 

@@ -33,6 +33,14 @@ pub struct LatencyModel {
 /// Bytes of one paper-scale token's activation vector (hidden 4096, bf16).
 const TOKEN_ACT_BYTES: usize = 4096 * 2;
 
+/// Fractional GPU-time overhead of executing a LOW-BIT resident expert:
+/// the kernel upcasts int8/int4 tiles to fp on the fly before the GEMM.
+/// Calibrated against the host-side dequant sweep (`quant::expert_ffn_host_q8`
+/// measures the dequant pass at 10–15% of the blocked GEMM at decode
+/// widths; GPU tensor-core upcast paths land in the same band).  Constant
+/// in `bits` — the upcast touches every weight once either way.
+pub const DEQUANT_OVERHEAD_FRAC: f64 = 0.12;
+
 /// Effective speedup of the CPU expert path with `threads` workers.
 ///
 /// The expert GEMV is DRAM-bandwidth bound, so scaling is sublinear:
@@ -119,6 +127,21 @@ impl LatencyModel {
         self.transfer_us
     }
 
+    /// Expected GPU latency for an expert executed FROM ITS LOW-BIT
+    /// RESIDENT COPY: the fp compute plus the on-the-fly dequant overhead
+    /// ([`DEQUANT_OVERHEAD_FRAC`]).  The third priced option of the
+    /// tiered Algorithm 1 ([`crate::scheduler::decide_expert_tiered`]).
+    pub fn quant_gpu_lat(&self, s: usize) -> f64 {
+        self.gpu_lat(s) * (1.0 + DEQUANT_OVERHEAD_FRAC)
+    }
+
+    /// PCIe latency to land a `bits`-wide copy of one expert on the GPU —
+    /// the cheap quantized admit.  The fp baseline is 16-bit, so the
+    /// volume (and the serialized-lane occupancy) scales by `bits / 16`.
+    pub fn quant_transfer_lat(&self, bits: u32) -> f64 {
+        self.transfer_us * bits.max(1) as f64 / 16.0
+    }
+
     /// Input size at which copying weights to the GPU becomes cheaper than
     /// computing on the CPU: the crossover in Figure 1 / §3.2.
     pub fn crossover_tokens(&self) -> usize {
@@ -168,6 +191,36 @@ mod tests {
             let x = m.crossover_tokens();
             assert!(x > 2, "{}: crossover {x} too small — decode would use GPU", hw.name);
             assert!(x < 256, "{}: crossover {x} too large — prefill would use CPU", hw.name);
+        }
+    }
+
+    #[test]
+    fn quant_costs_sit_between_resident_and_demand_paths() {
+        for hw in [HardwareConfig::env1(), HardwareConfig::env2()] {
+            let m = LatencyModel::from_hardware(&hw);
+            for s in [1usize, 4, 32] {
+                // Dequant overhead is real but small: a quantized hit
+                // always undercuts the synchronous fp transfer, and beats
+                // the CPU once the affine per-token term kicks in.
+                assert!(m.quant_gpu_lat(s) > m.gpu_lat(s));
+                assert!(m.quant_gpu_lat(s) < m.transfer_lat() + m.gpu_lat(s));
+                if s >= 4 {
+                    assert!(m.quant_gpu_lat(s) < m.cpu_lat(s),
+                        "{}: quant hit not profitable at s={s}", hw.name);
+                }
+            }
+            // The three-way argmin is NOT degenerate: env2's beefy CPU
+            // wins single-token decode even against a resident low-bit
+            // copy (dequant overhead tips it), while env1's does not.
+            if hw.name == "env2" {
+                assert!(m.cpu_lat(1) < m.quant_gpu_lat(1));
+            } else {
+                assert!(m.quant_gpu_lat(1) < m.cpu_lat(1));
+            }
+            // Low-bit admits ride the same lane at proportional volume.
+            assert!((m.quant_transfer_lat(8) - m.transfer_us / 2.0).abs() < 1e-9);
+            assert!((m.quant_transfer_lat(4) - m.transfer_us / 4.0).abs() < 1e-9);
+            assert!(m.quant_transfer_lat(16) <= m.transfer_us + 1e-9);
         }
     }
 

@@ -81,6 +81,16 @@ fn print_help() {
                    static (llama.cpp*) | fiddler-prefetch | fiddler-cached\n\
          CACHE:    fiddler-cached takes --cache-eviction lru|scored|transition\n\
                    and --cache-pin-fraction F (default 0.5)\n\
+                   --cache-partition none|layer   per-layer capacity quotas\n\
+                                       (one hot layer can't evict the rest)\n\
+         TIERS:    --quant-tier on|off three-tier expert hierarchy: low-bit\n\
+                                       GPU copies beyond fp capacity (off =\n\
+                                       default, bit-identical to fp-only)\n\
+                   --quant-bits B      width of the low-bit copies, 2..=16\n\
+                                       (default 8; N fp slots hold 16/B copies)\n\
+                   --error-budget E    per-request quantization error budget;\n\
+                                       a quantized hit over budget is corrected\n\
+                                       by an fp transfer (0 = always correct)\n\
          SERVING:  --prefill-chunk N   chunked prefill (0 = monolithic) so long\n\
                                        prompts don't stall running sequences\n\
                    --admission fcfs|sjf|slo   queue policy (slo = earliest TTFT\n\
@@ -280,8 +290,14 @@ fn cmd_serve_fleet(
     let profile = Profile::load(&analysis).unwrap_or_else(|_| Profile::new(1, 8));
     let transitions = TransitionProfile::load(&analysis).ok();
     let lat = LatencyModel::from_hardware(&hw);
-    let plan =
-        plan_shards(&profile, &lat, serving.shards, serving.shard_plan, serving.ngl.max(1));
+    let plan = plan_shards(
+        &profile,
+        &lat,
+        serving.shards,
+        serving.shard_plan,
+        serving.ngl.max(1),
+        serving.quant_tier.then_some(serving.quant_bits),
+    );
     println!(
         "fleet: {} shards | plan {} | bottlenecks [{}] | priced step {:.2} ms",
         plan.n_shards,

@@ -269,6 +269,7 @@ mod tests {
             resident: 6,
             transferred: 1,
             cpu: 1,
+            quant: 0,
             prefetch_overlapped: 2,
         });
         let j = m.to_json();

@@ -33,6 +33,9 @@ pub struct ExpertEvents {
     pub resident: u64,
     pub transferred: u64,
     pub cpu: u64,
+    /// Executions served from an accepted low-bit resident copy
+    /// (`--quant-tier on`; 0 with the tier off).
+    pub quant: u64,
     /// Resident executions that waited out a still-in-flight pipeline
     /// prefetch instead of taking a demand path (subset of `resident`).
     pub prefetch_overlapped: u64,
@@ -40,15 +43,17 @@ pub struct ExpertEvents {
 
 impl ExpertEvents {
     pub fn total(&self) -> u64 {
-        self.resident + self.transferred + self.cpu
+        self.resident + self.transferred + self.cpu + self.quant
     }
 
+    /// Fraction of executions served from HBM without a demand transfer —
+    /// either fp tier or an accepted quantized copy.
     pub fn hit_rate(&self) -> f64 {
         let t = self.total();
         if t == 0 {
             0.0
         } else {
-            self.resident as f64 / t as f64
+            (self.resident + self.quant) as f64 / t as f64
         }
     }
 
@@ -60,6 +65,7 @@ impl ExpertEvents {
             resident: self.resident.saturating_sub(base.resident),
             transferred: self.transferred.saturating_sub(base.transferred),
             cpu: self.cpu.saturating_sub(base.cpu),
+            quant: self.quant.saturating_sub(base.quant),
             prefetch_overlapped: self
                 .prefetch_overlapped
                 .saturating_sub(base.prefetch_overlapped),
@@ -71,6 +77,7 @@ impl ExpertEvents {
         o.set("resident", crate::util::json::Json::Num(self.resident as f64));
         o.set("transferred", crate::util::json::Json::Num(self.transferred as f64));
         o.set("cpu", crate::util::json::Json::Num(self.cpu as f64));
+        o.set("quant", crate::util::json::Json::Num(self.quant as f64));
         o.set(
             "prefetch_overlapped",
             crate::util::json::Json::Num(self.prefetch_overlapped as f64),

@@ -425,6 +425,12 @@ pub(crate) fn moe_stage(
         cx.timeline.schedule(plan.device(), t0 + waits[j], cost);
         match plan {
             ExpertPlan::GpuResident => cx.events.resident += 1,
+            // Quantized-resident execution: no PCIe traffic (the copy is
+            // already in HBM); the simulated cost carries the dequant
+            // overhead via `expert_cost_us`.  Wall-clock still runs the fp
+            // executable — the virtual timeline prices the low-bit copy,
+            // the numerics stay full-precision (documented limitation).
+            ExpertPlan::GpuQuant => cx.events.quant += 1,
             ExpertPlan::GpuTransfer => {
                 cx.events.transferred += 1;
                 cx.link.weight_transfer();
@@ -487,6 +493,23 @@ fn prefetch_window(
         }
         if !crate::scheduler::inflight_wins(wait_at(cx.memory.lane_free_at(), d), s_pred, &cx.lat)
         {
+            // Full fp transfers cannot pay for themselves at this
+            // distance — but with the tier on, a low-bit copy at bits/16
+            // of the lane time still buys cheap coverage for the
+            // three-way planner.
+            if let Some(bits) = cx.memory.quant_bits() {
+                let qx = cx.lat.quant_transfer_lat(bits);
+                let targets = cx.pipeline.predict(layer, inp_size, d);
+                for j in targets.into_iter().take(cx.pipeline.depth) {
+                    let id = (layer + d, j);
+                    if cx.memory.is_resident(id) || cx.memory.is_quant_resident(id) {
+                        continue;
+                    }
+                    if cx.memory.admit_quant(id, now_us, qx).is_none() {
+                        break; // lane backlogged or tier full
+                    }
+                }
+            }
             continue; // not enough lead at this distance; try farther
         }
         let targets = cx.pipeline.predict(layer, inp_size, d);
@@ -497,6 +520,15 @@ fn prefetch_window(
             }
             if cx.memory.is_resident((layer + d, j)) {
                 continue; // pinned, cached, or already in flight
+            }
+            if cx.memory.is_quant_resident((layer + d, j)) {
+                // Predicted and already in HBM at low bits: spend the
+                // lead time upgrading the copy to the fp master instead
+                // of fetching something colder.
+                if cx.memory.promote_async((layer + d, j), now_us, transfer).is_some() {
+                    issued += 1;
+                }
+                continue;
             }
             if !crate::scheduler::inflight_wins(
                 wait_at(cx.memory.lane_free_at(), d),

@@ -66,14 +66,72 @@ impl QuantTensor {
         0.5 * self.scales[c]
     }
 
+    /// Error statistics of the whole tensor in one pass over the scales.
+    /// Hot paths (the error-budget check runs per expert per layer) must
+    /// NOT call [`QuantTensor::max_abs_err`] per column per decision —
+    /// [`QuantWeightStore`] precomputes these at load time instead.
+    pub fn error_stats(&self) -> ExpertErrorStats {
+        let (mut max, mut sum) = (0.0f32, 0.0f64);
+        for &s in &self.scales {
+            let e = 0.5 * s;
+            max = max.max(e);
+            sum += e as f64;
+        }
+        let mean = if self.scales.is_empty() { 0.0 } else { (sum / self.scales.len() as f64) as f32 };
+        ExpertErrorStats { max_abs_err: max, mean_abs_err: mean }
+    }
+
     pub fn bytes(&self) -> usize {
         self.data.len() + 4 * self.scales.len()
     }
 }
 
+/// Per-expert dequantization error summary, aggregated over the expert's
+/// three FFN matrices.  Computed ONCE at [`QuantWeightStore::load`] so the
+/// scheduler's error-budget check is a map lookup, not a per-call sweep
+/// over every column's `max_abs_err`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ExpertErrorStats {
+    /// Worst-case absolute dequant error of any weight (half the largest
+    /// quantization step).
+    pub max_abs_err: f32,
+    /// Mean half-step error across columns — the budget-accounting term
+    /// (worst case compounds too pessimistically across layers).
+    pub mean_abs_err: f32,
+}
+
+/// Deterministic synthetic per-expert error estimate for hosts without
+/// quantized artifacts (the virtual-time sim and the cache-policy paths):
+/// the half-step of a symmetric `bits`-wide grid over unit-scale weights,
+/// jittered ±25% by an FNV-1a hash of the expert id so experts rank
+/// differently under an error budget.  Pure function of its arguments —
+/// record→replay and cross-thread bit-identity depend on that.
+pub fn synthetic_expert_error(layer: usize, expert: usize, bits: u32) -> f64 {
+    let levels = (1u64 << (bits.clamp(2, 15) - 1)) - 1;
+    let base = 0.5 / levels as f64;
+    let mut h: u64 = 0xCBF2_9CE4_8422_2325;
+    for v in [layer as u64, expert as u64] {
+        h = (h ^ v).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    let jitter = 0.75 + 0.5 * (h % 1024) as f64 / 1023.0;
+    base * jitter
+}
+
 /// All quantized expert tensors of one model.
 pub struct QuantWeightStore {
     tensors: BTreeMap<String, QuantTensor>,
+    /// Per-expert error stats, precomputed at load (keyed `(layer, expert)`).
+    expert_err: BTreeMap<(usize, usize), ExpertErrorStats>,
+}
+
+/// Parse `layers.{l}.experts.{e}.{name}` into `(l, e)`.
+fn expert_key(name: &str) -> Option<(usize, usize)> {
+    let mut parts = name.split('.');
+    (parts.next()? == "layers").then_some(())?;
+    let l = parts.next()?.parse().ok()?;
+    (parts.next()? == "experts").then_some(())?;
+    let e = parts.next()?.parse().ok()?;
+    Some((l, e))
 }
 
 impl QuantWeightStore {
@@ -106,7 +164,34 @@ impl QuantWeightStore {
             );
         }
         anyhow::ensure!(!tensors.is_empty(), "no quant_tensors in manifest");
-        Ok(QuantWeightStore { tensors })
+        // Fold per-tensor stats into per-expert stats ONCE, here: the
+        // error-budget check consults these on every quantized hit, and a
+        // per-call scan over every column's `max_abs_err` was measurable
+        // on the plan hot path.
+        let mut expert_err: BTreeMap<(usize, usize), ExpertErrorStats> = BTreeMap::new();
+        let mut cols: BTreeMap<(usize, usize), (f64, usize)> = BTreeMap::new();
+        for (name, t) in &tensors {
+            let Some(key) = expert_key(name) else { continue };
+            let s = t.error_stats();
+            let agg = expert_err.entry(key).or_default();
+            agg.max_abs_err = agg.max_abs_err.max(s.max_abs_err);
+            let c = cols.entry(key).or_insert((0.0, 0));
+            c.0 += s.mean_abs_err as f64 * t.scales.len() as f64;
+            c.1 += t.scales.len();
+        }
+        for (key, (sum, n)) in cols {
+            if n > 0 {
+                expert_err.get_mut(&key).expect("stats entry").mean_abs_err =
+                    (sum / n as f64) as f32;
+            }
+        }
+        Ok(QuantWeightStore { tensors, expert_err })
+    }
+
+    /// Precomputed error stats for one expert — the error-budget check's
+    /// data source.  `None` when the store has no tensors for that expert.
+    pub fn expert_error(&self, layer: usize, expert: usize) -> Option<ExpertErrorStats> {
+        self.expert_err.get(&(layer, expert)).copied()
     }
 
     pub fn get(&self, name: &str) -> Result<&QuantTensor> {
@@ -224,6 +309,57 @@ mod tests {
         let rel = q8_out.max_abs_diff(&f32_out)
             / f32_out.data.iter().fold(0.0f32, |a, v| a.max(v.abs()));
         assert!(rel < 0.05, "relative quant error too large: {rel}");
+    }
+
+    #[test]
+    fn error_stats_match_per_column_scan() {
+        let mut rng = Rng::new(3);
+        let t = rand_t(&mut rng, vec![16, 8], 0.4);
+        let q = QuantTensor::quantize(&t);
+        let s = q.error_stats();
+        let max_scan = (0..8).map(|c| q.max_abs_err(c)).fold(0.0f32, f32::max);
+        let mean_scan = (0..8).map(|c| q.max_abs_err(c)).sum::<f32>() / 8.0;
+        assert_eq!(s.max_abs_err, max_scan);
+        assert!((s.mean_abs_err - mean_scan).abs() < 1e-6);
+        assert!(s.mean_abs_err <= s.max_abs_err);
+    }
+
+    #[test]
+    fn store_precomputes_expert_error() {
+        let dir = artifacts_root().join("mixtral-tiny");
+        let qs = QuantWeightStore::load(&dir).expect("make artifacts first");
+        let stats = qs.expert_error(0, 0).expect("expert (0,0) has stats");
+        // Must equal the on-the-fly aggregation over the three matrices.
+        let mut max = 0.0f32;
+        for name in ["w1", "w3", "w2"] {
+            max = max.max(qs.expert(0, 0, name).unwrap().error_stats().max_abs_err);
+        }
+        assert_eq!(stats.max_abs_err, max);
+        assert!(stats.mean_abs_err > 0.0 && stats.mean_abs_err <= stats.max_abs_err);
+        assert!(qs.expert_error(999, 0).is_none());
+    }
+
+    #[test]
+    fn expert_key_parses_manifest_names() {
+        assert_eq!(expert_key("layers.2.experts.7.w1"), Some((2, 7)));
+        assert_eq!(expert_key("layers.0.experts.0.w2"), Some((0, 0)));
+        assert_eq!(expert_key("embed.weight"), None);
+        assert_eq!(expert_key("layers.x.experts.0.w1"), None);
+    }
+
+    #[test]
+    fn synthetic_error_is_deterministic_and_scales_with_bits() {
+        assert_eq!(synthetic_expert_error(1, 2, 8), synthetic_expert_error(1, 2, 8));
+        // Coarser grids err more: Q4 step is ~18x the Q8 step.
+        assert!(synthetic_expert_error(0, 0, 4) > 2.0 * synthetic_expert_error(0, 0, 8));
+        // Jitter stays within ±25% of the half-step base.
+        for e in 0..16 {
+            let v = synthetic_expert_error(0, e, 8);
+            let base = 0.5 / 127.0;
+            assert!(v >= 0.75 * base && v <= 1.25 * base, "{v}");
+        }
+        // Distinct experts rank differently (the budget orders them).
+        assert_ne!(synthetic_expert_error(0, 1, 8), synthetic_expert_error(0, 2, 8));
     }
 
     #[test]

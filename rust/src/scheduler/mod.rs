@@ -24,6 +24,10 @@ use crate::latency::LatencyModel;
 pub enum ExpertPlan {
     /// Weights resident on the GPU: execute there, no transfer (Fig. 3a).
     GpuResident,
+    /// A LOW-BIT copy is resident in the quantized tier: execute it on the
+    /// GPU with the on-the-fly dequant overhead — the third priced option
+    /// of the tiered Algorithm 1 (no PCIe traffic, bounded error).
+    GpuQuant,
     /// Copy weights CPU->GPU, then execute on the GPU (Fig. 3b).
     GpuTransfer,
     /// Copy activations GPU->CPU, execute on the CPU, copy back (Fig. 3c).
@@ -33,7 +37,9 @@ pub enum ExpertPlan {
 impl ExpertPlan {
     pub fn device(&self) -> DeviceKind {
         match self {
-            ExpertPlan::GpuResident | ExpertPlan::GpuTransfer => DeviceKind::Gpu,
+            ExpertPlan::GpuResident | ExpertPlan::GpuQuant | ExpertPlan::GpuTransfer => {
+                DeviceKind::Gpu
+            }
             ExpertPlan::Cpu => DeviceKind::Cpu,
         }
     }
@@ -42,6 +48,7 @@ impl ExpertPlan {
     pub fn cost_us(&self, lat: &LatencyModel, s: usize) -> f64 {
         match self {
             ExpertPlan::GpuResident => lat.gpu_lat(s),
+            ExpertPlan::GpuQuant => lat.quant_gpu_lat(s),
             ExpertPlan::GpuTransfer => lat.gpu_lat(s) + lat.transfer_lat(),
             ExpertPlan::Cpu => lat.cpu_lat(s),
         }
@@ -64,6 +71,43 @@ pub fn decide_expert(
         Some(ExpertPlan::GpuTransfer) // line 12-13
     } else {
         Some(ExpertPlan::Cpu) // line 14-15
+    }
+}
+
+/// Algorithm 1 extended with the quantized resident tier: a full-precision
+/// resident copy still short-circuits (it is both exact AND the cheapest),
+/// but an expert whose only on-GPU copy is low-bit prices THREE options —
+/// run the quantized copy now (`quant_gpu_lat`), transfer fp and run on
+/// the GPU, or run fp on the CPU — and takes the argmin.  Whether a
+/// chosen `GpuQuant` is *accepted* or must be *corrected* is the error
+/// budget's call, made by the caller ([`policy`] / the serving sim): this
+/// function only prices latency.  With `quant_resident == false` it is
+/// exactly [`decide_expert`] — the `--quant-tier off` bit-identity
+/// property rests on that.
+pub fn decide_expert_tiered(
+    fp_resident: bool,
+    quant_resident: bool,
+    s: usize,
+    lat: &LatencyModel,
+) -> Option<ExpertPlan> {
+    if s == 0 {
+        return None;
+    }
+    if fp_resident {
+        return Some(ExpertPlan::GpuResident);
+    }
+    if !quant_resident {
+        return decide_expert(false, s, lat);
+    }
+    let quant = lat.quant_gpu_lat(s);
+    let xfer = lat.gpu_lat(s) + lat.transfer_lat();
+    let cpu = lat.cpu_lat(s);
+    if quant <= xfer && quant <= cpu {
+        Some(ExpertPlan::GpuQuant)
+    } else if xfer < cpu {
+        Some(ExpertPlan::GpuTransfer)
+    } else {
+        Some(ExpertPlan::Cpu)
     }
 }
 
@@ -106,10 +150,8 @@ pub fn predict_layer_us(
     let mut cpu = 0.0;
     for (plan, &s) in plans.iter().zip(inp_size) {
         match plan {
-            Some(p @ (ExpertPlan::GpuResident | ExpertPlan::GpuTransfer)) => {
-                gpu += p.cost_us(lat, s)
-            }
-            Some(p @ ExpertPlan::Cpu) => cpu += p.cost_us(lat, s),
+            Some(p) if p.device() == DeviceKind::Gpu => gpu += p.cost_us(lat, s),
+            Some(p) => cpu += p.cost_us(lat, s),
             None => {}
         }
     }
@@ -133,10 +175,8 @@ pub fn predict_layer_us_with_waits(
     let mut cpu = 0.0f64;
     for ((plan, &s), &w) in plans.iter().zip(inp_size).zip(waits) {
         match plan {
-            Some(p @ (ExpertPlan::GpuResident | ExpertPlan::GpuTransfer)) => {
-                gpu = gpu.max(w) + p.cost_us(lat, s);
-            }
-            Some(p @ ExpertPlan::Cpu) => cpu += p.cost_us(lat, s),
+            Some(p) if p.device() == DeviceKind::Gpu => gpu = gpu.max(w) + p.cost_us(lat, s),
+            Some(p) => cpu += p.cost_us(lat, s),
             None => {}
         }
     }
@@ -222,6 +262,68 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn tiered_decision_is_three_way_argmin_property() {
+        // The tiered Algorithm 1 must pick the cheapest of quantized-hit /
+        // fp-transfer / fp-CPU whenever only the low-bit copy is resident.
+        check("tiered argmin", 256, |g: &mut Gen| {
+            let lat = LatencyModel {
+                gpu_const_us: g.f64_in(100.0, 10_000.0),
+                gpu_single_extra_us: g.f64_in(0.0, 1_000.0),
+                cpu_base_us: g.f64_in(0.0, 10_000.0),
+                cpu_per_token_us: g.f64_in(1.0, 2_000.0),
+                transfer_us: g.f64_in(100.0, 50_000.0),
+                act_roundtrip_per_token_us: g.f64_in(0.0, 5.0),
+            };
+            let s = g.usize_in(1..4096);
+            let plan = decide_expert_tiered(false, true, s, &lat).unwrap();
+            let chosen = plan.cost_us(&lat, s);
+            let best = lat
+                .quant_gpu_lat(s)
+                .min(lat.gpu_lat(s) + lat.transfer_lat())
+                .min(lat.cpu_lat(s));
+            assert!(chosen <= best + 1e-9, "chose {plan:?} ({chosen}) over {best}");
+            // An fp resident copy dominates everything, including quant.
+            assert_eq!(decide_expert_tiered(true, true, s, &lat), Some(ExpertPlan::GpuResident));
+        });
+    }
+
+    #[test]
+    fn tiered_decision_without_quant_copy_is_plain_algorithm1_property() {
+        // `--quant-tier off` bit-identity at the decision level: with no
+        // quant-resident copy the tiered decision IS Algorithm 1.
+        check("tiered off-identity", 256, |g: &mut Gen| {
+            let lat = LatencyModel {
+                gpu_const_us: g.f64_in(100.0, 10_000.0),
+                gpu_single_extra_us: g.f64_in(0.0, 1_000.0),
+                cpu_base_us: g.f64_in(0.0, 10_000.0),
+                cpu_per_token_us: g.f64_in(1.0, 2_000.0),
+                transfer_us: g.f64_in(100.0, 50_000.0),
+                act_roundtrip_per_token_us: g.f64_in(0.0, 5.0),
+            };
+            let s = g.usize_in(0..4096);
+            for resident in [false, true] {
+                assert_eq!(
+                    decide_expert_tiered(resident, false, s, &lat),
+                    decide_expert(resident, s, &lat)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn quant_plan_runs_on_gpu_queue() {
+        let lat = lat();
+        assert_eq!(ExpertPlan::GpuQuant.device(), crate::config::DeviceKind::Gpu);
+        // Prediction folds a quant hit into the GPU queue at its dequant-
+        // loaded cost.
+        let t = predict_layer_us(&[Some(ExpertPlan::GpuQuant)], &[1], &lat);
+        assert!((t - lat.quant_gpu_lat(1)).abs() < 1e-9);
+        let tw =
+            predict_layer_us_with_waits(&[Some(ExpertPlan::GpuQuant)], &[1], &[500.0], &lat);
+        assert!((tw - (500.0 + lat.quant_gpu_lat(1))).abs() < 1e-9);
     }
 
     #[test]

@@ -75,26 +75,31 @@ pub fn shard_of_expert(plan: ShardPlan, layer: usize, expert: usize, n_shards: u
 }
 
 /// One shard's priced step-time decomposition (µs per unit of demand
-/// mass, MoE-Lens style): resident demand on the GPU, missed demand on
-/// the cheaper of the CPU path and the PCIe weight-copy path.
+/// mass, MoE-Lens style): resident demand on the GPU, quantized-resident
+/// demand on the GPU at the dequant-overhead rate (`--quant-tier on`),
+/// missed demand on the cheaper of the CPU path and the PCIe weight-copy
+/// path.
 #[derive(Clone, Debug)]
 pub struct ShardCost {
     pub gpu_us: f64,
+    /// GPU time of demand served from the low-bit tier (0 with tier off).
+    pub quant_us: f64,
     pub cpu_us: f64,
     pub pcie_us: f64,
 }
 
 impl ShardCost {
-    /// Step time of the shard: the GPU stream overlaps the miss stream
-    /// (Fiddler's orchestration), and misses take the cheaper path.
+    /// Step time of the shard: the GPU stream (fp + quantized executions)
+    /// overlaps the miss stream (Fiddler's orchestration), and misses take
+    /// the cheaper path.
     pub fn step_us(&self) -> f64 {
-        self.gpu_us.max(self.cpu_us.min(self.pcie_us))
+        (self.gpu_us + self.quant_us).max(self.cpu_us.min(self.pcie_us))
     }
 
     /// Which resource saturates first: `gpu`, `cpu-bw`, or `pcie`.
     pub fn bottleneck(&self) -> &'static str {
         let miss = self.cpu_us.min(self.pcie_us);
-        if self.gpu_us >= miss {
+        if self.gpu_us + self.quant_us >= miss {
             "gpu"
         } else if self.cpu_us <= self.pcie_us {
             "cpu-bw"
@@ -133,13 +138,19 @@ impl ShardingPlan {
 
 /// Price one candidate partition: each shard's owned demand mass is
 /// normalized to 1; the most popular owned experts up to
-/// `gpu_capacity_per_shard` are resident (GPU), the rest miss.
+/// `gpu_capacity_per_shard` are resident (GPU), the rest miss.  With
+/// `quant_bits = Some(b)` the shard's HBM is split like
+/// [`ExpertCache::enable_quant_tier`] — half the slots hold fp masters,
+/// the freed half holds `16/b` low-bit copies each, so the next most
+/// popular experts serve on the GPU at the dequant-overhead rate instead
+/// of missing.
 fn price_plan(
     plan: ShardPlan,
     profile: &Profile,
     model: &LatencyModel,
     n_shards: usize,
     gpu_capacity_per_shard: usize,
+    quant_bits: Option<u32>,
 ) -> ShardingPlan {
     let mut owned: Vec<Vec<(u64, usize, usize)>> = vec![Vec::new(); n_shards];
     for l in 0..profile.n_layers {
@@ -148,25 +159,36 @@ fn price_plan(
             owned[s].push((profile.counts[l][e], l, e));
         }
     }
+    let (fp_cap, quant_cap) = match quant_bits {
+        Some(bits) => {
+            let fp = (gpu_capacity_per_shard / 2).max(1).min(gpu_capacity_per_shard);
+            (fp, (gpu_capacity_per_shard - fp) * 16 / bits.clamp(2, 16) as usize)
+        }
+        None => (gpu_capacity_per_shard, 0),
+    };
     let costs = owned
         .into_iter()
         .map(|mut experts| {
             // Most popular first; ties by (layer, expert) for determinism.
             experts.sort_by_key(|&(c, l, e)| (std::cmp::Reverse(c), l, e));
             let total: u64 = experts.iter().map(|&(c, _, _)| c).sum();
-            let resident: u64 =
-                experts.iter().take(gpu_capacity_per_shard).map(|&(c, _, _)| c).sum();
-            let (hit_mass, miss_mass) = if total == 0 {
+            let resident: u64 = experts.iter().take(fp_cap).map(|&(c, _, _)| c).sum();
+            let quant: u64 =
+                experts.iter().skip(fp_cap).take(quant_cap).map(|&(c, _, _)| c).sum();
+            let (hit_mass, quant_mass, miss_mass) = if total == 0 {
                 // No demand signal: assume uniform residency coverage.
-                let k = gpu_capacity_per_shard.min(experts.len());
-                let f = if experts.is_empty() { 1.0 } else { k as f64 / experts.len() as f64 };
-                (f, 1.0 - f)
+                let n = experts.len().max(1);
+                let h = fp_cap.min(experts.len()) as f64 / n as f64;
+                let q = quant_cap.min(experts.len().saturating_sub(fp_cap)) as f64 / n as f64;
+                (h, q, (1.0 - h - q).max(0.0))
             } else {
                 let h = resident as f64 / total as f64;
-                (h, 1.0 - h)
+                let q = quant as f64 / total as f64;
+                (h, q, (1.0 - h - q).max(0.0))
             };
             ShardCost {
                 gpu_us: hit_mass * model.gpu_lat(1),
+                quant_us: quant_mass * model.quant_gpu_lat(1),
                 cpu_us: miss_mass * model.cpu_lat(1),
                 pcie_us: miss_mass * (model.transfer_lat() + model.gpu_lat(1)),
             }
@@ -178,23 +200,30 @@ fn price_plan(
 /// Choose and price the expert partition for an `n_shards` fleet.
 /// `requested = auto` prices both layouts and keeps the one with the
 /// lower worst-shard step time (ties prefer `layer` — contiguous layers
-/// keep chain prediction within one shard).
+/// keep chain prediction within one shard).  `quant_bits` mirrors
+/// `--quant-tier on --quant-bits B` (`None` = fp-only shards).
 pub fn plan_shards(
     profile: &Profile,
     model: &LatencyModel,
     n_shards: usize,
     requested: ShardPlan,
     gpu_capacity_per_shard: usize,
+    quant_bits: Option<u32>,
 ) -> ShardingPlan {
     let n_shards = n_shards.max(1);
     match requested {
-        ShardPlan::Layer | ShardPlan::Hash => {
-            price_plan(requested, profile, model, n_shards, gpu_capacity_per_shard)
-        }
+        ShardPlan::Layer | ShardPlan::Hash => price_plan(
+            requested,
+            profile,
+            model,
+            n_shards,
+            gpu_capacity_per_shard,
+            quant_bits,
+        ),
         ShardPlan::Auto => {
             let cap = gpu_capacity_per_shard;
-            let layer = price_plan(ShardPlan::Layer, profile, model, n_shards, cap);
-            let hash = price_plan(ShardPlan::Hash, profile, model, n_shards, cap);
+            let layer = price_plan(ShardPlan::Layer, profile, model, n_shards, cap, quant_bits);
+            let hash = price_plan(ShardPlan::Hash, profile, model, n_shards, cap, quant_bits);
             if hash.max_step_us() < layer.max_step_us() {
                 hash
             } else {
@@ -616,7 +645,7 @@ mod tests {
         let p = skewed_profile(6, 8);
         let m = model();
         for requested in [ShardPlan::Layer, ShardPlan::Hash] {
-            let plan = plan_shards(&p, &m, 3, requested, 2);
+            let plan = plan_shards(&p, &m, 3, requested, 2, None);
             assert_eq!(plan.plan, requested);
             assert_eq!(plan.costs.len(), 3);
             for c in &plan.costs {
@@ -625,9 +654,9 @@ mod tests {
             }
             assert_eq!(plan.bottleneck_summary().split(',').count(), 3);
         }
-        let auto = plan_shards(&p, &m, 3, ShardPlan::Auto, 2);
-        let layer = plan_shards(&p, &m, 3, ShardPlan::Layer, 2);
-        let hash = plan_shards(&p, &m, 3, ShardPlan::Hash, 2);
+        let auto = plan_shards(&p, &m, 3, ShardPlan::Auto, 2, None);
+        let layer = plan_shards(&p, &m, 3, ShardPlan::Layer, 2, None);
+        let hash = plan_shards(&p, &m, 3, ShardPlan::Hash, 2, None);
         assert!(auto.plan == ShardPlan::Layer || auto.plan == ShardPlan::Hash);
         assert!(auto.max_step_us() <= layer.max_step_us() + 1e-9);
         assert!(auto.max_step_us() <= hash.max_step_us() + 1e-9);
@@ -637,11 +666,30 @@ mod tests {
     fn full_residency_is_gpu_bound() {
         // Capacity covers every expert: no misses, bottleneck is GPU.
         let p = skewed_profile(2, 4);
-        let plan = plan_shards(&p, &model(), 2, ShardPlan::Layer, 100);
+        let plan = plan_shards(&p, &model(), 2, ShardPlan::Layer, 100, None);
         for c in &plan.costs {
             assert_eq!(c.bottleneck(), "gpu");
             assert!(c.cpu_us.abs() < 1e-9 && c.pcie_us.abs() < 1e-9);
+            assert!(c.quant_us.abs() < 1e-9, "tier off must price no quant mass");
         }
+    }
+
+    #[test]
+    fn quant_tier_pricing_moves_miss_mass_onto_the_gpu_stream() {
+        // Capacity 2 over 8 experts/layer: fp-only thrashes.  With Q8 the
+        // same bytes hold 1 fp + 2 quant copies — less miss mass, and the
+        // quantized coverage shows up as GPU-stream time.
+        let p = skewed_profile(2, 8);
+        let m = model();
+        let fp = plan_shards(&p, &m, 2, ShardPlan::Layer, 2, None);
+        let tier = plan_shards(&p, &m, 2, ShardPlan::Layer, 2, Some(8));
+        for (a, b) in fp.costs.iter().zip(&tier.costs) {
+            assert!(b.quant_us > 0.0, "quant tier priced no quantized mass");
+            assert!(b.cpu_us < a.cpu_us, "tier must shrink the miss stream");
+        }
+        // The shape of the acceptance criterion: under heavy fp miss, the
+        // tiered plan's worst-shard step time is no worse.
+        assert!(tier.max_step_us() <= fp.max_step_us() + 1e-9);
     }
 
     #[test]
@@ -659,7 +707,7 @@ mod tests {
     fn pin_worthwhile_respects_caps_and_order() {
         let p = skewed_profile(2, 8);
         let m = model();
-        let plan = plan_shards(&p, &m, 1, ShardPlan::Layer, 8);
+        let plan = plan_shards(&p, &m, 1, ShardPlan::Layer, 8, None);
         let mut cache = ExpertCache::with_capacity(8);
         let pinned = pin_worthwhile(&mut cache, &p, &plan, 0, 50.0, 10.0, &m, 3);
         assert!(pinned.len() <= 3);
@@ -679,7 +727,7 @@ mod tests {
 
     fn router(n_shards: usize, replicate_hot: f64) -> FleetRouter {
         let p = skewed_profile(4, 8);
-        let plan = plan_shards(&p, &model(), n_shards, ShardPlan::Layer, 2);
+        let plan = plan_shards(&p, &model(), n_shards, ShardPlan::Layer, 2, None);
         let t = TransitionProfile::uniform(4, 8);
         FleetRouter::new(plan, Some(t), replicate_hot, EventSink::disabled())
     }

@@ -267,6 +267,10 @@ pub fn serve_lifecycle<B: ServeBackend>(
         shards: cfg.shards,
         shard_plan: cfg.shard_plan.label().to_string(),
         replicate_hot: cfg.replicate_hot,
+        quant_tier: cfg.quant_tier,
+        quant_bits: cfg.quant_bits as usize,
+        error_budget: cfg.error_budget,
+        cache_partition: cfg.cache_partition.label().to_string(),
     });
     // Serve-loop request ids, in ingest order (Cell: the ingest closure
     // and the loop body both touch it).  Requests carrying a pre-assigned
@@ -821,7 +825,10 @@ pub fn serve_lifecycle<B: ServeBackend>(
                             token: tok,
                             index: idx,
                         });
-                        let cache = std::mem::replace(cache, SequenceCache { layers: Vec::new() });
+                        let cache = std::mem::replace(
+                            cache,
+                            SequenceCache { layers: Vec::new(), quant_budget: None },
+                        );
                         // A resumed group carries its first-stint tokens
                         // forward (a second preemption rebuilds its
                         // prefix from this list).

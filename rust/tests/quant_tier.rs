@@ -1,0 +1,179 @@
+//! Properties of the three-tier expert hierarchy (`--quant-tier`):
+//! the off state is bit-identical to fp-only serving across threads and
+//! pipeline lookahead, the on state round-trips record → replay through
+//! the tier event kinds, and engine numerics never change (quantized
+//! plans price the low-bit copy but execute at full precision).
+
+use fiddler::config::serving::{Policy, ServingConfig};
+use fiddler::config::HardwareConfig;
+use fiddler::coordinator::Engine;
+use fiddler::events::replay::{diff_replay, fold_trace, read_log, replay_trace};
+use fiddler::figures;
+use fiddler::server::sim::{run_open_loop, LoadSpec};
+use fiddler::util::json::Json;
+use fiddler::workload::{Dataset, WorkloadGen};
+use std::path::PathBuf;
+
+fn tmp_trace(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fiddler-quant-{}-{name}.jsonl", std::process::id()))
+}
+
+fn artifacts_available() -> bool {
+    figures::artifact_dir("mixtral-tiny").join("weights_manifest.json").exists()
+}
+
+fn prompt(len: usize, seed: u64) -> Vec<u32> {
+    WorkloadGen::new(Dataset::sharegpt(), 512, seed).prompt(len)
+}
+
+const TIER_KINDS: [&str; 4] = ["tier_promoted", "tier_demoted", "quant_hit", "quant_corrected"];
+
+#[test]
+fn tier_off_is_bit_identical_across_threads_and_lookahead() {
+    // `--quant-tier off` (the default) must be the seed engine, bit for
+    // bit, at every thread count x lookahead combination — and because
+    // quantized plans run the fp executable, even `on` with a zero budget
+    // cannot change engine tokens.
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let hw = HardwareConfig::env1();
+    let p = prompt(16, 90);
+    let mut baseline: Option<Vec<u32>> = None;
+    for threads in [1usize, 2] {
+        for lookahead in [0usize, 2] {
+            for (tier, budget) in [(false, 0.0), (true, 0.0), (true, 0.5)] {
+                let serving = ServingConfig {
+                    policy: Policy::FiddlerCached,
+                    threads,
+                    pipeline_lookahead: lookahead,
+                    quant_tier: tier,
+                    quant_bits: 8,
+                    error_budget: budget,
+                    ..Default::default()
+                };
+                let mut e =
+                    Engine::new(figures::artifact_dir("mixtral-tiny"), &hw, serving).unwrap();
+                let tokens = e.generate(&p, 6).unwrap().tokens;
+                match &baseline {
+                    None => baseline = Some(tokens),
+                    Some(b) => assert_eq!(
+                        b, &tokens,
+                        "tokens changed at threads={threads} lookahead={lookahead} \
+                         tier={tier} budget={budget}"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+fn spec() -> LoadSpec {
+    LoadSpec {
+        n_requests: 16,
+        rate_per_s: 5.0,
+        inp: 10,
+        out: 8,
+        long_every: 5,
+        long_inp: 96,
+        seed: 29,
+        ..LoadSpec::default()
+    }
+}
+
+#[test]
+fn tier_off_trace_carries_no_tier_events() {
+    let path = tmp_trace("off");
+    let serving = ServingConfig {
+        events_out: Some(path.display().to_string()),
+        seed: 37,
+        ..Default::default()
+    };
+    run_open_loop(serving, &spec()).unwrap();
+    let events = read_log(&path).unwrap();
+    let kinds: std::collections::BTreeSet<&str> = events.iter().map(|e| e.kind()).collect();
+    for k in TIER_KINDS {
+        assert!(!kinds.contains(k), "tier off must not emit {k}");
+    }
+    // And the meta line records the off state for the replayer.
+    let text = std::fs::read_to_string(&path).unwrap();
+    let meta = Json::parse(text.lines().next().unwrap()).unwrap();
+    assert!(!meta.get("quant_tier").unwrap().as_bool().unwrap());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn tiered_record_replay_round_trips_bit_identically() {
+    // A moderate budget with Q8 errors (~0.004 each) accepts the first
+    // few quantized hits of each request and corrects the rest — so ALL
+    // four tier event kinds land in the trace, and replay (which rebuilds
+    // the tiered config from the meta line) must still match every
+    // client-visible token stream.
+    let path = tmp_trace("replay");
+    let serving = ServingConfig {
+        events_out: Some(path.display().to_string()),
+        temperature: 0.8,
+        prefill_chunk: 16,
+        max_batch: 4,
+        kv_budget_mb: 8,
+        seed: 43,
+        quant_tier: true,
+        quant_bits: 8,
+        error_budget: 0.02,
+        ..Default::default()
+    };
+    let report = run_open_loop(serving, &spec()).unwrap();
+    assert!(report.completed > 0);
+
+    let events = read_log(&path).unwrap();
+    let kinds: std::collections::BTreeSet<&str> = events.iter().map(|e| e.kind()).collect();
+    for k in TIER_KINDS {
+        assert!(kinds.contains(k), "tiered run never emitted {k} (has {kinds:?})");
+    }
+    let meta = Json::parse(std::fs::read_to_string(&path).unwrap().lines().next().unwrap())
+        .unwrap();
+    assert!(meta.get("quant_tier").unwrap().as_bool().unwrap());
+    assert_eq!(meta.get("quant_bits").unwrap().as_usize().unwrap(), 8);
+
+    let rec = fold_trace(&events);
+    let outcomes = replay_trace(&rec).unwrap();
+    let diffs = diff_replay(&rec, &outcomes);
+    assert!(diffs.is_empty(), "tiered replay diverged: {diffs:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn accepted_quant_hits_can_change_sim_tokens_but_zero_budget_cannot() {
+    let base = run_open_loop(ServingConfig { seed: 51, ..Default::default() }, &spec()).unwrap();
+    let zero = run_open_loop(
+        ServingConfig {
+            seed: 51,
+            quant_tier: true,
+            quant_bits: 8,
+            error_budget: 0.0,
+            ..Default::default()
+        },
+        &spec(),
+    )
+    .unwrap();
+    assert_eq!(base.outcomes, zero.outcomes, "zero budget must preserve fp numerics");
+    let loose = run_open_loop(
+        ServingConfig {
+            seed: 51,
+            quant_tier: true,
+            quant_bits: 8,
+            error_budget: 1.0,
+            ..Default::default()
+        },
+        &spec(),
+    )
+    .unwrap();
+    // Same completion accounting either way; only token values may drift
+    // once hits are accepted.
+    assert_eq!(base.completed, loose.completed);
+    assert_ne!(
+        base.outcomes, loose.outcomes,
+        "a generous budget never accepted a hit — tier not exercised"
+    );
+}
