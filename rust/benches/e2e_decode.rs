@@ -661,6 +661,119 @@ fn bench_quant_tier() -> Json {
     section
 }
 
+/// PR 10: adaptive lookahead controller vs the static window sweep on the
+/// drifting workload (stable regime then fast churn).  The acceptance
+/// inequalities: the static sweep spreads materially, and the controller
+/// — which never sees the sweep — lands within 5% of its winner while
+/// strictly beating every non-optimal window.
+fn bench_adaptive() -> Json {
+    use fiddler::control::sim::{bench_workload, run_lookahead_sim, LookaheadMode};
+    use fiddler::latency::LatencyModel;
+
+    let fast = std::env::var("FIDDLER_BENCH_FAST").is_ok();
+    let steps = if fast { 120 } else { 400 };
+    let lat = LatencyModel::from_hardware(&HardwareConfig::env1());
+    let cfg = bench_workload(9, steps);
+    let mut section = Json::obj();
+
+    let mut rows = Vec::new();
+    let mut reports = Vec::new();
+    for w in 0..=2usize {
+        reports.push(run_lookahead_sim(&cfg, &lat, LookaheadMode::Static(w)));
+    }
+    let adaptive = run_lookahead_sim(&cfg, &lat, LookaheadMode::Adaptive { start: 1, max: 2 });
+    for r in reports.iter().chain(std::iter::once(&adaptive)) {
+        println!(
+            "    adaptive_sweep/{}: stable {:.0} us/step | drift {:.0} us/step | overall {:.0} | final W {} ({} adjustments) | pf hits {}/{}",
+            r.mode,
+            r.segment_step_us[0],
+            r.segment_step_us[1],
+            r.mean_step_us,
+            r.final_lookahead,
+            r.adjustments,
+            r.prefetch_hits,
+            r.prefetches,
+        );
+        let mut o = Json::obj();
+        o.set("mode", Json::from(r.mode.as_str()));
+        o.set("stable_step_us", Json::Num(r.segment_step_us[0]));
+        o.set("drift_step_us", Json::Num(r.segment_step_us[1]));
+        o.set("stable_tok_per_s", Json::Num(r.segment_tok_per_s[0]));
+        o.set("drift_tok_per_s", Json::Num(r.segment_tok_per_s[1]));
+        o.set("overall_step_us", Json::Num(r.mean_step_us));
+        o.set("final_lookahead", Json::from(r.final_lookahead));
+        o.set("adjustments", Json::from(r.adjustments as usize));
+        o.set("prefetches", Json::from(r.prefetches as usize));
+        o.set("prefetch_hits", Json::from(r.prefetch_hits as usize));
+        o.set("hit_rate", Json::Num(r.hit_rate));
+        rows.push(o);
+    }
+    section.set("lookahead_sweep", Json::Arr(rows));
+
+    let best = reports
+        .iter()
+        .min_by(|a, b| a.mean_step_us.total_cmp(&b.mean_step_us))
+        .expect("static sweep nonempty");
+    let worst = reports
+        .iter()
+        .max_by(|a, b| a.mean_step_us.total_cmp(&b.mean_step_us))
+        .expect("static sweep nonempty");
+    // The acceptance bars: the sweep must matter (else there is nothing
+    // to adapt over), adaptive must land within 5% of the sweep winner
+    // it never saw, and it must strictly beat every other window.
+    assert!(
+        worst.mean_step_us > best.mean_step_us * 1.05,
+        "static sweep spread immaterial: {} {:.0} vs {} {:.0} us/step",
+        worst.mode,
+        worst.mean_step_us,
+        best.mode,
+        best.mean_step_us
+    );
+    assert!(
+        adaptive.mean_step_us <= best.mean_step_us * 1.05,
+        "adaptive {:.1} us/step not within 5% of best static ({}) {:.1}",
+        adaptive.mean_step_us,
+        best.mode,
+        best.mean_step_us
+    );
+    for r in reports.iter().filter(|r| r.mode != best.mode) {
+        assert!(
+            adaptive.mean_step_us < r.mean_step_us,
+            "adaptive {:.1} us/step does not beat {} {:.1}",
+            adaptive.mean_step_us,
+            r.mode,
+            r.mean_step_us
+        );
+    }
+    // On the drift phase the controller has already settled: adaptive
+    // matches the best static drift-segment time (float-noise tolerance).
+    let best_drift = reports
+        .iter()
+        .map(|r| r.segment_step_us[1])
+        .fold(f64::INFINITY, f64::min);
+    assert!(
+        adaptive.segment_step_us[1] <= best_drift * 1.001,
+        "adaptive drift segment {:.1} us/step worse than best static {:.1}",
+        adaptive.segment_step_us[1],
+        best_drift
+    );
+    assert!(adaptive.adjustments > 0, "controller never adjusted");
+    section.set("best_static_mode", Json::from(best.mode.as_str()));
+    section.set(
+        "adaptive_vs_best_static_ratio",
+        Json::Num(adaptive.mean_step_us / best.mean_step_us.max(1e-9)),
+    );
+    section.set(
+        "static_sweep_spread",
+        Json::Num(worst.mean_step_us / best.mean_step_us.max(1e-9)),
+    );
+    section.set(
+        "adaptive_vs_worst_static_speedup",
+        Json::Num(worst.mean_step_us / adaptive.mean_step_us.max(1e-9)),
+    );
+    section
+}
+
 fn main() {
     let mut b = Bench::new();
 
@@ -750,6 +863,19 @@ fn main() {
         std::env::var("FIDDLER_BENCH_OUT_PR9").unwrap_or_else(|_| "BENCH_PR9.json".into());
     std::fs::write(&out9, root9.to_string()).expect("write bench json");
     println!("  wrote {out9}");
+
+    // PR 10: adaptive control plane — learned lookahead vs the static
+    // sweep on the stable->drift workload (virtual time — no artifacts
+    // needed, always produced).
+    println!("  adaptive lookahead vs static sweep (stable -> drift):");
+    let adaptive = bench_adaptive();
+    let mut root10 = Json::obj();
+    root10.set("bench", Json::from("pr10-adaptive-control-plane"));
+    root10.set("adaptive", adaptive);
+    let out10 =
+        std::env::var("FIDDLER_BENCH_OUT_PR10").unwrap_or_else(|_| "BENCH_PR10.json".into());
+    std::fs::write(&out10, root10.to_string()).expect("write bench json");
+    println!("  wrote {out10}");
 
     b.report("e2e decode/prefill (serial vs parallel executor + per-policy)");
 }

@@ -114,6 +114,22 @@ fn main() {
         mem.fetch((i / 8, i % 8))
     });
 
+    // --- exec pool: dispatch jitter with and without core pinning -------
+    // (--pin-workers): same jobs through a 4-worker pool, pinned vs
+    // unpinned.  Wall-clock only — affinity never touches virtual time.
+    {
+        use fiddler::exec::ExecutorPool;
+        let plain = ExecutorPool::new(4);
+        let pinned = ExecutorPool::with_affinity(4, true);
+        let run = |pool: &ExecutorPool| {
+            pool.submit((0..32usize).map(|i| move || i.wrapping_mul(2_654_435_761)).collect())
+                .wait()
+                .len()
+        };
+        b.bench("exec/pool_dispatch_unpinned", || run(&plain));
+        b.bench("exec/pool_dispatch_pinned", || run(&pinned));
+    }
+
     // --- cpukernel: the dedicated host expert kernel --------------------
     cpukernel_section(&mut b);
 

@@ -324,6 +324,18 @@ pub struct ServingConfig {
     pub error_budget: f64,
     /// Expert-cache capacity partitioning (`--cache-partition`).
     pub cache_partition: CachePartition,
+    /// Adaptive control plane (`--adaptive on|off`; see
+    /// [`crate::control`]).  Off (default) = every knob static,
+    /// bit-identical to the pre-control-plane engine.  On: the per-kind
+    /// lookahead controller, prefetch-aware eviction, skew-aware override
+    /// pricing, and measured SLO admission feedback all close their loops
+    /// online — from virtual-time counters only, so record→replay stays
+    /// bit-identical.
+    pub adaptive: bool,
+    /// Best-effort core affinity for the executor-pool workers
+    /// (`--pin-workers on|off`).  Worker `i` pins to core `i % cores` on
+    /// Linux/x86-64; a no-op hint elsewhere.  Off by default.
+    pub pin_workers: bool,
 }
 
 impl Default for ServingConfig {
@@ -357,6 +369,8 @@ impl Default for ServingConfig {
             quant_bits: 8,
             error_budget: 0.05,
             cache_partition: CachePartition::None,
+            adaptive: false,
+            pin_workers: false,
         }
     }
 }
@@ -427,6 +441,20 @@ impl ServingConfig {
         anyhow::ensure!(c.error_budget >= 0.0, "--error-budget must be non-negative");
         if let Some(p) = args.get("cache-partition") {
             c.cache_partition = CachePartition::by_name(p)?;
+        }
+        if let Some(a) = args.get("adaptive") {
+            c.adaptive = match a {
+                "on" => true,
+                "off" => false,
+                other => anyhow::bail!("--adaptive must be on or off, got {other:?}"),
+            };
+        }
+        if let Some(p) = args.get("pin-workers") {
+            c.pin_workers = match p {
+                "on" => true,
+                "off" => false,
+                other => anyhow::bail!("--pin-workers must be on or off, got {other:?}"),
+            };
         }
         Ok(c)
     }
@@ -632,6 +660,28 @@ mod tests {
             "--error-budget -0.5",
             "--cache-partition expert",
         ] {
+            let a = Args::parse(bad.split_whitespace().map(String::from));
+            assert!(ServingConfig::from_args(&a).is_err(), "{bad} must be rejected");
+        }
+    }
+
+    #[test]
+    fn adaptive_args_parse_and_default_off() {
+        let d = ServingConfig::default();
+        assert!(!d.adaptive, "adaptive must default off (static pipeline)");
+        assert!(!d.pin_workers, "pinning must default off");
+
+        let a = Args::parse(
+            "--adaptive on --pin-workers on".split_whitespace().map(String::from),
+        );
+        let c = ServingConfig::from_args(&a).unwrap();
+        assert!(c.adaptive);
+        assert!(c.pin_workers);
+
+        let off = Args::parse("--adaptive off".split_whitespace().map(String::from));
+        assert!(!ServingConfig::from_args(&off).unwrap().adaptive);
+
+        for bad in ["--adaptive maybe", "--pin-workers yes"] {
             let a = Args::parse(bad.split_whitespace().map(String::from));
             assert!(ServingConfig::from_args(&a).is_err(), "{bad} must be rejected");
         }

@@ -1,0 +1,576 @@
+//! Adaptive control plane — deterministic, virtual-time-driven feedback
+//! loops that retune the pipeline online (`--adaptive on`; ROADMAP item 5).
+//!
+//! Every knob this module adjusts is static at startup without it:
+//! `--pipeline-lookahead` (one global window for three very different pass
+//! kinds), the eviction scoring (blind to what the PCIe lane just paid
+//! for), the in-flight override pricing (blind to which *sequence* in a
+//! batch wants an expert), and the `slo` admission deadline (a prior the
+//! workload immediately falsifies).  The four loops:
+//!
+//! 1. **Per-phase lookahead learning** ([`LookaheadController`]): one
+//!    hill-climbing controller per pass kind (prefill / chunked
+//!    continuation / decode — `PipelineState`'s existing `kind_idx`
+//!    split), fed per-pass reward windows from
+//!    [`crate::moe::ExpertEvents::delta_since`]-style counter deltas
+//!    (prefetch hits + overlapped overrides, minus wasted transfers).
+//! 2. **Prefetch-aware eviction**: [`crate::expertcache::ExpertCache`]
+//!    charges a landing-cost penalty so a copy the window just paid PCIe
+//!    for is not evicted before its predicted-use layer arrives
+//!    (`ExpertCache::set_landing_protection`; armed only under
+//!    `--adaptive on`).
+//! 3. **Per-sequence routing-skew overrides** ([`SkewTracker`]): batched
+//!    decode tracks which batch row routed to which expert last step, so
+//!    the in-flight override pricing can bias against demand-admitting an
+//!    expert only one hot-routed sequence wants and no row will reuse.
+//! 4. **Admission SLO feedback** ([`SloEstimator`]): the `slo` admission
+//!    policy's TTFT/ITL estimates update from measured retire-time
+//!    [`crate::metrics::GenMetrics`] (EWMA) instead of trusting the
+//!    static `--slo-ttft-ms` prior forever.
+//!
+//! Determinism contract: every input is a virtual-time counter (cache
+//! stats, expert events, virtual-µs metrics) — never the wall clock —
+//! and every decision is emitted as a trace event
+//! (`controller_adjusted`, `slo_estimate_updated`), so an adaptive run
+//! records→replays bit-identically.  With `--adaptive off` nothing in
+//! this module is constructed and the engine is bit-identical to the
+//! static pipeline (property-tested in `rust/tests/control.rs`).
+
+pub mod sim;
+
+/// EWMA whose first observation *seeds* the estimate directly instead of
+/// blending with a zero initial value (the cold-start bug class the
+/// pipeline's gap estimate must avoid: blending the first layer gap with
+/// 0.0 would underestimate lead time for the whole first window and
+/// suppress early profitable prefetches).
+#[derive(Clone, Copy, Debug)]
+pub struct SeededEwma {
+    decay: f64,
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl SeededEwma {
+    /// `alpha` is the weight of each new sample (`v = (1-a)*v + a*x`).
+    pub fn new(alpha: f64) -> SeededEwma {
+        SeededEwma::with_weights(1.0 - alpha, alpha)
+    }
+
+    /// Explicit old/new weights.  Callers that must stay bit-identical
+    /// with a legacy `D*v + A*x` update pass both literals: `1.0 - 0.3`
+    /// is NOT the same double as `0.7`.
+    pub fn with_weights(decay: f64, alpha: f64) -> SeededEwma {
+        SeededEwma { decay, alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x, // seed, don't blend with an implicit 0
+            Some(v) => self.decay * v + self.alpha * x,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn value_or(&self, default: f64) -> f64 {
+        self.value.unwrap_or(default)
+    }
+}
+
+/// Pass-kind labels, indexed by `ForwardKind::idx()` (prefill /
+/// chunked-continuation / decode) — the strings `controller_adjusted`
+/// events and `trace-summary` print.
+pub const KIND_LABELS: [&str; 3] = ["prefill", "chunk", "decode"];
+
+/// Passes per reward window: the controller only moves after this many
+/// passes of a kind have accumulated counters (smooths the hit/waste lag
+/// of in-flight transfers).
+pub const WINDOW_PASSES: usize = 4;
+
+/// Hard ceiling on any learned lookahead window (beyond ~4 layers the
+/// transition-chain predictions are noise-level; see
+/// `PipelineState::predict`'s confidence floor).
+pub const MAX_LOOKAHEAD: usize = 4;
+
+/// Direction flips before the controller settles on the best window seen
+/// (pure hill climbing oscillates ±1 around a noiseless optimum forever).
+const SETTLE_FLIPS: u32 = 2;
+
+/// Fractional reward drop that re-opens exploration from the held
+/// setting (workload drift detection).
+const RELEASE_FRACTION: f64 = 0.25;
+
+/// One committed controller move (for the `controller_adjusted` event).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Adjustment {
+    /// The newly effective lookahead window.
+    pub lookahead: usize,
+    /// The reward of the window that triggered the move.
+    pub reward: f64,
+    /// Total moves this phase's controller has committed.
+    pub adjustments: u64,
+}
+
+#[derive(Clone, Debug)]
+struct PhaseCtl {
+    lookahead: usize,
+    dir: isize,
+    last_reward: Option<f64>,
+    flips: u32,
+    /// Best (lookahead, reward) window seen since exploration opened.
+    best: Option<(usize, f64)>,
+    /// Settled: hold `lookahead` until reward degrades past the release
+    /// threshold.
+    held: bool,
+    hold_reward: f64,
+    acc_overlapped: u64,
+    acc_hits: u64,
+    acc_wasted: u64,
+    passes: usize,
+    adjustments: u64,
+}
+
+impl PhaseCtl {
+    fn new(lookahead: usize) -> PhaseCtl {
+        PhaseCtl {
+            lookahead,
+            dir: 1,
+            last_reward: None,
+            flips: 0,
+            best: None,
+            held: false,
+            hold_reward: 0.0,
+            acc_overlapped: 0,
+            acc_hits: 0,
+            acc_wasted: 0,
+            passes: 0,
+            adjustments: 0,
+        }
+    }
+}
+
+/// Loop 1: per-pass-kind hill-climbing lookahead controller.
+///
+/// Each pass feeds its counter deltas (`on_pass`); every
+/// [`WINDOW_PASSES`] passes of a kind close a reward window
+/// (`hits + overlapped - wasted`) and the controller climbs: keep
+/// direction while reward improves, flip when it degrades, and after
+/// [`SETTLE_FLIPS`] flips settle on the best window seen (hill climbing
+/// would otherwise oscillate ±1 around the optimum forever).  A held
+/// setting re-opens exploration when its reward drops by
+/// [`RELEASE_FRACTION`] — that is what makes the controller *track
+/// drift* instead of converging once.
+#[derive(Clone, Debug)]
+pub struct LookaheadController {
+    phases: [PhaseCtl; 3],
+    min: usize,
+    max: usize,
+    window: usize,
+}
+
+impl LookaheadController {
+    /// Engine-path controller: every phase starts at the configured
+    /// `--pipeline-lookahead`, exploring in `[1, min(base+2, 4)]` — the
+    /// floor of 1 keeps the pipeline observing (a window of 0 would blind
+    /// the reward signal and the controller could never recover).
+    pub fn new(base: usize) -> LookaheadController {
+        let b = base.clamp(1, MAX_LOOKAHEAD);
+        Self::with_range(b, 1, (b + 2).min(MAX_LOOKAHEAD))
+    }
+
+    /// Controller with an explicit exploration range (the trace-driven
+    /// sim allows 0 — it has no in-band reward signal to lose).
+    pub fn with_range(base: usize, min: usize, max: usize) -> LookaheadController {
+        let max = max.max(min);
+        let base = base.clamp(min, max);
+        LookaheadController {
+            phases: [PhaseCtl::new(base), PhaseCtl::new(base), PhaseCtl::new(base)],
+            min,
+            max,
+            window: WINDOW_PASSES,
+        }
+    }
+
+    /// Effective lookahead for a pass kind right now.
+    pub fn lookahead(&self, kind_idx: usize) -> usize {
+        self.phases[kind_idx].lookahead
+    }
+
+    /// Committed moves for a pass kind.
+    pub fn adjustments(&self, kind_idx: usize) -> u64 {
+        self.phases[kind_idx].adjustments
+    }
+
+    /// Whether a phase has settled (stopped exploring).
+    pub fn is_held(&self, kind_idx: usize) -> bool {
+        self.phases[kind_idx].held
+    }
+
+    /// Feed one pass's counter deltas for `kind_idx`: prefetch-overlapped
+    /// overrides, prefetch hits, and wasted transfers (issued minus hit).
+    /// Returns the committed move when a reward window closed and changed
+    /// the effective lookahead.
+    pub fn on_pass(
+        &mut self,
+        kind_idx: usize,
+        overlapped: u64,
+        hits: u64,
+        wasted: u64,
+    ) -> Option<Adjustment> {
+        let p = &mut self.phases[kind_idx];
+        p.acc_overlapped += overlapped;
+        p.acc_hits += hits;
+        p.acc_wasted += wasted;
+        p.passes += 1;
+        if p.passes < self.window {
+            return None;
+        }
+        let reward = (p.acc_hits + p.acc_overlapped) as f64 - p.acc_wasted as f64;
+        p.acc_overlapped = 0;
+        p.acc_hits = 0;
+        p.acc_wasted = 0;
+        p.passes = 0;
+
+        if p.best.map(|(_, r)| reward > r).unwrap_or(true) {
+            p.best = Some((p.lookahead, reward));
+        }
+        if p.held {
+            let release = p.hold_reward - RELEASE_FRACTION * p.hold_reward.abs().max(1.0);
+            if reward >= release {
+                return None; // still paying: hold
+            }
+            // Drift: the held setting degraded — explore again from here.
+            p.held = false;
+            p.flips = 0;
+            p.best = Some((p.lookahead, reward));
+            p.last_reward = Some(reward);
+            return self.step_phase(kind_idx);
+        }
+        let prev = p.last_reward.replace(reward);
+        if let Some(prev) = prev {
+            if reward + 1e-9 < prev {
+                p.dir = -p.dir;
+                p.flips += 1;
+            }
+            if p.flips >= SETTLE_FLIPS {
+                // Oscillating around the optimum: settle on the best seen.
+                let (best_w, best_r) = p.best.expect("best tracked above");
+                p.held = true;
+                p.hold_reward = best_r;
+                if best_w != p.lookahead {
+                    p.lookahead = best_w;
+                    p.adjustments += 1;
+                    return Some(Adjustment {
+                        lookahead: best_w,
+                        reward,
+                        adjustments: p.adjustments,
+                    });
+                }
+                return None;
+            }
+        }
+        self.step_phase(kind_idx)
+    }
+
+    fn step_phase(&mut self, kind_idx: usize) -> Option<Adjustment> {
+        let (min, max) = (self.min as isize, self.max as isize);
+        let p = &mut self.phases[kind_idx];
+        let next = (p.lookahead as isize + p.dir).clamp(min, max) as usize;
+        if next == p.lookahead {
+            // Range boundary: bounce (counts toward settling).
+            p.dir = -p.dir;
+            p.flips += 1;
+            return None;
+        }
+        p.lookahead = next;
+        p.adjustments += 1;
+        Some(Adjustment {
+            lookahead: next,
+            reward: p.last_reward.unwrap_or(0.0),
+            adjustments: p.adjustments,
+        })
+    }
+}
+
+/// Loop 3: per-sequence routing history for batched decode.
+///
+/// Rows are batch positions (the pipeline's unit of sequence identity —
+/// positional, so a retire mid-stream shifts attribution for one step;
+/// the signal is a heuristic bias, not an invariant).  `repeated` answers
+/// "did this row route to this expert at this layer on the previous
+/// decode step?" — a row with no repeat is showing one-off skew, and an
+/// in-flight override should win against demand-admitting for it alone.
+#[derive(Debug, Default)]
+pub struct SkewTracker {
+    active: bool,
+    /// `prev[row][layer]` = experts the row routed to last decode step.
+    prev: Vec<Vec<Vec<usize>>>,
+    cur: Vec<Vec<Vec<usize>>>,
+}
+
+impl SkewTracker {
+    pub fn new() -> SkewTracker {
+        SkewTracker::default()
+    }
+
+    /// Start a decode step with `batch` rows: last step's recordings
+    /// become the lookup side.
+    pub fn begin_step(&mut self, batch: usize) {
+        std::mem::swap(&mut self.prev, &mut self.cur);
+        self.cur.clear();
+        self.cur.resize(batch, Vec::new());
+        self.active = true;
+    }
+
+    /// Non-decode passes interleave between steps; their routing is
+    /// neither recorded nor consulted.
+    pub fn set_inactive(&mut self) {
+        self.active = false;
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.active
+    }
+
+    pub fn record(&mut self, row: usize, layer: usize, expert: usize) {
+        if !self.active {
+            return;
+        }
+        let Some(r) = self.cur.get_mut(row) else { return };
+        if r.len() <= layer {
+            r.resize(layer + 1, Vec::new());
+        }
+        r[layer].push(expert);
+    }
+
+    /// Did `row` route to `expert` at `layer` on the previous step?
+    pub fn repeated(&self, row: usize, layer: usize, expert: usize) -> bool {
+        self.prev
+            .get(row)
+            .and_then(|r| r.get(layer))
+            .map(|experts| experts.contains(&expert))
+            .unwrap_or(false)
+    }
+}
+
+/// Kept-plan cost multiplier when an expert's demand comes from a single
+/// batch row with no cross-step reuse: the override (waiting out the
+/// in-flight copy) is favored over a demand admit the batch won't reuse.
+pub const SKEW_OVERRIDE_BIAS: f64 = 1.25;
+
+/// Measured samples before the learned TTFT budget replaces the
+/// `--slo-ttft-ms` prior.
+pub const SLO_MIN_SAMPLES: u64 = 3;
+
+/// Deadline margin over the learned TTFT estimate.
+pub const SLO_MARGIN: f64 = 2.0;
+
+/// Smoothing weight of each retired request's measurements.
+const SLO_ALPHA: f64 = 0.2;
+
+/// Loop 4: the `slo` admission policy's learned TTFT/ITL estimates,
+/// updated from measured per-request outcomes at retire time.
+///
+/// Until [`SLO_MIN_SAMPLES`] requests have retired the static prior
+/// stands; after that the default deadline becomes
+/// `SLO_MARGIN * ttft_estimate`, clamped to `[prior/4, 4*prior]` so a
+/// burst of anomalous retirements can never collapse or explode
+/// admission.  All inputs are virtual-µs [`crate::metrics::GenMetrics`]
+/// fields — replay reproduces the estimator exactly.
+#[derive(Clone, Debug)]
+pub struct SloEstimator {
+    prior_ttft_us: f64,
+    ttft_us: SeededEwma,
+    itl_us: SeededEwma,
+    samples: u64,
+}
+
+impl SloEstimator {
+    pub fn new(prior_ttft_us: f64) -> SloEstimator {
+        SloEstimator {
+            prior_ttft_us,
+            ttft_us: SeededEwma::new(SLO_ALPHA),
+            itl_us: SeededEwma::new(SLO_ALPHA),
+            samples: 0,
+        }
+    }
+
+    /// Absorb one retired request's measured TTFT and mean ITL (µs).
+    pub fn observe(&mut self, ttft_us: f64, mean_itl_us: f64) {
+        if ttft_us.is_finite() && ttft_us > 0.0 {
+            self.ttft_us.observe(ttft_us);
+        }
+        if mean_itl_us.is_finite() && mean_itl_us > 0.0 {
+            self.itl_us.observe(mean_itl_us);
+        }
+        self.samples += 1;
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Current TTFT estimate (µs); the prior until a sample lands.
+    pub fn ttft_est_us(&self) -> f64 {
+        self.ttft_us.value_or(self.prior_ttft_us)
+    }
+
+    /// Current mean-ITL estimate (µs); 0 until a sample lands.
+    pub fn itl_est_us(&self) -> f64 {
+        self.itl_us.value_or(0.0)
+    }
+
+    /// The default deadline budget (µs from enqueue) for requests without
+    /// an explicit SLO: the prior until warmed up, then the learned
+    /// estimate with margin, clamped around the prior.
+    pub fn ttft_budget_us(&self) -> f64 {
+        let prior = self.prior_ttft_us;
+        if self.samples < SLO_MIN_SAMPLES {
+            return prior;
+        }
+        let learned = SLO_MARGIN * self.ttft_est_us();
+        if prior > 0.0 {
+            learned.clamp(0.25 * prior, 4.0 * prior)
+        } else {
+            learned
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_ewma_seeds_then_blends() {
+        let mut e = SeededEwma::new(0.3);
+        assert_eq!(e.get(), None);
+        assert_eq!(e.value_or(7.0), 7.0);
+        e.observe(100.0);
+        assert_eq!(e.get(), Some(100.0), "first sample must seed, not blend with 0");
+        e.observe(200.0);
+        let v = e.get().unwrap();
+        assert!((v - 130.0).abs() < 1e-9, "0.7*100 + 0.3*200, got {v}");
+    }
+
+    /// Drive one phase through reward windows of a synthetic reward
+    /// function; returns (lookahead, adjustments) after `windows`.
+    fn climb(f: impl Fn(usize) -> f64, windows: usize, range: (usize, usize, usize)) -> (usize, u64) {
+        let mut c = LookaheadController::with_range(range.0, range.1, range.2);
+        for _ in 0..windows {
+            let w = c.lookahead(2);
+            let r = f(w);
+            // Encode the reward as hit counts (reward = hits - wasted).
+            let (hits, wasted) =
+                if r >= 0.0 { (r as u64, 0u64) } else { (0u64, (-r) as u64) };
+            for _ in 0..WINDOW_PASSES {
+                c.on_pass(2, 0, hits, wasted);
+            }
+        }
+        (c.lookahead(2), c.adjustments(2))
+    }
+
+    #[test]
+    fn controller_converges_on_stationary_reward_and_stops_oscillating() {
+        // Concave reward peaked at W=2: the controller must find it,
+        // settle, and commit no further moves.
+        let f = |w: usize| 16.0 - 4.0 * (w as f64 - 2.0) * (w as f64 - 2.0);
+        let (w8, adj8) = climb(f, 8, (1, 0, 4));
+        assert_eq!(w8, 2, "did not converge to the reward peak");
+        let (w40, adj40) = climb(f, 40, (1, 0, 4));
+        assert_eq!(w40, 2, "left the peak after converging");
+        assert_eq!(adj8, adj40, "kept adjusting on a stationary workload");
+    }
+
+    #[test]
+    fn controller_tracks_a_reward_shift() {
+        // Peak moves from W=3 to W=1 mid-run: a settled controller must
+        // release its hold and re-converge.
+        let mut c = LookaheadController::with_range(1, 0, 4);
+        let run = |c: &mut LookaheadController, peak: f64, windows: usize| {
+            for _ in 0..windows {
+                let w = c.lookahead(2) as f64;
+                let r = 16.0 - 4.0 * (w - peak) * (w - peak);
+                let (hits, wasted) =
+                    if r >= 0.0 { (r as u64, 0u64) } else { (0u64, (-r) as u64) };
+                for _ in 0..WINDOW_PASSES {
+                    c.on_pass(2, 0, hits, wasted);
+                }
+            }
+        };
+        run(&mut c, 3.0, 12);
+        assert_eq!(c.lookahead(2), 3);
+        assert!(c.is_held(2), "should settle on the stationary phase");
+        run(&mut c, 1.0, 12);
+        assert_eq!(c.lookahead(2), 1, "did not track the drifted peak");
+    }
+
+    #[test]
+    fn controller_phases_are_independent() {
+        let mut c = LookaheadController::new(2);
+        for _ in 0..(3 * WINDOW_PASSES) {
+            // Decode: waste grows with the window — climb down.
+            let wasted = 10 * c.lookahead(2) as u64;
+            c.on_pass(2, 0, 0, wasted);
+        }
+        assert!(c.lookahead(2) < 2);
+        assert_eq!(c.lookahead(0), 2, "prefill phase must be untouched");
+        assert_eq!(c.adjustments(0), 0);
+    }
+
+    #[test]
+    fn engine_controller_floors_at_one() {
+        let mut c = LookaheadController::new(1);
+        for _ in 0..(20 * WINDOW_PASSES) {
+            c.on_pass(2, 0, 0, 50);
+        }
+        assert!(c.lookahead(2) >= 1, "engine floor keeps the pipeline observing");
+    }
+
+    #[test]
+    fn skew_tracker_tracks_per_row_repeats() {
+        let mut sk = SkewTracker::new();
+        assert!(!sk.repeated(0, 0, 3));
+        sk.begin_step(2);
+        sk.record(0, 1, 3);
+        sk.record(1, 1, 5);
+        // Current-step recordings are not visible until the next step.
+        assert!(!sk.repeated(0, 1, 3));
+        sk.begin_step(2);
+        assert!(sk.repeated(0, 1, 3));
+        assert!(sk.repeated(1, 1, 5));
+        assert!(!sk.repeated(0, 1, 5), "row attribution must not leak across rows");
+        assert!(!sk.repeated(0, 0, 3), "layer attribution must not leak across layers");
+        // Inactive (non-decode pass): neither records nor matches.
+        sk.set_inactive();
+        sk.record(0, 1, 7);
+        sk.begin_step(2);
+        assert!(!sk.repeated(0, 1, 7));
+    }
+
+    #[test]
+    fn slo_estimator_warms_up_then_clamps() {
+        let prior = 250_000.0; // 250 ms in µs
+        let mut e = SloEstimator::new(prior);
+        assert_eq!(e.ttft_budget_us(), prior, "prior stands before any sample");
+        e.observe(10_000.0, 500.0);
+        e.observe(10_000.0, 500.0);
+        assert_eq!(e.ttft_budget_us(), prior, "prior stands below SLO_MIN_SAMPLES");
+        e.observe(10_000.0, 500.0);
+        // Learned 2*10ms = 20ms, clamped up to prior/4 = 62.5ms.
+        assert_eq!(e.ttft_budget_us(), 0.25 * prior);
+        let mut slow = SloEstimator::new(prior);
+        for _ in 0..SLO_MIN_SAMPLES {
+            slow.observe(10_000_000.0, 500.0);
+        }
+        assert_eq!(slow.ttft_budget_us(), 4.0 * prior, "clamped above 4x prior");
+        let mut mid = SloEstimator::new(prior);
+        for _ in 0..SLO_MIN_SAMPLES {
+            mid.observe(200_000.0, 500.0);
+        }
+        assert_eq!(mid.ttft_budget_us(), SLO_MARGIN * 200_000.0);
+        assert!(mid.itl_est_us() > 0.0);
+    }
+}

@@ -99,13 +99,14 @@ impl Engine {
         let policy = make_policy(&serving, &runner.cfg);
         // serving.threads sizes the parallel expert executor AND selects
         // the multi-core latency calibration Algorithm 1 decides against.
-        let mut cx = ExecContext::with_threads(
+        let mut cx = ExecContext::with_threads_opts(
             policy,
             hw,
             &runner.cfg,
             &profile,
             serving.seed,
             serving.threads,
+            serving.pin_workers,
         );
         // serving.pipeline_lookahead opens the pipelined layer executor's
         // cross-layer prefetch window (0 = serial legacy loop): transition
@@ -117,6 +118,18 @@ impl Engine {
                 runner.cfg.top_k.max(2),
                 Some(load_transitions(&runner.cfg)),
             ));
+            // --adaptive arms loops 1+3 (per-phase lookahead learning and
+            // routing-skew override pricing) inside the pipeline.
+            if serving.adaptive {
+                cx.pipeline.enable_adaptive();
+            }
+        }
+        // --adaptive arms loop 2 regardless of lookahead: a landed
+        // prefetch is protected for a few transfer times so the copy
+        // survives until its predicted-use layer.
+        if serving.adaptive {
+            let window = 4.0 * cx.lat.transfer_lat();
+            cx.memory.set_landing_protection(window);
         }
         let rng = Rng::new(serving.seed ^ 0xC0FFEE);
         Ok(Engine { runner, cx, serving, rng })

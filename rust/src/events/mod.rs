@@ -67,6 +67,12 @@ pub enum TraceEvent {
         quant_bits: usize,
         error_budget: f64,
         cache_partition: String,
+        /// Adaptive control plane (PR10): when true the run closed its
+        /// feedback loops (lookahead controller, landing protection,
+        /// skew pricing, SLO feedback) — replay must arm the same loops
+        /// to reproduce the schedule.  Defaults to off so earlier logs
+        /// replay unchanged.
+        adaptive: bool,
     },
     /// A request reached the scheduler (its full prompt is recorded —
     /// this is what makes a log a replayable trace).
@@ -192,6 +198,21 @@ pub enum TraceEvent {
     /// The layer's CPU work joined; `stolen` chunks ran inline on the
     /// engine thread (work stealing) during the wait.
     ExecJoin { t_us: f64, layer: usize, stolen: u64 },
+    /// Adaptive loop 1 committed a lookahead move for one pass kind
+    /// (`pass` ∈ prefill / chunk / decode): the window that closed scored
+    /// `reward` and the kind's effective lookahead is now `lookahead`
+    /// (`adjustments` = running move count for the kind).
+    ControllerAdjusted {
+        t_us: f64,
+        pass: String,
+        lookahead: usize,
+        reward: f64,
+        adjustments: u64,
+    },
+    /// Adaptive loop 4 absorbed one retired request's measured TTFT and
+    /// mean ITL into the admission estimator (`samples` = total retired
+    /// observations so far).
+    SloEstimateUpdated { t_us: f64, ttft_ms: f64, itl_ms: f64, samples: u64 },
     /// Writer-thread marker: `count` events were dropped on queue
     /// overflow (the log is truncated, not silently complete).
     SinkDropped { count: u64 },
@@ -234,6 +255,8 @@ impl TraceEvent {
             TraceEvent::PrefetchCancelled { .. } => "prefetch_cancelled",
             TraceEvent::ExecDispatch { .. } => "exec_dispatch",
             TraceEvent::ExecJoin { .. } => "exec_join",
+            TraceEvent::ControllerAdjusted { .. } => "controller_adjusted",
+            TraceEvent::SloEstimateUpdated { .. } => "slo_estimate_updated",
             TraceEvent::SinkDropped { .. } => "sink_dropped",
             TraceEvent::Unknown { .. } => "unknown",
         }
@@ -265,6 +288,7 @@ impl TraceEvent {
                 quant_bits,
                 error_budget,
                 cache_partition,
+                adaptive,
             } => {
                 o.set("seed", Json::Num(*seed as f64));
                 o.set("temperature", Json::Num(*temperature));
@@ -286,6 +310,7 @@ impl TraceEvent {
                 o.set("quant_bits", Json::from(*quant_bits));
                 o.set("error_budget", Json::Num(*error_budget));
                 o.set("cache_partition", Json::from(cache_partition.as_str()));
+                o.set("adaptive", Json::from(*adaptive));
             }
             TraceEvent::RequestArrived { req, t_us, prompt, max_new, width, slo_us, deadline_us } => {
                 o.set("req", Json::Num(*req as f64));
@@ -481,6 +506,19 @@ impl TraceEvent {
                 o.set("layer", Json::from(*layer));
                 o.set("stolen", Json::Num(*stolen as f64));
             }
+            TraceEvent::ControllerAdjusted { t_us, pass, lookahead, reward, adjustments } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("pass", Json::from(pass.as_str()));
+                o.set("lookahead", Json::from(*lookahead));
+                o.set("reward", Json::Num(*reward));
+                o.set("adjustments", Json::Num(*adjustments as f64));
+            }
+            TraceEvent::SloEstimateUpdated { t_us, ttft_ms, itl_ms, samples } => {
+                o.set("t_us", Json::Num(*t_us));
+                o.set("ttft_ms", Json::Num(*ttft_ms));
+                o.set("itl_ms", Json::Num(*itl_ms));
+                o.set("samples", Json::Num(*samples as f64));
+            }
             TraceEvent::SinkDropped { count } => {
                 o.set("count", Json::Num(*count as f64));
             }
@@ -524,6 +562,7 @@ impl TraceEvent {
                 quant_bits: ju(v, "quant_bits", 8),
                 error_budget: jf(v, "error_budget", 0.0),
                 cache_partition: js(v, "cache_partition"),
+                adaptive: jb(v, "adaptive", false),
             },
             "request_arrived" => TraceEvent::RequestArrived {
                 req: j64(v, "req", 0),
@@ -707,6 +746,19 @@ impl TraceEvent {
                 layer: ju(v, "layer", 0),
                 stolen: j64(v, "stolen", 0),
             },
+            "controller_adjusted" => TraceEvent::ControllerAdjusted {
+                t_us: jf(v, "t_us", 0.0),
+                pass: js(v, "pass"),
+                lookahead: ju(v, "lookahead", 0),
+                reward: jf(v, "reward", 0.0),
+                adjustments: j64(v, "adjustments", 0),
+            },
+            "slo_estimate_updated" => TraceEvent::SloEstimateUpdated {
+                t_us: jf(v, "t_us", 0.0),
+                ttft_ms: jf(v, "ttft_ms", 0.0),
+                itl_ms: jf(v, "itl_ms", 0.0),
+                samples: j64(v, "samples", 0),
+            },
             "sink_dropped" => TraceEvent::SinkDropped { count: j64(v, "count", 0) },
             _ => TraceEvent::Unknown { kind },
         }
@@ -744,6 +796,7 @@ impl TraceEvent {
                 quant_bits: 4,
                 error_budget: 0.02,
                 cache_partition: "layer".into(),
+                adaptive: true,
             },
             TraceEvent::RequestArrived {
                 req: 1,
@@ -842,6 +895,19 @@ impl TraceEvent {
                 gpu_experts: 6,
             },
             TraceEvent::ExecJoin { t_us: 2_900.0, layer: 3, stolen: 2 },
+            TraceEvent::ControllerAdjusted {
+                t_us: 4_100.0,
+                pass: "decode".into(),
+                lookahead: 2,
+                reward: 9.0,
+                adjustments: 3,
+            },
+            TraceEvent::SloEstimateUpdated {
+                t_us: 9_000.0,
+                ttft_ms: 1.8,
+                itl_ms: 0.4,
+                samples: 5,
+            },
             TraceEvent::SinkDropped { count: 17 },
             TraceEvent::Unknown { kind: "from_the_future".into() },
         ]

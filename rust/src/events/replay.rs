@@ -198,6 +198,7 @@ impl RecordedTrace {
             quant_bits,
             error_budget,
             cache_partition,
+            adaptive,
         }) = &self.meta
         else {
             anyhow::bail!("trace has no meta line; cannot reconstruct the serving config");
@@ -232,6 +233,8 @@ impl RecordedTrace {
             // Legacy traces predate the field and record "".
             cache_partition: CachePartition::by_name(cache_partition)
                 .with_context(|| format!("meta cache_partition {cache_partition:?}"))?,
+            // Legacy traces decode false: replay stays static, like the run.
+            adaptive: *adaptive,
             // A replay never overwrites the source trace.
             events_out: None,
             ..ServingConfig::default()
@@ -477,6 +480,15 @@ pub fn apply_config_overrides(cfg: &mut ServingConfig, spec: &str) -> Result<()>
             }
             "error-budget" => cfg.error_budget = parse_f64(val)?.max(0.0),
             "cache-partition" => cfg.cache_partition = CachePartition::by_name(val)?,
+            "adaptive" => {
+                cfg.adaptive = match val {
+                    "on" => true,
+                    "off" => false,
+                    other => anyhow::bail!(
+                        "--config-override: adaptive must be on or off, got {other:?}"
+                    ),
+                }
+            }
             _ => anyhow::bail!("--config-override: unknown key {key:?}"),
         }
     }
@@ -634,6 +646,7 @@ mod tests {
             quant_bits: 8,
             error_budget: 0.0,
             cache_partition: String::new(),
+            adaptive: false,
         }
     }
 
@@ -809,6 +822,19 @@ mod tests {
         let Some(TraceEvent::Meta { shard_plan, .. }) = &mut t.meta else { unreachable!() };
         *shard_plan = String::new();
         assert_eq!(t.serving_config().unwrap().shard_plan, ShardPlan::Auto);
+    }
+
+    #[test]
+    fn meta_roundtrips_adaptive_flag() {
+        let mut t = fold_trace(&[meta()]);
+        assert!(!t.serving_config().unwrap().adaptive, "legacy traces replay static");
+        let Some(TraceEvent::Meta { adaptive, .. }) = &mut t.meta else { unreachable!() };
+        *adaptive = true;
+        assert!(t.serving_config().unwrap().adaptive);
+        let mut cfg = ServingConfig::default();
+        apply_config_overrides(&mut cfg, "adaptive=on").unwrap();
+        assert!(cfg.adaptive);
+        assert!(apply_config_overrides(&mut cfg, "adaptive=2").is_err());
     }
 
     #[test]

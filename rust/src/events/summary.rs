@@ -40,6 +40,9 @@ pub struct RequestSummary {
     pub fail_reason: String,
     /// Times this request was preempted and requeued.
     pub preemptions: usize,
+    /// Adaptive-controller adjustments landing inside this request's
+    /// active window (0 on static runs).
+    pub ctl_adjustments: usize,
 }
 
 impl RequestSummary {
@@ -150,6 +153,9 @@ pub fn summarize(events: &[TraceEvent]) -> Vec<RequestSummary> {
             TraceEvent::PrefetchOverlapped { .. } => {
                 charge(&mut reqs, &active, &|r| r.overlapped += 1);
             }
+            TraceEvent::ControllerAdjusted { .. } => {
+                charge(&mut reqs, &active, &|r| r.ctl_adjustments += 1);
+            }
             _ => {}
         }
     }
@@ -167,7 +173,7 @@ pub fn summarize(events: &[TraceEvent]) -> Vec<RequestSummary> {
 pub fn render(summaries: &[RequestSummary]) -> String {
     let mut out = String::new();
     out.push_str(&format!(
-        "{:>4} {:>6} {:>3} {:>9} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5} {:>4} {:<13}\n",
+        "{:>4} {:>6} {:>3} {:>9} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5} {:>4} {:>4} {:<13}\n",
         "req",
         "prompt",
         "w",
@@ -182,20 +188,21 @@ pub fn render(summaries: &[RequestSummary]) -> String {
         "pfhit",
         "ovl",
         "pre",
+        "ctl",
         "outcome",
     ));
     for r in summaries {
         if r.failed {
             let reason = if r.fail_reason.is_empty() { "FAILED" } else { r.fail_reason.as_str() };
             out.push_str(&format!(
-                "{:>4} {:>6} {:>3} {:>9.1} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5} {:>4} {:<13}\n",
+                "{:>4} {:>6} {:>3} {:>9.1} {:>9} {:>7} {:>9} {:>9} {:>9} {:>6} {:>6} {:>5} {:>5} {:>4} {:>4} {:<13}\n",
                 r.req, r.prompt_tokens, r.width, r.queue_us / 1e3,
-                "-", "-", "-", "-", "-", "-", "-", "-", "-", r.preemptions, reason,
+                "-", "-", "-", "-", "-", "-", "-", "-", "-", r.preemptions, r.ctl_adjustments, reason,
             ));
             continue;
         }
         out.push_str(&format!(
-            "{:>4} {:>6} {:>3} {:>9.1} {:>9.1} {:>7} {:>9.1} {:>9.1} {:>9.1} {:>6} {:>6} {:>5} {:>5} {:>4} {:<13}\n",
+            "{:>4} {:>6} {:>3} {:>9.1} {:>9.1} {:>7} {:>9.1} {:>9.1} {:>9.1} {:>6} {:>6} {:>5} {:>5} {:>4} {:>4} {:<13}\n",
             r.req,
             r.prompt_tokens,
             r.width,
@@ -210,6 +217,7 @@ pub fn render(summaries: &[RequestSummary]) -> String {
             r.prefetch_hits,
             r.overlapped,
             r.preemptions,
+            r.ctl_adjustments,
             "ok",
         ));
     }
@@ -242,6 +250,40 @@ pub fn render(summaries: &[RequestSummary]) -> String {
         reason_str,
     ));
     out
+}
+
+/// One-line adaptive-control footer for `trace-summary`: final effective
+/// lookahead and adjustment count per pass kind, plus the last learned
+/// SLO estimate. Empty string when the trace carries no controller or
+/// estimator events (static runs print nothing extra).
+pub fn control_footer(events: &[TraceEvent]) -> String {
+    // Last ControllerAdjusted per pass kind wins: it carries the final
+    // effective lookahead and the cumulative adjustment count.
+    let mut per_pass: std::collections::BTreeMap<&str, (usize, u64)> =
+        std::collections::BTreeMap::new();
+    let mut slo: Option<(f64, f64, u64)> = None;
+    for ev in events {
+        match ev {
+            TraceEvent::ControllerAdjusted { pass, lookahead, adjustments, .. } => {
+                per_pass.insert(pass.as_str(), (*lookahead, *adjustments));
+            }
+            TraceEvent::SloEstimateUpdated { ttft_ms, itl_ms, samples, .. } => {
+                slo = Some((*ttft_ms, *itl_ms, *samples));
+            }
+            _ => {}
+        }
+    }
+    if per_pass.is_empty() && slo.is_none() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = per_pass
+        .iter()
+        .map(|(pass, (la, adj))| format!("{pass} lookahead={la} (adjusted {adj}x)"))
+        .collect();
+    if let Some((ttft, itl, n)) = slo {
+        parts.push(format!("slo est ttft {ttft:.1} ms / itl {itl:.2} ms ({n} samples)"));
+    }
+    format!("adaptive: {}\n", parts.join(" | "))
 }
 
 #[cfg(test)]
@@ -341,6 +383,38 @@ mod tests {
         assert!(table.contains("queue_full"), "{table}");
         assert!(table.contains("cancelled"), "{table}");
         assert!(table.contains("failures: cancelled=1 queue_full=1"), "{table}");
+    }
+
+    #[test]
+    fn controller_events_charge_the_ctl_column_and_footer() {
+        let events = vec![
+            arrived(0, 0.0),
+            TraceEvent::RequestAdmitted { req: 0, t_us: 10.0, kv_reserved: 0, queue_delay_us: 10.0 },
+            TraceEvent::ControllerAdjusted {
+                t_us: 20.0,
+                pass: "decode".into(),
+                lookahead: 3,
+                reward: 5.0,
+                adjustments: 1,
+            },
+            TraceEvent::ControllerAdjusted {
+                t_us: 30.0,
+                pass: "decode".into(),
+                lookahead: 2,
+                reward: 7.0,
+                adjustments: 2,
+            },
+            TraceEvent::RequestFinished { req: 0, t_us: 40.0, tokens: 1, ttft_us: 30.0, queue_delay_us: 10.0 },
+            TraceEvent::SloEstimateUpdated { t_us: 40.0, ttft_ms: 1.5, itl_ms: 0.25, samples: 1 },
+        ];
+        let s = summarize(&events);
+        assert_eq!(s[0].ctl_adjustments, 2);
+        assert!(render(&s).contains("ctl"));
+        let footer = control_footer(&events);
+        assert!(footer.contains("decode lookahead=2 (adjusted 2x)"), "{footer}");
+        assert!(footer.contains("slo est ttft 1.5 ms"), "{footer}");
+        // Static traces stay silent.
+        assert_eq!(control_footer(&events[..2]), "");
     }
 
     #[test]

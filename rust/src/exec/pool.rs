@@ -48,6 +48,16 @@ impl ExecutorPool {
     /// Build a pool with `threads` CPU workers (clamped to >= 1).
     /// `threads == 1` means inline/serial execution — no threads spawned.
     pub fn new(threads: usize) -> ExecutorPool {
+        Self::with_affinity(threads, false)
+    }
+
+    /// [`ExecutorPool::new`], optionally pinning worker `i` to CPU core
+    /// `i` (`--pin-workers`).  Pinning is best-effort: on platforms
+    /// without `sched_setaffinity` — or when the call fails (cgroup cpuset
+    /// restrictions, fewer cores than workers) — the worker simply runs
+    /// unpinned.  Affinity never changes job results or their (submission)
+    /// order, only wall-clock dispatch jitter from OS migrations.
+    pub fn with_affinity(threads: usize, pin_workers: bool) -> ExecutorPool {
         let threads = threads.max(1);
         let shared = Arc::new(Shared {
             queue: Mutex::new(VecDeque::new()),
@@ -62,7 +72,13 @@ impl ExecutorPool {
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("fiddler-exec-{i}"))
-                        .spawn(move || worker_loop(sh))
+                        .spawn(move || {
+                            if pin_workers {
+                                // Failure is fine: run unpinned.
+                                let _ = pin_current_thread(i);
+                            }
+                            worker_loop(sh)
+                        })
                         .expect("spawn executor worker"),
                 );
             }
@@ -135,6 +151,46 @@ impl ExecutorPool {
         }
         PendingBatch { rx, expected }
     }
+}
+
+/// Pin the calling thread to `core % available_cores` (best effort).
+///
+/// Raw `sched_setaffinity` syscall — the crate is std-only, so no libc.
+/// Returns `Err(())` where unsupported or when the kernel rejects the
+/// mask; callers treat that as "run unpinned".
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+fn pin_current_thread(core: usize) -> Result<(), ()> {
+    let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let core = core % n.max(1);
+    // cpu_set_t as a 1024-bit mask (16 x u64), one bit set.
+    let mut mask = [0u64; 16];
+    if core >= 1024 {
+        return Err(());
+    }
+    mask[core / 64] = 1u64 << (core % 64);
+    let ret: i64;
+    unsafe {
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") 203i64 => ret, // __NR_sched_setaffinity
+            in("rdi") 0i64,                 // pid 0 = calling thread
+            in("rsi") std::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+    }
+    if ret == 0 {
+        Ok(())
+    } else {
+        Err(())
+    }
+}
+
+#[cfg(not(all(target_os = "linux", target_arch = "x86_64")))]
+fn pin_current_thread(_core: usize) -> Result<(), ()> {
+    Err(())
 }
 
 fn worker_loop(shared: Arc<Shared>) {
@@ -353,6 +409,20 @@ mod tests {
         release.wait();
         assert_eq!(blocked.wait(), vec![0, 0]);
         assert_eq!(stealable.wait(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn pinned_pool_matches_unpinned_results() {
+        // Affinity is a placement hint only: same jobs, same ordered
+        // results, pinned or not (and pinning must not panic on hosts
+        // where sched_setaffinity is unavailable or restricted).
+        let plain = ExecutorPool::new(3);
+        let pinned = ExecutorPool::with_affinity(3, true);
+        let mk = || (0..32usize).map(|i| move || i * 7).collect::<Vec<_>>();
+        assert_eq!(plain.submit(mk()).wait(), pinned.submit(mk()).wait());
+        assert_eq!(pinned.threads(), 3);
+        // Inline pools accept the flag and stay inline.
+        assert!(ExecutorPool::with_affinity(1, true).is_inline());
     }
 
     #[test]

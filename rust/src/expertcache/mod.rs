@@ -200,6 +200,12 @@ pub struct ExpertCache {
     /// the current virtual time set it per step
     /// ([`ExpertCache::set_time_hint`]).
     time_hint_us: f64,
+    /// Prefetch landing protection (loop 2 of the adaptive control plane,
+    /// 0.0 = off): a speculatively inserted entry whose transfer completed
+    /// less than this many virtual µs ago — or is still in flight — is
+    /// evicted only when no unprotected victim exists, so a just-paid-for
+    /// PCIe copy survives until its predicted-use layer arrives.
+    landing_protect_us: f64,
 }
 
 impl std::fmt::Debug for ExpertCache {
@@ -239,6 +245,7 @@ impl ExpertCache {
             stats: CacheStats::default(),
             sink: crate::events::EventSink::default(),
             time_hint_us: 0.0,
+            landing_protect_us: 0.0,
         }
     }
 
@@ -251,6 +258,12 @@ impl ExpertCache {
     /// the field docs.
     pub fn set_time_hint(&mut self, now_us: f64) {
         self.time_hint_us = now_us;
+    }
+
+    /// Arm prefetch landing protection (see the field docs); 0.0 disables
+    /// it, restoring the unprotected victim order bit-for-bit.
+    pub fn set_landing_protection(&mut self, window_us: f64) {
+        self.landing_protect_us = window_us.max(0.0);
     }
 
     /// Swap the eviction policy (exec policies install theirs during
@@ -805,12 +818,25 @@ impl ExpertCache {
     /// quota path); ties are broken by id so eviction is deterministic
     /// regardless of hash order.
     fn choose_victim_in(&self, layer: Option<usize>) -> Option<ExpertId> {
+        // Landing protection: a prefetched copy still inside its landing
+        // window outbids every unprotected entry (finite bonus, so a
+        // fully protected cache still yields a deterministic victim).
+        let score = |id: ExpertId, e: &Entry| -> f64 {
+            let mut s = self.policy.retention_score(id, e.last_use);
+            if self.landing_protect_us > 0.0
+                && e.prefetched
+                && self.time_hint_us < e.ready_us + self.landing_protect_us
+            {
+                s += 1e15;
+            }
+            s
+        };
         self.entries
             .iter()
             .filter(|(id, e)| !e.pinned && layer.map(|l| id.0 == l).unwrap_or(true))
             .min_by(|(a, ea), (b, eb)| {
-                let sa = self.policy.retention_score(**a, ea.last_use);
-                let sb = self.policy.retention_score(**b, eb.last_use);
+                let sa = score(**a, ea);
+                let sb = score(**b, eb);
                 sa.partial_cmp(&sb).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(b))
             })
             .map(|(&id, _)| id)
@@ -861,6 +887,32 @@ mod tests {
         assert!(!m.is_resident((0, 1)));
         assert!(m.is_resident((0, 2)));
         assert_eq!(m.stats().evictions, 1);
+    }
+
+    #[test]
+    fn landing_protection_spares_a_fresh_prefetch() {
+        // Unprotected baseline: the speculative copy is the LRU victim.
+        let mut u = ExpertCache::with_capacity(2);
+        u.prefetch((0, 9), 0.0, 50.0);
+        u.fetch((0, 1));
+        u.fetch((0, 2));
+        assert!(!u.is_resident((0, 9)));
+
+        // Protected: the just-landed copy outbids the older-by-recency
+        // demand entry until its landing window expires.
+        let mut m = ExpertCache::with_capacity(2);
+        m.set_landing_protection(1_000.0);
+        m.set_time_hint(0.0);
+        m.prefetch((0, 9), 0.0, 50.0); // lands at 50, protected to 1050
+        m.fetch((0, 1));
+        m.fetch((0, 2)); // victim is (0,1), not the protected prefetch
+        assert!(m.is_resident((0, 9)));
+        assert!(!m.is_resident((0, 1)));
+
+        // Window elapsed: protection lapses and plain LRU resumes.
+        m.set_time_hint(5_000.0);
+        m.fetch((0, 3));
+        assert!(!m.is_resident((0, 9)));
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod testkit;
 pub mod util;
 
 pub mod baselines;
+pub mod control;
 pub mod coordinator;
 pub mod events;
 pub mod exec;

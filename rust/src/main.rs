@@ -131,7 +131,15 @@ fn print_help() {
          PIPELINE: --pipeline-lookahead W   cross-layer expert prefetch\n\
                    window of the pipelined layer executor (0 = serial\n\
                    legacy loop); FIDDLER_MEASURED_CALIB=1 calibrates the\n\
-                   multicore CPU curve by measuring the executor pool"
+                   multicore CPU curve by measuring the executor pool\n\
+         ADAPTIVE: --adaptive on|off   close the feedback loops online:\n\
+                   per-phase lookahead hill-climbing, prefetch landing\n\
+                   protection in eviction, per-row routing-skew override\n\
+                   pricing, and learned SLO admission estimates (off =\n\
+                   default, bit-identical static pipeline); decisions are\n\
+                   virtual-time-only and recorded as trace events\n\
+                   --pin-workers on|off best-effort core affinity for the\n\
+                   executor pool's CPU workers (wall-clock jitter only)"
     );
 }
 
@@ -492,6 +500,7 @@ fn cmd_trace_summary(args: &Args) -> Result<()> {
     let events = fiddler::events::replay::read_log(path)?;
     let summaries = fiddler::events::summary::summarize(&events);
     print!("{}", fiddler::events::summary::render(&summaries));
+    print!("{}", fiddler::events::summary::control_footer(&events));
     Ok(())
 }
 

@@ -143,12 +143,30 @@ impl ExecContext {
     /// timing the host expert kernel through real executor pools
     /// ([`crate::latency::calib::calibrate_multicore_measured`]).
     pub fn with_threads(
+        policy: Box<dyn ExecPolicy>,
+        hw: &HardwareConfig,
+        cfg: &ModelConfig,
+        profile: &Profile,
+        seed: u64,
+        threads: usize,
+    ) -> ExecContext {
+        Self::with_threads_opts(policy, hw, cfg, profile, seed, threads, false)
+    }
+
+    /// [`ExecContext::with_threads`] plus worker placement: `pin_workers`
+    /// requests best-effort core affinity on the executor pool's threads
+    /// (`--pin-workers`; a no-op on platforms without `sched_setaffinity`).
+    /// Pinning never changes planning or virtual time — only wall-clock
+    /// dispatch jitter.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_threads_opts(
         mut policy: Box<dyn ExecPolicy>,
         hw: &HardwareConfig,
         cfg: &ModelConfig,
         profile: &Profile,
         seed: u64,
         threads: usize,
+        pin_workers: bool,
     ) -> ExecContext {
         let threads = threads.max(1);
         let lat_threads =
@@ -179,7 +197,7 @@ impl ExecContext {
             online_profile: Profile::new(cfg.n_layers, cfg.n_experts),
             events: ExpertEvents::default(),
             threads,
-            pool: crate::exec::ExecutorPool::new(threads),
+            pool: crate::exec::ExecutorPool::with_affinity(threads, pin_workers),
             pipeline: PipelineState::disabled(),
             sink: crate::events::EventSink::default(),
         }

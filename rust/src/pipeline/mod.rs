@@ -52,12 +52,19 @@
 //! the same caveat PR 2 documents for `--threads`.
 
 use crate::config::model::TOKEN_BUCKETS;
+use crate::control::{LookaheadController, SeededEwma, SkewTracker};
 use crate::moe::{ExecContext, ModelRunner};
 use crate::prefetch::TransitionProfile;
 use crate::runtime::Tensor;
 use crate::scheduler::ExpertPlan;
 use crate::util::round_up_bucket;
 use anyhow::Result;
+
+/// Per-kind layer-gap EWMA weights: the old estimate keeps `GAP_DECAY`,
+/// each new sample contributes `GAP_ALPHA`.  Both are explicit literals
+/// so the update is bit-identical to the historical `0.7*e + 0.3*g`.
+const GAP_DECAY: f64 = 0.7;
+const GAP_ALPHA: f64 = 0.3;
 
 /// Which generation path is driving the pipeline — selects the layer-ahead
 /// expert predictor.
@@ -84,10 +91,12 @@ impl ForwardKind {
 
 /// Per-context pipeline state: the lookahead window, the cross-layer
 /// predictor, and the routing observed on the previous forward pass.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct PipelineState {
     /// Layer-ahead prefetch window; 0 = serial legacy behavior (no
     /// prefetch, no overrides — the pre-pipeline engine, bit-for-bit).
+    /// Under `--adaptive on` this is the *effective* window, rewritten at
+    /// every pass start from the per-kind controller.
     pub lookahead: usize,
     /// Experts prefetched per looked-ahead layer.
     pub depth: usize,
@@ -100,12 +109,15 @@ pub struct PipelineState {
     recording: bool,
     /// Index of the current pass kind into the per-kind gap EWMAs.
     kind_idx: usize,
-    /// EWMA of consecutive layer-start gaps per pass kind (µs; 0 = no
-    /// sample yet) — the lead-time estimate behind the issuance gate: a
-    /// prefetch for layer `L+d` has roughly `d * gap` of compute to hide
-    /// under.  Kept per kind because decode layers run ~ms while chunked
-    /// prefill layers run tens of ms.
-    gap_ewma: [f64; 3],
+    /// EWMA of consecutive layer-start gaps per pass kind (µs) — the
+    /// lead-time estimate behind the issuance gate: a prefetch for layer
+    /// `L+d` has roughly `d * gap` of compute to hide under.  Kept per
+    /// kind because decode layers run ~ms while chunked prefill layers
+    /// run tens of ms.  Seeded EWMAs: the first sample stands alone
+    /// instead of blending with an implicit 0 (which would underestimate
+    /// lead for the whole first window and suppress early profitable
+    /// prefetches).
+    gap_ewma: [SeededEwma; 3],
     /// Start time of the previous layer in this pass (reset per pass so
     /// inter-pass gaps — lm_head, sampling, scheduling — never pollute
     /// the estimate).
@@ -124,6 +136,32 @@ pub struct PipelineState {
     /// in-place as the current chunk advances, so a lookahead read at
     /// layer `L+d` still sees the *previous* chunk's routing there.
     chunk_routing: Vec<Option<Vec<usize>>>,
+    /// Loop 1 of the adaptive control plane (`--adaptive on`): the
+    /// per-pass-kind lookahead controller.  `None` = static pipeline,
+    /// bit-identical to the pre-control-plane engine.
+    controller: Option<LookaheadController>,
+    /// Loop 3: per-batch-row routing history for skew-aware override
+    /// pricing on batched decode.  `None` when not adaptive.
+    skew: Option<SkewTracker>,
+}
+
+impl Default for PipelineState {
+    fn default() -> PipelineState {
+        PipelineState {
+            lookahead: 0,
+            depth: 0,
+            transitions: None,
+            continuation: false,
+            recording: false,
+            kind_idx: 0,
+            gap_ewma: [SeededEwma::with_weights(GAP_DECAY, GAP_ALPHA); 3],
+            last_layer_start: None,
+            released: 0,
+            chunk_routing: Vec::new(),
+            controller: None,
+            skew: None,
+        }
+    }
 }
 
 impl PipelineState {
@@ -142,14 +180,25 @@ impl PipelineState {
             lookahead,
             depth: depth.max(1),
             transitions,
-            continuation: false,
-            recording: false,
-            kind_idx: 0,
-            gap_ewma: [0.0; 3],
-            last_layer_start: None,
-            released: 0,
-            chunk_routing: Vec::new(),
+            ..PipelineState::default()
         }
+    }
+
+    /// Arm the adaptive pipeline loops (1 and 3): the per-kind lookahead
+    /// controller and the batched-decode skew tracker.  No-op when the
+    /// pipeline is disabled — adaptivity never conjures a pipeline the
+    /// static config turned off.
+    pub fn enable_adaptive(&mut self) {
+        if self.lookahead == 0 {
+            return;
+        }
+        self.controller = Some(LookaheadController::new(self.lookahead));
+        self.skew = Some(SkewTracker::new());
+    }
+
+    /// Loop-1 controller, when adaptive (inspection for tests/summary).
+    pub fn controller(&self) -> Option<&LookaheadController> {
+        self.controller.as_ref()
     }
 
     /// Start a forward pass: select this pass's predictor and whether it
@@ -174,9 +223,7 @@ impl PipelineState {
     fn observe_layer_start(&mut self, t0: f64) {
         if let Some(prev) = self.last_layer_start {
             if t0 > prev {
-                let g = t0 - prev;
-                let e = &mut self.gap_ewma[self.kind_idx];
-                *e = if *e == 0.0 { g } else { 0.7 * *e + 0.3 * g };
+                self.gap_ewma[self.kind_idx].observe(t0 - prev);
             }
         }
         self.last_layer_start = Some(t0);
@@ -185,7 +232,22 @@ impl PipelineState {
     /// Expected gap between consecutive layer starts for the current pass
     /// kind; 0.0 until the first pass of this kind has produced a sample.
     fn expected_layer_gap(&self) -> f64 {
-        self.gap_ewma[self.kind_idx]
+        self.gap_ewma[self.kind_idx].value_or(0.0)
+    }
+
+    /// Largest gap estimate across ALL pass kinds — the adaptive cold-start
+    /// fallback: a kind's very first pass has no own-kind sample, and
+    /// skipping the whole window there forfeits exactly the early
+    /// prefetches the seeded EWMA exists to enable.  Borrowing the largest
+    /// cross-kind estimate is optimistic (prefill gaps are longer than
+    /// decode's, so the gate sees more lead than reality and issues), but
+    /// only for the first pass of a kind — and wasted issues show up in
+    /// the very reward signal the controller corrects from.
+    fn max_layer_gap_estimate(&self) -> f64 {
+        self.gap_ewma
+            .iter()
+            .filter_map(|e| e.get())
+            .fold(0.0, f64::max)
     }
 
     fn record_routing(&mut self, layer: usize, inp_size: &[usize]) {
@@ -250,12 +312,70 @@ pub fn run_layers(
     kind: ForwardKind,
     attn: &mut dyn FnMut(usize, &Tensor, &mut ExecContext) -> Result<Tensor>,
 ) -> Result<Tensor> {
+    let snap = adaptive_pre_pass(cx, kind, valid);
     cx.pipeline.begin_pass(runner.cfg.n_layers, kind);
     for layer in 0..runner.cfg.n_layers {
         x = attn(layer, &x, cx)?;
         runner.moe_layer(layer, &mut x, valid, cx)?;
     }
+    adaptive_post_pass(cx, kind, snap);
     Ok(x)
+}
+
+/// Adaptive pre-pass hooks (loops 1 + 3): install this kind's learned
+/// lookahead as the effective window and open the skew tracker's decode
+/// step.  Returns the counter snapshot the post-pass reward is measured
+/// against; `None` when not adaptive (the entire static path).
+fn adaptive_pre_pass(
+    cx: &mut ExecContext,
+    kind: ForwardKind,
+    valid: usize,
+) -> Option<(u64, u64, u64)> {
+    if let Some(sk) = cx.pipeline.skew.as_mut() {
+        if kind == ForwardKind::Decode {
+            sk.begin_step(valid);
+        } else {
+            sk.set_inactive();
+        }
+    }
+    let eff = cx
+        .pipeline
+        .controller
+        .as_ref()
+        .map(|c| c.lookahead(kind.idx()))?;
+    cx.pipeline.lookahead = eff;
+    let st = cx.memory.stats();
+    Some((cx.events.prefetch_overlapped, st.prefetches, st.prefetch_hits))
+}
+
+/// Adaptive post-pass hook (loop 1): feed this pass's counter deltas to
+/// the controller and emit `controller_adjusted` when a reward window
+/// closes with a move.
+fn adaptive_post_pass(cx: &mut ExecContext, kind: ForwardKind, snap: Option<(u64, u64, u64)>) {
+    let Some((o0, p0, h0)) = snap else { return };
+    let (overlapped, issued, hits) = {
+        let st = cx.memory.stats();
+        (
+            cx.events.prefetch_overlapped.saturating_sub(o0),
+            st.prefetches.saturating_sub(p0),
+            st.prefetch_hits.saturating_sub(h0),
+        )
+    };
+    let t_us = cx.clock.now_us();
+    let adj = cx
+        .pipeline
+        .controller
+        .as_mut()
+        .and_then(|c| c.on_pass(kind.idx(), overlapped, hits, issued.saturating_sub(hits)));
+    if let Some(a) = adj {
+        cx.sink.emit_with(|| crate::events::TraceEvent::ControllerAdjusted {
+            t_us,
+            pass: crate::control::KIND_LABELS[kind.idx()].to_string(),
+            lookahead: a.lookahead,
+            reward: a.reward,
+            adjustments: a.adjustments,
+        });
+    }
 }
 
 /// The MoE stage of one layer — route → prefetch → dispatch → join — with
@@ -318,12 +438,24 @@ pub(crate) fn moe_stage(
     // the residual transfer time charged before expert j's GPU slot.
     let mut waits = vec![0.0f64; plans.len()];
     if cx.pipeline.lookahead > 0 {
+        // Loop 3 (--adaptive): log which batch row routed to which expert
+        // this decode step — next step's override pricing consults it.
+        if let Some(sk) = cx.pipeline.skew.as_mut() {
+            if sk.is_active() {
+                for (j, rows) in routing.rows_for.iter().enumerate() {
+                    for &r in rows {
+                        sk.record(r, layer, j);
+                    }
+                }
+            }
+        }
         cx.pipeline.observe_layer_start(t0);
         prefetch_window(cx, layer, &routing.inp_size, runner.cfg.n_layers, t0);
         apply_inflight_overrides(
             cx,
             layer,
             &routing.inp_size,
+            &routing.rows_for,
             &inflight,
             t0,
             &mut plans,
@@ -471,7 +603,12 @@ fn prefetch_window(
     n_layers: usize,
     now_us: f64,
 ) {
-    let gap = cx.pipeline.expected_layer_gap();
+    let mut gap = cx.pipeline.expected_layer_gap();
+    if gap <= 0.0 && cx.pipeline.controller.is_some() {
+        // Adaptive cold start: borrow the best cross-kind estimate rather
+        // than forfeiting the whole first pass of a fresh kind.
+        gap = cx.pipeline.max_layer_gap_estimate();
+    }
     if gap <= 0.0 {
         return; // no lead-time estimate yet (first layers of a fresh kind)
     }
@@ -600,6 +737,7 @@ fn apply_inflight_overrides(
     cx: &mut ExecContext,
     layer: usize,
     inp_size: &[usize],
+    rows_for: &[Vec<usize>],
     inflight: &[Option<f64>],
     t0: f64,
     plans: &mut [Option<ExpertPlan>],
@@ -620,7 +758,20 @@ fn apply_inflight_overrides(
         let wait = *ready - t0;
         let overridden =
             wait + cx.policy.expert_cost_us(ExpertPlan::GpuResident, s, &cx.lat);
-        if overridden < cx.policy.expert_cost_us(cur, s, &cx.lat) {
+        let mut kept = cx.policy.expert_cost_us(cur, s, &cx.lat);
+        // Loop 3 (--adaptive): an expert demanded by a single batch row
+        // that did not route here last step is one-off skew — bias the
+        // pricing toward riding out the in-flight copy, so the whole
+        // batch is not charged a demand admit no other row will reuse.
+        if let Some(sk) = &cx.pipeline.skew {
+            if sk.is_active()
+                && rows_for[j].len() == 1
+                && !sk.repeated(rows_for[j][0], layer, j)
+            {
+                kept *= crate::control::SKEW_OVERRIDE_BIAS;
+            }
+        }
+        if overridden < kept {
             *plan = Some(ExpertPlan::GpuResident);
             waits[j] = wait;
             if cur == ExpertPlan::GpuTransfer
@@ -754,6 +905,29 @@ mod tests {
         st.begin_pass(3, ForwardKind::Prefill);
         st.begin_pass(3, ForwardKind::ChunkContinuation);
         assert!(st.predict(0, &[1, 1, 0, 0], 1).is_empty());
+    }
+
+    #[test]
+    fn adaptive_is_not_armed_on_a_disabled_pipeline() {
+        let mut st = PipelineState::disabled();
+        st.enable_adaptive();
+        assert!(st.controller().is_none(), "lookahead 0 must stay serial");
+        let mut st = PipelineState::new(2, 2, None);
+        st.enable_adaptive();
+        assert_eq!(st.controller().unwrap().lookahead(2), 2);
+    }
+
+    #[test]
+    fn cross_kind_gap_fallback_uses_the_largest_estimate() {
+        let mut st = PipelineState::new(1, 2, None);
+        st.begin_pass(4, ForwardKind::Decode);
+        st.observe_layer_start(0.0);
+        st.observe_layer_start(100.0);
+        // A fresh kind has no own-kind sample, but the adaptive fallback
+        // can borrow decode's.
+        st.begin_pass(4, ForwardKind::ChunkContinuation);
+        assert_eq!(st.expected_layer_gap(), 0.0);
+        assert!((st.max_layer_gap_estimate() - 100.0).abs() < 1e-9);
     }
 
     #[test]

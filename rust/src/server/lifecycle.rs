@@ -271,12 +271,21 @@ pub fn serve_lifecycle<B: ServeBackend>(
         quant_bits: cfg.quant_bits as usize,
         error_budget: cfg.error_budget,
         cache_partition: cfg.cache_partition.label().to_string(),
+        adaptive: cfg.adaptive,
     });
     // Serve-loop request ids, in ingest order (Cell: the ingest closure
     // and the loop body both touch it).  Requests carrying a pre-assigned
     // id (fleet router ingest order) keep it; the counter only serves
     // locally-numbered requests.
     let next_id = std::cell::Cell::new(0u64);
+    // Loop 4 of the adaptive control plane (`--adaptive on`): learned
+    // TTFT/ITL admission estimates, updated at retire time from measured
+    // virtual-µs GenMetrics — replay reproduces the estimator exactly.
+    // RefCell: the ingest closure reads it while the retire loop writes.
+    let slo_est: std::cell::RefCell<Option<crate::control::SloEstimator>> =
+        std::cell::RefCell::new(
+            cfg.adaptive.then(|| crate::control::SloEstimator::new(cfg.slo_ttft_ms * 1e3)),
+        );
     let mut kv = KvBudget::new(cfg.kv_budget_mb);
     // Fail loudly at startup when the budget cannot EVER fit a single
     // max-length request — every long request would otherwise be
@@ -373,7 +382,14 @@ pub fn serve_lifecycle<B: ServeBackend>(
             );
             return false;
         }
-        let deadline_us = enqueue_us + r.slo_us.unwrap_or(cfg.slo_ttft_ms * 1e3);
+        // Default TTFT budget for requests carrying no explicit SLO: the
+        // static `--slo-ttft-ms` prior, or — under `--adaptive on` — the
+        // estimator's learned budget once enough requests have retired.
+        let default_budget_us = match slo_est.borrow().as_ref() {
+            Some(est) => est.ttft_budget_us(),
+            None => cfg.slo_ttft_ms * 1e3,
+        };
+        let deadline_us = enqueue_us + r.slo_us.unwrap_or(default_budget_us);
         // Ingest ack carrying the serve-loop id — the handle `Cancel`
         // needs.  Client-stream-only (not a trace event).
         let _ = r.stream.send(Event::Queued(id));
@@ -1065,6 +1081,25 @@ pub fn serve_lifecycle<B: ServeBackend>(
                 ttft_us: ttft,
                 queue_delay_us: qd,
             });
+            // Loop 4 (--adaptive): absorb this request's measured outcome
+            // into the admission estimator.
+            if let Some(est) = slo_est.borrow_mut().as_mut() {
+                let itls = g.metrics.itl_us();
+                let mean_itl = if itls.is_empty() {
+                    0.0
+                } else {
+                    itls.iter().sum::<f64>() / itls.len() as f64
+                };
+                est.observe(ttft, mean_itl);
+                let (ttft_ms, itl_ms, samples) =
+                    (est.ttft_est_us() / 1e3, est.itl_est_us() / 1e3, est.samples());
+                sink.emit_with(|| crate::events::TraceEvent::SloEstimateUpdated {
+                    t_us: t,
+                    ttft_ms,
+                    itl_ms,
+                    samples,
+                });
+            }
             kv.release(g.kv_reserved, backend.expert_cache_mut());
             let (used, borrowed) = (kv.used_bytes(), kv.borrowed_slots());
             sink.emit_with(|| crate::events::TraceEvent::KvBudget {

@@ -1,0 +1,267 @@
+//! Adaptive-control-plane contracts (PR 10).
+//!
+//! The acceptance properties:
+//!
+//! * `--adaptive off` (the default) is the static pipeline, bit for bit:
+//!   the engine matrix below re-runs the PR 5 lookahead x threads
+//!   bit-identity sweep with the flag both off and ON — controller
+//!   decisions move virtual time, never the arithmetic.
+//! * Adaptive runs record -> replay bit-identically under cancels and
+//!   injected faults: every controller/estimator decision derives from
+//!   virtual-time state the replay reproduces.
+//! * The controller converges on a stationary workload instead of
+//!   oscillating forever, and the learned-SLO estimator's updates stream
+//!   into the trace.
+//!
+//! Engine-level tests need the build-time artifacts and skip gracefully
+//! without them (like `tests/engine.rs`); everything else is
+//! artifact-free.
+
+use fiddler::config::serving::{AdmissionKind, Policy, ServingConfig};
+use fiddler::config::HardwareConfig;
+use fiddler::control::sim::{run_lookahead_sim, LookaheadMode, LookaheadSimConfig};
+use fiddler::coordinator::Engine;
+use fiddler::events::replay::{diff_replay, fold_trace, read_log, replay_trace};
+use fiddler::events::TraceEvent;
+use fiddler::figures;
+use fiddler::kvcache::SequenceCache;
+use fiddler::latency::LatencyModel;
+use fiddler::runtime::Tensor;
+use fiddler::server::sim::{run_open_loop, LoadSpec};
+use fiddler::workload::{Dataset, WorkloadGen};
+use std::path::PathBuf;
+
+fn tmp_trace(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("fiddler-control-{}-{name}.jsonl", std::process::id()))
+}
+
+// ---------------------------------------------------------------- sim level
+
+fn adaptive_serving() -> ServingConfig {
+    ServingConfig {
+        adaptive: true,
+        admission: AdmissionKind::Slo,
+        temperature: 0.8, // non-greedy: replay must also match the RNG stream
+        prefill_chunk: 16,
+        max_batch: 4,
+        kv_budget_mb: 8,
+        seed: 47,
+        ..ServingConfig::default()
+    }
+}
+
+fn churn_spec() -> LoadSpec {
+    LoadSpec {
+        n_requests: 20,
+        rate_per_s: 6.0,
+        inp: 10,
+        out: 8,
+        long_every: 5,
+        long_inp: 64,
+        cancel_every: 6,
+        cancel_after_us: 40_000.0,
+        seed: 29,
+        ..LoadSpec::default()
+    }
+}
+
+/// The flag itself must be inert when off: an explicit `adaptive: false`
+/// run is the default run, outcome for outcome.
+#[test]
+fn adaptive_off_matches_the_default_config() {
+    let spec = churn_spec();
+    let base = run_open_loop(ServingConfig::default(), &spec).unwrap();
+    let off = run_open_loop(ServingConfig { adaptive: false, ..Default::default() }, &spec).unwrap();
+    assert_eq!(base.completed, off.completed);
+    assert_eq!(base.rejected, off.rejected);
+    assert_eq!(base.output_tokens, off.output_tokens);
+    assert_eq!(base.makespan_s, off.makespan_s);
+    assert_eq!(base.agg.tps, off.agg.tps);
+    assert_eq!(base.agg.itl_us, off.agg.itl_us);
+}
+
+/// Adaptive record -> replay is bit-identical under client cancels AND
+/// injected faults: the estimator's deadline decisions replay exactly
+/// because they read only virtual-time state the trace reproduces.
+#[test]
+fn adaptive_record_replay_bit_identical_under_cancels_and_faults() {
+    let path = tmp_trace("replay");
+    let serving = ServingConfig {
+        events_out: Some(path.display().to_string()),
+        faults: Some("stall=0.08:20000,spike=0.05:5000,err=0.03".into()),
+        fault_seed: 7,
+        ..adaptive_serving()
+    };
+    let report = run_open_loop(serving, &churn_spec()).unwrap();
+    assert!(report.completed > 0);
+
+    let events = read_log(&path).unwrap();
+    // The trace must carry the adaptive meta flag and estimator updates.
+    let metas: Vec<_> = events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Meta { adaptive, .. } => Some(*adaptive),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(metas, vec![true], "meta must record the adaptive flag");
+    let slo_updates: Vec<u64> = events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::SloEstimateUpdated { samples, .. } => Some(*samples),
+            _ => None,
+        })
+        .collect();
+    assert!(!slo_updates.is_empty(), "adaptive run must stream estimator updates");
+    let mut sorted = slo_updates.clone();
+    sorted.sort_unstable();
+    assert_eq!(slo_updates, sorted, "sample counts must be monotone");
+
+    let rec = fold_trace(&events);
+    let outcomes = replay_trace(&rec).unwrap();
+    let diffs = diff_replay(&rec, &outcomes);
+    assert!(diffs.is_empty(), "adaptive replay diverged: {diffs:?}");
+    std::fs::remove_file(&path).ok();
+}
+
+/// A legacy trace (no `adaptive` key in meta) replays with the loops
+/// disarmed, and the new event kinds survive a lossless rewrite.
+#[test]
+fn new_event_kinds_round_trip_and_default_off() {
+    for ev in TraceEvent::examples() {
+        let line = ev.encode_line();
+        assert_eq!(TraceEvent::parse_line(&line).unwrap(), ev, "{line}");
+    }
+    // Lenient decode: missing fields default rather than error.
+    let ev = TraceEvent::parse_line(r#"{"ev":"controller_adjusted","pass":"decode"}"#).unwrap();
+    assert!(matches!(ev, TraceEvent::ControllerAdjusted { lookahead: 0, .. }));
+    let ev = TraceEvent::parse_line(r#"{"ev":"slo_estimate_updated"}"#).unwrap();
+    assert!(matches!(ev, TraceEvent::SloEstimateUpdated { samples: 0, .. }));
+    // A pre-PR-10 meta line decodes adaptive=false: replay stays static.
+    let ev = TraceEvent::parse_line(r#"{"ev":"meta","schema":1}"#).unwrap();
+    match ev {
+        TraceEvent::Meta { adaptive, .. } => assert!(!adaptive),
+        other => panic!("expected meta, got {other:?}"),
+    }
+}
+
+/// On a stationary workload the cache-sim controller settles: it stops
+/// adjusting after the settle phase and holds one window for the long
+/// tail of the run.
+#[test]
+fn controller_converges_on_a_stationary_workload() {
+    let cfg = LookaheadSimConfig {
+        capacity: 24,
+        layers: 8,
+        experts: 16,
+        top_k: 2,
+        seed: 5,
+        batch: 16,
+        segments: vec![(200, 200)], // one phase: no drift at all
+    };
+    let lat = LatencyModel::from_hardware(&HardwareConfig::env1());
+    let r = run_lookahead_sim(&cfg, &lat, LookaheadMode::Adaptive { start: 1, max: 2 });
+    assert!(r.adjustments > 0, "controller never explored");
+    assert_eq!(r.final_lookahead, 1, "controller should settle on the paying window");
+    // Re-running the same config is deterministic to the last bit.
+    let r2 = run_lookahead_sim(&cfg, &lat, LookaheadMode::Adaptive { start: 1, max: 2 });
+    assert_eq!(r.mean_step_us, r2.mean_step_us);
+    assert_eq!(r.final_lookahead, r2.final_lookahead);
+    assert_eq!(r.adjustments, r2.adjustments);
+}
+
+// ------------------------------------------------------------- engine level
+
+fn artifacts_available() -> bool {
+    figures::artifact_dir("mixtral-tiny").join("weights_manifest.json").exists()
+}
+
+fn engine(lookahead: usize, threads: usize, adaptive: bool) -> Engine {
+    let serving = ServingConfig {
+        policy: Policy::Fiddler,
+        pipeline_lookahead: lookahead,
+        threads,
+        adaptive,
+        ..Default::default()
+    };
+    Engine::new(figures::artifact_dir("mixtral-tiny"), &HardwareConfig::env1(), serving)
+        .expect("make artifacts first")
+}
+
+fn prompt(len: usize, seed: u64) -> Vec<u32> {
+    WorkloadGen::new(Dataset::sharegpt(), 512, seed).prompt(len)
+}
+
+fn bits(t: &Tensor) -> Vec<u32> {
+    t.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// All forward paths once; hidden-state bits + final KV bits.
+fn run_all_paths(lookahead: usize, threads: usize, adaptive: bool) -> Vec<Vec<u32>> {
+    let mut e = engine(lookahead, threads, adaptive);
+    if adaptive && lookahead > 0 {
+        assert!(e.cx.pipeline.controller().is_some(), "adaptive engine must arm the controller");
+    }
+    let mut out: Vec<Vec<u32>> = Vec::new();
+
+    let p = prompt(24, 11);
+    let mut cache = SequenceCache::new(e.model());
+    let h = e.runner.prefill(&p, &mut cache, &mut e.cx).unwrap();
+    out.push(bits(&h));
+    for t in [7u32, 19, 42] {
+        let xs = e.runner.ws.embed_tokens(&[t]);
+        let mut caches = [&mut cache];
+        let h = e.runner.decode_step(&xs, &mut caches, &mut e.cx).unwrap();
+        out.push(bits(&h));
+    }
+
+    let pc = prompt(30, 23);
+    let mut chunk_cache = SequenceCache::new(e.model());
+    for range in [0..12usize, 12..22, 22..30] {
+        let h = e.runner.prefill_chunk(&pc[range], &mut chunk_cache, &mut e.cx).unwrap();
+        out.push(bits(&h));
+    }
+    out
+}
+
+/// The acceptance matrix, with the adaptive dimension added to PR 5's:
+/// lookahead {0,1,2} x threads {1,2,4} x adaptive {off,on}, every cell
+/// bit-identical to the serial static reference.  Controller decisions
+/// (effective window, skew-biased overrides, landing protection) reshape
+/// plans and virtual time only — never a single output bit.
+#[test]
+fn adaptive_matrix_is_bit_identical_to_the_static_reference() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let reference = run_all_paths(0, 1, false);
+    assert!(!reference.is_empty());
+    for lookahead in [0usize, 1, 2] {
+        for threads in [1usize, 2, 4] {
+            for adaptive in [false, true] {
+                if (lookahead, threads, adaptive) == (0, 1, false) {
+                    continue;
+                }
+                let got = run_all_paths(lookahead, threads, adaptive);
+                assert_eq!(
+                    got, reference,
+                    "lookahead={lookahead} threads={threads} adaptive={adaptive}: \
+                     outputs not bit-identical"
+                );
+            }
+        }
+    }
+}
+
+/// Adaptive on a disabled pipeline (lookahead 0) must not arm anything:
+/// there is no speculation to control.
+#[test]
+fn adaptive_without_lookahead_stays_disarmed() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let e = engine(0, 1, true);
+    assert!(e.cx.pipeline.controller().is_none());
+}
